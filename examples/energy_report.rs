@@ -1,0 +1,45 @@
+//! Energy report: the paper's Figure 9 experiment as a runnable scenario —
+//! one epoch-equivalent of GPT-2 124M training under all four
+//! configurations, with the 4 Hz power trace the paper polls.
+//!
+//! Run: `cargo run --release --example energy_report`
+
+use xdna_repro::bench::{fig8, fig9};
+use xdna_repro::model::config::ModelConfig;
+use xdna_repro::model::flops;
+use xdna_repro::power::meter::{flops_per_ws, PowerMeter};
+use xdna_repro::power::profiles::PowerProfile;
+
+fn main() {
+    let cfg = ModelConfig::d12();
+    let epoch_flops = flops::total_per_step(&cfg, 4, 64);
+    println!(
+        "GPT-2 124M epoch = {:.1} GFLOP (paper: 197 GFLOP)",
+        epoch_flops as f64 / 1e9
+    );
+
+    for profile in [PowerProfile::mains(), PowerProfile::battery()] {
+        println!("\n=== {} ===", profile.name);
+        let (cpu_s, npu_s) = fig8::totals(&profile);
+        for (label, secs, offloaded) in [("CPU", cpu_s, false), ("CPU+NPU", npu_s, true)] {
+            let mut meter = PowerMeter::new(profile.clone());
+            let mut energy = meter.integrate_epoch(secs, offloaded);
+            if offloaded {
+                // The NPU's own draw during its active window.
+                energy += profile.npu_active_w * secs;
+            }
+            println!(
+                "{:<8} epoch {:>7.2} s | mean power {:>5.1} W ({} samples @4Hz) | \
+                 {:>6.1} GFLOP/s | {:>5.2} GFLOP/Ws",
+                label,
+                secs,
+                meter.mean_watts(),
+                meter.samples.len(),
+                epoch_flops as f64 / secs / 1e9,
+                flops_per_ws(epoch_flops, energy) / 1e9,
+            );
+        }
+    }
+
+    fig9::print();
+}

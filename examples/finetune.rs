@@ -1,0 +1,114 @@
+//! End-to-end driver: fine-tune GPT-2 with GEMMs offloaded to the NPU.
+//!
+//! Proves all layers compose on a real small workload:
+//!   L3 Rust trainer (llm.c port) → offload engine → XRT sim → XDNA sim,
+//! with numerics cross-checked against the L2/L1 JAX+Pallas train-step
+//! artifact via PJRT in `rust/tests/integration.rs`.
+//!
+//! Trains a d4 (~3M param) GPT-2 on a synthetic Markov corpus for a few
+//! hundred steps on both backends and logs the loss curves; recorded in
+//! EXPERIMENTS.md. `--config d6 --steps N` scales up (d12 = the paper's
+//! 124M model; see EXPERIMENTS.md for its recorded epochs).
+//!
+//! Run: `cargo run --release --example finetune [-- --config d4 --steps 300]`
+
+use xdna_repro::coordinator::engine::{EngineConfig, GemmOffloadEngine};
+use xdna_repro::model::data::{synthetic_corpus, DataLoader};
+use xdna_repro::model::model::OPS;
+use xdna_repro::model::trainer::{train, TrainBackend, TrainConfig};
+use xdna_repro::model::{Gpt2Model, ModelConfig};
+use xdna_repro::power::profiles::PowerProfile;
+use xdna_repro::util::cli::Args;
+
+fn main() -> xdna_repro::Result<()> {
+    let args = Args::parse(std::env::args().skip(1), &[])?;
+    let cfg_name = args.get_or("config", "d4");
+    let cfg = ModelConfig::by_name(cfg_name)?;
+    let total_steps = args.get_parse("steps", 300usize)?;
+    let batch = args.get_parse("batch", 4usize)?;
+    let seq = args.get_parse("seq", 64usize)?.min(cfg.max_seq_len);
+    let epochs = 20.min(total_steps);
+    let steps_per_epoch = (total_steps / epochs).max(1);
+
+    let tc = TrainConfig {
+        batch,
+        seq,
+        epochs,
+        steps_per_epoch,
+        power: PowerProfile::mains(),
+        ..Default::default()
+    };
+
+    println!(
+        "fine-tuning {cfg_name} for {} epochs x {} steps (B={batch}, T={seq})",
+        tc.epochs, tc.steps_per_epoch
+    );
+
+    let corpus = synthetic_corpus(cfg.vocab_size, (batch * seq + 1) * 64, 7);
+
+    // --- CPU+NPU run (the paper's configuration). ------------------------
+    let mut loader = DataLoader::new(corpus.clone(), batch, seq)?;
+    let mut model = Gpt2Model::new(cfg, 1234);
+    let mut engine = GemmOffloadEngine::new(EngineConfig::default(), &[])?;
+    println!("\n--- CPU+NPU (offloaded GEMMs) ---");
+    let npu_stats = train(
+        &mut model,
+        &mut loader,
+        &mut TrainBackend::CpuNpu(&mut engine),
+        &tc,
+    )?;
+    for s in npu_stats.iter().step_by((epochs / 10).max(1)) {
+        println!(
+            "epoch {:>3}  loss {:.4}  wall {:>8.1} ms  modeled {:>8.1} ms  energy {:>7.2} J",
+            s.epoch,
+            s.loss,
+            s.wall_s * 1e3,
+            s.modeled_s * 1e3,
+            s.energy_j
+        );
+    }
+    let first = npu_stats.first().unwrap().loss;
+    let last = npu_stats.last().unwrap().loss;
+    println!("loss {first:.4} -> {last:.4} over {total_steps} steps");
+    assert!(last < first, "training must reduce the loss");
+    println!(
+        "engine: {} offloaded GEMMs, {} sizes registered, modeled NPU energy {:.2} J",
+        engine.invocations,
+        engine.registered_sizes().len(),
+        engine.modeled_energy_j
+    );
+
+    println!("\nper-op wallclock over the run (paper Figure 8 categories):");
+    for op in OPS {
+        println!(
+            "  {:<12} {:>10.1} ms",
+            op,
+            model.op_timers.get(op).as_secs_f64() * 1e3
+        );
+    }
+
+    // --- CPU baseline for the same schedule (shorter: 1/4 of the epochs). -
+    let tc_cpu = TrainConfig {
+        epochs: (epochs / 4).max(1),
+        ..tc.clone()
+    };
+    let mut loader = DataLoader::new(corpus, batch, seq)?;
+    let mut model_cpu = Gpt2Model::new(cfg, 1234);
+    println!("\n--- CPU baseline (first {} epochs) ---", tc_cpu.epochs);
+    let cpu_stats = train(&mut model_cpu, &mut loader, &mut TrainBackend::Cpu, &tc_cpu)?;
+    for s in &cpu_stats {
+        println!(
+            "epoch {:>3}  loss {:.4}  wall {:>8.1} ms",
+            s.epoch,
+            s.loss,
+            s.wall_s * 1e3
+        );
+    }
+    // Same seed, same data: the two backends track within bf16 noise.
+    let diff = (cpu_stats.last().unwrap().loss - npu_stats[tc_cpu.epochs - 1].loss).abs();
+    println!(
+        "\nCPU-vs-NPU loss divergence after {} epochs: {diff:.4}",
+        tc_cpu.epochs
+    );
+    Ok(())
+}

@@ -1,0 +1,5 @@
+"""Build-time Python package: JAX model (L2) + Pallas kernels (L1) + AOT.
+
+Nothing in this package runs at inference/training time on the Rust side;
+`aot.py` lowers everything to HLO text artifacts once (`make artifacts`).
+"""

@@ -1,0 +1,204 @@
+"""AOT lowering: JAX (L2) + Pallas (L1) -> HLO text artifacts for Rust (L3).
+
+Interchange format is HLO **text**, not serialized HloModuleProto: jax>=0.5
+emits protos with 64-bit instruction ids that the xla crate's bundled
+xla_extension 0.5.1 rejects; the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Artifacts written (default: ../artifacts):
+
+  gemm_{M}x{K}x{N}.hlo.txt        per-problem-size Pallas-tiled GEMM
+                                  (paper tiles m=64,k=64,n=32) — the
+                                  "instruction stream + buffers per size"
+                                  the Rust registry preloads (paper V-A)
+  gemm_{M}x{K}x{N}_fused.hlo.txt  grid-1 variant (fast CPU execution path)
+  train_step_{cfg}.hlo.txt        full fwd+bwd+AdamW step for named configs
+  forward_{cfg}.hlo.txt           logits-only forward (generation)
+  manifest.json                   shapes/dtypes/arg-order/flops per artifact
+
+Usage: python -m compile.aot [--out DIR] [--configs d2,d4] [--gemm-sizes all|gpt2|none]
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels import gemm as G
+
+
+def to_hlo_text(lowered) -> str:
+    """Convert a jax lowering to XLA HLO text (return_tuple=True so the
+    Rust side unwraps a single tuple output)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_gemm(m: int, k: int, n: int, fused: bool) -> str:
+    """Lower one GEMM problem size through the Pallas kernel."""
+    tiles = G.fused_tiles(m, k, n) if fused else G.PAPER_TILES
+    fn = functools.partial(G.gemm, tiles=tiles)
+    a = jax.ShapeDtypeStruct((m, k), jnp.float32)
+    b = jax.ShapeDtypeStruct((k, n), jnp.float32)
+    return to_hlo_text(jax.jit(fn).lower(a, b))
+
+
+def _param_specs(cfg: M.GPT2Config):
+    return {
+        name: jax.ShapeDtypeStruct(shape, jnp.float32)
+        for name, shape in cfg.param_shapes().items()
+    }
+
+
+def lower_train_step(cfg: M.GPT2Config, batch: int, seq: int) -> tuple[str, dict]:
+    """Lower the fused train step. ABI (flat argument order):
+
+        [params x16] [m x16] [v x16] step_f32 tokens_i32 targets_i32
+    returns
+        ([new_params x16] [new_m x16] [new_v x16] loss grad_norm)
+    """
+    opt = M.AdamWConfig()
+
+    def step_fn(params, m, v, step, tokens, targets):
+        return M.train_step(params, m, v, step, tokens, targets, cfg, opt)
+
+    p = _param_specs(cfg)
+    tok = jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+    step = jax.ShapeDtypeStruct((), jnp.float32)
+    lowered = jax.jit(step_fn).lower(p, p, p, step, tok, tok)
+    abi = {
+        "params": [
+            {"name": n, "shape": list(cfg.param_shapes()[n])}
+            for n in M.PARAM_NAMES
+        ],
+        "batch": batch,
+        "seq": seq,
+        "arg_order": "params*16, m*16, v*16, step, tokens, targets",
+        "ret_order": "params*16, m*16, v*16, loss, grad_norm",
+        "optimizer": {
+            "lr": opt.lr,
+            "beta1": opt.beta1,
+            "beta2": opt.beta2,
+            "eps": opt.eps,
+            "weight_decay": opt.weight_decay,
+            "grad_clip": opt.grad_clip,
+        },
+    }
+    return to_hlo_text(lowered), abi
+
+
+def lower_forward(cfg: M.GPT2Config, batch: int, seq: int) -> tuple[str, dict]:
+    """Lower the logits-only forward pass (generation / eval)."""
+
+    def fwd(params, tokens):
+        return M.forward(params, tokens, cfg)
+
+    p = _param_specs(cfg)
+    tok = jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+    lowered = jax.jit(fwd).lower(p, tok)
+    abi = {
+        "params": [
+            {"name": n, "shape": list(cfg.param_shapes()[n])}
+            for n in M.PARAM_NAMES
+        ],
+        "batch": batch,
+        "seq": seq,
+        "arg_order": "params*16, tokens",
+        "ret_order": "logits(B,T,Vp)",
+    }
+    return to_hlo_text(lowered), abi
+
+
+# Batch/seq per named config for the exported artifacts; d12 matches the
+# paper's llm.c defaults (B=4, T=64 -> M = 256).
+BATCH_SEQ = {"d2": (2, 32), "d4": (4, 64), "d6": (4, 64), "d12": (4, 64)}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default=os.path.join("..", "artifacts"))
+    ap.add_argument("--configs", default="d2,d4")
+    ap.add_argument(
+        "--gemm-sizes",
+        default="gpt2",
+        choices=["all", "gpt2", "small", "none"],
+        help="which per-size GEMM artifacts to emit",
+    )
+    ap.add_argument(
+        "--paper-tiled-gemms",
+        action="store_true",
+        help="also emit paper-tiled (64,64,32) variants; slower to execute "
+        "on CPU-PJRT, used for tiling-fidelity studies",
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest: dict = {"gemms": [], "models": {}, "tile": {"m": 64, "k": 64, "n": 32}}
+
+    # --- per-size GEMM artifacts -----------------------------------------
+    if args.gemm_sizes != "none":
+        if args.gemm_sizes == "small":
+            sizes = M.gemm_sizes(M.CONFIGS["d2"], 2, 32)
+        else:
+            sizes = M.gemm_sizes(M.CONFIGS["d12"], 4, 64)
+        for (m, k, n) in sizes:
+            entry = {"M": m, "K": k, "N": n, "flops": 2 * m * k * n}
+            # Padded M where the 4-shim split requires it (50304 -> 50432).
+            mp = G.pad_m(m) if m % (4 * G.PAPER_TILE_M) else m
+            entry["M_padded"] = mp
+            name = f"gemm_{m}x{k}x{n}_fused.hlo.txt"
+            with open(os.path.join(args.out, name), "w") as f:
+                f.write(lower_gemm(mp, k, n, fused=True))
+            entry["fused"] = name
+            if args.paper_tiled_gemms:
+                name_t = f"gemm_{m}x{k}x{n}.hlo.txt"
+                with open(os.path.join(args.out, name_t), "w") as f:
+                    f.write(lower_gemm(mp, k, n, fused=False))
+                entry["tiled"] = name_t
+            manifest["gemms"].append(entry)
+            print(f"gemm {m}x{k}x{n} (padded M={mp}) done")
+
+    # --- full-model artifacts --------------------------------------------
+    for cname in [c for c in args.configs.split(",") if c]:
+        cfg = M.CONFIGS[cname]
+        batch, seq = BATCH_SEQ[cname]
+        ts_text, ts_abi = lower_train_step(cfg, batch, seq)
+        ts_name = f"train_step_{cname}.hlo.txt"
+        with open(os.path.join(args.out, ts_name), "w") as f:
+            f.write(ts_text)
+        fw_text, fw_abi = lower_forward(cfg, batch, seq)
+        fw_name = f"forward_{cname}.hlo.txt"
+        with open(os.path.join(args.out, fw_name), "w") as f:
+            f.write(fw_text)
+        manifest["models"][cname] = {
+            "config": {
+                "max_seq_len": cfg.max_seq_len,
+                "vocab_size": cfg.vocab_size,
+                "padded_vocab_size": cfg.padded_vocab_size,
+                "num_layers": cfg.num_layers,
+                "num_heads": cfg.num_heads,
+                "channels": cfg.channels,
+            },
+            "train_step": {"file": ts_name, **ts_abi},
+            "forward": {"file": fw_name, **fw_abi},
+            "gemm_flops_per_step": M.flops_per_step(cfg, batch, seq),
+        }
+        print(f"model {cname} done")
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"manifest written to {args.out}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,13 @@
+"""Layer-1 Pallas kernels (build-time only; lowered into AOT artifacts).
+
+Modules:
+    gemm      -- the paper's tiled GEMM design, adapted from XDNA AI Engines
+                 to the Pallas/TPU programming model (DESIGN.md section 2,
+                 "Hardware adaptation").
+    ref       -- pure-jnp numerical oracles for every kernel.
+    layernorm -- extension kernel (paper future work: offload more ops).
+    gelu      -- extension kernel.
+    softmax   -- extension kernel (fused-classifier path).
+"""
+
+from . import gemm, gelu, layernorm, ref, softmax  # noqa: F401

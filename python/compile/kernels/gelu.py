@@ -1,0 +1,43 @@
+"""Extension Pallas kernel: GELU (tanh approximation), elementwise.
+
+llm.c's gelu_forward is the second-largest non-GEMM bar in the paper's
+Figure 8; offloading it is listed as future work. Elementwise ops tile
+trivially: any block decomposition is legal, so we use row blocks sized to
+keep the double-buffered footprint within a core's memory.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_SQRT_2_OVER_PI = 0.7978845608028654
+
+
+def _gelu_kernel(x_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)
+    inner = _SQRT_2_OVER_PI * (x + 0.044715 * x * x * x)
+    o_ref[...] = 0.5 * x * (1.0 + jnp.tanh(inner))
+
+
+def gelu(x, *, rows_per_block: int = 64):
+    """Elementwise tanh-GELU over a 2-D activation (R, C)."""
+    r, c = x.shape
+    if r % rows_per_block:
+        raise ValueError(f"rows {r} not divisible by {rows_per_block}")
+    return pl.pallas_call(
+        _gelu_kernel,
+        grid=(r // rows_per_block,),
+        in_specs=[pl.BlockSpec((rows_per_block, c), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((rows_per_block, c), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, c), jnp.float32),
+        interpret=True,
+    )(x)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def gelu_jit(x):
+    return gelu(x)

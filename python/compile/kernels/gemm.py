@@ -1,0 +1,211 @@
+"""The paper's tiled GEMM design as a Pallas kernel (Layer 1).
+
+Hardware adaptation (DESIGN.md section 2). The paper maps GEMM onto a 4x4
+grid of XDNA AI Engines:
+
+* input matrices tiled into m x k and k x n sub-matrices (m=64, k=64, n=32),
+* each compute core accumulates one m x n output tile in place over K/k
+  steps (accumulate-in-place recipe, paper section VI),
+* the VMAC intrinsic multiplies 4x8 by 8x4 micro-tiles into four
+  independent accumulators to hide its 4-cycle latency,
+* DMAs + VSHUFFLE stage data HBM(L3) -> memory core(L2) -> core(L1).
+
+On the TPU programming model those concerns map onto Pallas first-class
+constructs instead of hand-programmed DMAs:
+
+* the (M/m, N/n, K/k) grid with `BlockSpec` index maps expresses the same
+  HBM<->VMEM staging schedule the paper programmed with shim/memcore DMAs;
+* accumulate-in-place falls out of revisiting the same output block while
+  the contraction dimension (innermost grid axis) advances;
+* the VMAC micro-tiling + swizzling is subsumed by the MXU: we feed it
+  bf16 blocks with `preferred_element_type=f32`, which is exactly the
+  paper's numerical contract (bf16 in, f32 accumulate);
+* double-buffering is performed by the Pallas pipeline automatically.
+
+`gemm_microtiled` additionally reproduces the VMAC micro-kernel *inside*
+a block — four independent 4x4 accumulators updated by 4x8 @ 8x4 products
+— for fidelity testing of the Rust simulator's datapath.
+
+Everything here runs under interpret=True (CPU); real-TPU performance is
+estimated statically in DESIGN.md / EXPERIMENTS.md from VMEM footprint and
+MXU utilization.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# The paper's tile sizes (section VI: "m=64, k=64, n=32").
+PAPER_TILE_M = 64
+PAPER_TILE_K = 64
+PAPER_TILE_N = 32
+
+# VMAC intrinsic geometry (section VI-A): 4x8 @ 8x4 -> 4x4 accumulator.
+VMAC_M = 4
+VMAC_K = 8
+VMAC_N = 4
+
+
+@dataclass(frozen=True)
+class TileConfig:
+    """Block decomposition of one GEMM problem."""
+
+    tm: int
+    tk: int
+    tn: int
+
+    def grid(self, m: int, k: int, n: int) -> tuple[int, int, int]:
+        """Grid (i over M, j over N, kk over K) — K innermost so the output
+        block is revisited consecutively (accumulate-in-place)."""
+        _check_divisible(m, k, n, self)
+        return (m // self.tm, n // self.tn, k // self.tk)
+
+    def vmem_bytes(self) -> int:
+        """Per-step VMEM footprint: bf16 A' and B' blocks + f32 C' block,
+        times two for Pallas double-buffering (the paper double-buffers all
+        three tiles in the 64 KB core memory the same way)."""
+        a = self.tm * self.tk * 2
+        b = self.tk * self.tn * 2
+        c = self.tm * self.tn * 4
+        return 2 * (a + b + c)
+
+
+PAPER_TILES = TileConfig(PAPER_TILE_M, PAPER_TILE_K, PAPER_TILE_N)
+
+
+def _check_divisible(m: int, k: int, n: int, tiles: TileConfig) -> None:
+    if m % tiles.tm or k % tiles.tk or n % tiles.tn:
+        raise ValueError(
+            f"problem {m}x{k}x{n} not divisible by tiles "
+            f"({tiles.tm},{tiles.tk},{tiles.tn}); pad first (see pad_m)"
+        )
+
+
+def pad_m(m: int, multiple: int = 4 * PAPER_TILE_M) -> int:
+    """The paper pads the M dimension to a multiple of 4*m = 256 so the four
+    shim columns split rows evenly (50304 -> 50432 for the d_wte GEMM)."""
+    return ((m + multiple - 1) // multiple) * multiple
+
+
+def _gemm_kernel(a_ref, b_ref, o_ref):
+    """One grid step: quantize inputs to bf16, multiply, accumulate into the
+    revisited f32 output block. Mirrors the compute-core kernel of section
+    VI-A (zero C', then K/k accumulation steps)."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _zero():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # Quantize to bf16, then compute the dot in f32: bf16 products are
+    # exact in f32, so this is bit-identical to a bf16xbf16->f32 MXU pass
+    # while remaining executable by the CPU PJRT backend (whose DotThunk
+    # lacks a BF16xBF16=F32 kernel).
+    a_blk = a_ref[...].astype(jnp.bfloat16).astype(jnp.float32)
+    b_blk = b_ref[...].astype(jnp.bfloat16).astype(jnp.float32)
+    o_ref[...] += jnp.dot(a_blk, b_blk, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("tiles",))
+def gemm(a: jnp.ndarray, b: jnp.ndarray, tiles: TileConfig = PAPER_TILES):
+    """Tiled NPU-style GEMM: (M,K) @ (K,N) -> (M,N) f32, bf16 inputs.
+
+    Inputs of any float dtype are quantized to bf16 on load (the host-side
+    copy into bf16 XRT buffers in the paper); accumulation is f32.
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    if k != k2:
+        raise ValueError(f"contraction mismatch: {a.shape} @ {b.shape}")
+    grid = tiles.grid(m, k, n)
+    return pl.pallas_call(
+        _gemm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tiles.tm, tiles.tk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((tiles.tk, tiles.tn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((tiles.tm, tiles.tn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(a, b)
+
+
+def fused_tiles(m: int, k: int, n: int) -> TileConfig:
+    """A grid=1 decomposition (whole problem in one block).
+
+    Used when lowering the *full-model* artifacts: the kernel still flows
+    through the Pallas call (same numerical contract), but the HLO contains
+    a single fused dot per matmul, keeping the CPU-PJRT train step fast.
+    """
+    return TileConfig(m, k, n)
+
+
+def gemm_fused(a: jnp.ndarray, b: jnp.ndarray):
+    """GEMM through the Pallas kernel with a grid-1 block decomposition."""
+    m, k = a.shape
+    _, n = b.shape
+    return gemm(a, b, tiles=fused_tiles(m, k, n))
+
+
+def _microtiled_kernel(a_ref, b_ref, o_ref, *, tm: int, tk: int, tn: int):
+    """Block kernel reproducing the paper's VMAC inner loop structure.
+
+    Four independent 4x4 accumulators (2x2 arrangement of VMAC output
+    tiles) are updated back-to-back so that, on the real AI Engine, the
+    4-cycle VMAC latency is hidden. Functionally identical to `_gemm_kernel`
+    on one block; used to cross-validate the Rust simulator's VMAC datapath
+    at micro-tile granularity.
+    """
+
+    @pl.when(pl.program_id(2) == 0)
+    def _zero():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    a_blk = a_ref[...].astype(jnp.bfloat16).astype(jnp.float32)
+    b_blk = b_ref[...].astype(jnp.bfloat16).astype(jnp.float32)
+
+    # The micro-tile loop is expressed with reshapes: (tm/4, 4, tk/8, 8) x
+    # (tk/8, 8, tn/4, 4) contracted over the K micro-axis — einsum keeps the
+    # f32 accumulation per 4x4 tile explicit.
+    a4 = a_blk.reshape(tm // VMAC_M, VMAC_M, tk // VMAC_K, VMAC_K)
+    b4 = b_blk.reshape(tk // VMAC_K, VMAC_K, tn // VMAC_N, VMAC_N)
+    prod = jnp.einsum(
+        "aibk,bkcj->aicj",
+        a4,
+        b4,
+        preferred_element_type=jnp.float32,
+    )
+    o_ref[...] += prod.reshape(tm, tn)
+
+
+def gemm_microtiled(a, b, tiles: TileConfig = PAPER_TILES):
+    """GEMM whose block kernel follows the VMAC micro-tile recipe."""
+    m, k = a.shape
+    _, n = b.shape
+    grid = tiles.grid(m, k, n)
+    kern = functools.partial(
+        _microtiled_kernel, tm=tiles.tm, tk=tiles.tk, tn=tiles.tn
+    )
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tiles.tm, tiles.tk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((tiles.tk, tiles.tn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((tiles.tm, tiles.tn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(a, b)
+
+
+def gemm_bias(a, b, bias, tiles: TileConfig = PAPER_TILES):
+    """GEMM + bias (llm.c matmul_forward). Bias is added on the host side
+    of the offload boundary in the paper; we expose a fused variant for the
+    full-model artifacts."""
+    return gemm(a, b, tiles=tiles) + bias.astype(jnp.float32)[None, :]

@@ -1,0 +1,48 @@
+"""Extension Pallas kernel: layernorm (paper future work, section VIII).
+
+The paper offloads only GEMM; its discussion section proposes offloading
+further operations to eliminate the CPU<->NPU round trip. This kernel is the
+first step of that direction: an on-accelerator layernorm over the hidden
+axis, tiled by rows so each grid step's block fits the per-core memory.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _layernorm_kernel(x_ref, w_ref, b_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mean) ** 2, axis=-1, keepdims=True)
+    rstd = jax.lax.rsqrt(var + eps)
+    o_ref[...] = (x - mean) * rstd * w_ref[...] + b_ref[...]
+
+
+def layernorm(x, weight, bias, *, eps: float = 1e-5, rows_per_block: int = 64):
+    """Row-tiled layernorm: x (R, C) normalized over C.
+
+    rows_per_block bounds the block footprint the way the paper's m bounds
+    the A-tile height (64 rows x 768 cols x 4 B = 192 KB blocks stage
+    through VMEM; weight/bias blocks are broadcast to every grid step).
+    """
+    r, c = x.shape
+    if r % rows_per_block:
+        raise ValueError(f"rows {r} not divisible by {rows_per_block}")
+    grid = (r // rows_per_block,)
+    import functools
+
+    return pl.pallas_call(
+        functools.partial(_layernorm_kernel, eps=eps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((rows_per_block, c), lambda i: (i, 0)),
+            pl.BlockSpec((c,), lambda i: (0,)),
+            pl.BlockSpec((c,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((rows_per_block, c), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, c), jnp.float32),
+        interpret=True,
+    )(x, weight, bias)

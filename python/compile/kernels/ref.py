@@ -1,0 +1,74 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+These mirror the numerical contract of the paper's NPU datapath:
+
+* GEMM consumes **bfloat16** inputs and accumulates/outputs **float32**
+  (paper section VII-A: "Our NPU kernel consumes bfloat16 inputs and
+  accumulates and outputs float32 values").
+* The CPU baseline (`gemm_f32_ref`) is full-f32, like unmodified llm.c.
+
+The Rust NPU simulator's functional VMAC datapath is validated against the
+same contract, so all three implementations (Pallas kernel, jnp oracle,
+Rust simulator) must agree to tight tolerances.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def quantize_bf16(x: jnp.ndarray) -> jnp.ndarray:
+    """Round-to-nearest-even bfloat16 quantization, returned as f32.
+
+    This is the value the NPU actually sees after the host copies f32 data
+    into bf16 input tiles.
+    """
+    return x.astype(jnp.bfloat16).astype(jnp.float32)
+
+
+def gemm_bf16_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Reference for the NPU GEMM: bf16 inputs, f32 accumulate, f32 out.
+
+    a: (M, K), b: (K, N); any float inputs are quantized to bf16 first.
+    """
+    a16 = a.astype(jnp.bfloat16).astype(jnp.float32)
+    b16 = b.astype(jnp.bfloat16).astype(jnp.float32)
+    return jnp.matmul(a16, b16, preferred_element_type=jnp.float32)
+
+
+def gemm_f32_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """The llm.c CPU baseline: full-f32 GEMM."""
+    return jnp.matmul(
+        a.astype(jnp.float32),
+        b.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def gemm_bias_bf16_ref(a, b, bias):
+    """GEMM + broadcast bias add (llm.c's matmul_forward contract)."""
+    return gemm_bf16_ref(a, b) + bias.astype(jnp.float32)[None, :]
+
+
+def layernorm_ref(x, weight, bias, eps: float = 1e-5):
+    """llm.c layernorm_forward: normalize over the last axis."""
+    x = x.astype(jnp.float32)
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mean) ** 2, axis=-1, keepdims=True)
+    rstd = 1.0 / jnp.sqrt(var + eps)
+    return (x - mean) * rstd * weight + bias
+
+
+def gelu_ref(x):
+    """llm.c GELU (tanh approximation, GELU_SCALING_FACTOR variant)."""
+    x = x.astype(jnp.float32)
+    c = jnp.sqrt(2.0 / jnp.pi).astype(jnp.float32)
+    return 0.5 * x * (1.0 + jnp.tanh(c * (x + 0.044715 * x**3)))
+
+
+def softmax_ref(x):
+    """Numerically stable softmax over the last axis (f32)."""
+    x = x.astype(jnp.float32)
+    m = jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x - m)
+    return e / jnp.sum(e, axis=-1, keepdims=True)

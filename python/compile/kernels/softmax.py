@@ -1,0 +1,37 @@
+"""Extension Pallas kernel: row softmax (fused-classifier path).
+
+llm.c fuses softmax + cross-entropy in `fused_classifier`; the softmax over
+the 50k-vocab logits is the dominant non-GEMM cost of the classifier. This
+kernel computes a numerically stable row softmax with the full row resident
+in the block (one 50304-wide f32 row is ~200 KB — fits L2/VMEM staging but
+not a 64 KB core, so on real XDNA this would be a two-pass memcore design;
+the Pallas grid expresses the row-parallel outer loop).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _softmax_kernel(x_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)
+    m = jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x - m)
+    o_ref[...] = e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def softmax(x, *, rows_per_block: int = 8):
+    """Stable softmax over the last axis of x (R, C), row-tiled."""
+    r, c = x.shape
+    if r % rows_per_block:
+        raise ValueError(f"rows {r} not divisible by {rows_per_block}")
+    return pl.pallas_call(
+        _softmax_kernel,
+        grid=(r // rows_per_block,),
+        in_specs=[pl.BlockSpec((rows_per_block, c), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((rows_per_block, c), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, c), jnp.float32),
+        interpret=True,
+    )(x)

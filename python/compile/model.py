@@ -1,0 +1,398 @@
+"""Layer-2: GPT-2 forward/backward in JAX, mirroring llm.c's structure.
+
+The parameter inventory, shapes, and op sequence follow llm.c exactly
+(16 parameter tensors, per-layer tensors stacked on a leading L axis) so
+that the Rust llm.c port (rust/src/model/) and this JAX model are
+checkpoint-interchangeable and numerically cross-checkable.
+
+Every "offloadable" matmul — the twelve GEMM problem sizes of the paper's
+Figure 6 — is routed through the Layer-1 Pallas GEMM kernel so the lowered
+HLO exercises the same numerical contract as the NPU (bf16 inputs, f32
+accumulation). Attention score/value matmuls stay in plain jnp, exactly as
+the paper leaves them on the CPU.
+
+llm.c tensor inventory (ParameterTensors):
+    wte      (Vp, C)      token embeddings (padded vocab)
+    wpe      (T, C)       position embeddings
+    ln1w     (L, C)
+    ln1b     (L, C)
+    qkvw     (L, 3C, C)   stored column-major in llm.c: (out, in)
+    qkvb     (L, 3C)
+    attprojw (L, C, C)
+    attprojb (L, C)
+    ln2w     (L, C)
+    ln2b     (L, C)
+    fcw      (L, 4C, C)
+    fcb      (L, 4C)
+    fcprojw  (L, C, 4C)
+    fcprojb  (L, C)
+    lnfw     (C,)
+    lnfb     (C,)
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import gemm as gemm_kernel
+
+# Ordered parameter names; this order is the ABI of the AOT artifacts and
+# of the Rust checkpoint format.
+PARAM_NAMES = [
+    "wte",
+    "wpe",
+    "ln1w",
+    "ln1b",
+    "qkvw",
+    "qkvb",
+    "attprojw",
+    "attprojb",
+    "ln2w",
+    "ln2b",
+    "fcw",
+    "fcb",
+    "fcprojw",
+    "fcprojb",
+    "lnfw",
+    "lnfb",
+]
+
+
+@dataclass(frozen=True)
+class GPT2Config:
+    """Model hyperparameters (defaults are GPT-2 small / 124M)."""
+
+    max_seq_len: int = 1024
+    vocab_size: int = 50257
+    padded_vocab_size: int = 50304  # llm.c pads to a multiple of 128
+    num_layers: int = 12
+    num_heads: int = 12
+    channels: int = 768
+
+    @property
+    def head_size(self) -> int:
+        return self.channels // self.num_heads
+
+    def param_shapes(self) -> dict[str, tuple[int, ...]]:
+        c, l, t, vp = (
+            self.channels,
+            self.num_layers,
+            self.max_seq_len,
+            self.padded_vocab_size,
+        )
+        return {
+            "wte": (vp, c),
+            "wpe": (t, c),
+            "ln1w": (l, c),
+            "ln1b": (l, c),
+            "qkvw": (l, 3 * c, c),
+            "qkvb": (l, 3 * c),
+            "attprojw": (l, c, c),
+            "attprojb": (l, c),
+            "ln2w": (l, c),
+            "ln2b": (l, c),
+            "fcw": (l, 4 * c, c),
+            "fcb": (l, 4 * c),
+            "fcprojw": (l, c, 4 * c),
+            "fcprojb": (l, c),
+            "lnfw": (c,),
+            "lnfb": (c,),
+        }
+
+    def num_parameters(self) -> int:
+        return sum(
+            int(jnp.prod(jnp.array(s))) for s in self.param_shapes().values()
+        )
+
+
+# Named small configs used across tests / artifacts / the Rust side.
+CONFIGS: dict[str, GPT2Config] = {
+    "d2": GPT2Config(
+        max_seq_len=32,
+        vocab_size=256,
+        padded_vocab_size=256,
+        num_layers=2,
+        num_heads=2,
+        channels=64,
+    ),
+    "d4": GPT2Config(
+        max_seq_len=64,
+        vocab_size=512,
+        padded_vocab_size=512,
+        num_layers=4,
+        num_heads=4,
+        channels=128,
+    ),
+    "d6": GPT2Config(
+        max_seq_len=128,
+        vocab_size=2048,
+        padded_vocab_size=2048,
+        num_layers=6,
+        num_heads=6,
+        channels=384,
+    ),
+    "d12": GPT2Config(),  # GPT-2 small, 124M
+}
+
+
+def init_params(cfg: GPT2Config, key: jax.Array) -> dict[str, jnp.ndarray]:
+    """GPT-2 initialization as in llm.c / nanoGPT: normals with std 0.02,
+    residual projections scaled by 1/sqrt(2L), zero biases, unit ln weights.
+    """
+    shapes = cfg.param_shapes()
+    params: dict[str, jnp.ndarray] = {}
+    resid_scale = 1.0 / jnp.sqrt(2.0 * cfg.num_layers)
+    keys = jax.random.split(key, len(PARAM_NAMES))
+    for name, k in zip(PARAM_NAMES, keys):
+        shape = shapes[name]
+        if name in ("ln1w", "ln2w", "lnfw"):
+            params[name] = jnp.ones(shape, jnp.float32)
+        elif name.endswith("b"):
+            params[name] = jnp.zeros(shape, jnp.float32)
+        elif name in ("attprojw", "fcprojw"):
+            params[name] = (
+                jax.random.normal(k, shape, jnp.float32) * 0.02 * resid_scale
+            )
+        else:
+            params[name] = jax.random.normal(k, shape, jnp.float32) * 0.02
+    return params
+
+
+@jax.custom_vjp
+def _matmul_paper(x2d: jnp.ndarray, w_t: jnp.ndarray) -> jnp.ndarray:
+    """Offloadable GEMM: (BT, K) @ (K, N) through the Pallas kernel.
+
+    Uses the grid-1 ("fused") decomposition so full-model artifacts stay a
+    single dot per matmul; the per-size artifacts exercise the paper tiling.
+
+    A custom VJP offloads the *backward* GEMMs through the same kernel —
+    exactly the paper's design, where dinp and dweight GEMMs are dispatched
+    to the NPU as their own problem sizes (Figure 6's backward bars).
+    """
+    return gemm_kernel.gemm_fused(x2d, w_t)
+
+
+def _matmul_paper_fwd(x2d, w_t):
+    return gemm_kernel.gemm_fused(x2d, w_t), (x2d, w_t)
+
+
+def _matmul_paper_bwd(res, dout):
+    x2d, w_t = res
+    # dinp = dout @ W: (M,N) @ (N,K); dweight^T = x^T @ dout: (K,M) @ (M,N).
+    # The transposes are the CPU-side copies of paper section V-B.
+    dx = gemm_kernel.gemm_fused(dout, w_t.T)
+    dw_t = gemm_kernel.gemm_fused(x2d.T, dout)
+    return dx, dw_t
+
+
+_matmul_paper.defvjp(_matmul_paper_fwd, _matmul_paper_bwd)
+
+
+def _matmul_plain(x2d: jnp.ndarray, w_t: jnp.ndarray) -> jnp.ndarray:
+    """CPU-baseline GEMM: full f32 (what unmodified llm.c computes)."""
+    return jnp.matmul(x2d, w_t, preferred_element_type=jnp.float32)
+
+
+MatmulFn = Callable[[jnp.ndarray, jnp.ndarray], jnp.ndarray]
+
+
+def layernorm(x, w, b, eps=1e-5):
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mean) ** 2, axis=-1, keepdims=True)
+    return (x - mean) * jax.lax.rsqrt(var + eps) * w + b
+
+
+def gelu(x):
+    c = 0.7978845608028654  # sqrt(2/pi)
+    return 0.5 * x * (1.0 + jnp.tanh(c * (x + 0.044715 * x * x * x)))
+
+
+def _linear(x, w, b, matmul: MatmulFn):
+    """llm.c matmul_forward: weights are (OC, IC) column-major, so the GEMM
+    computes x @ w.T; the transpose is exactly the CPU-side transpose the
+    paper performs while copying into XRT buffers (section V-B)."""
+    bt = x.shape[0] * x.shape[1]
+    x2d = x.reshape(bt, x.shape[2])
+    y = matmul(x2d, w.T)
+    y = y + b[None, :]
+    return y.reshape(x.shape[0], x.shape[1], -1)
+
+
+def attention(qkv, cfg: GPT2Config):
+    """Causal multi-head attention from the packed qkv tensor (B, T, 3C).
+
+    Stays on the "CPU" (plain jnp) exactly like llm.c's attention_forward:
+    the paper offloads only the GEMMs around it.
+    """
+    b, t, _ = qkv.shape
+    nh, hs = cfg.num_heads, cfg.head_size
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    q = q.reshape(b, t, nh, hs).transpose(0, 2, 1, 3)
+    k = k.reshape(b, t, nh, hs).transpose(0, 2, 1, 3)
+    v = v.reshape(b, t, nh, hs).transpose(0, 2, 1, 3)
+    att = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(float(hs))
+    mask = jnp.tril(jnp.ones((t, t), bool))
+    att = jnp.where(mask[None, None, :, :], att, -jnp.inf)
+    att = jax.nn.softmax(att, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", att, v)
+    return out.transpose(0, 2, 1, 3).reshape(b, t, nh * hs)
+
+
+def forward(
+    params: dict[str, jnp.ndarray],
+    tokens: jnp.ndarray,
+    cfg: GPT2Config,
+    matmul: MatmulFn = _matmul_paper,
+) -> jnp.ndarray:
+    """Forward pass producing logits (B, T, Vp). Mirrors llm.c gpt2_forward."""
+    b, t = tokens.shape
+    x = params["wte"][tokens] + params["wpe"][None, :t, :]
+    for layer in range(cfg.num_layers):
+        ln1 = layernorm(x, params["ln1w"][layer], params["ln1b"][layer])
+        qkv = _linear(ln1, params["qkvw"][layer], params["qkvb"][layer], matmul)
+        atty = attention(qkv, cfg)
+        attproj = _linear(
+            atty, params["attprojw"][layer], params["attprojb"][layer], matmul
+        )
+        x = x + attproj
+        ln2 = layernorm(x, params["ln2w"][layer], params["ln2b"][layer])
+        fch = _linear(ln2, params["fcw"][layer], params["fcb"][layer], matmul)
+        fch = gelu(fch)
+        fcproj = _linear(
+            fch, params["fcprojw"][layer], params["fcprojb"][layer], matmul
+        )
+        x = x + fcproj
+    x = layernorm(x, params["lnfw"], params["lnfb"])
+    bt = b * t
+    logits = matmul(x.reshape(bt, cfg.channels), params["wte"].T)
+    return logits.reshape(b, t, cfg.padded_vocab_size)
+
+
+def loss_fn(
+    params, tokens, targets, cfg: GPT2Config, matmul: MatmulFn = _matmul_paper
+):
+    """Mean cross-entropy over all positions (llm.c fused_classifier).
+
+    Positions in the padded vocab range [vocab_size, padded_vocab_size) are
+    never targets; llm.c keeps their logits but they receive ~zero softmax
+    mass after training.
+    """
+    logits = forward(params, tokens, cfg, matmul)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    picked = jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return -jnp.mean(picked)
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    """llm.c's AdamW hyperparameters (gpt2_update)."""
+
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0  # llm.c fine-tuning default
+    grad_clip: float = 1.0  # global-norm clip like train_gpt2.c
+
+
+def adamw_update(params, grads, m, v, step, opt: AdamWConfig):
+    """One AdamW step with global-norm clipping, llm.c-equivalent."""
+    leaves = jax.tree_util.tree_leaves(grads)
+    gnorm = jnp.sqrt(sum(jnp.sum(g * g) for g in leaves))
+    scale = jnp.minimum(1.0, opt.grad_clip / (gnorm + 1e-12))
+
+    b1c = 1.0 - opt.beta1 ** step
+    b2c = 1.0 - opt.beta2 ** step
+
+    def upd(p, g, m_, v_):
+        g = g * scale
+        m_new = opt.beta1 * m_ + (1.0 - opt.beta1) * g
+        v_new = opt.beta2 * v_ + (1.0 - opt.beta2) * g * g
+        mhat = m_new / b1c
+        vhat = v_new / b2c
+        p_new = p - opt.lr * (
+            mhat / (jnp.sqrt(vhat) + opt.eps) + opt.weight_decay * p
+        )
+        return p_new, m_new, v_new
+
+    out = jax.tree_util.tree_map(upd, params, grads, m, v)
+    new_params = jax.tree_util.tree_map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree_util.tree_map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree_util.tree_map(lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple))
+    return new_params, new_m, new_v, gnorm
+
+
+def train_step(
+    params,
+    m,
+    v,
+    step,
+    tokens,
+    targets,
+    cfg: GPT2Config,
+    opt: AdamWConfig = AdamWConfig(),
+    matmul: MatmulFn = _matmul_paper,
+):
+    """Fused forward+backward+AdamW step; the unit the d* train-step
+    artifacts export. Returns (params', m', v', loss, grad_norm)."""
+    loss, grads = jax.value_and_grad(loss_fn)(params, tokens, targets, cfg, matmul)
+    new_params, new_m, new_v, gnorm = adamw_update(params, grads, m, v, step, opt)
+    return new_params, new_m, new_v, loss, gnorm
+
+
+def gemm_sizes(cfg: GPT2Config, batch: int, seq: int) -> list[tuple[int, int, int]]:
+    """The distinct (M, K, N) GEMM problem sizes of one training step —
+    the paper's Figure 6 x-axis (12 sizes for the 124M model at B=4,T=64).
+
+    Forward GEMMs (y = x @ W^T): qkv, attproj, fc, fcproj, lm-head.
+    Backward dinp = dout @ W, and dweight = dout^T @ x.
+    """
+    bt = batch * seq
+    c, vp = cfg.channels, cfg.padded_vocab_size
+    fwd = [
+        (bt, c, 3 * c),  # qkv
+        (bt, c, c),  # attproj
+        (bt, c, 4 * c),  # fc
+        (bt, 4 * c, c),  # fcproj
+        (bt, c, vp),  # lm head
+    ]
+    bwd_dinp = [
+        (bt, 3 * c, c),  # d(qkv input)
+        (bt, c, c),  # d(attproj input) — same size as attproj fwd
+        (bt, 4 * c, c),  # d(fc input) — same size as fcproj fwd
+        (bt, c, 4 * c),  # d(fcproj input) — same size as fc fwd
+        (bt, vp, c),  # d(lm head input)
+    ]
+    bwd_dw = [
+        (3 * c, bt, c),  # d(qkvw)
+        (c, bt, c),  # d(attprojw)
+        (4 * c, bt, c),  # d(fcw)
+        (c, bt, 4 * c),  # d(fcprojw)
+        (vp, bt, c),  # d(wte via lm head)
+    ]
+    seen: list[tuple[int, int, int]] = []
+    for s in fwd + bwd_dinp + bwd_dw:
+        if s not in seen:
+            seen.append(s)
+    return seen
+
+
+def flops_per_step(cfg: GPT2Config, batch: int, seq: int) -> int:
+    """Total fwd+bwd FLOP of one step, GEMMs only (2*M*K*N each; backward
+    doubles the forward GEMM count). Basis of the paper's 197 GFLOP/epoch
+    figure (which also counts non-GEMM ops; see rust model::flops for the
+    full Figure-2 accounting)."""
+    bt = batch * seq
+    c, vp, l = cfg.channels, cfg.padded_vocab_size, cfg.num_layers
+    per_layer = (
+        2 * bt * c * 3 * c  # qkv
+        + 2 * bt * c * c  # attproj
+        + 2 * bt * c * 4 * c  # fc
+        + 2 * bt * 4 * c * c  # fcproj
+    )
+    fwd = l * per_layer + 2 * bt * c * vp
+    return 3 * fwd  # bwd = 2x fwd for GEMMs

@@ -1,0 +1,66 @@
+"""AOT pipeline tests: HLO text emission and manifest consistency."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot
+from compile import model as M
+
+
+class TestHloText:
+    def test_gemm_lowering_produces_hlo_text(self):
+        text = aot.lower_gemm(64, 64, 128, fused=True)
+        assert "HloModule" in text
+        assert "f32[64,64]" in text
+
+    def test_paper_tiled_lowering(self):
+        text = aot.lower_gemm(64, 64, 128, fused=False)
+        assert "HloModule" in text
+
+    def test_train_step_lowering_d2(self):
+        cfg = M.CONFIGS["d2"]
+        text, abi = aot.lower_train_step(cfg, 2, 32)
+        assert "HloModule" in text
+        assert len(abi["params"]) == 16
+        assert abi["optimizer"]["lr"] == pytest.approx(3e-4)
+
+    def test_forward_lowering_d2(self):
+        cfg = M.CONFIGS["d2"]
+        text, abi = aot.lower_forward(cfg, 2, 32)
+        assert "HloModule" in text
+        assert abi["batch"] == 2
+
+
+class TestManifest:
+    @pytest.fixture(scope="class")
+    def manifest(self):
+        path = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts", "manifest.json")
+        if not os.path.exists(path):
+            pytest.skip("artifacts not built (run `make artifacts`)")
+        with open(path) as f:
+            return json.load(f)
+
+    def test_twelve_gemms(self, manifest):
+        assert len(manifest["gemms"]) == 12
+
+    def test_paper_padding_recorded(self, manifest):
+        padded = [g for g in manifest["gemms"] if g["M"] == 50304]
+        assert padded and padded[0]["M_padded"] == 50432
+
+    def test_gemm_files_exist(self, manifest):
+        base = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+        for g in manifest["gemms"]:
+            assert os.path.exists(os.path.join(base, g["fused"])), g["fused"]
+
+    def test_model_entries_complete(self, manifest):
+        for name, entry in manifest["models"].items():
+            assert len(entry["train_step"]["params"]) == 16, name
+            cfg = entry["config"]
+            assert cfg["padded_vocab_size"] % 128 == 0
+
+    def test_tile_is_paper_tile(self, manifest):
+        assert manifest["tile"] == {"m": 64, "k": 64, "n": 32}

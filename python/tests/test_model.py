@@ -1,0 +1,124 @@
+"""L2 JAX model tests: shapes, loss behaviour, gradient checks, and the
+extension kernels (layernorm/gelu/softmax) vs their references."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model as M
+from compile.kernels import gelu as gelu_k
+from compile.kernels import layernorm as ln_k
+from compile.kernels import ref
+from compile.kernels import softmax as sm_k
+
+
+@pytest.fixture(scope="module")
+def d2_setup():
+    cfg = M.CONFIGS["d2"]
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    tok = jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0, cfg.vocab_size)
+    tgt = jax.random.randint(jax.random.PRNGKey(2), (2, 32), 0, cfg.vocab_size)
+    return cfg, params, tok, tgt
+
+
+class TestForward:
+    def test_logit_shape(self, d2_setup):
+        cfg, params, tok, _ = d2_setup
+        logits = M.forward(params, tok, cfg)
+        assert logits.shape == (2, 32, cfg.padded_vocab_size)
+
+    def test_initial_loss_near_log_vocab(self, d2_setup):
+        cfg, params, tok, tgt = d2_setup
+        loss = float(M.loss_fn(params, tok, tgt, cfg))
+        assert abs(loss - np.log(cfg.padded_vocab_size)) < 0.3
+
+    def test_causality(self, d2_setup):
+        cfg, params, tok, _ = d2_setup
+        logits1 = M.forward(params, tok, cfg)
+        tok2 = tok.at[:, -1].set((tok[:, -1] + 1) % cfg.vocab_size)
+        logits2 = M.forward(params, tok2, cfg)
+        # All positions before the change agree.
+        np.testing.assert_allclose(
+            np.asarray(logits1[:, :-1]), np.asarray(logits2[:, :-1]), rtol=1e-5, atol=1e-5
+        )
+
+    def test_paper_and_plain_matmul_agree_within_bf16(self, d2_setup):
+        cfg, params, tok, tgt = d2_setup
+        l_paper = float(M.loss_fn(params, tok, tgt, cfg, M._matmul_paper))
+        l_plain = float(M.loss_fn(params, tok, tgt, cfg, M._matmul_plain))
+        assert abs(l_paper - l_plain) < 0.02 * max(abs(l_plain), 1.0)
+
+
+class TestTraining:
+    def test_loss_decreases(self, d2_setup):
+        cfg, params, tok, tgt = d2_setup
+        m = jax.tree_util.tree_map(jnp.zeros_like, params)
+        v = jax.tree_util.tree_map(jnp.zeros_like, params)
+        p = params
+        losses = []
+        for i in range(6):
+            p, m, v, loss, gnorm = M.train_step(p, m, v, float(i + 1), tok, tgt, cfg)
+            losses.append(float(loss))
+            assert float(gnorm) > 0
+        assert losses[-1] < losses[0] - 0.3
+
+    def test_grad_check_vs_numerical(self, d2_setup):
+        cfg, params, tok, tgt = d2_setup
+        loss_fn = lambda p: M.loss_fn(p, tok, tgt, cfg, M._matmul_plain)
+        grads = jax.grad(loss_fn)(params)
+        # Numerical check on a few wte entries.
+        h = 1e-2
+        for idx in [(0, 0), (5, 3)]:
+            p_plus = dict(params)
+            p_plus["wte"] = params["wte"].at[idx].add(h)
+            p_minus = dict(params)
+            p_minus["wte"] = params["wte"].at[idx].add(-h)
+            fd = (float(loss_fn(p_plus)) - float(loss_fn(p_minus))) / (2 * h)
+            analytic = float(grads["wte"][idx])
+            assert abs(fd - analytic) < max(2e-3, 0.2 * abs(fd)), (idx, fd, analytic)
+
+
+class TestGemmSizes:
+    def test_gpt2_has_twelve(self):
+        sizes = M.gemm_sizes(M.CONFIGS["d12"], 4, 64)
+        assert len(sizes) == 12
+        assert (256, 50304, 768) in sizes
+        assert (50304, 256, 768) in sizes
+
+    def test_flops_positive_and_dominated_by_lm_head(self):
+        total = M.flops_per_step(M.CONFIGS["d12"], 4, 64)
+        assert total > 1e11
+
+
+class TestExtensionKernels:
+    @settings(max_examples=8, deadline=None)
+    @given(rows=st.sampled_from([64, 128]), seed=st.integers(0, 2**31))
+    def test_layernorm_matches_ref(self, rows, seed):
+        rng = np.random.default_rng(seed)
+        x = rng.standard_normal((rows, 96)).astype(np.float32)
+        w = rng.standard_normal(96).astype(np.float32)
+        b = rng.standard_normal(96).astype(np.float32)
+        got = ln_k.layernorm(jnp.asarray(x), jnp.asarray(w), jnp.asarray(b))
+        want = ref.layernorm_ref(jnp.asarray(x), jnp.asarray(w), jnp.asarray(b))
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+    @settings(max_examples=8, deadline=None)
+    @given(seed=st.integers(0, 2**31))
+    def test_gelu_matches_ref(self, seed):
+        rng = np.random.default_rng(seed)
+        x = (rng.standard_normal((64, 48)) * 3).astype(np.float32)
+        got = gelu_k.gelu(jnp.asarray(x))
+        want = ref.gelu_ref(jnp.asarray(x))
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+    @settings(max_examples=8, deadline=None)
+    @given(seed=st.integers(0, 2**31))
+    def test_softmax_matches_ref(self, seed):
+        rng = np.random.default_rng(seed)
+        x = (rng.standard_normal((16, 160)) * 5).astype(np.float32)
+        got = sm_k.softmax(jnp.asarray(x))
+        want = ref.softmax_ref(jnp.asarray(x))
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(got).sum(-1), 1.0, rtol=1e-5)

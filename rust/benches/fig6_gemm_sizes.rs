@@ -1,0 +1,35 @@
+//! Regenerates paper Figure 6: per-problem-size GEMM runtime, CPU vs NPU.
+//! Cost-model rows for the full 124M inventory plus measured wallclock of
+//! the real engine invocation path on a subset of sizes.
+use xdna_repro::bench::fig6;
+use xdna_repro::coordinator::engine::{EngineConfig, GemmOffloadEngine, InputLayout};
+use xdna_repro::gemm::sizes::ProblemSize;
+use xdna_repro::power::profiles::PowerProfile;
+use xdna_repro::util::bench::{print_header, print_row, run, BenchConfig};
+
+fn main() {
+    fig6::print(&PowerProfile::mains());
+
+    print_header("Figure 6 (wallclock): engine invocation path on this machine");
+    let cfg = BenchConfig::from_env();
+    let sizes = [
+        ProblemSize::new(256, 768, 768),
+        ProblemSize::new(256, 768, 2304),
+        ProblemSize::new(768, 256, 768),
+    ];
+    let mut eng = GemmOffloadEngine::new(EngineConfig::default(), &sizes).unwrap();
+    for size in sizes {
+        let a = vec![0.5f32; size.m * size.k];
+        let b = vec![0.25f32; size.k * size.n];
+        let mut c = vec![0.0f32; size.m * size.n];
+        let r = run(&format!("npu-sim {size}"), &cfg, || {
+            eng.gemm(size, &a, &b, InputLayout::RowMajor, &mut c).unwrap();
+        });
+        print_row(&r);
+        let mut c2 = vec![0.0f32; size.m * size.n];
+        let r2 = run(&format!("cpu     {size}"), &cfg, || {
+            xdna_repro::gemm::cpu::gemm_f32(&a, &b, &mut c2, size.m, size.k, size.n);
+        });
+        print_row(&r2);
+    }
+}

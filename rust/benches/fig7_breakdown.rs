@@ -1,0 +1,31 @@
+//! Regenerates paper Figure 7: offloaded-GEMM stage breakdown — modeled
+//! epoch totals plus real measured stage shares from the engine.
+use xdna_repro::bench::fig7;
+use xdna_repro::coordinator::engine::{EngineConfig, GemmOffloadEngine, InputLayout, STAGES};
+use xdna_repro::gemm::sizes::ProblemSize;
+use xdna_repro::power::profiles::PowerProfile;
+
+fn main() {
+    fig7::print(&PowerProfile::mains());
+
+    println!("\n=== Figure 7 (wallclock): measured engine stage shares ===");
+    let sizes = [
+        ProblemSize::new(256, 768, 768),
+        ProblemSize::new(256, 768, 2304),
+        ProblemSize::new(256, 2304, 768),
+    ];
+    let mut eng = GemmOffloadEngine::new(EngineConfig::default(), &sizes).unwrap();
+    for _ in 0..5 {
+        for size in sizes {
+            let a = vec![0.5f32; size.m * size.k];
+            let b = vec![0.25f32; size.n * size.k]; // N x K: forces transpose
+            let mut c = vec![0.0f32; size.m * size.n];
+            eng.gemm(size, &a, &b, InputLayout::Transposed, &mut c).unwrap();
+        }
+    }
+    let total = eng.stages.total().as_secs_f64();
+    for s in STAGES {
+        let t = eng.stages.get(s).as_secs_f64();
+        println!("{:<14} {:>10.3} ms ({:>5.1}%)", s, t * 1e3, 100.0 * t / total);
+    }
+}

@@ -1,0 +1,6 @@
+//! Regenerates paper Figure 9: throughput + energy efficiency bars.
+use xdna_repro::bench::fig9;
+
+fn main() {
+    fig9::print();
+}

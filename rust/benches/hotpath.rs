@@ -1,0 +1,72 @@
+//! Hot-path micro benchmarks for the performance pass (EXPERIMENTS.md §Perf):
+//! engine invocation overhead, parallel transpose, CPU GEMM kernel,
+//! simulator exact datapath, and instruction-stream encode/decode.
+use xdna_repro::coordinator::engine::{EngineConfig, GemmOffloadEngine, InputLayout};
+use xdna_repro::coordinator::transpose::transpose;
+use xdna_repro::gemm::cpu;
+use xdna_repro::gemm::sizes::ProblemSize;
+use xdna_repro::gemm::tiling::Tiling;
+use xdna_repro::npu::gemm_design::{build_instruction_stream, build_instructions};
+use xdna_repro::npu::isa::{decode, encode};
+use xdna_repro::util::bench::{print_header, print_row, run, BenchConfig};
+use xdna_repro::util::rng::Rng;
+
+fn main() {
+    let cfg = BenchConfig::from_env();
+
+    print_header("engine invocation overhead (64x64x128, registry hit)");
+    let size = ProblemSize::new(64, 64, 128);
+    let mut eng = GemmOffloadEngine::new(EngineConfig::default(), &[size]).unwrap();
+    let a = vec![1.0f32; size.m * size.k];
+    let b = vec![1.0f32; size.k * size.n];
+    let mut c = vec![0.0f32; size.m * size.n];
+    print_row(&run("engine.gemm 64x64x128", &cfg, || {
+        eng.gemm(size, &a, &b, InputLayout::RowMajor, &mut c).unwrap();
+    }));
+
+    print_header("parallel blocked transpose");
+    let mut rng = Rng::new(1);
+    for (r, cdim) in [(768usize, 768usize), (2304, 768), (3072, 768)] {
+        let mut src = vec![0.0f32; r * cdim];
+        rng.fill_normal(&mut src, 0.0, 1.0);
+        let mut dst = vec![0.0f32; r * cdim];
+        print_row(&run(&format!("transpose {r}x{cdim}"), &cfg, || {
+            transpose(&src, &mut dst, r, cdim);
+        }));
+    }
+
+    print_header("CPU GEMM baseline (llm.c loop nest)");
+    for s in [ProblemSize::new(256, 768, 768), ProblemSize::new(256, 768, 2304)] {
+        let a = vec![0.5f32; s.m * s.k];
+        let b = vec![0.25f32; s.k * s.n];
+        let mut c = vec![0.0f32; s.m * s.n];
+        print_row(&run(&format!("cpu gemm {s}"), &cfg, || {
+            cpu::gemm_f32(&a, &b, &mut c, s.m, s.k, s.n);
+        }));
+    }
+
+    print_header("simulator exact VMAC datapath (128x128x128)");
+    {
+        use xdna_repro::npu::{prepare_device, Fidelity, NpuDevice};
+        let t = Tiling::paper(ProblemSize::new(128, 128, 128)).unwrap();
+        let mut dev = NpuDevice::new();
+        prepare_device(&mut dev, &t).unwrap();
+        dev.fidelity = Fidelity::Exact;
+        let a = vec![0.5f32; 128 * 128];
+        let b = vec![0.25f32; 128 * 128];
+        print_row(&run("exact vmac 128^3", &cfg, || {
+            dev.execute_gemm(&a, &b, &t).unwrap();
+        }));
+    }
+
+    print_header("instruction stream encode/decode");
+    let t = Tiling::paper(ProblemSize::new(256, 768, 2304)).unwrap();
+    let insts = build_instructions(&t);
+    print_row(&run("encode stream", &cfg, || {
+        std::hint::black_box(encode(&insts));
+    }));
+    let words = build_instruction_stream(&t);
+    print_row(&run("decode stream", &cfg, || {
+        std::hint::black_box(decode(&words).unwrap());
+    }));
+}

@@ -1,0 +1,8 @@
+//! Regenerates the section VII-A numerical-accuracy comparison.
+//! XDNA_REPRO_BENCH_FULL=1 measures all 12 sizes (slower).
+use xdna_repro::bench::accuracy;
+
+fn main() {
+    let full = std::env::var("XDNA_REPRO_BENCH_FULL").is_ok();
+    accuracy::print(full).unwrap();
+}

@@ -1,0 +1,6 @@
+//! Regenerates the section VII-A reconfiguration ablation (3.5x claim).
+use xdna_repro::bench::reconfig;
+
+fn main() {
+    reconfig::print().unwrap();
+}

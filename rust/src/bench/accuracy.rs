@@ -1,0 +1,125 @@
+//! Section VII-A numerical accuracy: bf16 NPU GEMM vs the f32 CPU
+//! reference.
+//!
+//! Paper: mean relative divergence below 0.06% (σ 0.03%), maximum 0.1% at
+//! the 50304×256×768 size — and despite lower precision, validation error
+//! after 41 epochs is slightly *better* than the f32 baseline.
+//!
+//! This bench runs real numerics through the simulator datapath with
+//! GPT-2-shaped operand statistics (activations ~N(0,1), weights
+//! ~N(0,0.02·√K) products — magnitudes matter for relative error).
+
+use crate::gemm::cpu;
+use crate::gemm::sizes::{distinct_sizes, ModelDims, ProblemSize};
+use crate::gemm::tiling::Tiling;
+use crate::npu::{prepare_device, NpuDevice};
+use crate::util::error::Result;
+use crate::util::rng::Rng;
+use crate::util::stats::{max_relative_divergence, mean_relative_divergence, mean_rms_divergence};
+
+/// Divergence measurement for one size.
+#[derive(Debug, Clone)]
+pub struct AccuracyRow {
+    pub size: ProblemSize,
+    /// Mean per-element relative divergence (the paper's metric; inflated
+    /// by cancellation under zero-mean synthetic operands).
+    pub mean_pct: f64,
+    /// Mean divergence normalized by output RMS (robust variant).
+    pub mean_rms_pct: f64,
+    pub max_pct: f64,
+}
+
+/// GPT-2-like operands: activations unit-normal, weights 0.02-scaled.
+fn operands(rng: &mut Rng, size: ProblemSize) -> (Vec<f32>, Vec<f32>) {
+    let mut a = vec![0.0f32; size.m * size.k];
+    let mut b = vec![0.0f32; size.k * size.n];
+    rng.fill_normal(&mut a, 0.0, 1.0);
+    // llm.c weights have std 0.02; scale up so products have GPT-2-like
+    // magnitudes relative to the f32 grid (post-layernorm activations
+    // against trained weights).
+    rng.fill_normal(&mut b, 0.0, 0.08);
+    (a, b)
+}
+
+/// Measure one size through the real simulator datapath.
+pub fn measure(size: ProblemSize, seed: u64) -> Result<AccuracyRow> {
+    let t = Tiling::paper(size)?;
+    let mut dev = NpuDevice::new();
+    prepare_device(&mut dev, &t)?;
+    let mut rng = Rng::new(seed);
+    let (a, b) = operands(&mut rng, size);
+    let (c_npu, _) = dev.execute_gemm(&a, &b, &t)?;
+    let mut c_cpu = vec![0.0f32; size.m * size.n];
+    cpu::gemm_f32(&a, &b, &mut c_cpu, size.m, size.k, size.n);
+    Ok(AccuracyRow {
+        size,
+        mean_pct: 100.0 * mean_relative_divergence(&c_npu, &c_cpu),
+        mean_rms_pct: 100.0 * mean_rms_divergence(&c_npu, &c_cpu),
+        max_pct: 100.0 * max_relative_divergence(&c_npu, &c_cpu),
+    })
+}
+
+/// Measure a subset of the GPT-2 sizes (all 12 when `full`).
+pub fn rows(full: bool) -> Result<Vec<AccuracyRow>> {
+    let sizes = distinct_sizes(&ModelDims::gpt2_124m());
+    let picked: Vec<ProblemSize> = if full {
+        sizes
+    } else {
+        // The three canonical ones incl. the paper's worst case.
+        vec![
+            ProblemSize::new(256, 768, 768),
+            ProblemSize::new(256, 768, 2304),
+            ProblemSize::new(50304, 256, 768),
+        ]
+    };
+    picked
+        .into_iter()
+        .enumerate()
+        .map(|(i, s)| measure(s, 1000 + i as u64))
+        .collect()
+}
+
+/// Print the paper-style accuracy table.
+pub fn print(full: bool) -> Result<()> {
+    println!("\n=== Section VII-A: NPU-vs-CPU numerical divergence ===");
+    println!(
+        "{:<22} {:>12} {:>12} {:>12}",
+        "size", "mean %", "mean/rms %", "max %"
+    );
+    let rs = rows(full)?;
+    for r in &rs {
+        println!(
+            "{:<22} {:>12.4} {:>12.4} {:>12.4}",
+            r.size.to_string(),
+            r.mean_pct,
+            r.mean_rms_pct,
+            r.max_pct
+        );
+    }
+    let grand_mean = rs.iter().map(|r| r.mean_rms_pct).sum::<f64>() / rs.len() as f64;
+    println!(
+        "grand mean/rms {:.4}% (paper mean: <0.06%) — per-element mean is inflated by \
+         cancellation under zero-mean synthetic operands",
+        grand_mean
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn divergence_small_but_nonzero() {
+        let r = measure(ProblemSize::new(256, 768, 768), 3).unwrap();
+        // Order-of-magnitude agreement with the paper's 0.06% mean on the
+        // RMS-normalized metric; the per-element metric is inflated by
+        // cancellation under zero-mean synthetic operands.
+        assert!(
+            r.mean_rms_pct > 0.001 && r.mean_rms_pct < 1.0,
+            "mean/rms {}%",
+            r.mean_rms_pct
+        );
+        assert!(r.max_pct > r.mean_pct);
+    }
+}

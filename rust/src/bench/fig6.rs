@@ -1,0 +1,196 @@
+//! Figure 6: per-problem-size GEMM runtime, CPU vs NPU.
+//!
+//! Paper headline numbers: NPU faster for every size; average speedup
+//! 3.1× (forward sizes) and 2.8× (backward); max 4.2× at 256×50304×768;
+//! min 1.8× at 256×768×2304; larger sizes amortize fixed overheads better.
+
+use crate::gemm::sizes::{gemm_sites, GemmSite, ModelDims, Pass, ProblemSize};
+use crate::npu::timing::TimingModel;
+use crate::power::profiles::PowerProfile;
+use crate::xrt::bo::SyncCost;
+
+use super::host_model::model_invocation;
+
+/// One Figure-6 row: a problem size's total epoch runtime on each side.
+#[derive(Debug, Clone)]
+pub struct Fig6Row {
+    pub size: ProblemSize,
+    pub passes: Vec<Pass>,
+    /// Invocations per training epoch (summed over sites with this size).
+    pub invocations: usize,
+    pub cpu_s: f64,
+    pub npu_s: f64,
+}
+
+impl Fig6Row {
+    pub fn speedup(&self) -> f64 {
+        self.cpu_s / self.npu_s
+    }
+}
+
+/// How many of a site's GEMM inputs need the CPU transpose (section V-B).
+pub fn transposed_inputs(pass: Pass) -> usize {
+    match pass {
+        Pass::Forward => 1,        // W is column-major
+        Pass::BackwardData => 0,   // dout · W, both row-major
+        Pass::BackwardWeight => 1, // doutᵀ needs transposing
+    }
+}
+
+/// Compute all Figure-6 rows for GPT-2 124M under a power profile.
+pub fn rows(profile: &PowerProfile) -> Vec<Fig6Row> {
+    let timing = TimingModel::default();
+    let sync = SyncCost::default();
+    let dims = ModelDims::gpt2_124m();
+    let mut rows: Vec<Fig6Row> = Vec::new();
+    for site in gemm_sites(&dims) {
+        let inv = model_invocation(site.size, transposed_inputs(site.pass), &timing, &sync);
+        let npu_one = inv.total_s() * profile.npu_time_scale;
+        let cpu_one = profile.cpu_gemm_s(site.size.flops());
+        match rows.iter_mut().find(|r| r.size == site.size) {
+            Some(r) => {
+                r.invocations += site.count;
+                r.cpu_s += cpu_one * site.count as f64;
+                r.npu_s += npu_one * site.count as f64;
+                if !r.passes.contains(&site.pass) {
+                    r.passes.push(site.pass);
+                }
+            }
+            None => rows.push(Fig6Row {
+                size: site.size,
+                passes: vec![site.pass],
+                invocations: site.count,
+                cpu_s: cpu_one * site.count as f64,
+                npu_s: npu_one * site.count as f64,
+            }),
+        }
+    }
+    rows
+}
+
+/// Grouped speedup summary (the paper's 3.1×/2.8× fwd/bwd averages).
+#[derive(Debug, Clone)]
+pub struct SpeedupSummary {
+    pub fwd_avg: f64,
+    pub bwd_avg: f64,
+    pub min: f64,
+    pub min_size: ProblemSize,
+    pub max: f64,
+    pub max_size: ProblemSize,
+}
+
+/// Per-pass average of per-site speedups.
+pub fn summary(profile: &PowerProfile) -> SpeedupSummary {
+    let timing = TimingModel::default();
+    let sync = SyncCost::default();
+    let dims = ModelDims::gpt2_124m();
+    let site_speedup = |s: &GemmSite| {
+        let inv = model_invocation(s.size, transposed_inputs(s.pass), &timing, &sync);
+        profile.cpu_gemm_s(s.size.flops()) / (inv.total_s() * profile.npu_time_scale)
+    };
+    let sites = gemm_sites(&dims);
+    let fwd: Vec<f64> = sites
+        .iter()
+        .filter(|s| s.pass == Pass::Forward)
+        .map(site_speedup)
+        .collect();
+    let bwd: Vec<f64> = sites
+        .iter()
+        .filter(|s| s.pass != Pass::Forward)
+        .map(site_speedup)
+        .collect();
+    let all = rows(profile);
+    let (mut min, mut max) = (f64::MAX, 0.0f64);
+    let mut min_size = all[0].size;
+    let mut max_size = all[0].size;
+    for r in &all {
+        let s = r.speedup();
+        if s < min {
+            min = s;
+            min_size = r.size;
+        }
+        if s > max {
+            max = s;
+            max_size = r.size;
+        }
+    }
+    SpeedupSummary {
+        fwd_avg: fwd.iter().sum::<f64>() / fwd.len() as f64,
+        bwd_avg: bwd.iter().sum::<f64>() / bwd.len() as f64,
+        min,
+        min_size,
+        max,
+        max_size,
+    }
+}
+
+/// Print the paper-style table.
+pub fn print(profile: &PowerProfile) {
+    println!("\n=== Figure 6: GEMM runtime per problem size ({}) ===", profile.name);
+    println!(
+        "{:<22} {:>6} {:>12} {:>12} {:>9}",
+        "size MxKxN", "inv/ep", "CPU ms/ep", "NPU ms/ep", "speedup"
+    );
+    for r in rows(profile) {
+        println!(
+            "{:<22} {:>6} {:>12.2} {:>12.2} {:>8.2}x",
+            r.size.to_string(),
+            r.invocations,
+            r.cpu_s * 1e3,
+            r.npu_s * 1e3,
+            r.speedup()
+        );
+    }
+    let s = summary(profile);
+    println!("---");
+    println!(
+        "fwd avg speedup {:.2}x (paper: 3.1x) | bwd avg {:.2}x (paper: 2.8x)",
+        s.fwd_avg, s.bwd_avg
+    );
+    println!(
+        "max {:.2}x @ {} (paper: 4.2x @ 256x50304x768) | min {:.2}x @ {} (paper: 1.8x @ 256x768x2304)",
+        s.max, s.max_size, s.min, s.min_size
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn npu_wins_every_size() {
+        for r in rows(&PowerProfile::mains()) {
+            assert!(r.speedup() > 1.0, "{}: {:.2}", r.size, r.speedup());
+        }
+    }
+
+    #[test]
+    fn twelve_rows() {
+        assert_eq!(rows(&PowerProfile::mains()).len(), 12);
+    }
+
+    #[test]
+    fn paper_shape_holds() {
+        let s = summary(&PowerProfile::mains());
+        // Who wins / by what factor / where extremes fall (bands, not
+        // point-matching — our substrate is a model, not their laptop).
+        assert!(s.fwd_avg > 2.0 && s.fwd_avg < 4.5, "fwd avg {}", s.fwd_avg);
+        assert!(s.bwd_avg > 1.8 && s.bwd_avg < 4.5, "bwd avg {}", s.bwd_avg);
+        assert!(s.max > 3.0, "max {}", s.max);
+        assert!(s.min < 2.6, "min {}", s.min);
+        // The paper's max-speedup size involves the big K dimension.
+        assert!(
+            s.max_size.k == 50304 || s.max_size.m == 50304 || s.max_size.n == 50304,
+            "max at {}",
+            s.max_size
+        );
+    }
+
+    #[test]
+    fn larger_sizes_amortize_better() {
+        let rs = rows(&PowerProfile::mains());
+        let small = rs.iter().find(|r| r.size == ProblemSize::new(256, 768, 768)).unwrap();
+        let large = rs.iter().find(|r| r.size == ProblemSize::new(256, 50304, 768)).unwrap();
+        assert!(large.speedup() > small.speedup());
+    }
+}

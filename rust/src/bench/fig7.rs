@@ -1,0 +1,111 @@
+//! Figure 7: offloaded-GEMM runtime breakdown by invocation stage.
+//!
+//! The paper shows, summed over one epoch's GEMM invocations: input copy,
+//! transpose (where needed), the NPU kernel itself, and the unavoidable
+//! XDNA-driver input/output syncs. The kernel dominates but host-side
+//! preparation is "a significant contributor".
+
+use crate::gemm::sizes::{gemm_sites, ModelDims};
+use crate::npu::timing::TimingModel;
+use crate::power::profiles::PowerProfile;
+use crate::xrt::bo::SyncCost;
+
+use super::fig6::transposed_inputs;
+use super::host_model::model_invocation;
+
+/// Stage totals over one epoch (seconds).
+#[derive(Debug, Clone, Default)]
+pub struct Fig7Breakdown {
+    pub input_copy_s: f64,
+    pub transpose_s: f64,
+    pub input_sync_s: f64,
+    pub kernel_s: f64,
+    pub output_sync_s: f64,
+    pub output_copy_s: f64,
+}
+
+impl Fig7Breakdown {
+    pub fn total_s(&self) -> f64 {
+        self.input_copy_s
+            + self.transpose_s
+            + self.input_sync_s
+            + self.kernel_s
+            + self.output_sync_s
+            + self.output_copy_s
+    }
+
+    pub fn as_rows(&self) -> Vec<(&'static str, f64)> {
+        vec![
+            ("input copy", self.input_copy_s),
+            ("transpose", self.transpose_s),
+            ("input sync.", self.input_sync_s),
+            ("NPU kernel", self.kernel_s),
+            ("output sync.", self.output_sync_s),
+            ("output copy", self.output_copy_s),
+        ]
+    }
+}
+
+/// Epoch-level stage breakdown for GPT-2 124M.
+pub fn breakdown(profile: &PowerProfile) -> Fig7Breakdown {
+    let timing = TimingModel::default();
+    let sync = SyncCost::default();
+    let mut out = Fig7Breakdown::default();
+    for site in gemm_sites(&ModelDims::gpt2_124m()) {
+        let m = model_invocation(site.size, transposed_inputs(site.pass), &timing, &sync);
+        let n = site.count as f64;
+        let scale = profile.npu_time_scale;
+        out.input_copy_s += m.input_copy_s * n;
+        out.transpose_s += m.transpose_s * n;
+        out.input_sync_s += m.input_sync_s * n;
+        out.kernel_s += m.kernel_s * n * scale;
+        out.output_sync_s += m.output_sync_s * n;
+        out.output_copy_s += m.output_copy_s * n;
+    }
+    out
+}
+
+/// Print the paper-style table.
+pub fn print(profile: &PowerProfile) {
+    let b = breakdown(profile);
+    println!(
+        "\n=== Figure 7: offloaded GEMM runtime breakdown per epoch ({}) ===",
+        profile.name
+    );
+    for (name, s) in b.as_rows() {
+        println!(
+            "{:<14} {:>10.2} ms  ({:>5.1}%)",
+            name,
+            s * 1e3,
+            100.0 * s / b.total_s()
+        );
+    }
+    println!("{:<14} {:>10.2} ms", "total", b.total_s() * 1e3);
+    println!("(paper: NPU kernel is the largest stage; copy/transpose/sync significant)");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kernel_is_largest_stage() {
+        let b = breakdown(&PowerProfile::mains());
+        for (name, s) in b.as_rows() {
+            if name != "NPU kernel" {
+                assert!(b.kernel_s > s, "kernel {} vs {name} {}", b.kernel_s, s);
+            }
+        }
+    }
+
+    #[test]
+    fn host_prep_is_significant() {
+        // Paper: "CPU-side preparation work ... is also a significant
+        // contributor" — at least 10% of the total.
+        let b = breakdown(&PowerProfile::mains());
+        let prep = b.input_copy_s + b.transpose_s + b.input_sync_s + b.output_sync_s
+            + b.output_copy_s;
+        assert!(prep / b.total_s() > 0.10, "prep fraction {}", prep / b.total_s());
+        assert!(prep / b.total_s() < 0.60);
+    }
+}

@@ -1,0 +1,105 @@
+//! Figure 8: end-to-end epoch runtime split by op, CPU vs CPU+NPU.
+//!
+//! Paper: matmul dominates the vanilla epoch; offloading shrinks exactly
+//! that bar while the other (unaltered) ops keep their runtimes thanks to
+//! the unified L3 memory.
+
+use crate::model::config::ModelConfig;
+use crate::model::flops;
+use crate::power::profiles::PowerProfile;
+
+use super::fig7;
+
+/// Per-op epoch seconds for both configurations.
+#[derive(Debug, Clone)]
+pub struct Fig8Row {
+    pub op: &'static str,
+    pub cpu_s: f64,
+    pub cpu_npu_s: f64,
+}
+
+/// Modeled rows for GPT-2 124M at llm.c defaults.
+pub fn rows(profile: &PowerProfile) -> Vec<Fig8Row> {
+    let cfg = ModelConfig::d12();
+    let table = flops::table(&cfg, 4, 64);
+    let npu_gemm_total = fig7::breakdown(profile).total_s();
+    table
+        .iter()
+        .map(|op| {
+            let fl = (op.forward + op.backward) as f64;
+            if op.op == "matmul" {
+                Fig8Row {
+                    op: "matmul",
+                    cpu_s: fl / profile.cpu_gemm_flops,
+                    cpu_npu_s: npu_gemm_total,
+                }
+            } else {
+                let s = fl / profile.cpu_other_flops;
+                Fig8Row {
+                    op: op.op,
+                    cpu_s: s,
+                    cpu_npu_s: s, // unaltered ops: same runtime
+                }
+            }
+        })
+        .collect()
+}
+
+/// Epoch totals (seconds): (cpu, cpu+npu).
+pub fn totals(profile: &PowerProfile) -> (f64, f64) {
+    let rs = rows(profile);
+    (
+        rs.iter().map(|r| r.cpu_s).sum(),
+        rs.iter().map(|r| r.cpu_npu_s).sum(),
+    )
+}
+
+/// Print the paper-style table.
+pub fn print(profile: &PowerProfile) {
+    println!(
+        "\n=== Figure 8: epoch runtime by op, CPU vs CPU+NPU ({}) ===",
+        profile.name
+    );
+    println!("{:<12} {:>12} {:>14}", "op", "CPU ms", "CPU+NPU ms");
+    for r in rows(profile) {
+        println!("{:<12} {:>12.1} {:>14.1}", r.op, r.cpu_s * 1e3, r.cpu_npu_s * 1e3);
+    }
+    let (c, n) = totals(profile);
+    println!("{:<12} {:>12.1} {:>14.1}  ({:.2}x)", "total", c * 1e3, n * 1e3, c / n);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_dominates_cpu_epoch() {
+        let rs = rows(&PowerProfile::mains());
+        let matmul = rs.iter().find(|r| r.op == "matmul").unwrap().cpu_s;
+        let total: f64 = rs.iter().map(|r| r.cpu_s).sum();
+        assert!(matmul / total > 0.5, "matmul fraction {}", matmul / total);
+    }
+
+    #[test]
+    fn only_matmul_changes() {
+        for r in rows(&PowerProfile::mains()) {
+            if r.op == "matmul" {
+                assert!(r.cpu_npu_s < r.cpu_s);
+            } else {
+                assert_eq!(r.cpu_s, r.cpu_npu_s, "{}", r.op);
+            }
+        }
+    }
+
+    #[test]
+    fn e2e_speedup_in_paper_band() {
+        // Paper: 1.7x on mains, 1.2x on battery.
+        let (c_m, n_m) = totals(&PowerProfile::mains());
+        let s_mains = c_m / n_m;
+        assert!((1.4..2.1).contains(&s_mains), "mains speedup {s_mains}");
+        let (c_b, n_b) = totals(&PowerProfile::battery());
+        let s_batt = c_b / n_b;
+        assert!((1.05..1.5).contains(&s_batt), "battery speedup {s_batt}");
+        assert!(s_mains > s_batt, "battery must shrink the win");
+    }
+}

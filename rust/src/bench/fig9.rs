@@ -1,0 +1,99 @@
+//! Figure 9: end-to-end throughput (GFLOP/s) and energy efficiency
+//! (GFLOP/Ws), CPU vs CPU+NPU, on mains and battery.
+//!
+//! Paper: throughput 1.7× (mains) / 1.2× (battery); efficiency 1.4×
+//! (battery). One epoch = 197 GFLOP.
+
+use crate::model::config::ModelConfig;
+use crate::model::flops;
+use crate::power::profiles::PowerProfile;
+
+use super::fig8;
+
+/// One Figure-9 bar.
+#[derive(Debug, Clone)]
+pub struct Fig9Bar {
+    pub label: String,
+    pub gflops_per_s: f64,
+    pub gflops_per_ws: f64,
+}
+
+/// Compute the four bars for one profile.
+pub fn bars(profile: &PowerProfile) -> (Fig9Bar, Fig9Bar) {
+    let cfg = ModelConfig::d12();
+    let epoch_flops = flops::total_per_step(&cfg, 4, 64) as f64;
+    let (cpu_s, npu_s) = fig8::totals(profile);
+
+    let cpu_energy = cpu_s * profile.platform_cpu_busy_w;
+    let npu_energy = npu_s * (profile.platform_offload_w + profile.npu_active_w);
+
+    (
+        Fig9Bar {
+            label: format!("CPU ({})", profile.name),
+            gflops_per_s: epoch_flops / cpu_s / 1e9,
+            gflops_per_ws: epoch_flops / cpu_energy / 1e9,
+        },
+        Fig9Bar {
+            label: format!("CPU+NPU ({})", profile.name),
+            gflops_per_s: epoch_flops / npu_s / 1e9,
+            gflops_per_ws: epoch_flops / npu_energy / 1e9,
+        },
+    )
+}
+
+/// Print the paper-style table for both profiles.
+pub fn print() {
+    println!("\n=== Figure 9: end-to-end throughput and energy efficiency ===");
+    println!("{:<20} {:>14} {:>14}", "config", "GFLOP/s", "GFLOP/Ws");
+    for profile in [PowerProfile::mains(), PowerProfile::battery()] {
+        let (cpu, npu) = bars(&profile);
+        for b in [&cpu, &npu] {
+            println!(
+                "{:<20} {:>14.1} {:>14.2}",
+                b.label, b.gflops_per_s, b.gflops_per_ws
+            );
+        }
+        println!(
+            "  speedup {:.2}x | efficiency gain {:.2}x",
+            npu.gflops_per_s / cpu.gflops_per_s,
+            npu.gflops_per_ws / cpu.gflops_per_ws
+        );
+    }
+    println!("(paper: 1.7x / 1.2x throughput on mains/battery; 1.4x GFLOP/Ws on battery)");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn npu_improves_both_metrics() {
+        for p in [PowerProfile::mains(), PowerProfile::battery()] {
+            let (cpu, npu) = bars(&p);
+            assert!(npu.gflops_per_s > cpu.gflops_per_s, "{}", p.name);
+            assert!(npu.gflops_per_ws > cpu.gflops_per_ws, "{}", p.name);
+        }
+    }
+
+    #[test]
+    fn battery_efficiency_gain_near_paper() {
+        let (cpu, npu) = bars(&PowerProfile::battery());
+        let gain = npu.gflops_per_ws / cpu.gflops_per_ws;
+        assert!((1.15..1.8).contains(&gain), "battery efficiency gain {gain} (paper 1.4x)");
+    }
+
+    #[test]
+    fn mains_throughput_speedup_near_paper() {
+        let (cpu, npu) = bars(&PowerProfile::mains());
+        let s = npu.gflops_per_s / cpu.gflops_per_s;
+        assert!((1.4..2.1).contains(&s), "mains speedup {s} (paper 1.7x)");
+    }
+
+    #[test]
+    fn throughput_is_hundreds_of_gflops() {
+        // Paper discussion: e2e throughput is "hundreds of GFLOP/s",
+        // far below the NPU's multi-TFLOP peak.
+        let (_, npu) = bars(&PowerProfile::mains());
+        assert!(npu.gflops_per_s > 100.0 && npu.gflops_per_s < 1000.0);
+    }
+}

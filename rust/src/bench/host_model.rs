@@ -1,0 +1,97 @@
+//! Host-side (CPU) cost constants for the offload invocation path.
+//!
+//! Figure 7 decomposes an invocation into copy / transpose / syncs /
+//! kernel; the device-side pieces come from `npu::timing`, the host-side
+//! copies from these memory-bandwidth constants (calibrated to a laptop
+//! class DDR5 system under concurrent NPU traffic).
+
+use crate::gemm::sizes::ProblemSize;
+use crate::gemm::tiling::Tiling;
+use crate::npu::timing::TimingModel;
+use crate::xrt::bo::{SyncCost, SyncDirection};
+
+/// Plain memcpy bandwidth into the shared BO (bytes/s).
+pub const COPY_BYTES_PER_S: f64 = 20e9;
+/// Blocked multi-core transpose bandwidth (bytes/s) — strided writes are
+/// slower than memcpy.
+pub const TRANSPOSE_BYTES_PER_S: f64 = 12e9;
+
+/// Modeled host+device breakdown of one offloaded GEMM invocation.
+#[derive(Debug, Clone, Default)]
+pub struct InvocationModel {
+    pub input_copy_s: f64,
+    pub transpose_s: f64,
+    pub input_sync_s: f64,
+    pub kernel_s: f64,
+    pub output_sync_s: f64,
+    pub output_copy_s: f64,
+}
+
+impl InvocationModel {
+    pub fn total_s(&self) -> f64 {
+        self.input_copy_s
+            + self.transpose_s
+            + self.input_sync_s
+            + self.kernel_s
+            + self.output_sync_s
+            + self.output_copy_s
+    }
+}
+
+/// Model one invocation of `size`; `transposed_inputs` counts how many of
+/// the two inputs need the CPU-side transpose (0..=2).
+pub fn model_invocation(
+    size: ProblemSize,
+    transposed_inputs: usize,
+    timing: &TimingModel,
+    sync: &SyncCost,
+) -> InvocationModel {
+    let t = Tiling::paper(ProblemSize::new(
+        size.m,
+        size.k.div_ceil(64) * 64,
+        size.n.div_ceil(128) * 128,
+    ))
+    .expect("padded size always tiles");
+    let a_bytes = (size.m * size.k * 4) as f64;
+    let b_bytes = (size.k * size.n * 4) as f64;
+    let c_bytes = (size.m * size.n * 4) as f64;
+    let transposed_bytes = match transposed_inputs {
+        0 => 0.0,
+        1 => b_bytes,
+        _ => a_bytes + b_bytes,
+    };
+    let copied_bytes = a_bytes + b_bytes - transposed_bytes;
+    let g = timing.gemm(&t);
+    InvocationModel {
+        input_copy_s: copied_bytes / COPY_BYTES_PER_S,
+        transpose_s: transposed_bytes / TRANSPOSE_BYTES_PER_S,
+        input_sync_s: sync.cost_s((a_bytes + b_bytes) as usize, SyncDirection::ToDevice),
+        kernel_s: g.kernel_s + g.issue_s + g.dispatch_s,
+        output_sync_s: sync.cost_s(c_bytes as usize, SyncDirection::FromDevice),
+        output_copy_s: c_bytes / COPY_BYTES_PER_S,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transpose_costs_more_than_copy() {
+        let timing = TimingModel::default();
+        let sync = SyncCost::default();
+        let size = ProblemSize::new(256, 768, 2304);
+        let plain = model_invocation(size, 0, &timing, &sync);
+        let tr = model_invocation(size, 1, &timing, &sync);
+        assert!(tr.transpose_s > 0.0);
+        assert!(tr.total_s() > plain.total_s());
+    }
+
+    #[test]
+    fn kernel_dominates_large_sizes() {
+        let timing = TimingModel::default();
+        let sync = SyncCost::default();
+        let m = model_invocation(ProblemSize::new(256, 50304, 768), 0, &timing, &sync);
+        assert!(m.kernel_s > m.total_s() * 0.4, "{m:?}");
+    }
+}

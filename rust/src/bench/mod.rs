@@ -1,0 +1,14 @@
+//! Figure/table regeneration harness.
+//!
+//! One module per exhibit in the paper's evaluation (section VII). Each
+//! computes its rows from the calibrated cost models plus, where
+//! wallclock-meaningful, real runs of the engine/model on this machine,
+//! and prints a paper-style table with the paper's own numbers alongside.
+
+pub mod accuracy;
+pub mod fig6;
+pub mod fig7;
+pub mod fig8;
+pub mod fig9;
+pub mod host_model;
+pub mod reconfig;

@@ -1,0 +1,125 @@
+//! Numerics backends for the offload engine.
+//!
+//! The engine's host-side behaviour (registry, copies, transposes, syncs,
+//! reconfiguration) is identical regardless of where the GEMM numbers come
+//! from; the backend only answers "multiply these padded matrices under
+//! the NPU's bf16 contract":
+//!
+//! * [`NumericsBackend::Simulator`] — the XDNA simulator's functional
+//!   datapath (default; self-contained).
+//! * [`NumericsBackend::Pjrt`] — the AOT-lowered Pallas GEMM artifact for
+//!   that problem size, executed through the PJRT CPU client. This is the
+//!   true three-layer path: L1 Pallas kernel inside an L2-lowered HLO,
+//!   driven from the L3 coordinator.
+
+use std::collections::BTreeMap;
+
+use crate::gemm::sizes::ProblemSize;
+use crate::runtime::client::{literal_f32, RuntimeClient};
+use crate::runtime::manifest::Manifest;
+use crate::util::error::{Error, Result};
+
+/// Where GEMM numerics come from.
+pub enum NumericsBackend {
+    Simulator,
+    Pjrt(PjrtGemms),
+}
+
+impl std::fmt::Debug for NumericsBackend {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            NumericsBackend::Simulator => write!(f, "Simulator"),
+            NumericsBackend::Pjrt(_) => write!(f, "Pjrt"),
+        }
+    }
+}
+
+/// Per-size compiled Pallas GEMM executables.
+pub struct PjrtGemms {
+    client: RuntimeClient,
+    manifest: Manifest,
+    loaded: BTreeMap<ProblemSize, crate::runtime::client::Executable>,
+}
+
+impl PjrtGemms {
+    /// Open the PJRT client against an artifacts directory.
+    pub fn open(manifest: Manifest) -> Result<PjrtGemms> {
+        Ok(PjrtGemms {
+            client: RuntimeClient::cpu()?,
+            manifest,
+            loaded: BTreeMap::new(),
+        })
+    }
+
+    /// Preload (compile) the artifact for a problem size.
+    pub fn prepare(&mut self, size: ProblemSize) -> Result<()> {
+        if self.loaded.contains_key(&size) {
+            return Ok(());
+        }
+        let art = self.manifest.gemm_for(size).ok_or_else(|| {
+            Error::runtime(format!(
+                "no GEMM artifact for size {size}; re-run `make artifacts`"
+            ))
+        })?;
+        let exe = self.client.load(self.manifest.file(&art.fused_file))?;
+        self.loaded.insert(size, exe);
+        Ok(())
+    }
+
+    /// Execute the artifact. `a` must already be padded to `m_padded`.
+    pub fn run(
+        &mut self,
+        size: ProblemSize,
+        m_padded: usize,
+        a: &[f32],
+        b: &[f32],
+    ) -> Result<Vec<f32>> {
+        self.prepare(size)?;
+        let exe = self.loaded.get(&size).expect("prepared above");
+        let la = literal_f32(a, &[m_padded, size.k])?;
+        let lb = literal_f32(b, &[size.k, size.n])?;
+        let mut out = exe.run_f32(&[la, lb])?;
+        if out.len() != 1 {
+            return Err(Error::runtime(format!(
+                "GEMM artifact returned {} outputs, expected 1",
+                out.len()
+            )));
+        }
+        Ok(out.pop().unwrap())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::default_dir;
+
+    #[test]
+    fn pjrt_backend_runs_padded_size() {
+        if !default_dir().join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(default_dir()).unwrap();
+        let mut be = PjrtGemms::open(m).unwrap();
+        let size = ProblemSize::new(256, 768, 768);
+        be.prepare(size).unwrap();
+        let a = vec![0.5f32; 256 * 768];
+        let b = vec![0.25f32; 768 * 768];
+        let c = be.run(size, 256, &a, &b).unwrap();
+        assert_eq!(c.len(), 256 * 768);
+        // 768 * 0.5 * 0.25 = 96 exactly (bf16-representable inputs).
+        assert!((c[0] - 96.0).abs() < 1e-3, "{}", c[0]);
+    }
+
+    #[test]
+    fn missing_size_is_helpful_error() {
+        if !default_dir().join("manifest.json").exists() {
+            return;
+        }
+        let m = Manifest::load(default_dir()).unwrap();
+        let mut be = PjrtGemms::open(m).unwrap();
+        let err = be.prepare(ProblemSize::new(2, 2, 2)).unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+}

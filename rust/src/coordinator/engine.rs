@@ -1,0 +1,581 @@
+//! The GEMM offload engine — paper section V.
+//!
+//! Initialization (V-A): the static configuration is registered once; for
+//! every problem size the engine preloads an instruction stream and a set
+//! of shared XRT buffers into a registry (the paper's "hash map that
+//! stores the XRT data structures ... for each problem size").
+//!
+//! Invocation (V-B): copy inputs into the shared BOs (transposing
+//! column-major weights on the fly, parallel across CPU cores), sync to
+//! device, issue the per-size instruction stream (only when the problem
+//! size changed), run the kernel, sync back, copy out. Every stage is
+//! timed — wallclock for what really runs on this machine, plus the
+//! modeled seconds of the simulated device — producing Figure 7.
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use crate::gemm::sizes::ProblemSize;
+use crate::gemm::tiling::Tiling;
+use crate::npu::gemm_design::build_instruction_stream;
+use crate::util::error::{Error, Result};
+use crate::util::timer::StageTimer;
+use crate::xrt::{BufferObject, SyncDirection, XrtDevice};
+
+use super::backend::NumericsBackend;
+use super::reconfig::{self, ReconfigPolicy};
+use super::transpose::transpose_into;
+
+/// Stage names (Figure 7's categories).
+pub const STAGE_INPUT_COPY: &str = "input copy";
+pub const STAGE_TRANSPOSE: &str = "transpose";
+pub const STAGE_INPUT_SYNC: &str = "input sync";
+pub const STAGE_RECONFIG: &str = "reconfig";
+pub const STAGE_KERNEL: &str = "npu kernel";
+pub const STAGE_OUTPUT_SYNC: &str = "output sync";
+pub const STAGE_OUTPUT_COPY: &str = "output copy";
+
+/// All stages in reporting order.
+pub const STAGES: [&str; 7] = [
+    STAGE_INPUT_COPY,
+    STAGE_TRANSPOSE,
+    STAGE_INPUT_SYNC,
+    STAGE_RECONFIG,
+    STAGE_KERNEL,
+    STAGE_OUTPUT_SYNC,
+    STAGE_OUTPUT_COPY,
+];
+
+/// Layout of the B input at its llm.c call site.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum InputLayout {
+    /// Already K×N row-major: plain copy.
+    RowMajor,
+    /// N×K row-major (llm.c's column-major weight view): the copy into the
+    /// BO transposes (paper section V-B).
+    Transposed,
+}
+
+/// Engine construction options.
+pub struct EngineConfig {
+    pub policy: ReconfigPolicy,
+    pub backend: NumericsBackend,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            policy: ReconfigPolicy::Minimal,
+            backend: NumericsBackend::Simulator,
+        }
+    }
+}
+
+/// Preloaded per-size state (the registry entry).
+struct Prepared {
+    /// The logical (unpadded) problem size requested by the caller.
+    logical: ProblemSize,
+    /// Tiling of the padded problem (K and N padded up to tile multiples;
+    /// GPT-2 124M sizes never need this — the paper pads only M — but the
+    /// engine stays usable for arbitrary sizes).
+    tiling: Tiling,
+    inst_stream: Vec<u32>,
+    /// Padded A buffer (m_padded × k; pad rows stay zero).
+    a_bo: BufferObject,
+    /// B buffer (k × n row-major).
+    b_bo: BufferObject,
+    /// Output buffer (m × n, unpadded).
+    c_bo: BufferObject,
+    /// Telemetry for Figure 6.
+    invocations: u64,
+    wall_s: f64,
+    modeled_s: f64,
+}
+
+/// Per-invocation result statistics.
+#[derive(Debug, Clone)]
+pub struct InvocationStats {
+    pub size: ProblemSize,
+    /// Modeled device seconds by stage (sync/issue/kernel/reconfig).
+    pub modeled_kernel_s: f64,
+    pub modeled_sync_in_s: f64,
+    pub modeled_sync_out_s: f64,
+    pub modeled_reconfig_s: f64,
+    pub modeled_energy_j: f64,
+    /// Wallclock of the full invocation on this machine.
+    pub wall_s: f64,
+}
+
+impl InvocationStats {
+    pub fn modeled_total_s(&self) -> f64 {
+        self.modeled_kernel_s
+            + self.modeled_sync_in_s
+            + self.modeled_sync_out_s
+            + self.modeled_reconfig_s
+    }
+}
+
+/// Aggregated per-size record (drives Figure 6).
+#[derive(Debug, Clone)]
+pub struct SizeRecord {
+    pub size: ProblemSize,
+    pub invocations: u64,
+    pub wall_s: f64,
+    pub modeled_s: f64,
+}
+
+/// The offload engine.
+pub struct GemmOffloadEngine {
+    pub dev: XrtDevice,
+    backend: NumericsBackend,
+    policy: ReconfigPolicy,
+    registry: BTreeMap<ProblemSize, Prepared>,
+    current_size: Option<ProblemSize>,
+    /// Wallclock stage accounting across all invocations (Figure 7).
+    pub stages: StageTimer,
+    /// Modeled device-seconds per stage across all invocations.
+    pub modeled_stages: Vec<(String, f64)>,
+    pub invocations: u64,
+    pub modeled_energy_j: f64,
+}
+
+impl GemmOffloadEngine {
+    /// Initialize the engine and preload `sizes` into the registry
+    /// (paper section V-A). More sizes can be registered later.
+    pub fn new(cfg: EngineConfig, sizes: &[ProblemSize]) -> Result<GemmOffloadEngine> {
+        let mut eng = GemmOffloadEngine {
+            dev: XrtDevice::open(),
+            backend: cfg.backend,
+            policy: cfg.policy,
+            registry: BTreeMap::new(),
+            current_size: None,
+            stages: StageTimer::new(),
+            modeled_stages: STAGES.iter().map(|s| (s.to_string(), 0.0)).collect(),
+            invocations: 0,
+            modeled_energy_j: 0.0,
+        };
+        for &s in sizes {
+            eng.register_size(s)?;
+        }
+        Ok(eng)
+    }
+
+    /// Build and store the per-size state: tiling, instruction stream,
+    /// shared buffers. Idempotent.
+    pub fn register_size(&mut self, size: ProblemSize) -> Result<()> {
+        if self.registry.contains_key(&size) {
+            return Ok(());
+        }
+        // Pad K to a multiple of k and N to a multiple of 4n (zero padding
+        // cannot change the product); M padding is handled by Tiling.
+        let tiles = crate::gemm::tiling::PAPER_TILES;
+        let k_p = size.k.div_ceil(tiles.k) * tiles.k;
+        let n_p = size.n.div_ceil(4 * tiles.n) * (4 * tiles.n);
+        let padded = ProblemSize::new(size.m, k_p, n_p);
+        let tiling = Tiling::paper(padded)?;
+        let inst_stream = build_instruction_stream(&tiling);
+        if let NumericsBackend::Pjrt(p) = &mut self.backend {
+            p.prepare(size)?;
+        }
+        let prepared = Prepared {
+            logical: size,
+            a_bo: self.dev.alloc_bo(tiling.m_padded * k_p),
+            b_bo: self.dev.alloc_bo(k_p * n_p),
+            c_bo: self.dev.alloc_bo(size.m * n_p),
+            tiling,
+            inst_stream,
+            invocations: 0,
+            wall_s: 0.0,
+            modeled_s: 0.0,
+        };
+        self.registry.insert(size, prepared);
+        Ok(())
+    }
+
+    /// Registered sizes in registry order.
+    pub fn registered_sizes(&self) -> Vec<ProblemSize> {
+        self.registry.keys().copied().collect()
+    }
+
+    fn add_modeled(&mut self, stage: &str, s: f64) {
+        if let Some(slot) = self.modeled_stages.iter_mut().find(|(n, _)| n == stage) {
+            slot.1 += s;
+        } else {
+            self.modeled_stages.push((stage.to_string(), s));
+        }
+    }
+
+    /// Offloaded GEMM: `c = a · b` with `a` given in `a_layout` relative to
+    /// M×K and `b` in `b_layout` relative to K×N. Writes the M×N row-major
+    /// result into `c`.
+    ///
+    /// This is the complete paper section V-B invocation path. Backward
+    /// weight-gradient GEMMs pass `a_layout = Transposed` (doutᵀ), which is
+    /// the "inconsistent data layouts across invocations" the paper fixes
+    /// with CPU-side transposes during the copy.
+    pub fn gemm_ex(
+        &mut self,
+        size: ProblemSize,
+        a: &[f32],
+        a_layout: InputLayout,
+        b: &[f32],
+        b_layout: InputLayout,
+        c: &mut [f32],
+    ) -> Result<InvocationStats> {
+        let (m, k, n) = (size.m, size.k, size.n);
+        if a.len() != m * k || b.len() != k * n || c.len() != m * n {
+            return Err(Error::shape(format!(
+                "engine gemm {size}: got A={} B={} C={}",
+                a.len(),
+                b.len(),
+                c.len()
+            )));
+        }
+        if !self.registry.contains_key(&size) {
+            // Lazy registration keeps the engine usable for new sizes, at
+            // first-invocation cost — same behaviour as the paper's init
+            // doing it up front.
+            self.register_size(size)?;
+        }
+        let wall_start = Instant::now();
+
+        // We need disjoint borrows of self.registry and self.dev; take the
+        // prepared entry out and put it back at the end.
+        let mut prep = self.registry.remove(&size).expect("registered above");
+        let tiling = prep.tiling;
+
+        // -- Stage 1: input copy (+ transpose where layouts demand). -------
+        let t0 = Instant::now();
+        let k_p = prep.tiling.size.k;
+        let n_p = prep.tiling.size.n;
+        match a_layout {
+            InputLayout::RowMajor => {
+                let a_host = prep.a_bo.map_mut();
+                if k_p == k {
+                    a_host[..m * k].copy_from_slice(a);
+                } else {
+                    for r in 0..m {
+                        a_host[r * k_p..r * k_p + k].copy_from_slice(&a[r * k..(r + 1) * k]);
+                    }
+                }
+                // pad rows/cols beyond m×k stay zero from allocation
+                self.stages.add(STAGE_INPUT_COPY, t0.elapsed());
+            }
+            InputLayout::Transposed => {
+                // a is K×M row-major (e.g. dout viewed as its transpose);
+                // transpose into the BO's M×K (stride k_p) region.
+                if k_p == k {
+                    transpose_into(a, &mut prep.a_bo.map_mut()[..m * k], k, m);
+                } else {
+                    let mut tmp = vec![0.0f32; m * k];
+                    transpose_into(a, &mut tmp, k, m);
+                    let a_host = prep.a_bo.map_mut();
+                    for r in 0..m {
+                        a_host[r * k_p..r * k_p + k].copy_from_slice(&tmp[r * k..(r + 1) * k]);
+                    }
+                }
+                self.stages.add(STAGE_TRANSPOSE, t0.elapsed());
+            }
+        }
+
+        let t1 = Instant::now();
+        match b_layout {
+            InputLayout::RowMajor => {
+                if k_p == k && n_p == n {
+                    prep.b_bo.map_mut().copy_from_slice(b);
+                } else {
+                    let b_host = prep.b_bo.map_mut();
+                    for r in 0..k {
+                        b_host[r * n_p..r * n_p + n].copy_from_slice(&b[r * n..(r + 1) * n]);
+                    }
+                }
+                self.stages.add(STAGE_INPUT_COPY, t1.elapsed());
+            }
+            InputLayout::Transposed => {
+                // b is N×K row-major; the copy into the BO transposes it to
+                // K×N (the paper's CPU-side transpose, multi-core).
+                if k_p == k && n_p == n {
+                    transpose_into(b, prep.b_bo.map_mut(), n, k);
+                } else {
+                    let mut tmp = vec![0.0f32; k * n];
+                    transpose_into(b, &mut tmp, n, k);
+                    let b_host = prep.b_bo.map_mut();
+                    for r in 0..k {
+                        b_host[r * n_p..r * n_p + n].copy_from_slice(&tmp[r * n..(r + 1) * n]);
+                    }
+                }
+                self.stages.add(STAGE_TRANSPOSE, t1.elapsed());
+            }
+        }
+
+        // -- Stage 2: input sync. ------------------------------------------
+        let t2 = Instant::now();
+        let sync_in_a = self.dev.sync_bo(&mut prep.a_bo, SyncDirection::ToDevice);
+        let sync_in_b = self.dev.sync_bo(&mut prep.b_bo, SyncDirection::ToDevice);
+        self.stages.add(STAGE_INPUT_SYNC, t2.elapsed());
+        let modeled_sync_in = sync_in_a + sync_in_b;
+        self.add_modeled(STAGE_INPUT_SYNC, modeled_sync_in);
+
+        // -- Stage 3: reconfiguration (only on size change). ---------------
+        let t3 = Instant::now();
+        let modeled_reconfig = if self.current_size != Some(size) {
+            let cost = reconfig::apply(self.policy, &mut self.dev, &tiling, &prep.inst_stream)?;
+            self.current_size = Some(size);
+            cost
+        } else {
+            0.0
+        };
+        self.stages.add(STAGE_RECONFIG, t3.elapsed());
+        self.add_modeled(STAGE_RECONFIG, modeled_reconfig);
+
+        // -- Stage 4: the NPU kernel. ---------------------------------------
+        let t4 = Instant::now();
+        let (modeled_kernel, modeled_energy) = match &mut self.backend {
+            NumericsBackend::Simulator => {
+                let run = self.dev.run_gemm(&prep.a_bo, &prep.b_bo, &mut prep.c_bo, &tiling)?;
+                (run.report.timing.kernel_s + run.report.timing.issue_s
+                    + run.report.timing.dispatch_s, run.report.energy_j)
+            }
+            NumericsBackend::Pjrt(p) => {
+                let a_dev = prep.a_bo.device_read()?;
+                let b_dev = prep.b_bo.device_read()?;
+                // Artifacts are lowered at (m_padded, k, n) for the exact
+                // GPT-2 sizes, which never K/N-pad.
+                let c_full = p.run(size, tiling.m_padded, a_dev, b_dev)?;
+                prep.c_bo.device_write()[..m * n].copy_from_slice(&c_full[..m * n]);
+                // Model the device time exactly as the simulator would —
+                // the artifact supplies numerics, the model supplies time.
+                let gt = self.dev.npu.timing.gemm(&tiling);
+                let energy = self
+                    .dev
+                    .npu
+                    .power
+                    .energy_j(gt.kernel_s, gt.total_s() - gt.kernel_s, 0.0);
+                (gt.kernel_s + gt.issue_s + gt.dispatch_s, energy)
+            }
+        };
+        self.stages.add(STAGE_KERNEL, t4.elapsed());
+        self.add_modeled(STAGE_KERNEL, modeled_kernel);
+        self.modeled_energy_j += modeled_energy;
+
+        // -- Stage 5: output sync. ------------------------------------------
+        let t5 = Instant::now();
+        let modeled_sync_out = self.dev.sync_bo(&mut prep.c_bo, SyncDirection::FromDevice);
+        self.stages.add(STAGE_OUTPUT_SYNC, t5.elapsed());
+        self.add_modeled(STAGE_OUTPUT_SYNC, modeled_sync_out);
+
+        // -- Stage 6: output copy (drop N padding if any). ------------------
+        let t6 = Instant::now();
+        {
+            let c_host = prep.c_bo.map()?;
+            if n_p == n {
+                c.copy_from_slice(&c_host[..m * n]);
+            } else {
+                for r in 0..m {
+                    c[r * n..(r + 1) * n].copy_from_slice(&c_host[r * n_p..r * n_p + n]);
+                }
+            }
+        }
+        self.stages.add(STAGE_OUTPUT_COPY, t6.elapsed());
+
+        let wall = wall_start.elapsed().as_secs_f64();
+        let stats = InvocationStats {
+            size,
+            modeled_kernel_s: modeled_kernel,
+            modeled_sync_in_s: modeled_sync_in,
+            modeled_sync_out_s: modeled_sync_out,
+            modeled_reconfig_s: modeled_reconfig,
+            modeled_energy_j: modeled_energy,
+            wall_s: wall,
+        };
+        prep.invocations += 1;
+        prep.wall_s += wall;
+        prep.modeled_s += stats.modeled_total_s();
+        self.invocations += 1;
+        self.registry.insert(size, prep);
+        Ok(stats)
+    }
+
+    /// Common case: `a` row-major, `b` in `b_layout`.
+    pub fn gemm(
+        &mut self,
+        size: ProblemSize,
+        a: &[f32],
+        b: &[f32],
+        b_layout: InputLayout,
+        c: &mut [f32],
+    ) -> Result<InvocationStats> {
+        self.gemm_ex(size, a, InputLayout::RowMajor, b, b_layout, c)
+    }
+
+    /// Per-size aggregates (Figure 6's NPU bars).
+    pub fn size_records(&self) -> Vec<SizeRecord> {
+        self.registry
+            .values()
+            .map(|p| SizeRecord {
+                size: p.logical,
+                invocations: p.invocations,
+                wall_s: p.wall_s,
+                modeled_s: p.modeled_s,
+            })
+            .collect()
+    }
+
+    /// Modeled seconds accumulated for one stage.
+    pub fn modeled_stage_s(&self, stage: &str) -> f64 {
+        self.modeled_stages
+            .iter()
+            .find(|(n, _)| n == stage)
+            .map(|(_, s)| *s)
+            .unwrap_or(0.0)
+    }
+
+    /// Reset all accumulated statistics (between benchmark phases).
+    pub fn reset_stats(&mut self) {
+        self.stages.reset();
+        for (_, s) in self.modeled_stages.iter_mut() {
+            *s = 0.0;
+        }
+        self.invocations = 0;
+        self.modeled_energy_j = 0.0;
+        for p in self.registry.values_mut() {
+            p.invocations = 0;
+            p.wall_s = 0.0;
+            p.modeled_s = 0.0;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::cpu;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    fn engine_with(sizes: &[ProblemSize]) -> GemmOffloadEngine {
+        GemmOffloadEngine::new(EngineConfig::default(), sizes).unwrap()
+    }
+
+    #[test]
+    fn offloaded_gemm_matches_bf16_ref() {
+        let size = ProblemSize::new(128, 64, 128);
+        let mut eng = engine_with(&[size]);
+        let mut rng = Rng::new(41);
+        let a = prop::gen::normal_vec(&mut rng, 128 * 64);
+        let b = prop::gen::normal_vec(&mut rng, 64 * 128);
+        let mut c = vec![0.0; 128 * 128];
+        let stats = eng.gemm(size, &a, &b, InputLayout::RowMajor, &mut c).unwrap();
+        let mut c_ref = vec![0.0; 128 * 128];
+        cpu::gemm_bf16_ref(&a, &b, &mut c_ref, 128, 64, 128);
+        for (x, y) in c.iter().zip(&c_ref) {
+            assert!((x - y).abs() <= 1e-4 * y.abs().max(1.0));
+        }
+        assert!(stats.modeled_total_s() > 0.0);
+        assert!(stats.wall_s > 0.0);
+    }
+
+    #[test]
+    fn transposed_weights_handled() {
+        // b passed as N×K (llm.c weight layout): engine must transpose.
+        let size = ProblemSize::new(64, 64, 128);
+        let mut eng = engine_with(&[size]);
+        let mut rng = Rng::new(43);
+        let a = prop::gen::normal_vec(&mut rng, 64 * 64);
+        let b_t = prop::gen::normal_vec(&mut rng, 128 * 64); // N×K
+        let mut c = vec![0.0; 64 * 128];
+        eng.gemm(size, &a, &b_t, InputLayout::Transposed, &mut c).unwrap();
+        // Reference: transpose b_t then multiply.
+        let mut b = vec![0.0; 64 * 128];
+        super::super::transpose::transpose(&b_t, &mut b, 128, 64);
+        let mut c_ref = vec![0.0; 64 * 128];
+        cpu::gemm_bf16_ref(&a, &b, &mut c_ref, 64, 64, 128);
+        for (x, y) in c.iter().zip(&c_ref) {
+            assert!((x - y).abs() <= 1e-4 * y.abs().max(1.0));
+        }
+        assert!(eng.stages.get(STAGE_TRANSPOSE).as_secs_f64() > 0.0);
+    }
+
+    #[test]
+    fn reconfig_only_on_size_change() {
+        let s1 = ProblemSize::new(64, 64, 128);
+        let s2 = ProblemSize::new(128, 64, 128);
+        let mut eng = engine_with(&[s1, s2]);
+        let a1 = vec![1.0; 64 * 64];
+        let b1 = vec![1.0; 64 * 128];
+        let mut c1 = vec![0.0; 64 * 128];
+        let a2 = vec![1.0; 128 * 64];
+        let b2 = vec![1.0; 64 * 128];
+        let mut c2 = vec![0.0; 128 * 128];
+
+        let st1 = eng.gemm(s1, &a1, &b1, InputLayout::RowMajor, &mut c1).unwrap();
+        assert!(st1.modeled_reconfig_s > 0.0, "first invocation reconfigures");
+        let st2 = eng.gemm(s1, &a1, &b1, InputLayout::RowMajor, &mut c1).unwrap();
+        assert_eq!(st2.modeled_reconfig_s, 0.0, "same size: no reconfig");
+        let st3 = eng.gemm(s2, &a2, &b2, InputLayout::RowMajor, &mut c2).unwrap();
+        assert!(st3.modeled_reconfig_s > 0.0, "size switch reconfigures");
+        // Minimal policy: the switch is an instruction stream, not a full
+        // reload.
+        assert!(st3.modeled_reconfig_s < eng.dev.npu.timing.full_reconfig_s);
+    }
+
+    #[test]
+    fn padded_size_works_through_engine() {
+        // M=96 -> padded 256.
+        let size = ProblemSize::new(96, 64, 128);
+        let mut eng = engine_with(&[size]);
+        let mut rng = Rng::new(47);
+        let a = prop::gen::normal_vec(&mut rng, 96 * 64);
+        let b = prop::gen::normal_vec(&mut rng, 64 * 128);
+        let mut c = vec![0.0; 96 * 128];
+        eng.gemm(size, &a, &b, InputLayout::RowMajor, &mut c).unwrap();
+        let mut c_ref = vec![0.0; 96 * 128];
+        cpu::gemm_bf16_ref(&a, &b, &mut c_ref, 96, 64, 128);
+        for (x, y) in c.iter().zip(&c_ref) {
+            assert!((x - y).abs() <= 1e-4 * y.abs().max(1.0));
+        }
+    }
+
+    #[test]
+    fn lazy_registration() {
+        let size = ProblemSize::new(64, 64, 128);
+        let mut eng = engine_with(&[]);
+        assert_eq!(eng.registered_sizes().len(), 0);
+        let a = vec![0.0; 64 * 64];
+        let b = vec![0.0; 64 * 128];
+        let mut c = vec![0.0; 64 * 128];
+        eng.gemm(size, &a, &b, InputLayout::RowMajor, &mut c).unwrap();
+        assert_eq!(eng.registered_sizes(), vec![size]);
+    }
+
+    #[test]
+    fn stage_accounting_covers_all_invocations() {
+        let size = ProblemSize::new(64, 64, 128);
+        let mut eng = engine_with(&[size]);
+        let a = vec![1.0; 64 * 64];
+        let b = vec![1.0; 64 * 128];
+        let mut c = vec![0.0; 64 * 128];
+        for _ in 0..3 {
+            eng.gemm(size, &a, &b, InputLayout::RowMajor, &mut c).unwrap();
+        }
+        assert_eq!(eng.invocations, 3);
+        let rec = &eng.size_records()[0];
+        assert_eq!(rec.invocations, 3);
+        assert!(rec.modeled_s > 0.0);
+        assert!(eng.modeled_stage_s(STAGE_KERNEL) > 0.0);
+        assert!(eng.modeled_stage_s(STAGE_INPUT_SYNC) > 0.0);
+        eng.reset_stats();
+        assert_eq!(eng.invocations, 0);
+        assert_eq!(eng.modeled_stage_s(STAGE_KERNEL), 0.0);
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        let size = ProblemSize::new(64, 64, 128);
+        let mut eng = engine_with(&[size]);
+        let a = vec![0.0; 10];
+        let b = vec![0.0; 64 * 128];
+        let mut c = vec![0.0; 64 * 128];
+        assert!(eng.gemm(size, &a, &b, InputLayout::RowMajor, &mut c).is_err());
+    }
+}

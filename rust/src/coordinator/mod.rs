@@ -1,0 +1,20 @@
+//! The paper's system contribution: the minimal-reconfiguration GEMM
+//! offload engine (sections V and VI-D).
+//!
+//! * [`engine`] — per-problem-size registry (instruction streams + shared
+//!   BOs preloaded at init), invocation path (copy → transpose → sync →
+//!   issue → kernel → sync → copy) with Figure-7 stage accounting.
+//! * [`reconfig`] — minimal vs whole-array reconfiguration policies (the
+//!   section VII-A ablation).
+//! * [`transpose`] — the multi-core CPU transpose of section V-B.
+//! * [`backend`] — where the GEMM numerics come from: the NPU simulator's
+//!   bf16 datapath or the AOT Pallas artifact through PJRT.
+
+pub mod backend;
+pub mod engine;
+pub mod reconfig;
+pub mod transpose;
+
+pub use backend::NumericsBackend;
+pub use engine::{EngineConfig, GemmOffloadEngine, InputLayout, InvocationStats};
+pub use reconfig::ReconfigPolicy;

@@ -1,0 +1,108 @@
+//! Multi-core CPU transpose (paper section V-B).
+//!
+//! llm.c keeps weights column-major and activations row-major; the NPU
+//! design expects one fixed layout, so some inputs are transposed on the
+//! CPU while being copied into the shared XRT buffers. The paper
+//! "optimized this transpose by parallelizing it across all available CPU
+//! cores"; we additionally block it for cache locality.
+
+use crate::util::threads::parallel_for;
+
+/// Cache block edge (elements). 64×64 f32 = 16 KB per block pair.
+const BLOCK: usize = 64;
+
+/// dst(C×R) = src(R×C)ᵀ, both row-major. Parallel + blocked.
+pub fn transpose(src: &[f32], dst: &mut [f32], rows: usize, cols: usize) {
+    assert_eq!(src.len(), rows * cols);
+    assert_eq!(dst.len(), rows * cols);
+    let row_blocks = rows.div_ceil(BLOCK);
+    let col_blocks = cols.div_ceil(BLOCK);
+    let total_blocks = row_blocks * col_blocks;
+    let dst_addr = dst.as_mut_ptr() as usize;
+    parallel_for(total_blocks, 1, |range| {
+        // SAFETY: each block (bi, bj) writes a disjoint set of dst
+        // elements: dst[c*rows + r] for r in block-rows, c in block-cols.
+        let dst_all =
+            unsafe { std::slice::from_raw_parts_mut(dst_addr as *mut f32, rows * cols) };
+        for blk in range {
+            let bi = (blk / col_blocks) * BLOCK;
+            let bj = (blk % col_blocks) * BLOCK;
+            let r_end = (bi + BLOCK).min(rows);
+            let c_end = (bj + BLOCK).min(cols);
+            for r in bi..r_end {
+                for c in bj..c_end {
+                    dst_all[c * rows + r] = src[r * cols + c];
+                }
+            }
+        }
+    });
+}
+
+/// Transpose + copy in one pass (what the invocation path actually does:
+/// the copy into the XRT buffer *is* the transpose).
+pub fn transpose_into(src: &[f32], dst: &mut [f32], rows: usize, cols: usize) {
+    transpose(src, dst, rows, cols);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    fn naive_transpose(src: &[f32], rows: usize, cols: usize) -> Vec<f32> {
+        let mut out = vec![0.0; rows * cols];
+        for r in 0..rows {
+            for c in 0..cols {
+                out[c * rows + r] = src[r * cols + c];
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn square_and_rect() {
+        let mut rng = Rng::new(3);
+        for &(r, c) in &[(4, 4), (7, 13), (128, 64), (65, 129), (1, 10), (10, 1)] {
+            let src = prop::gen::normal_vec(&mut rng, r * c);
+            let mut dst = vec![0.0; r * c];
+            transpose(&src, &mut dst, r, c);
+            assert_eq!(dst, naive_transpose(&src, r, c), "{r}x{c}");
+        }
+    }
+
+    #[test]
+    fn double_transpose_is_identity() {
+        let mut rng = Rng::new(4);
+        let (r, c) = (50, 70);
+        let src = prop::gen::normal_vec(&mut rng, r * c);
+        let mut once = vec![0.0; r * c];
+        let mut twice = vec![0.0; r * c];
+        transpose(&src, &mut once, r, c);
+        transpose(&once, &mut twice, c, r);
+        assert_eq!(src, twice);
+    }
+
+    #[test]
+    fn prop_transpose_matches_naive() {
+        prop::check(
+            "transpose-matches-naive",
+            20,
+            |rng| {
+                let r = prop::gen::usize_in(rng, 1, 150);
+                let c = prop::gen::usize_in(rng, 1, 150);
+                let v = prop::gen::normal_vec(rng, r * c);
+                (r, c, v)
+            },
+            |(r, c, v)| {
+                let mut dst = vec![0.0; r * c];
+                transpose(v, &mut dst, *r, *c);
+                if dst == naive_transpose(v, *r, *c) {
+                    Ok(())
+                } else {
+                    Err("mismatch".into())
+                }
+            },
+        );
+    }
+}

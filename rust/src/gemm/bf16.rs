@@ -1,0 +1,138 @@
+//! bfloat16 substrate (no `half` crate offline).
+//!
+//! The NPU consumes bf16 inputs and accumulates f32 (paper section VII-A).
+//! Conversion uses round-to-nearest-even, matching both hardware bf16 units
+//! and JAX's `astype(bfloat16)`, so the Rust simulator's quantization is
+//! bit-identical to the Pallas kernel's.
+
+/// A bfloat16 value (stored as its raw 16-bit pattern: the top half of the
+/// corresponding f32).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct Bf16(pub u16);
+
+impl Bf16 {
+    pub const ZERO: Bf16 = Bf16(0);
+
+    /// Convert from f32 with round-to-nearest-even.
+    #[inline]
+    pub fn from_f32(x: f32) -> Bf16 {
+        let bits = x.to_bits();
+        if x.is_nan() {
+            // Quiet NaN, preserving sign.
+            return Bf16(((bits >> 16) as u16) | 0x0040);
+        }
+        // Round to nearest even on the truncated 16 bits.
+        let round_bit = 0x0000_8000u32;
+        let lsb = (bits >> 16) & 1;
+        let rounded = bits.wrapping_add(0x0000_7FFF + lsb);
+        let _ = round_bit;
+        Bf16((rounded >> 16) as u16)
+    }
+
+    /// Widen to f32 (exact).
+    #[inline]
+    pub fn to_f32(self) -> f32 {
+        f32::from_bits((self.0 as u32) << 16)
+    }
+
+    /// f32 -> bf16 -> f32 round trip (the value the NPU actually sees).
+    #[inline]
+    pub fn quantize(x: f32) -> f32 {
+        Bf16::from_f32(x).to_f32()
+    }
+}
+
+/// Quantize a whole f32 slice in place.
+pub fn quantize_slice(xs: &mut [f32]) {
+    for x in xs.iter_mut() {
+        *x = Bf16::quantize(*x);
+    }
+}
+
+/// Convert an f32 slice into a packed bf16 vector (the host->XRT-buffer
+/// copy in the paper stores bf16).
+pub fn pack(xs: &[f32]) -> Vec<Bf16> {
+    xs.iter().map(|&x| Bf16::from_f32(x)).collect()
+}
+
+/// Widen a packed bf16 slice back to f32.
+pub fn unpack(xs: &[Bf16]) -> Vec<f32> {
+    xs.iter().map(|x| x.to_f32()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_small_integers_roundtrip() {
+        for i in -256..=256 {
+            let x = i as f32;
+            assert_eq!(Bf16::quantize(x), x, "{x}");
+        }
+    }
+
+    #[test]
+    fn powers_of_two_roundtrip() {
+        for e in -30..30 {
+            let x = (2.0f32).powi(e);
+            assert_eq!(Bf16::quantize(x), x);
+        }
+    }
+
+    #[test]
+    fn round_to_nearest_even() {
+        // 1.0 + 2^-8 is exactly halfway between two bf16 values
+        // (bf16 has 8 higher bits of mantissa; lsb of 1.0.. is 2^-7).
+        let halfway = f32::from_bits(0x3F80_8000); // 1.00390625
+        let q = Bf16::quantize(halfway);
+        // Ties to even: mantissa lsb must be 0 -> rounds down to 1.0.
+        assert_eq!(q, 1.0);
+        // Just above halfway rounds up.
+        let above = f32::from_bits(0x3F80_8001);
+        assert_eq!(Bf16::quantize(above), f32::from_bits(0x3F81_0000));
+    }
+
+    #[test]
+    fn nan_and_inf() {
+        assert!(Bf16::quantize(f32::NAN).is_nan());
+        assert_eq!(Bf16::quantize(f32::INFINITY), f32::INFINITY);
+        assert_eq!(Bf16::quantize(f32::NEG_INFINITY), f32::NEG_INFINITY);
+    }
+
+    #[test]
+    fn relative_error_bounded() {
+        // bf16 has 8 mantissa bits -> rel error <= 2^-9 after RNE.
+        let mut rng = crate::util::rng::Rng::new(11);
+        for _ in 0..10_000 {
+            let x = rng.uniform(-1e6, 1e6);
+            if x == 0.0 {
+                continue;
+            }
+            let q = Bf16::quantize(x);
+            let rel = ((q - x) / x).abs();
+            assert!(rel <= 1.0 / 256.0, "x={x} q={q} rel={rel}");
+        }
+    }
+
+    #[test]
+    fn matches_truncation_plus_rounding_structure() {
+        // quantize must be idempotent.
+        let mut rng = crate::util::rng::Rng::new(12);
+        for _ in 0..1000 {
+            let x = rng.normal() * 100.0;
+            let q = Bf16::quantize(x);
+            assert_eq!(Bf16::quantize(q), q);
+        }
+    }
+
+    #[test]
+    fn pack_unpack() {
+        let xs = [0.5f32, -1.25, 3.0, 1e-3];
+        let packed = pack(&xs);
+        let back = unpack(&packed);
+        for (a, b) in xs.iter().zip(&back) {
+            assert!((a - b).abs() / a.abs() <= 1.0 / 256.0);
+        }
+    }
+}

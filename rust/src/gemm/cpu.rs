@@ -1,0 +1,164 @@
+//! CPU GEMM baseline — the role unmodified llm.c plays in the paper.
+//!
+//! llm.c's matmul_forward is an OpenMP-parallel loop nest of f32 FMAs that
+//! the compiler autovectorizes (the paper: "lowers to highly efficient
+//! vector FMA instructions ... e.g. vfmadd213ps"). We reproduce that shape:
+//! rows are parallelized across threads, the inner kernel is a register-
+//! blocked loop the Rust compiler autovectorizes.
+//!
+//! A bf16-quantized variant mirrors what the CPU *would* compute at the
+//! NPU's precision; it exists for accuracy experiments only (the paper
+//! argues running the CPU in bf16 would be slower, not faster).
+
+use crate::util::threads::parallel_for;
+
+/// C(M×N) = A(M×K) · B(K×N), all row-major f32. Multi-threaded.
+pub fn gemm_f32(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    assert_eq!(a.len(), m * k, "A size");
+    assert_eq!(b.len(), k * n, "B size");
+    assert_eq!(c.len(), m * n, "C size");
+    // Row-block parallelism like llm.c's `#pragma omp parallel for`.
+    let c_addr = c.as_mut_ptr() as usize;
+    parallel_for(m, 8, |rows| {
+        // SAFETY: row ranges from parallel_for are disjoint, so the C
+        // slices written by different threads never overlap.
+        let c_all = unsafe { std::slice::from_raw_parts_mut(c_addr as *mut f32, m * n) };
+        for i in rows {
+            gemm_row(&a[i * k..(i + 1) * k], b, &mut c_all[i * n..(i + 1) * n], k, n);
+        }
+    });
+}
+
+/// One output row: c_row(N) = a_row(K) · B(K×N). Register-blocked over N so
+/// the inner loop is a pure FMA stream (autovectorizes to AVX on x86).
+#[inline]
+fn gemm_row(a_row: &[f32], b: &[f32], c_row: &mut [f32], k: usize, n: usize) {
+    c_row.fill(0.0);
+    for (kk, &a_val) in a_row.iter().enumerate().take(k) {
+        let b_row = &b[kk * n..kk * n + n];
+        // c_row += a_val * b_row  — the compiler turns this into vfmadd.
+        for (cv, &bv) in c_row.iter_mut().zip(b_row) {
+            *cv += a_val * bv;
+        }
+    }
+}
+
+/// Single-threaded scalar reference (used as the trusted oracle in tests;
+/// deliberately simple).
+pub fn gemm_f32_naive(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0.0f32;
+            for kk in 0..k {
+                acc += a[i * k + kk] * b[kk * n + j];
+            }
+            c[i * n + j] = acc;
+        }
+    }
+}
+
+/// bf16-input, f32-accumulate GEMM — the *numerical contract of the NPU*,
+/// computed on the CPU. Used as the exact oracle for the simulator datapath
+/// and the Pallas kernel (all three quantize inputs identically).
+pub fn gemm_bf16_ref(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    use crate::gemm::bf16::Bf16;
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    assert_eq!(c.len(), m * n);
+    let aq: Vec<f32> = a.iter().map(|&x| Bf16::quantize(x)).collect();
+    let bq: Vec<f32> = b.iter().map(|&x| Bf16::quantize(x)).collect();
+    gemm_f32(&aq, &bq, c, m, k, n);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    fn rand_mat(rng: &mut Rng, len: usize) -> Vec<f32> {
+        let mut v = vec![0.0; len];
+        rng.fill_normal(&mut v, 0.0, 1.0);
+        v
+    }
+
+    #[test]
+    fn matches_naive_small() {
+        let mut rng = Rng::new(42);
+        for &(m, k, n) in &[(1, 1, 1), (3, 5, 7), (16, 16, 16), (33, 17, 9)] {
+            let a = rand_mat(&mut rng, m * k);
+            let b = rand_mat(&mut rng, k * n);
+            let mut c1 = vec![0.0; m * n];
+            let mut c2 = vec![0.0; m * n];
+            gemm_f32(&a, &b, &mut c1, m, k, n);
+            gemm_f32_naive(&a, &b, &mut c2, m, k, n);
+            for (x, y) in c1.iter().zip(&c2) {
+                assert!((x - y).abs() <= 1e-4 * y.abs().max(1.0), "{x} vs {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn prop_matches_naive() {
+        prop::check(
+            "cpu-gemm-matches-naive",
+            24,
+            |rng| {
+                let m = prop::gen::usize_in(rng, 1, 40);
+                let k = prop::gen::usize_in(rng, 1, 40);
+                let n = prop::gen::usize_in(rng, 1, 40);
+                let a = prop::gen::normal_vec(rng, m * k);
+                let b = prop::gen::normal_vec(rng, k * n);
+                (m, k, n, a, b)
+            },
+            |(m, k, n, a, b)| {
+                let (m, k, n) = (*m, *k, *n);
+                let mut c1 = vec![0.0; m * n];
+                let mut c2 = vec![0.0; m * n];
+                gemm_f32(a, b, &mut c1, m, k, n);
+                gemm_f32_naive(a, b, &mut c2, m, k, n);
+                for (i, (x, y)) in c1.iter().zip(&c2).enumerate() {
+                    if (x - y).abs() > 1e-4 * y.abs().max(1.0) {
+                        return Err(format!("elt {i}: {x} vs {y}"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn bf16_ref_quantizes() {
+        // With inputs that are not bf16-representable, the bf16 ref must
+        // differ from the f32 GEMM — and match a hand-quantized naive GEMM.
+        let m = 4;
+        let k = 8;
+        let n = 4;
+        let mut rng = Rng::new(7);
+        let a = rand_mat(&mut rng, m * k);
+        let b = rand_mat(&mut rng, k * n);
+        let mut c_bf = vec![0.0; m * n];
+        gemm_bf16_ref(&a, &b, &mut c_bf, m, k, n);
+        let aq: Vec<f32> = a.iter().map(|&x| crate::gemm::bf16::Bf16::quantize(x)).collect();
+        let bq: Vec<f32> = b.iter().map(|&x| crate::gemm::bf16::Bf16::quantize(x)).collect();
+        let mut c_ref = vec![0.0; m * n];
+        gemm_f32_naive(&aq, &bq, &mut c_ref, m, k, n);
+        for (x, y) in c_bf.iter().zip(&c_ref) {
+            assert!((x - y).abs() <= 1e-5 * y.abs().max(1.0));
+        }
+    }
+
+    #[test]
+    fn identity_multiplication() {
+        let n = 8;
+        let mut eye = vec![0.0f32; n * n];
+        for i in 0..n {
+            eye[i * n + i] = 1.0;
+        }
+        let mut rng = Rng::new(3);
+        let a = rand_mat(&mut rng, n * n);
+        let mut c = vec![0.0; n * n];
+        gemm_f32(&a, &eye, &mut c, n, n, n);
+        assert_eq!(a, c);
+    }
+}

@@ -1,0 +1,11 @@
+//! GEMM substrate: bf16 arithmetic, the paper's tiling math, GPT-2's
+//! problem-size inventory, and the llm.c-style CPU baseline.
+
+pub mod bf16;
+pub mod cpu;
+pub mod sizes;
+pub mod tiling;
+
+pub use bf16::Bf16;
+pub use sizes::ProblemSize;
+pub use tiling::{TileShape, Tiling, PAPER_TILES};

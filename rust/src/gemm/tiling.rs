@@ -1,0 +1,299 @@
+//! The paper's tiling recipe (section VI-B) as pure math.
+//!
+//! Input matrices A (M×K) and B (K×N) are tiled into m×k and k×n
+//! sub-matrices. Four shim columns each own a quarter of the tile rows of A
+//! (interleaved by hardware column) and a quarter of the tile columns of B.
+//! Memory cores stage blocks of four tiles and distribute them to the 4×4
+//! compute grid; each compute core accumulates one m×n output tile over
+//! K/k accumulation steps.
+
+use crate::util::error::{Error, Result};
+
+use super::sizes::ProblemSize;
+
+/// Tile shape (m, k, n).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct TileShape {
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+}
+
+/// The paper's tile shape: m=64, k=64, n=32 (section VI).
+pub const PAPER_TILES: TileShape = TileShape { m: 64, k: 64, n: 32 };
+
+/// Number of shim/memory-core columns used (the 4×4 partition).
+pub const GRID_COLS: usize = 4;
+/// Number of compute-core rows used.
+pub const GRID_ROWS: usize = 4;
+
+impl TileShape {
+    /// bf16 bytes of one A' tile.
+    pub fn a_tile_bytes(&self) -> usize {
+        self.m * self.k * 2
+    }
+    /// bf16 bytes of one B' tile.
+    pub fn b_tile_bytes(&self) -> usize {
+        self.k * self.n * 2
+    }
+    /// f32 bytes of one C' tile.
+    pub fn c_tile_bytes(&self) -> usize {
+        self.m * self.n * 4
+    }
+
+    /// Double-buffered L1 footprint of the kernel (2× each tile), plus the
+    /// two runtime parameters. Must fit the 64 KB core memory.
+    pub fn l1_footprint_bytes(&self) -> usize {
+        2 * (self.a_tile_bytes() + self.b_tile_bytes() + self.c_tile_bytes()) + 8
+    }
+}
+
+/// A fully tiled GEMM problem: validated dimensions + derived counts.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Tiling {
+    pub size: ProblemSize,
+    /// M after padding to a multiple of GRID_COLS * m (paper pads
+    /// 50304 → 50432).
+    pub m_padded: usize,
+    pub tiles: TileShape,
+}
+
+impl Tiling {
+    /// Build a tiling, validating the paper's divisibility requirements:
+    /// K % k == 0, N % (4n) == 0, and M padded up to a multiple of 4m.
+    pub fn new(size: ProblemSize, tiles: TileShape) -> Result<Tiling> {
+        if size.k % tiles.k != 0 {
+            return Err(Error::shape(format!(
+                "K={} not divisible by tile k={}",
+                size.k, tiles.k
+            )));
+        }
+        if size.n % (GRID_COLS * tiles.n) != 0 {
+            return Err(Error::shape(format!(
+                "N={} not divisible by 4n={}",
+                size.n,
+                GRID_COLS * tiles.n
+            )));
+        }
+        let unit = GRID_COLS * tiles.m;
+        let m_padded = size.m.div_ceil(unit) * unit;
+        Ok(Tiling {
+            size,
+            m_padded,
+            tiles,
+        })
+    }
+
+    /// With the paper's tile shape.
+    pub fn paper(size: ProblemSize) -> Result<Tiling> {
+        Tiling::new(size, PAPER_TILES)
+    }
+
+    /// Whether padding was required.
+    pub fn padded(&self) -> bool {
+        self.m_padded != self.size.m
+    }
+
+    /// Tile-rows of A (over padded M).
+    pub fn m_tiles(&self) -> usize {
+        self.m_padded / self.tiles.m
+    }
+    /// Tile-steps over K.
+    pub fn k_tiles(&self) -> usize {
+        self.size.k / self.tiles.k
+    }
+    /// Tile-columns of B/C.
+    pub fn n_tiles(&self) -> usize {
+        self.size.n / self.tiles.n
+    }
+
+    /// Output tiles in C (over padded M).
+    pub fn output_tiles(&self) -> usize {
+        self.m_tiles() * self.n_tiles()
+    }
+
+    /// The two runtime parameters the command processor writes into each
+    /// core's memory (section VI-D): (K/k accumulation steps, output tiles
+    /// per core).
+    pub fn runtime_params(&self) -> (u32, u32) {
+        let per_core = self.output_tiles() / (GRID_ROWS * GRID_COLS);
+        (self.k_tiles() as u32, per_core as u32)
+    }
+
+    /// Which tile-rows of A the shim in hardware column `col` streams:
+    /// rows i·m + 4·j·m .. for j = 0.. M/(4m) (section VI-B), expressed as
+    /// tile-row indices.
+    pub fn shim_a_tile_rows(&self, col: usize) -> Vec<usize> {
+        assert!(col < GRID_COLS);
+        (0..self.m_tiles() / GRID_COLS)
+            .map(|j| col + GRID_COLS * j)
+            .collect()
+    }
+
+    /// Which tile-columns of B the shim in hardware column `col` streams.
+    pub fn shim_b_tile_cols(&self, col: usize) -> Vec<usize> {
+        assert!(col < GRID_COLS);
+        (0..self.n_tiles() / GRID_COLS)
+            .map(|j| col + GRID_COLS * j)
+            .collect()
+    }
+
+    /// The compute core (row, col) that produces output tile
+    /// (tile_row, tile_col). A-tiles from memory core `col i` are
+    /// distributed across row i+2's cores; B-tiles go down column i.
+    /// Net effect: core (r, c) — r, c in 0..4 of the compute partition —
+    /// owns output tiles where tile_row ≡ r and tile_col ≡ c (mod 4).
+    pub fn owner_core(&self, tile_row: usize, tile_col: usize) -> (usize, usize) {
+        (tile_row % GRID_ROWS, tile_col % GRID_COLS)
+    }
+
+    /// Output tiles (tile_row, tile_col) owned by compute core (r, c), in
+    /// the in-order traversal of C (section VI-B: "iterates through the
+    /// m×n-sized output tiles of the output matrix C in-order").
+    pub fn core_output_tiles(&self, r: usize, c: usize) -> Vec<(usize, usize)> {
+        let mut out = Vec::new();
+        for tr in (r..self.m_tiles()).step_by(GRID_ROWS) {
+            for tc in (c..self.n_tiles()).step_by(GRID_COLS) {
+                out.push((tr, tc));
+            }
+        }
+        out
+    }
+
+    /// Total bf16 bytes streamed from L3 for A including the paper's
+    /// repetition: rows of tiles of A are repeated N/(4n) times.
+    pub fn a_stream_bytes(&self) -> u64 {
+        let tiles_a = (self.m_tiles() * self.k_tiles()) as u64;
+        let reps = (self.n_tiles() / GRID_COLS) as u64;
+        tiles_a * self.tiles.a_tile_bytes() as u64 * reps
+    }
+
+    /// Total bf16 bytes streamed from L3 for B (columns repeated M/(4m)×).
+    pub fn b_stream_bytes(&self) -> u64 {
+        let tiles_b = (self.k_tiles() * self.n_tiles()) as u64;
+        let reps = (self.m_tiles() / GRID_COLS) as u64;
+        tiles_b * self.tiles.b_tile_bytes() as u64 * reps
+    }
+
+    /// f32 bytes streamed back to L3 for C.
+    pub fn c_stream_bytes(&self) -> u64 {
+        (self.output_tiles() * self.tiles.c_tile_bytes()) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn paper_l1_footprint_fits_64kb() {
+        // m=64,k=64,n=32: 2*(8192 + 4096 + 8192) + 8 = 40968 bytes < 64 KB.
+        assert!(PAPER_TILES.l1_footprint_bytes() <= 64 * 1024);
+        assert_eq!(PAPER_TILES.l1_footprint_bytes(), 40968);
+    }
+
+    #[test]
+    fn padding_matches_paper() {
+        // 50304x256x768 must pad M to 50432 (paper section VI).
+        let t = Tiling::paper(ProblemSize::new(50304, 256, 768)).unwrap();
+        assert_eq!(t.m_padded, 50432);
+        assert!(t.padded());
+        // All other GPT-2 sizes are evenly divisible.
+        use crate::gemm::sizes::{distinct_sizes, ModelDims};
+        for s in distinct_sizes(&ModelDims::gpt2_124m()) {
+            let t = Tiling::paper(s).unwrap();
+            if s.m == 50304 {
+                assert!(t.padded());
+            } else {
+                assert!(!t.padded(), "{s}");
+            }
+        }
+    }
+
+    #[test]
+    fn runtime_params_example() {
+        let t = Tiling::paper(ProblemSize::new(256, 768, 2304)).unwrap();
+        // K/k = 768/64 = 12; output tiles = (256/64)*(2304/32) = 4*72 = 288;
+        // per core = 288/16 = 18.
+        assert_eq!(t.runtime_params(), (12, 18));
+    }
+
+    #[test]
+    fn shim_rows_partition_a() {
+        let t = Tiling::paper(ProblemSize::new(256, 768, 2304)).unwrap();
+        let mut seen = vec![false; t.m_tiles()];
+        for col in 0..GRID_COLS {
+            for r in t.shim_a_tile_rows(col) {
+                assert!(!seen[r], "tile row {r} streamed twice");
+                seen[r] = true;
+            }
+        }
+        assert!(seen.iter().all(|&x| x));
+    }
+
+    #[test]
+    fn core_tiles_partition_output() {
+        let t = Tiling::paper(ProblemSize::new(256, 768, 768)).unwrap();
+        let mut count = 0;
+        let mut seen = vec![vec![false; t.n_tiles()]; t.m_tiles()];
+        for r in 0..GRID_ROWS {
+            for c in 0..GRID_COLS {
+                for (tr, tc) in t.core_output_tiles(r, c) {
+                    assert_eq!(t.owner_core(tr, tc), (r, c));
+                    assert!(!seen[tr][tc]);
+                    seen[tr][tc] = true;
+                    count += 1;
+                }
+            }
+        }
+        assert_eq!(count, t.output_tiles());
+    }
+
+    #[test]
+    fn rejects_indivisible() {
+        assert!(Tiling::paper(ProblemSize::new(64, 63, 128)).is_err()); // K
+        assert!(Tiling::paper(ProblemSize::new(64, 64, 96)).is_err()); // N % 128
+    }
+
+    #[test]
+    fn prop_tiling_invariants() {
+        prop::check_default(
+            "tiling-covers-output",
+            |rng| {
+                let m = prop::gen::multiple_of(rng, 64, 1, 16);
+                let k = prop::gen::multiple_of(rng, 64, 1, 8);
+                let n = prop::gen::multiple_of(rng, 128, 1, 8);
+                ProblemSize::new(m, k, n)
+            },
+            |&s| {
+                let t = Tiling::paper(s).map_err(|e| e.to_string())?;
+                // Every output tile has exactly one owner core.
+                let mut total = 0usize;
+                for r in 0..GRID_ROWS {
+                    for c in 0..GRID_COLS {
+                        total += t.core_output_tiles(r, c).len();
+                    }
+                }
+                if total != t.output_tiles() {
+                    return Err(format!("tiles {total} != {}", t.output_tiles()));
+                }
+                // Runtime params consistent.
+                let (kk, per_core) = t.runtime_params();
+                if kk as usize != t.k_tiles() {
+                    return Err("k param".into());
+                }
+                if per_core as usize * GRID_ROWS * GRID_COLS != t.output_tiles() {
+                    return Err("per-core param".into());
+                }
+                // Stream accounting: A bytes = M_p*K*2 * N/(4n).
+                let expect_a =
+                    (t.m_padded * s.k * 2) as u64 * (t.n_tiles() / GRID_COLS) as u64;
+                if t.a_stream_bytes() != expect_a {
+                    return Err("a stream bytes".into());
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,42 @@
+//! # xdna-repro
+//!
+//! Reproduction of *"Unlocking the AMD Neural Processing Unit for ML Training
+//! on the Client Using Bare-Metal-Programming Tools"* (Rösti & Franz, 2025).
+//!
+//! The paper fine-tunes GPT-2 (124M) on a laptop by offloading GEMM
+//! operations from a pure-C training loop (`llm.c`) onto the AMD XDNA NPU,
+//! programmed bare-metal through the IRON tool-flow. This crate rebuilds the
+//! entire system as a three-layer Rust + JAX + Pallas stack with the NPU
+//! hardware replaced by a functional + cycle-model simulator:
+//!
+//! * [`npu`] — XDNA NPU simulator: 4x4 compute-core grid, memory cores, shim
+//!   cores, DMAs with layout transforms, switch-box streams, hardware locks,
+//!   command processor with an instruction-stream ISA, VMAC micro-kernel,
+//!   cycle/energy model.
+//! * [`xrt`] — host runtime in the shape of Xilinx Run Time: devices,
+//!   buffer objects with explicit sync, kernel runs.
+//! * [`gemm`] — tiling math, bf16 substrate, the CPU (llm.c-style) GEMM
+//!   baseline, and the problem-size registry of GPT-2 124M.
+//! * [`coordinator`] — the paper's contribution: the minimal-reconfiguration
+//!   GEMM offload engine (Section V/VI of the paper).
+//! * [`model`] — an llm.c port: GPT-2 forward/backward/AdamW in pure Rust
+//!   with every matmul dispatched through the offload engine.
+//! * [`runtime`] — PJRT loader for the JAX/Pallas AOT artifacts
+//!   (`artifacts/*.hlo.txt`) used as the numerical oracle and the
+//!   whole-model train step.
+//! * [`power`] — battery/mains power-supply model and energy metering.
+//! * [`bench`] — harness that regenerates every figure/table of the paper.
+//! * [`util`] — substrate the offline environment lacks: PRNG, JSON,
+//!   thread pool, stats, timers, CLI parsing.
+
+pub mod bench;
+pub mod coordinator;
+pub mod gemm;
+pub mod model;
+pub mod power;
+pub mod npu;
+pub mod runtime;
+pub mod xrt;
+pub mod util;
+
+pub use util::error::{Error, Result};

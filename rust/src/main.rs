@@ -1,0 +1,277 @@
+//! xdna-repro CLI — the leader entrypoint.
+//!
+//! Subcommands:
+//!   train     — fine-tune a GPT-2 config on a synthetic corpus (CPU or
+//!               CPU+NPU), logging per-epoch loss/time/energy
+//!   gemm      — run one offloaded GEMM and print its stage breakdown
+//!   generate  — sample tokens from a (trained) checkpoint
+//!   bench     — regenerate a paper figure/table (fig6..fig9, reconfig,
+//!               accuracy) or `all`
+//!   inspect   — print model FLOP tables, GEMM sizes, NPU design info
+
+use xdna_repro::bench as paperbench;
+use xdna_repro::coordinator::engine::{EngineConfig, GemmOffloadEngine, InputLayout};
+use xdna_repro::coordinator::ReconfigPolicy;
+use xdna_repro::gemm::sizes::{distinct_sizes, ModelDims, ProblemSize};
+use xdna_repro::model::data::{load_checkpoint, save_checkpoint, synthetic_corpus, DataLoader};
+use xdna_repro::model::trainer::{train, TrainBackend, TrainConfig};
+use xdna_repro::model::{Gpt2Model, ModelConfig};
+use xdna_repro::power::profiles::PowerProfile;
+use xdna_repro::util::cli::Args;
+use xdna_repro::util::error::{Error, Result};
+use xdna_repro::util::rng::Rng;
+
+const USAGE: &str = "\
+xdna-repro — GPT-2 fine-tuning with GEMM offload to a simulated AMD XDNA NPU
+
+USAGE:
+  xdna-repro train    [--config d2|d4|d6|d12] [--epochs N] [--steps N]
+                      [--batch B] [--seq T] [--backend cpu|npu]
+                      [--power mains|battery] [--policy minimal|full]
+                      [--save ckpt.bin] [--seed S]
+  xdna-repro gemm     [--m M --k K --n N] [--backend cpu|npu]
+  xdna-repro generate [--config d2|d4|d6] [--load ckpt.bin] [--tokens N]
+                      [--temperature F]
+  xdna-repro bench    [fig6|fig7|fig8|fig9|reconfig|accuracy|all]
+  xdna-repro inspect  [flops|sizes|npu]
+";
+
+fn main() {
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    if raw.is_empty() {
+        eprint!("{USAGE}");
+        std::process::exit(2);
+    }
+    if let Err(e) = dispatch(raw) {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(raw: Vec<String>) -> Result<()> {
+    let args = Args::parse(raw, &["help"])?;
+    if args.flag("help") || args.positional.is_empty() {
+        print!("{USAGE}");
+        return Ok(());
+    }
+    match args.positional[0].as_str() {
+        "train" => cmd_train(&args),
+        "gemm" => cmd_gemm(&args),
+        "generate" => cmd_generate(&args),
+        "bench" => cmd_bench(&args),
+        "inspect" => cmd_inspect(&args),
+        other => Err(Error::config(format!("unknown command '{other}'\n{USAGE}"))),
+    }
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let cfg = ModelConfig::by_name(args.get_or("config", "d4"))?;
+    let batch = args.get_parse("batch", 4usize)?;
+    let seq = args.get_parse("seq", 64usize)?.min(cfg.max_seq_len);
+    let epochs = args.get_parse("epochs", 8usize)?;
+    let steps = args.get_parse("steps", 4usize)?;
+    let seed = args.get_parse("seed", 42u64)?;
+    let power = PowerProfile::by_name(args.get_or("power", "mains"))
+        .ok_or_else(|| Error::config("unknown power profile"))?;
+    let policy = match args.get_or("policy", "minimal") {
+        "minimal" => ReconfigPolicy::Minimal,
+        "full" => ReconfigPolicy::FullArray,
+        p => return Err(Error::config(format!("unknown policy '{p}'"))),
+    };
+
+    let tc = TrainConfig {
+        batch,
+        seq,
+        epochs,
+        steps_per_epoch: steps,
+        power,
+        ..Default::default()
+    };
+    let corpus = synthetic_corpus(cfg.vocab_size, (batch * seq + 1) * steps.max(4) * 4, seed);
+    let mut loader = DataLoader::new(corpus, batch, seq)?;
+    let mut model = Gpt2Model::new(cfg, seed);
+    println!(
+        "training {} ({} params) for {epochs} epochs x {steps} steps, backend={}",
+        args.get_or("config", "d4"),
+        model.params.num_parameters(),
+        args.get_or("backend", "npu"),
+    );
+
+    let stats = match args.get_or("backend", "npu") {
+        "cpu" => train(&mut model, &mut loader, &mut TrainBackend::Cpu, &tc)?,
+        "npu" => {
+            let mut eng = GemmOffloadEngine::new(
+                EngineConfig {
+                    policy,
+                    ..Default::default()
+                },
+                &[],
+            )?;
+            let out = train(&mut model, &mut loader, &mut TrainBackend::CpuNpu(&mut eng), &tc)?;
+            println!(
+                "engine: {} offloaded GEMMs across {} registered sizes, modeled NPU energy {:.2} J",
+                eng.invocations,
+                eng.registered_sizes().len(),
+                eng.modeled_energy_j
+            );
+            out
+        }
+        b => return Err(Error::config(format!("unknown backend '{b}'"))),
+    };
+
+    println!("{:>5} {:>10} {:>10} {:>12} {:>12}", "epoch", "loss", "gnorm", "wall ms", "energy J");
+    for s in &stats {
+        println!(
+            "{:>5} {:>10.4} {:>10.4} {:>12.1} {:>12.2}",
+            s.epoch,
+            s.loss,
+            s.grad_norm,
+            s.wall_s * 1e3,
+            s.energy_j
+        );
+    }
+    if let Some(path) = args.get("save") {
+        save_checkpoint(path, &model.cfg, &model.params)?;
+        println!("checkpoint written to {path}");
+    }
+    Ok(())
+}
+
+fn cmd_gemm(args: &Args) -> Result<()> {
+    let m = args.get_parse("m", 256usize)?;
+    let k = args.get_parse("k", 768usize)?;
+    let n = args.get_parse("n", 768usize)?;
+    let size = ProblemSize::new(m, k, n);
+    let mut rng = Rng::new(7);
+    let mut a = vec![0.0f32; m * k];
+    let mut b = vec![0.0f32; k * n];
+    rng.fill_normal(&mut a, 0.0, 1.0);
+    rng.fill_normal(&mut b, 0.0, 0.08);
+    let mut c = vec![0.0f32; m * n];
+
+    match args.get_or("backend", "npu") {
+        "cpu" => {
+            let (_, d) = xdna_repro::util::timer::time_it(|| {
+                xdna_repro::gemm::cpu::gemm_f32(&a, &b, &mut c, m, k, n)
+            });
+            println!("cpu gemm {size}: {:.3} ms wall", d.as_secs_f64() * 1e3);
+        }
+        _ => {
+            let mut eng = GemmOffloadEngine::new(EngineConfig::default(), &[size])?;
+            let stats = eng.gemm(size, &a, &b, InputLayout::RowMajor, &mut c)?;
+            println!("npu gemm {size}:");
+            println!("  wall           {:.3} ms", stats.wall_s * 1e3);
+            println!("  modeled kernel {:.3} ms", stats.modeled_kernel_s * 1e3);
+            println!(
+                "  modeled syncs  {:.3} ms",
+                (stats.modeled_sync_in_s + stats.modeled_sync_out_s) * 1e3
+            );
+            println!("  modeled reconf {:.3} ms", stats.modeled_reconfig_s * 1e3);
+            println!("  modeled energy {:.3} mJ", stats.modeled_energy_j * 1e3);
+        }
+    }
+    println!("c[0..4] = {:?}", &c[..4.min(c.len())]);
+    Ok(())
+}
+
+fn cmd_generate(args: &Args) -> Result<()> {
+    let cfg = ModelConfig::by_name(args.get_or("config", "d2"))?;
+    let mut model = match args.get("load") {
+        Some(path) => Gpt2Model::with_params(cfg, load_checkpoint(path, &cfg)?),
+        None => Gpt2Model::new(cfg, 42),
+    };
+    let n_tokens = args.get_parse("tokens", 32usize)?;
+    let temperature = args.get_parse("temperature", 0.8f32)?;
+    let mut rng = Rng::new(123);
+    let t = 16.min(cfg.max_seq_len);
+    let mut window = vec![1i32; t];
+    let mut out = Vec::new();
+    let mut dispatch = xdna_repro::model::ops::matmul::MatmulDispatch::Cpu;
+    for _ in 0..n_tokens {
+        model.forward(&mut dispatch, &window, None, 1, t)?;
+        let next = model.sample_next(&mut rng, temperature) as i32;
+        out.push(next);
+        window.rotate_left(1);
+        window[t - 1] = next;
+    }
+    println!("generated tokens: {out:?}");
+    Ok(())
+}
+
+fn cmd_bench(args: &Args) -> Result<()> {
+    let which = args.positional.get(1).map(|s| s.as_str()).unwrap_or("all");
+    let mains = PowerProfile::mains();
+    match which {
+        "fig6" => paperbench::fig6::print(&mains),
+        "fig7" => paperbench::fig7::print(&mains),
+        "fig8" => {
+            paperbench::fig8::print(&mains);
+            paperbench::fig8::print(&PowerProfile::battery());
+        }
+        "fig9" => paperbench::fig9::print(),
+        "reconfig" => paperbench::reconfig::print()?,
+        "accuracy" => paperbench::accuracy::print(false)?,
+        "all" => {
+            paperbench::fig6::print(&mains);
+            paperbench::fig7::print(&mains);
+            paperbench::fig8::print(&mains);
+            paperbench::fig8::print(&PowerProfile::battery());
+            paperbench::fig9::print();
+            paperbench::reconfig::print()?;
+            paperbench::accuracy::print(false)?;
+        }
+        other => return Err(Error::config(format!("unknown bench '{other}'"))),
+    }
+    Ok(())
+}
+
+fn cmd_inspect(args: &Args) -> Result<()> {
+    let what = args.positional.get(1).map(|s| s.as_str()).unwrap_or("flops");
+    match what {
+        "flops" => {
+            let cfg = ModelConfig::d12();
+            println!("GPT-2 124M FLOPs per training step (B=4, T=64) — paper Figure 2:");
+            let table = xdna_repro::model::flops::table(&cfg, 4, 64);
+            println!("{:<12} {:>14} {:>14}", "op", "fwd MFLOP", "bwd MFLOP");
+            for op in &table {
+                println!(
+                    "{:<12} {:>14.1} {:>14.1}",
+                    op.op,
+                    op.forward as f64 / 1e6,
+                    op.backward as f64 / 1e6
+                );
+            }
+            let total = xdna_repro::model::flops::total_per_step(&cfg, 4, 64);
+            println!("total: {:.1} GFLOP/epoch (paper: 197 GFLOP)", total as f64 / 1e9);
+        }
+        "sizes" => {
+            println!("the twelve GEMM problem sizes of GPT-2 124M (paper Figure 6):");
+            for s in distinct_sizes(&ModelDims::gpt2_124m()) {
+                let t = xdna_repro::gemm::tiling::Tiling::paper(s)?;
+                println!(
+                    "  {s:<20} padded M {} tiles {}x{} runtime params {:?}",
+                    t.m_padded,
+                    t.m_tiles(),
+                    t.n_tiles(),
+                    t.runtime_params()
+                );
+            }
+        }
+        "npu" => {
+            let timing = xdna_repro::npu::timing::TimingModel::default();
+            println!("XDNA simulator (Phoenix, 4x4 partition):");
+            println!("  peak bf16: {:.2} TFLOP/s", timing.peak_flops() / 1e12);
+            println!("  L1 per core: 64 KB; L2 per memcore: 512 KB");
+            let tiles = xdna_repro::gemm::tiling::PAPER_TILES;
+            println!(
+                "  paper tiles m,k,n = {},{},{} -> L1 footprint {} B (double-buffered)",
+                tiles.m,
+                tiles.k,
+                tiles.n,
+                tiles.l1_footprint_bytes()
+            );
+        }
+        other => return Err(Error::config(format!("unknown inspect target '{other}'"))),
+    }
+    Ok(())
+}

@@ -1,0 +1,211 @@
+//! Activation arenas (llm.c's ActivationTensors), for one (B, T) shape.
+//!
+//! llm.c preallocates every intermediate once and reuses it each step; we
+//! keep the same inventory so the backward pass can consume cached values
+//! (layernorm mean/rstd, attention probabilities, pre-GELU activations).
+
+use super::config::ModelConfig;
+
+/// All forward intermediates for a batch.
+#[derive(Debug, Clone)]
+pub struct Activations {
+    pub b: usize,
+    pub t: usize,
+    /// (B,T,C) token+position embeddings.
+    pub encoded: Vec<f32>,
+    /// Per layer (L,B,T,C).
+    pub ln1: Vec<f32>,
+    pub ln1_mean: Vec<f32>,
+    pub ln1_rstd: Vec<f32>,
+    /// (L,B,T,3C)
+    pub qkv: Vec<f32>,
+    /// (L,B,T,C)
+    pub atty: Vec<f32>,
+    /// (L,B,NH,T,T)
+    pub preatt: Vec<f32>,
+    pub att: Vec<f32>,
+    /// (L,B,T,C)
+    pub attproj: Vec<f32>,
+    pub residual2: Vec<f32>,
+    pub ln2: Vec<f32>,
+    pub ln2_mean: Vec<f32>,
+    pub ln2_rstd: Vec<f32>,
+    /// (L,B,T,4C)
+    pub fch: Vec<f32>,
+    pub fch_gelu: Vec<f32>,
+    /// (L,B,T,C)
+    pub fcproj: Vec<f32>,
+    pub residual3: Vec<f32>,
+    /// (B,T,C)
+    pub lnf: Vec<f32>,
+    pub lnf_mean: Vec<f32>,
+    pub lnf_rstd: Vec<f32>,
+    /// (B,T,Vp)
+    pub logits: Vec<f32>,
+    pub probs: Vec<f32>,
+    /// (B,T)
+    pub losses: Vec<f32>,
+}
+
+impl Activations {
+    pub fn new(cfg: &ModelConfig, b: usize, t: usize) -> Activations {
+        let c = cfg.channels;
+        let l = cfg.num_layers;
+        let nh = cfg.num_heads;
+        let vp = cfg.padded_vocab_size;
+        let bt = b * t;
+        Activations {
+            b,
+            t,
+            encoded: vec![0.0; bt * c],
+            ln1: vec![0.0; l * bt * c],
+            ln1_mean: vec![0.0; l * bt],
+            ln1_rstd: vec![0.0; l * bt],
+            qkv: vec![0.0; l * bt * 3 * c],
+            atty: vec![0.0; l * bt * c],
+            preatt: vec![0.0; l * b * nh * t * t],
+            att: vec![0.0; l * b * nh * t * t],
+            attproj: vec![0.0; l * bt * c],
+            residual2: vec![0.0; l * bt * c],
+            ln2: vec![0.0; l * bt * c],
+            ln2_mean: vec![0.0; l * bt],
+            ln2_rstd: vec![0.0; l * bt],
+            fch: vec![0.0; l * bt * 4 * c],
+            fch_gelu: vec![0.0; l * bt * 4 * c],
+            fcproj: vec![0.0; l * bt * c],
+            residual3: vec![0.0; l * bt * c],
+            lnf: vec![0.0; bt * c],
+            lnf_mean: vec![0.0; bt],
+            lnf_rstd: vec![0.0; bt],
+            logits: vec![0.0; bt * vp],
+            probs: vec![0.0; bt * vp],
+            losses: vec![0.0; bt],
+        }
+    }
+
+    /// Total f32 elements (llm.c prints this at startup).
+    pub fn num_activations(&self) -> usize {
+        self.encoded.len()
+            + self.ln1.len()
+            + self.ln1_mean.len()
+            + self.ln1_rstd.len()
+            + self.qkv.len()
+            + self.atty.len()
+            + self.preatt.len()
+            + self.att.len()
+            + self.attproj.len()
+            + self.residual2.len()
+            + self.ln2.len()
+            + self.ln2_mean.len()
+            + self.ln2_rstd.len()
+            + self.fch.len()
+            + self.fch_gelu.len()
+            + self.fcproj.len()
+            + self.residual3.len()
+            + self.lnf.len()
+            + self.lnf_mean.len()
+            + self.lnf_rstd.len()
+            + self.logits.len()
+            + self.probs.len()
+            + self.losses.len()
+    }
+
+    /// Mean loss over all positions (valid after a forward with targets).
+    pub fn mean_loss(&self) -> f32 {
+        self.losses.iter().sum::<f32>() / self.losses.len() as f32
+    }
+}
+
+/// Gradient arenas for the subset of activations the backward pass needs
+/// scratch space for (llm.c reuses a mirror arena; we do the same).
+#[derive(Debug, Clone)]
+pub struct ActGrads {
+    /// (B,T,C)
+    pub d_encoded: Vec<f32>,
+    /// scratch per layer (B,T,C)
+    pub d_ln1: Vec<f32>,
+    pub d_qkv: Vec<f32>,
+    pub d_atty: Vec<f32>,
+    pub d_preatt: Vec<f32>,
+    pub d_att: Vec<f32>,
+    pub d_attproj: Vec<f32>,
+    pub d_residual2: Vec<f32>,
+    pub d_ln2: Vec<f32>,
+    pub d_fch: Vec<f32>,
+    pub d_fch_gelu: Vec<f32>,
+    pub d_fcproj: Vec<f32>,
+    pub d_residual3: Vec<f32>,
+    pub d_lnf: Vec<f32>,
+    pub d_logits: Vec<f32>,
+}
+
+impl ActGrads {
+    pub fn new(cfg: &ModelConfig, b: usize, t: usize) -> ActGrads {
+        let c = cfg.channels;
+        let nh = cfg.num_heads;
+        let vp = cfg.padded_vocab_size;
+        let bt = b * t;
+        ActGrads {
+            d_encoded: vec![0.0; bt * c],
+            d_ln1: vec![0.0; bt * c],
+            d_qkv: vec![0.0; bt * 3 * c],
+            d_atty: vec![0.0; bt * c],
+            d_preatt: vec![0.0; b * nh * t * t],
+            d_att: vec![0.0; b * nh * t * t],
+            d_attproj: vec![0.0; bt * c],
+            d_residual2: vec![0.0; bt * c],
+            d_ln2: vec![0.0; bt * c],
+            d_fch: vec![0.0; bt * 4 * c],
+            d_fch_gelu: vec![0.0; bt * 4 * c],
+            d_fcproj: vec![0.0; bt * c],
+            d_residual3: vec![0.0; bt * c],
+            d_lnf: vec![0.0; bt * c],
+            d_logits: vec![0.0; bt * vp],
+        }
+    }
+
+    pub fn zero(&mut self) {
+        for v in [
+            &mut self.d_encoded,
+            &mut self.d_ln1,
+            &mut self.d_qkv,
+            &mut self.d_atty,
+            &mut self.d_preatt,
+            &mut self.d_att,
+            &mut self.d_attproj,
+            &mut self.d_residual2,
+            &mut self.d_ln2,
+            &mut self.d_fch,
+            &mut self.d_fch_gelu,
+            &mut self.d_fcproj,
+            &mut self.d_residual3,
+            &mut self.d_lnf,
+            &mut self.d_logits,
+        ] {
+            v.fill(0.0);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sizes_scale_with_batch() {
+        let cfg = ModelConfig::d2();
+        let a1 = Activations::new(&cfg, 1, 8);
+        let a2 = Activations::new(&cfg, 2, 8);
+        assert_eq!(a2.encoded.len(), 2 * a1.encoded.len());
+        assert!(a2.num_activations() > a1.num_activations());
+    }
+
+    #[test]
+    fn grads_zero() {
+        let cfg = ModelConfig::d2();
+        let mut g = ActGrads::new(&cfg, 1, 4);
+        g.d_qkv[0] = 5.0;
+        g.zero();
+        assert!(g.d_qkv.iter().all(|&x| x == 0.0));
+    }
+}

@@ -1,0 +1,115 @@
+//! Model hyperparameters (mirrors llm.c's GPT2Config and the Python
+//! `GPT2Config`; the named presets match `python/compile/model.py`).
+
+use crate::runtime::manifest::ModelArtifact;
+use crate::util::error::{Error, Result};
+
+/// GPT-2 configuration.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ModelConfig {
+    pub max_seq_len: usize,
+    pub vocab_size: usize,
+    /// llm.c pads the vocab to a multiple of 128 for nicer GEMMs.
+    pub padded_vocab_size: usize,
+    pub num_layers: usize,
+    pub num_heads: usize,
+    pub channels: usize,
+}
+
+impl ModelConfig {
+    /// GPT-2 small — the paper's 124M model.
+    pub const fn d12() -> ModelConfig {
+        ModelConfig {
+            max_seq_len: 1024,
+            vocab_size: 50257,
+            padded_vocab_size: 50304,
+            num_layers: 12,
+            num_heads: 12,
+            channels: 768,
+        }
+    }
+
+    /// Tiny test config (matches python CONFIGS["d2"]).
+    pub const fn d2() -> ModelConfig {
+        ModelConfig {
+            max_seq_len: 32,
+            vocab_size: 256,
+            padded_vocab_size: 256,
+            num_layers: 2,
+            num_heads: 2,
+            channels: 64,
+        }
+    }
+
+    /// Small config (python CONFIGS["d4"]).
+    pub const fn d4() -> ModelConfig {
+        ModelConfig {
+            max_seq_len: 64,
+            vocab_size: 512,
+            padded_vocab_size: 512,
+            num_layers: 4,
+            num_heads: 4,
+            channels: 128,
+        }
+    }
+
+    /// Medium config (python CONFIGS["d6"], ~13M params).
+    pub const fn d6() -> ModelConfig {
+        ModelConfig {
+            max_seq_len: 128,
+            vocab_size: 2048,
+            padded_vocab_size: 2048,
+            num_layers: 6,
+            num_heads: 6,
+            channels: 384,
+        }
+    }
+
+    /// Look up a named preset.
+    pub fn by_name(name: &str) -> Result<ModelConfig> {
+        match name {
+            "d2" => Ok(Self::d2()),
+            "d4" => Ok(Self::d4()),
+            "d6" => Ok(Self::d6()),
+            "d12" | "gpt2" | "gpt2-124m" => Ok(Self::d12()),
+            other => Err(Error::config(format!("unknown model config '{other}'"))),
+        }
+    }
+
+    /// Build from a manifest model artifact (must agree with the preset
+    /// the artifact was lowered for).
+    pub fn from_artifact(a: &ModelArtifact) -> ModelConfig {
+        ModelConfig {
+            max_seq_len: a.max_seq_len,
+            vocab_size: a.vocab_size,
+            padded_vocab_size: a.padded_vocab_size,
+            num_layers: a.num_layers,
+            num_heads: a.num_heads,
+            channels: a.channels,
+        }
+    }
+
+    pub fn head_size(&self) -> usize {
+        self.channels / self.num_heads
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_are_consistent() {
+        for cfg in [ModelConfig::d2(), ModelConfig::d4(), ModelConfig::d6(), ModelConfig::d12()] {
+            assert_eq!(cfg.channels % cfg.num_heads, 0);
+            assert!(cfg.padded_vocab_size >= cfg.vocab_size);
+            assert_eq!(cfg.padded_vocab_size % 128, 0);
+        }
+    }
+
+    #[test]
+    fn by_name_roundtrip() {
+        assert_eq!(ModelConfig::by_name("d12").unwrap(), ModelConfig::d12());
+        assert!(ModelConfig::by_name("bogus").is_err());
+    }
+}

@@ -1,0 +1,96 @@
+//! FLOP accounting per op (regenerates the paper's Figure 2 numbers).
+//!
+//! Figure 2 annotates the GPT-2 computation graph with per-op FLOP counts
+//! for the forward pass (backward ≈ 2×). The paper's epoch figure —
+//! "Each epoch consists of 197 GFLOP" — is the fwd+bwd total at B=4, T=64.
+
+use super::config::ModelConfig;
+
+/// FLOPs of one op category over a full forward pass.
+#[derive(Debug, Clone)]
+pub struct OpFlops {
+    pub op: &'static str,
+    pub forward: u64,
+    pub backward: u64,
+}
+
+/// Per-op forward/backward FLOP table for a batch shape.
+pub fn table(cfg: &ModelConfig, b: usize, t: usize) -> Vec<OpFlops> {
+    let c = cfg.channels as u64;
+    let l = cfg.num_layers as u64;
+    let nh = cfg.num_heads as u64;
+    let vp = cfg.padded_vocab_size as u64;
+    let bt = (b * t) as u64;
+    let tt = t as u64;
+
+    // encoder: one add per element.
+    let encoder = bt * c;
+    // layernorm: ~5 flops/element, 2L+1 instances.
+    let layernorm = (2 * l + 1) * 5 * bt * c;
+    // matmuls (2*M*K*N each): qkv + attproj + fc + fcproj per layer + head.
+    let matmul = l * (2 * bt * c * 3 * c + 2 * bt * c * c + 2 * bt * c * 4 * c + 2 * bt * 4 * c * c)
+        + 2 * bt * c * vp;
+    // attention: qk^T and att*v are B*NH*T*T*HS MACs each (causal halves
+    // it; Figure 2 counts the full square, we count causal).
+    let hs = c / nh;
+    let attention =
+        l * (2 * (b as u64) * nh * tt * (tt + 1) / 2 * hs * 2
+            + 5 * (b as u64) * nh * tt * (tt + 1) / 2);
+    // gelu: ~8 flops/element on 4C.
+    let gelu = l * 8 * bt * 4 * c;
+    // residuals: 2L adds over BTC.
+    let residual = 2 * l * bt * c;
+    // classifier: softmax ~4 flops/element over Vp + loss.
+    let classifier = 4 * bt * vp;
+
+    vec![
+        OpFlops { op: "encoder", forward: encoder, backward: 2 * encoder },
+        OpFlops { op: "layernorm", forward: layernorm, backward: 2 * layernorm },
+        OpFlops { op: "matmul", forward: matmul, backward: 2 * matmul },
+        OpFlops { op: "attention", forward: attention, backward: 2 * attention },
+        OpFlops { op: "gelu", forward: gelu, backward: 2 * gelu },
+        OpFlops { op: "residual", forward: residual, backward: 2 * residual },
+        OpFlops { op: "softmax+ce", forward: classifier, backward: classifier },
+    ]
+}
+
+/// Total fwd+bwd FLOPs of one training step.
+pub fn total_per_step(cfg: &ModelConfig, b: usize, t: usize) -> u64 {
+    table(cfg, b, t)
+        .iter()
+        .map(|o| o.forward + o.backward)
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gpt2_epoch_is_about_197_gflop() {
+        // Paper section VII: one epoch (one step at B=4, T=64) = 197 GFLOP.
+        let total = total_per_step(&ModelConfig::d12(), 4, 64);
+        let gflop = total as f64 / 1e9;
+        assert!(
+            (170.0..215.0).contains(&gflop),
+            "epoch FLOPs {gflop} GFLOP should be near the paper's 197"
+        );
+    }
+
+    #[test]
+    fn matmul_dominates() {
+        let t = table(&ModelConfig::d12(), 4, 64);
+        let matmul = t.iter().find(|o| o.op == "matmul").unwrap().forward;
+        let rest: u64 = t.iter().filter(|o| o.op != "matmul").map(|o| o.forward).sum();
+        assert!(matmul > 5 * rest, "matmul {matmul} vs rest {rest}");
+    }
+
+    #[test]
+    fn matmul_flops_match_gemm_site_accounting() {
+        use crate::gemm::sizes::{total_gemm_flops, ModelDims};
+        let t = table(&ModelConfig::d12(), 4, 64);
+        let matmul = t.iter().find(|o| o.op == "matmul").unwrap();
+        let sites = total_gemm_flops(&ModelDims::gpt2_124m());
+        assert_eq!(matmul.forward + matmul.backward, sites);
+    }
+}

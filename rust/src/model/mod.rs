@@ -1,0 +1,25 @@
+//! llm.c, ported: GPT-2 forward/backward/AdamW in pure Rust.
+//!
+//! The paper modifies Karpathy's llm.c — a framework-free C implementation
+//! of GPT-2 training — to dispatch its matmuls to the NPU. This module is
+//! that application, ported 1:1: the same 16-tensor parameter inventory
+//! (column-major weights!), the same activation arenas, the same op
+//! sequence, and a matmul seam ([`matmul::MatmulDispatch`]) that either
+//! runs the llm.c CPU loop nest or calls the offload engine.
+//!
+//! Numerics are cross-checked three ways in tests: against finite
+//! differences, against the JAX train-step artifact through PJRT, and
+//! between CPU and NPU dispatch.
+
+pub mod acts;
+pub mod config;
+pub mod data;
+pub mod flops;
+pub mod model;
+pub mod ops;
+pub mod params;
+pub mod trainer;
+
+pub use config::ModelConfig;
+pub use model::{Gpt2Model, OpTimers};
+pub use params::{ParamTensors, PARAM_NAMES};

@@ -1,0 +1,257 @@
+//! Causal multi-head attention (llm.c attention_forward /
+//! attention_backward). Stays on the CPU in the paper — only the GEMMs
+//! around it are offloaded — so this is a faithful loop-nest port.
+
+use crate::util::threads::parallel_for;
+
+/// Forward. qkv is (B,T,3C) packed; out is (B,T,C); preatt/att are
+/// (B,NH,T,T) caches for the backward pass.
+#[allow(clippy::too_many_arguments)]
+pub fn forward(
+    out: &mut [f32],
+    preatt: &mut [f32],
+    att: &mut [f32],
+    qkv: &[f32],
+    b: usize,
+    t: usize,
+    c: usize,
+    nh: usize,
+) {
+    let hs = c / nh;
+    let scale = 1.0 / (hs as f32).sqrt();
+    let c3 = 3 * c;
+
+    let out_addr = out.as_mut_ptr() as usize;
+    let preatt_addr = preatt.as_mut_ptr() as usize;
+    let att_addr = att.as_mut_ptr() as usize;
+    let (out_len, preatt_len, att_len) = (out.len(), preatt.len(), att.len());
+
+    parallel_for(b * nh, 1, |range| {
+        // SAFETY: each (batch, head) pair touches disjoint slices of
+        // out / preatt / att.
+        let out = unsafe { std::slice::from_raw_parts_mut(out_addr as *mut f32, out_len) };
+        let preatt =
+            unsafe { std::slice::from_raw_parts_mut(preatt_addr as *mut f32, preatt_len) };
+        let att = unsafe { std::slice::from_raw_parts_mut(att_addr as *mut f32, att_len) };
+        for bh in range {
+            let (bi, h) = (bh / nh, bh % nh);
+            for ti in 0..t {
+                let q = &qkv[(bi * t + ti) * c3 + h * hs..(bi * t + ti) * c3 + h * hs + hs];
+                let pre_row = &mut preatt[((bi * nh + h) * t + ti) * t..((bi * nh + h) * t + ti + 1) * t];
+                // Scores against all keys <= ti.
+                let mut maxval = f32::MIN;
+                for t2 in 0..=ti {
+                    let k = &qkv
+                        [(bi * t + t2) * c3 + c + h * hs..(bi * t + t2) * c3 + c + h * hs + hs];
+                    let mut dot = 0.0f32;
+                    for i in 0..hs {
+                        dot += q[i] * k[i];
+                    }
+                    let v = dot * scale;
+                    pre_row[t2] = v;
+                    if v > maxval {
+                        maxval = v;
+                    }
+                }
+                // Softmax over the causal prefix.
+                let att_row =
+                    &mut att[((bi * nh + h) * t + ti) * t..((bi * nh + h) * t + ti + 1) * t];
+                let mut sum = 0.0f32;
+                for t2 in 0..=ti {
+                    let e = (pre_row[t2] - maxval).exp();
+                    att_row[t2] = e;
+                    sum += e;
+                }
+                let inv = if sum == 0.0 { 0.0 } else { 1.0 / sum };
+                for t2 in 0..t {
+                    if t2 <= ti {
+                        att_row[t2] *= inv;
+                    } else {
+                        att_row[t2] = 0.0;
+                    }
+                }
+                // Weighted sum of values.
+                let o = &mut out[(bi * t + ti) * c + h * hs..(bi * t + ti) * c + h * hs + hs];
+                o.fill(0.0);
+                for t2 in 0..=ti {
+                    let v = &qkv[(bi * t + t2) * c3 + 2 * c + h * hs
+                        ..(bi * t + t2) * c3 + 2 * c + h * hs + hs];
+                    let a = att_row[t2];
+                    for i in 0..hs {
+                        o[i] += a * v[i];
+                    }
+                }
+            }
+        }
+    });
+}
+
+/// Backward: accumulates dqkv from dout using cached att (llm.c pattern:
+/// dpreatt/datt are scratch).
+#[allow(clippy::too_many_arguments)]
+pub fn backward(
+    dqkv: &mut [f32],
+    dpreatt: &mut [f32],
+    datt: &mut [f32],
+    dout: &[f32],
+    qkv: &[f32],
+    att: &[f32],
+    b: usize,
+    t: usize,
+    c: usize,
+    nh: usize,
+) {
+    let hs = c / nh;
+    let scale = 1.0 / (hs as f32).sqrt();
+    let c3 = 3 * c;
+    // Serial over (b, h) — dqkv rows are shared across t, keep it simple
+    // and deterministic (llm.c is also serial here modulo OpenMP collapse).
+    for bi in 0..b {
+        for h in 0..nh {
+            for ti in 0..t {
+                let att_row = &att[((bi * nh + h) * t + ti) * t..((bi * nh + h) * t + ti + 1) * t];
+                let do_ = &dout[(bi * t + ti) * c + h * hs..(bi * t + ti) * c + h * hs + hs];
+
+                // Backprop through the value accumulation.
+                {
+                    let datt_row = &mut datt
+                        [((bi * nh + h) * t + ti) * t..((bi * nh + h) * t + ti + 1) * t];
+                    for t2 in 0..=ti {
+                        let v = &qkv[(bi * t + t2) * c3 + 2 * c + h * hs
+                            ..(bi * t + t2) * c3 + 2 * c + h * hs + hs];
+                        let mut d = 0.0f32;
+                        for i in 0..hs {
+                            d += v[i] * do_[i];
+                        }
+                        datt_row[t2] = d;
+                    }
+                }
+                for t2 in 0..=ti {
+                    let a = att_row[t2];
+                    let dv_base = (bi * t + t2) * c3 + 2 * c + h * hs;
+                    for i in 0..hs {
+                        dqkv[dv_base + i] += a * do_[i];
+                    }
+                }
+
+                // Backprop through softmax: dpre = att * (datt - Σ att·datt).
+                {
+                    let datt_row =
+                        &datt[((bi * nh + h) * t + ti) * t..((bi * nh + h) * t + ti + 1) * t];
+                    let dpre_row = &mut dpreatt
+                        [((bi * nh + h) * t + ti) * t..((bi * nh + h) * t + ti + 1) * t];
+                    let mut dot = 0.0f32;
+                    for t2 in 0..=ti {
+                        dot += att_row[t2] * datt_row[t2];
+                    }
+                    for t2 in 0..=ti {
+                        dpre_row[t2] = att_row[t2] * (datt_row[t2] - dot);
+                    }
+                }
+
+                // Backprop through q·k.
+                let dpre_row =
+                    &dpreatt[((bi * nh + h) * t + ti) * t..((bi * nh + h) * t + ti + 1) * t];
+                let q_base = (bi * t + ti) * c3 + h * hs;
+                for t2 in 0..=ti {
+                    let k_base = (bi * t + t2) * c3 + c + h * hs;
+                    let d = dpre_row[t2] * scale;
+                    for i in 0..hs {
+                        dqkv[q_base + i] += d * qkv[k_base + i];
+                        dqkv[k_base + i] += d * qkv[q_base + i];
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn attention_is_causal() {
+        let (b, t, c, nh) = (1, 4, 8, 2);
+        let mut rng = Rng::new(81);
+        let mut qkv = prop::gen::normal_vec(&mut rng, b * t * 3 * c);
+        let mut out1 = vec![0.0; b * t * c];
+        let mut pre = vec![0.0; b * nh * t * t];
+        let mut att = vec![0.0; b * nh * t * t];
+        forward(&mut out1, &mut pre, &mut att, &qkv, b, t, c, nh);
+        // Changing the LAST token's qkv must not affect earlier outputs.
+        for v in qkv[(t - 1) * 3 * c..t * 3 * c].iter_mut() {
+            *v += 1.0;
+        }
+        let mut out2 = vec![0.0; b * t * c];
+        forward(&mut out2, &mut pre, &mut att, &qkv, b, t, c, nh);
+        for i in 0..(t - 1) * c {
+            assert_eq!(out1[i], out2[i], "causality violated at {i}");
+        }
+        assert!(out1[(t - 1) * c..] != out2[(t - 1) * c..]);
+    }
+
+    #[test]
+    fn attention_rows_sum_to_one() {
+        let (b, t, c, nh) = (2, 6, 12, 3);
+        let mut rng = Rng::new(83);
+        let qkv = prop::gen::normal_vec(&mut rng, b * t * 3 * c);
+        let mut out = vec![0.0; b * t * c];
+        let mut pre = vec![0.0; b * nh * t * t];
+        let mut att = vec![0.0; b * nh * t * t];
+        forward(&mut out, &mut pre, &mut att, &qkv, b, t, c, nh);
+        for bh in 0..b * nh {
+            for ti in 0..t {
+                let row = &att[(bh * t + ti) * t..(bh * t + ti + 1) * t];
+                let sum: f32 = row.iter().sum();
+                assert!((sum - 1.0).abs() < 1e-5, "row sum {sum}");
+                // Future positions masked.
+                for t2 in ti + 1..t {
+                    assert_eq!(row[t2], 0.0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn backward_matches_finite_differences() {
+        let (b, t, c, nh) = (1, 3, 4, 2);
+        let mut rng = Rng::new(89);
+        let qkv = prop::gen::normal_vec(&mut rng, b * t * 3 * c);
+        let dout = prop::gen::normal_vec(&mut rng, b * t * c);
+
+        let loss = |qkv: &[f32]| -> f32 {
+            let mut out = vec![0.0; b * t * c];
+            let mut pre = vec![0.0; b * nh * t * t];
+            let mut att = vec![0.0; b * nh * t * t];
+            forward(&mut out, &mut pre, &mut att, qkv, b, t, c, nh);
+            out.iter().zip(&dout).map(|(o, d)| o * d).sum()
+        };
+
+        let mut out = vec![0.0; b * t * c];
+        let mut pre = vec![0.0; b * nh * t * t];
+        let mut att = vec![0.0; b * nh * t * t];
+        forward(&mut out, &mut pre, &mut att, &qkv, b, t, c, nh);
+
+        let mut dqkv = vec![0.0; b * t * 3 * c];
+        let mut dpre = vec![0.0; b * nh * t * t];
+        let mut datt = vec![0.0; b * nh * t * t];
+        backward(&mut dqkv, &mut dpre, &mut datt, &dout, &qkv, &att, b, t, c, nh);
+
+        let h = 1e-3f32;
+        for i in (0..b * t * 3 * c).step_by(5) {
+            let mut p = qkv.clone();
+            p[i] += h;
+            let mut m = qkv.clone();
+            m[i] -= h;
+            let fd = (loss(&p) - loss(&m)) / (2.0 * h);
+            assert!(
+                (fd - dqkv[i]).abs() < 3e-2,
+                "dqkv[{i}]: fd {fd} vs analytic {}",
+                dqkv[i]
+            );
+        }
+    }
+}

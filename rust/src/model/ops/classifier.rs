@@ -1,0 +1,116 @@
+//! Fused softmax + cross-entropy classifier (llm.c softmax_forward +
+//! crossentropy_forward + crossentropy_softmax_backward).
+//!
+//! Logits over the padded vocab; positions past `vocab_size` are real
+//! logits in llm.c too (they learn to be -inf-ish); targets are always
+//! < vocab_size.
+
+use crate::util::threads::parallel_for;
+
+/// probs = softmax(logits) rowwise; losses[r] = -log(probs[target]).
+pub fn forward(
+    probs: &mut [f32],
+    losses: &mut [f32],
+    logits: &[f32],
+    targets: &[i32],
+    rows: usize,
+    vp: usize,
+) {
+    let probs_addr = probs.as_mut_ptr() as usize;
+    let losses_addr = losses.as_mut_ptr() as usize;
+    let (plen, llen) = (probs.len(), losses.len());
+    parallel_for(rows, 8, |range| {
+        // SAFETY: disjoint rows.
+        let probs = unsafe { std::slice::from_raw_parts_mut(probs_addr as *mut f32, plen) };
+        let losses = unsafe { std::slice::from_raw_parts_mut(losses_addr as *mut f32, llen) };
+        for r in range {
+            let row = &logits[r * vp..(r + 1) * vp];
+            let p = &mut probs[r * vp..(r + 1) * vp];
+            let maxv = row.iter().copied().fold(f32::MIN, f32::max);
+            let mut sum = 0.0f32;
+            for i in 0..vp {
+                let e = (row[i] - maxv).exp();
+                p[i] = e;
+                sum += e;
+            }
+            let inv = 1.0 / sum;
+            for v in p.iter_mut() {
+                *v *= inv;
+            }
+            let target = targets[r] as usize;
+            losses[r] = -p[target].max(1e-30).ln();
+        }
+    });
+}
+
+/// dlogits += (probs - onehot(target)) * dloss, with dloss = 1/rows
+/// (mean-loss convention, like llm.c's fused classifier).
+pub fn backward(
+    dlogits: &mut [f32],
+    probs: &[f32],
+    targets: &[i32],
+    rows: usize,
+    vp: usize,
+) {
+    let dloss = 1.0 / rows as f32;
+    for r in 0..rows {
+        let p = &probs[r * vp..(r + 1) * vp];
+        let d = &mut dlogits[r * vp..(r + 1) * vp];
+        let target = targets[r] as usize;
+        for i in 0..vp {
+            let indicator = if i == target { 1.0 } else { 0.0 };
+            d[i] += (p[i] - indicator) * dloss;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_logits_give_log_v_loss() {
+        let (rows, vp) = (2, 16);
+        let logits = vec![0.0f32; rows * vp];
+        let targets = vec![3i32, 7];
+        let mut probs = vec![0.0; rows * vp];
+        let mut losses = vec![0.0; rows];
+        forward(&mut probs, &mut losses, &logits, &targets, rows, vp);
+        for &l in &losses {
+            assert!((l - (vp as f32).ln()).abs() < 1e-5);
+        }
+        let sum: f32 = probs[..vp].iter().sum();
+        assert!((sum - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn backward_matches_finite_differences() {
+        let (rows, vp) = (2, 8);
+        let mut rng = crate::util::rng::Rng::new(91);
+        let logits = crate::util::prop::gen::normal_vec(&mut rng, rows * vp);
+        let targets = vec![1i32, 6];
+
+        let loss = |logits: &[f32]| -> f32 {
+            let mut probs = vec![0.0; rows * vp];
+            let mut losses = vec![0.0; rows];
+            forward(&mut probs, &mut losses, logits, &targets, rows, vp);
+            losses.iter().sum::<f32>() / rows as f32
+        };
+
+        let mut probs = vec![0.0; rows * vp];
+        let mut losses = vec![0.0; rows];
+        forward(&mut probs, &mut losses, &logits, &targets, rows, vp);
+        let mut dlogits = vec![0.0; rows * vp];
+        backward(&mut dlogits, &probs, &targets, rows, vp);
+
+        let h = 1e-3f32;
+        for i in 0..rows * vp {
+            let mut p = logits.clone();
+            p[i] += h;
+            let mut m = logits.clone();
+            m[i] -= h;
+            let fd = (loss(&p) - loss(&m)) / (2.0 * h);
+            assert!((fd - dlogits[i]).abs() < 1e-3, "dlogits[{i}]: {fd} vs {}", dlogits[i]);
+        }
+    }
+}

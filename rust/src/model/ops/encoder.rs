@@ -1,0 +1,74 @@
+//! Token + position embedding (llm.c encoder_forward / encoder_backward).
+
+/// out(B,T,C) = wte[tokens] + wpe[:T].
+pub fn forward(
+    out: &mut [f32],
+    tokens: &[i32],
+    wte: &[f32],
+    wpe: &[f32],
+    b: usize,
+    t: usize,
+    c: usize,
+) {
+    for bi in 0..b {
+        for ti in 0..t {
+            let ix = tokens[bi * t + ti] as usize;
+            let out_row = &mut out[(bi * t + ti) * c..(bi * t + ti + 1) * c];
+            let wte_row = &wte[ix * c..(ix + 1) * c];
+            let wpe_row = &wpe[ti * c..(ti + 1) * c];
+            for i in 0..c {
+                out_row[i] = wte_row[i] + wpe_row[i];
+            }
+        }
+    }
+}
+
+/// Accumulates into dwte / dwpe.
+pub fn backward(
+    dwte: &mut [f32],
+    dwpe: &mut [f32],
+    dout: &[f32],
+    tokens: &[i32],
+    b: usize,
+    t: usize,
+    c: usize,
+) {
+    for bi in 0..b {
+        for ti in 0..t {
+            let ix = tokens[bi * t + ti] as usize;
+            let dout_row = &dout[(bi * t + ti) * c..(bi * t + ti + 1) * c];
+            for i in 0..c {
+                dwte[ix * c + i] += dout_row[i];
+                dwpe[ti * c + i] += dout_row[i];
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forward_picks_rows() {
+        let (b, t, c) = (1, 2, 3);
+        let wte = vec![0.0, 0.0, 0.0, 1.0, 2.0, 3.0]; // 2 tokens
+        let wpe = vec![10.0, 20.0, 30.0, 40.0, 50.0, 60.0];
+        let tokens = vec![1, 0];
+        let mut out = vec![0.0; b * t * c];
+        forward(&mut out, &tokens, &wte, &wpe, b, t, c);
+        assert_eq!(out, vec![11.0, 22.0, 33.0, 40.0, 50.0, 60.0]);
+    }
+
+    #[test]
+    fn backward_scatters_and_accumulates() {
+        let (b, t, c) = (1, 2, 2);
+        let tokens = vec![1, 1]; // same token twice: grads accumulate
+        let dout = vec![1.0, 2.0, 3.0, 4.0];
+        let mut dwte = vec![0.0; 2 * c];
+        let mut dwpe = vec![0.0; t * c];
+        backward(&mut dwte, &mut dwpe, &dout, &tokens, b, t, c);
+        assert_eq!(dwte, vec![0.0, 0.0, 4.0, 6.0]);
+        assert_eq!(dwpe, vec![1.0, 2.0, 3.0, 4.0]);
+    }
+}

@@ -1,0 +1,69 @@
+//! GELU, tanh approximation (llm.c gelu_forward / gelu_backward).
+
+const GELU_SCALE: f32 = 0.797_884_6; // sqrt(2/pi)
+
+#[inline]
+fn gelu_scalar(x: f32) -> f32 {
+    let cube = 0.044715 * x * x * x;
+    0.5 * x * (1.0 + (GELU_SCALE * (x + cube)).tanh())
+}
+
+/// Elementwise forward.
+pub fn forward(out: &mut [f32], inp: &[f32]) {
+    for (o, &x) in out.iter_mut().zip(inp) {
+        *o = gelu_scalar(x);
+    }
+}
+
+/// dinp += gelu'(inp) * dout.
+pub fn backward(dinp: &mut [f32], inp: &[f32], dout: &[f32]) {
+    for i in 0..inp.len() {
+        let x = inp[i];
+        let cube = 0.044715 * x * x * x;
+        let tanh_arg = GELU_SCALE * (x + cube);
+        let tanh_out = tanh_arg.tanh();
+        let cosh = tanh_arg.cosh();
+        let sech2 = 1.0 / (cosh * cosh);
+        let local = 0.5 * (1.0 + tanh_out)
+            + x * 0.5 * sech2 * GELU_SCALE * (1.0 + 3.0 * 0.044715 * x * x);
+        dinp[i] += local * dout[i];
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_values() {
+        let inp = [0.0f32, 1.0, -1.0, 3.0];
+        let mut out = [0.0f32; 4];
+        forward(&mut out, &inp);
+        assert_eq!(out[0], 0.0);
+        assert!((out[1] - 0.8411919906).abs() < 1e-4);
+        assert!((out[2] + 0.158808).abs() < 1e-4);
+        assert!((out[3] - 2.9963627).abs() < 1e-3);
+    }
+
+    #[test]
+    fn backward_matches_finite_differences() {
+        let inp: Vec<f32> = (-8..8).map(|i| i as f32 * 0.37).collect();
+        let dout = vec![1.0f32; inp.len()];
+        let mut dinp = vec![0.0f32; inp.len()];
+        backward(&mut dinp, &inp, &dout);
+        let h = 1e-3f32;
+        for i in 0..inp.len() {
+            let fd = (gelu_scalar(inp[i] + h) - gelu_scalar(inp[i] - h)) / (2.0 * h);
+            assert!((fd - dinp[i]).abs() < 1e-2, "x={} fd {fd} vs {}", inp[i], dinp[i]);
+        }
+    }
+
+    #[test]
+    fn backward_accumulates() {
+        let inp = [1.0f32];
+        let dout = [2.0f32];
+        let mut dinp = [5.0f32];
+        backward(&mut dinp, &inp, &dout);
+        assert!(dinp[0] > 5.0);
+    }
+}

@@ -1,0 +1,148 @@
+//! Layer normalization (llm.c layernorm_forward / layernorm_backward),
+//! caching mean and rstd per row for the backward pass.
+
+const EPS: f32 = 1e-5;
+
+/// out(R,C) = norm(inp) * weight + bias; caches mean/rstd per row.
+#[allow(clippy::too_many_arguments)]
+pub fn forward(
+    out: &mut [f32],
+    mean: &mut [f32],
+    rstd: &mut [f32],
+    inp: &[f32],
+    weight: &[f32],
+    bias: &[f32],
+    rows: usize,
+    c: usize,
+) {
+    for r in 0..rows {
+        let x = &inp[r * c..(r + 1) * c];
+        let m: f32 = x.iter().sum::<f32>() / c as f32;
+        let v: f32 = x.iter().map(|&xi| (xi - m) * (xi - m)).sum::<f32>() / c as f32;
+        let s = 1.0 / (v + EPS).sqrt();
+        let o = &mut out[r * c..(r + 1) * c];
+        for i in 0..c {
+            o[i] = (x[i] - m) * s * weight[i] + bias[i];
+        }
+        mean[r] = m;
+        rstd[r] = s;
+    }
+}
+
+/// Accumulates dinp, dweight, dbias from dout using cached mean/rstd.
+#[allow(clippy::too_many_arguments)]
+pub fn backward(
+    dinp: &mut [f32],
+    dweight: &mut [f32],
+    dbias: &mut [f32],
+    dout: &[f32],
+    inp: &[f32],
+    weight: &[f32],
+    mean: &[f32],
+    rstd: &[f32],
+    rows: usize,
+    c: usize,
+) {
+    for r in 0..rows {
+        let x = &inp[r * c..(r + 1) * c];
+        let dy = &dout[r * c..(r + 1) * c];
+        let m = mean[r];
+        let s = rstd[r];
+
+        // Two reduction passes (llm.c's dnorm_mean / dnorm_norm_mean).
+        let mut dnorm_mean = 0.0f32;
+        let mut dnorm_norm_mean = 0.0f32;
+        for i in 0..c {
+            let norm = (x[i] - m) * s;
+            let dnorm = weight[i] * dy[i];
+            dnorm_mean += dnorm;
+            dnorm_norm_mean += dnorm * norm;
+        }
+        dnorm_mean /= c as f32;
+        dnorm_norm_mean /= c as f32;
+
+        let di = &mut dinp[r * c..(r + 1) * c];
+        for i in 0..c {
+            let norm = (x[i] - m) * s;
+            let dnorm = weight[i] * dy[i];
+            dbias[i] += dy[i];
+            dweight[i] += norm * dy[i];
+            di[i] += (dnorm - dnorm_mean - norm * dnorm_norm_mean) * s;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn forward_normalizes() {
+        let (rows, c) = (2, 8);
+        let mut rng = Rng::new(3);
+        let inp = prop::gen::normal_vec(&mut rng, rows * c);
+        let weight = vec![1.0; c];
+        let bias = vec![0.0; c];
+        let mut out = vec![0.0; rows * c];
+        let mut mean = vec![0.0; rows];
+        let mut rstd = vec![0.0; rows];
+        forward(&mut out, &mut mean, &mut rstd, &inp, &weight, &bias, rows, c);
+        for r in 0..rows {
+            let row = &out[r * c..(r + 1) * c];
+            let m: f32 = row.iter().sum::<f32>() / c as f32;
+            let v: f32 = row.iter().map(|&x| (x - m) * (x - m)).sum::<f32>() / c as f32;
+            assert!(m.abs() < 1e-5);
+            assert!((v - 1.0).abs() < 1e-3);
+        }
+    }
+
+    /// Finite-difference check of the full backward.
+    #[test]
+    fn backward_matches_finite_differences() {
+        let (rows, c) = (2, 6);
+        let mut rng = Rng::new(5);
+        let inp = prop::gen::normal_vec(&mut rng, rows * c);
+        let weight = prop::gen::uniform_vec(&mut rng, c, 0.5, 1.5);
+        let bias = prop::gen::normal_vec(&mut rng, c);
+        let dout = prop::gen::normal_vec(&mut rng, rows * c);
+
+        let loss = |inp: &[f32], weight: &[f32], bias: &[f32]| -> f32 {
+            let mut out = vec![0.0; rows * c];
+            let mut mean = vec![0.0; rows];
+            let mut rstd = vec![0.0; rows];
+            forward(&mut out, &mut mean, &mut rstd, inp, weight, bias, rows, c);
+            out.iter().zip(&dout).map(|(o, d)| o * d).sum()
+        };
+
+        let mut out = vec![0.0; rows * c];
+        let mut mean = vec![0.0; rows];
+        let mut rstd = vec![0.0; rows];
+        forward(&mut out, &mut mean, &mut rstd, &inp, &weight, &bias, rows, c);
+        let mut dinp = vec![0.0; rows * c];
+        let mut dweight = vec![0.0; c];
+        let mut dbias = vec![0.0; c];
+        backward(
+            &mut dinp, &mut dweight, &mut dbias, &dout, &inp, &weight, &mean, &rstd, rows, c,
+        );
+
+        let h = 1e-3f32;
+        for i in [0usize, 3, rows * c - 1] {
+            let mut ip = inp.clone();
+            ip[i] += h;
+            let mut im = inp.clone();
+            im[i] -= h;
+            let fd = (loss(&ip, &weight, &bias) - loss(&im, &weight, &bias)) / (2.0 * h);
+            assert!((fd - dinp[i]).abs() < 2e-2, "dinp[{i}]: fd {fd} vs {}", dinp[i]);
+        }
+        for i in [0usize, c - 1] {
+            let mut wp = weight.clone();
+            wp[i] += h;
+            let mut wm = weight.clone();
+            wm[i] -= h;
+            let fd = (loss(&inp, &wp, &bias) - loss(&inp, &wm, &bias)) / (2.0 * h);
+            assert!((fd - dweight[i]).abs() < 2e-2, "dweight[{i}]: fd {fd} vs {}", dweight[i]);
+        }
+    }
+}

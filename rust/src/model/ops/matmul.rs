@@ -1,0 +1,312 @@
+//! Matmul with bias — the offload seam (llm.c matmul_forward /
+//! matmul_backward).
+//!
+//! llm.c weights are (OC, IC) row-major; activations are (BT, IC)
+//! row-major. Forward computes out = inp · Wᵀ + bias. The dispatch enum
+//! decides whether the GEMM runs on the llm.c-style CPU loop nest or is
+//! offloaded through the engine (the paper's modification).
+
+use crate::coordinator::engine::{GemmOffloadEngine, InputLayout};
+use crate::gemm::cpu;
+use crate::gemm::sizes::ProblemSize;
+use crate::util::error::Result;
+
+/// Where matmuls execute.
+pub enum MatmulDispatch<'a> {
+    /// Unmodified llm.c: multi-threaded f32 loop nest on the CPU.
+    Cpu,
+    /// The paper's version: offloaded to the NPU through the engine.
+    Npu(&'a mut GemmOffloadEngine),
+}
+
+impl MatmulDispatch<'_> {
+    pub fn is_npu(&self) -> bool {
+        matches!(self, MatmulDispatch::Npu(_))
+    }
+}
+
+/// out(BT,OC) = inp(BT,IC) · W(OC,IC)ᵀ + bias(OC).
+pub fn forward(
+    dispatch: &mut MatmulDispatch,
+    out: &mut [f32],
+    inp: &[f32],
+    weight: &[f32],
+    bias: Option<&[f32]>,
+    bt: usize,
+    ic: usize,
+    oc: usize,
+) -> Result<()> {
+    match dispatch {
+        MatmulDispatch::Cpu => {
+            // C = A · Bᵀ computed as the llm.c loop nest: for each row,
+            // accumulate over IC. We reuse the blocked row kernel by
+            // multiplying against the transposed weight view.
+            cpu_matmul_bt(out, inp, weight, bt, ic, oc);
+        }
+        MatmulDispatch::Npu(engine) => {
+            // Engine wants B as (IC, OC) row-major; W is (OC, IC) row-major
+            // = exactly the "column-major weights" the paper transposes on
+            // copy (InputLayout::Transposed).
+            let size = ProblemSize::new(bt, ic, oc);
+            engine.gemm(size, inp, weight, InputLayout::Transposed, out)?;
+        }
+    }
+    if let Some(bias) = bias {
+        for r in 0..bt {
+            let row = &mut out[r * oc..(r + 1) * oc];
+            for i in 0..oc {
+                row[i] += bias[i];
+            }
+        }
+    }
+    Ok(())
+}
+
+/// dinp += dout · W ; dweight += doutᵀ · inp ; dbias += Σ_rows dout.
+#[allow(clippy::too_many_arguments)]
+pub fn backward(
+    dispatch: &mut MatmulDispatch,
+    dinp: &mut [f32],
+    dweight: &mut [f32],
+    dbias: Option<&mut [f32]>,
+    dout: &[f32],
+    inp: &[f32],
+    weight: &[f32],
+    bt: usize,
+    ic: usize,
+    oc: usize,
+) -> Result<()> {
+    match dispatch {
+        MatmulDispatch::Cpu => {
+            // dinp(BT,IC) += dout(BT,OC) · W(OC,IC).
+            let mut tmp = vec![0.0f32; bt * ic];
+            cpu::gemm_f32(dout, weight, &mut tmp, bt, oc, ic);
+            for (d, t) in dinp.iter_mut().zip(&tmp) {
+                *d += t;
+            }
+            // dweight(OC,IC) += doutᵀ(OC,BT) · inp(BT,IC).
+            let mut dw = vec![0.0f32; oc * ic];
+            let mut dout_t = vec![0.0f32; oc * bt];
+            crate::coordinator::transpose::transpose(dout, &mut dout_t, bt, oc);
+            cpu::gemm_f32(&dout_t, inp, &mut dw, oc, bt, ic);
+            for (d, t) in dweight.iter_mut().zip(&dw) {
+                *d += t;
+            }
+        }
+        MatmulDispatch::Npu(engine) => {
+            // Both backward GEMMs are offloaded — they are Figure 6's
+            // backward problem sizes.
+            let mut tmp = vec![0.0f32; bt * ic];
+            engine.gemm(
+                ProblemSize::new(bt, oc, ic),
+                dout,
+                weight,
+                InputLayout::RowMajor,
+                &mut tmp,
+            )?;
+            for (d, t) in dinp.iter_mut().zip(&tmp) {
+                *d += t;
+            }
+            let mut dw = vec![0.0f32; oc * ic];
+            engine.gemm_ex(
+                ProblemSize::new(oc, bt, ic),
+                dout,
+                InputLayout::Transposed, // dout is (BT,OC): Mᵀ view
+                inp,
+                InputLayout::RowMajor,
+                &mut dw,
+            )?;
+            for (d, t) in dweight.iter_mut().zip(&dw) {
+                *d += t;
+            }
+        }
+    }
+    if let Some(dbias) = dbias {
+        for r in 0..bt {
+            let row = &dout[r * oc..(r + 1) * oc];
+            for i in 0..oc {
+                dbias[i] += row[i];
+            }
+        }
+    }
+    Ok(())
+}
+
+/// C(BT,OC) = A(BT,IC) · W(OC,IC)ᵀ, llm.c-style parallel loop nest.
+fn cpu_matmul_bt(out: &mut [f32], inp: &[f32], weight: &[f32], bt: usize, ic: usize, oc: usize) {
+    use crate::util::threads::parallel_for;
+    let out_addr = out.as_mut_ptr() as usize;
+    parallel_for(bt, 4, |rows| {
+        // SAFETY: disjoint row ranges.
+        let out_all = unsafe { std::slice::from_raw_parts_mut(out_addr as *mut f32, bt * oc) };
+        for r in rows {
+            let a_row = &inp[r * ic..(r + 1) * ic];
+            let o_row = &mut out_all[r * oc..(r + 1) * oc];
+            for o in 0..oc {
+                let w_row = &weight[o * ic..(o + 1) * ic];
+                let mut acc = 0.0f32;
+                for i in 0..ic {
+                    acc += a_row[i] * w_row[i];
+                }
+                o_row[o] = acc;
+            }
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::engine::EngineConfig;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    fn rand(rng: &mut Rng, n: usize) -> Vec<f32> {
+        prop::gen::normal_vec(rng, n)
+    }
+
+    #[test]
+    fn cpu_forward_matches_reference() {
+        let (bt, ic, oc) = (8, 12, 16);
+        let mut rng = Rng::new(61);
+        let inp = rand(&mut rng, bt * ic);
+        let w = rand(&mut rng, oc * ic);
+        let bias = rand(&mut rng, oc);
+        let mut out = vec![0.0; bt * oc];
+        forward(&mut MatmulDispatch::Cpu, &mut out, &inp, &w, Some(&bias), bt, ic, oc).unwrap();
+        for r in 0..bt {
+            for o in 0..oc {
+                let mut acc = bias[o];
+                for i in 0..ic {
+                    acc += inp[r * ic + i] * w[o * ic + i];
+                }
+                assert!((out[r * oc + o] - acc).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn npu_forward_matches_cpu_within_bf16() {
+        let (bt, ic, oc) = (64, 64, 128);
+        let mut rng = Rng::new(67);
+        let inp = rand(&mut rng, bt * ic);
+        let w = rand(&mut rng, oc * ic);
+        let bias = rand(&mut rng, oc);
+        let mut out_cpu = vec![0.0; bt * oc];
+        forward(&mut MatmulDispatch::Cpu, &mut out_cpu, &inp, &w, Some(&bias), bt, ic, oc)
+            .unwrap();
+        let mut eng = GemmOffloadEngine::new(EngineConfig::default(), &[]).unwrap();
+        let mut out_npu = vec![0.0; bt * oc];
+        forward(
+            &mut MatmulDispatch::Npu(&mut eng),
+            &mut out_npu,
+            &inp,
+            &w,
+            Some(&bias),
+            bt,
+            ic,
+            oc,
+        )
+        .unwrap();
+        for (x, y) in out_npu.iter().zip(&out_cpu) {
+            assert!((x - y).abs() <= 0.06 * y.abs().max(1.0), "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn backward_matches_finite_differences() {
+        let (bt, ic, oc) = (3, 4, 5);
+        let mut rng = Rng::new(71);
+        let inp = rand(&mut rng, bt * ic);
+        let w = rand(&mut rng, oc * ic);
+        let dout = rand(&mut rng, bt * oc);
+
+        let loss = |inp: &[f32], w: &[f32]| -> f32 {
+            let mut out = vec![0.0; bt * oc];
+            forward(&mut MatmulDispatch::Cpu, &mut out, inp, w, None, bt, ic, oc).unwrap();
+            out.iter().zip(&dout).map(|(o, d)| o * d).sum()
+        };
+
+        let mut dinp = vec![0.0; bt * ic];
+        let mut dw = vec![0.0; oc * ic];
+        let mut dbias = vec![0.0; oc];
+        backward(
+            &mut MatmulDispatch::Cpu,
+            &mut dinp,
+            &mut dw,
+            Some(&mut dbias),
+            &dout,
+            &inp,
+            &w,
+            bt,
+            ic,
+            oc,
+        )
+        .unwrap();
+
+        let h = 1e-3f32;
+        for i in [0usize, bt * ic - 1, 5] {
+            let mut p = inp.clone();
+            p[i] += h;
+            let mut m = inp.clone();
+            m[i] -= h;
+            let fd = (loss(&p, &w) - loss(&m, &w)) / (2.0 * h);
+            assert!((fd - dinp[i]).abs() < 2e-2, "dinp[{i}] {fd} vs {}", dinp[i]);
+        }
+        for i in [0usize, oc * ic - 1] {
+            let mut p = w.to_vec();
+            p[i] += h;
+            let mut m = w.to_vec();
+            m[i] -= h;
+            let fd = (loss(&inp, &p) - loss(&inp, &m)) / (2.0 * h);
+            assert!((fd - dw[i]).abs() < 2e-2, "dw[{i}] {fd} vs {}", dw[i]);
+        }
+        // dbias = column sums of dout.
+        for o in 0..oc {
+            let expect: f32 = (0..bt).map(|r| dout[r * oc + o]).sum();
+            assert!((dbias[o] - expect).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn npu_backward_matches_cpu_backward() {
+        let (bt, ic, oc) = (64, 128, 64);
+        let mut rng = Rng::new(73);
+        let inp = rand(&mut rng, bt * ic);
+        let w = rand(&mut rng, oc * ic);
+        let dout = rand(&mut rng, bt * oc);
+
+        let mut dinp_c = vec![0.0; bt * ic];
+        let mut dw_c = vec![0.0; oc * ic];
+        backward(
+            &mut MatmulDispatch::Cpu, &mut dinp_c, &mut dw_c, None, &dout, &inp, &w, bt, ic, oc,
+        )
+        .unwrap();
+
+        let mut eng = GemmOffloadEngine::new(EngineConfig::default(), &[]).unwrap();
+        let mut dinp_n = vec![0.0; bt * ic];
+        let mut dw_n = vec![0.0; oc * ic];
+        backward(
+            &mut MatmulDispatch::Npu(&mut eng),
+            &mut dinp_n,
+            &mut dw_n,
+            None,
+            &dout,
+            &inp,
+            &w,
+            bt,
+            ic,
+            oc,
+        )
+        .unwrap();
+
+        // bf16 quantization noise: with K=64 zero-mean products, absolute
+        // error up to ~sum|terms| * 2^-8; use an absolute-dominated bound.
+        for (x, y) in dinp_n.iter().zip(&dinp_c) {
+            assert!((x - y).abs() <= 0.12 + 0.02 * y.abs(), "{x} vs {y}");
+        }
+        for (x, y) in dw_n.iter().zip(&dw_c) {
+            assert!((x - y).abs() <= 0.12 + 0.02 * y.abs(), "{x} vs {y}");
+        }
+    }
+}

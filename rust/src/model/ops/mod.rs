@@ -1,0 +1,15 @@
+//! The llm.c op kernels: forward + backward pairs.
+//!
+//! Each module mirrors one llm.c function pair (e.g. `layernorm_forward` /
+//! `layernorm_backward`), with the same caching strategy and loop
+//! structure. Matmuls go through [`matmul::MatmulDispatch`], the paper's
+//! offload seam.
+
+pub mod adamw;
+pub mod attention;
+pub mod classifier;
+pub mod encoder;
+pub mod gelu;
+pub mod layernorm;
+pub mod matmul;
+pub mod residual;

@@ -1,0 +1,35 @@
+//! Residual connections (llm.c residual_forward / residual_backward).
+
+/// out = a + b.
+pub fn forward(out: &mut [f32], a: &[f32], b: &[f32]) {
+    for i in 0..out.len() {
+        out[i] = a[i] + b[i];
+    }
+}
+
+/// Both branches receive the upstream gradient.
+pub fn backward(da: &mut [f32], db: &mut [f32], dout: &[f32]) {
+    for i in 0..dout.len() {
+        da[i] += dout[i];
+        db[i] += dout[i];
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let a = [1.0f32, 2.0];
+        let b = [10.0f32, 20.0];
+        let mut out = [0.0f32; 2];
+        forward(&mut out, &a, &b);
+        assert_eq!(out, [11.0, 22.0]);
+        let mut da = [0.0f32; 2];
+        let mut db = [1.0f32; 2];
+        backward(&mut da, &mut db, &out);
+        assert_eq!(da, [11.0, 22.0]);
+        assert_eq!(db, [12.0, 23.0]);
+    }
+}

@@ -1,0 +1,245 @@
+//! Parameter tensors: llm.c's ParameterTensors, one flat arena.
+//!
+//! Order and shapes are the ABI shared with the JAX artifacts (see
+//! python/compile/model.py PARAM_NAMES). Weight matrices are stored the
+//! way llm.c stores them — (OC, IC) row-major, i.e. **column-major from
+//! the GEMM's point of view** — which is precisely why the paper's engine
+//! must transpose on copy.
+
+use crate::util::error::{Error, Result};
+use crate::util::rng::Rng;
+
+use super::config::ModelConfig;
+
+/// Parameter names in ABI order.
+pub const PARAM_NAMES: [&str; 16] = [
+    "wte", "wpe", "ln1w", "ln1b", "qkvw", "qkvb", "attprojw", "attprojb",
+    "ln2w", "ln2b", "fcw", "fcb", "fcprojw", "fcprojb", "lnfw", "lnfb",
+];
+
+/// Shapes of all 16 tensors for a config, in ABI order.
+pub fn param_shapes(cfg: &ModelConfig) -> Vec<(&'static str, Vec<usize>)> {
+    let (c, l, t, vp) = (
+        cfg.channels,
+        cfg.num_layers,
+        cfg.max_seq_len,
+        cfg.padded_vocab_size,
+    );
+    vec![
+        ("wte", vec![vp, c]),
+        ("wpe", vec![t, c]),
+        ("ln1w", vec![l, c]),
+        ("ln1b", vec![l, c]),
+        ("qkvw", vec![l, 3 * c, c]),
+        ("qkvb", vec![l, 3 * c]),
+        ("attprojw", vec![l, c, c]),
+        ("attprojb", vec![l, c]),
+        ("ln2w", vec![l, c]),
+        ("ln2b", vec![l, c]),
+        ("fcw", vec![l, 4 * c, c]),
+        ("fcb", vec![l, 4 * c]),
+        ("fcprojw", vec![l, c, 4 * c]),
+        ("fcprojb", vec![l, c]),
+        ("lnfw", vec![c]),
+        ("lnfb", vec![c]),
+    ]
+}
+
+/// A flat parameter arena with named views (used for params, grads, and
+/// the two AdamW moment buffers alike).
+#[derive(Debug, Clone)]
+pub struct ParamTensors {
+    cfg: ModelConfig,
+    data: Vec<f32>,
+    /// (name, offset, len) per tensor, ABI order.
+    index: Vec<(&'static str, usize, usize)>,
+}
+
+impl ParamTensors {
+    /// Zero-initialized arena.
+    pub fn zeros(cfg: &ModelConfig) -> ParamTensors {
+        let mut index = Vec::with_capacity(16);
+        let mut off = 0usize;
+        for (name, shape) in param_shapes(cfg) {
+            let len: usize = shape.iter().product();
+            index.push((name, off, len));
+            off += len;
+        }
+        ParamTensors {
+            cfg: *cfg,
+            data: vec![0.0; off],
+            index,
+        }
+    }
+
+    /// GPT-2 initialization (llm.c / nanoGPT): std 0.02 normals, residual
+    /// projections scaled 1/sqrt(2L), layernorm weights 1, biases 0.
+    pub fn random_init(cfg: &ModelConfig, rng: &mut Rng) -> ParamTensors {
+        let mut p = ParamTensors::zeros(cfg);
+        let resid_scale = 1.0 / (2.0 * cfg.num_layers as f32).sqrt();
+        for (name, off, len) in p.index.clone() {
+            let slice = &mut p.data[off..off + len];
+            match name {
+                "ln1w" | "ln2w" | "lnfw" => slice.fill(1.0),
+                n if n.ends_with('b') => slice.fill(0.0),
+                "attprojw" | "fcprojw" => {
+                    rng.fill_normal(slice, 0.0, 0.02 * resid_scale)
+                }
+                _ => rng.fill_normal(slice, 0.0, 0.02),
+            }
+        }
+        p
+    }
+
+    pub fn config(&self) -> &ModelConfig {
+        &self.cfg
+    }
+
+    pub fn num_parameters(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn as_slice(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn as_mut_slice(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    fn entry(&self, name: &str) -> Result<(usize, usize)> {
+        self.index
+            .iter()
+            .find(|(n, _, _)| *n == name)
+            .map(|(_, o, l)| (*o, *l))
+            .ok_or_else(|| Error::config(format!("unknown param tensor '{name}'")))
+    }
+
+    /// Whole tensor by name.
+    pub fn tensor(&self, name: &str) -> &[f32] {
+        let (o, l) = self.entry(name).expect("valid tensor name");
+        &self.data[o..o + l]
+    }
+
+    pub fn tensor_mut(&mut self, name: &str) -> &mut [f32] {
+        let (o, l) = self.entry(name).expect("valid tensor name");
+        &mut self.data[o..o + l]
+    }
+
+    /// Layer `l`'s slice of a per-layer tensor (leading dim = num_layers).
+    pub fn layer(&self, name: &str, l: usize) -> &[f32] {
+        let t = self.tensor(name);
+        let per = t.len() / self.cfg.num_layers;
+        &t[l * per..(l + 1) * per]
+    }
+
+    pub fn layer_mut(&mut self, name: &str, l: usize) -> &mut [f32] {
+        let layers = self.cfg.num_layers;
+        let t = self.tensor_mut(name);
+        let per = t.len() / layers;
+        &mut t[l * per..(l + 1) * per]
+    }
+
+    /// Flat (offset, len) of a tensor — used to exchange with PJRT
+    /// literals and checkpoints.
+    pub fn tensor_range(&self, name: &str) -> Result<(usize, usize)> {
+        self.entry(name)
+    }
+
+    /// Two simultaneous mutable tensor views (optionally layer-sliced).
+    /// The backward pass needs (dweight, dbias) pairs at once; tensors are
+    /// disjoint by construction, asserted here before the unsafe split.
+    pub fn pair_mut(
+        &mut self,
+        name1: &str,
+        layer1: Option<usize>,
+        name2: &str,
+        layer2: Option<usize>,
+    ) -> (&mut [f32], &mut [f32]) {
+        let slice_of = |this: &ParamTensors, name: &str, layer: Option<usize>| {
+            let (off, len) = this.entry(name).expect("valid tensor name");
+            match layer {
+                None => (off, len),
+                Some(l) => {
+                    let per = len / this.cfg.num_layers;
+                    (off + l * per, per)
+                }
+            }
+        };
+        let (o1, l1) = slice_of(self, name1, layer1);
+        let (o2, l2) = slice_of(self, name2, layer2);
+        assert!(
+            o1 + l1 <= o2 || o2 + l2 <= o1,
+            "pair_mut ranges overlap: {name1}/{name2}"
+        );
+        // SAFETY: ranges proven disjoint above.
+        let ptr = self.data.as_mut_ptr();
+        unsafe {
+            (
+                std::slice::from_raw_parts_mut(ptr.add(o1), l1),
+                std::slice::from_raw_parts_mut(ptr.add(o2), l2),
+            )
+        }
+    }
+
+    /// Shapes in ABI order (for literal construction).
+    pub fn shapes(&self) -> Vec<(&'static str, Vec<usize>)> {
+        param_shapes(&self.cfg)
+    }
+
+    /// Whether two parameter sets are elementwise close.
+    pub fn allclose(&self, other: &ParamTensors, rtol: f32, atol: f32) -> bool {
+        self.data.len() == other.data.len()
+            && self
+                .data
+                .iter()
+                .zip(&other.data)
+                .all(|(a, b)| (a - b).abs() <= atol + rtol * b.abs())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gpt2_124m_parameter_count() {
+        // llm.c reports 124,475,904 padded params for GPT-2 small
+        // (124M unpadded + vocab padding rows).
+        let p = ParamTensors::zeros(&ModelConfig::d12());
+        assert_eq!(p.num_parameters(), 124_475_904);
+    }
+
+    #[test]
+    fn layer_views_are_disjoint_and_cover() {
+        let cfg = ModelConfig::d2();
+        let p = ParamTensors::zeros(&cfg);
+        let full = p.tensor("qkvw").len();
+        let per: usize = (0..cfg.num_layers).map(|l| p.layer("qkvw", l).len()).sum();
+        assert_eq!(full, per);
+    }
+
+    #[test]
+    fn init_statistics() {
+        let cfg = ModelConfig::d4();
+        let mut rng = Rng::new(1);
+        let p = ParamTensors::random_init(&cfg, &mut rng);
+        // layernorm weights exactly 1, biases 0.
+        assert!(p.tensor("ln1w").iter().all(|&x| x == 1.0));
+        assert!(p.tensor("qkvb").iter().all(|&x| x == 0.0));
+        // wte roughly std 0.02.
+        let wte = p.tensor("wte");
+        let var: f32 = wte.iter().map(|x| x * x).sum::<f32>() / wte.len() as f32;
+        assert!((var.sqrt() - 0.02).abs() < 0.002, "std {}", var.sqrt());
+        // residual projections scaled down.
+        let ap = p.tensor("attprojw");
+        let var2: f32 = ap.iter().map(|x| x * x).sum::<f32>() / ap.len() as f32;
+        assert!(var2.sqrt() < 0.02);
+    }
+
+    #[test]
+    fn unknown_tensor_errors() {
+        let p = ParamTensors::zeros(&ModelConfig::d2());
+        assert!(p.tensor_range("nope").is_err());
+    }
+}

@@ -1,0 +1,221 @@
+//! The training loop (llm.c's main), CPU or CPU+NPU.
+//!
+//! Mirrors the paper's evaluation procedure: epochs are timed individually
+//! (llm.c's default is 41), per-op wallclock is recorded for Figure 8, the
+//! engine's stage breakdown accumulates for Figure 7, and the power meter
+//! integrates energy for Figure 9.
+
+use crate::coordinator::engine::GemmOffloadEngine;
+use crate::power::meter::PowerMeter;
+use crate::power::profiles::PowerProfile;
+use crate::util::error::Result;
+
+use super::config::ModelConfig;
+use super::data::DataLoader;
+use super::model::Gpt2Model;
+use super::ops::adamw::AdamW;
+use super::ops::matmul::MatmulDispatch;
+
+/// Which implementation the trainer runs — the paper's two bars.
+pub enum TrainBackend<'a> {
+    /// Vanilla llm.c: everything on the CPU.
+    Cpu,
+    /// GEMMs offloaded through the engine.
+    CpuNpu(&'a mut GemmOffloadEngine),
+}
+
+/// One epoch's record.
+#[derive(Debug, Clone)]
+pub struct EpochStats {
+    pub epoch: usize,
+    pub loss: f32,
+    pub grad_norm: f32,
+    pub wall_s: f64,
+    /// Modeled epoch time (CPU cost model + device model), used for
+    /// paper-scale comparisons.
+    pub modeled_s: f64,
+    /// Modeled energy over the epoch (J).
+    pub energy_j: f64,
+}
+
+/// Training configuration.
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    pub batch: usize,
+    pub seq: usize,
+    pub epochs: usize,
+    /// Steps per epoch (llm.c's "epoch" in the paper is one pass = one
+    /// timed unit; we allow multiple steps per epoch for small corpora).
+    pub steps_per_epoch: usize,
+    pub optimizer: AdamW,
+    pub power: PowerProfile,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            batch: 4,
+            seq: 64,
+            epochs: 41,
+            steps_per_epoch: 1,
+            optimizer: AdamW::default(),
+            power: PowerProfile::mains(),
+        }
+    }
+}
+
+/// Run training; returns per-epoch stats.
+pub fn train(
+    model: &mut Gpt2Model,
+    loader: &mut DataLoader,
+    backend: &mut TrainBackend,
+    cfg: &TrainConfig,
+) -> Result<Vec<EpochStats>> {
+    let mut out = Vec::with_capacity(cfg.epochs);
+    for epoch in 0..cfg.epochs {
+        let mut meter = PowerMeter::new(cfg.power.clone());
+        let t0 = std::time::Instant::now();
+        let mut loss = 0.0f32;
+        let mut gnorm = 0.0f32;
+        let mut modeled_npu_s = 0.0f64;
+        let mut npu_energy_j = 0.0f64;
+        for _ in 0..cfg.steps_per_epoch {
+            let (tokens, targets) = loader.next_batch();
+            let (l, g) = match backend {
+                TrainBackend::Cpu => {
+                    let mut d = MatmulDispatch::Cpu;
+                    let l = model
+                        .forward(&mut d, &tokens, Some(&targets), cfg.batch, cfg.seq)?
+                        .unwrap();
+                    model.zero_grad();
+                    model.backward(&mut d)?;
+                    (l, model.update(&cfg.optimizer))
+                }
+                TrainBackend::CpuNpu(engine) => {
+                    let before_modeled: f64 = engine
+                        .modeled_stages
+                        .iter()
+                        .map(|(_, s)| *s)
+                        .sum();
+                    let before_energy = engine.modeled_energy_j;
+                    let mut d = MatmulDispatch::Npu(engine);
+                    let l = model
+                        .forward(&mut d, &tokens, Some(&targets), cfg.batch, cfg.seq)?
+                        .unwrap();
+                    model.zero_grad();
+                    model.backward(&mut d)?;
+                    let g = model.update(&cfg.optimizer);
+                    modeled_npu_s += engine
+                        .modeled_stages
+                        .iter()
+                        .map(|(_, s)| *s)
+                        .sum::<f64>()
+                        - before_modeled;
+                    npu_energy_j += engine.modeled_energy_j - before_energy;
+                    (l, g)
+                }
+            };
+            loss = l;
+            gnorm = g;
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        // Modeled epoch time: CPU ops at the profile's effective rate +
+        // modeled NPU seconds for offloaded GEMMs.
+        let modeled = match backend {
+            TrainBackend::Cpu => {
+                cfg.steps_per_epoch as f64
+                    * cfg.power.modeled_epoch_s(&model.cfg, cfg.batch, cfg.seq, false)
+            }
+            TrainBackend::CpuNpu(_) => {
+                cfg.steps_per_epoch as f64
+                    * cfg.power.modeled_epoch_s(&model.cfg, cfg.batch, cfg.seq, true)
+                    + modeled_npu_s * cfg.power.npu_time_scale
+            }
+        };
+        let energy = meter.integrate_epoch(modeled, matches!(backend, TrainBackend::CpuNpu(_)))
+            + npu_energy_j;
+        out.push(EpochStats {
+            epoch,
+            loss,
+            grad_norm: gnorm,
+            wall_s: wall,
+            modeled_s: modeled,
+            energy_j: energy,
+        });
+    }
+    Ok(out)
+}
+
+/// Quick helper: train a named config on a synthetic corpus.
+pub fn train_synthetic(
+    model_cfg: ModelConfig,
+    train_cfg: &TrainConfig,
+    backend: &mut TrainBackend,
+    seed: u64,
+) -> Result<Vec<EpochStats>> {
+    let corpus = super::data::synthetic_corpus(
+        model_cfg.vocab_size,
+        (train_cfg.batch * train_cfg.seq + 1) * train_cfg.steps_per_epoch.max(4) * 4,
+        seed,
+    );
+    let mut loader = DataLoader::new(corpus, train_cfg.batch, train_cfg.seq)?;
+    let mut model = Gpt2Model::new(model_cfg, seed);
+    train(&mut model, &mut loader, backend, train_cfg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cpu_training_loss_decreases() {
+        let cfg = ModelConfig::d2();
+        let tc = TrainConfig {
+            batch: 2,
+            seq: 16,
+            epochs: 6,
+            steps_per_epoch: 4,
+            ..Default::default()
+        };
+        let stats = train_synthetic(cfg, &tc, &mut TrainBackend::Cpu, 3).unwrap();
+        assert_eq!(stats.len(), 6);
+        assert!(
+            stats.last().unwrap().loss < stats[0].loss,
+            "{} -> {}",
+            stats[0].loss,
+            stats.last().unwrap().loss
+        );
+        assert!(stats[0].wall_s > 0.0);
+        assert!(stats[0].energy_j > 0.0);
+    }
+
+    #[test]
+    fn npu_training_tracks_cpu() {
+        use crate::coordinator::engine::{EngineConfig, GemmOffloadEngine};
+        let cfg = ModelConfig::d2();
+        let tc = TrainConfig {
+            batch: 2,
+            seq: 16,
+            epochs: 3,
+            steps_per_epoch: 2,
+            ..Default::default()
+        };
+        let cpu = train_synthetic(cfg, &tc, &mut TrainBackend::Cpu, 5).unwrap();
+        let mut eng = GemmOffloadEngine::new(EngineConfig::default(), &[]).unwrap();
+        let npu = train_synthetic(cfg, &tc, &mut TrainBackend::CpuNpu(&mut eng), 5).unwrap();
+        for (c, n) in cpu.iter().zip(&npu) {
+            assert!(
+                (c.loss - n.loss).abs() < 0.05 * c.loss.max(1.0),
+                "epoch {}: {} vs {}",
+                c.epoch,
+                c.loss,
+                n.loss
+            );
+        }
+        // Offloaded epochs are modeled faster than CPU epochs at 124M
+        // scale; at d2 scale overheads dominate, so just require sane
+        // bookkeeping here (the fig8/fig9 benches assert the real claim).
+        assert!(npu[0].modeled_s > 0.0);
+        assert!(eng.invocations > 0);
+    }
+}

@@ -1,0 +1,138 @@
+//! The dedicated command processor.
+//!
+//! A small controller with access to all cores and switch boxes, used to
+//! reconfigure the NPU at runtime (paper Figure 1). The host enqueues an
+//! encoded instruction stream; the command processor decodes it and applies
+//! each instruction to device state: shim BD writes and runtime-parameter
+//! writes (the *only* things the paper's minimal reconfiguration touches).
+
+use crate::gemm::tiling::{GRID_COLS, GRID_ROWS};
+use crate::util::error::{Error, Result};
+
+use super::core::ComputeCore;
+use super::isa::{decode, Inst};
+use super::shim::{ShimCore, ShimTransfer};
+
+/// Execution statistics of one instruction stream.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ApplyStats {
+    pub shim_bds_written: usize,
+    pub params_written: usize,
+    pub syncs: usize,
+    /// Command-processor cycles consumed (one per word, AIE-CP-ish).
+    pub cp_cycles: u64,
+}
+
+/// Decode and apply an encoded instruction stream to device state.
+pub fn execute_stream(
+    words: &[u32],
+    shims: &mut [ShimCore],
+    cores: &mut [ComputeCore],
+) -> Result<ApplyStats> {
+    let insts = decode(words)?;
+    let mut stats = ApplyStats {
+        cp_cycles: words.len() as u64,
+        ..Default::default()
+    };
+    for inst in insts {
+        match inst {
+            Inst::ShimBd {
+                col,
+                matrix,
+                repeat,
+                bd,
+            } => {
+                let col = col as usize;
+                if col >= shims.len() {
+                    return Err(Error::npu(format!("shim column {col} out of range")));
+                }
+                // Validate the BD before committing it.
+                bd.addresses()?;
+                shims[col].program(matrix, ShimTransfer { bd, repeat });
+                stats.shim_bds_written += 1;
+            }
+            Inst::WriteParam {
+                col,
+                row,
+                idx,
+                value,
+            } => {
+                let (col, row) = (col as usize, row as usize);
+                if col >= GRID_COLS || row >= GRID_ROWS {
+                    return Err(Error::npu(format!(
+                        "param write to out-of-partition core ({col},{row})"
+                    )));
+                }
+                cores[row * GRID_COLS + col].write_param(idx as usize, value)?;
+                stats.params_written += 1;
+            }
+            Inst::Sync => stats.syncs += 1,
+        }
+    }
+    Ok(stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::sizes::ProblemSize;
+    use crate::gemm::tiling::Tiling;
+    use crate::npu::core::{PARAM_K_TILES, PARAM_OUT_TILES};
+    use crate::npu::gemm_design::build_instruction_stream;
+    use crate::npu::grid::PARTITION;
+
+    fn fresh_device() -> (Vec<ShimCore>, Vec<ComputeCore>) {
+        let shims = (0..4).map(|c| ShimCore::new(PARTITION.shim_core(c))).collect();
+        let cores = (0..4)
+            .flat_map(|r| (0..4).map(move |c| ComputeCore::new(PARTITION.compute_core(r, c))))
+            .collect();
+        (shims, cores)
+    }
+
+    #[test]
+    fn full_stream_programs_everything() {
+        let t = Tiling::paper(ProblemSize::new(256, 768, 2304)).unwrap();
+        let words = build_instruction_stream(&t);
+        let (mut shims, mut cores) = fresh_device();
+        let stats = execute_stream(&words, &mut shims, &mut cores).unwrap();
+        assert_eq!(stats.shim_bds_written, 12);
+        assert_eq!(stats.params_written, 32);
+        assert_eq!(stats.syncs, 1);
+        for s in &shims {
+            s.ready().unwrap();
+        }
+        let (k_tiles, out_tiles) = t.runtime_params();
+        for c in &cores {
+            assert_eq!(c.param(PARAM_K_TILES), k_tiles);
+            assert_eq!(c.param(PARAM_OUT_TILES), out_tiles);
+        }
+    }
+
+    #[test]
+    fn switching_sizes_rewrites_shims_only() {
+        let t1 = Tiling::paper(ProblemSize::new(256, 768, 2304)).unwrap();
+        let t2 = Tiling::paper(ProblemSize::new(256, 3072, 768)).unwrap();
+        let (mut shims, mut cores) = fresh_device();
+        execute_stream(&build_instruction_stream(&t1), &mut shims, &mut cores).unwrap();
+        let a_before = shims[0].a.clone();
+        execute_stream(&build_instruction_stream(&t2), &mut shims, &mut cores).unwrap();
+        assert_ne!(shims[0].a, a_before, "shim programming must change");
+        let (k2, o2) = t2.runtime_params();
+        assert_eq!(cores[5].param(PARAM_K_TILES), k2);
+        assert_eq!(cores[5].param(PARAM_OUT_TILES), o2);
+    }
+
+    #[test]
+    fn bad_column_rejected() {
+        use crate::npu::dma::BufferDescriptor;
+        use crate::npu::isa::{encode, Inst, Matrix};
+        let words = encode(&[Inst::ShimBd {
+            col: 7,
+            matrix: Matrix::A,
+            repeat: 1,
+            bd: BufferDescriptor::linear(0, 4),
+        }]);
+        let (mut shims, mut cores) = fresh_device();
+        assert!(execute_stream(&words, &mut shims, &mut cores).is_err());
+    }
+}

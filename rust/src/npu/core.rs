@@ -1,0 +1,126 @@
+//! Compute core ("AI Engine") state.
+//!
+//! A compute core holds 64 KB of local memory (L1), the loaded kernel
+//! program, and — per the paper's design — **two runtime parameters** read
+//! from memory before each GEMM: the number of tiles to accumulate (K/k)
+//! and the number of output tiles to produce before re-reading parameters
+//! (section VI-D). The functional datapath lives in [`super::vmac`]; this
+//! struct owns per-core bookkeeping and capacity checks.
+
+use crate::util::error::{Error, Result};
+
+use super::grid::{CoreId, L1_BYTES};
+use super::locks::{LockBank, LOCKS_PER_CORE};
+
+/// Runtime parameter indices (the two words the command processor writes).
+pub const PARAM_K_TILES: usize = 0;
+pub const PARAM_OUT_TILES: usize = 1;
+pub const NUM_PARAMS: usize = 2;
+
+/// One AI Engine compute core.
+#[derive(Debug, Clone)]
+pub struct ComputeCore {
+    pub id: CoreId,
+    /// Name of the loaded kernel object (from the static config).
+    pub program: Option<String>,
+    /// L1 bytes reserved by the loaded design's buffers.
+    pub reserved_l1: usize,
+    /// The two runtime parameters.
+    params: [u32; NUM_PARAMS],
+    pub locks: LockBank,
+    /// Telemetry.
+    pub vmacs_issued: u64,
+    pub stall_cycles: u64,
+    pub busy_cycles: u64,
+}
+
+impl ComputeCore {
+    pub fn new(id: CoreId) -> ComputeCore {
+        ComputeCore {
+            id,
+            program: None,
+            reserved_l1: 0,
+            params: [0; NUM_PARAMS],
+            locks: LockBank::new(LOCKS_PER_CORE),
+            vmacs_issued: 0,
+            stall_cycles: 0,
+            busy_cycles: 0,
+        }
+    }
+
+    /// Load a kernel program and reserve its L1 buffers (double-buffered
+    /// A', B', C' tiles). Fails if the footprint exceeds 64 KB.
+    pub fn load_program(&mut self, name: &str, l1_bytes: usize) -> Result<()> {
+        if l1_bytes > L1_BYTES {
+            return Err(Error::npu(format!(
+                "kernel '{name}' needs {l1_bytes} B of L1, core has {L1_BYTES}"
+            )));
+        }
+        self.program = Some(name.to_string());
+        self.reserved_l1 = l1_bytes;
+        Ok(())
+    }
+
+    pub fn write_param(&mut self, idx: usize, value: u32) -> Result<()> {
+        if idx >= NUM_PARAMS {
+            return Err(Error::npu(format!("runtime param index {idx} out of range")));
+        }
+        self.params[idx] = value;
+        Ok(())
+    }
+
+    pub fn param(&self, idx: usize) -> u32 {
+        self.params[idx]
+    }
+
+    /// Whether the core is ready to run a GEMM: program loaded and both
+    /// parameters non-zero.
+    pub fn ready(&self) -> Result<()> {
+        if self.program.is_none() {
+            return Err(Error::npu(format!("core {:?} has no program loaded", self.id)));
+        }
+        if self.params[PARAM_K_TILES] == 0 || self.params[PARAM_OUT_TILES] == 0 {
+            return Err(Error::npu(format!(
+                "core {:?} runtime params not written ({:?})",
+                self.id, self.params
+            )));
+        }
+        Ok(())
+    }
+
+    pub fn record_issue(&mut self, vmacs: u64, stalls: u64, busy: u64) {
+        self.vmacs_issued += vmacs;
+        self.stall_cycles += stalls;
+        self.busy_cycles += busy;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::npu::grid::PARTITION;
+
+    #[test]
+    fn program_must_fit_l1() {
+        let mut c = ComputeCore::new(PARTITION.compute_core(0, 0));
+        assert!(c.load_program("gemm", 64 * 1024).is_ok());
+        assert!(c.load_program("too-big", 64 * 1024 + 1).is_err());
+    }
+
+    #[test]
+    fn readiness_requires_program_and_params() {
+        let mut c = ComputeCore::new(PARTITION.compute_core(1, 2));
+        assert!(c.ready().is_err());
+        c.load_program("gemm", 40968).unwrap();
+        assert!(c.ready().is_err());
+        c.write_param(PARAM_K_TILES, 12).unwrap();
+        c.write_param(PARAM_OUT_TILES, 18).unwrap();
+        assert!(c.ready().is_ok());
+    }
+
+    #[test]
+    fn param_bounds() {
+        let mut c = ComputeCore::new(PARTITION.compute_core(0, 1));
+        assert!(c.write_param(2, 1).is_err());
+    }
+}

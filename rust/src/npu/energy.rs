@@ -1,0 +1,54 @@
+//! NPU power states for the energy model.
+//!
+//! The paper measures whole-laptop power via the battery driver at 4 Hz;
+//! our substitute integrates modeled component power over modeled/measured
+//! time (rust/src/power/ holds the CPU + platform side; this file owns the
+//! NPU's own draw).
+
+/// NPU power draw by state, in Watts.
+#[derive(Debug, Clone)]
+pub struct NpuPower {
+    /// Fully idle (configured, clock-gated).
+    pub idle_w: f64,
+    /// Streaming + computing (XDNA's headline efficiency point: a few W
+    /// for multi-TOPS — the reason FLOP/Ws improves even when raw speedup
+    /// is modest).
+    pub active_w: f64,
+    /// During reconfiguration (command processor + config interconnect).
+    pub reconfig_w: f64,
+}
+
+impl Default for NpuPower {
+    fn default() -> Self {
+        NpuPower {
+            idle_w: 0.3,
+            active_w: 2.5,
+            reconfig_w: 1.2,
+        }
+    }
+}
+
+impl NpuPower {
+    /// Energy (J) for an interval divided into active/idle/reconfig time.
+    pub fn energy_j(&self, active_s: f64, idle_s: f64, reconfig_s: f64) -> f64 {
+        self.active_w * active_s + self.idle_w * idle_s + self.reconfig_w * reconfig_s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn energy_integrates() {
+        let p = NpuPower::default();
+        let e = p.energy_j(2.0, 1.0, 0.5);
+        assert!((e - (2.0 * 2.5 + 0.3 + 0.6)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn active_draws_more_than_idle() {
+        let p = NpuPower::default();
+        assert!(p.active_w > p.idle_w);
+    }
+}

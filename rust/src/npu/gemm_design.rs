@@ -1,0 +1,324 @@
+//! The GEMM dataflow design generator — our IRON-script analogue.
+//!
+//! The paper's Python IRON script, parameterized by (M, K, N, m, k, n),
+//! emits (a) a static configuration and (b) a per-problem-size command-
+//! processor instruction stream. This module is that generator:
+//!
+//! * [`build_static_config`] — kernel placement, L1/L2 buffer plans, and
+//!   the switch-box routes of Figure 4 (shim→memcore, memcore→compute
+//!   row multicast for A, memcore→compute column for B, and the C return
+//!   path). Built once; identical for every problem size.
+//! * [`build_instruction_stream`] — the per-size stream: three shim BDs
+//!   per column implementing the Figure 4/5 tiling + layout transforms,
+//!   and the two runtime parameters per compute core.
+
+use crate::gemm::tiling::{TileShape, Tiling, GRID_COLS, GRID_ROWS};
+
+use super::config::StaticConfig;
+use super::dma::{BufferDescriptor, Dim};
+use super::grid::PARTITION;
+use super::isa::{encode, Inst, Matrix};
+use super::memcore::L2Plan;
+use super::stream::{Endpoint, Route, RouteKind, RouteTable};
+
+/// Build the static configuration for a tile shape (the xclbin).
+pub fn build_static_config(tiles: TileShape) -> StaticConfig {
+    StaticConfig {
+        id: format!("gemm-{}x{}x{}", tiles.m, tiles.k, tiles.n),
+        kernel_name: "gemm_bf16_acc".into(),
+        tiles,
+        l1_bytes: tiles.l1_footprint_bytes(),
+        l2_plan: L2Plan::for_tiles(&tiles),
+        routes: build_routes(),
+    }
+}
+
+/// Variant for the full-reconfiguration baseline: bakes the problem size
+/// into the config id, so switching sizes forces an xclbin reload.
+pub fn build_static_config_for_size(tiles: TileShape, t: &Tiling) -> StaticConfig {
+    let mut cfg = build_static_config(tiles);
+    cfg.id = format!("{}-{}", cfg.id, t.size);
+    cfg
+}
+
+/// The Figure-4 route set over the 4×4 partition.
+pub fn build_routes() -> RouteTable {
+    let mut rt = RouteTable::new();
+    let p = PARTITION;
+    for col in 0..GRID_COLS {
+        // Shim -> memory core (two ports: A-stream and B-stream).
+        for port in 0..2u8 {
+            rt.add(Route {
+                src: Endpoint { core: p.shim_core(col), port },
+                dsts: vec![Endpoint { core: p.memory_core(col), port }],
+                kind: RouteKind::Circuit,
+            })
+            .expect("shim->mem route");
+        }
+        // Memory core col i -> A multicast across compute row i (port 0).
+        rt.add(Route {
+            src: Endpoint { core: p.memory_core(col), port: 2 },
+            dsts: (0..GRID_COLS)
+                .map(|c| Endpoint { core: p.compute_core(col, c), port: 0 })
+                .collect(),
+            kind: RouteKind::Circuit,
+        })
+        .expect("A multicast route");
+        // Memory core col i -> B distribution down compute column i (port 1).
+        rt.add(Route {
+            src: Endpoint { core: p.memory_core(col), port: 3 },
+            dsts: (0..GRID_ROWS)
+                .map(|r| Endpoint { core: p.compute_core(r, col), port: 1 })
+                .collect(),
+            kind: RouteKind::Circuit,
+        })
+        .expect("B column route");
+        // Compute column i -> memory core i C-return (packet-switched: the
+        // four cores in a column share the return path).
+        rt.add(Route {
+            src: Endpoint { core: p.compute_core(0, col), port: 2 },
+            dsts: vec![Endpoint { core: p.memory_core(col), port: 4 }],
+            kind: RouteKind::Packet,
+        })
+        .expect("C return route");
+        // Memory core -> shim writeback.
+        rt.add(Route {
+            src: Endpoint { core: p.memory_core(col), port: 5 },
+            dsts: vec![Endpoint { core: p.shim_core(col), port: 2 }],
+            kind: RouteKind::Packet,
+        })
+        .expect("mem->shim route");
+    }
+    rt
+}
+
+/// The shim-column-i BD for input A (paper section VI-B): tile-rows
+/// i, i+4, i+8, ... of the row-major M_padded×K matrix, each tiled into
+/// k-column-wide blocks, emitted tile-contiguous. 4-D addressing:
+///   [j over tile-row groups] [kk over K/k] [row in tile] [col in tile]
+/// The whole sequence repeats N/(4n) times (hardware repeat count).
+pub fn shim_a_bd(t: &Tiling, col: usize) -> (BufferDescriptor, u32) {
+    let TileShape { m, k, .. } = t.tiles;
+    let big_k = t.size.k;
+    let bd = BufferDescriptor::with_dims(
+        (col * m * big_k) as i64,
+        vec![
+            Dim {
+                wrap: (t.m_tiles() / GRID_COLS) as u32,
+                step: (GRID_COLS * m * big_k) as i64,
+            },
+            Dim {
+                wrap: t.k_tiles() as u32,
+                step: k as i64,
+            },
+            Dim {
+                wrap: m as u32,
+                step: big_k as i64,
+            },
+            Dim {
+                wrap: k as u32,
+                step: 1,
+            },
+        ],
+    );
+    let repeat = (t.n_tiles() / GRID_COLS) as u32;
+    (bd, repeat)
+}
+
+/// The shim-column-i BD for input B: tile-columns i, i+4, ... of the
+/// row-major K×N matrix, tiled into k-row-tall blocks, tile-contiguous.
+/// Repeats M_padded/(4m) times.
+pub fn shim_b_bd(t: &Tiling, col: usize) -> (BufferDescriptor, u32) {
+    let TileShape { m, k, n } = t.tiles;
+    let big_n = t.size.n;
+    let bd = BufferDescriptor::with_dims(
+        (col * n) as i64,
+        vec![
+            Dim {
+                wrap: (t.n_tiles() / GRID_COLS) as u32,
+                step: (GRID_COLS * n) as i64,
+            },
+            Dim {
+                wrap: t.k_tiles() as u32,
+                step: (k * big_n) as i64,
+            },
+            Dim {
+                wrap: k as u32,
+                step: big_n as i64,
+            },
+            Dim {
+                wrap: n as u32,
+                step: 1,
+            },
+        ],
+    );
+    let repeat = (t.m_tiles() / GRID_COLS) as u32;
+    let _ = m;
+    (bd, repeat)
+}
+
+/// The shim-column-i BD for output C: writes back m×n tiles into tile-rows
+/// i, i+4, ... of the row-major M_padded×N matrix (each shim owns the same
+/// quarter of rows it streamed for A).
+pub fn shim_c_bd(t: &Tiling, col: usize) -> (BufferDescriptor, u32) {
+    let TileShape { m, n, .. } = t.tiles;
+    let big_n = t.size.n;
+    let bd = BufferDescriptor::with_dims(
+        (col * m * big_n) as i64,
+        vec![
+            Dim {
+                wrap: (t.m_tiles() / GRID_COLS) as u32,
+                step: (GRID_COLS * m * big_n) as i64,
+            },
+            Dim {
+                wrap: t.n_tiles() as u32,
+                step: n as i64,
+            },
+            Dim {
+                wrap: m as u32,
+                step: big_n as i64,
+            },
+            Dim {
+                wrap: n as u32,
+                step: 1,
+            },
+        ],
+    );
+    (bd, 1)
+}
+
+/// Build the per-problem-size instruction stream (the `insts.txt`): shim
+/// BDs for all four columns plus the two runtime parameters for all 16
+/// compute cores, terminated by a sync barrier.
+pub fn build_instructions(t: &Tiling) -> Vec<Inst> {
+    let mut insts = Vec::new();
+    for col in 0..GRID_COLS {
+        let (a_bd, a_rep) = shim_a_bd(t, col);
+        let (b_bd, b_rep) = shim_b_bd(t, col);
+        let (c_bd, c_rep) = shim_c_bd(t, col);
+        insts.push(Inst::ShimBd { col: col as u32, matrix: Matrix::A, repeat: a_rep, bd: a_bd });
+        insts.push(Inst::ShimBd { col: col as u32, matrix: Matrix::B, repeat: b_rep, bd: b_bd });
+        insts.push(Inst::ShimBd { col: col as u32, matrix: Matrix::C, repeat: c_rep, bd: c_bd });
+    }
+    let (k_tiles, out_tiles) = t.runtime_params();
+    for r in 0..GRID_ROWS {
+        for c in 0..GRID_COLS {
+            insts.push(Inst::WriteParam { col: c as u32, row: r as u32, idx: 0, value: k_tiles });
+            insts.push(Inst::WriteParam { col: c as u32, row: r as u32, idx: 1, value: out_tiles });
+        }
+    }
+    insts.push(Inst::Sync);
+    insts
+}
+
+/// Encoded word stream for a tiling (what the host preloads per size).
+pub fn build_instruction_stream(t: &Tiling) -> Vec<u32> {
+    encode(&build_instructions(t))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::sizes::ProblemSize;
+    use crate::gemm::tiling::PAPER_TILES;
+    use crate::npu::isa::decode;
+
+    fn tiling(m: usize, k: usize, n: usize) -> Tiling {
+        Tiling::paper(ProblemSize::new(m, k, n)).unwrap()
+    }
+
+    #[test]
+    fn routes_cover_partition() {
+        let rt = build_routes();
+        // 6 routes per column.
+        assert_eq!(rt.len(), 6 * GRID_COLS);
+        // Every compute core's A port (0) and B port (1) is fed.
+        for r in 0..GRID_ROWS {
+            for c in 0..GRID_COLS {
+                let core = PARTITION.compute_core(r, c);
+                assert!(rt.feeding(Endpoint { core, port: 0 }).is_some(), "A @ {core:?}");
+                assert!(rt.feeding(Endpoint { core, port: 1 }).is_some(), "B @ {core:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn a_bds_cover_matrix_once_per_repeat() {
+        let t = tiling(256, 128, 128);
+        let mut seen = vec![0u32; t.m_padded * t.size.k];
+        for col in 0..GRID_COLS {
+            let (bd, _rep) = shim_a_bd(&t, col);
+            for addr in bd.addresses().unwrap() {
+                seen[addr as usize] += 1;
+            }
+        }
+        assert!(seen.iter().all(|&c| c == 1), "each A element streamed once per repeat");
+    }
+
+    #[test]
+    fn a_bd_emits_tiles_contiguously() {
+        // For a 256x128 A with paper tiles, shim 0's first tile is rows
+        // 0..64 x cols 0..64 in row-major order.
+        let t = tiling(256, 128, 128);
+        let (bd, _) = shim_a_bd(&t, 0);
+        let addrs: Vec<i64> = bd.addresses().unwrap().take(130).collect();
+        assert_eq!(addrs[0], 0);
+        assert_eq!(addrs[63], 63);
+        assert_eq!(addrs[64], 128); // next row of the tile, stride K=128
+        assert_eq!(addrs[127], 191);
+        assert_eq!(addrs[128], 256);
+    }
+
+    #[test]
+    fn b_bds_cover_matrix() {
+        let t = tiling(256, 128, 256);
+        let mut seen = vec![0u32; t.size.k * t.size.n];
+        for col in 0..GRID_COLS {
+            let (bd, _rep) = shim_b_bd(&t, col);
+            for addr in bd.addresses().unwrap() {
+                seen[addr as usize] += 1;
+            }
+        }
+        assert!(seen.iter().all(|&c| c == 1));
+    }
+
+    #[test]
+    fn c_bds_cover_output() {
+        let t = tiling(256, 128, 256);
+        let mut seen = vec![0u32; t.m_padded * t.size.n];
+        for col in 0..GRID_COLS {
+            let (bd, rep) = shim_c_bd(&t, col);
+            assert_eq!(rep, 1);
+            for addr in bd.addresses().unwrap() {
+                seen[addr as usize] += 1;
+            }
+        }
+        assert!(seen.iter().all(|&c| c == 1));
+    }
+
+    #[test]
+    fn repeats_match_paper_formulas() {
+        let t = tiling(512, 128, 256);
+        let (_, a_rep) = shim_a_bd(&t, 0);
+        let (_, b_rep) = shim_b_bd(&t, 0);
+        assert_eq!(a_rep as usize, t.n_tiles() / GRID_COLS); // N/(4n)
+        assert_eq!(b_rep as usize, t.m_tiles() / GRID_COLS); // M/(4m)
+    }
+
+    #[test]
+    fn instruction_stream_roundtrips_and_is_small() {
+        let t = tiling(256, 768, 2304);
+        let words = build_instruction_stream(&t);
+        let insts = decode(&words).unwrap();
+        // 12 shim BDs + 32 params + sync.
+        assert_eq!(insts.len(), 12 + 32 + 1);
+        assert!(words.len() < 400, "{} words", words.len());
+    }
+
+    #[test]
+    fn static_config_fits_hardware() {
+        let cfg = build_static_config(PAPER_TILES);
+        assert!(cfg.l1_bytes <= crate::npu::grid::L1_BYTES);
+        assert!(cfg.l2_plan.total_bytes() <= crate::npu::grid::L2_BYTES);
+    }
+}

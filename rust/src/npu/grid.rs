@@ -1,0 +1,141 @@
+//! XDNA (Phoenix) core grid topology.
+//!
+//! The first-generation XDNA NPU arranges cores in five columns; four
+//! columns have a shim core with direct main-memory access. Per paper
+//! Figure 1 (bottom to top): shim row, memory-core row, then four rows of
+//! compute cores. Like the paper we use the regular 4×4 partition with
+//! shims, identifying cores by zero-indexed (col, row) from the bottom
+//! left; compute rows are physical rows 2..=5 ("row 2 is the lowest row of
+//! compute cores").
+
+/// Kinds of cores in the XDNA grid.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CoreKind {
+    /// Interface to main memory (L3); one per column in columns 0..4.
+    Shim,
+    /// 512 KB memory core (L2).
+    Memory,
+    /// AI Engine VLIW compute core with 64 KB local memory (L1).
+    Compute,
+}
+
+/// Physical core coordinates: column, then row, zero-indexed bottom-left.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct CoreId {
+    pub col: usize,
+    pub row: usize,
+}
+
+impl CoreId {
+    pub const fn new(col: usize, row: usize) -> Self {
+        CoreId { col, row }
+    }
+}
+
+/// Physical grid constants for Phoenix.
+pub const TOTAL_COLS: usize = 5;
+/// Columns that have a shim core (direct L3 access).
+pub const SHIM_COLS: usize = 4;
+/// Physical row indices.
+pub const SHIM_ROW: usize = 0;
+pub const MEM_ROW: usize = 1;
+pub const FIRST_COMPUTE_ROW: usize = 2;
+pub const COMPUTE_ROWS: usize = 4;
+
+/// Local memory sizes.
+pub const L1_BYTES: usize = 64 * 1024;
+pub const L2_BYTES: usize = 512 * 1024;
+
+/// The 4×4 partition the paper (and we) use.
+#[derive(Debug, Clone, Copy)]
+pub struct Partition {
+    pub cols: usize,
+    pub rows: usize,
+}
+
+pub const PARTITION: Partition = Partition { cols: 4, rows: 4 };
+
+impl Partition {
+    pub fn num_compute_cores(&self) -> usize {
+        self.cols * self.rows
+    }
+
+    /// Physical id of the compute core at partition-local (row r, col c).
+    pub fn compute_core(&self, r: usize, c: usize) -> CoreId {
+        assert!(r < self.rows && c < self.cols);
+        CoreId::new(c, FIRST_COMPUTE_ROW + r)
+    }
+
+    /// Physical id of the memory core serving partition column c.
+    pub fn memory_core(&self, c: usize) -> CoreId {
+        assert!(c < self.cols);
+        CoreId::new(c, MEM_ROW)
+    }
+
+    /// Physical id of the shim core in partition column c.
+    pub fn shim_core(&self, c: usize) -> CoreId {
+        assert!(c < self.cols);
+        CoreId::new(c, SHIM_ROW)
+    }
+
+    /// All compute core ids, row-major over (r, c).
+    pub fn compute_cores(&self) -> Vec<CoreId> {
+        let mut v = Vec::with_capacity(self.num_compute_cores());
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                v.push(self.compute_core(r, c));
+            }
+        }
+        v
+    }
+}
+
+/// Kind of the core at a physical coordinate (None if out of the grid).
+pub fn kind_at(id: CoreId) -> Option<CoreKind> {
+    if id.col >= TOTAL_COLS || id.row >= FIRST_COMPUTE_ROW + COMPUTE_ROWS {
+        return None;
+    }
+    match id.row {
+        SHIM_ROW => {
+            if id.col < SHIM_COLS {
+                Some(CoreKind::Shim)
+            } else {
+                // Column 4 has no shim: its L3 requests route via columns 0-3.
+                None
+            }
+        }
+        MEM_ROW => Some(CoreKind::Memory),
+        _ => Some(CoreKind::Compute),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn partition_is_4x4() {
+        assert_eq!(PARTITION.num_compute_cores(), 16);
+        assert_eq!(PARTITION.compute_cores().len(), 16);
+    }
+
+    #[test]
+    fn compute_rows_start_at_2() {
+        assert_eq!(PARTITION.compute_core(0, 0), CoreId::new(0, 2));
+        assert_eq!(PARTITION.compute_core(3, 3), CoreId::new(3, 5));
+    }
+
+    #[test]
+    fn column_4_has_no_shim() {
+        assert_eq!(kind_at(CoreId::new(4, 0)), None);
+        assert_eq!(kind_at(CoreId::new(3, 0)), Some(CoreKind::Shim));
+        assert_eq!(kind_at(CoreId::new(4, 1)), Some(CoreKind::Memory));
+        assert_eq!(kind_at(CoreId::new(4, 3)), Some(CoreKind::Compute));
+    }
+
+    #[test]
+    fn out_of_grid_is_none() {
+        assert_eq!(kind_at(CoreId::new(5, 0)), None);
+        assert_eq!(kind_at(CoreId::new(0, 6)), None);
+    }
+}

@@ -1,0 +1,252 @@
+//! Command-processor instruction streams (the `insts.txt` analogue).
+//!
+//! The paper preloads "one instruction stream for the NPU command processor
+//! per problem size" (section V-A); the stream reconfigures only the shim
+//! (L3) DMAs and writes two runtime parameters into each core. We encode
+//! streams as `u32` words with a tiny ISA that the command processor
+//! ([`super::cmdproc`]) decodes and applies to device state.
+//!
+//! Word-level format (little-endian u32 words):
+//!   [op | payload...]
+//!   op 0x01 WRITE_PARAM : col, row, idx, value
+//!   op 0x02 SHIM_BD     : col, matrix(0=A,1=B,2=C), repeat,
+//!                         base_lo, base_hi, ndims, (wrap, step_i32)*ndims
+//!   op 0x03 SYNC        : (no payload) barrier marker
+//!   op 0x00 END         : end of stream
+
+use crate::util::error::{Error, Result};
+
+use super::dma::{BufferDescriptor, Dim};
+
+/// Which matrix a shim BD serves.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Matrix {
+    A = 0,
+    B = 1,
+    C = 2,
+}
+
+impl Matrix {
+    fn from_u32(v: u32) -> Result<Matrix> {
+        match v {
+            0 => Ok(Matrix::A),
+            1 => Ok(Matrix::B),
+            2 => Ok(Matrix::C),
+            _ => Err(Error::npu(format!("bad matrix code {v}"))),
+        }
+    }
+}
+
+/// Decoded instruction.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Inst {
+    /// Write a runtime parameter word into a compute core's memory.
+    WriteParam {
+        col: u32,
+        row: u32,
+        idx: u32,
+        value: u32,
+    },
+    /// Program one shim DMA buffer descriptor (repeated `repeat` times).
+    ShimBd {
+        col: u32,
+        matrix: Matrix,
+        repeat: u32,
+        bd: BufferDescriptor,
+    },
+    /// Barrier: wait for outstanding transfers.
+    Sync,
+}
+
+const OP_END: u32 = 0x00;
+const OP_WRITE_PARAM: u32 = 0x01;
+const OP_SHIM_BD: u32 = 0x02;
+const OP_SYNC: u32 = 0x03;
+
+/// Encode a list of instructions into a word stream.
+pub fn encode(insts: &[Inst]) -> Vec<u32> {
+    let mut w = Vec::new();
+    for inst in insts {
+        match inst {
+            Inst::WriteParam {
+                col,
+                row,
+                idx,
+                value,
+            } => {
+                w.extend_from_slice(&[OP_WRITE_PARAM, *col, *row, *idx, *value]);
+            }
+            Inst::ShimBd {
+                col,
+                matrix,
+                repeat,
+                bd,
+            } => {
+                w.push(OP_SHIM_BD);
+                w.push(*col);
+                w.push(*matrix as u32);
+                w.push(*repeat);
+                let base = bd.base_words as u64;
+                w.push((base & 0xFFFF_FFFF) as u32);
+                w.push((base >> 32) as u32);
+                w.push(bd.dims.len() as u32);
+                for d in &bd.dims {
+                    w.push(d.wrap);
+                    w.push(d.step as i32 as u32);
+                }
+            }
+            Inst::Sync => w.push(OP_SYNC),
+        }
+    }
+    w.push(OP_END);
+    w
+}
+
+/// Decode a word stream back into instructions.
+pub fn decode(words: &[u32]) -> Result<Vec<Inst>> {
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    let next = |i: &mut usize| -> Result<u32> {
+        let v = words
+            .get(*i)
+            .copied()
+            .ok_or_else(|| Error::npu("truncated instruction stream"))?;
+        *i += 1;
+        Ok(v)
+    };
+    loop {
+        let op = next(&mut i)?;
+        match op {
+            OP_END => return Ok(out),
+            OP_WRITE_PARAM => {
+                let col = next(&mut i)?;
+                let row = next(&mut i)?;
+                let idx = next(&mut i)?;
+                let value = next(&mut i)?;
+                out.push(Inst::WriteParam {
+                    col,
+                    row,
+                    idx,
+                    value,
+                });
+            }
+            OP_SHIM_BD => {
+                let col = next(&mut i)?;
+                let matrix = Matrix::from_u32(next(&mut i)?)?;
+                let repeat = next(&mut i)?;
+                let lo = next(&mut i)? as u64;
+                let hi = next(&mut i)? as u64;
+                let base_words = ((hi << 32) | lo) as i64;
+                let ndims = next(&mut i)? as usize;
+                if ndims == 0 || ndims > 4 {
+                    return Err(Error::npu(format!("bad BD ndims {ndims}")));
+                }
+                let mut dims = Vec::with_capacity(ndims);
+                for _ in 0..ndims {
+                    let wrap = next(&mut i)?;
+                    let step = next(&mut i)? as i32 as i64;
+                    dims.push(Dim { wrap, step });
+                }
+                out.push(Inst::ShimBd {
+                    col,
+                    matrix,
+                    repeat,
+                    bd: BufferDescriptor::with_dims(base_words, dims),
+                });
+            }
+            OP_SYNC => out.push(Inst::Sync),
+            other => return Err(Error::npu(format!("bad opcode {other:#x} at word {i}"))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_insts() -> Vec<Inst> {
+        vec![
+            Inst::WriteParam {
+                col: 2,
+                row: 3,
+                idx: 0,
+                value: 12,
+            },
+            Inst::ShimBd {
+                col: 1,
+                matrix: Matrix::A,
+                repeat: 18,
+                bd: BufferDescriptor::with_dims(
+                    4096,
+                    vec![
+                        Dim { wrap: 3, step: 196608 },
+                        Dim { wrap: 12, step: 64 },
+                        Dim { wrap: 64, step: 768 },
+                        Dim { wrap: 64, step: 1 },
+                    ],
+                ),
+            },
+            Inst::Sync,
+        ]
+    }
+
+    #[test]
+    fn roundtrip() {
+        let insts = sample_insts();
+        let words = encode(&insts);
+        let back = decode(&words).unwrap();
+        assert_eq!(insts, back);
+    }
+
+    #[test]
+    fn truncated_stream_errors() {
+        let mut words = encode(&sample_insts());
+        words.truncate(words.len() / 2);
+        assert!(decode(&words).is_err());
+    }
+
+    #[test]
+    fn bad_opcode_errors() {
+        assert!(decode(&[0x99, 0x00]).is_err());
+    }
+
+    #[test]
+    fn negative_steps_roundtrip() {
+        let insts = vec![Inst::ShimBd {
+            col: 0,
+            matrix: Matrix::C,
+            repeat: 1,
+            bd: BufferDescriptor::with_dims(0, vec![Dim { wrap: 4, step: -8 }]),
+        }];
+        let back = decode(&encode(&insts)).unwrap();
+        assert_eq!(insts, back);
+    }
+
+    #[test]
+    fn stream_is_compact() {
+        // A realistic per-size stream (12 BDs + 32 params) stays small —
+        // the point of minimal reconfiguration.
+        let mut insts = Vec::new();
+        for col in 0..4u32 {
+            for m in [Matrix::A, Matrix::B, Matrix::C] {
+                insts.push(Inst::ShimBd {
+                    col,
+                    matrix: m,
+                    repeat: 4,
+                    bd: BufferDescriptor::with_dims(
+                        0,
+                        vec![Dim { wrap: 16, step: 1 }, Dim { wrap: 8, step: 2 }],
+                    ),
+                });
+            }
+        }
+        for col in 0..4u32 {
+            for row in 0..4u32 {
+                insts.push(Inst::WriteParam { col, row, idx: 0, value: 1 });
+                insts.push(Inst::WriteParam { col, row, idx: 1, value: 2 });
+            }
+        }
+        let words = encode(&insts);
+        assert!(words.len() < 512, "stream of {} words", words.len());
+    }
+}

@@ -1,0 +1,105 @@
+//! Memory core (L2) state: 512 KB staging buffers between shims and the
+//! compute grid.
+//!
+//! The paper's design stages blocks of four A tiles (m×4k) and four B tiles
+//! (4k×n) per memory core, plus a column-join buffer for C (m×4n), all
+//! double-buffered. Capacity checks here guarantee the generated design is
+//! physically realizable.
+
+use crate::gemm::tiling::TileShape;
+use crate::util::error::{Error, Result};
+
+use super::grid::{CoreId, L2_BYTES};
+
+/// L2 buffer reservation of the GEMM design for one memory core.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct L2Plan {
+    /// bf16 bytes for the staged A block (m × 4k), double-buffered.
+    pub a_block_bytes: usize,
+    /// bf16 bytes for the staged B block (4k × n), double-buffered.
+    pub b_block_bytes: usize,
+    /// f32 bytes for the joined C block (m × 4n), double-buffered.
+    pub c_block_bytes: usize,
+}
+
+impl L2Plan {
+    /// Plan for the paper's design at a tile shape.
+    pub fn for_tiles(t: &TileShape) -> L2Plan {
+        L2Plan {
+            a_block_bytes: 2 * (t.m * 4 * t.k * 2),
+            b_block_bytes: 2 * (4 * t.k * t.n * 2),
+            c_block_bytes: 2 * (t.m * 4 * t.n * 4),
+        }
+    }
+
+    pub fn total_bytes(&self) -> usize {
+        self.a_block_bytes + self.b_block_bytes + self.c_block_bytes
+    }
+}
+
+/// One L2 memory core.
+#[derive(Debug, Clone)]
+pub struct MemoryCore {
+    pub id: CoreId,
+    pub plan: Option<L2Plan>,
+    /// Telemetry: bytes staged through this core.
+    pub bytes_in: u64,
+    pub bytes_out: u64,
+}
+
+impl MemoryCore {
+    pub fn new(id: CoreId) -> MemoryCore {
+        MemoryCore {
+            id,
+            plan: None,
+            bytes_in: 0,
+            bytes_out: 0,
+        }
+    }
+
+    /// Reserve the design's buffers; fails if over 512 KB.
+    pub fn load_plan(&mut self, plan: L2Plan) -> Result<()> {
+        if plan.total_bytes() > L2_BYTES {
+            return Err(Error::npu(format!(
+                "L2 plan needs {} B, memory core has {L2_BYTES}",
+                plan.total_bytes()
+            )));
+        }
+        self.plan = Some(plan);
+        Ok(())
+    }
+
+    pub fn record_traffic(&mut self, bytes_in: u64, bytes_out: u64) {
+        self.bytes_in += bytes_in;
+        self.bytes_out += bytes_out;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::tiling::PAPER_TILES;
+    use crate::npu::grid::PARTITION;
+
+    #[test]
+    fn paper_plan_fits_l2() {
+        let plan = L2Plan::for_tiles(&PAPER_TILES);
+        // A: 2*(64*256*2)=65536; B: 2*(256*32*2)=32768; C: 2*(64*128*4)=65536.
+        assert_eq!(plan.a_block_bytes, 65536);
+        assert_eq!(plan.b_block_bytes, 32768);
+        assert_eq!(plan.c_block_bytes, 65536);
+        assert!(plan.total_bytes() <= L2_BYTES);
+    }
+
+    #[test]
+    fn oversized_plan_rejected() {
+        let mut mc = MemoryCore::new(PARTITION.memory_core(0));
+        let plan = L2Plan {
+            a_block_bytes: L2_BYTES,
+            b_block_bytes: 1,
+            c_block_bytes: 0,
+        };
+        assert!(mc.load_plan(plan).is_err());
+        assert!(mc.load_plan(L2Plan::for_tiles(&PAPER_TILES)).is_ok());
+    }
+}

@@ -1,0 +1,114 @@
+//! Shim core (L3 interface) state.
+//!
+//! Shims are the only cores that touch main memory. The paper's key design
+//! decision is that **only shim DMA programming changes between problem
+//! sizes**; each per-size instruction stream writes three buffer
+//! descriptors (A in, B in, C out) into each shim.
+
+use crate::util::error::{Error, Result};
+
+use super::dma::BufferDescriptor;
+use super::grid::CoreId;
+use super::isa::Matrix;
+
+/// Shim DMA programming for one matrix: a buffer descriptor plus its
+/// hardware repeat count (the paper repeats A tile-rows N/4n times and B
+/// tile-columns M/4m times).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShimTransfer {
+    pub bd: BufferDescriptor,
+    pub repeat: u32,
+}
+
+impl ShimTransfer {
+    /// Total f32 words this transfer moves including repeats.
+    pub fn total_words(&self) -> u64 {
+        self.bd.len_words() * self.repeat as u64
+    }
+}
+
+/// One shim core.
+#[derive(Debug, Clone)]
+pub struct ShimCore {
+    pub id: CoreId,
+    pub a: Option<ShimTransfer>,
+    pub b: Option<ShimTransfer>,
+    pub c: Option<ShimTransfer>,
+    /// Telemetry: L3 bytes moved through this shim.
+    pub bytes_moved: u64,
+}
+
+impl ShimCore {
+    pub fn new(id: CoreId) -> ShimCore {
+        ShimCore {
+            id,
+            a: None,
+            b: None,
+            c: None,
+            bytes_moved: 0,
+        }
+    }
+
+    /// Program one matrix's transfer (what an `Inst::ShimBd` applies).
+    pub fn program(&mut self, matrix: Matrix, transfer: ShimTransfer) {
+        match matrix {
+            Matrix::A => self.a = Some(transfer),
+            Matrix::B => self.b = Some(transfer),
+            Matrix::C => self.c = Some(transfer),
+        }
+    }
+
+    /// All three transfers must be programmed before a GEMM runs.
+    pub fn ready(&self) -> Result<()> {
+        if self.a.is_none() || self.b.is_none() || self.c.is_none() {
+            return Err(Error::npu(format!(
+                "shim {:?} not fully programmed (A:{} B:{} C:{})",
+                self.id,
+                self.a.is_some(),
+                self.b.is_some(),
+                self.c.is_some()
+            )));
+        }
+        Ok(())
+    }
+
+    /// Clear programming (full reconfiguration wipes shims too).
+    pub fn clear(&mut self) {
+        self.a = None;
+        self.b = None;
+        self.c = None;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::npu::dma::BufferDescriptor;
+    use crate::npu::grid::PARTITION;
+
+    fn transfer(words: u32, repeat: u32) -> ShimTransfer {
+        ShimTransfer {
+            bd: BufferDescriptor::linear(0, words),
+            repeat,
+        }
+    }
+
+    #[test]
+    fn readiness() {
+        let mut s = ShimCore::new(PARTITION.shim_core(0));
+        assert!(s.ready().is_err());
+        s.program(Matrix::A, transfer(16, 2));
+        s.program(Matrix::B, transfer(16, 1));
+        assert!(s.ready().is_err());
+        s.program(Matrix::C, transfer(8, 1));
+        assert!(s.ready().is_ok());
+        s.clear();
+        assert!(s.ready().is_err());
+    }
+
+    #[test]
+    fn repeat_multiplies_words() {
+        let t = transfer(100, 18);
+        assert_eq!(t.total_words(), 1800);
+    }
+}

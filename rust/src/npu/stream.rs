@@ -1,0 +1,185 @@
+//! Stream switch boxes and circuit routes.
+//!
+//! Cores talk through configurable interconnect switch boxes (the small
+//! grey boxes in paper Figure 1). The paper's design uses circuit-switched
+//! routes established once at initialization; the only thing that changes
+//! between problem sizes is the shim DMA programming, never the routes —
+//! this module's route table is therefore part of the static config.
+
+use std::collections::BTreeMap;
+
+use crate::util::error::{Error, Result};
+
+use super::grid::CoreId;
+
+/// A stream endpoint: a core plus a port index (cores have a small number
+/// of stream ports per direction).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Endpoint {
+    pub core: CoreId,
+    pub port: u8,
+}
+
+/// Route kinds supported by the switch boxes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RouteKind {
+    /// Dedicated circuit: full 32-bit/cycle bandwidth.
+    Circuit,
+    /// Packet-switched: shares bandwidth with other packet routes.
+    Packet,
+}
+
+/// One configured route from a source endpoint to one or more destinations
+/// (multicast is how a memory core feeds a whole row of compute cores).
+#[derive(Debug, Clone)]
+pub struct Route {
+    pub src: Endpoint,
+    pub dsts: Vec<Endpoint>,
+    pub kind: RouteKind,
+}
+
+/// Words per cycle per stream port (32-bit streams).
+pub const STREAM_WORDS_PER_CYCLE: u64 = 1;
+
+/// The route table of a loaded configuration.
+#[derive(Debug, Clone, Default)]
+pub struct RouteTable {
+    routes: Vec<Route>,
+    /// Destination -> route index, for conflict detection.
+    by_dst: BTreeMap<Endpoint, usize>,
+}
+
+impl RouteTable {
+    pub fn new() -> RouteTable {
+        RouteTable::default()
+    }
+
+    /// Add a route; a destination endpoint may only be fed by one route.
+    pub fn add(&mut self, route: Route) -> Result<usize> {
+        if route.dsts.is_empty() {
+            return Err(Error::npu("route with no destinations"));
+        }
+        let idx = self.routes.len();
+        for d in &route.dsts {
+            if self.by_dst.contains_key(d) {
+                return Err(Error::npu(format!(
+                    "endpoint {d:?} already driven by another route"
+                )));
+            }
+        }
+        for d in &route.dsts {
+            self.by_dst.insert(*d, idx);
+        }
+        self.routes.push(route);
+        Ok(idx)
+    }
+
+    pub fn len(&self) -> usize {
+        self.routes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.routes.is_empty()
+    }
+
+    pub fn routes(&self) -> &[Route] {
+        &self.routes
+    }
+
+    /// The route feeding an endpoint, if any.
+    pub fn feeding(&self, dst: Endpoint) -> Option<&Route> {
+        self.by_dst.get(&dst).map(|&i| &self.routes[i])
+    }
+
+    /// Cycles to move `words` over one route: multicast is free (all
+    /// destinations receive the same words), packet routes sharing a source
+    /// are not modeled individually — the timing model accounts for shim
+    /// bandwidth globally.
+    pub fn transfer_cycles(&self, words: u64) -> u64 {
+        words / STREAM_WORDS_PER_CYCLE
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::npu::grid::PARTITION;
+
+    fn ep(col: usize, row: usize, port: u8) -> Endpoint {
+        Endpoint {
+            core: CoreId::new(col, row),
+            port,
+        }
+    }
+
+    #[test]
+    fn add_and_lookup() {
+        let mut t = RouteTable::new();
+        let r = Route {
+            src: ep(0, 1, 0),
+            dsts: vec![ep(0, 2, 0), ep(1, 2, 0)],
+            kind: RouteKind::Circuit,
+        };
+        t.add(r).unwrap();
+        assert_eq!(t.len(), 1);
+        assert!(t.feeding(ep(0, 2, 0)).is_some());
+        assert!(t.feeding(ep(2, 2, 0)).is_none());
+    }
+
+    #[test]
+    fn destination_conflicts_rejected() {
+        let mut t = RouteTable::new();
+        t.add(Route {
+            src: ep(0, 1, 0),
+            dsts: vec![ep(0, 2, 0)],
+            kind: RouteKind::Circuit,
+        })
+        .unwrap();
+        let conflict = t.add(Route {
+            src: ep(1, 1, 0),
+            dsts: vec![ep(0, 2, 0)],
+            kind: RouteKind::Circuit,
+        });
+        assert!(conflict.is_err());
+    }
+
+    #[test]
+    fn no_empty_routes() {
+        let mut t = RouteTable::new();
+        assert!(t
+            .add(Route {
+                src: ep(0, 1, 0),
+                dsts: vec![],
+                kind: RouteKind::Packet,
+            })
+            .is_err());
+    }
+
+    #[test]
+    fn multicast_row_feed() {
+        // A memory core multicast to all 4 compute cores in its row is the
+        // paper's A-distribution; all four endpoints resolve to the route.
+        let mut t = RouteTable::new();
+        let dsts: Vec<Endpoint> = (0..4)
+            .map(|c| Endpoint {
+                core: PARTITION.compute_core(1, c),
+                port: 0,
+            })
+            .collect();
+        t.add(Route {
+            src: ep(1, 1, 0),
+            dsts: dsts.clone(),
+            kind: RouteKind::Circuit,
+        })
+        .unwrap();
+        for d in dsts {
+            assert!(t.feeding(d).is_some());
+        }
+    }
+
+    #[test]
+    fn transfer_cycles_linear() {
+        let t = RouteTable::new();
+        assert_eq!(t.transfer_cycles(1024), 1024);
+    }
+}

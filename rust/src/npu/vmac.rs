@@ -1,0 +1,293 @@
+//! The VMAC micro-kernel: the AI Engine's bf16 matrix FMA intrinsic.
+//!
+//! VMAC multiplies a 4×8 bf16 tile by an 8×4 bf16 tile and adds the result
+//! into a 4×4 f32 accumulator register, with a 4-cycle result latency
+//! (paper section VI-A). The paper's kernel hides that latency by cycling
+//! through **four independent accumulator registers**, giving back-to-back
+//! VMAC issue (100% vector utilization in the inner loop).
+//!
+//! This module implements the functional datapath exactly (bf16 inputs via
+//! round-to-nearest-even quantization, f32 accumulation in VMAC issue
+//! order) plus the issue/hazard cycle accounting.
+
+use crate::gemm::bf16::Bf16;
+
+/// VMAC geometry.
+pub const VMAC_M: usize = 4;
+pub const VMAC_K: usize = 8;
+pub const VMAC_N: usize = 4;
+/// MACs per VMAC issue (4*8*4).
+pub const MACS_PER_VMAC: usize = VMAC_M * VMAC_K * VMAC_N;
+/// Result latency in cycles.
+pub const VMAC_LATENCY: u64 = 4;
+/// Independent accumulators the kernel cycles through.
+pub const NUM_ACCUMULATORS: usize = 4;
+
+/// One 4×4 f32 accumulator register.
+pub type Acc = [[f32; VMAC_N]; VMAC_M];
+
+/// Functional VMAC: acc += a(4×8) · b(8×4), inputs quantized to bf16.
+/// `a` is row-major 4×8, `b` row-major 8×4.
+#[inline]
+pub fn vmac(acc: &mut Acc, a: &[f32], b: &[f32]) {
+    debug_assert_eq!(a.len(), VMAC_M * VMAC_K);
+    debug_assert_eq!(b.len(), VMAC_K * VMAC_N);
+    for i in 0..VMAC_M {
+        for j in 0..VMAC_N {
+            let mut sum = acc[i][j];
+            for kk in 0..VMAC_K {
+                let av = Bf16::quantize(a[i * VMAC_K + kk]);
+                let bv = Bf16::quantize(b[kk * VMAC_N + j]);
+                sum += av * bv;
+            }
+            acc[i][j] = sum;
+        }
+    }
+}
+
+/// Cycle accounting for a sequence of VMAC issues over `num_acc`
+/// accumulator registers, round-robin. A VMAC reusing an accumulator
+/// issued fewer than `VMAC_LATENCY` cycles ago stalls (compiler no-ops).
+#[derive(Debug, Clone)]
+pub struct IssueModel {
+    /// Cycle at which each accumulator's last VMAC was issued.
+    last_issue: Vec<i64>,
+    pub cycle: i64,
+    pub vmacs: u64,
+    pub stall_cycles: u64,
+}
+
+impl IssueModel {
+    pub fn new(num_acc: usize) -> IssueModel {
+        IssueModel {
+            last_issue: vec![i64::MIN / 2; num_acc],
+            cycle: 0,
+            vmacs: 0,
+            stall_cycles: 0,
+        }
+    }
+
+    /// Issue one VMAC against accumulator `acc_idx`; returns cycles consumed
+    /// (1 if back-to-back, more if the hazard forces no-ops).
+    pub fn issue(&mut self, acc_idx: usize) -> u64 {
+        let ready = self.last_issue[acc_idx] + VMAC_LATENCY as i64;
+        let stall = (ready - self.cycle).max(0) as u64;
+        self.stall_cycles += stall;
+        self.cycle += stall as i64 + 1;
+        self.last_issue[acc_idx] = self.cycle - 1;
+        self.vmacs += 1;
+        stall + 1
+    }
+
+    /// Vector-unit utilization so far (VMAC issues / total cycles).
+    pub fn utilization(&self) -> f64 {
+        if self.cycle == 0 {
+            return 0.0;
+        }
+        self.vmacs as f64 / self.cycle as f64
+    }
+}
+
+/// Multiply one m×k by one k×n tile, accumulating into a m×n f32 tile,
+/// following the paper's kernel structure: iterate over 4×4 output
+/// micro-tiles in groups of `NUM_ACCUMULATORS`, issuing the K/8 VMACs of
+/// each group member round-robin so no accumulator is reused within 4
+/// issues. Returns consumed cycles (functional result is written to `c`).
+pub fn tile_matmul_accumulate(
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    issue: &mut IssueModel,
+) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    debug_assert!(m % VMAC_M == 0 && k % VMAC_K == 0 && n % VMAC_N == 0);
+    let mt_rows = m / VMAC_M;
+    let mt_cols = n / VMAC_N;
+    let k_steps = k / VMAC_K;
+
+    // Walk output micro-tiles in groups of NUM_ACCUMULATORS (the paper's
+    // "four independent output tiles in four distinct accumulators").
+    let total_mts = mt_rows * mt_cols;
+    let mut group_start = 0usize;
+    while group_start < total_mts {
+        let group = (group_start..(group_start + NUM_ACCUMULATORS).min(total_mts))
+            .collect::<Vec<_>>();
+        let mut accs: Vec<Acc> = vec![[[0.0; VMAC_N]; VMAC_M]; group.len()];
+        // Load current accumulator contents from C.
+        for (gi, &mt) in group.iter().enumerate() {
+            let (mi, mj) = (mt / mt_cols, mt % mt_cols);
+            for i in 0..VMAC_M {
+                for j in 0..VMAC_N {
+                    accs[gi][i][j] = c[(mi * VMAC_M + i) * n + mj * VMAC_N + j];
+                }
+            }
+        }
+        // K loop outer, group member inner => round-robin accumulator use.
+        let mut a_micro = [0.0f32; VMAC_M * VMAC_K];
+        let mut b_micro = [0.0f32; VMAC_K * VMAC_N];
+        for ks in 0..k_steps {
+            for (gi, &mt) in group.iter().enumerate() {
+                let (mi, mj) = (mt / mt_cols, mt % mt_cols);
+                // Gather the 4×8 A micro-tile and 8×4 B micro-tile (the
+                // DMA + VSHUFFLE already laid them out; we index directly).
+                for i in 0..VMAC_M {
+                    for kk in 0..VMAC_K {
+                        a_micro[i * VMAC_K + kk] =
+                            a[(mi * VMAC_M + i) * k + ks * VMAC_K + kk];
+                    }
+                }
+                for kk in 0..VMAC_K {
+                    for j in 0..VMAC_N {
+                        b_micro[kk * VMAC_N + j] =
+                            b[(ks * VMAC_K + kk) * n + mj * VMAC_N + j];
+                    }
+                }
+                vmac(&mut accs[gi], &a_micro, &b_micro);
+                issue.issue(gi % NUM_ACCUMULATORS);
+            }
+        }
+        // Write accumulators back.
+        for (gi, &mt) in group.iter().enumerate() {
+            let (mi, mj) = (mt / mt_cols, mt % mt_cols);
+            for i in 0..VMAC_M {
+                for j in 0..VMAC_N {
+                    c[(mi * VMAC_M + i) * n + mj * VMAC_N + j] = accs[gi][i][j];
+                }
+            }
+        }
+        group_start += NUM_ACCUMULATORS;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::cpu;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn single_vmac_matches_scalar() {
+        let mut rng = Rng::new(5);
+        let mut a = vec![0.0f32; 32];
+        let mut b = vec![0.0f32; 32];
+        rng.fill_normal(&mut a, 0.0, 1.0);
+        rng.fill_normal(&mut b, 0.0, 1.0);
+        let mut acc: Acc = [[0.0; 4]; 4];
+        vmac(&mut acc, &a, &b);
+        for i in 0..4 {
+            for j in 0..4 {
+                let mut expect = 0.0f32;
+                for kk in 0..8 {
+                    expect += Bf16::quantize(a[i * 8 + kk]) * Bf16::quantize(b[kk * 4 + j]);
+                }
+                assert!((acc[i][j] - expect).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn four_accumulators_hide_latency() {
+        let mut m = IssueModel::new(4);
+        for i in 0..64 {
+            m.issue(i % 4);
+        }
+        assert_eq!(m.stall_cycles, 0, "round-robin over 4 accs never stalls");
+        assert!((m.utilization() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn single_accumulator_stalls() {
+        let mut m = IssueModel::new(1);
+        for _ in 0..16 {
+            m.issue(0);
+        }
+        // Each back-to-back reuse stalls 3 cycles after the first issue.
+        assert_eq!(m.stall_cycles, 15 * 3);
+        assert!(m.utilization() < 0.3);
+    }
+
+    #[test]
+    fn tile_matmul_matches_bf16_gemm() {
+        let (m, k, n) = (64, 64, 32);
+        let mut rng = Rng::new(9);
+        let a = prop::gen::normal_vec(&mut rng, m * k);
+        let b = prop::gen::normal_vec(&mut rng, k * n);
+        let mut c_sim = vec![0.0f32; m * n];
+        let mut issue = IssueModel::new(NUM_ACCUMULATORS);
+        tile_matmul_accumulate(&a, &b, &mut c_sim, m, k, n, &mut issue);
+        let mut c_ref = vec![0.0f32; m * n];
+        cpu::gemm_bf16_ref(&a, &b, &mut c_ref, m, k, n);
+        for (i, (x, y)) in c_sim.iter().zip(&c_ref).enumerate() {
+            assert!(
+                (x - y).abs() <= 2e-4 * y.abs().max(1.0),
+                "elt {i}: {x} vs {y}"
+            );
+        }
+        // Ideal cycles: m*k*n / 128 VMACs, no stalls.
+        assert_eq!(issue.vmacs, (m * k * n / MACS_PER_VMAC) as u64);
+        assert_eq!(issue.stall_cycles, 0);
+    }
+
+    #[test]
+    fn accumulation_composes_over_k_tiles() {
+        // Two k-tile accumulations must equal one big GEMM over 2k.
+        let (m, k, n) = (8, 16, 8);
+        let mut rng = Rng::new(21);
+        let a = prop::gen::normal_vec(&mut rng, m * 2 * k);
+        let b = prop::gen::normal_vec(&mut rng, 2 * k * n);
+        // Split A into two m×k halves, B into two k×n halves.
+        let mut a1 = vec![0.0; m * k];
+        let mut a2 = vec![0.0; m * k];
+        for i in 0..m {
+            a1[i * k..(i + 1) * k].copy_from_slice(&a[i * 2 * k..i * 2 * k + k]);
+            a2[i * k..(i + 1) * k].copy_from_slice(&a[i * 2 * k + k..(i + 1) * 2 * k]);
+        }
+        let b1 = b[0..k * n].to_vec();
+        let b2 = b[k * n..].to_vec();
+        let mut c = vec![0.0f32; m * n];
+        let mut issue = IssueModel::new(NUM_ACCUMULATORS);
+        tile_matmul_accumulate(&a1, &b1, &mut c, m, k, n, &mut issue);
+        tile_matmul_accumulate(&a2, &b2, &mut c, m, k, n, &mut issue);
+        let mut c_ref = vec![0.0f32; m * n];
+        cpu::gemm_bf16_ref(&a, &b, &mut c_ref, m, 2 * k, n);
+        for (x, y) in c.iter().zip(&c_ref) {
+            assert!((x - y).abs() <= 2e-4 * y.abs().max(1.0));
+        }
+    }
+
+    #[test]
+    fn prop_tile_matmul_random_tiles() {
+        prop::check(
+            "vmac-tile-matmul-matches-ref",
+            16,
+            |rng| {
+                let m = prop::gen::multiple_of(rng, 4, 1, 8);
+                let k = prop::gen::multiple_of(rng, 8, 1, 6);
+                let n = prop::gen::multiple_of(rng, 4, 1, 8);
+                let a = prop::gen::normal_vec(rng, m * k);
+                let b = prop::gen::normal_vec(rng, k * n);
+                (m, k, n, a, b)
+            },
+            |(m, k, n, a, b)| {
+                let (m, k, n) = (*m, *k, *n);
+                let mut c = vec![0.0f32; m * n];
+                let mut issue = IssueModel::new(NUM_ACCUMULATORS);
+                tile_matmul_accumulate(a, b, &mut c, m, k, n, &mut issue);
+                let mut c_ref = vec![0.0f32; m * n];
+                cpu::gemm_bf16_ref(a, b, &mut c_ref, m, k, n);
+                for (i, (x, y)) in c.iter().zip(&c_ref).enumerate() {
+                    if (x - y).abs() > 2e-4 * y.abs().max(1.0) {
+                        return Err(format!("elt {i}: {x} vs {y}"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,14 @@
+//! Power and energy modeling (the paper's Figure 9 axis).
+//!
+//! The paper polls `/sys/class/power_supply/BAT0/power_now` at 4 Hz while
+//! training on mains vs battery. Without the laptop, we model the
+//! platform's power states ([`profiles`]) and integrate them over modeled
+//! time ([`meter`]), keeping the same 4 Hz sampling structure so the
+//! measurement pipeline (sampling → trace → mean power → FLOP/Ws) is
+//! exercised end to end.
+
+pub mod meter;
+pub mod profiles;
+
+pub use meter::PowerMeter;
+pub use profiles::PowerProfile;

@@ -1,0 +1,183 @@
+//! PJRT CPU client + compiled-executable cache.
+//!
+//! HLO text is the interchange format (not serialized protos): jax >= 0.5
+//! emits 64-bit instruction ids that xla_extension 0.5.1 rejects, while the
+//! text parser reassigns ids (see /opt/xla-example/README.md). Artifacts
+//! are lowered with return_tuple=True, so every execution returns one tuple
+//! literal that we decompose.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::util::error::{Error, Result};
+
+/// Wrapper around the PJRT CPU client with a cache of compiled executables
+/// keyed by artifact file name.
+pub struct RuntimeClient {
+    client: xla::PjRtClient,
+    cache: BTreeMap<String, Executable>,
+}
+
+/// A compiled artifact ready to execute.
+#[derive(Clone)]
+pub struct Executable {
+    exe: std::rc::Rc<xla::PjRtLoadedExecutable>,
+    pub name: String,
+}
+
+fn xerr(e: xla::Error) -> Error {
+    Error::runtime(format!("xla: {e}"))
+}
+
+impl RuntimeClient {
+    /// Create a PJRT CPU client.
+    pub fn cpu() -> Result<RuntimeClient> {
+        Ok(RuntimeClient {
+            client: xla::PjRtClient::cpu().map_err(xerr)?,
+            cache: BTreeMap::new(),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO-text artifact (cached by file name).
+    pub fn load(&mut self, path: impl AsRef<Path>) -> Result<Executable> {
+        let path = path.as_ref();
+        let key = path
+            .file_name()
+            .and_then(|s| s.to_str())
+            .unwrap_or_default()
+            .to_string();
+        if let Some(e) = self.cache.get(&key) {
+            return Ok(e.clone());
+        }
+        let path_str = path
+            .to_str()
+            .ok_or_else(|| Error::runtime("non-UTF-8 artifact path"))?;
+        let proto = xla::HloModuleProto::from_text_file(path_str).map_err(xerr)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).map_err(xerr)?;
+        let e = Executable {
+            exe: std::rc::Rc::new(exe),
+            name: key.clone(),
+        };
+        self.cache.insert(key, e.clone());
+        Ok(e)
+    }
+
+    pub fn cached(&self) -> usize {
+        self.cache.len()
+    }
+}
+
+impl Executable {
+    /// Execute with literal inputs; returns the decomposed output tuple.
+    pub fn run(&self, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let result = self.exe.execute::<xla::Literal>(args).map_err(xerr)?;
+        let out = result[0][0].to_literal_sync().map_err(xerr)?;
+        out.to_tuple().map_err(xerr)
+    }
+
+    /// Execute and interpret all outputs as f32 vectors.
+    pub fn run_f32(&self, args: &[xla::Literal]) -> Result<Vec<Vec<f32>>> {
+        self.run(args)?
+            .iter()
+            .map(|l| l.to_vec::<f32>().map_err(xerr))
+            .collect()
+    }
+}
+
+/// Build an f32 literal of the given shape from a flat slice.
+pub fn literal_f32(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
+    let n: usize = dims.iter().product();
+    if n != data.len() {
+        return Err(Error::shape(format!(
+            "literal shape {dims:?} needs {n} elements, got {}",
+            data.len()
+        )));
+    }
+    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    xla::Literal::vec1(data).reshape(&dims_i64).map_err(xerr)
+}
+
+/// Build an i32 literal of the given shape.
+pub fn literal_i32(data: &[i32], dims: &[usize]) -> Result<xla::Literal> {
+    let n: usize = dims.iter().product();
+    if n != data.len() {
+        return Err(Error::shape(format!(
+            "literal shape {dims:?} needs {n} elements, got {}",
+            data.len()
+        )));
+    }
+    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    xla::Literal::vec1(data).reshape(&dims_i64).map_err(xerr)
+}
+
+/// Scalar f32 literal.
+pub fn literal_scalar(v: f32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::{default_dir, Manifest};
+
+    fn artifacts_ready() -> bool {
+        default_dir().join("manifest.json").exists()
+    }
+
+    #[test]
+    fn loads_and_runs_gemm_artifact() {
+        if !artifacts_ready() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(default_dir()).unwrap();
+        // Use the smallest GEMM artifact: 256x768x768.
+        let g = m
+            .gemm_for(crate::gemm::sizes::ProblemSize::new(256, 768, 768))
+            .unwrap();
+        let mut rt = RuntimeClient::cpu().unwrap();
+        let exe = rt.load(m.file(&g.fused_file)).unwrap();
+
+        let mut rng = crate::util::rng::Rng::new(123);
+        let mut a = vec![0.0f32; 256 * 768];
+        let mut b = vec![0.0f32; 768 * 768];
+        rng.fill_normal(&mut a, 0.0, 1.0);
+        rng.fill_normal(&mut b, 0.0, 1.0);
+        let la = literal_f32(&a, &[256, 768]).unwrap();
+        let lb = literal_f32(&b, &[768, 768]).unwrap();
+        let out = exe.run_f32(&[la, lb]).unwrap();
+        assert_eq!(out.len(), 1);
+        let c = &out[0];
+        assert_eq!(c.len(), 256 * 768);
+        // Against the Rust bf16 oracle — three implementations, one
+        // numerical contract.
+        let mut c_ref = vec![0.0f32; 256 * 768];
+        crate::gemm::cpu::gemm_bf16_ref(&a, &b, &mut c_ref, 256, 768, 768);
+        let mean = crate::util::stats::mean_relative_divergence(c, &c_ref);
+        assert!(mean < 1e-4, "pallas-vs-rust divergence {mean}");
+    }
+
+    #[test]
+    fn caching_dedupes() {
+        if !artifacts_ready() {
+            return;
+        }
+        let m = Manifest::load(default_dir()).unwrap();
+        let g = &m.gemms[0];
+        let mut rt = RuntimeClient::cpu().unwrap();
+        rt.load(m.file(&g.fused_file)).unwrap();
+        rt.load(m.file(&g.fused_file)).unwrap();
+        assert_eq!(rt.cached(), 1);
+    }
+
+    #[test]
+    fn literal_shape_mismatch_errors() {
+        assert!(literal_f32(&[1.0, 2.0], &[3]).is_err());
+        assert!(literal_i32(&[1], &[1, 2]).is_err());
+    }
+}

@@ -1,0 +1,205 @@
+//! `artifacts/manifest.json` — the ABI contract between the Python AOT
+//! compiler (`python/compile/aot.py`) and the Rust runtime.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::gemm::sizes::ProblemSize;
+use crate::util::error::{Error, Result};
+use crate::util::json::Json;
+
+/// One per-problem-size GEMM artifact.
+#[derive(Debug, Clone)]
+pub struct GemmArtifact {
+    pub size: ProblemSize,
+    pub m_padded: usize,
+    pub flops: u64,
+    /// Grid-1 ("fused") HLO file, always present.
+    pub fused_file: String,
+    /// Paper-tiled HLO file, present when built with --paper-tiled-gemms.
+    pub tiled_file: Option<String>,
+}
+
+/// Optimizer hyperparameters baked into a train-step artifact.
+#[derive(Debug, Clone)]
+pub struct OptimizerAbi {
+    pub lr: f64,
+    pub beta1: f64,
+    pub beta2: f64,
+    pub eps: f64,
+    pub weight_decay: f64,
+    pub grad_clip: f64,
+}
+
+/// One exported model (train_step + forward) for a named config.
+#[derive(Debug, Clone)]
+pub struct ModelArtifact {
+    pub name: String,
+    pub max_seq_len: usize,
+    pub vocab_size: usize,
+    pub padded_vocab_size: usize,
+    pub num_layers: usize,
+    pub num_heads: usize,
+    pub channels: usize,
+    pub batch: usize,
+    pub seq: usize,
+    pub train_step_file: String,
+    pub forward_file: String,
+    /// Parameter tensor names in ABI order with shapes.
+    pub param_shapes: Vec<(String, Vec<usize>)>,
+    pub optimizer: OptimizerAbi,
+    pub gemm_flops_per_step: u64,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub gemms: Vec<GemmArtifact>,
+    pub models: BTreeMap<String, ModelArtifact>,
+    pub tile: (usize, usize, usize),
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            Error::runtime(format!(
+                "cannot read {} (run `make artifacts` first): {e}",
+                path.display()
+            ))
+        })?;
+        let j = Json::parse(&text)?;
+
+        let tile_j = j.get("tile")?;
+        let tile = (
+            tile_j.get("m")?.as_usize()?,
+            tile_j.get("k")?.as_usize()?,
+            tile_j.get("n")?.as_usize()?,
+        );
+
+        let mut gemms = Vec::new();
+        for g in j.get("gemms")?.as_arr()? {
+            gemms.push(GemmArtifact {
+                size: ProblemSize::new(
+                    g.get("M")?.as_usize()?,
+                    g.get("K")?.as_usize()?,
+                    g.get("N")?.as_usize()?,
+                ),
+                m_padded: g.get("M_padded")?.as_usize()?,
+                flops: g.get("flops")?.as_f64()? as u64,
+                fused_file: g.get("fused")?.as_str()?.to_string(),
+                tiled_file: g.get_opt("tiled").map(|t| t.as_str().unwrap_or("").to_string()),
+            });
+        }
+
+        let mut models = BTreeMap::new();
+        for (name, m) in j.get("models")?.as_obj()? {
+            let cfg = m.get("config")?;
+            let ts = m.get("train_step")?;
+            let fw = m.get("forward")?;
+            let opt = ts.get("optimizer")?;
+            let mut param_shapes = Vec::new();
+            for p in ts.get("params")?.as_arr()? {
+                let shape = p
+                    .get("shape")?
+                    .as_arr()?
+                    .iter()
+                    .map(|d| d.as_usize())
+                    .collect::<Result<Vec<_>>>()?;
+                param_shapes.push((p.get("name")?.as_str()?.to_string(), shape));
+            }
+            models.insert(
+                name.clone(),
+                ModelArtifact {
+                    name: name.clone(),
+                    max_seq_len: cfg.get("max_seq_len")?.as_usize()?,
+                    vocab_size: cfg.get("vocab_size")?.as_usize()?,
+                    padded_vocab_size: cfg.get("padded_vocab_size")?.as_usize()?,
+                    num_layers: cfg.get("num_layers")?.as_usize()?,
+                    num_heads: cfg.get("num_heads")?.as_usize()?,
+                    channels: cfg.get("channels")?.as_usize()?,
+                    batch: ts.get("batch")?.as_usize()?,
+                    seq: ts.get("seq")?.as_usize()?,
+                    train_step_file: ts.get("file")?.as_str()?.to_string(),
+                    forward_file: fw.get("file")?.as_str()?.to_string(),
+                    param_shapes,
+                    optimizer: OptimizerAbi {
+                        lr: opt.get("lr")?.as_f64()?,
+                        beta1: opt.get("beta1")?.as_f64()?,
+                        beta2: opt.get("beta2")?.as_f64()?,
+                        eps: opt.get("eps")?.as_f64()?,
+                        weight_decay: opt.get("weight_decay")?.as_f64()?,
+                        grad_clip: opt.get("grad_clip")?.as_f64()?,
+                    },
+                    gemm_flops_per_step: m.get("gemm_flops_per_step")?.as_f64()? as u64,
+                },
+            );
+        }
+
+        Ok(Manifest {
+            dir,
+            gemms,
+            models,
+            tile,
+        })
+    }
+
+    /// Absolute path of an artifact file.
+    pub fn file(&self, name: &str) -> PathBuf {
+        self.dir.join(name)
+    }
+
+    /// The GEMM artifact for an exact problem size, if present.
+    pub fn gemm_for(&self, size: ProblemSize) -> Option<&GemmArtifact> {
+        self.gemms.iter().find(|g| g.size == size)
+    }
+
+    /// Model artifact by config name (e.g. "d2").
+    pub fn model(&self, name: &str) -> Result<&ModelArtifact> {
+        self.models
+            .get(name)
+            .ok_or_else(|| Error::runtime(format!("model '{name}' not in manifest")))
+    }
+}
+
+/// Default artifacts directory: $XDNA_REPRO_ARTIFACTS or ./artifacts.
+pub fn default_dir() -> PathBuf {
+    std::env::var("XDNA_REPRO_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manifest_available() -> bool {
+        default_dir().join("manifest.json").exists()
+    }
+
+    #[test]
+    fn loads_real_manifest() {
+        if !manifest_available() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(default_dir()).unwrap();
+        assert_eq!(m.tile, (64, 64, 32));
+        // The twelve GPT-2 sizes.
+        assert_eq!(m.gemms.len(), 12);
+        let padded = m.gemm_for(ProblemSize::new(50304, 256, 768)).unwrap();
+        assert_eq!(padded.m_padded, 50432);
+        let d2 = m.model("d2").unwrap();
+        assert_eq!(d2.param_shapes.len(), 16);
+        assert_eq!(d2.param_shapes[0].0, "wte");
+    }
+
+    #[test]
+    fn missing_dir_errors_helpfully() {
+        let err = Manifest::load("/nonexistent-dir-xyz").unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+}

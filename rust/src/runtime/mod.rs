@@ -1,0 +1,12 @@
+//! PJRT runtime: load and execute the JAX/Pallas AOT artifacts.
+//!
+//! The Python layers (L1 Pallas kernel, L2 JAX model) are lowered once at
+//! build time to HLO **text** in `artifacts/`; this module loads that text
+//! through the `xla` crate's PJRT CPU client and executes it from the Rust
+//! request path. Python never runs at runtime.
+
+pub mod client;
+pub mod manifest;
+
+pub use client::{Executable, RuntimeClient};
+pub use manifest::{GemmArtifact, Manifest, ModelArtifact};

@@ -1,0 +1,134 @@
+//! Benchmark harness (no criterion offline).
+//!
+//! Warms up, then measures N iterations of a closure, reporting the summary
+//! statistics the paper's figures use (mean + box-and-whisker spread).
+//! `cargo bench` targets use `harness = false` and drive this directly.
+
+use std::time::{Duration, Instant};
+
+use crate::util::stats::Summary;
+
+/// One benchmark's configuration.
+#[derive(Debug, Clone)]
+pub struct BenchConfig {
+    pub warmup_iters: usize,
+    pub iters: usize,
+    /// Hard cap on total measured wall time; sampling stops early once
+    /// exceeded (keeps the full figure suite fast).
+    pub max_total: Duration,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig {
+            warmup_iters: 2,
+            iters: 10,
+            max_total: Duration::from_secs(20),
+        }
+    }
+}
+
+impl BenchConfig {
+    /// Honor XDNA_REPRO_BENCH_ITERS / _FAST for CI-speed runs.
+    pub fn from_env() -> Self {
+        let mut c = BenchConfig::default();
+        if std::env::var("XDNA_REPRO_BENCH_FAST").is_ok() {
+            c.warmup_iters = 1;
+            c.iters = 3;
+            c.max_total = Duration::from_secs(5);
+        }
+        if let Ok(v) = std::env::var("XDNA_REPRO_BENCH_ITERS") {
+            if let Ok(n) = v.parse() {
+                c.iters = n;
+            }
+        }
+        c
+    }
+}
+
+/// Result of one benchmark: per-iteration wall times in seconds.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub samples_s: Vec<f64>,
+}
+
+impl BenchResult {
+    pub fn summary(&self) -> Summary {
+        Summary::of(&self.samples_s)
+    }
+
+    pub fn mean_s(&self) -> f64 {
+        self.summary().mean
+    }
+}
+
+/// Measure `f` under `cfg`, returning per-iteration times.
+pub fn run(name: &str, cfg: &BenchConfig, mut f: impl FnMut()) -> BenchResult {
+    for _ in 0..cfg.warmup_iters {
+        f();
+    }
+    let mut samples = Vec::with_capacity(cfg.iters);
+    let start = Instant::now();
+    for _ in 0..cfg.iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+        if start.elapsed() > cfg.max_total && !samples.is_empty() {
+            break;
+        }
+    }
+    BenchResult {
+        name: name.to_string(),
+        samples_s: samples,
+    }
+}
+
+/// Pretty-print a table row: name, mean, std, min..max.
+pub fn print_row(r: &BenchResult) {
+    let s = r.summary();
+    println!(
+        "{:<44} mean {:>10.4} ms  ±{:>7.4}  [{:>10.4} .. {:>10.4}] x{}",
+        r.name,
+        s.mean * 1e3,
+        s.std * 1e3,
+        s.min * 1e3,
+        s.max * 1e3,
+        s.n
+    );
+}
+
+/// Pretty table header for figure output.
+pub fn print_header(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let cfg = BenchConfig {
+            warmup_iters: 1,
+            iters: 5,
+            max_total: Duration::from_secs(5),
+        };
+        let r = run("noop", &cfg, || {
+            std::hint::black_box(1 + 1);
+        });
+        assert_eq!(r.samples_s.len(), 5);
+        assert!(r.mean_s() >= 0.0);
+    }
+
+    #[test]
+    fn respects_time_cap() {
+        let cfg = BenchConfig {
+            warmup_iters: 0,
+            iters: 1000,
+            max_total: Duration::from_millis(30),
+        };
+        let r = run("sleepy", &cfg, || std::thread::sleep(Duration::from_millis(10)));
+        assert!(r.samples_s.len() < 1000);
+    }
+}

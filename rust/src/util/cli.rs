@@ -1,0 +1,116 @@
+//! Tiny CLI argument parser (no clap offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, and positional args.
+
+use std::collections::BTreeMap;
+
+use crate::util::error::{Error, Result};
+
+/// Parsed command-line arguments.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (excluding argv[0]).
+    /// `flag_names` lists options that take no value.
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I, flag_names: &[&str]) -> Result<Args> {
+        let mut out = Args::default();
+        let mut iter = raw.into_iter().peekable();
+        while let Some(arg) = iter.next() {
+            if let Some(stripped) = arg.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if flag_names.contains(&stripped) {
+                    out.flags.push(stripped.to_string());
+                } else {
+                    let v = iter.next().ok_or_else(|| {
+                        Error::config(format!("option --{stripped} expects a value"))
+                    })?;
+                    out.options.insert(stripped.to_string(), v);
+                }
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_parse<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse::<T>()
+                .map_err(|_| Error::config(format!("bad value '{v}' for --{name}"))),
+        }
+    }
+
+    /// Error if any unknown options remain beyond the allowed set.
+    pub fn check_known(&self, allowed: &[&str]) -> Result<()> {
+        for k in self.options.keys().chain(self.flags.iter()) {
+            if !allowed.contains(&k.as_str()) {
+                return Err(Error::config(format!("unknown option --{k}")));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(args: &[&str], flags: &[&str]) -> Args {
+        Args::parse(args.iter().map(|s| s.to_string()), flags).unwrap()
+    }
+
+    #[test]
+    fn mixed_args() {
+        let a = parse(
+            &["train", "--steps", "100", "--verbose", "--lr=0.001", "extra"],
+            &["verbose"],
+        );
+        assert_eq!(a.positional, vec!["train", "extra"]);
+        assert_eq!(a.get("steps"), Some("100"));
+        assert_eq!(a.get("lr"), Some("0.001"));
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn get_parse_defaults() {
+        let a = parse(&["--n", "5"], &[]);
+        assert_eq!(a.get_parse("n", 0usize).unwrap(), 5);
+        assert_eq!(a.get_parse("missing", 7usize).unwrap(), 7);
+        let bad = parse(&["--n", "x"], &[]);
+        assert!(bad.get_parse("n", 0usize).is_err());
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        let r = Args::parse(["--steps".to_string()], &[]);
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn check_known_rejects() {
+        let a = parse(&["--weird", "1"], &[]);
+        assert!(a.check_known(&["steps"]).is_err());
+        assert!(a.check_known(&["weird"]).is_ok());
+    }
+}

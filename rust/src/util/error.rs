@@ -1,0 +1,63 @@
+//! Crate-wide error type.
+
+use std::fmt;
+
+/// Unified error for all layers of the stack.
+#[derive(Debug)]
+pub enum Error {
+    /// Shape/size mismatch in a GEMM or tensor op.
+    Shape(String),
+    /// NPU simulator configuration or execution fault.
+    Npu(String),
+    /// XRT host-runtime fault (bad buffer, unsynced BO, ...).
+    Xrt(String),
+    /// PJRT / artifact loading fault.
+    Runtime(String),
+    /// I/O error (checkpoints, token files, artifacts).
+    Io(std::io::Error),
+    /// Config / CLI parse error.
+    Config(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Shape(m) => write!(f, "shape error: {m}"),
+            Error::Npu(m) => write!(f, "npu error: {m}"),
+            Error::Xrt(m) => write!(f, "xrt error: {m}"),
+            Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+            Error::Config(m) => write!(f, "config error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Shorthand constructors used throughout the crate.
+impl Error {
+    pub fn shape(m: impl Into<String>) -> Self {
+        Error::Shape(m.into())
+    }
+    pub fn npu(m: impl Into<String>) -> Self {
+        Error::Npu(m.into())
+    }
+    pub fn xrt(m: impl Into<String>) -> Self {
+        Error::Xrt(m.into())
+    }
+    pub fn runtime(m: impl Into<String>) -> Self {
+        Error::Runtime(m.into())
+    }
+    pub fn config(m: impl Into<String>) -> Self {
+        Error::Config(m.into())
+    }
+}

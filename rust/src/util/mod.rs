@@ -1,0 +1,13 @@
+//! Support substrate: everything a "batteries-included" environment would
+//! provide but that we build from scratch here (offline, framework-free —
+//! in keeping with the paper's llm.c ethos).
+
+pub mod bench;
+pub mod cli;
+pub mod error;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod threads;
+pub mod timer;

@@ -1,0 +1,180 @@
+//! Summary statistics for benchmark reporting (mean/std/percentiles and the
+//! box-and-whisker five-number summary the paper's figures use).
+
+/// Five-number summary plus mean/std over a sample of measurements.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub p25: f64,
+    pub median: f64,
+    pub p75: f64,
+    pub max: f64,
+}
+
+impl Summary {
+    /// Compute a summary over samples. Empty input yields an all-zero
+    /// summary with `n == 0`.
+    pub fn of(samples: &[f64]) -> Summary {
+        if samples.is_empty() {
+            return Summary {
+                n: 0,
+                mean: 0.0,
+                std: 0.0,
+                min: 0.0,
+                p25: 0.0,
+                median: 0.0,
+                p75: 0.0,
+                max: 0.0,
+            };
+        }
+        let n = samples.len();
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        let var = if n > 1 {
+            samples.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / (n - 1) as f64
+        } else {
+            0.0
+        };
+        let mut sorted: Vec<f64> = samples.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Summary {
+            n,
+            mean,
+            std: var.sqrt(),
+            min: sorted[0],
+            p25: percentile(&sorted, 0.25),
+            median: percentile(&sorted, 0.50),
+            p75: percentile(&sorted, 0.75),
+            max: sorted[n - 1],
+        }
+    }
+
+    /// Relative standard deviation (coefficient of variation), in percent.
+    pub fn rsd_pct(&self) -> f64 {
+        if self.mean == 0.0 {
+            0.0
+        } else {
+            100.0 * self.std / self.mean.abs()
+        }
+    }
+}
+
+/// Linear-interpolated percentile over pre-sorted data, q in [0,1].
+pub fn percentile(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let pos = q.clamp(0.0, 1.0) * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    let frac = pos - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+/// Mean relative divergence between a candidate and a reference vector:
+/// mean(|c - r| / max(|r|, eps)). This is the metric the paper reports for
+/// NPU-vs-CPU numerical accuracy (Section VII-A: "mean relative divergence
+/// below 0.06%").
+pub fn mean_relative_divergence(candidate: &[f32], reference: &[f32]) -> f64 {
+    assert_eq!(candidate.len(), reference.len());
+    assert!(!candidate.is_empty());
+    let eps = 1e-8f64;
+    let mut acc = 0.0f64;
+    for (&c, &r) in candidate.iter().zip(reference) {
+        let denom = (r.abs() as f64).max(eps);
+        acc += ((c - r).abs() as f64) / denom;
+    }
+    acc / candidate.len() as f64
+}
+
+/// Mean divergence normalized by the reference's RMS magnitude — robust
+/// to near-zero reference elements (which inflate the per-element metric
+/// under the cancellation-heavy operand statistics of synthetic data).
+pub fn mean_rms_divergence(candidate: &[f32], reference: &[f32]) -> f64 {
+    assert_eq!(candidate.len(), reference.len());
+    assert!(!candidate.is_empty());
+    let rms = (reference.iter().map(|&r| (r as f64) * (r as f64)).sum::<f64>()
+        / reference.len() as f64)
+        .sqrt()
+        .max(1e-12);
+    let mean_abs = candidate
+        .iter()
+        .zip(reference)
+        .map(|(&c, &r)| ((c - r).abs()) as f64)
+        .sum::<f64>()
+        / candidate.len() as f64;
+    mean_abs / rms
+}
+
+/// Maximum relative divergence (paper: 0.1% worst case).
+pub fn max_relative_divergence(candidate: &[f32], reference: &[f32]) -> f64 {
+    assert_eq!(candidate.len(), reference.len());
+    let eps = 1e-8f64;
+    candidate
+        .iter()
+        .zip(reference)
+        .map(|(&c, &r)| ((c - r).abs() as f64) / (r.abs() as f64).max(eps))
+        .fold(0.0, f64::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_of_constant() {
+        let s = Summary::of(&[5.0; 10]);
+        assert_eq!(s.mean, 5.0);
+        assert_eq!(s.std, 0.0);
+        assert_eq!(s.min, 5.0);
+        assert_eq!(s.max, 5.0);
+        assert_eq!(s.median, 5.0);
+    }
+
+    #[test]
+    fn summary_of_ramp() {
+        let v: Vec<f64> = (1..=5).map(|x| x as f64).collect();
+        let s = Summary::of(&v);
+        assert_eq!(s.mean, 3.0);
+        assert_eq!(s.median, 3.0);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert_eq!(s.p25, 2.0);
+        assert_eq!(s.p75, 4.0);
+        assert!((s.std - 1.5811388).abs() < 1e-6);
+    }
+
+    #[test]
+    fn summary_empty() {
+        let s = Summary::of(&[]);
+        assert_eq!(s.n, 0);
+        assert_eq!(s.mean, 0.0);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let v = [0.0, 10.0];
+        assert_eq!(percentile(&v, 0.5), 5.0);
+        assert_eq!(percentile(&v, 0.0), 0.0);
+        assert_eq!(percentile(&v, 1.0), 10.0);
+    }
+
+    #[test]
+    fn divergence_zero_for_identical() {
+        let a = [1.0f32, -2.0, 3.0];
+        assert_eq!(mean_relative_divergence(&a, &a), 0.0);
+        assert_eq!(max_relative_divergence(&a, &a), 0.0);
+    }
+
+    #[test]
+    fn divergence_scales() {
+        let r = [100.0f32, 100.0];
+        let c = [101.0f32, 99.0];
+        let d = mean_relative_divergence(&c, &r);
+        assert!((d - 0.01).abs() < 1e-9);
+        assert!((max_relative_divergence(&c, &r) - 0.01).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,155 @@
+//! Data-parallel helpers over std::thread (no rayon offline).
+//!
+//! The paper parallelizes the CPU-side transpose "across all available CPU
+//! cores" (section V-B); `parallel_chunks` is the primitive both the
+//! transpose and the CPU GEMM baseline use.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Number of worker threads to use (defaults to available parallelism,
+/// overridable with the XDNA_REPRO_THREADS environment variable).
+pub fn num_threads() -> usize {
+    if let Ok(v) = std::env::var("XDNA_REPRO_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            if n >= 1 {
+                return n;
+            }
+        }
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// Run `f(chunk_index, chunk)` over disjoint mutable chunks of `data` in
+/// parallel. Chunks are contiguous, of size `chunk_len` (last may be short).
+pub fn parallel_chunks_mut<T: Send, F>(data: &mut [T], chunk_len: usize, f: F)
+where
+    F: Fn(usize, &mut [T]) + Send + Sync,
+{
+    assert!(chunk_len > 0);
+    let nthreads = num_threads().min(data.len().div_ceil(chunk_len)).max(1);
+    if nthreads == 1 {
+        for (i, chunk) in data.chunks_mut(chunk_len).enumerate() {
+            f(i, chunk);
+        }
+        return;
+    }
+    // Distribute chunks round-robin into per-thread queues up front; each
+    // chunk is owned by exactly one worker, so no synchronization is needed.
+    let chunks: Vec<&mut [T]> = data.chunks_mut(chunk_len).collect();
+    let mut queues: Vec<Vec<(usize, &mut [T])>> = (0..nthreads).map(|_| Vec::new()).collect();
+    for (i, c) in chunks.into_iter().enumerate() {
+        queues[i % nthreads].push((i, c));
+    }
+    std::thread::scope(|s| {
+        for q in queues {
+            let f = &f;
+            s.spawn(move || {
+                for (i, chunk) in q {
+                    f(i, chunk);
+                }
+            });
+        }
+    });
+}
+
+/// Parallel iteration over an index range [0, n): each worker claims strided
+/// blocks of `block` indices from an atomic counter (dynamic load balance).
+pub fn parallel_for<F>(n: usize, block: usize, f: F)
+where
+    F: Fn(std::ops::Range<usize>) + Send + Sync,
+{
+    let nthreads = num_threads().min(n.div_ceil(block.max(1))).max(1);
+    if nthreads <= 1 || n == 0 {
+        if n > 0 {
+            f(0..n);
+        }
+        return;
+    }
+    let next = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for _ in 0..nthreads {
+            let next = &next;
+            let f = &f;
+            s.spawn(move || loop {
+                let start = next.fetch_add(block, Ordering::Relaxed);
+                if start >= n {
+                    break;
+                }
+                f(start..(start + block).min(n));
+            });
+        }
+    });
+}
+
+/// Map over items in parallel, preserving order.
+pub fn parallel_map<T: Sync, R: Send, F>(items: &[T], f: F) -> Vec<R>
+where
+    F: Fn(&T) -> R + Send + Sync,
+{
+    let mut out: Vec<Option<R>> = (0..items.len()).map(|_| None).collect();
+    {
+        let slots: Vec<(usize, &mut Option<R>)> = out.iter_mut().enumerate().collect();
+        let nthreads = num_threads().min(items.len()).max(1);
+        let mut queues: Vec<Vec<(usize, &mut Option<R>)>> =
+            (0..nthreads).map(|_| Vec::new()).collect();
+        for (i, slot) in slots {
+            queues[i % nthreads].push((i, slot));
+        }
+        std::thread::scope(|s| {
+            for q in queues {
+                let f = &f;
+                s.spawn(move || {
+                    for (i, slot) in q {
+                        *slot = Some(f(&items[i]));
+                    }
+                });
+            }
+        });
+    }
+    out.into_iter().map(|o| o.unwrap()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn chunks_cover_everything() {
+        let mut v = vec![0u32; 1003];
+        parallel_chunks_mut(&mut v, 17, |_, c| {
+            for x in c {
+                *x += 1;
+            }
+        });
+        assert!(v.iter().all(|&x| x == 1));
+    }
+
+    #[test]
+    fn parallel_for_covers_range() {
+        let hits = AtomicU64::new(0);
+        parallel_for(1000, 7, |r| {
+            hits.fetch_add(r.len() as u64, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 1000);
+    }
+
+    #[test]
+    fn parallel_for_empty() {
+        parallel_for(0, 8, |_| panic!("must not be called"));
+    }
+
+    #[test]
+    fn map_preserves_order() {
+        let items: Vec<usize> = (0..100).collect();
+        let out = parallel_map(&items, |&x| x * 2);
+        assert_eq!(out, (0..100).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn num_threads_at_least_one() {
+        assert!(num_threads() >= 1);
+    }
+}

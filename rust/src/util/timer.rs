@@ -1,0 +1,122 @@
+//! Wall-clock timing helpers for the benchmark harness and the engine's
+//! per-stage breakdown accounting (paper Figure 7).
+
+use std::time::{Duration, Instant};
+
+/// A running stopwatch accumulating into named buckets.
+///
+/// The offload engine uses one of these to attribute time to the stages the
+/// paper's Figure 7 reports: input copy, transpose, NPU kernel, input sync,
+/// output sync, output copy.
+#[derive(Debug, Default, Clone)]
+pub struct StageTimer {
+    buckets: Vec<(String, Duration)>,
+}
+
+impl StageTimer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add elapsed time to a named bucket (created on first use).
+    pub fn add(&mut self, stage: &str, d: Duration) {
+        if let Some(slot) = self.buckets.iter_mut().find(|(n, _)| n == stage) {
+            slot.1 += d;
+        } else {
+            self.buckets.push((stage.to_string(), d));
+        }
+    }
+
+    /// Time a closure into a bucket, returning its output.
+    pub fn time<T>(&mut self, stage: &str, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.add(stage, t0.elapsed());
+        out
+    }
+
+    /// Total across all buckets.
+    pub fn total(&self) -> Duration {
+        self.buckets.iter().map(|(_, d)| *d).sum()
+    }
+
+    /// Duration of one bucket (zero if absent).
+    pub fn get(&self, stage: &str) -> Duration {
+        self.buckets
+            .iter()
+            .find(|(n, _)| n == stage)
+            .map(|(_, d)| *d)
+            .unwrap_or_default()
+    }
+
+    /// Snapshot of all buckets in insertion order.
+    pub fn buckets(&self) -> &[(String, Duration)] {
+        &self.buckets
+    }
+
+    /// Reset all buckets to zero, keeping names.
+    pub fn reset(&mut self) {
+        for (_, d) in self.buckets.iter_mut() {
+            *d = Duration::ZERO;
+        }
+    }
+
+    /// Merge another timer's buckets into this one.
+    pub fn merge(&mut self, other: &StageTimer) {
+        for (n, d) in other.buckets() {
+            self.add(n, *d);
+        }
+    }
+}
+
+/// Measure a closure's wall time.
+pub fn time_it<T>(f: impl FnOnce() -> T) -> (T, Duration) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buckets_accumulate() {
+        let mut t = StageTimer::new();
+        t.add("a", Duration::from_millis(2));
+        t.add("a", Duration::from_millis(3));
+        t.add("b", Duration::from_millis(1));
+        assert_eq!(t.get("a"), Duration::from_millis(5));
+        assert_eq!(t.get("b"), Duration::from_millis(1));
+        assert_eq!(t.total(), Duration::from_millis(6));
+        assert_eq!(t.get("missing"), Duration::ZERO);
+    }
+
+    #[test]
+    fn time_closure_returns_value() {
+        let mut t = StageTimer::new();
+        let v = t.time("work", || 41 + 1);
+        assert_eq!(v, 42);
+        assert!(t.total() >= Duration::ZERO);
+    }
+
+    #[test]
+    fn merge_adds() {
+        let mut a = StageTimer::new();
+        let mut b = StageTimer::new();
+        a.add("x", Duration::from_millis(1));
+        b.add("x", Duration::from_millis(2));
+        b.add("y", Duration::from_millis(4));
+        a.merge(&b);
+        assert_eq!(a.get("x"), Duration::from_millis(3));
+        assert_eq!(a.get("y"), Duration::from_millis(4));
+    }
+
+    #[test]
+    fn reset_zeroes() {
+        let mut t = StageTimer::new();
+        t.add("x", Duration::from_millis(9));
+        t.reset();
+        assert_eq!(t.get("x"), Duration::ZERO);
+    }
+}

@@ -1,0 +1,181 @@
+//! Shared buffer objects (BOs).
+//!
+//! A BO is host-allocated memory visible to the NPU through the unified L3.
+//! The host must explicitly sync a BO to the device before a kernel reads
+//! it and from the device after a kernel writes it (cache maintenance +
+//! driver bookkeeping). The sync cost is the per-invocation overhead the
+//! paper identifies as unavoidable ("Input sync." / "output sync." ...
+//! dispatch overheads incurred by the XDNA driver", Figure 7).
+
+use crate::util::error::{Error, Result};
+
+/// Direction of an explicit BO sync.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SyncDirection {
+    ToDevice,
+    FromDevice,
+}
+
+/// State tracking for coherence bugs: who wrote last.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Coherence {
+    /// Host writes not yet visible to device.
+    HostDirty,
+    /// Device writes not yet visible to host.
+    DeviceDirty,
+    /// In sync.
+    Clean,
+}
+
+/// A shared f32 buffer object.
+#[derive(Debug)]
+pub struct BufferObject {
+    data: Vec<f32>,
+    state: Coherence,
+    /// Telemetry.
+    pub syncs_to_device: u64,
+    pub syncs_from_device: u64,
+}
+
+impl BufferObject {
+    /// Allocate a zeroed BO of `len` f32 elements.
+    pub fn new(len: usize) -> BufferObject {
+        BufferObject {
+            data: vec![0.0; len],
+            state: Coherence::Clean,
+            syncs_to_device: 0,
+            syncs_from_device: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Host-side write access (marks the BO host-dirty).
+    pub fn map_mut(&mut self) -> &mut [f32] {
+        self.state = Coherence::HostDirty;
+        &mut self.data
+    }
+
+    /// Host-side read access; errors if the device wrote and the host has
+    /// not synced from device (a real coherence bug XRT users hit).
+    pub fn map(&self) -> Result<&[f32]> {
+        if self.state == Coherence::DeviceDirty {
+            return Err(Error::xrt(
+                "reading BO with un-synced device writes (missing sync FromDevice)",
+            ));
+        }
+        Ok(&self.data)
+    }
+
+    /// Device-side read access; errors if host writes were never synced.
+    pub(crate) fn device_read(&self) -> Result<&[f32]> {
+        if self.state == Coherence::HostDirty {
+            return Err(Error::xrt(
+                "device reading BO with un-synced host writes (missing sync ToDevice)",
+            ));
+        }
+        Ok(&self.data)
+    }
+
+    /// Device-side write access (marks device-dirty).
+    pub(crate) fn device_write(&mut self) -> &mut [f32] {
+        self.state = Coherence::DeviceDirty;
+        &mut self.data
+    }
+
+    /// Explicit sync; returns the modeled driver cost in seconds
+    /// (accounted by the caller against the Figure-7 stages).
+    pub fn sync(&mut self, dir: SyncDirection, cost_model: &SyncCost) -> f64 {
+        match dir {
+            SyncDirection::ToDevice => {
+                self.syncs_to_device += 1;
+                if self.state == Coherence::HostDirty {
+                    self.state = Coherence::Clean;
+                }
+                cost_model.cost_s(self.len() * 4, dir)
+            }
+            SyncDirection::FromDevice => {
+                self.syncs_from_device += 1;
+                if self.state == Coherence::DeviceDirty {
+                    self.state = Coherence::Clean;
+                }
+                cost_model.cost_s(self.len() * 4, dir)
+            }
+        }
+    }
+}
+
+/// Sync cost model: fixed driver overhead + per-byte cache-maintenance.
+#[derive(Debug, Clone)]
+pub struct SyncCost {
+    pub fixed_to_dev_s: f64,
+    pub fixed_from_dev_s: f64,
+    /// Cache flush/invalidate throughput (bytes/s).
+    pub bytes_per_s: f64,
+}
+
+impl Default for SyncCost {
+    fn default() -> Self {
+        SyncCost {
+            fixed_to_dev_s: 60e-6,
+            fixed_from_dev_s: 45e-6,
+            bytes_per_s: 40e9,
+        }
+    }
+}
+
+impl SyncCost {
+    pub fn cost_s(&self, bytes: usize, dir: SyncDirection) -> f64 {
+        let fixed = match dir {
+            SyncDirection::ToDevice => self.fixed_to_dev_s,
+            SyncDirection::FromDevice => self.fixed_from_dev_s,
+        };
+        fixed + bytes as f64 / self.bytes_per_s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn coherence_protocol_enforced() {
+        let mut bo = BufferObject::new(16);
+        bo.map_mut()[0] = 1.0;
+        // Device read before sync is a bug.
+        assert!(bo.device_read().is_err());
+        bo.sync(SyncDirection::ToDevice, &SyncCost::default());
+        assert_eq!(bo.device_read().unwrap()[0], 1.0);
+        // Device writes; host read before sync is a bug.
+        bo.device_write()[1] = 2.0;
+        assert!(bo.map().is_err());
+        bo.sync(SyncDirection::FromDevice, &SyncCost::default());
+        assert_eq!(bo.map().unwrap()[1], 2.0);
+    }
+
+    #[test]
+    fn sync_costs_scale_with_size() {
+        let cm = SyncCost::default();
+        let small = cm.cost_s(1024, SyncDirection::ToDevice);
+        let large = cm.cost_s(100 << 20, SyncDirection::ToDevice);
+        assert!(large > small);
+        assert!(small >= cm.fixed_to_dev_s);
+    }
+
+    #[test]
+    fn telemetry_counts_syncs() {
+        let mut bo = BufferObject::new(4);
+        let cm = SyncCost::default();
+        bo.sync(SyncDirection::ToDevice, &cm);
+        bo.sync(SyncDirection::ToDevice, &cm);
+        bo.sync(SyncDirection::FromDevice, &cm);
+        assert_eq!(bo.syncs_to_device, 2);
+        assert_eq!(bo.syncs_from_device, 1);
+    }
+}

@@ -1,0 +1,207 @@
+//! XRT device handle and kernel runs.
+//!
+//! Mirrors the XRT host API surface the paper's initialization uses
+//! (section V-A): register an xclbin (-> [`super::super::npu::NpuDevice`]
+//! load_config), preload per-size instruction streams, create BOs, and
+//! launch runs that execute a GEMM with explicit-sync semantics.
+
+use crate::gemm::tiling::Tiling;
+use crate::npu::config::StaticConfig;
+use crate::npu::{GemmReport, NpuDevice};
+use crate::util::error::{Error, Result};
+
+use super::bo::{BufferObject, SyncCost, SyncDirection};
+
+/// Host handle to the (simulated) NPU.
+pub struct XrtDevice {
+    pub npu: NpuDevice,
+    pub sync_cost: SyncCost,
+    /// Modeled seconds spent in driver syncs, split by direction.
+    pub sync_in_s: f64,
+    pub sync_out_s: f64,
+}
+
+/// A completed kernel run's result.
+#[derive(Debug, Clone)]
+pub struct Run {
+    pub report: GemmReport,
+    /// Modeled instruction-stream issue seconds for this run.
+    pub issue_s: f64,
+}
+
+impl XrtDevice {
+    /// Open the device (power-on state; no configuration resident).
+    pub fn open() -> XrtDevice {
+        XrtDevice {
+            npu: NpuDevice::new(),
+            sync_cost: SyncCost::default(),
+            sync_in_s: 0.0,
+            sync_out_s: 0.0,
+        }
+    }
+
+    /// Register an xclbin: loads the static configuration into the array.
+    /// Returns modeled reconfiguration seconds (0 if already resident).
+    pub fn register_xclbin(&mut self, cfg: &StaticConfig) -> Result<f64> {
+        self.npu.load_config(cfg)
+    }
+
+    /// Allocate a shared BO of `len` f32s.
+    pub fn alloc_bo(&self, len: usize) -> BufferObject {
+        BufferObject::new(len)
+    }
+
+    /// Sync a BO, accounting the driver cost to this device's telemetry.
+    pub fn sync_bo(&mut self, bo: &mut BufferObject, dir: SyncDirection) -> f64 {
+        let cost = bo.sync(dir, &self.sync_cost);
+        match dir {
+            SyncDirection::ToDevice => self.sync_in_s += cost,
+            SyncDirection::FromDevice => self.sync_out_s += cost,
+        }
+        cost
+    }
+
+    /// Issue a preloaded instruction stream (minimal reconfiguration for a
+    /// problem size). Returns modeled seconds.
+    pub fn issue_instructions(&mut self, words: &[u32]) -> Result<f64> {
+        self.npu.run_instructions(words)
+    }
+
+    /// Launch a GEMM run: device reads `a_bo`/`b_bo` (must be synced to
+    /// device), writes `c_bo` (left device-dirty — the host must sync it
+    /// back, like real XRT).
+    pub fn run_gemm(
+        &mut self,
+        a_bo: &BufferObject,
+        b_bo: &BufferObject,
+        c_bo: &mut BufferObject,
+        t: &Tiling,
+    ) -> Result<Run> {
+        let a_full = a_bo.device_read()?;
+        if a_full.len() < t.size.m * t.size.k {
+            return Err(Error::xrt(format!(
+                "input BO A has {} elements, problem needs {}",
+                a_full.len(),
+                t.size.m * t.size.k
+            )));
+        }
+        // BOs may be allocated at the padded size (m_padded × k); the
+        // device consumes the logical M×K prefix and pads internally.
+        let a = &a_full[..t.size.m * t.size.k];
+        let b = b_bo.device_read()?;
+        if c_bo.len() != t.size.m * t.size.n {
+            return Err(Error::xrt(format!(
+                "output BO has {} elements, problem needs {}",
+                c_bo.len(),
+                t.size.m * t.size.n
+            )));
+        }
+        let (c, report) = self.npu.execute_gemm(a, b, t)?;
+        c_bo.device_write().copy_from_slice(&c);
+        Ok(Run {
+            issue_s: self.npu.timing.inst_issue_s,
+            report,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::cpu;
+    use crate::gemm::sizes::ProblemSize;
+    use crate::npu::gemm_design;
+    use crate::util::rng::Rng;
+
+    fn full_flow(m: usize, k: usize, n: usize) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let t = Tiling::paper(ProblemSize::new(m, k, n)).unwrap();
+        let mut dev = XrtDevice::open();
+        dev.register_xclbin(&gemm_design::build_static_config(t.tiles))
+            .unwrap();
+        dev.issue_instructions(&gemm_design::build_instruction_stream(&t))
+            .unwrap();
+
+        let mut rng = Rng::new(77);
+        let mut a_bo = dev.alloc_bo(m * k);
+        let mut b_bo = dev.alloc_bo(k * n);
+        let mut c_bo = dev.alloc_bo(m * n);
+        rng.fill_normal(a_bo.map_mut(), 0.0, 1.0);
+        rng.fill_normal(b_bo.map_mut(), 0.0, 1.0);
+        dev.sync_bo(&mut a_bo, SyncDirection::ToDevice);
+        dev.sync_bo(&mut b_bo, SyncDirection::ToDevice);
+        dev.run_gemm(&a_bo, &b_bo, &mut c_bo, &t).unwrap();
+        dev.sync_bo(&mut c_bo, SyncDirection::FromDevice);
+        let a = a_bo.map().unwrap().to_vec();
+        let b = b_bo.map().unwrap().to_vec();
+        let c = c_bo.map().unwrap().to_vec();
+        (a, b, c)
+    }
+
+    #[test]
+    fn end_to_end_xrt_flow_is_correct() {
+        let (a, b, c) = full_flow(64, 64, 128);
+        let mut c_ref = vec![0.0; 64 * 128];
+        cpu::gemm_bf16_ref(&a, &b, &mut c_ref, 64, 64, 128);
+        for (x, y) in c.iter().zip(&c_ref) {
+            assert!((x - y).abs() <= 1e-4 * y.abs().max(1.0));
+        }
+    }
+
+    #[test]
+    fn unsynced_input_rejected() {
+        let t = Tiling::paper(ProblemSize::new(64, 64, 128)).unwrap();
+        let mut dev = XrtDevice::open();
+        dev.register_xclbin(&gemm_design::build_static_config(t.tiles))
+            .unwrap();
+        dev.issue_instructions(&gemm_design::build_instruction_stream(&t))
+            .unwrap();
+        let mut a_bo = dev.alloc_bo(64 * 64);
+        let b_bo = dev.alloc_bo(64 * 128);
+        let mut c_bo = dev.alloc_bo(64 * 128);
+        a_bo.map_mut()[0] = 1.0; // dirty, never synced
+        assert!(dev.run_gemm(&a_bo, &b_bo, &mut c_bo, &t).is_err());
+    }
+
+    #[test]
+    fn unsynced_output_read_rejected() {
+        let t = Tiling::paper(ProblemSize::new(64, 64, 128)).unwrap();
+        let mut dev = XrtDevice::open();
+        dev.register_xclbin(&gemm_design::build_static_config(t.tiles))
+            .unwrap();
+        dev.issue_instructions(&gemm_design::build_instruction_stream(&t))
+            .unwrap();
+        let mut a_bo = dev.alloc_bo(64 * 64);
+        let mut b_bo = dev.alloc_bo(64 * 128);
+        let mut c_bo = dev.alloc_bo(64 * 128);
+        dev.sync_bo(&mut a_bo, SyncDirection::ToDevice);
+        dev.sync_bo(&mut b_bo, SyncDirection::ToDevice);
+        dev.run_gemm(&a_bo, &b_bo, &mut c_bo, &t).unwrap();
+        assert!(c_bo.map().is_err(), "must sync FromDevice first");
+    }
+
+    #[test]
+    fn sync_telemetry_accumulates() {
+        let mut dev = XrtDevice::open();
+        let mut bo = dev.alloc_bo(1024);
+        dev.sync_bo(&mut bo, SyncDirection::ToDevice);
+        dev.sync_bo(&mut bo, SyncDirection::FromDevice);
+        assert!(dev.sync_in_s > 0.0);
+        assert!(dev.sync_out_s > 0.0);
+    }
+
+    #[test]
+    fn wrong_output_size_rejected() {
+        let t = Tiling::paper(ProblemSize::new(64, 64, 128)).unwrap();
+        let mut dev = XrtDevice::open();
+        dev.register_xclbin(&gemm_design::build_static_config(t.tiles))
+            .unwrap();
+        dev.issue_instructions(&gemm_design::build_instruction_stream(&t))
+            .unwrap();
+        let mut a_bo = dev.alloc_bo(64 * 64);
+        let mut b_bo = dev.alloc_bo(64 * 128);
+        let mut c_bo = dev.alloc_bo(10);
+        dev.sync_bo(&mut a_bo, SyncDirection::ToDevice);
+        dev.sync_bo(&mut b_bo, SyncDirection::ToDevice);
+        assert!(dev.run_gemm(&a_bo, &b_bo, &mut c_bo, &t).is_err());
+    }
+}

@@ -1,0 +1,14 @@
+//! XRT — the host programming interface, in the shape of Xilinx Run Time.
+//!
+//! The paper's host side (section V) talks to the NPU exclusively through
+//! XRT: register an xclbin, create shared buffer objects (BOs), sync them
+//! between host caches and device-visible memory, and launch kernel runs
+//! that feed the command processor an instruction stream. We model each of
+//! those verbs; "input sync." and "output sync." in the paper's Figure 7
+//! are exactly the BO sync calls accounted here.
+
+pub mod bo;
+pub mod device;
+
+pub use bo::{BufferObject, SyncDirection};
+pub use device::{Run, XrtDevice};

@@ -1,0 +1,238 @@
+//! Cross-layer integration tests.
+//!
+//! The heavyweight checks: the Rust llm.c port against the JAX train-step
+//! artifact (same parameters, same batch → same loss trajectory), the
+//! Pallas GEMM artifact against the NPU simulator, and a short end-to-end
+//! training run through the full engine stack.
+
+use xdna_repro::coordinator::backend::{NumericsBackend, PjrtGemms};
+use xdna_repro::coordinator::engine::{EngineConfig, GemmOffloadEngine, InputLayout};
+use xdna_repro::gemm::sizes::ProblemSize;
+use xdna_repro::model::data::{synthetic_corpus, DataLoader};
+use xdna_repro::model::ops::matmul::MatmulDispatch;
+use xdna_repro::model::trainer::{train, TrainBackend, TrainConfig};
+use xdna_repro::model::{Gpt2Model, ModelConfig, PARAM_NAMES};
+
+/// JAX flattens dict-pytree arguments in *sorted key order*, which is the
+/// ABI the train-step/forward artifacts expose — not the llm.c inventory
+/// order of PARAM_NAMES.
+fn sorted_param_names() -> Vec<&'static str> {
+    let mut names: Vec<&'static str> = PARAM_NAMES.to_vec();
+    names.sort();
+    names
+}
+use xdna_repro::runtime::client::{literal_f32, literal_i32, literal_scalar, RuntimeClient};
+use xdna_repro::runtime::manifest::{default_dir, Manifest};
+use xdna_repro::util::rng::Rng;
+
+fn artifacts_ready() -> bool {
+    default_dir().join("manifest.json").exists()
+}
+
+/// The full three-layer numerics agreement: L1 Pallas artifact (via PJRT),
+/// the Rust NPU simulator, and the bf16 CPU oracle on one GPT-2 size.
+#[test]
+fn pallas_artifact_simulator_and_oracle_agree() {
+    if !artifacts_ready() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let manifest = Manifest::load(default_dir()).unwrap();
+    let size = ProblemSize::new(256, 768, 768);
+    let mut rng = Rng::new(1);
+    let mut a = vec![0.0f32; size.m * size.k];
+    let mut b = vec![0.0f32; size.k * size.n];
+    rng.fill_normal(&mut a, 0.0, 1.0);
+    rng.fill_normal(&mut b, 0.0, 0.05);
+
+    // PJRT backend through the full engine path.
+    let pjrt = PjrtGemms::open(manifest).unwrap();
+    let mut eng_pjrt = GemmOffloadEngine::new(
+        EngineConfig {
+            backend: NumericsBackend::Pjrt(pjrt),
+            ..Default::default()
+        },
+        &[size],
+    )
+    .unwrap();
+    let mut c_pjrt = vec![0.0f32; size.m * size.n];
+    eng_pjrt
+        .gemm(size, &a, &b, InputLayout::RowMajor, &mut c_pjrt)
+        .unwrap();
+
+    // Simulator backend through the same path.
+    let mut eng_sim = GemmOffloadEngine::new(EngineConfig::default(), &[size]).unwrap();
+    let mut c_sim = vec![0.0f32; size.m * size.n];
+    eng_sim
+        .gemm(size, &a, &b, InputLayout::RowMajor, &mut c_sim)
+        .unwrap();
+
+    // bf16 oracle.
+    let mut c_ref = vec![0.0f32; size.m * size.n];
+    xdna_repro::gemm::cpu::gemm_bf16_ref(&a, &b, &mut c_ref, size.m, size.k, size.n);
+
+    let d1 = xdna_repro::util::stats::mean_rms_divergence(&c_pjrt, &c_ref);
+    let d2 = xdna_repro::util::stats::mean_rms_divergence(&c_sim, &c_ref);
+    assert!(d1 < 1e-4, "pallas-vs-oracle {d1}");
+    assert!(d2 < 1e-4, "simulator-vs-oracle {d2}");
+}
+
+/// Run the JAX train-step artifact with the Rust model's parameters and
+/// batch; losses and updated parameters must track the Rust trainer.
+#[test]
+fn jax_train_step_artifact_matches_rust_model() {
+    if !artifacts_ready() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let manifest = Manifest::load(default_dir()).unwrap();
+    let art = manifest.model("d2").unwrap();
+    let cfg = ModelConfig::from_artifact(art);
+    let (b, t) = (art.batch, art.seq);
+
+    let mut model = Gpt2Model::new(cfg, 99);
+    let mut rng = Rng::new(2);
+    let tokens: Vec<i32> = (0..b * t).map(|_| rng.below(cfg.vocab_size) as i32).collect();
+    let targets: Vec<i32> = (0..b * t).map(|_| rng.below(cfg.vocab_size) as i32).collect();
+
+    // --- JAX side: params/m/v literals + one step. -----------------------
+    let mut rt = RuntimeClient::cpu().unwrap();
+    let exe = rt.load(manifest.file(&art.train_step_file)).unwrap();
+    let shapes = model.params.shapes();
+    let mut args: Vec<xla::Literal> = Vec::new();
+    for group in 0..3 {
+        for name in sorted_param_names() {
+            let (off, len) = model.params.tensor_range(name).unwrap();
+            let shape = &shapes.iter().find(|(n, _)| *n == name).unwrap().1;
+            let data: Vec<f32> = match group {
+                0 => model.params.as_slice()[off..off + len].to_vec(),
+                _ => vec![0.0; len], // fresh m and v
+            };
+            args.push(literal_f32(&data, shape).unwrap());
+        }
+    }
+    args.push(literal_scalar(1.0));
+    args.push(literal_i32(&tokens, &[b, t]).unwrap());
+    args.push(literal_i32(&targets, &[b, t]).unwrap());
+    let outs = exe.run_f32(&args).unwrap();
+    // Returns params*16, m*16, v*16, loss, grad_norm.
+    assert_eq!(outs.len(), 50);
+    let jax_loss = outs[48][0];
+    let jax_gnorm = outs[49][0];
+
+    // --- Rust side: same params, same batch, one step. --------------------
+    let mut dispatch = MatmulDispatch::Cpu;
+    let rust_loss = model
+        .forward(&mut dispatch, &tokens, Some(&targets), b, t)
+        .unwrap()
+        .unwrap();
+    model.zero_grad();
+    model.backward(&mut dispatch).unwrap();
+    let opt = xdna_repro::model::ops::adamw::AdamW {
+        lr: art.optimizer.lr as f32,
+        beta1: art.optimizer.beta1 as f32,
+        beta2: art.optimizer.beta2 as f32,
+        eps: art.optimizer.eps as f32,
+        weight_decay: art.optimizer.weight_decay as f32,
+        grad_clip: art.optimizer.grad_clip as f32,
+    };
+    let rust_gnorm = model.update(&opt);
+
+    assert!(
+        (jax_loss - rust_loss).abs() < 2e-3 * rust_loss.abs().max(1.0),
+        "loss: jax {jax_loss} vs rust {rust_loss}"
+    );
+    assert!(
+        (jax_gnorm - rust_gnorm).abs() < 0.05 * rust_gnorm.abs().max(0.1),
+        "grad norm: jax {jax_gnorm} vs rust {rust_gnorm}"
+    );
+
+    // Updated wte must agree elementwise (spot-check a slice). In the
+    // sorted-key output order "wte" is the last of the 16 param tensors.
+    let wte_idx = sorted_param_names().iter().position(|n| *n == "wte").unwrap();
+    let (off, _) = model.params.tensor_range("wte").unwrap();
+    let rust_wte = &model.params.as_slice()[off..off + 256];
+    let jax_wte = &outs[wte_idx][..256];
+    for (i, (r, j)) in rust_wte.iter().zip(jax_wte).enumerate() {
+        assert!(
+            (r - j).abs() < 5e-4,
+            "wte[{i}] diverged: rust {r} vs jax {j}"
+        );
+    }
+}
+
+/// End-to-end: a short training run through the full engine stack reduces
+/// the loss, and both reconfig policies produce identical numerics.
+#[test]
+fn training_through_full_stack_reduces_loss() {
+    let cfg = ModelConfig::d2();
+    let tc = TrainConfig {
+        batch: 2,
+        seq: 16,
+        epochs: 6,
+        steps_per_epoch: 6,
+        ..Default::default()
+    };
+    let corpus = synthetic_corpus(cfg.vocab_size, (2 * 16 + 1) * 32, 13);
+
+    let mut losses = Vec::new();
+    for policy in [
+        xdna_repro::coordinator::ReconfigPolicy::Minimal,
+        xdna_repro::coordinator::ReconfigPolicy::FullArray,
+    ] {
+        let mut loader = DataLoader::new(corpus.clone(), 2, 16).unwrap();
+        let mut model = Gpt2Model::new(cfg, 31);
+        let mut eng = GemmOffloadEngine::new(
+            EngineConfig {
+                policy,
+                ..Default::default()
+            },
+            &[],
+        )
+        .unwrap();
+        let stats = train(&mut model, &mut loader, &mut TrainBackend::CpuNpu(&mut eng), &tc)
+            .unwrap();
+        assert!(stats.last().unwrap().loss < stats[0].loss);
+        losses.push(stats.last().unwrap().loss);
+    }
+    // Reconfiguration policy changes timing, never numerics.
+    assert_eq!(losses[0], losses[1]);
+}
+
+/// Forward-only artifact agrees with the Rust forward pass on logits.
+#[test]
+fn forward_artifact_matches_rust_logits() {
+    if !artifacts_ready() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let manifest = Manifest::load(default_dir()).unwrap();
+    let art = manifest.model("d2").unwrap();
+    let cfg = ModelConfig::from_artifact(art);
+    let (b, t) = (art.batch, art.seq);
+
+    let mut model = Gpt2Model::new(cfg, 7);
+    let mut rng = Rng::new(3);
+    let tokens: Vec<i32> = (0..b * t).map(|_| rng.below(cfg.vocab_size) as i32).collect();
+
+    let mut rt = RuntimeClient::cpu().unwrap();
+    let exe = rt.load(manifest.file(&art.forward_file)).unwrap();
+    let shapes = model.params.shapes();
+    let mut args: Vec<xla::Literal> = Vec::new();
+    for name in sorted_param_names() {
+        let (off, len) = model.params.tensor_range(name).unwrap();
+        let shape = &shapes.iter().find(|(n, _)| *n == name).unwrap().1;
+        args.push(literal_f32(&model.params.as_slice()[off..off + len], shape).unwrap());
+    }
+    args.push(literal_i32(&tokens, &[b, t]).unwrap());
+    let outs = exe.run_f32(&args).unwrap();
+    assert_eq!(outs.len(), 1);
+    let jax_logits = &outs[0];
+
+    let mut dispatch = MatmulDispatch::Cpu;
+    model.forward(&mut dispatch, &tokens, None, b, t).unwrap();
+    let rust_logits = &model.acts.as_ref().unwrap().logits;
+    assert_eq!(jax_logits.len(), rust_logits.len());
+    let d = xdna_repro::util::stats::mean_rms_divergence(rust_logits, jax_logits);
+    assert!(d < 5e-3, "logits divergence {d}");
+}
