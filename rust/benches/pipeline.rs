@@ -1,0 +1,92 @@
+//! Overlapped-vs-serial offload schedule: the modeled epoch-level report
+//! plus a measured run of the real engine in both execution modes over a
+//! GPT-2-shaped GEMM stream.
+use xdna_repro::bench::pipeline;
+use xdna_repro::coordinator::engine::{
+    EngineConfig, ExecMode, GemmOffloadEngine, InputLayout, STAGES,
+};
+use xdna_repro::gemm::sizes::ProblemSize;
+use xdna_repro::power::profiles::PowerProfile;
+use xdna_repro::util::rng::Rng;
+
+fn run_stream(mode: ExecMode, sizes: &[ProblemSize], rounds: usize) -> GemmOffloadEngine {
+    let mut eng = GemmOffloadEngine::new(
+        EngineConfig {
+            mode,
+            ..Default::default()
+        },
+        sizes,
+    )
+    .unwrap();
+    let mut rng = Rng::new(5);
+    let inputs: Vec<(Vec<f32>, Vec<f32>)> = sizes
+        .iter()
+        .map(|s| {
+            let mut a = vec![0.0f32; s.m * s.k];
+            let mut b_t = vec![0.0f32; s.n * s.k]; // N×K: forces transpose
+            rng.fill_normal(&mut a, 0.0, 1.0);
+            rng.fill_normal(&mut b_t, 0.0, 0.1);
+            (a, b_t)
+        })
+        .collect();
+    let mut outs: Vec<Vec<f32>> = sizes.iter().map(|s| vec![0.0f32; s.m * s.n]).collect();
+    for _ in 0..rounds {
+        match mode {
+            ExecMode::Serial => {
+                for ((size, (a, b_t)), c) in sizes.iter().zip(&inputs).zip(&mut outs) {
+                    eng.gemm(*size, a, b_t, InputLayout::Transposed, c).unwrap();
+                }
+            }
+            ExecMode::Pipelined => {
+                let mut pending: Vec<(usize, xdna_repro::coordinator::Ticket)> = Vec::new();
+                for (i, (size, (a, b_t))) in sizes.iter().zip(&inputs).enumerate() {
+                    if pending.len() == 2 {
+                        let (j, t) = pending.remove(0);
+                        eng.wait(t, &mut outs[j]).unwrap();
+                    }
+                    let t = eng
+                        .submit(*size, a, InputLayout::RowMajor, b_t, InputLayout::Transposed)
+                        .unwrap();
+                    pending.push((i, t));
+                }
+                for (j, t) in pending {
+                    eng.wait(t, &mut outs[j]).unwrap();
+                }
+            }
+        }
+    }
+    eng
+}
+
+fn main() {
+    // Modeled epoch-level schedule for the full 124M GEMM stream.
+    pipeline::print(&PowerProfile::mains());
+    pipeline::print(&PowerProfile::battery());
+
+    // Measured engine runs over a trio of forward sizes.
+    let sizes = [
+        ProblemSize::new(256, 768, 768),
+        ProblemSize::new(256, 768, 2304),
+        ProblemSize::new(256, 2304, 768),
+    ];
+    println!(
+        "\n=== Measured engine: serial vs pipelined over {} forward sizes ===",
+        sizes.len()
+    );
+    for mode in [ExecMode::Serial, ExecMode::Pipelined] {
+        let eng = run_stream(mode, &sizes, 5);
+        println!("\n-- {mode:?} --");
+        let total = eng.stages.total().as_secs_f64();
+        for s in STAGES {
+            let t = eng.stages.get(s).as_secs_f64();
+            println!("{:<14} {:>10.3} ms ({:>5.1}%)", s, t * 1e3, 100.0 * t / total);
+        }
+        println!(
+            "modeled: serial {:.3} ms, overlapped {:.3} ms, hidden {:.3} ms ({:.1}%)",
+            eng.pipeline.serial_s() * 1e3,
+            eng.pipeline.makespan_s() * 1e3,
+            eng.pipeline.hidden_s() * 1e3,
+            100.0 * eng.pipeline.hidden_s() / eng.pipeline.serial_s()
+        );
+    }
+}

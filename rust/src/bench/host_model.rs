@@ -10,11 +10,14 @@ use crate::gemm::tiling::Tiling;
 use crate::npu::timing::TimingModel;
 use crate::xrt::bo::{SyncCost, SyncDirection};
 
-/// Plain memcpy bandwidth into the shared BO (bytes/s).
-pub const COPY_BYTES_PER_S: f64 = 20e9;
+/// Plain memcpy bandwidth into the shared BO (bytes/s). Canonical value
+/// lives on [`crate::npu::timing::HostStagingModel`] so the engine's
+/// pipeline timeline uses the same calibration as these reports.
+pub const COPY_BYTES_PER_S: f64 = crate::npu::timing::HostStagingModel::COPY_BYTES_PER_S;
 /// Blocked multi-core transpose bandwidth (bytes/s) — strided writes are
 /// slower than memcpy.
-pub const TRANSPOSE_BYTES_PER_S: f64 = 12e9;
+pub const TRANSPOSE_BYTES_PER_S: f64 =
+    crate::npu::timing::HostStagingModel::TRANSPOSE_BYTES_PER_S;
 
 /// Modeled host+device breakdown of one offloaded GEMM invocation.
 #[derive(Debug, Clone, Default)]

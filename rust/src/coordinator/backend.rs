@@ -7,21 +7,28 @@
 //!
 //! * [`NumericsBackend::Simulator`] — the XDNA simulator's functional
 //!   datapath (default; self-contained).
-//! * [`NumericsBackend::Pjrt`] — the AOT-lowered Pallas GEMM artifact for
+//! * `NumericsBackend::Pjrt` (requires the `pjrt` cargo feature, which
+//!   pulls in the `xla` crate) — the AOT-lowered Pallas GEMM artifact for
 //!   that problem size, executed through the PJRT CPU client. This is the
 //!   true three-layer path: L1 Pallas kernel inside an L2-lowered HLO,
 //!   driven from the L3 coordinator.
 
+#[cfg(feature = "pjrt")]
 use std::collections::BTreeMap;
 
+#[cfg(feature = "pjrt")]
 use crate::gemm::sizes::ProblemSize;
+#[cfg(feature = "pjrt")]
 use crate::runtime::client::{literal_f32, RuntimeClient};
+#[cfg(feature = "pjrt")]
 use crate::runtime::manifest::Manifest;
+#[cfg(feature = "pjrt")]
 use crate::util::error::{Error, Result};
 
 /// Where GEMM numerics come from.
 pub enum NumericsBackend {
     Simulator,
+    #[cfg(feature = "pjrt")]
     Pjrt(PjrtGemms),
 }
 
@@ -29,18 +36,21 @@ impl std::fmt::Debug for NumericsBackend {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
             NumericsBackend::Simulator => write!(f, "Simulator"),
+            #[cfg(feature = "pjrt")]
             NumericsBackend::Pjrt(_) => write!(f, "Pjrt"),
         }
     }
 }
 
 /// Per-size compiled Pallas GEMM executables.
+#[cfg(feature = "pjrt")]
 pub struct PjrtGemms {
     client: RuntimeClient,
     manifest: Manifest,
     loaded: BTreeMap<ProblemSize, crate::runtime::client::Executable>,
 }
 
+#[cfg(feature = "pjrt")]
 impl PjrtGemms {
     /// Open the PJRT client against an artifacts directory.
     pub fn open(manifest: Manifest) -> Result<PjrtGemms> {
@@ -89,7 +99,7 @@ impl PjrtGemms {
     }
 }
 
-#[cfg(test)]
+#[cfg(all(test, feature = "pjrt"))]
 mod tests {
     use super::*;
     use crate::runtime::manifest::default_dir;

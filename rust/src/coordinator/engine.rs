@@ -1,4 +1,4 @@
-//! The GEMM offload engine — paper section V.
+//! The GEMM offload engine — paper section V, plus a pipelined extension.
 //!
 //! Initialization (V-A): the static configuration is registered once; for
 //! every problem size the engine preloads an instruction stream and a set
@@ -11,14 +11,30 @@
 //! size changed), run the kernel, sync back, copy out. Every stage is
 //! timed — wallclock for what really runs on this machine, plus the
 //! modeled seconds of the simulated device — producing Figure 7.
+//!
+//! Pipelining: Figure 7 shows the kernel is only one of seven serialized
+//! stages, so host-side staging bounds end-to-end speedup. The engine
+//! therefore exposes a submission-queue API ([`GemmOffloadEngine::submit`]
+//! / [`GemmOffloadEngine::wait`]) backed by *paired* per-size BO sets:
+//! with [`ExecMode::Pipelined`], invocation N+1's input copy + transpose +
+//! input sync stage into the second BO set of the pair while invocation
+//! N's kernel and output sync still occupy the device. The modeled
+//! timeline ([`crate::npu::timing::PipelineTimeline`]) accounts for the
+//! overlap without ever double-counting kernel time — device spans stay
+//! strictly serialized; only host staging hides. [`ExecMode::Serial`]
+//! keeps the paper's strictly serial schedule (Figure 7 fidelity); both
+//! modes run the identical staging/kernel code, so results are
+//! bit-identical across modes.
 
-use std::collections::BTreeMap;
-use std::time::Instant;
+use std::collections::{BTreeMap, VecDeque};
+use std::time::{Duration, Instant};
 
 use crate::gemm::sizes::ProblemSize;
 use crate::gemm::tiling::Tiling;
 use crate::npu::gemm_design::build_instruction_stream;
+use crate::npu::timing::{HostStagingModel, PipelineTimeline};
 use crate::util::error::{Error, Result};
+use crate::util::threads::join2;
 use crate::util::timer::StageTimer;
 use crate::xrt::{BufferObject, SyncDirection, XrtDevice};
 
@@ -46,6 +62,12 @@ pub const STAGES: [&str; 7] = [
     STAGE_OUTPUT_COPY,
 ];
 
+/// How many BO sets each registered size owns in [`ExecMode::Pipelined`] —
+/// two, so one invocation can stage while the previous one still occupies
+/// the device (double buffering, the host-level mirror of the kernel's
+/// ping-pong L1 halves). [`ExecMode::Serial`] allocates a single set.
+pub const PAIRED_SLOTS: usize = 2;
+
 /// Layout of the B input at its llm.c call site.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum InputLayout {
@@ -56,10 +78,25 @@ pub enum InputLayout {
     Transposed,
 }
 
+/// How invocations are scheduled through the engine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ExecMode {
+    /// The paper's strictly serial schedule: every invocation runs all
+    /// seven stages back to back (Figure 7 fidelity). At most one
+    /// invocation may be in flight.
+    #[default]
+    Serial,
+    /// Double-buffered submission queue: up to [`PAIRED_SLOTS`] invocations
+    /// in flight, the newer one's host staging overlapping the older one's
+    /// device work in the modeled timeline.
+    Pipelined,
+}
+
 /// Engine construction options.
 pub struct EngineConfig {
     pub policy: ReconfigPolicy,
     pub backend: NumericsBackend,
+    pub mode: ExecMode,
 }
 
 impl Default for EngineConfig {
@@ -67,8 +104,19 @@ impl Default for EngineConfig {
         EngineConfig {
             policy: ReconfigPolicy::Minimal,
             backend: NumericsBackend::Simulator,
+            mode: ExecMode::Serial,
         }
     }
+}
+
+/// One set of shared buffers for a problem size.
+struct BoSet {
+    /// Padded A buffer (m_padded × k; pad rows stay zero).
+    a_bo: BufferObject,
+    /// B buffer (k × n row-major).
+    b_bo: BufferObject,
+    /// Output buffer (m × n_padded).
+    c_bo: BufferObject,
 }
 
 /// Preloaded per-size state (the registry entry).
@@ -80,16 +128,36 @@ struct Prepared {
     /// engine stays usable for arbitrary sizes).
     tiling: Tiling,
     inst_stream: Vec<u32>,
-    /// Padded A buffer (m_padded × k; pad rows stay zero).
-    a_bo: BufferObject,
-    /// B buffer (k × n row-major).
-    b_bo: BufferObject,
-    /// Output buffer (m × n, unpadded).
-    c_bo: BufferObject,
+    /// BO sets — one per allowed in-flight invocation; pipelined engines
+    /// hold a pair and alternate between them so staging for one can
+    /// overlap device work on the other.
+    slots: Vec<BoSet>,
+    next_slot: usize,
     /// Telemetry for Figure 6.
     invocations: u64,
     wall_s: f64,
     modeled_s: f64,
+}
+
+/// Handle for an in-flight submission; redeem with
+/// [`GemmOffloadEngine::wait`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Ticket(u64);
+
+/// Book-keeping for one in-flight invocation.
+struct Pending {
+    ticket: u64,
+    size: ProblemSize,
+    slot: usize,
+    /// Modeled completion time of this invocation's device span on the
+    /// pipeline timeline.
+    device_done_s: f64,
+    submitted: Instant,
+    modeled_kernel_s: f64,
+    modeled_sync_in_s: f64,
+    modeled_sync_out_s: f64,
+    modeled_reconfig_s: f64,
+    modeled_energy_j: f64,
 }
 
 /// Per-invocation result statistics.
@@ -102,7 +170,9 @@ pub struct InvocationStats {
     pub modeled_sync_out_s: f64,
     pub modeled_reconfig_s: f64,
     pub modeled_energy_j: f64,
-    /// Wallclock of the full invocation on this machine.
+    /// Wallclock from submission to completion on this machine (for the
+    /// serial path this is the full invocation; for the pipelined path it
+    /// is submit-to-wait latency and may include unrelated work).
     pub wall_s: f64,
 }
 
@@ -129,6 +199,7 @@ pub struct GemmOffloadEngine {
     pub dev: XrtDevice,
     backend: NumericsBackend,
     policy: ReconfigPolicy,
+    mode: ExecMode,
     registry: BTreeMap<ProblemSize, Prepared>,
     current_size: Option<ProblemSize>,
     /// Wallclock stage accounting across all invocations (Figure 7).
@@ -137,6 +208,104 @@ pub struct GemmOffloadEngine {
     pub modeled_stages: Vec<(String, f64)>,
     pub invocations: u64,
     pub modeled_energy_j: f64,
+    /// Modeled host/device schedule of every invocation so far. In
+    /// [`ExecMode::Serial`] its makespan equals its serial sum; in
+    /// [`ExecMode::Pipelined`] the difference is host staging hidden under
+    /// device work.
+    pub pipeline: PipelineTimeline,
+    /// Cost model feeding the timeline's host-side stage durations.
+    pub host_model: HostStagingModel,
+    /// Multiplier applied to device spans on the pipeline timeline (the
+    /// power profile's NPU throttle — battery stretches kernels, letting
+    /// more host staging hide). Per-invocation [`InvocationStats`] and
+    /// `modeled_stages` stay unscaled; reports apply profile scaling
+    /// themselves, as Figures 6–8 do.
+    device_time_scale: f64,
+    pending: VecDeque<Pending>,
+    next_ticket: u64,
+}
+
+/// Copy (or transpose-copy) `a` into the A BO with row stride `k_p`.
+/// Returns the elapsed wallclock and whether the transpose path ran.
+fn stage_a(
+    bo: &mut BufferObject,
+    a: &[f32],
+    layout: InputLayout,
+    m: usize,
+    k: usize,
+    k_p: usize,
+) -> (Duration, bool) {
+    let t0 = Instant::now();
+    match layout {
+        InputLayout::RowMajor => {
+            let a_host = bo.map_mut();
+            if k_p == k {
+                a_host[..m * k].copy_from_slice(a);
+            } else {
+                for r in 0..m {
+                    a_host[r * k_p..r * k_p + k].copy_from_slice(&a[r * k..(r + 1) * k]);
+                }
+            }
+            // pad rows/cols beyond m×k stay zero from allocation
+            (t0.elapsed(), false)
+        }
+        InputLayout::Transposed => {
+            // a is K×M row-major (e.g. dout viewed as its transpose);
+            // transpose into the BO's M×K (stride k_p) region.
+            if k_p == k {
+                transpose_into(a, &mut bo.map_mut()[..m * k], k, m);
+            } else {
+                let mut tmp = vec![0.0f32; m * k];
+                transpose_into(a, &mut tmp, k, m);
+                let a_host = bo.map_mut();
+                for r in 0..m {
+                    a_host[r * k_p..r * k_p + k].copy_from_slice(&tmp[r * k..(r + 1) * k]);
+                }
+            }
+            (t0.elapsed(), true)
+        }
+    }
+}
+
+/// Copy (or transpose-copy) `b` into the B BO with row stride `n_p`.
+fn stage_b(
+    bo: &mut BufferObject,
+    b: &[f32],
+    layout: InputLayout,
+    k: usize,
+    n: usize,
+    k_p: usize,
+    n_p: usize,
+) -> (Duration, bool) {
+    let t0 = Instant::now();
+    match layout {
+        InputLayout::RowMajor => {
+            if k_p == k && n_p == n {
+                bo.map_mut().copy_from_slice(b);
+            } else {
+                let b_host = bo.map_mut();
+                for r in 0..k {
+                    b_host[r * n_p..r * n_p + n].copy_from_slice(&b[r * n..(r + 1) * n]);
+                }
+            }
+            (t0.elapsed(), false)
+        }
+        InputLayout::Transposed => {
+            // b is N×K row-major; the copy into the BO transposes it to
+            // K×N (the paper's CPU-side transpose, multi-core).
+            if k_p == k && n_p == n {
+                transpose_into(b, bo.map_mut(), n, k);
+            } else {
+                let mut tmp = vec![0.0f32; k * n];
+                transpose_into(b, &mut tmp, n, k);
+                let b_host = bo.map_mut();
+                for r in 0..k {
+                    b_host[r * n_p..r * n_p + n].copy_from_slice(&tmp[r * n..(r + 1) * n]);
+                }
+            }
+            (t0.elapsed(), true)
+        }
+    }
 }
 
 impl GemmOffloadEngine {
@@ -147,12 +316,18 @@ impl GemmOffloadEngine {
             dev: XrtDevice::open(),
             backend: cfg.backend,
             policy: cfg.policy,
+            mode: cfg.mode,
             registry: BTreeMap::new(),
             current_size: None,
             stages: StageTimer::new(),
             modeled_stages: STAGES.iter().map(|s| (s.to_string(), 0.0)).collect(),
             invocations: 0,
             modeled_energy_j: 0.0,
+            pipeline: PipelineTimeline::new(),
+            host_model: HostStagingModel::default(),
+            device_time_scale: 1.0,
+            pending: VecDeque::new(),
+            next_ticket: 0,
         };
         for &s in sizes {
             eng.register_size(s)?;
@@ -161,7 +336,8 @@ impl GemmOffloadEngine {
     }
 
     /// Build and store the per-size state: tiling, instruction stream,
-    /// shared buffers. Idempotent.
+    /// shared-buffer sets (one per allowed in-flight invocation).
+    /// Idempotent.
     pub fn register_size(&mut self, size: ProblemSize) -> Result<()> {
         if self.registry.contains_key(&size) {
             return Ok(());
@@ -174,14 +350,23 @@ impl GemmOffloadEngine {
         let padded = ProblemSize::new(size.m, k_p, n_p);
         let tiling = Tiling::paper(padded)?;
         let inst_stream = build_instruction_stream(&tiling);
+        #[cfg(feature = "pjrt")]
         if let NumericsBackend::Pjrt(p) = &mut self.backend {
             p.prepare(size)?;
         }
+        // One BO set per allowed in-flight invocation: serial engines pay
+        // for a single set, pipelined engines for the double-buffered pair.
+        let slots: Vec<BoSet> = (0..self.max_in_flight())
+            .map(|_| BoSet {
+                a_bo: self.dev.alloc_bo(tiling.m_padded * k_p),
+                b_bo: self.dev.alloc_bo(k_p * n_p),
+                c_bo: self.dev.alloc_bo(size.m * n_p),
+            })
+            .collect();
         let prepared = Prepared {
             logical: size,
-            a_bo: self.dev.alloc_bo(tiling.m_padded * k_p),
-            b_bo: self.dev.alloc_bo(k_p * n_p),
-            c_bo: self.dev.alloc_bo(size.m * n_p),
+            slots,
+            next_slot: 0,
             tiling,
             inst_stream,
             invocations: 0,
@@ -197,6 +382,32 @@ impl GemmOffloadEngine {
         self.registry.keys().copied().collect()
     }
 
+    /// The scheduling mode this engine was built with.
+    pub fn exec_mode(&self) -> ExecMode {
+        self.mode
+    }
+
+    /// Submissions not yet redeemed with [`Self::wait`].
+    pub fn in_flight(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Set the multiplier applied to device spans on the pipeline timeline
+    /// (a power profile's `npu_time_scale`). Affects subsequent
+    /// submissions only; the trainer sets it from its profile so the
+    /// timeline's hidden/exposed split is computed against profile-time
+    /// kernels.
+    pub fn set_device_time_scale(&mut self, scale: f64) {
+        self.device_time_scale = scale;
+    }
+
+    fn max_in_flight(&self) -> usize {
+        match self.mode {
+            ExecMode::Serial => 1,
+            ExecMode::Pipelined => PAIRED_SLOTS,
+        }
+    }
+
     fn add_modeled(&mut self, stage: &str, s: f64) {
         if let Some(slot) = self.modeled_stages.iter_mut().find(|(n, _)| n == stage) {
             slot.1 += s;
@@ -205,14 +416,297 @@ impl GemmOffloadEngine {
         }
     }
 
+    /// Submit one offloaded GEMM: stage inputs into the next BO set of the
+    /// size's pair (A and B concurrently via host threads), sync them to
+    /// the device, reconfigure if the size changed, launch the kernel, and
+    /// sync the output back. Returns a [`Ticket`]; the result stays in the
+    /// slot's output BO until [`Self::wait`] copies it out.
+    ///
+    /// In [`ExecMode::Pipelined`] up to [`PAIRED_SLOTS`] submissions may be
+    /// in flight; [`ExecMode::Serial`] allows one (submit must be followed
+    /// by its wait — the paper's schedule).
+    pub fn submit(
+        &mut self,
+        size: ProblemSize,
+        a: &[f32],
+        a_layout: InputLayout,
+        b: &[f32],
+        b_layout: InputLayout,
+    ) -> Result<Ticket> {
+        let (m, k, n) = (size.m, size.k, size.n);
+        if a.len() != m * k || b.len() != k * n {
+            return Err(Error::shape(format!(
+                "engine gemm {size}: got A={} B={}",
+                a.len(),
+                b.len()
+            )));
+        }
+        if self.pending.len() >= self.max_in_flight() {
+            return Err(Error::config(format!(
+                "submission queue full ({} in flight, {:?} mode): wait() before submitting more",
+                self.pending.len(),
+                self.mode
+            )));
+        }
+        if !self.registry.contains_key(&size) {
+            // Lazy registration keeps the engine usable for new sizes, at
+            // first-invocation cost — same behaviour as the paper's init
+            // doing it up front.
+            self.register_size(size)?;
+        }
+        let submitted = Instant::now();
+
+        // We need disjoint borrows of self.registry and self.dev; take the
+        // prepared entry out and put it back at the end.
+        let mut prep = self.registry.remove(&size).expect("registered above");
+        let tiling = prep.tiling;
+        let slot = prep.next_slot;
+        prep.next_slot = (prep.next_slot + 1) % prep.slots.len();
+        let k_p = tiling.size.k;
+        let n_p = tiling.size.n;
+
+        // -- Stage 1: input copy (+ transpose where layouts demand). In the
+        //    pipelined mode A and B stage concurrently into the slot's
+        //    disjoint BOs; the serial mode keeps the paper's sequential
+        //    copies (Figure-7 fidelity). Either way the StageTimer records
+        //    elapsed wall time: the concurrent path's per-side durations
+        //    overlap, so they are rescaled to sum to the join2 span rather
+        //    than double-counting it.
+        let ((a_wall, a_transposed), (b_wall, b_transposed)) = {
+            let set = &mut prep.slots[slot];
+            let (a_bo, b_bo) = (&mut set.a_bo, &mut set.b_bo);
+            match self.mode {
+                ExecMode::Serial => (
+                    stage_a(a_bo, a, a_layout, m, k, k_p),
+                    stage_b(b_bo, b, b_layout, k, n, k_p, n_p),
+                ),
+                ExecMode::Pipelined => {
+                    let t0 = Instant::now();
+                    let ((a_d, a_t), (b_d, b_t)) = join2(
+                        || stage_a(a_bo, a, a_layout, m, k, k_p),
+                        || stage_b(b_bo, b, b_layout, k, n, k_p, n_p),
+                    );
+                    let span = t0.elapsed().as_secs_f64();
+                    let busy = (a_d.as_secs_f64() + b_d.as_secs_f64()).max(1e-12);
+                    let scale = span / busy;
+                    (
+                        (Duration::from_secs_f64(a_d.as_secs_f64() * scale), a_t),
+                        (Duration::from_secs_f64(b_d.as_secs_f64() * scale), b_t),
+                    )
+                }
+            }
+        };
+        self.stages.add(
+            if a_transposed { STAGE_TRANSPOSE } else { STAGE_INPUT_COPY },
+            a_wall,
+        );
+        self.stages.add(
+            if b_transposed { STAGE_TRANSPOSE } else { STAGE_INPUT_COPY },
+            b_wall,
+        );
+        // Modeled host-side staging (deterministic, for the timeline; the
+        // StageTimer above keeps the measured wallclock).
+        let a_bytes = m * k * 4;
+        let b_bytes = k * n * 4;
+        let host_a = if a_transposed {
+            self.host_model.transpose_s(a_bytes)
+        } else {
+            self.host_model.copy_s(a_bytes)
+        };
+        let host_b = if b_transposed {
+            self.host_model.transpose_s(b_bytes)
+        } else {
+            self.host_model.copy_s(b_bytes)
+        };
+
+        // Stages 2–5 are the device-facing path. On any error the prepared
+        // entry must go back into the registry — its other slot may still
+        // hold a pending invocation's un-copied result — so the fallible
+        // section runs through a closure and failures restore `prep`.
+        let device_path = |eng: &mut GemmOffloadEngine,
+                           prep: &mut Prepared|
+         -> Result<(f64, f64, f64, f64, f64)> {
+            // -- Stage 2: input sync. --------------------------------------
+            let t2 = Instant::now();
+            let set = &mut prep.slots[slot];
+            let sync_in_a = eng.dev.sync_bo(&mut set.a_bo, SyncDirection::ToDevice);
+            let sync_in_b = eng.dev.sync_bo(&mut set.b_bo, SyncDirection::ToDevice);
+            eng.stages.add(STAGE_INPUT_SYNC, t2.elapsed());
+            let modeled_sync_in = sync_in_a + sync_in_b;
+            eng.add_modeled(STAGE_INPUT_SYNC, modeled_sync_in);
+
+            // -- Stage 3: reconfiguration (only on size change). -----------
+            let t3 = Instant::now();
+            let modeled_reconfig = if eng.current_size != Some(size) {
+                let cost =
+                    reconfig::apply(eng.policy, &mut eng.dev, &tiling, &prep.inst_stream)?;
+                eng.current_size = Some(size);
+                cost
+            } else {
+                0.0
+            };
+            eng.stages.add(STAGE_RECONFIG, t3.elapsed());
+            eng.add_modeled(STAGE_RECONFIG, modeled_reconfig);
+
+            // -- Stage 4: the NPU kernel. -----------------------------------
+            let t4 = Instant::now();
+            let set = &mut prep.slots[slot];
+            let (modeled_kernel, modeled_energy) = match &mut eng.backend {
+                NumericsBackend::Simulator => {
+                    let run = eng.dev.run_gemm(&set.a_bo, &set.b_bo, &mut set.c_bo, &tiling)?;
+                    (
+                        run.report.timing.kernel_s + run.report.timing.issue_s
+                            + run.report.timing.dispatch_s,
+                        run.report.energy_j,
+                    )
+                }
+                #[cfg(feature = "pjrt")]
+                NumericsBackend::Pjrt(p) => {
+                    let a_dev = set.a_bo.device_read()?;
+                    let b_dev = set.b_bo.device_read()?;
+                    // Artifacts are lowered at (m_padded, k, n) for the exact
+                    // GPT-2 sizes, which never K/N-pad.
+                    let c_full = p.run(size, tiling.m_padded, a_dev, b_dev)?;
+                    set.c_bo.device_write()[..m * n].copy_from_slice(&c_full[..m * n]);
+                    // Model the device time exactly as the simulator would —
+                    // the artifact supplies numerics, the model supplies time.
+                    let gt = eng.dev.npu.timing.gemm(&tiling);
+                    let energy = eng
+                        .dev
+                        .npu
+                        .power
+                        .energy_j(gt.kernel_s, gt.total_s() - gt.kernel_s, 0.0);
+                    (gt.kernel_s + gt.issue_s + gt.dispatch_s, energy)
+                }
+            };
+            eng.stages.add(STAGE_KERNEL, t4.elapsed());
+            eng.add_modeled(STAGE_KERNEL, modeled_kernel);
+            eng.modeled_energy_j += modeled_energy;
+
+            // -- Stage 5: output sync. --------------------------------------
+            let t5 = Instant::now();
+            let set = &mut prep.slots[slot];
+            let modeled_sync_out = eng.dev.sync_bo(&mut set.c_bo, SyncDirection::FromDevice);
+            eng.stages.add(STAGE_OUTPUT_SYNC, t5.elapsed());
+            eng.add_modeled(STAGE_OUTPUT_SYNC, modeled_sync_out);
+            Ok((
+                modeled_sync_in,
+                modeled_reconfig,
+                modeled_kernel,
+                modeled_energy,
+                modeled_sync_out,
+            ))
+        };
+        let (modeled_sync_in, modeled_reconfig, modeled_kernel, modeled_energy, modeled_sync_out) =
+            match device_path(self, &mut prep) {
+                Ok(v) => v,
+                Err(e) => {
+                    self.registry.insert(size, prep);
+                    return Err(e);
+                }
+            };
+
+        // -- Modeled pipeline schedule: host staging may overlap an earlier
+        //    invocation's device span; device spans never overlap. ----------
+        let host_pre = host_a + host_b + modeled_sync_in;
+        let device_span =
+            (modeled_reconfig + modeled_kernel + modeled_sync_out) * self.device_time_scale;
+        let device_done_s = self.pipeline.submit(host_pre, device_span);
+
+        let ticket = self.next_ticket;
+        self.next_ticket += 1;
+        self.pending.push_back(Pending {
+            ticket,
+            size,
+            slot,
+            device_done_s,
+            submitted,
+            modeled_kernel_s: modeled_kernel,
+            modeled_sync_in_s: modeled_sync_in,
+            modeled_sync_out_s: modeled_sync_out,
+            modeled_reconfig_s: modeled_reconfig,
+            modeled_energy_j: modeled_energy,
+        });
+        self.registry.insert(size, prep);
+        Ok(Ticket(ticket))
+    }
+
+    /// Complete an in-flight submission: copy the result out of the slot's
+    /// output BO into `c` (M×N row-major) and return the invocation's
+    /// statistics. Tickets may be redeemed in any order.
+    pub fn wait(&mut self, ticket: Ticket, c: &mut [f32]) -> Result<InvocationStats> {
+        let idx = self
+            .pending
+            .iter()
+            .position(|p| p.ticket == ticket.0)
+            .ok_or_else(|| {
+                Error::config(format!("wait on unknown or already-completed {ticket:?}"))
+            })?;
+        let (m, n) = {
+            let p = &self.pending[idx];
+            (p.size.m, p.size.n)
+        };
+        if c.len() != m * n {
+            return Err(Error::shape(format!(
+                "engine wait {}x{}: got C={}",
+                m,
+                n,
+                c.len()
+            )));
+        }
+        let p = self.pending.remove(idx).expect("index valid");
+        let size = p.size;
+        let mut prep = self.registry.remove(&size).expect("pending implies registered");
+        let n_p = prep.tiling.size.n;
+
+        // -- Stage 6: output copy (drop N padding if any). ------------------
+        let t6 = Instant::now();
+        match prep.slots[p.slot].c_bo.map() {
+            Ok(c_host) => {
+                if n_p == n {
+                    c.copy_from_slice(&c_host[..m * n]);
+                } else {
+                    for r in 0..m {
+                        c[r * n..(r + 1) * n].copy_from_slice(&c_host[r * n_p..r * n_p + n]);
+                    }
+                }
+            }
+            Err(e) => {
+                self.registry.insert(size, prep);
+                return Err(e);
+            }
+        }
+        self.stages.add(STAGE_OUTPUT_COPY, t6.elapsed());
+        let host_post = self.host_model.copy_s(m * n * 4);
+        self.pipeline.wait(p.device_done_s, host_post);
+
+        let wall = p.submitted.elapsed().as_secs_f64();
+        let stats = InvocationStats {
+            size,
+            modeled_kernel_s: p.modeled_kernel_s,
+            modeled_sync_in_s: p.modeled_sync_in_s,
+            modeled_sync_out_s: p.modeled_sync_out_s,
+            modeled_reconfig_s: p.modeled_reconfig_s,
+            modeled_energy_j: p.modeled_energy_j,
+            wall_s: wall,
+        };
+        prep.invocations += 1;
+        prep.wall_s += wall;
+        prep.modeled_s += stats.modeled_total_s();
+        self.invocations += 1;
+        self.registry.insert(size, prep);
+        Ok(stats)
+    }
+
     /// Offloaded GEMM: `c = a · b` with `a` given in `a_layout` relative to
     /// M×K and `b` in `b_layout` relative to K×N. Writes the M×N row-major
     /// result into `c`.
     ///
-    /// This is the complete paper section V-B invocation path. Backward
-    /// weight-gradient GEMMs pass `a_layout = Transposed` (doutᵀ), which is
-    /// the "inconsistent data layouts across invocations" the paper fixes
-    /// with CPU-side transposes during the copy.
+    /// This is the complete paper section V-B invocation path — a submit
+    /// immediately followed by its wait. Backward weight-gradient GEMMs
+    /// pass `a_layout = Transposed` (doutᵀ), which is the "inconsistent
+    /// data layouts across invocations" the paper fixes with CPU-side
+    /// transposes during the copy.
     pub fn gemm_ex(
         &mut self,
         size: ProblemSize,
@@ -222,8 +716,7 @@ impl GemmOffloadEngine {
         b_layout: InputLayout,
         c: &mut [f32],
     ) -> Result<InvocationStats> {
-        let (m, k, n) = (size.m, size.k, size.n);
-        if a.len() != m * k || b.len() != k * n || c.len() != m * n {
+        if c.len() != size.m * size.n {
             return Err(Error::shape(format!(
                 "engine gemm {size}: got A={} B={} C={}",
                 a.len(),
@@ -231,169 +724,8 @@ impl GemmOffloadEngine {
                 c.len()
             )));
         }
-        if !self.registry.contains_key(&size) {
-            // Lazy registration keeps the engine usable for new sizes, at
-            // first-invocation cost — same behaviour as the paper's init
-            // doing it up front.
-            self.register_size(size)?;
-        }
-        let wall_start = Instant::now();
-
-        // We need disjoint borrows of self.registry and self.dev; take the
-        // prepared entry out and put it back at the end.
-        let mut prep = self.registry.remove(&size).expect("registered above");
-        let tiling = prep.tiling;
-
-        // -- Stage 1: input copy (+ transpose where layouts demand). -------
-        let t0 = Instant::now();
-        let k_p = prep.tiling.size.k;
-        let n_p = prep.tiling.size.n;
-        match a_layout {
-            InputLayout::RowMajor => {
-                let a_host = prep.a_bo.map_mut();
-                if k_p == k {
-                    a_host[..m * k].copy_from_slice(a);
-                } else {
-                    for r in 0..m {
-                        a_host[r * k_p..r * k_p + k].copy_from_slice(&a[r * k..(r + 1) * k]);
-                    }
-                }
-                // pad rows/cols beyond m×k stay zero from allocation
-                self.stages.add(STAGE_INPUT_COPY, t0.elapsed());
-            }
-            InputLayout::Transposed => {
-                // a is K×M row-major (e.g. dout viewed as its transpose);
-                // transpose into the BO's M×K (stride k_p) region.
-                if k_p == k {
-                    transpose_into(a, &mut prep.a_bo.map_mut()[..m * k], k, m);
-                } else {
-                    let mut tmp = vec![0.0f32; m * k];
-                    transpose_into(a, &mut tmp, k, m);
-                    let a_host = prep.a_bo.map_mut();
-                    for r in 0..m {
-                        a_host[r * k_p..r * k_p + k].copy_from_slice(&tmp[r * k..(r + 1) * k]);
-                    }
-                }
-                self.stages.add(STAGE_TRANSPOSE, t0.elapsed());
-            }
-        }
-
-        let t1 = Instant::now();
-        match b_layout {
-            InputLayout::RowMajor => {
-                if k_p == k && n_p == n {
-                    prep.b_bo.map_mut().copy_from_slice(b);
-                } else {
-                    let b_host = prep.b_bo.map_mut();
-                    for r in 0..k {
-                        b_host[r * n_p..r * n_p + n].copy_from_slice(&b[r * n..(r + 1) * n]);
-                    }
-                }
-                self.stages.add(STAGE_INPUT_COPY, t1.elapsed());
-            }
-            InputLayout::Transposed => {
-                // b is N×K row-major; the copy into the BO transposes it to
-                // K×N (the paper's CPU-side transpose, multi-core).
-                if k_p == k && n_p == n {
-                    transpose_into(b, prep.b_bo.map_mut(), n, k);
-                } else {
-                    let mut tmp = vec![0.0f32; k * n];
-                    transpose_into(b, &mut tmp, n, k);
-                    let b_host = prep.b_bo.map_mut();
-                    for r in 0..k {
-                        b_host[r * n_p..r * n_p + n].copy_from_slice(&tmp[r * n..(r + 1) * n]);
-                    }
-                }
-                self.stages.add(STAGE_TRANSPOSE, t1.elapsed());
-            }
-        }
-
-        // -- Stage 2: input sync. ------------------------------------------
-        let t2 = Instant::now();
-        let sync_in_a = self.dev.sync_bo(&mut prep.a_bo, SyncDirection::ToDevice);
-        let sync_in_b = self.dev.sync_bo(&mut prep.b_bo, SyncDirection::ToDevice);
-        self.stages.add(STAGE_INPUT_SYNC, t2.elapsed());
-        let modeled_sync_in = sync_in_a + sync_in_b;
-        self.add_modeled(STAGE_INPUT_SYNC, modeled_sync_in);
-
-        // -- Stage 3: reconfiguration (only on size change). ---------------
-        let t3 = Instant::now();
-        let modeled_reconfig = if self.current_size != Some(size) {
-            let cost = reconfig::apply(self.policy, &mut self.dev, &tiling, &prep.inst_stream)?;
-            self.current_size = Some(size);
-            cost
-        } else {
-            0.0
-        };
-        self.stages.add(STAGE_RECONFIG, t3.elapsed());
-        self.add_modeled(STAGE_RECONFIG, modeled_reconfig);
-
-        // -- Stage 4: the NPU kernel. ---------------------------------------
-        let t4 = Instant::now();
-        let (modeled_kernel, modeled_energy) = match &mut self.backend {
-            NumericsBackend::Simulator => {
-                let run = self.dev.run_gemm(&prep.a_bo, &prep.b_bo, &mut prep.c_bo, &tiling)?;
-                (run.report.timing.kernel_s + run.report.timing.issue_s
-                    + run.report.timing.dispatch_s, run.report.energy_j)
-            }
-            NumericsBackend::Pjrt(p) => {
-                let a_dev = prep.a_bo.device_read()?;
-                let b_dev = prep.b_bo.device_read()?;
-                // Artifacts are lowered at (m_padded, k, n) for the exact
-                // GPT-2 sizes, which never K/N-pad.
-                let c_full = p.run(size, tiling.m_padded, a_dev, b_dev)?;
-                prep.c_bo.device_write()[..m * n].copy_from_slice(&c_full[..m * n]);
-                // Model the device time exactly as the simulator would —
-                // the artifact supplies numerics, the model supplies time.
-                let gt = self.dev.npu.timing.gemm(&tiling);
-                let energy = self
-                    .dev
-                    .npu
-                    .power
-                    .energy_j(gt.kernel_s, gt.total_s() - gt.kernel_s, 0.0);
-                (gt.kernel_s + gt.issue_s + gt.dispatch_s, energy)
-            }
-        };
-        self.stages.add(STAGE_KERNEL, t4.elapsed());
-        self.add_modeled(STAGE_KERNEL, modeled_kernel);
-        self.modeled_energy_j += modeled_energy;
-
-        // -- Stage 5: output sync. ------------------------------------------
-        let t5 = Instant::now();
-        let modeled_sync_out = self.dev.sync_bo(&mut prep.c_bo, SyncDirection::FromDevice);
-        self.stages.add(STAGE_OUTPUT_SYNC, t5.elapsed());
-        self.add_modeled(STAGE_OUTPUT_SYNC, modeled_sync_out);
-
-        // -- Stage 6: output copy (drop N padding if any). ------------------
-        let t6 = Instant::now();
-        {
-            let c_host = prep.c_bo.map()?;
-            if n_p == n {
-                c.copy_from_slice(&c_host[..m * n]);
-            } else {
-                for r in 0..m {
-                    c[r * n..(r + 1) * n].copy_from_slice(&c_host[r * n_p..r * n_p + n]);
-                }
-            }
-        }
-        self.stages.add(STAGE_OUTPUT_COPY, t6.elapsed());
-
-        let wall = wall_start.elapsed().as_secs_f64();
-        let stats = InvocationStats {
-            size,
-            modeled_kernel_s: modeled_kernel,
-            modeled_sync_in_s: modeled_sync_in,
-            modeled_sync_out_s: modeled_sync_out,
-            modeled_reconfig_s: modeled_reconfig,
-            modeled_energy_j: modeled_energy,
-            wall_s: wall,
-        };
-        prep.invocations += 1;
-        prep.wall_s += wall;
-        prep.modeled_s += stats.modeled_total_s();
-        self.invocations += 1;
-        self.registry.insert(size, prep);
-        Ok(stats)
+        let ticket = self.submit(size, a, a_layout, b, b_layout)?;
+        self.wait(ticket, c)
     }
 
     /// Common case: `a` row-major, `b` in `b_layout`.
@@ -430,14 +762,17 @@ impl GemmOffloadEngine {
             .unwrap_or(0.0)
     }
 
-    /// Reset all accumulated statistics (between benchmark phases).
+    /// Reset all accumulated statistics (between benchmark phases). Call
+    /// only with no submissions in flight.
     pub fn reset_stats(&mut self) {
+        debug_assert!(self.pending.is_empty(), "reset_stats with work in flight");
         self.stages.reset();
         for (_, s) in self.modeled_stages.iter_mut() {
             *s = 0.0;
         }
         self.invocations = 0;
         self.modeled_energy_j = 0.0;
+        self.pipeline.reset();
         for p in self.registry.values_mut() {
             p.invocations = 0;
             p.wall_s = 0.0;
@@ -455,6 +790,17 @@ mod tests {
 
     fn engine_with(sizes: &[ProblemSize]) -> GemmOffloadEngine {
         GemmOffloadEngine::new(EngineConfig::default(), sizes).unwrap()
+    }
+
+    fn pipelined_with(sizes: &[ProblemSize]) -> GemmOffloadEngine {
+        GemmOffloadEngine::new(
+            EngineConfig {
+                mode: ExecMode::Pipelined,
+                ..Default::default()
+            },
+            sizes,
+        )
+        .unwrap()
     }
 
     #[test]
@@ -577,5 +923,121 @@ mod tests {
         let b = vec![0.0; 64 * 128];
         let mut c = vec![0.0; 64 * 128];
         assert!(eng.gemm(size, &a, &b, InputLayout::RowMajor, &mut c).is_err());
+    }
+
+    #[test]
+    fn serial_schedule_makespan_equals_serial_sum() {
+        let size = ProblemSize::new(64, 64, 128);
+        let mut eng = engine_with(&[size]);
+        let a = vec![1.0; 64 * 64];
+        let b = vec![1.0; 64 * 128];
+        let mut c = vec![0.0; 64 * 128];
+        for _ in 0..3 {
+            eng.gemm(size, &a, &b, InputLayout::RowMajor, &mut c).unwrap();
+        }
+        assert!(eng.pipeline.serial_s() > 0.0);
+        assert!((eng.pipeline.makespan_s() - eng.pipeline.serial_s()).abs() < 1e-12);
+        assert_eq!(eng.pipeline.hidden_s(), 0.0);
+    }
+
+    #[test]
+    fn pipelined_overlap_hides_host_staging() {
+        let s1 = ProblemSize::new(128, 128, 128);
+        let s2 = ProblemSize::new(128, 128, 256);
+        let mut eng = pipelined_with(&[s1, s2]);
+        let a1 = vec![1.0; 128 * 128];
+        let b1 = vec![1.0; 128 * 128];
+        let a2 = vec![1.0; 128 * 128];
+        let b2 = vec![1.0; 128 * 256];
+        let mut c1 = vec![0.0; 128 * 128];
+        let mut c2 = vec![0.0; 128 * 256];
+        for _ in 0..4 {
+            let t1 = eng.submit(s1, &a1, InputLayout::RowMajor, &b1, InputLayout::RowMajor).unwrap();
+            let t2 = eng.submit(s2, &a2, InputLayout::RowMajor, &b2, InputLayout::RowMajor).unwrap();
+            eng.wait(t1, &mut c1).unwrap();
+            eng.wait(t2, &mut c2).unwrap();
+        }
+        assert!(eng.pipeline.hidden_s() > 0.0, "back-to-back submits must overlap");
+        assert!(eng.pipeline.makespan_s() < eng.pipeline.serial_s());
+        // Overlap hides host staging only: the makespan can never drop
+        // below the serialized device spans.
+        assert!(eng.pipeline.makespan_s() >= eng.pipeline.device_busy_s);
+        assert_eq!(eng.invocations, 8);
+    }
+
+    #[test]
+    fn pipelined_results_bit_identical_to_serial() {
+        let sizes = [ProblemSize::new(128, 64, 128), ProblemSize::new(64, 128, 256)];
+        let mut rng = Rng::new(59);
+        for &size in &sizes {
+            let a = prop::gen::normal_vec(&mut rng, size.m * size.k);
+            let b_t = prop::gen::normal_vec(&mut rng, size.n * size.k); // N×K
+            let mut c_serial = vec![0.0; size.m * size.n];
+            let mut c_pipe = vec![0.0; size.m * size.n];
+            engine_with(&[size])
+                .gemm(size, &a, &b_t, InputLayout::Transposed, &mut c_serial)
+                .unwrap();
+            pipelined_with(&[size])
+                .gemm(size, &a, &b_t, InputLayout::Transposed, &mut c_pipe)
+                .unwrap();
+            assert_eq!(c_serial, c_pipe, "{size}: modes must be bit-identical");
+        }
+    }
+
+    #[test]
+    fn queue_depth_enforced_per_mode() {
+        let size = ProblemSize::new(64, 64, 128);
+        let a = vec![1.0; 64 * 64];
+        let b = vec![1.0; 64 * 128];
+        let mut c = vec![0.0; 64 * 128];
+
+        // Serial: one in flight.
+        let mut eng = engine_with(&[size]);
+        let t1 = eng.submit(size, &a, InputLayout::RowMajor, &b, InputLayout::RowMajor).unwrap();
+        assert!(eng.submit(size, &a, InputLayout::RowMajor, &b, InputLayout::RowMajor).is_err());
+        eng.wait(t1, &mut c).unwrap();
+
+        // Pipelined: two in flight (the BO pair), not three.
+        let mut eng = pipelined_with(&[size]);
+        let t1 = eng.submit(size, &a, InputLayout::RowMajor, &b, InputLayout::RowMajor).unwrap();
+        let t2 = eng.submit(size, &a, InputLayout::RowMajor, &b, InputLayout::RowMajor).unwrap();
+        assert_eq!(eng.in_flight(), 2);
+        assert!(eng.submit(size, &a, InputLayout::RowMajor, &b, InputLayout::RowMajor).is_err());
+        eng.wait(t1, &mut c).unwrap();
+        eng.wait(t2, &mut c).unwrap();
+        assert_eq!(eng.in_flight(), 0);
+    }
+
+    #[test]
+    fn same_size_in_flight_uses_both_slots_without_clobbering() {
+        // Two concurrent submissions of the same size land in different BO
+        // sets; both results must be correct (not the second overwriting
+        // the first).
+        let size = ProblemSize::new(64, 64, 128);
+        let mut eng = pipelined_with(&[size]);
+        let a1 = vec![1.0; 64 * 64];
+        let a2 = vec![2.0; 64 * 64];
+        let b = vec![1.0; 64 * 128];
+        let mut c1 = vec![0.0; 64 * 128];
+        let mut c2 = vec![0.0; 64 * 128];
+        let t1 = eng.submit(size, &a1, InputLayout::RowMajor, &b, InputLayout::RowMajor).unwrap();
+        let t2 = eng.submit(size, &a2, InputLayout::RowMajor, &b, InputLayout::RowMajor).unwrap();
+        // Redeem out of order for good measure.
+        eng.wait(t2, &mut c2).unwrap();
+        eng.wait(t1, &mut c1).unwrap();
+        assert!(c1.iter().all(|&x| (x - 64.0).abs() < 1e-3), "c1[0]={}", c1[0]);
+        assert!(c2.iter().all(|&x| (x - 128.0).abs() < 1e-3), "c2[0]={}", c2[0]);
+    }
+
+    #[test]
+    fn wait_on_unknown_ticket_is_error() {
+        let size = ProblemSize::new(64, 64, 128);
+        let mut eng = pipelined_with(&[size]);
+        let a = vec![1.0; 64 * 64];
+        let b = vec![1.0; 64 * 128];
+        let mut c = vec![0.0; 64 * 128];
+        let t = eng.submit(size, &a, InputLayout::RowMajor, &b, InputLayout::RowMajor).unwrap();
+        eng.wait(t, &mut c).unwrap();
+        assert!(eng.wait(t, &mut c).is_err(), "double wait must fail");
     }
 }

@@ -1,14 +1,18 @@
 //! The paper's system contribution: the minimal-reconfiguration GEMM
-//! offload engine (sections V and VI-D).
+//! offload engine (sections V and VI-D), extended with a pipelined,
+//! double-buffered submission queue.
 //!
-//! * [`engine`] — per-problem-size registry (instruction streams + shared
-//!   BOs preloaded at init), invocation path (copy → transpose → sync →
-//!   issue → kernel → sync → copy) with Figure-7 stage accounting.
+//! * [`engine`] — per-problem-size registry (instruction streams + *paired*
+//!   shared-BO sets preloaded at init), invocation path (copy → transpose →
+//!   sync → issue → kernel → sync → copy) with Figure-7 stage accounting,
+//!   and the [`engine::ExecMode::Pipelined`] submit/wait queue that hides
+//!   host staging under kernel execution.
 //! * [`reconfig`] — minimal vs whole-array reconfiguration policies (the
 //!   section VII-A ablation).
 //! * [`transpose`] — the multi-core CPU transpose of section V-B.
 //! * [`backend`] — where the GEMM numerics come from: the NPU simulator's
-//!   bf16 datapath or the AOT Pallas artifact through PJRT.
+//!   bf16 datapath or (with the `pjrt` feature) the AOT Pallas artifact
+//!   through PJRT.
 
 pub mod backend;
 pub mod engine;
@@ -16,5 +20,7 @@ pub mod reconfig;
 pub mod transpose;
 
 pub use backend::NumericsBackend;
-pub use engine::{EngineConfig, GemmOffloadEngine, InputLayout, InvocationStats};
+pub use engine::{
+    EngineConfig, ExecMode, GemmOffloadEngine, InputLayout, InvocationStats, Ticket,
+};
 pub use reconfig::ReconfigPolicy;

@@ -7,6 +7,21 @@
 
 /// A bfloat16 value (stored as its raw 16-bit pattern: the top half of the
 /// corresponding f32).
+///
+/// # Examples
+///
+/// ```
+/// use xdna_repro::gemm::bf16::Bf16;
+///
+/// // Small integers and powers of two round-trip exactly.
+/// assert_eq!(Bf16::quantize(3.0), 3.0);
+/// assert_eq!(Bf16::from_f32(0.5).to_f32(), 0.5);
+///
+/// // 8 mantissa bits: relative error after rounding is at most 2^-9.
+/// let x = 1.2345f32;
+/// let q = Bf16::quantize(x);
+/// assert!(((q - x) / x).abs() <= 1.0 / 256.0);
+/// ```
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub struct Bf16(pub u16);
 

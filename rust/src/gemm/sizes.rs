@@ -9,6 +9,18 @@
 use std::fmt;
 
 /// One GEMM problem size, C(M×N) = A(M×K) · B(K×N).
+///
+/// # Examples
+///
+/// ```
+/// use xdna_repro::gemm::sizes::ProblemSize;
+///
+/// // The paper's qkv forward GEMM at llm.c defaults (M = B·T = 256).
+/// let s = ProblemSize::new(256, 768, 2304);
+/// assert_eq!(s.to_string(), "256x768x2304");
+/// assert_eq!(s.flops(), 2 * 256 * 768 * 2304);
+/// assert_eq!(s.io_bytes_f32(), 4 * (256 * 768 + 768 * 2304 + 256 * 2304));
+/// ```
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct ProblemSize {
     pub m: usize,

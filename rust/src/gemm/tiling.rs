@@ -49,6 +49,21 @@ impl TileShape {
 }
 
 /// A fully tiled GEMM problem: validated dimensions + derived counts.
+///
+/// # Examples
+///
+/// ```
+/// use xdna_repro::gemm::sizes::ProblemSize;
+/// use xdna_repro::gemm::tiling::Tiling;
+///
+/// // The paper's lm_head weight-gradient GEMM: M = 50304 pads to 50432.
+/// let t = Tiling::paper(ProblemSize::new(50304, 256, 768)).unwrap();
+/// assert_eq!(t.m_padded, 50432);
+/// assert!(t.padded());
+///
+/// // K must divide by the 64-wide tile; 63 is rejected.
+/// assert!(Tiling::paper(ProblemSize::new(64, 63, 128)).is_err());
+/// ```
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Tiling {
     pub size: ProblemSize,

@@ -18,16 +18,39 @@
 //! * [`gemm`] — tiling math, bf16 substrate, the CPU (llm.c-style) GEMM
 //!   baseline, and the problem-size registry of GPT-2 124M.
 //! * [`coordinator`] — the paper's contribution: the minimal-reconfiguration
-//!   GEMM offload engine (Section V/VI of the paper).
+//!   GEMM offload engine (Section V/VI of the paper), extended with a
+//!   pipelined, double-buffered submission queue
+//!   ([`coordinator::engine::ExecMode`]) that hides host staging under
+//!   kernel execution.
 //! * [`model`] — an llm.c port: GPT-2 forward/backward/AdamW in pure Rust
 //!   with every matmul dispatched through the offload engine.
-//! * [`runtime`] — PJRT loader for the JAX/Pallas AOT artifacts
+//! * [`runtime`] — the artifact manifest ABI and (behind the `pjrt` cargo
+//!   feature) the PJRT loader for the JAX/Pallas AOT artifacts
 //!   (`artifacts/*.hlo.txt`) used as the numerical oracle and the
 //!   whole-model train step.
 //! * [`power`] — battery/mains power-supply model and energy metering.
 //! * [`bench`] — harness that regenerates every figure/table of the paper.
 //! * [`util`] — substrate the offline environment lacks: PRNG, JSON,
 //!   thread pool, stats, timers, CLI parsing.
+//!
+//! # Quickstart
+//!
+//! Offload one GEMM through the full engine → XRT → simulated-NPU stack:
+//!
+//! ```
+//! use xdna_repro::coordinator::engine::{EngineConfig, GemmOffloadEngine, InputLayout};
+//! use xdna_repro::gemm::sizes::ProblemSize;
+//!
+//! let size = ProblemSize::new(64, 64, 128);
+//! let mut engine = GemmOffloadEngine::new(EngineConfig::default(), &[size])?;
+//! let a = vec![1.0f32; size.m * size.k];
+//! let b = vec![0.5f32; size.k * size.n];
+//! let mut c = vec![0.0f32; size.m * size.n];
+//! let stats = engine.gemm(size, &a, &b, InputLayout::RowMajor, &mut c)?;
+//! assert!((c[0] - 32.0).abs() < 1e-3); // 64 * 1.0 * 0.5
+//! assert!(stats.modeled_total_s() > 0.0);
+//! # Ok::<(), xdna_repro::Error>(())
+//! ```
 
 pub mod bench;
 pub mod coordinator;

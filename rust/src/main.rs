@@ -10,7 +10,7 @@
 //!   inspect   — print model FLOP tables, GEMM sizes, NPU design info
 
 use xdna_repro::bench as paperbench;
-use xdna_repro::coordinator::engine::{EngineConfig, GemmOffloadEngine, InputLayout};
+use xdna_repro::coordinator::engine::{EngineConfig, ExecMode, GemmOffloadEngine, InputLayout};
 use xdna_repro::coordinator::ReconfigPolicy;
 use xdna_repro::gemm::sizes::{distinct_sizes, ModelDims, ProblemSize};
 use xdna_repro::model::data::{load_checkpoint, save_checkpoint, synthetic_corpus, DataLoader};
@@ -28,11 +28,12 @@ USAGE:
   xdna-repro train    [--config d2|d4|d6|d12] [--epochs N] [--steps N]
                       [--batch B] [--seq T] [--backend cpu|npu]
                       [--power mains|battery] [--policy minimal|full]
+                      [--mode serial|pipelined]
                       [--save ckpt.bin] [--seed S]
   xdna-repro gemm     [--m M --k K --n N] [--backend cpu|npu]
   xdna-repro generate [--config d2|d4|d6] [--load ckpt.bin] [--tokens N]
                       [--temperature F]
-  xdna-repro bench    [fig6|fig7|fig8|fig9|reconfig|accuracy|all]
+  xdna-repro bench    [fig6|fig7|fig8|fig9|pipeline|reconfig|accuracy|all]
   xdna-repro inspect  [flops|sizes|npu]
 ";
 
@@ -78,6 +79,11 @@ fn cmd_train(args: &Args) -> Result<()> {
         "full" => ReconfigPolicy::FullArray,
         p => return Err(Error::config(format!("unknown policy '{p}'"))),
     };
+    let mode = match args.get_or("mode", "pipelined") {
+        "serial" => ExecMode::Serial,
+        "pipelined" => ExecMode::Pipelined,
+        m => return Err(Error::config(format!("unknown exec mode '{m}'"))),
+    };
 
     let tc = TrainConfig {
         batch,
@@ -103,6 +109,7 @@ fn cmd_train(args: &Args) -> Result<()> {
             let mut eng = GemmOffloadEngine::new(
                 EngineConfig {
                     policy,
+                    mode,
                     ..Default::default()
                 },
                 &[],
@@ -113,6 +120,12 @@ fn cmd_train(args: &Args) -> Result<()> {
                 eng.invocations,
                 eng.registered_sizes().len(),
                 eng.modeled_energy_j
+            );
+            println!(
+                "offload schedule ({mode:?}): serial {:.1} ms, overlapped {:.1} ms, host time hidden {:.1} ms",
+                eng.pipeline.serial_s() * 1e3,
+                eng.pipeline.makespan_s() * 1e3,
+                eng.pipeline.hidden_s() * 1e3
             );
             out
         }
@@ -209,6 +222,10 @@ fn cmd_bench(args: &Args) -> Result<()> {
             paperbench::fig8::print(&PowerProfile::battery());
         }
         "fig9" => paperbench::fig9::print(),
+        "pipeline" => {
+            paperbench::pipeline::print(&mains);
+            paperbench::pipeline::print(&PowerProfile::battery());
+        }
         "reconfig" => paperbench::reconfig::print()?,
         "accuracy" => paperbench::accuracy::print(false)?,
         "all" => {
@@ -217,6 +234,8 @@ fn cmd_bench(args: &Args) -> Result<()> {
             paperbench::fig8::print(&mains);
             paperbench::fig8::print(&PowerProfile::battery());
             paperbench::fig9::print();
+            paperbench::pipeline::print(&mains);
+            paperbench::pipeline::print(&PowerProfile::battery());
             paperbench::reconfig::print()?;
             paperbench::accuracy::print(false)?;
         }

@@ -6,7 +6,7 @@
 //! decides whether the GEMM runs on the llm.c-style CPU loop nest or is
 //! offloaded through the engine (the paper's modification).
 
-use crate::coordinator::engine::{GemmOffloadEngine, InputLayout};
+use crate::coordinator::engine::{ExecMode, GemmOffloadEngine, InputLayout};
 use crate::gemm::cpu;
 use crate::gemm::sizes::ProblemSize;
 use crate::util::error::Result;
@@ -95,27 +95,44 @@ pub fn backward(
         }
         MatmulDispatch::Npu(engine) => {
             // Both backward GEMMs are offloaded — they are Figure 6's
-            // backward problem sizes.
+            // backward problem sizes. They read the same inputs and write
+            // disjoint outputs, so the pipelined engine overlaps the
+            // second invocation's host staging with the first's kernel.
             let mut tmp = vec![0.0f32; bt * ic];
-            engine.gemm(
-                ProblemSize::new(bt, oc, ic),
-                dout,
-                weight,
-                InputLayout::RowMajor,
-                &mut tmp,
-            )?;
+            let mut dw = vec![0.0f32; oc * ic];
+            let dinp_size = ProblemSize::new(bt, oc, ic);
+            let dw_size = ProblemSize::new(oc, bt, ic);
+            if engine.exec_mode() == ExecMode::Pipelined {
+                let t_dinp = engine.submit(
+                    dinp_size,
+                    dout,
+                    InputLayout::RowMajor,
+                    weight,
+                    InputLayout::RowMajor,
+                )?;
+                let t_dw = engine.submit(
+                    dw_size,
+                    dout,
+                    InputLayout::Transposed, // dout is (BT,OC): Mᵀ view
+                    inp,
+                    InputLayout::RowMajor,
+                )?;
+                engine.wait(t_dinp, &mut tmp)?;
+                engine.wait(t_dw, &mut dw)?;
+            } else {
+                engine.gemm(dinp_size, dout, weight, InputLayout::RowMajor, &mut tmp)?;
+                engine.gemm_ex(
+                    dw_size,
+                    dout,
+                    InputLayout::Transposed, // dout is (BT,OC): Mᵀ view
+                    inp,
+                    InputLayout::RowMajor,
+                    &mut dw,
+                )?;
+            }
             for (d, t) in dinp.iter_mut().zip(&tmp) {
                 *d += t;
             }
-            let mut dw = vec![0.0f32; oc * ic];
-            engine.gemm_ex(
-                ProblemSize::new(oc, bt, ic),
-                dout,
-                InputLayout::Transposed, // dout is (BT,OC): Mᵀ view
-                inp,
-                InputLayout::RowMajor,
-                &mut dw,
-            )?;
             for (d, t) in dweight.iter_mut().zip(&dw) {
                 *d += t;
             }
@@ -308,5 +325,49 @@ mod tests {
         for (x, y) in dw_n.iter().zip(&dw_c) {
             assert!((x - y).abs() <= 0.12 + 0.02 * y.abs(), "{x} vs {y}");
         }
+    }
+
+    #[test]
+    fn pipelined_backward_bit_identical_to_serial_and_overlaps() {
+        use crate::coordinator::engine::ExecMode;
+        let (bt, ic, oc) = (64, 128, 64);
+        let mut rng = Rng::new(79);
+        let inp = rand(&mut rng, bt * ic);
+        let w = rand(&mut rng, oc * ic);
+        let dout = rand(&mut rng, bt * oc);
+
+        let mut run = |mode: ExecMode| {
+            let mut eng = GemmOffloadEngine::new(
+                EngineConfig {
+                    mode,
+                    ..Default::default()
+                },
+                &[],
+            )
+            .unwrap();
+            let mut dinp = vec![0.0; bt * ic];
+            let mut dw = vec![0.0; oc * ic];
+            backward(
+                &mut MatmulDispatch::Npu(&mut eng),
+                &mut dinp,
+                &mut dw,
+                None,
+                &dout,
+                &inp,
+                &w,
+                bt,
+                ic,
+                oc,
+            )
+            .unwrap();
+            let hidden = eng.pipeline.hidden_s();
+            (dinp, dw, hidden)
+        };
+        let (dinp_s, dw_s, hidden_s) = run(ExecMode::Serial);
+        let (dinp_p, dw_p, hidden_p) = run(ExecMode::Pipelined);
+        assert_eq!(dinp_s, dinp_p, "pipelining must not change numerics");
+        assert_eq!(dw_s, dw_p);
+        assert_eq!(hidden_s, 0.0, "serial schedule has no overlap");
+        assert!(hidden_p > 0.0, "paired backward GEMMs must overlap");
     }
 }

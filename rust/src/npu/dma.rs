@@ -243,6 +243,29 @@ pub fn bd_microtile_order(tile_rows: usize, tile_cols: usize, mt_rows: usize, mt
     )
 }
 
+/// Build the two-BD ping-pong ring of the double-buffered protocol: the
+/// buffer is split in halves; BD 0 covers words `[0, half)` and BD 1 covers
+/// `[half, 2*half)`, each guarded by its own (empty, full) lock pair and
+/// chained back to the other. A producer channel cycling this ring fills
+/// one half while the consumer drains the other — the same overlap the
+/// host-level pipelined engine applies one layer up, expressed in the
+/// hardware's own BD + lock vocabulary.
+///
+/// `empty[i]`/`full[i]` are the lock indices guarding half `i`: the BD
+/// acquires `empty[i]` before writing the half and releases `full[i]` once
+/// done (the consumer's BDs do the reverse).
+pub fn bd_ping_pong(half_words: u32, empty: [usize; 2], full: [usize; 2]) -> [BufferDescriptor; 2] {
+    let mut lo = BufferDescriptor::linear(0, half_words);
+    lo.acquire_lock = Some(empty[0]);
+    lo.release_lock = Some(full[0]);
+    lo.next = Some(1);
+    let mut hi = BufferDescriptor::linear(half_words as i64, half_words);
+    hi.acquire_lock = Some(empty[1]);
+    hi.release_lock = Some(full[1]);
+    hi.next = Some(0);
+    [lo, hi]
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -338,6 +361,24 @@ mod tests {
         let sbd = BufferDescriptor::linear(0, 4);
         let dbd = BufferDescriptor::linear(0, 5);
         assert!(dma_copy(&src, &sbd, &mut dst, &dbd).is_err());
+    }
+
+    #[test]
+    fn ping_pong_ring_covers_both_halves_and_loops() {
+        let [lo, hi] = bd_ping_pong(8, [0, 1], [2, 3]);
+        // Halves are disjoint and contiguous.
+        let lo_addrs: Vec<i64> = lo.addresses().unwrap().collect();
+        let hi_addrs: Vec<i64> = hi.addresses().unwrap().collect();
+        assert_eq!(lo_addrs, (0..8).collect::<Vec<i64>>());
+        assert_eq!(hi_addrs, (8..16).collect::<Vec<i64>>());
+        // Lock protocol: acquire the half's empty lock, release its full
+        // lock; the chain cycles 0 -> 1 -> 0.
+        assert_eq!(lo.acquire_lock, Some(0));
+        assert_eq!(lo.release_lock, Some(2));
+        assert_eq!(hi.acquire_lock, Some(1));
+        assert_eq!(hi.release_lock, Some(3));
+        assert_eq!(lo.next, Some(1));
+        assert_eq!(hi.next, Some(0));
     }
 
     #[test]

@@ -133,6 +133,128 @@ impl TimingModel {
     }
 }
 
+/// Host-side staging cost model for the offload invocation path.
+///
+/// The engine's input copy / transpose / output copy run on the CPU; their
+/// modeled durations come from these memory-bandwidth constants (same
+/// calibration as `bench::host_model`: a laptop-class DDR5 system under
+/// concurrent NPU traffic). Staging A and B concurrently does not double
+/// the bandwidth — the constants already describe the saturated multi-core
+/// rate — so costs are additive.
+#[derive(Debug, Clone)]
+pub struct HostStagingModel {
+    /// Plain memcpy into a shared BO (bytes/s).
+    pub copy_bytes_per_s: f64,
+    /// Blocked multi-core transpose (bytes/s); strided writes are slower
+    /// than memcpy.
+    pub transpose_bytes_per_s: f64,
+}
+
+impl Default for HostStagingModel {
+    fn default() -> Self {
+        HostStagingModel {
+            copy_bytes_per_s: HostStagingModel::COPY_BYTES_PER_S,
+            transpose_bytes_per_s: HostStagingModel::TRANSPOSE_BYTES_PER_S,
+        }
+    }
+}
+
+impl HostStagingModel {
+    /// Canonical plain-memcpy bandwidth (bytes/s). `bench::host_model`
+    /// re-exports these so the engine timeline and the figure reports
+    /// cannot drift apart when recalibrated.
+    pub const COPY_BYTES_PER_S: f64 = 20e9;
+    /// Canonical blocked multi-core transpose bandwidth (bytes/s).
+    pub const TRANSPOSE_BYTES_PER_S: f64 = 12e9;
+
+    /// Modeled seconds to copy `bytes` into a BO.
+    pub fn copy_s(&self, bytes: usize) -> f64 {
+        bytes as f64 / self.copy_bytes_per_s
+    }
+
+    /// Modeled seconds to transpose-copy `bytes` into a BO.
+    pub fn transpose_s(&self, bytes: usize) -> f64 {
+        bytes as f64 / self.transpose_bytes_per_s
+    }
+}
+
+/// Modeled two-resource (host, device) pipeline timeline.
+///
+/// The engine feeds every invocation's stage durations into this schedule:
+/// `submit` appends the host-side staging (input copy + transpose + input
+/// sync) to the host cursor and then queues the device span (reconfig +
+/// kernel + output sync) on the device cursor; `wait` blocks the host on
+/// that invocation's device completion before appending the output copy.
+///
+/// Because the device cursor serializes all device spans, overlap can only
+/// ever *hide host staging under device work* — kernel time is never
+/// double-counted and the makespan can never drop below the sum of device
+/// spans. When every submit is immediately followed by its wait (the
+/// strictly serial schedule), the makespan equals the serial sum exactly.
+#[derive(Debug, Clone, Default)]
+pub struct PipelineTimeline {
+    host_cursor_s: f64,
+    device_cursor_s: f64,
+    /// Sum of host-side stage durations (staging + output copies).
+    pub host_busy_s: f64,
+    /// Sum of device-side stage durations (reconfig + kernel + syncs).
+    pub device_busy_s: f64,
+}
+
+impl PipelineTimeline {
+    pub fn new() -> PipelineTimeline {
+        PipelineTimeline::default()
+    }
+
+    /// Record one invocation's submission: host staging (`host_pre_s`)
+    /// runs when the host is free; the device span (`device_s`) starts
+    /// once both the staging and all previously queued device work are
+    /// done. Returns the modeled completion time of this device span —
+    /// pass it to [`PipelineTimeline::wait`].
+    pub fn submit(&mut self, host_pre_s: f64, device_s: f64) -> f64 {
+        self.host_cursor_s += host_pre_s;
+        self.host_busy_s += host_pre_s;
+        let start = self.host_cursor_s.max(self.device_cursor_s);
+        self.device_cursor_s = start + device_s;
+        self.device_busy_s += device_s;
+        self.device_cursor_s
+    }
+
+    /// Record one invocation's completion: the host blocks until the
+    /// submitted device span finished (`device_done_s`, as returned by
+    /// [`PipelineTimeline::submit`]) and then spends `host_post_s` on the
+    /// output copy.
+    pub fn wait(&mut self, device_done_s: f64, host_post_s: f64) {
+        self.host_cursor_s = self.host_cursor_s.max(device_done_s) + host_post_s;
+        self.host_busy_s += host_post_s;
+    }
+
+    /// The fully serialized cost: sum of every stage duration recorded.
+    pub fn serial_s(&self) -> f64 {
+        self.host_busy_s + self.device_busy_s
+    }
+
+    /// The overlapped schedule's end time. Always <= [`Self::serial_s`].
+    pub fn makespan_s(&self) -> f64 {
+        self.host_cursor_s.max(self.device_cursor_s)
+    }
+
+    /// Host-stage seconds hidden under device work by the overlap.
+    pub fn hidden_s(&self) -> f64 {
+        (self.serial_s() - self.makespan_s()).max(0.0)
+    }
+
+    /// Host-stage seconds *not* hidden (what the offload still costs the
+    /// host beyond the device spans).
+    pub fn exposed_host_s(&self) -> f64 {
+        (self.host_busy_s - self.hidden_s()).max(0.0)
+    }
+
+    pub fn reset(&mut self) {
+        *self = PipelineTimeline::default();
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -188,5 +310,110 @@ mod tests {
         // A size *switch* costs full+minimal under the full-array policy vs
         // minimal alone: ratio = full/min + 1 ≈ the paper's 3.5x.
         assert!(m.full_reconfig_s / m.minimal_reconfig_s + 1.0 > 3.0);
+    }
+
+    #[test]
+    fn serial_schedule_has_no_overlap() {
+        // submit immediately followed by wait = the strictly serial
+        // schedule; makespan must equal the stage sum exactly.
+        let mut tl = PipelineTimeline::new();
+        for _ in 0..4 {
+            let done = tl.submit(2.0, 5.0);
+            tl.wait(done, 1.0);
+        }
+        assert!((tl.makespan_s() - tl.serial_s()).abs() < 1e-12);
+        assert_eq!(tl.hidden_s(), 0.0);
+        assert!((tl.serial_s() - 32.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn back_to_back_submits_hide_host_staging() {
+        // Two submissions before any wait: the second invocation's staging
+        // overlaps the first's device span.
+        let mut tl = PipelineTimeline::new();
+        let d1 = tl.submit(2.0, 5.0);
+        let d2 = tl.submit(2.0, 5.0);
+        tl.wait(d1, 1.0);
+        tl.wait(d2, 1.0);
+        // Serial: 2*(2+5+1) = 16. Overlapped: staging 2 of inv 2 hides
+        // fully under inv 1's device span.
+        assert!((tl.serial_s() - 16.0).abs() < 1e-12);
+        assert!(tl.makespan_s() < tl.serial_s());
+        assert!((tl.hidden_s() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn device_spans_never_overlap_each_other() {
+        // However deep the submission queue, the device cursor serializes:
+        // the makespan is bounded below by the sum of device spans.
+        let mut tl = PipelineTimeline::new();
+        let mut dones = Vec::new();
+        for _ in 0..8 {
+            dones.push(tl.submit(0.5, 3.0));
+        }
+        for d in dones {
+            tl.wait(d, 0.25);
+        }
+        assert!(tl.makespan_s() >= 8.0 * 3.0);
+        assert!(tl.makespan_s() <= tl.serial_s() + 1e-12);
+    }
+
+    #[test]
+    fn prop_makespan_never_exceeds_serial() {
+        use crate::util::prop;
+        prop::check_default(
+            "pipeline-makespan-bounded",
+            |rng| {
+                let n = prop::gen::usize_in(rng, 1, 12);
+                (0..n)
+                    .map(|_| {
+                        (
+                            rng.uniform(0.0, 3.0) as f64,
+                            rng.uniform(0.0, 3.0) as f64,
+                            rng.uniform(0.0, 1.0) as f64,
+                        )
+                    })
+                    .collect::<Vec<(f64, f64, f64)>>()
+            },
+            |stages| {
+                let mut tl = PipelineTimeline::new();
+                // Alternate: depth-2 double buffering (submit up to 2 ahead).
+                let mut pending: Vec<(f64, f64)> = Vec::new();
+                for &(pre, dev, post) in stages {
+                    if pending.len() == 2 {
+                        let (done, p) = pending.remove(0);
+                        tl.wait(done, p);
+                    }
+                    let done = tl.submit(pre, dev);
+                    pending.push((done, post));
+                }
+                for (done, p) in pending {
+                    tl.wait(done, p);
+                }
+                let busy: f64 = stages.iter().map(|s| s.0 + s.1 + s.2).sum();
+                if (tl.serial_s() - busy).abs() > 1e-9 {
+                    return Err(format!("serial {} != busy {}", tl.serial_s(), busy));
+                }
+                if tl.makespan_s() > tl.serial_s() + 1e-9 {
+                    return Err(format!(
+                        "makespan {} > serial {}",
+                        tl.makespan_s(),
+                        tl.serial_s()
+                    ));
+                }
+                let device: f64 = stages.iter().map(|s| s.1).sum();
+                if tl.makespan_s() + 1e-9 < device {
+                    return Err("makespan below device busy time".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn host_staging_model_costs() {
+        let h = HostStagingModel::default();
+        assert!(h.transpose_s(1 << 20) > h.copy_s(1 << 20));
+        assert_eq!(h.copy_s(0), 0.0);
     }
 }

@@ -6,6 +6,17 @@
 //! time ([`meter`]), keeping the same 4 Hz sampling structure so the
 //! measurement pipeline (sampling → trace → mean power → FLOP/Ws) is
 //! exercised end to end.
+//!
+//! ```
+//! use xdna_repro::power::PowerProfile;
+//!
+//! // Battery throttles the NPU/DDR clocks much harder than the CPU's
+//! // (the paper's 1.7x -> 1.2x end-to-end drop).
+//! let mains = PowerProfile::mains();
+//! let battery = PowerProfile::battery();
+//! assert!(battery.npu_time_scale > mains.npu_time_scale);
+//! assert!(battery.platform_cpu_busy_w < mains.platform_cpu_busy_w);
+//! ```
 
 pub mod meter;
 pub mod profiles;

@@ -1,12 +1,21 @@
 //! PJRT runtime: load and execute the JAX/Pallas AOT artifacts.
 //!
 //! The Python layers (L1 Pallas kernel, L2 JAX model) are lowered once at
-//! build time to HLO **text** in `artifacts/`; this module loads that text
-//! through the `xla` crate's PJRT CPU client and executes it from the Rust
-//! request path. Python never runs at runtime.
+//! build time to HLO **text** in `artifacts/`; the `client` module loads
+//! that text through the `xla` crate's PJRT CPU client and executes it
+//! from the Rust request path. Python never runs at runtime.
+//!
+//! [`manifest`] (always available) describes the artifact inventory —
+//! which GEMM sizes and model configurations were lowered, and with what
+//! optimizer hyper-parameters. The `client` module requires the `pjrt`
+//! cargo feature, which pulls in the `xla` crate; without it the engine's
+//! simulator backend supplies all numerics and the manifest types still
+//! serve as the artifact ABI description.
 
+#[cfg(feature = "pjrt")]
 pub mod client;
 pub mod manifest;
 
+#[cfg(feature = "pjrt")]
 pub use client::{Executable, RuntimeClient};
 pub use manifest::{GemmArtifact, Manifest, ModelArtifact};

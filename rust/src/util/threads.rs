@@ -83,6 +83,30 @@ where
     });
 }
 
+/// Run two independent closures concurrently and return both results.
+///
+/// The pipelined offload engine stages the A and B inputs of one GEMM into
+/// their (disjoint) buffer objects at the same time; each closure may
+/// itself fan out further (the blocked transpose does). Falls back to
+/// sequential execution when only one thread is configured.
+pub fn join2<A, B, FA, FB>(fa: FA, fb: FB) -> (A, B)
+where
+    A: Send,
+    B: Send,
+    FA: FnOnce() -> A + Send,
+    FB: FnOnce() -> B + Send,
+{
+    if num_threads() <= 1 {
+        return (fa(), fb());
+    }
+    std::thread::scope(|s| {
+        let hb = s.spawn(fb);
+        let a = fa();
+        let b = hb.join().expect("join2 worker panicked");
+        (a, b)
+    })
+}
+
 /// Map over items in parallel, preserving order.
 pub fn parallel_map<T: Sync, R: Send, F>(items: &[T], f: F) -> Vec<R>
 where
@@ -151,5 +175,17 @@ mod tests {
     #[test]
     fn num_threads_at_least_one() {
         assert!(num_threads() >= 1);
+    }
+
+    #[test]
+    fn join2_returns_both_results() {
+        let xs: Vec<u64> = (0..100).collect();
+        let ys: Vec<u64> = (100..300).collect();
+        let (a, b) = join2(
+            || xs.iter().sum::<u64>(),
+            || ys.iter().sum::<u64>(),
+        );
+        assert_eq!(a, 4950);
+        assert_eq!(b, (100..300).sum::<u64>());
     }
 }

@@ -6,6 +6,22 @@
 //! that feed the command processor an instruction stream. We model each of
 //! those verbs; "input sync." and "output sync." in the paper's Figure 7
 //! are exactly the BO sync calls accounted here.
+//!
+//! The explicit-sync protocol is enforced: a BO written by the host must be
+//! synced `ToDevice` before a kernel may read it, and synced `FromDevice`
+//! after a kernel wrote it — skipping either is an error here, where real
+//! XRT would silently hand back stale data.
+//!
+//! ```
+//! use xdna_repro::xrt::{SyncDirection, XrtDevice};
+//!
+//! let mut dev = XrtDevice::open();
+//! let mut bo = dev.alloc_bo(16);
+//! bo.map_mut()[0] = 1.0;           // host write: BO is now host-dirty
+//! let modeled_s = dev.sync_bo(&mut bo, SyncDirection::ToDevice);
+//! assert!(modeled_s > 0.0);        // driver sync cost is modeled
+//! assert_eq!(bo.map().unwrap()[0], 1.0);
+//! ```
 
 pub mod bo;
 pub mod device;

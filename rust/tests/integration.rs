@@ -5,32 +5,46 @@
 //! Pallas GEMM artifact against the NPU simulator, and a short end-to-end
 //! training run through the full engine stack.
 
-use xdna_repro::coordinator::backend::{NumericsBackend, PjrtGemms};
-use xdna_repro::coordinator::engine::{EngineConfig, GemmOffloadEngine, InputLayout};
-use xdna_repro::gemm::sizes::ProblemSize;
+use xdna_repro::coordinator::engine::{EngineConfig, GemmOffloadEngine};
 use xdna_repro::model::data::{synthetic_corpus, DataLoader};
-use xdna_repro::model::ops::matmul::MatmulDispatch;
 use xdna_repro::model::trainer::{train, TrainBackend, TrainConfig};
-use xdna_repro::model::{Gpt2Model, ModelConfig, PARAM_NAMES};
+use xdna_repro::model::{Gpt2Model, ModelConfig};
+
+#[cfg(feature = "pjrt")]
+use xdna_repro::coordinator::backend::{NumericsBackend, PjrtGemms};
+#[cfg(feature = "pjrt")]
+use xdna_repro::coordinator::engine::InputLayout;
+#[cfg(feature = "pjrt")]
+use xdna_repro::gemm::sizes::ProblemSize;
+#[cfg(feature = "pjrt")]
+use xdna_repro::model::ops::matmul::MatmulDispatch;
+#[cfg(feature = "pjrt")]
+use xdna_repro::model::PARAM_NAMES;
+#[cfg(feature = "pjrt")]
+use xdna_repro::runtime::client::{literal_f32, literal_i32, literal_scalar, RuntimeClient};
+#[cfg(feature = "pjrt")]
+use xdna_repro::runtime::manifest::{default_dir, Manifest};
+#[cfg(feature = "pjrt")]
+use xdna_repro::util::rng::Rng;
 
 /// JAX flattens dict-pytree arguments in *sorted key order*, which is the
 /// ABI the train-step/forward artifacts expose — not the llm.c inventory
 /// order of PARAM_NAMES.
+#[cfg(feature = "pjrt")]
 fn sorted_param_names() -> Vec<&'static str> {
     let mut names: Vec<&'static str> = PARAM_NAMES.to_vec();
     names.sort();
     names
 }
-use xdna_repro::runtime::client::{literal_f32, literal_i32, literal_scalar, RuntimeClient};
-use xdna_repro::runtime::manifest::{default_dir, Manifest};
-use xdna_repro::util::rng::Rng;
 
+#[cfg(feature = "pjrt")]
 fn artifacts_ready() -> bool {
     default_dir().join("manifest.json").exists()
 }
 
 /// The full three-layer numerics agreement: L1 Pallas artifact (via PJRT),
 /// the Rust NPU simulator, and the bf16 CPU oracle on one GPT-2 size.
+#[cfg(feature = "pjrt")]
 #[test]
 fn pallas_artifact_simulator_and_oracle_agree() {
     if !artifacts_ready() {
@@ -79,6 +93,7 @@ fn pallas_artifact_simulator_and_oracle_agree() {
 
 /// Run the JAX train-step artifact with the Rust model's parameters and
 /// batch; losses and updated parameters must track the Rust trainer.
+#[cfg(feature = "pjrt")]
 #[test]
 fn jax_train_step_artifact_matches_rust_model() {
     if !artifacts_ready() {
@@ -200,6 +215,7 @@ fn training_through_full_stack_reduces_loss() {
 }
 
 /// Forward-only artifact agrees with the Rust forward pass on logits.
+#[cfg(feature = "pjrt")]
 #[test]
 fn forward_artifact_matches_rust_logits() {
     if !artifacts_ready() {
