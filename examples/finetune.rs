@@ -11,10 +11,14 @@
 //! 124M model; see EXPERIMENTS.md for its recorded epochs).
 //!
 //! Run: `cargo run --release --example finetune [-- --config d4 --steps 300]`
-//! Defaults to the pipelined offload schedule; `--mode serial` reproduces
-//! the paper's strictly serial invocation path.
+//! Defaults to the pipelined (depth-2) offload schedule; `--mode serial`
+//! reproduces the paper's strictly serial invocation path, and
+//! `--queue-depth K`, `--shards S`, `--schedule batch` exercise the
+//! deeper-ring / sharded / reconfig-batched session.
 
-use xdna_repro::coordinator::engine::{EngineConfig, ExecMode, GemmOffloadEngine};
+use xdna_repro::coordinator::engine::ExecMode;
+use xdna_repro::coordinator::session::{OffloadSession, QueueDepth, SessionConfig, Shards};
+use xdna_repro::coordinator::SchedulePolicy;
 use xdna_repro::model::data::{synthetic_corpus, DataLoader};
 use xdna_repro::model::model::OPS;
 use xdna_repro::model::trainer::{train, TrainBackend, TrainConfig};
@@ -38,6 +42,11 @@ fn main() -> xdna_repro::Result<()> {
             )))
         }
     };
+    // Same parsing as the CLI: SchedulePolicy::from_str, and QueueDepth /
+    // Shards clamp 0 to 1 themselves.
+    let depth = QueueDepth(args.get_parse("queue-depth", mode.queue_depth().get())?);
+    let shards = Shards(args.get_parse("shards", 1usize)?);
+    let schedule: SchedulePolicy = args.get_parse("schedule", SchedulePolicy::Fifo)?;
     let epochs = 20.min(total_steps);
     let steps_per_epoch = (total_steps / epochs).max(1);
 
@@ -62,14 +71,20 @@ fn main() -> xdna_repro::Result<()> {
     //     Figure-7 stage ordering). ---------------------------------------
     let mut loader = DataLoader::new(corpus.clone(), batch, seq)?;
     let mut model = Gpt2Model::new(cfg, 1234);
-    let mut engine = GemmOffloadEngine::new(
-        EngineConfig {
-            mode,
+    let mut engine = OffloadSession::new(
+        SessionConfig {
+            depth,
+            shards,
+            schedule,
             ..Default::default()
         },
         &[],
     )?;
-    println!("\n--- CPU+NPU (offloaded GEMMs, {mode:?} schedule) ---");
+    println!(
+        "\n--- CPU+NPU (offloaded GEMMs; depth {}, {} shard(s), {schedule:?}) ---",
+        engine.queue_depth(),
+        engine.shard_count()
+    );
     let npu_stats = train(
         &mut model,
         &mut loader,

@@ -1,18 +1,20 @@
 //! Overlapped-vs-serial offload schedule: the modeled epoch-level report
-//! plus a measured run of the real engine in both execution modes over a
-//! GPT-2-shaped GEMM stream.
+//! plus measured runs of the real offload session at several ring depths
+//! and shard counts over a GPT-2-shaped GEMM stream.
 use xdna_repro::bench::pipeline;
-use xdna_repro::coordinator::engine::{
-    EngineConfig, ExecMode, GemmOffloadEngine, InputLayout, STAGES,
+use xdna_repro::coordinator::session::{
+    GemmOp, InputLayout, OffloadSession, QueueDepth, SessionConfig, Shards, Ticket,
 };
+use xdna_repro::coordinator::STAGES;
 use xdna_repro::gemm::sizes::ProblemSize;
 use xdna_repro::power::profiles::PowerProfile;
 use xdna_repro::util::rng::Rng;
 
-fn run_stream(mode: ExecMode, sizes: &[ProblemSize], rounds: usize) -> GemmOffloadEngine {
-    let mut eng = GemmOffloadEngine::new(
-        EngineConfig {
-            mode,
+fn run_stream(depth: usize, shards: usize, sizes: &[ProblemSize], rounds: usize) -> OffloadSession {
+    let mut sess = OffloadSession::new(
+        SessionConfig {
+            depth: QueueDepth(depth),
+            shards: Shards(shards),
             ..Default::default()
         },
         sizes,
@@ -23,7 +25,7 @@ fn run_stream(mode: ExecMode, sizes: &[ProblemSize], rounds: usize) -> GemmOfflo
         .iter()
         .map(|s| {
             let mut a = vec![0.0f32; s.m * s.k];
-            let mut b_t = vec![0.0f32; s.n * s.k]; // N×K: forces transpose
+            let mut b_t = vec![0.0f32; s.n * s.k]; // N x K: forces transpose
             rng.fill_normal(&mut a, 0.0, 1.0);
             rng.fill_normal(&mut b_t, 0.0, 0.1);
             (a, b_t)
@@ -31,31 +33,26 @@ fn run_stream(mode: ExecMode, sizes: &[ProblemSize], rounds: usize) -> GemmOfflo
         .collect();
     let mut outs: Vec<Vec<f32>> = sizes.iter().map(|s| vec![0.0f32; s.m * s.n]).collect();
     for _ in 0..rounds {
-        match mode {
-            ExecMode::Serial => {
-                for ((size, (a, b_t)), c) in sizes.iter().zip(&inputs).zip(&mut outs) {
-                    eng.gemm(*size, a, b_t, InputLayout::Transposed, c).unwrap();
-                }
+        let mut pending: Vec<(usize, Ticket)> = Vec::new();
+        for (i, (size, (a, b_t))) in sizes.iter().zip(&inputs).enumerate() {
+            if pending.len() == depth {
+                let (j, t) = pending.remove(0);
+                sess.wait(t, &mut outs[j]).unwrap();
             }
-            ExecMode::Pipelined => {
-                let mut pending: Vec<(usize, xdna_repro::coordinator::Ticket)> = Vec::new();
-                for (i, (size, (a, b_t))) in sizes.iter().zip(&inputs).enumerate() {
-                    if pending.len() == 2 {
-                        let (j, t) = pending.remove(0);
-                        eng.wait(t, &mut outs[j]).unwrap();
-                    }
-                    let t = eng
-                        .submit(*size, a, InputLayout::RowMajor, b_t, InputLayout::Transposed)
-                        .unwrap();
-                    pending.push((i, t));
-                }
-                for (j, t) in pending {
-                    eng.wait(t, &mut outs[j]).unwrap();
-                }
-            }
+            let t = sess
+                .submit(
+                    &GemmOp::new(*size).with_b_layout(InputLayout::Transposed),
+                    a,
+                    b_t,
+                )
+                .unwrap();
+            pending.push((i, t));
+        }
+        for (j, t) in pending {
+            sess.wait(t, &mut outs[j]).unwrap();
         }
     }
-    eng
+    sess
 }
 
 fn main() {
@@ -63,30 +60,30 @@ fn main() {
     pipeline::print(&PowerProfile::mains());
     pipeline::print(&PowerProfile::battery());
 
-    // Measured engine runs over a trio of forward sizes.
+    // Measured session runs over a trio of forward sizes.
     let sizes = [
         ProblemSize::new(256, 768, 768),
         ProblemSize::new(256, 768, 2304),
         ProblemSize::new(256, 2304, 768),
     ];
     println!(
-        "\n=== Measured engine: serial vs pipelined over {} forward sizes ===",
+        "\n=== Measured session: ring depth x shards over {} forward sizes ===",
         sizes.len()
     );
-    for mode in [ExecMode::Serial, ExecMode::Pipelined] {
-        let eng = run_stream(mode, &sizes, 5);
-        println!("\n-- {mode:?} --");
-        let total = eng.stages.total().as_secs_f64();
+    for (depth, shards) in [(1, 1), (2, 1), (4, 1), (2, 4)] {
+        let sess = run_stream(depth, shards, &sizes, 5);
+        println!("\n-- depth {depth}, {shards} shard(s) --");
+        let total = sess.stages.total().as_secs_f64();
         for s in STAGES {
-            let t = eng.stages.get(s).as_secs_f64();
+            let t = sess.stages.get(s).as_secs_f64();
             println!("{:<14} {:>10.3} ms ({:>5.1}%)", s, t * 1e3, 100.0 * t / total);
         }
         println!(
             "modeled: serial {:.3} ms, overlapped {:.3} ms, hidden {:.3} ms ({:.1}%)",
-            eng.pipeline.serial_s() * 1e3,
-            eng.pipeline.makespan_s() * 1e3,
-            eng.pipeline.hidden_s() * 1e3,
-            100.0 * eng.pipeline.hidden_s() / eng.pipeline.serial_s()
+            sess.pipeline.serial_s() * 1e3,
+            sess.pipeline.makespan_s() * 1e3,
+            sess.pipeline.hidden_s() * 1e3,
+            100.0 * sess.pipeline.hidden_s() / sess.pipeline.serial_s()
         );
     }
 }

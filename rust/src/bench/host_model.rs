@@ -1,23 +1,24 @@
-//! Host-side (CPU) cost constants for the offload invocation path.
+//! Host-side (CPU) cost model for the offload invocation path.
 //!
 //! Figure 7 decomposes an invocation into copy / transpose / syncs /
 //! kernel; the device-side pieces come from `npu::timing`, the host-side
-//! copies from these memory-bandwidth constants (calibrated to a laptop
-//! class DDR5 system under concurrent NPU traffic).
+//! copies from [`HostStagingModel`] — the *single* source of the staging
+//! bandwidth calibration, shared with the session's pipeline timeline so
+//! the figure reports and the modeled schedules can never drift apart
+//! when recalibrated (see `staging_agrees_with_session_model` below).
 
 use crate::gemm::sizes::ProblemSize;
 use crate::gemm::tiling::Tiling;
-use crate::npu::timing::TimingModel;
+use crate::npu::timing::{HostStagingModel, TimingModel};
 use crate::xrt::bo::{SyncCost, SyncDirection};
 
 /// Plain memcpy bandwidth into the shared BO (bytes/s). Canonical value
-/// lives on [`crate::npu::timing::HostStagingModel`] so the engine's
-/// pipeline timeline uses the same calibration as these reports.
-pub const COPY_BYTES_PER_S: f64 = crate::npu::timing::HostStagingModel::COPY_BYTES_PER_S;
+/// lives on [`HostStagingModel`]; kept as a re-export for callers that
+/// want the raw constant.
+pub const COPY_BYTES_PER_S: f64 = HostStagingModel::COPY_BYTES_PER_S;
 /// Blocked multi-core transpose bandwidth (bytes/s) — strided writes are
 /// slower than memcpy.
-pub const TRANSPOSE_BYTES_PER_S: f64 =
-    crate::npu::timing::HostStagingModel::TRANSPOSE_BYTES_PER_S;
+pub const TRANSPOSE_BYTES_PER_S: f64 = HostStagingModel::TRANSPOSE_BYTES_PER_S;
 
 /// Modeled host+device breakdown of one offloaded GEMM invocation.
 #[derive(Debug, Clone, Default)]
@@ -55,23 +56,24 @@ pub fn model_invocation(
         size.n.div_ceil(128) * 128,
     ))
     .expect("padded size always tiles");
-    let a_bytes = (size.m * size.k * 4) as f64;
-    let b_bytes = (size.k * size.n * 4) as f64;
-    let c_bytes = (size.m * size.n * 4) as f64;
+    let staging = HostStagingModel::default();
+    let a_bytes = size.m * size.k * 4;
+    let b_bytes = size.k * size.n * 4;
+    let c_bytes = size.m * size.n * 4;
     let transposed_bytes = match transposed_inputs {
-        0 => 0.0,
+        0 => 0,
         1 => b_bytes,
         _ => a_bytes + b_bytes,
     };
     let copied_bytes = a_bytes + b_bytes - transposed_bytes;
     let g = timing.gemm(&t);
     InvocationModel {
-        input_copy_s: copied_bytes / COPY_BYTES_PER_S,
-        transpose_s: transposed_bytes / TRANSPOSE_BYTES_PER_S,
-        input_sync_s: sync.cost_s((a_bytes + b_bytes) as usize, SyncDirection::ToDevice),
+        input_copy_s: staging.copy_s(copied_bytes),
+        transpose_s: staging.transpose_s(transposed_bytes),
+        input_sync_s: sync.cost_s(a_bytes + b_bytes, SyncDirection::ToDevice),
         kernel_s: g.kernel_s + g.issue_s + g.dispatch_s,
-        output_sync_s: sync.cost_s(c_bytes as usize, SyncDirection::FromDevice),
-        output_copy_s: c_bytes / COPY_BYTES_PER_S,
+        output_sync_s: sync.cost_s(c_bytes, SyncDirection::FromDevice),
+        output_copy_s: staging.copy_s(c_bytes),
     }
 }
 
@@ -96,5 +98,29 @@ mod tests {
         let sync = SyncCost::default();
         let m = model_invocation(ProblemSize::new(256, 50304, 768), 0, &timing, &sync);
         assert!(m.kernel_s > m.total_s() * 0.4, "{m:?}");
+    }
+
+    #[test]
+    fn staging_agrees_with_session_model() {
+        // The figure reports and the session's pipeline timeline must use
+        // one staging calibration: model_invocation's host stages equal
+        // HostStagingModel's costs on the same byte counts, and the
+        // re-exported constants are the struct's.
+        let staging = HostStagingModel::default();
+        assert_eq!(staging.copy_bytes_per_s, COPY_BYTES_PER_S);
+        assert_eq!(staging.transpose_bytes_per_s, TRANSPOSE_BYTES_PER_S);
+        let timing = TimingModel::default();
+        let sync = SyncCost::default();
+        let size = ProblemSize::new(256, 768, 2304);
+        let a_bytes = size.m * size.k * 4;
+        let b_bytes = size.k * size.n * 4;
+        let c_bytes = size.m * size.n * 4;
+        let plain = model_invocation(size, 0, &timing, &sync);
+        assert_eq!(plain.input_copy_s, staging.copy_s(a_bytes + b_bytes));
+        assert_eq!(plain.transpose_s, 0.0);
+        assert_eq!(plain.output_copy_s, staging.copy_s(c_bytes));
+        let tr = model_invocation(size, 1, &timing, &sync);
+        assert_eq!(tr.input_copy_s, staging.copy_s(a_bytes));
+        assert_eq!(tr.transpose_s, staging.transpose_s(b_bytes));
     }
 }

@@ -1,17 +1,8 @@
-//! Numerics backends for the offload engine.
+//! The PJRT artifact loader backing `super::device::PjrtDevice`.
 //!
-//! The engine's host-side behaviour (registry, copies, transposes, syncs,
-//! reconfiguration) is identical regardless of where the GEMM numbers come
-//! from; the backend only answers "multiply these padded matrices under
-//! the NPU's bf16 contract":
-//!
-//! * [`NumericsBackend::Simulator`] — the XDNA simulator's functional
-//!   datapath (default; self-contained).
-//! * `NumericsBackend::Pjrt` (requires the `pjrt` cargo feature, which
-//!   pulls in the `xla` crate) — the AOT-lowered Pallas GEMM artifact for
-//!   that problem size, executed through the PJRT CPU client. This is the
-//!   true three-layer path: L1 Pallas kernel inside an L2-lowered HLO,
-//!   driven from the L3 coordinator.
+//! (The old `NumericsBackend` enum that lived here is subsumed by the
+//! object-safe [`super::device::ComputeDevice`] trait; this module keeps
+//! only the per-size compiled-executable cache the PJRT device wraps.)
 
 #[cfg(feature = "pjrt")]
 use std::collections::BTreeMap;
@@ -24,23 +15,6 @@ use crate::runtime::client::{literal_f32, RuntimeClient};
 use crate::runtime::manifest::Manifest;
 #[cfg(feature = "pjrt")]
 use crate::util::error::{Error, Result};
-
-/// Where GEMM numerics come from.
-pub enum NumericsBackend {
-    Simulator,
-    #[cfg(feature = "pjrt")]
-    Pjrt(PjrtGemms),
-}
-
-impl std::fmt::Debug for NumericsBackend {
-    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        match self {
-            NumericsBackend::Simulator => write!(f, "Simulator"),
-            #[cfg(feature = "pjrt")]
-            NumericsBackend::Pjrt(_) => write!(f, "Pjrt"),
-        }
-    }
-}
 
 /// Per-size compiled Pallas GEMM executables.
 #[cfg(feature = "pjrt")]

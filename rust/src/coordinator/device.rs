@@ -1,0 +1,320 @@
+//! [`ComputeDevice`] — where GEMM numerics execute.
+//!
+//! The session's host-side behaviour (registry, copies, transposes, syncs,
+//! reconfiguration, scheduling) is identical regardless of where the GEMM
+//! numbers come from; a device only answers "multiply these staged,
+//! padded matrices" and reports the modeled device span:
+//!
+//! * [`SimulatorDevice`] — the XDNA simulator's functional bf16 datapath
+//!   (default; self-contained).
+//! * [`CpuRefDevice`] — the bf16 CPU reference GEMM run against the same
+//!   staged buffers (an always-available oracle; device spans come from a
+//!   calibrated CPU rate instead of the NPU model).
+//! * `PjrtDevice` (requires the `pjrt` cargo feature) — the AOT-lowered
+//!   Pallas GEMM artifact for that problem size, executed through the PJRT
+//!   CPU client. This is the true three-layer path: L1 Pallas kernel
+//!   inside an L2-lowered HLO, driven from the L3 coordinator.
+//!
+//! The trait is object-safe, so sessions hold a `Box<dyn ComputeDevice>`
+//! and policy layers above never monomorphize on the numerics source.
+
+use crate::gemm::sizes::ProblemSize;
+use crate::gemm::tiling::Tiling;
+use crate::util::error::Result;
+use crate::xrt::{BufferObject, XrtDevice};
+
+#[cfg(feature = "pjrt")]
+use super::backend::PjrtGemms;
+#[cfg(feature = "pjrt")]
+use crate::util::error::Error;
+
+/// The modeled device-side cost of one kernel run (seconds / joules).
+///
+/// `kernel_s` is the *whole-array* kernel time (compute/DMA + ramp): when
+/// the session dispatches a run on a 1/s column partition it scales this
+/// part by `s`, conserving aggregate array throughput. `fixed_s` is the
+/// per-invocation overhead (instruction issue + dispatch) that does not
+/// shrink with partition size.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct DeviceSpan {
+    /// Whole-array kernel seconds (scaled by the partition share by the
+    /// caller when the run occupies only part of the array).
+    pub kernel_s: f64,
+    /// Partition-independent per-invocation overhead seconds.
+    pub fixed_s: f64,
+    /// Modeled energy of the span (J).
+    pub energy_j: f64,
+}
+
+impl DeviceSpan {
+    /// The span as it runs on a 1/`partitions` column partition.
+    pub fn on_partition(&self, partitions: usize) -> f64 {
+        self.kernel_s * partitions.max(1) as f64 + self.fixed_s
+    }
+}
+
+/// One kernel run handed to a [`ComputeDevice`]: the staged buffer
+/// objects (inputs already synced to the device), the padded tiling the
+/// array is programmed for, and the logical (unpadded) problem size.
+pub struct DeviceRun<'a> {
+    /// The simulated XRT device the run executes against (BO coherence,
+    /// timing and power models live here).
+    pub xrt: &'a mut XrtDevice,
+    /// Tiling of the padded problem the array is programmed for.
+    pub tiling: &'a Tiling,
+    /// The logical (unpadded) problem size of this run — for sharded ops
+    /// this is the column strip, not the whole GEMM.
+    pub logical: ProblemSize,
+    /// Staged A (m_padded x k_p) — synced to device.
+    pub a: &'a BufferObject,
+    /// Staged B (k_p x n_p) — synced to device.
+    pub b: &'a BufferObject,
+    /// Output C (m x n_p) — left device-dirty; the session syncs it back.
+    pub c: &'a mut BufferObject,
+}
+
+/// Where GEMM numerics come from. Object-safe: `prepare` preloads
+/// per-size state (compiled artifacts, lookup tables) and `run` executes
+/// one staged kernel, returning its modeled [`DeviceSpan`].
+pub trait ComputeDevice {
+    /// Short human-readable name for reports.
+    fn name(&self) -> &'static str;
+
+    /// Preload per-size state. Idempotent; called at registration time for
+    /// every (strip) size the session will run.
+    fn prepare(&mut self, size: ProblemSize) -> Result<()>;
+
+    /// Execute one staged kernel run.
+    fn run(&mut self, op: DeviceRun<'_>) -> Result<DeviceSpan>;
+}
+
+/// The XDNA simulator's functional datapath (default).
+#[derive(Debug, Default)]
+pub struct SimulatorDevice;
+
+impl ComputeDevice for SimulatorDevice {
+    fn name(&self) -> &'static str {
+        "simulator"
+    }
+
+    fn prepare(&mut self, _size: ProblemSize) -> Result<()> {
+        Ok(())
+    }
+
+    fn run(&mut self, op: DeviceRun<'_>) -> Result<DeviceSpan> {
+        let run = op.xrt.run_gemm(op.a, op.b, op.c, op.tiling)?;
+        Ok(DeviceSpan {
+            kernel_s: run.report.timing.kernel_s,
+            fixed_s: run.report.timing.issue_s + run.report.timing.dispatch_s,
+            energy_j: run.report.energy_j,
+        })
+    }
+}
+
+/// The bf16 CPU reference GEMM run against the same staged buffers.
+///
+/// Numerically this is the oracle the simulator is tested against; as a
+/// [`ComputeDevice`] it lets every layer above (session, scheduler,
+/// trainer) run without the NPU model in the loop. Device spans are
+/// modeled from a calibrated multi-core CPU bf16 rate, not the NPU
+/// timing model.
+#[derive(Debug, Clone)]
+pub struct CpuRefDevice {
+    /// Sustained multi-core f32/bf16 GEMM rate (FLOP/s). Default matches
+    /// the laptop-class calibration of `PowerProfile::mains`.
+    pub flops_per_s: f64,
+    /// Package power while the GEMM runs (W), for the energy model.
+    pub power_w: f64,
+}
+
+impl Default for CpuRefDevice {
+    fn default() -> Self {
+        CpuRefDevice {
+            flops_per_s: 1.2e11,
+            power_w: 18.0,
+        }
+    }
+}
+
+impl ComputeDevice for CpuRefDevice {
+    fn name(&self) -> &'static str {
+        "cpu-ref"
+    }
+
+    fn prepare(&mut self, _size: ProblemSize) -> Result<()> {
+        Ok(())
+    }
+
+    fn run(&mut self, op: DeviceRun<'_>) -> Result<DeviceSpan> {
+        // Consume the padded staged layout exactly as the simulator does:
+        // A's logical-m x k_p prefix, B at k_p x n_p, C at m x n_p.
+        let (m, k_p, n_p) = (op.tiling.size.m, op.tiling.size.k, op.tiling.size.n);
+        let a = &op.a.device_read()?[..m * k_p];
+        let b = op.b.device_read()?;
+        crate::gemm::cpu::gemm_bf16_ref(a, b, op.c.device_write(), m, k_p, n_p);
+        let kernel_s = op.tiling.size.flops() as f64 / self.flops_per_s;
+        Ok(DeviceSpan {
+            kernel_s,
+            fixed_s: 0.0,
+            energy_j: kernel_s * self.power_w,
+        })
+    }
+}
+
+/// The AOT-lowered Pallas artifact through the PJRT CPU client. The
+/// artifact supplies numerics; the NPU model supplies the device span, so
+/// timelines stay comparable with [`SimulatorDevice`].
+#[cfg(feature = "pjrt")]
+pub struct PjrtDevice {
+    gemms: PjrtGemms,
+}
+
+#[cfg(feature = "pjrt")]
+impl PjrtDevice {
+    pub fn new(gemms: PjrtGemms) -> PjrtDevice {
+        PjrtDevice { gemms }
+    }
+}
+
+#[cfg(feature = "pjrt")]
+impl ComputeDevice for PjrtDevice {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn prepare(&mut self, size: ProblemSize) -> Result<()> {
+        self.gemms.prepare(size)
+    }
+
+    fn run(&mut self, op: DeviceRun<'_>) -> Result<DeviceSpan> {
+        let (m, n) = (op.logical.m, op.logical.n);
+        if op.tiling.size.n != n {
+            return Err(Error::runtime(format!(
+                "pjrt artifacts are lowered at exact GPT-2 sizes; padded/sharded \
+                 strip {} is not available (run unsharded or use the simulator)",
+                op.logical
+            )));
+        }
+        let a_dev = op.a.device_read()?;
+        let b_dev = op.b.device_read()?;
+        // Artifacts are lowered at (m_padded, k, n) for the exact GPT-2
+        // sizes, which never K/N-pad.
+        let c_full = self.gemms.run(op.logical, op.tiling.m_padded, a_dev, b_dev)?;
+        op.c.device_write()[..m * n].copy_from_slice(&c_full[..m * n]);
+        // Model the device span exactly as the simulator would — the
+        // artifact supplies numerics, the model supplies time.
+        let gt = op.xrt.npu.timing.gemm(op.tiling);
+        let energy = op
+            .xrt
+            .npu
+            .power
+            .energy_j(gt.kernel_s, gt.total_s() - gt.kernel_s, 0.0);
+        Ok(DeviceSpan {
+            kernel_s: gt.kernel_s,
+            fixed_s: gt.issue_s + gt.dispatch_s,
+            energy_j: energy,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::cpu;
+    use crate::npu::gemm_design;
+    use crate::util::rng::Rng;
+    use crate::xrt::SyncDirection;
+
+    fn staged_run(dev: &mut XrtDevice, t: &Tiling) -> (BufferObject, BufferObject, BufferObject) {
+        let (m, k, n) = (t.size.m, t.size.k, t.size.n);
+        let mut rng = Rng::new(11);
+        let mut a_bo = dev.alloc_bo(t.m_padded * k);
+        let mut b_bo = dev.alloc_bo(k * n);
+        let c_bo = dev.alloc_bo(m * n);
+        rng.fill_normal(&mut a_bo.map_mut()[..m * k], 0.0, 1.0);
+        rng.fill_normal(b_bo.map_mut(), 0.0, 0.1);
+        dev.sync_bo(&mut a_bo, SyncDirection::ToDevice);
+        dev.sync_bo(&mut b_bo, SyncDirection::ToDevice);
+        (a_bo, b_bo, c_bo)
+    }
+
+    #[test]
+    fn simulator_and_cpu_ref_devices_agree_within_bf16() {
+        let size = ProblemSize::new(64, 64, 128);
+        let t = Tiling::paper(size).unwrap();
+
+        let mut xrt = XrtDevice::open();
+        xrt.register_xclbin(&gemm_design::build_static_config(t.tiles)).unwrap();
+        xrt.issue_instructions(&gemm_design::build_instruction_stream(&t)).unwrap();
+        let (a_bo, b_bo, mut c_bo) = staged_run(&mut xrt, &t);
+
+        let mut sim = SimulatorDevice;
+        let span = sim
+            .run(DeviceRun {
+                xrt: &mut xrt,
+                tiling: &t,
+                logical: size,
+                a: &a_bo,
+                b: &b_bo,
+                c: &mut c_bo,
+            })
+            .unwrap();
+        assert!(span.kernel_s > 0.0);
+        assert!(span.energy_j > 0.0);
+        xrt.sync_bo(&mut c_bo, SyncDirection::FromDevice);
+        let c_sim = c_bo.map().unwrap().to_vec();
+
+        // CPU reference on the same staged inputs.
+        let mut xrt2 = XrtDevice::open();
+        let (a2, b2, mut c2) = {
+            let mut a2 = xrt2.alloc_bo(t.m_padded * size.k);
+            let mut b2 = xrt2.alloc_bo(size.k * size.n);
+            let c2 = xrt2.alloc_bo(size.m * size.n);
+            a2.map_mut().copy_from_slice(a_bo.map().unwrap());
+            b2.map_mut().copy_from_slice(b_bo.map().unwrap());
+            xrt2.sync_bo(&mut a2, SyncDirection::ToDevice);
+            xrt2.sync_bo(&mut b2, SyncDirection::ToDevice);
+            (a2, b2, c2)
+        };
+        let mut cpu_dev = CpuRefDevice::default();
+        let span2 = cpu_dev
+            .run(DeviceRun {
+                xrt: &mut xrt2,
+                tiling: &t,
+                logical: size,
+                a: &a2,
+                b: &b2,
+                c: &mut c2,
+            })
+            .unwrap();
+        assert!(span2.kernel_s > 0.0);
+        xrt2.sync_bo(&mut c2, SyncDirection::FromDevice);
+        let c_ref = c2.map().unwrap().to_vec();
+
+        // And the oracle on raw slices must match the CpuRefDevice bit for
+        // bit (it is the same routine).
+        let mut c_direct = vec![0.0f32; size.m * size.n];
+        cpu::gemm_bf16_ref(
+            &a_bo.map().unwrap()[..size.m * size.k],
+            b_bo.map().unwrap(),
+            &mut c_direct,
+            size.m,
+            size.k,
+            size.n,
+        );
+        assert_eq!(c_ref, c_direct, "CpuRefDevice must be the bf16 oracle");
+        for (x, y) in c_sim.iter().zip(&c_ref) {
+            assert!((x - y).abs() <= 1e-4 * y.abs().max(1.0), "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn devices_are_object_safe() {
+        let devices: Vec<Box<dyn ComputeDevice>> =
+            vec![Box::new(SimulatorDevice), Box::new(CpuRefDevice::default())];
+        for mut d in devices {
+            assert!(!d.name().is_empty());
+            d.prepare(ProblemSize::new(64, 64, 128)).unwrap();
+        }
+    }
+}

@@ -1,82 +1,46 @@
-//! The GEMM offload engine — paper section V, plus a pipelined extension.
+//! `GemmOffloadEngine` — the paper-era engine surface, now a thin shim
+//! over the layered offload API.
 //!
-//! Initialization (V-A): the static configuration is registered once; for
-//! every problem size the engine preloads an instruction stream and a set
-//! of shared XRT buffers into a registry (the paper's "hash map that
-//! stores the XRT data structures ... for each problem size").
+//! PR 1's monolithic engine grew a registry, staging, numerics, and a
+//! two-slot queue in one 800-line type. Those concerns now live in layers
+//! ([`super::device::ComputeDevice`] / [`super::session::OffloadSession`]
+//! / [`super::scheduler::Scheduler`]); this module keeps the old entry
+//! points alive as a compatibility wrapper:
 //!
-//! Invocation (V-B): copy inputs into the shared BOs (transposing
-//! column-major weights on the fly, parallel across CPU cores), sync to
-//! device, issue the per-size instruction stream (only when the problem
-//! size changed), run the kernel, sync back, copy out. Every stage is
-//! timed — wallclock for what really runs on this machine, plus the
-//! modeled seconds of the simulated device — producing Figure 7.
+//! * [`ExecMode::Serial`] maps to a depth-1 FIFO session — bit-for-bit
+//!   and stage-for-stage the paper's strictly serial Figure-7 schedule;
+//! * [`ExecMode::Pipelined`] maps to a depth-[`PAIRED_SLOTS`] FIFO
+//!   session — PR 1's double-buffered submit/wait pair;
+//! * the positional `submit(size, a, a_layout, b, b_layout)` argument
+//!   list builds a typed [`GemmOp`] underneath;
+//! * everything else (`gemm`, `gemm_ex`, stats, the pipeline timeline)
+//!   derefs straight through to the session.
 //!
-//! Pipelining: Figure 7 shows the kernel is only one of seven serialized
-//! stages, so host-side staging bounds end-to-end speedup. The engine
-//! therefore exposes a submission-queue API ([`GemmOffloadEngine::submit`]
-//! / [`GemmOffloadEngine::wait`]) backed by *paired* per-size BO sets:
-//! with [`ExecMode::Pipelined`], invocation N+1's input copy + transpose +
-//! input sync stage into the second BO set of the pair while invocation
-//! N's kernel and output sync still occupy the device. The modeled
-//! timeline ([`crate::npu::timing::PipelineTimeline`]) accounts for the
-//! overlap without ever double-counting kernel time — device spans stay
-//! strictly serialized; only host staging hides. [`ExecMode::Serial`]
-//! keeps the paper's strictly serial schedule (Figure 7 fidelity); both
-//! modes run the identical staging/kernel code, so results are
-//! bit-identical across modes.
+//! New code should use [`OffloadSession`] directly — it adds ring depths
+//! beyond 2, N-dimension sharding across shim columns, reconfig-aware
+//! scheduling, and pluggable numerics devices.
 
-use std::collections::{BTreeMap, VecDeque};
-use std::time::{Duration, Instant};
+use std::ops::{Deref, DerefMut};
 
 use crate::gemm::sizes::ProblemSize;
-use crate::gemm::tiling::Tiling;
-use crate::npu::gemm_design::build_instruction_stream;
-use crate::npu::timing::{HostStagingModel, PipelineTimeline};
-use crate::util::error::{Error, Result};
-use crate::util::threads::join2;
-use crate::util::timer::StageTimer;
-use crate::xrt::{BufferObject, SyncDirection, XrtDevice};
+use crate::util::error::Result;
 
-use super::backend::NumericsBackend;
-use super::reconfig::{self, ReconfigPolicy};
-use super::transpose::transpose_into;
+use super::device::ComputeDevice;
+use super::reconfig::ReconfigPolicy;
+use super::scheduler::SchedulePolicy;
+use super::session::{GemmOp, OffloadSession, QueueDepth, SessionConfig, Shards};
 
-/// Stage names (Figure 7's categories).
-pub const STAGE_INPUT_COPY: &str = "input copy";
-pub const STAGE_TRANSPOSE: &str = "transpose";
-pub const STAGE_INPUT_SYNC: &str = "input sync";
-pub const STAGE_RECONFIG: &str = "reconfig";
-pub const STAGE_KERNEL: &str = "npu kernel";
-pub const STAGE_OUTPUT_SYNC: &str = "output sync";
-pub const STAGE_OUTPUT_COPY: &str = "output copy";
-
-/// All stages in reporting order.
-pub const STAGES: [&str; 7] = [
-    STAGE_INPUT_COPY,
+pub use super::session::{
+    InputLayout, InvocationStats, SizeRecord, Ticket, STAGES, STAGE_INPUT_COPY,
+    STAGE_INPUT_SYNC, STAGE_KERNEL, STAGE_OUTPUT_COPY, STAGE_OUTPUT_SYNC, STAGE_RECONFIG,
     STAGE_TRANSPOSE,
-    STAGE_INPUT_SYNC,
-    STAGE_RECONFIG,
-    STAGE_KERNEL,
-    STAGE_OUTPUT_SYNC,
-    STAGE_OUTPUT_COPY,
-];
+};
 
 /// How many BO sets each registered size owns in [`ExecMode::Pipelined`] —
 /// two, so one invocation can stage while the previous one still occupies
 /// the device (double buffering, the host-level mirror of the kernel's
 /// ping-pong L1 halves). [`ExecMode::Serial`] allocates a single set.
 pub const PAIRED_SLOTS: usize = 2;
-
-/// Layout of the B input at its llm.c call site.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum InputLayout {
-    /// Already K×N row-major: plain copy.
-    RowMajor,
-    /// N×K row-major (llm.c's column-major weight view): the copy into the
-    /// BO transposes (paper section V-B).
-    Transposed,
-}
 
 /// How invocations are scheduled through the engine.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -92,219 +56,56 @@ pub enum ExecMode {
     Pipelined,
 }
 
+impl ExecMode {
+    /// The ring depth this legacy mode maps to.
+    pub fn queue_depth(self) -> QueueDepth {
+        match self {
+            ExecMode::Serial => QueueDepth(1),
+            ExecMode::Pipelined => QueueDepth(PAIRED_SLOTS),
+        }
+    }
+}
+
 /// Engine construction options.
 pub struct EngineConfig {
     pub policy: ReconfigPolicy,
-    pub backend: NumericsBackend,
+    /// Where GEMM numerics execute (replaces the old `NumericsBackend`
+    /// enum with the object-safe [`ComputeDevice`] trait).
+    pub device: Box<dyn ComputeDevice>,
     pub mode: ExecMode,
 }
 
 impl Default for EngineConfig {
     fn default() -> Self {
+        let base = SessionConfig::default();
         EngineConfig {
-            policy: ReconfigPolicy::Minimal,
-            backend: NumericsBackend::Simulator,
+            policy: base.policy,
+            device: base.device,
             mode: ExecMode::Serial,
         }
     }
 }
 
-/// One set of shared buffers for a problem size.
-struct BoSet {
-    /// Padded A buffer (m_padded × k; pad rows stay zero).
-    a_bo: BufferObject,
-    /// B buffer (k × n row-major).
-    b_bo: BufferObject,
-    /// Output buffer (m × n_padded).
-    c_bo: BufferObject,
-}
-
-/// Preloaded per-size state (the registry entry).
-struct Prepared {
-    /// The logical (unpadded) problem size requested by the caller.
-    logical: ProblemSize,
-    /// Tiling of the padded problem (K and N padded up to tile multiples;
-    /// GPT-2 124M sizes never need this — the paper pads only M — but the
-    /// engine stays usable for arbitrary sizes).
-    tiling: Tiling,
-    inst_stream: Vec<u32>,
-    /// BO sets — one per allowed in-flight invocation; pipelined engines
-    /// hold a pair and alternate between them so staging for one can
-    /// overlap device work on the other.
-    slots: Vec<BoSet>,
-    next_slot: usize,
-    /// Telemetry for Figure 6.
-    invocations: u64,
-    wall_s: f64,
-    modeled_s: f64,
-}
-
-/// Handle for an in-flight submission; redeem with
-/// [`GemmOffloadEngine::wait`].
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub struct Ticket(u64);
-
-/// Book-keeping for one in-flight invocation.
-struct Pending {
-    ticket: u64,
-    size: ProblemSize,
-    slot: usize,
-    /// Modeled completion time of this invocation's device span on the
-    /// pipeline timeline.
-    device_done_s: f64,
-    submitted: Instant,
-    modeled_kernel_s: f64,
-    modeled_sync_in_s: f64,
-    modeled_sync_out_s: f64,
-    modeled_reconfig_s: f64,
-    modeled_energy_j: f64,
-}
-
-/// Per-invocation result statistics.
-#[derive(Debug, Clone)]
-pub struct InvocationStats {
-    pub size: ProblemSize,
-    /// Modeled device seconds by stage (sync/issue/kernel/reconfig).
-    pub modeled_kernel_s: f64,
-    pub modeled_sync_in_s: f64,
-    pub modeled_sync_out_s: f64,
-    pub modeled_reconfig_s: f64,
-    pub modeled_energy_j: f64,
-    /// Wallclock from submission to completion on this machine (for the
-    /// serial path this is the full invocation; for the pipelined path it
-    /// is submit-to-wait latency and may include unrelated work).
-    pub wall_s: f64,
-}
-
-impl InvocationStats {
-    pub fn modeled_total_s(&self) -> f64 {
-        self.modeled_kernel_s
-            + self.modeled_sync_in_s
-            + self.modeled_sync_out_s
-            + self.modeled_reconfig_s
-    }
-}
-
-/// Aggregated per-size record (drives Figure 6).
-#[derive(Debug, Clone)]
-pub struct SizeRecord {
-    pub size: ProblemSize,
-    pub invocations: u64,
-    pub wall_s: f64,
-    pub modeled_s: f64,
-}
-
-/// The offload engine.
+/// The offload engine: a fixed-shape [`OffloadSession`] (unsharded, FIFO,
+/// depth 1 or 2) behind the PR-1 API. Derefs to the session, so all stats
+/// fields (`pipeline`, `stages`, `invocations`, ...) and session methods
+/// remain directly accessible.
 pub struct GemmOffloadEngine {
-    pub dev: XrtDevice,
-    backend: NumericsBackend,
-    policy: ReconfigPolicy,
+    session: OffloadSession,
     mode: ExecMode,
-    registry: BTreeMap<ProblemSize, Prepared>,
-    current_size: Option<ProblemSize>,
-    /// Wallclock stage accounting across all invocations (Figure 7).
-    pub stages: StageTimer,
-    /// Modeled device-seconds per stage across all invocations.
-    pub modeled_stages: Vec<(String, f64)>,
-    pub invocations: u64,
-    pub modeled_energy_j: f64,
-    /// Modeled host/device schedule of every invocation so far. In
-    /// [`ExecMode::Serial`] its makespan equals its serial sum; in
-    /// [`ExecMode::Pipelined`] the difference is host staging hidden under
-    /// device work.
-    pub pipeline: PipelineTimeline,
-    /// Cost model feeding the timeline's host-side stage durations.
-    pub host_model: HostStagingModel,
-    /// Multiplier applied to device spans on the pipeline timeline (the
-    /// power profile's NPU throttle — battery stretches kernels, letting
-    /// more host staging hide). Per-invocation [`InvocationStats`] and
-    /// `modeled_stages` stay unscaled; reports apply profile scaling
-    /// themselves, as Figures 6–8 do.
-    device_time_scale: f64,
-    pending: VecDeque<Pending>,
-    next_ticket: u64,
 }
 
-/// Copy (or transpose-copy) `a` into the A BO with row stride `k_p`.
-/// Returns the elapsed wallclock and whether the transpose path ran.
-fn stage_a(
-    bo: &mut BufferObject,
-    a: &[f32],
-    layout: InputLayout,
-    m: usize,
-    k: usize,
-    k_p: usize,
-) -> (Duration, bool) {
-    let t0 = Instant::now();
-    match layout {
-        InputLayout::RowMajor => {
-            let a_host = bo.map_mut();
-            if k_p == k {
-                a_host[..m * k].copy_from_slice(a);
-            } else {
-                for r in 0..m {
-                    a_host[r * k_p..r * k_p + k].copy_from_slice(&a[r * k..(r + 1) * k]);
-                }
-            }
-            // pad rows/cols beyond m×k stay zero from allocation
-            (t0.elapsed(), false)
-        }
-        InputLayout::Transposed => {
-            // a is K×M row-major (e.g. dout viewed as its transpose);
-            // transpose into the BO's M×K (stride k_p) region.
-            if k_p == k {
-                transpose_into(a, &mut bo.map_mut()[..m * k], k, m);
-            } else {
-                let mut tmp = vec![0.0f32; m * k];
-                transpose_into(a, &mut tmp, k, m);
-                let a_host = bo.map_mut();
-                for r in 0..m {
-                    a_host[r * k_p..r * k_p + k].copy_from_slice(&tmp[r * k..(r + 1) * k]);
-                }
-            }
-            (t0.elapsed(), true)
-        }
+impl Deref for GemmOffloadEngine {
+    type Target = OffloadSession;
+
+    fn deref(&self) -> &OffloadSession {
+        &self.session
     }
 }
 
-/// Copy (or transpose-copy) `b` into the B BO with row stride `n_p`.
-fn stage_b(
-    bo: &mut BufferObject,
-    b: &[f32],
-    layout: InputLayout,
-    k: usize,
-    n: usize,
-    k_p: usize,
-    n_p: usize,
-) -> (Duration, bool) {
-    let t0 = Instant::now();
-    match layout {
-        InputLayout::RowMajor => {
-            if k_p == k && n_p == n {
-                bo.map_mut().copy_from_slice(b);
-            } else {
-                let b_host = bo.map_mut();
-                for r in 0..k {
-                    b_host[r * n_p..r * n_p + n].copy_from_slice(&b[r * n..(r + 1) * n]);
-                }
-            }
-            (t0.elapsed(), false)
-        }
-        InputLayout::Transposed => {
-            // b is N×K row-major; the copy into the BO transposes it to
-            // K×N (the paper's CPU-side transpose, multi-core).
-            if k_p == k && n_p == n {
-                transpose_into(b, bo.map_mut(), n, k);
-            } else {
-                let mut tmp = vec![0.0f32; k * n];
-                transpose_into(b, &mut tmp, n, k);
-                let b_host = bo.map_mut();
-                for r in 0..k {
-                    b_host[r * n_p..r * n_p + n].copy_from_slice(&tmp[r * n..(r + 1) * n]);
-                }
-            }
-            (t0.elapsed(), true)
-        }
+impl DerefMut for GemmOffloadEngine {
+    fn deref_mut(&mut self) -> &mut OffloadSession {
+        &mut self.session
     }
 }
 
@@ -312,74 +113,20 @@ impl GemmOffloadEngine {
     /// Initialize the engine and preload `sizes` into the registry
     /// (paper section V-A). More sizes can be registered later.
     pub fn new(cfg: EngineConfig, sizes: &[ProblemSize]) -> Result<GemmOffloadEngine> {
-        let mut eng = GemmOffloadEngine {
-            dev: XrtDevice::open(),
-            backend: cfg.backend,
-            policy: cfg.policy,
+        let session = OffloadSession::new(
+            SessionConfig {
+                policy: cfg.policy,
+                device: cfg.device,
+                depth: cfg.mode.queue_depth(),
+                shards: Shards(1),
+                schedule: SchedulePolicy::Fifo,
+            },
+            sizes,
+        )?;
+        Ok(GemmOffloadEngine {
+            session,
             mode: cfg.mode,
-            registry: BTreeMap::new(),
-            current_size: None,
-            stages: StageTimer::new(),
-            modeled_stages: STAGES.iter().map(|s| (s.to_string(), 0.0)).collect(),
-            invocations: 0,
-            modeled_energy_j: 0.0,
-            pipeline: PipelineTimeline::new(),
-            host_model: HostStagingModel::default(),
-            device_time_scale: 1.0,
-            pending: VecDeque::new(),
-            next_ticket: 0,
-        };
-        for &s in sizes {
-            eng.register_size(s)?;
-        }
-        Ok(eng)
-    }
-
-    /// Build and store the per-size state: tiling, instruction stream,
-    /// shared-buffer sets (one per allowed in-flight invocation).
-    /// Idempotent.
-    pub fn register_size(&mut self, size: ProblemSize) -> Result<()> {
-        if self.registry.contains_key(&size) {
-            return Ok(());
-        }
-        // Pad K to a multiple of k and N to a multiple of 4n (zero padding
-        // cannot change the product); M padding is handled by Tiling.
-        let tiles = crate::gemm::tiling::PAPER_TILES;
-        let k_p = size.k.div_ceil(tiles.k) * tiles.k;
-        let n_p = size.n.div_ceil(4 * tiles.n) * (4 * tiles.n);
-        let padded = ProblemSize::new(size.m, k_p, n_p);
-        let tiling = Tiling::paper(padded)?;
-        let inst_stream = build_instruction_stream(&tiling);
-        #[cfg(feature = "pjrt")]
-        if let NumericsBackend::Pjrt(p) = &mut self.backend {
-            p.prepare(size)?;
-        }
-        // One BO set per allowed in-flight invocation: serial engines pay
-        // for a single set, pipelined engines for the double-buffered pair.
-        let slots: Vec<BoSet> = (0..self.max_in_flight())
-            .map(|_| BoSet {
-                a_bo: self.dev.alloc_bo(tiling.m_padded * k_p),
-                b_bo: self.dev.alloc_bo(k_p * n_p),
-                c_bo: self.dev.alloc_bo(size.m * n_p),
-            })
-            .collect();
-        let prepared = Prepared {
-            logical: size,
-            slots,
-            next_slot: 0,
-            tiling,
-            inst_stream,
-            invocations: 0,
-            wall_s: 0.0,
-            modeled_s: 0.0,
-        };
-        self.registry.insert(size, prepared);
-        Ok(())
-    }
-
-    /// Registered sizes in registry order.
-    pub fn registered_sizes(&self) -> Vec<ProblemSize> {
-        self.registry.keys().copied().collect()
+        })
     }
 
     /// The scheduling mode this engine was built with.
@@ -387,44 +134,10 @@ impl GemmOffloadEngine {
         self.mode
     }
 
-    /// Submissions not yet redeemed with [`Self::wait`].
-    pub fn in_flight(&self) -> usize {
-        self.pending.len()
-    }
-
-    /// Set the multiplier applied to device spans on the pipeline timeline
-    /// (a power profile's `npu_time_scale`). Affects subsequent
-    /// submissions only; the trainer sets it from its profile so the
-    /// timeline's hidden/exposed split is computed against profile-time
-    /// kernels.
-    pub fn set_device_time_scale(&mut self, scale: f64) {
-        self.device_time_scale = scale;
-    }
-
-    fn max_in_flight(&self) -> usize {
-        match self.mode {
-            ExecMode::Serial => 1,
-            ExecMode::Pipelined => PAIRED_SLOTS,
-        }
-    }
-
-    fn add_modeled(&mut self, stage: &str, s: f64) {
-        if let Some(slot) = self.modeled_stages.iter_mut().find(|(n, _)| n == stage) {
-            slot.1 += s;
-        } else {
-            self.modeled_stages.push((stage.to_string(), s));
-        }
-    }
-
-    /// Submit one offloaded GEMM: stage inputs into the next BO set of the
-    /// size's pair (A and B concurrently via host threads), sync them to
-    /// the device, reconfigure if the size changed, launch the kernel, and
-    /// sync the output back. Returns a [`Ticket`]; the result stays in the
-    /// slot's output BO until [`Self::wait`] copies it out.
-    ///
-    /// In [`ExecMode::Pipelined`] up to [`PAIRED_SLOTS`] submissions may be
-    /// in flight; [`ExecMode::Serial`] allows one (submit must be followed
-    /// by its wait — the paper's schedule).
+    /// Submit one offloaded GEMM (positional legacy form of
+    /// [`OffloadSession::submit`]). Returns a [`Ticket`]; the result stays
+    /// in the slot's output BO until [`OffloadSession::wait`] copies it
+    /// out.
     pub fn submit(
         &mut self,
         size: ProblemSize,
@@ -433,351 +146,10 @@ impl GemmOffloadEngine {
         b: &[f32],
         b_layout: InputLayout,
     ) -> Result<Ticket> {
-        let (m, k, n) = (size.m, size.k, size.n);
-        if a.len() != m * k || b.len() != k * n {
-            return Err(Error::shape(format!(
-                "engine gemm {size}: got A={} B={}",
-                a.len(),
-                b.len()
-            )));
-        }
-        if self.pending.len() >= self.max_in_flight() {
-            return Err(Error::config(format!(
-                "submission queue full ({} in flight, {:?} mode): wait() before submitting more",
-                self.pending.len(),
-                self.mode
-            )));
-        }
-        if !self.registry.contains_key(&size) {
-            // Lazy registration keeps the engine usable for new sizes, at
-            // first-invocation cost — same behaviour as the paper's init
-            // doing it up front.
-            self.register_size(size)?;
-        }
-        let submitted = Instant::now();
-
-        // We need disjoint borrows of self.registry and self.dev; take the
-        // prepared entry out and put it back at the end.
-        let mut prep = self.registry.remove(&size).expect("registered above");
-        let tiling = prep.tiling;
-        let slot = prep.next_slot;
-        prep.next_slot = (prep.next_slot + 1) % prep.slots.len();
-        let k_p = tiling.size.k;
-        let n_p = tiling.size.n;
-
-        // -- Stage 1: input copy (+ transpose where layouts demand). In the
-        //    pipelined mode A and B stage concurrently into the slot's
-        //    disjoint BOs; the serial mode keeps the paper's sequential
-        //    copies (Figure-7 fidelity). Either way the StageTimer records
-        //    elapsed wall time: the concurrent path's per-side durations
-        //    overlap, so they are rescaled to sum to the join2 span rather
-        //    than double-counting it.
-        let ((a_wall, a_transposed), (b_wall, b_transposed)) = {
-            let set = &mut prep.slots[slot];
-            let (a_bo, b_bo) = (&mut set.a_bo, &mut set.b_bo);
-            match self.mode {
-                ExecMode::Serial => (
-                    stage_a(a_bo, a, a_layout, m, k, k_p),
-                    stage_b(b_bo, b, b_layout, k, n, k_p, n_p),
-                ),
-                ExecMode::Pipelined => {
-                    let t0 = Instant::now();
-                    let ((a_d, a_t), (b_d, b_t)) = join2(
-                        || stage_a(a_bo, a, a_layout, m, k, k_p),
-                        || stage_b(b_bo, b, b_layout, k, n, k_p, n_p),
-                    );
-                    let span = t0.elapsed().as_secs_f64();
-                    let busy = (a_d.as_secs_f64() + b_d.as_secs_f64()).max(1e-12);
-                    let scale = span / busy;
-                    (
-                        (Duration::from_secs_f64(a_d.as_secs_f64() * scale), a_t),
-                        (Duration::from_secs_f64(b_d.as_secs_f64() * scale), b_t),
-                    )
-                }
-            }
-        };
-        self.stages.add(
-            if a_transposed { STAGE_TRANSPOSE } else { STAGE_INPUT_COPY },
-            a_wall,
-        );
-        self.stages.add(
-            if b_transposed { STAGE_TRANSPOSE } else { STAGE_INPUT_COPY },
-            b_wall,
-        );
-        // Modeled host-side staging (deterministic, for the timeline; the
-        // StageTimer above keeps the measured wallclock).
-        let a_bytes = m * k * 4;
-        let b_bytes = k * n * 4;
-        let host_a = if a_transposed {
-            self.host_model.transpose_s(a_bytes)
-        } else {
-            self.host_model.copy_s(a_bytes)
-        };
-        let host_b = if b_transposed {
-            self.host_model.transpose_s(b_bytes)
-        } else {
-            self.host_model.copy_s(b_bytes)
-        };
-
-        // Stages 2–5 are the device-facing path. On any error the prepared
-        // entry must go back into the registry — its other slot may still
-        // hold a pending invocation's un-copied result — so the fallible
-        // section runs through a closure and failures restore `prep`.
-        let device_path = |eng: &mut GemmOffloadEngine,
-                           prep: &mut Prepared|
-         -> Result<(f64, f64, f64, f64, f64)> {
-            // -- Stage 2: input sync. --------------------------------------
-            let t2 = Instant::now();
-            let set = &mut prep.slots[slot];
-            let sync_in_a = eng.dev.sync_bo(&mut set.a_bo, SyncDirection::ToDevice);
-            let sync_in_b = eng.dev.sync_bo(&mut set.b_bo, SyncDirection::ToDevice);
-            eng.stages.add(STAGE_INPUT_SYNC, t2.elapsed());
-            let modeled_sync_in = sync_in_a + sync_in_b;
-            eng.add_modeled(STAGE_INPUT_SYNC, modeled_sync_in);
-
-            // -- Stage 3: reconfiguration (only on size change). -----------
-            let t3 = Instant::now();
-            let modeled_reconfig = if eng.current_size != Some(size) {
-                let cost =
-                    reconfig::apply(eng.policy, &mut eng.dev, &tiling, &prep.inst_stream)?;
-                eng.current_size = Some(size);
-                cost
-            } else {
-                0.0
-            };
-            eng.stages.add(STAGE_RECONFIG, t3.elapsed());
-            eng.add_modeled(STAGE_RECONFIG, modeled_reconfig);
-
-            // -- Stage 4: the NPU kernel. -----------------------------------
-            let t4 = Instant::now();
-            let set = &mut prep.slots[slot];
-            let (modeled_kernel, modeled_energy) = match &mut eng.backend {
-                NumericsBackend::Simulator => {
-                    let run = eng.dev.run_gemm(&set.a_bo, &set.b_bo, &mut set.c_bo, &tiling)?;
-                    (
-                        run.report.timing.kernel_s + run.report.timing.issue_s
-                            + run.report.timing.dispatch_s,
-                        run.report.energy_j,
-                    )
-                }
-                #[cfg(feature = "pjrt")]
-                NumericsBackend::Pjrt(p) => {
-                    let a_dev = set.a_bo.device_read()?;
-                    let b_dev = set.b_bo.device_read()?;
-                    // Artifacts are lowered at (m_padded, k, n) for the exact
-                    // GPT-2 sizes, which never K/N-pad.
-                    let c_full = p.run(size, tiling.m_padded, a_dev, b_dev)?;
-                    set.c_bo.device_write()[..m * n].copy_from_slice(&c_full[..m * n]);
-                    // Model the device time exactly as the simulator would —
-                    // the artifact supplies numerics, the model supplies time.
-                    let gt = eng.dev.npu.timing.gemm(&tiling);
-                    let energy = eng
-                        .dev
-                        .npu
-                        .power
-                        .energy_j(gt.kernel_s, gt.total_s() - gt.kernel_s, 0.0);
-                    (gt.kernel_s + gt.issue_s + gt.dispatch_s, energy)
-                }
-            };
-            eng.stages.add(STAGE_KERNEL, t4.elapsed());
-            eng.add_modeled(STAGE_KERNEL, modeled_kernel);
-            eng.modeled_energy_j += modeled_energy;
-
-            // -- Stage 5: output sync. --------------------------------------
-            let t5 = Instant::now();
-            let set = &mut prep.slots[slot];
-            let modeled_sync_out = eng.dev.sync_bo(&mut set.c_bo, SyncDirection::FromDevice);
-            eng.stages.add(STAGE_OUTPUT_SYNC, t5.elapsed());
-            eng.add_modeled(STAGE_OUTPUT_SYNC, modeled_sync_out);
-            Ok((
-                modeled_sync_in,
-                modeled_reconfig,
-                modeled_kernel,
-                modeled_energy,
-                modeled_sync_out,
-            ))
-        };
-        let (modeled_sync_in, modeled_reconfig, modeled_kernel, modeled_energy, modeled_sync_out) =
-            match device_path(self, &mut prep) {
-                Ok(v) => v,
-                Err(e) => {
-                    self.registry.insert(size, prep);
-                    return Err(e);
-                }
-            };
-
-        // -- Modeled pipeline schedule: host staging may overlap an earlier
-        //    invocation's device span; device spans never overlap. ----------
-        let host_pre = host_a + host_b + modeled_sync_in;
-        let device_span =
-            (modeled_reconfig + modeled_kernel + modeled_sync_out) * self.device_time_scale;
-        let device_done_s = self.pipeline.submit(host_pre, device_span);
-
-        let ticket = self.next_ticket;
-        self.next_ticket += 1;
-        self.pending.push_back(Pending {
-            ticket,
-            size,
-            slot,
-            device_done_s,
-            submitted,
-            modeled_kernel_s: modeled_kernel,
-            modeled_sync_in_s: modeled_sync_in,
-            modeled_sync_out_s: modeled_sync_out,
-            modeled_reconfig_s: modeled_reconfig,
-            modeled_energy_j: modeled_energy,
-        });
-        self.registry.insert(size, prep);
-        Ok(Ticket(ticket))
-    }
-
-    /// Complete an in-flight submission: copy the result out of the slot's
-    /// output BO into `c` (M×N row-major) and return the invocation's
-    /// statistics. Tickets may be redeemed in any order.
-    pub fn wait(&mut self, ticket: Ticket, c: &mut [f32]) -> Result<InvocationStats> {
-        let idx = self
-            .pending
-            .iter()
-            .position(|p| p.ticket == ticket.0)
-            .ok_or_else(|| {
-                Error::config(format!("wait on unknown or already-completed {ticket:?}"))
-            })?;
-        let (m, n) = {
-            let p = &self.pending[idx];
-            (p.size.m, p.size.n)
-        };
-        if c.len() != m * n {
-            return Err(Error::shape(format!(
-                "engine wait {}x{}: got C={}",
-                m,
-                n,
-                c.len()
-            )));
-        }
-        let p = self.pending.remove(idx).expect("index valid");
-        let size = p.size;
-        let mut prep = self.registry.remove(&size).expect("pending implies registered");
-        let n_p = prep.tiling.size.n;
-
-        // -- Stage 6: output copy (drop N padding if any). ------------------
-        let t6 = Instant::now();
-        match prep.slots[p.slot].c_bo.map() {
-            Ok(c_host) => {
-                if n_p == n {
-                    c.copy_from_slice(&c_host[..m * n]);
-                } else {
-                    for r in 0..m {
-                        c[r * n..(r + 1) * n].copy_from_slice(&c_host[r * n_p..r * n_p + n]);
-                    }
-                }
-            }
-            Err(e) => {
-                self.registry.insert(size, prep);
-                return Err(e);
-            }
-        }
-        self.stages.add(STAGE_OUTPUT_COPY, t6.elapsed());
-        let host_post = self.host_model.copy_s(m * n * 4);
-        self.pipeline.wait(p.device_done_s, host_post);
-
-        let wall = p.submitted.elapsed().as_secs_f64();
-        let stats = InvocationStats {
-            size,
-            modeled_kernel_s: p.modeled_kernel_s,
-            modeled_sync_in_s: p.modeled_sync_in_s,
-            modeled_sync_out_s: p.modeled_sync_out_s,
-            modeled_reconfig_s: p.modeled_reconfig_s,
-            modeled_energy_j: p.modeled_energy_j,
-            wall_s: wall,
-        };
-        prep.invocations += 1;
-        prep.wall_s += wall;
-        prep.modeled_s += stats.modeled_total_s();
-        self.invocations += 1;
-        self.registry.insert(size, prep);
-        Ok(stats)
-    }
-
-    /// Offloaded GEMM: `c = a · b` with `a` given in `a_layout` relative to
-    /// M×K and `b` in `b_layout` relative to K×N. Writes the M×N row-major
-    /// result into `c`.
-    ///
-    /// This is the complete paper section V-B invocation path — a submit
-    /// immediately followed by its wait. Backward weight-gradient GEMMs
-    /// pass `a_layout = Transposed` (doutᵀ), which is the "inconsistent
-    /// data layouts across invocations" the paper fixes with CPU-side
-    /// transposes during the copy.
-    pub fn gemm_ex(
-        &mut self,
-        size: ProblemSize,
-        a: &[f32],
-        a_layout: InputLayout,
-        b: &[f32],
-        b_layout: InputLayout,
-        c: &mut [f32],
-    ) -> Result<InvocationStats> {
-        if c.len() != size.m * size.n {
-            return Err(Error::shape(format!(
-                "engine gemm {size}: got A={} B={} C={}",
-                a.len(),
-                b.len(),
-                c.len()
-            )));
-        }
-        let ticket = self.submit(size, a, a_layout, b, b_layout)?;
-        self.wait(ticket, c)
-    }
-
-    /// Common case: `a` row-major, `b` in `b_layout`.
-    pub fn gemm(
-        &mut self,
-        size: ProblemSize,
-        a: &[f32],
-        b: &[f32],
-        b_layout: InputLayout,
-        c: &mut [f32],
-    ) -> Result<InvocationStats> {
-        self.gemm_ex(size, a, InputLayout::RowMajor, b, b_layout, c)
-    }
-
-    /// Per-size aggregates (Figure 6's NPU bars).
-    pub fn size_records(&self) -> Vec<SizeRecord> {
-        self.registry
-            .values()
-            .map(|p| SizeRecord {
-                size: p.logical,
-                invocations: p.invocations,
-                wall_s: p.wall_s,
-                modeled_s: p.modeled_s,
-            })
-            .collect()
-    }
-
-    /// Modeled seconds accumulated for one stage.
-    pub fn modeled_stage_s(&self, stage: &str) -> f64 {
-        self.modeled_stages
-            .iter()
-            .find(|(n, _)| n == stage)
-            .map(|(_, s)| *s)
-            .unwrap_or(0.0)
-    }
-
-    /// Reset all accumulated statistics (between benchmark phases). Call
-    /// only with no submissions in flight.
-    pub fn reset_stats(&mut self) {
-        debug_assert!(self.pending.is_empty(), "reset_stats with work in flight");
-        self.stages.reset();
-        for (_, s) in self.modeled_stages.iter_mut() {
-            *s = 0.0;
-        }
-        self.invocations = 0;
-        self.modeled_energy_j = 0.0;
-        self.pipeline.reset();
-        for p in self.registry.values_mut() {
-            p.invocations = 0;
-            p.wall_s = 0.0;
-            p.modeled_s = 0.0;
-        }
+        let op = GemmOp::new(size)
+            .with_a_layout(a_layout)
+            .with_b_layout(b_layout);
+        self.session.submit(&op, a, b)
     }
 }
 
@@ -823,12 +195,12 @@ mod tests {
 
     #[test]
     fn transposed_weights_handled() {
-        // b passed as N×K (llm.c weight layout): engine must transpose.
+        // b passed as N x K (llm.c weight layout): engine must transpose.
         let size = ProblemSize::new(64, 64, 128);
         let mut eng = engine_with(&[size]);
         let mut rng = Rng::new(43);
         let a = prop::gen::normal_vec(&mut rng, 64 * 64);
-        let b_t = prop::gen::normal_vec(&mut rng, 128 * 64); // N×K
+        let b_t = prop::gen::normal_vec(&mut rng, 128 * 64); // N x K
         let mut c = vec![0.0; 64 * 128];
         eng.gemm(size, &a, &b_t, InputLayout::Transposed, &mut c).unwrap();
         // Reference: transpose b_t then multiply.
@@ -952,8 +324,12 @@ mod tests {
         let mut c1 = vec![0.0; 128 * 128];
         let mut c2 = vec![0.0; 128 * 256];
         for _ in 0..4 {
-            let t1 = eng.submit(s1, &a1, InputLayout::RowMajor, &b1, InputLayout::RowMajor).unwrap();
-            let t2 = eng.submit(s2, &a2, InputLayout::RowMajor, &b2, InputLayout::RowMajor).unwrap();
+            let t1 = eng
+                .submit(s1, &a1, InputLayout::RowMajor, &b1, InputLayout::RowMajor)
+                .unwrap();
+            let t2 = eng
+                .submit(s2, &a2, InputLayout::RowMajor, &b2, InputLayout::RowMajor)
+                .unwrap();
             eng.wait(t1, &mut c1).unwrap();
             eng.wait(t2, &mut c2).unwrap();
         }
@@ -971,7 +347,7 @@ mod tests {
         let mut rng = Rng::new(59);
         for &size in &sizes {
             let a = prop::gen::normal_vec(&mut rng, size.m * size.k);
-            let b_t = prop::gen::normal_vec(&mut rng, size.n * size.k); // N×K
+            let b_t = prop::gen::normal_vec(&mut rng, size.n * size.k); // N x K
             let mut c_serial = vec![0.0; size.m * size.n];
             let mut c_pipe = vec![0.0; size.m * size.n];
             engine_with(&[size])
@@ -993,16 +369,26 @@ mod tests {
 
         // Serial: one in flight.
         let mut eng = engine_with(&[size]);
-        let t1 = eng.submit(size, &a, InputLayout::RowMajor, &b, InputLayout::RowMajor).unwrap();
-        assert!(eng.submit(size, &a, InputLayout::RowMajor, &b, InputLayout::RowMajor).is_err());
+        let t1 = eng
+            .submit(size, &a, InputLayout::RowMajor, &b, InputLayout::RowMajor)
+            .unwrap();
+        assert!(eng
+            .submit(size, &a, InputLayout::RowMajor, &b, InputLayout::RowMajor)
+            .is_err());
         eng.wait(t1, &mut c).unwrap();
 
         // Pipelined: two in flight (the BO pair), not three.
         let mut eng = pipelined_with(&[size]);
-        let t1 = eng.submit(size, &a, InputLayout::RowMajor, &b, InputLayout::RowMajor).unwrap();
-        let t2 = eng.submit(size, &a, InputLayout::RowMajor, &b, InputLayout::RowMajor).unwrap();
+        let t1 = eng
+            .submit(size, &a, InputLayout::RowMajor, &b, InputLayout::RowMajor)
+            .unwrap();
+        let t2 = eng
+            .submit(size, &a, InputLayout::RowMajor, &b, InputLayout::RowMajor)
+            .unwrap();
         assert_eq!(eng.in_flight(), 2);
-        assert!(eng.submit(size, &a, InputLayout::RowMajor, &b, InputLayout::RowMajor).is_err());
+        assert!(eng
+            .submit(size, &a, InputLayout::RowMajor, &b, InputLayout::RowMajor)
+            .is_err());
         eng.wait(t1, &mut c).unwrap();
         eng.wait(t2, &mut c).unwrap();
         assert_eq!(eng.in_flight(), 0);
@@ -1020,8 +406,12 @@ mod tests {
         let b = vec![1.0; 64 * 128];
         let mut c1 = vec![0.0; 64 * 128];
         let mut c2 = vec![0.0; 64 * 128];
-        let t1 = eng.submit(size, &a1, InputLayout::RowMajor, &b, InputLayout::RowMajor).unwrap();
-        let t2 = eng.submit(size, &a2, InputLayout::RowMajor, &b, InputLayout::RowMajor).unwrap();
+        let t1 = eng
+            .submit(size, &a1, InputLayout::RowMajor, &b, InputLayout::RowMajor)
+            .unwrap();
+        let t2 = eng
+            .submit(size, &a2, InputLayout::RowMajor, &b, InputLayout::RowMajor)
+            .unwrap();
         // Redeem out of order for good measure.
         eng.wait(t2, &mut c2).unwrap();
         eng.wait(t1, &mut c1).unwrap();
@@ -1030,13 +420,15 @@ mod tests {
     }
 
     #[test]
-    fn wait_on_unknown_ticket_is_error() {
+    fn wait_on_redeemed_ticket_is_error() {
         let size = ProblemSize::new(64, 64, 128);
         let mut eng = pipelined_with(&[size]);
         let a = vec![1.0; 64 * 64];
         let b = vec![1.0; 64 * 128];
         let mut c = vec![0.0; 64 * 128];
-        let t = eng.submit(size, &a, InputLayout::RowMajor, &b, InputLayout::RowMajor).unwrap();
+        let t = eng
+            .submit(size, &a, InputLayout::RowMajor, &b, InputLayout::RowMajor)
+            .unwrap();
         eng.wait(t, &mut c).unwrap();
         assert!(eng.wait(t, &mut c).is_err(), "double wait must fail");
     }

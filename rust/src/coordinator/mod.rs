@@ -1,26 +1,40 @@
 //! The paper's system contribution: the minimal-reconfiguration GEMM
-//! offload engine (sections V and VI-D), extended with a pipelined,
-//! double-buffered submission queue.
+//! offload engine (sections V and VI-D), redesigned as a three-layer
+//! offload API.
 //!
-//! * [`engine`] — per-problem-size registry (instruction streams + *paired*
-//!   shared-BO sets preloaded at init), invocation path (copy → transpose →
-//!   sync → issue → kernel → sync → copy) with Figure-7 stage accounting,
-//!   and the [`engine::ExecMode::Pipelined`] submit/wait queue that hides
-//!   host staging under kernel execution.
+//! * [`device`] — [`device::ComputeDevice`], the object-safe numerics
+//!   seam: the XDNA simulator's bf16 datapath, the CPU reference GEMM,
+//!   or (feature `pjrt`) the AOT Pallas artifact through PJRT.
+//! * [`session`] — [`session::OffloadSession`]: per-problem-size registry
+//!   (instruction streams + a ring of [`session::QueueDepth`] shared-BO
+//!   slots preloaded at init), the typed [`session::GemmOp`] descriptor,
+//!   session-scoped [`session::Ticket`]s, Figure-7 stage accounting, and
+//!   N-dimension sharding ([`session::Shards`]) across simulated shim
+//!   columns.
+//! * [`scheduler`] — [`scheduler::Scheduler`]: reorders the staged
+//!   submission window within data dependencies to batch same-size
+//!   invocations and amortize reconfigurations.
+//! * [`engine`] — the PR-1 `GemmOffloadEngine` surface, kept as a thin
+//!   shim over a depth-1/2 FIFO session (Figure-7 serial fidelity).
 //! * [`reconfig`] — minimal vs whole-array reconfiguration policies (the
 //!   section VII-A ablation).
 //! * [`transpose`] — the multi-core CPU transpose of section V-B.
-//! * [`backend`] — where the GEMM numerics come from: the NPU simulator's
-//!   bf16 datapath or (with the `pjrt` feature) the AOT Pallas artifact
-//!   through PJRT.
+//! * [`backend`] — the PJRT artifact loader backing `device::PjrtDevice`
+//!   (feature `pjrt`).
 
 pub mod backend;
+pub mod device;
 pub mod engine;
 pub mod reconfig;
+pub mod scheduler;
+pub mod session;
 pub mod transpose;
 
-pub use backend::NumericsBackend;
-pub use engine::{
-    EngineConfig, ExecMode, GemmOffloadEngine, InputLayout, InvocationStats, Ticket,
-};
+pub use device::{ComputeDevice, DeviceRun, DeviceSpan, SimulatorDevice};
+pub use engine::{EngineConfig, ExecMode, GemmOffloadEngine, PAIRED_SLOTS};
 pub use reconfig::ReconfigPolicy;
+pub use scheduler::{SchedulePolicy, Scheduler};
+pub use session::{
+    GemmOp, InputLayout, InvocationStats, OffloadSession, QueueDepth, SessionConfig, Shards,
+    Ticket, STAGES,
+};

@@ -1,0 +1,1542 @@
+//! [`OffloadSession`] — the layered offload API.
+//!
+//! The paper's engine (section V) fuses three concerns into one type: the
+//! per-size registry + staging (host), the numerics source (device), and
+//! the invocation schedule (policy). This module is the host/policy layer
+//! of the split:
+//!
+//! * **device** — [`super::device::ComputeDevice`], an object-safe trait
+//!   the simulator, the bf16 CPU reference, and (feature `pjrt`) the AOT
+//!   Pallas artifact implement;
+//! * **session** (this file) — owns the XRT buffers, a *ring* of
+//!   [`QueueDepth`] in-flight slots per registered size (generalizing the
+//!   old hardcoded BO pair), the typed [`GemmOp`] descriptor, and
+//!   session-scoped [`Ticket`]s;
+//! * **scheduler** — [`super::scheduler::Scheduler`] may reorder the
+//!   staged window within data dependencies to batch same-size
+//!   invocations (amortizing reconfigurations) while
+//!   [`Shards`] splits one GEMM's N dimension into independent column
+//!   strips dispatched across simulated shim columns and merged on
+//!   [`OffloadSession::wait`].
+//!
+//! Invocation path (paper section V-B, now split in two): `submit` stages
+//! inputs into the next ring slot (copy + transpose + input sync — the
+//! host-side stages of Figure 7) and enqueues the device work; the device
+//! stages (reconfigure on size change, kernel, output sync) run when the
+//! window drains at `wait`, in scheduler order; `wait` then merges the
+//! strip outputs into the caller's buffer. A depth-1 FIFO session is
+//! bit-for-bit and stage-for-stage the paper's strictly serial schedule.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{Duration, Instant};
+
+use crate::gemm::sizes::ProblemSize;
+use crate::gemm::tiling::Tiling;
+use crate::npu::gemm_design::build_instruction_stream;
+use crate::npu::timing::{HostStagingModel, PipelineTimeline};
+use crate::util::error::{Error, Result};
+use crate::util::threads::join2;
+use crate::util::timer::StageTimer;
+use crate::xrt::{BufferObject, SyncDirection, XrtDevice};
+
+use super::device::{ComputeDevice, DeviceRun, SimulatorDevice};
+use super::reconfig::{self, ReconfigPolicy};
+use super::scheduler::{SchedulePolicy, Scheduler, WindowOp};
+use super::transpose::transpose_into;
+
+/// Stage names (Figure 7's categories).
+pub const STAGE_INPUT_COPY: &str = "input copy";
+pub const STAGE_TRANSPOSE: &str = "transpose";
+pub const STAGE_INPUT_SYNC: &str = "input sync";
+pub const STAGE_RECONFIG: &str = "reconfig";
+pub const STAGE_KERNEL: &str = "npu kernel";
+pub const STAGE_OUTPUT_SYNC: &str = "output sync";
+pub const STAGE_OUTPUT_COPY: &str = "output copy";
+
+/// All stages in reporting order.
+pub const STAGES: [&str; 7] = [
+    STAGE_INPUT_COPY,
+    STAGE_TRANSPOSE,
+    STAGE_INPUT_SYNC,
+    STAGE_RECONFIG,
+    STAGE_KERNEL,
+    STAGE_OUTPUT_SYNC,
+    STAGE_OUTPUT_COPY,
+];
+
+/// Layout of an input at its llm.c call site.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum InputLayout {
+    /// Already row-major for its role: plain copy.
+    RowMajor,
+    /// Stored transposed (llm.c's column-major weight view): the copy into
+    /// the BO transposes (paper section V-B).
+    Transposed,
+}
+
+/// How many invocations may be staged/in flight at once — the size of the
+/// per-size BO slot ring. Depth 1 is the paper's strictly serial schedule;
+/// depth 2 is the PR-1 double-buffered pair; deeper rings let the host run
+/// further ahead.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub struct QueueDepth(pub usize);
+
+impl Default for QueueDepth {
+    fn default() -> Self {
+        QueueDepth(1)
+    }
+}
+
+impl QueueDepth {
+    pub fn get(self) -> usize {
+        self.0.max(1)
+    }
+}
+
+/// How many column strips one GEMM's N dimension is split into, each
+/// dispatched to its own simulated shim-column partition and merged on
+/// `wait`. 1 = unsharded (the paper's whole-array dispatch). Clamped to
+/// the array's shim-column count (4): a strip on a 1/s partition runs its
+/// kernel s times slower (aggregate array throughput is conserved — the
+/// modeled win of sharding is overlapping per-invocation overheads across
+/// columns, never free compute), and N is divided into equal
+/// quantum-aligned strips (the largest divisor of the 128-column quantum
+/// count within the cap) so sharding adds no padding over the unsharded
+/// layout and every strip shares one programming variant — sizes whose
+/// quantum count divides less cleanly shard less.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Shards(pub usize);
+
+impl Default for Shards {
+    fn default() -> Self {
+        Shards(1)
+    }
+}
+
+impl Shards {
+    pub fn get(self) -> usize {
+        self.0.max(1)
+    }
+}
+
+/// Typed descriptor of one offloaded GEMM (replaces the old positional
+/// `submit(size, a, a_layout, b, b_layout)` argument list).
+#[derive(Debug, Clone)]
+pub struct GemmOp {
+    pub size: ProblemSize,
+    pub a_layout: InputLayout,
+    pub b_layout: InputLayout,
+    /// Tickets that must execute before this op (data dependencies the
+    /// scheduler must not reorder across).
+    pub deps: Vec<Ticket>,
+}
+
+impl GemmOp {
+    pub fn new(size: ProblemSize) -> GemmOp {
+        GemmOp {
+            size,
+            a_layout: InputLayout::RowMajor,
+            b_layout: InputLayout::RowMajor,
+            deps: Vec::new(),
+        }
+    }
+
+    pub fn with_a_layout(mut self, layout: InputLayout) -> GemmOp {
+        self.a_layout = layout;
+        self
+    }
+
+    pub fn with_b_layout(mut self, layout: InputLayout) -> GemmOp {
+        self.b_layout = layout;
+        self
+    }
+
+    /// Declare a data dependency on an earlier submission.
+    pub fn after(mut self, ticket: Ticket) -> GemmOp {
+        self.deps.push(ticket);
+        self
+    }
+}
+
+/// Handle for an in-flight submission; redeem with
+/// [`OffloadSession::wait`]. Tickets are *session-scoped*: redeeming a
+/// ticket on a different session, or twice, is a helpful error — never a
+/// wrong buffer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Ticket {
+    session: u64,
+    seq: u64,
+}
+
+impl Ticket {
+    /// The issuing session's id (diagnostics).
+    pub fn session_id(&self) -> u64 {
+        self.session
+    }
+}
+
+/// Session construction options.
+pub struct SessionConfig {
+    pub policy: ReconfigPolicy,
+    /// Where GEMM numerics execute.
+    pub device: Box<dyn ComputeDevice>,
+    pub depth: QueueDepth,
+    pub shards: Shards,
+    pub schedule: SchedulePolicy,
+}
+
+impl Default for SessionConfig {
+    fn default() -> Self {
+        SessionConfig {
+            policy: ReconfigPolicy::Minimal,
+            device: Box::new(SimulatorDevice),
+            depth: QueueDepth::default(),
+            shards: Shards::default(),
+            schedule: SchedulePolicy::Fifo,
+        }
+    }
+}
+
+/// The array programming for one *distinct* padded strip size. Strips of
+/// equal padded size (the common, evenly divisible case) share one
+/// variant instead of each storing a duplicate instruction stream.
+struct StripVariant {
+    /// Tiling of the padded strip problem.
+    tiling: Tiling,
+    inst: Vec<u32>,
+}
+
+/// One column strip of a registered size.
+struct StripSpec {
+    /// Logical output-column range [n0, n1).
+    n0: usize,
+    n1: usize,
+    /// Row stride of this strip's B/C BOs (width padded to tile multiples).
+    n_p: usize,
+    /// The strip's logical (unpadded) problem size.
+    logical: ProblemSize,
+    /// Index into `Prepared::variants`.
+    variant: usize,
+}
+
+/// Per-strip buffer objects of one ring slot.
+struct SlotStrip {
+    b_bo: BufferObject,
+    c_bo: BufferObject,
+}
+
+/// One ring slot's shared buffers for a problem size.
+struct SlotBos {
+    /// Padded A buffer (m_padded x k_p; pad rows stay zero). Shared by all
+    /// strips of the invocation.
+    a_bo: BufferObject,
+    strips: Vec<SlotStrip>,
+}
+
+/// Preloaded per-size state (the registry entry).
+struct Prepared {
+    /// The logical (unpadded) problem size requested by the caller.
+    logical: ProblemSize,
+    /// K padded up to a tile multiple (row stride of A/B BOs).
+    k_p: usize,
+    strips: Vec<StripSpec>,
+    /// Distinct padded-strip programmings the strips reference.
+    variants: Vec<StripVariant>,
+    /// One BO set per ring slot; staging for one invocation can overlap
+    /// device work on the others.
+    slots: Vec<SlotBos>,
+    /// Slots not currently holding an un-waited invocation. A freed slot
+    /// returns to the back of the ring at `wait`, so out-of-order waits
+    /// can never hand a new submission a slot whose result is still
+    /// pending (the round-robin cursor this replaces could).
+    free: VecDeque<usize>,
+    /// Telemetry for Figure 6.
+    invocations: u64,
+    wall_s: f64,
+    modeled_s: f64,
+}
+
+/// Stats of one op's executed device work.
+#[derive(Debug, Clone, Copy)]
+struct Executed {
+    device_done_s: f64,
+    kernel_s: f64,
+    sync_out_s: f64,
+    reconfig_s: f64,
+    energy_j: f64,
+}
+
+enum OpState {
+    /// Inputs staged and synced; device work not yet run.
+    Staged,
+    /// Device work done; strip outputs await the merge at `wait`.
+    Executed(Executed),
+    /// Device execution failed. The op never re-executes (its completed
+    /// strips were already charged once — re-running would double-count
+    /// kernel time); its `wait` reports the error and frees the slot.
+    Failed(String),
+}
+
+/// Book-keeping for one in-flight invocation.
+struct PendingOp {
+    seq: u64,
+    size: ProblemSize,
+    slot: usize,
+    deps: Vec<u64>,
+    /// Modeled time the staged inputs became device-visible.
+    ready_s: f64,
+    submitted: Instant,
+    modeled_sync_in_s: f64,
+    state: OpState,
+}
+
+/// Per-invocation result statistics.
+#[derive(Debug, Clone)]
+pub struct InvocationStats {
+    pub size: ProblemSize,
+    /// Modeled device seconds by stage (sync/issue/kernel/reconfig).
+    pub modeled_kernel_s: f64,
+    pub modeled_sync_in_s: f64,
+    pub modeled_sync_out_s: f64,
+    pub modeled_reconfig_s: f64,
+    pub modeled_energy_j: f64,
+    /// Wallclock from submission to completion on this machine (for the
+    /// depth-1 path this is the full invocation; for deeper rings it is
+    /// submit-to-wait latency and may include unrelated work).
+    pub wall_s: f64,
+}
+
+impl InvocationStats {
+    pub fn modeled_total_s(&self) -> f64 {
+        self.modeled_kernel_s
+            + self.modeled_sync_in_s
+            + self.modeled_sync_out_s
+            + self.modeled_reconfig_s
+    }
+}
+
+/// Aggregated per-size record (drives Figure 6).
+#[derive(Debug, Clone)]
+pub struct SizeRecord {
+    pub size: ProblemSize,
+    pub invocations: u64,
+    pub wall_s: f64,
+    pub modeled_s: f64,
+}
+
+static NEXT_SESSION_ID: AtomicU64 = AtomicU64::new(1);
+
+/// The layered offload session (see module docs).
+pub struct OffloadSession {
+    pub dev: XrtDevice,
+    device: Box<dyn ComputeDevice>,
+    policy: ReconfigPolicy,
+    depth: usize,
+    shards: usize,
+    scheduler: Scheduler,
+    id: u64,
+    registry: BTreeMap<ProblemSize, Prepared>,
+    /// Padded strip size the array is currently programmed for.
+    current_strip: Option<ProblemSize>,
+    /// Logical size of the last executed op (the scheduler's batching
+    /// anchor).
+    current_logical: Option<ProblemSize>,
+    /// Wallclock stage accounting across all invocations (Figure 7).
+    pub stages: StageTimer,
+    /// Modeled device-seconds per stage across all invocations.
+    pub modeled_stages: Vec<(String, f64)>,
+    pub invocations: u64,
+    pub modeled_energy_j: f64,
+    /// Modeled host/device schedule of every invocation so far. With a
+    /// depth-1 FIFO unsharded session its makespan equals its serial sum;
+    /// otherwise the difference is staging hidden under device work (and,
+    /// sharded, strips hidden under each other across columns).
+    pub pipeline: PipelineTimeline,
+    /// Cost model feeding the timeline's host-side stage durations.
+    pub host_model: HostStagingModel,
+    /// Multiplier applied to device spans on the pipeline timeline (the
+    /// power profile's NPU throttle — battery stretches kernels, letting
+    /// more host staging hide). Per-invocation [`InvocationStats`] and
+    /// `modeled_stages` stay unscaled; reports apply profile scaling
+    /// themselves, as Figures 6-8 do.
+    device_time_scale: f64,
+    pending: VecDeque<PendingOp>,
+    next_seq: u64,
+}
+
+/// Copy (or transpose-copy) `a` into the A BO with row stride `k_p`.
+/// Returns the elapsed wallclock and whether the transpose path ran.
+fn stage_a(
+    bo: &mut BufferObject,
+    a: &[f32],
+    layout: InputLayout,
+    m: usize,
+    k: usize,
+    k_p: usize,
+) -> (Duration, bool) {
+    let t0 = Instant::now();
+    match layout {
+        InputLayout::RowMajor => {
+            let a_host = bo.map_mut();
+            if k_p == k {
+                a_host[..m * k].copy_from_slice(a);
+            } else {
+                for r in 0..m {
+                    a_host[r * k_p..r * k_p + k].copy_from_slice(&a[r * k..(r + 1) * k]);
+                }
+            }
+            // pad rows/cols beyond m x k stay zero from allocation
+            (t0.elapsed(), false)
+        }
+        InputLayout::Transposed => {
+            // a is K x M row-major (e.g. dout viewed as its transpose);
+            // transpose into the BO's M x K (stride k_p) region.
+            if k_p == k {
+                transpose_into(a, &mut bo.map_mut()[..m * k], k, m);
+            } else {
+                let mut tmp = vec![0.0f32; m * k];
+                transpose_into(a, &mut tmp, k, m);
+                let a_host = bo.map_mut();
+                for r in 0..m {
+                    a_host[r * k_p..r * k_p + k].copy_from_slice(&tmp[r * k..(r + 1) * k]);
+                }
+            }
+            (t0.elapsed(), true)
+        }
+    }
+}
+
+/// Stage every strip of `b` into its slot BO (sequentially; the strips of
+/// one invocation share the host's staging bandwidth either way).
+fn stage_b_all(
+    slot_strips: &mut [SlotStrip],
+    strips: &[StripSpec],
+    b: &[f32],
+    layout: InputLayout,
+    k: usize,
+    n: usize,
+) -> (Duration, bool) {
+    let mut total = Duration::ZERO;
+    let mut transposed = false;
+    for (st, ss) in strips.iter().zip(slot_strips.iter_mut()) {
+        let (d, t) = stage_b_strip(&mut ss.b_bo, b, layout, k, n, st.n0, st.n1, st.n_p);
+        total += d;
+        transposed = t;
+    }
+    (total, transposed)
+}
+
+/// Copy (or transpose-copy) the columns [n0, n1) of `b` into a strip BO
+/// with row stride `n_p`. `b` is the whole K x N input in `layout`.
+fn stage_b_strip(
+    bo: &mut BufferObject,
+    b: &[f32],
+    layout: InputLayout,
+    k: usize,
+    n: usize,
+    n0: usize,
+    n1: usize,
+    n_p: usize,
+) -> (Duration, bool) {
+    let t0 = Instant::now();
+    let w = n1 - n0;
+    match layout {
+        InputLayout::RowMajor => {
+            let dst = bo.map_mut();
+            if n_p == w && w == n {
+                // Single full-width strip: plain memcpy (rows beyond k stay
+                // zero from allocation).
+                dst[..k * n].copy_from_slice(b);
+            } else {
+                for r in 0..k {
+                    dst[r * n_p..r * n_p + w].copy_from_slice(&b[r * n + n0..r * n + n1]);
+                }
+            }
+            (t0.elapsed(), false)
+        }
+        InputLayout::Transposed => {
+            // b is N x K row-major; its rows n0..n1 are this strip's
+            // columns. The copy into the BO transposes them to K x w (the
+            // paper's CPU-side transpose, multi-core).
+            let block = &b[n0 * k..n1 * k];
+            if n_p == w {
+                transpose_into(block, &mut bo.map_mut()[..k * w], w, k);
+            } else {
+                let mut tmp = vec![0.0f32; k * w];
+                transpose_into(block, &mut tmp, w, k);
+                let dst = bo.map_mut();
+                for r in 0..k {
+                    dst[r * n_p..r * n_p + w].copy_from_slice(&tmp[r * w..(r + 1) * w]);
+                }
+            }
+            (t0.elapsed(), true)
+        }
+    }
+}
+
+impl OffloadSession {
+    /// Open a session and preload `sizes` into the registry (paper section
+    /// V-A). More sizes can be registered later (lazily on first submit).
+    pub fn new(cfg: SessionConfig, sizes: &[ProblemSize]) -> Result<OffloadSession> {
+        // One strip per shim column at most — the array has no more
+        // independent column partitions to dispatch strips across.
+        let shards = cfg.shards.get().min(crate::gemm::tiling::GRID_COLS);
+        let mut session = OffloadSession {
+            dev: XrtDevice::open(),
+            device: cfg.device,
+            policy: cfg.policy,
+            depth: cfg.depth.get(),
+            shards,
+            scheduler: Scheduler::new(cfg.schedule),
+            id: NEXT_SESSION_ID.fetch_add(1, Ordering::Relaxed),
+            registry: BTreeMap::new(),
+            current_strip: None,
+            current_logical: None,
+            stages: StageTimer::new(),
+            modeled_stages: STAGES.iter().map(|s| (s.to_string(), 0.0)).collect(),
+            invocations: 0,
+            modeled_energy_j: 0.0,
+            pipeline: PipelineTimeline::with_columns(shards),
+            host_model: HostStagingModel::default(),
+            device_time_scale: 1.0,
+            pending: VecDeque::new(),
+            next_seq: 0,
+        };
+        for &s in sizes {
+            session.register_size(s)?;
+        }
+        Ok(session)
+    }
+
+    /// Build and store the per-size state: strip tilings, instruction
+    /// streams, and one BO set per ring slot. Idempotent.
+    pub fn register_size(&mut self, size: ProblemSize) -> Result<()> {
+        if self.registry.contains_key(&size) {
+            return Ok(());
+        }
+        // Pad K to a tile multiple and each strip's width to 4n tiles
+        // (zero padding cannot change the product); M padding is handled
+        // by Tiling.
+        let tiles = crate::gemm::tiling::PAPER_TILES;
+        let k_p = size.k.div_ceil(tiles.k) * tiles.k;
+        let n_quantum = 4 * tiles.n;
+
+        // Split N into quantum-aligned column strips. Two constraints keep
+        // the split free: distributing whole 128-column quanta adds no
+        // padding over the unsharded layout, and using the largest
+        // *divisor* of the quantum count (<= the shard cap) keeps every
+        // strip the same padded width — one programming variant per size,
+        // so strips of one op never thrash the reconfiguration state.
+        // Sizes whose quantum count has no friendly divisor shard less
+        // (a prime count falls back to unsharded).
+        let n_quanta = size.n.div_ceil(n_quantum);
+        let shard_cap = self.shards.min(n_quanta).max(1);
+        let s_eff = (1..=shard_cap)
+            .rev()
+            .find(|s| n_quanta % s == 0)
+            .unwrap_or(1);
+        let quanta_per_strip = n_quanta / s_eff;
+        let mut strips = Vec::with_capacity(s_eff);
+        let mut variants: Vec<StripVariant> = Vec::new();
+        let mut n0 = 0usize;
+        for _ in 0..s_eff {
+            // The final strip absorbs the partial last quantum (its padded
+            // width stays the common quanta_per_strip * quantum).
+            let w = (quanta_per_strip * n_quantum).min(size.n - n0);
+            let n1 = n0 + w;
+            let n_p = w.div_ceil(n_quantum) * n_quantum;
+            let logical = ProblemSize::new(size.m, size.k, w);
+            let padded = ProblemSize::new(size.m, k_p, n_p);
+            let variant = match variants.iter().position(|v| v.tiling.size == padded) {
+                Some(v) => v,
+                None => {
+                    let tiling = Tiling::paper(padded)?;
+                    let inst = build_instruction_stream(&tiling);
+                    variants.push(StripVariant { tiling, inst });
+                    variants.len() - 1
+                }
+            };
+            self.device.prepare(logical)?;
+            strips.push(StripSpec {
+                n0,
+                n1,
+                n_p,
+                logical,
+                variant,
+            });
+            n0 = n1;
+        }
+
+        // One BO set per ring slot: a depth-1 session pays for a single
+        // set, a depth-k session for the k-deep ring.
+        let m_padded = variants[0].tiling.m_padded;
+        let slots: Vec<SlotBos> = (0..self.depth)
+            .map(|_| SlotBos {
+                a_bo: self.dev.alloc_bo(m_padded * k_p),
+                strips: strips
+                    .iter()
+                    .map(|st| SlotStrip {
+                        b_bo: self.dev.alloc_bo(k_p * st.n_p),
+                        c_bo: self.dev.alloc_bo(size.m * st.n_p),
+                    })
+                    .collect(),
+            })
+            .collect();
+        self.registry.insert(
+            size,
+            Prepared {
+                logical: size,
+                k_p,
+                strips,
+                variants,
+                slots,
+                free: (0..self.depth).collect(),
+                invocations: 0,
+                wall_s: 0.0,
+                modeled_s: 0.0,
+            },
+        );
+        Ok(())
+    }
+
+    /// Registered sizes in registry order.
+    pub fn registered_sizes(&self) -> Vec<ProblemSize> {
+        self.registry.keys().copied().collect()
+    }
+
+    /// This session's unique id (tickets are scoped to it).
+    pub fn session_id(&self) -> u64 {
+        self.id
+    }
+
+    /// The ring depth (max staged/in-flight submissions).
+    pub fn queue_depth(&self) -> usize {
+        self.depth
+    }
+
+    /// Column strips each GEMM is split into.
+    pub fn shard_count(&self) -> usize {
+        self.shards
+    }
+
+    /// The scheduling policy the session drains its window with.
+    pub fn schedule_policy(&self) -> SchedulePolicy {
+        self.scheduler.policy
+    }
+
+    /// The numerics device's name.
+    pub fn device_name(&self) -> &'static str {
+        self.device.name()
+    }
+
+    /// Submissions not yet redeemed with [`Self::wait`].
+    pub fn in_flight(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Set the multiplier applied to device spans on the pipeline timeline
+    /// (a power profile's `npu_time_scale`). Affects subsequent
+    /// submissions only; the trainer sets it from its profile so the
+    /// timeline's hidden/exposed split is computed against profile-time
+    /// kernels.
+    pub fn set_device_time_scale(&mut self, scale: f64) {
+        self.device_time_scale = scale;
+    }
+
+    fn add_modeled(&mut self, stage: &str, s: f64) {
+        if let Some(slot) = self.modeled_stages.iter_mut().find(|(n, _)| n == stage) {
+            slot.1 += s;
+        } else {
+            self.modeled_stages.push((stage.to_string(), s));
+        }
+    }
+
+    /// Submit one offloaded GEMM described by `op`: stage `a` and `b` into
+    /// the size's next ring slot (concurrently on depth > 1) and sync them
+    /// to the device. The device-side stages run when the window drains at
+    /// [`Self::wait`], in scheduler order. Returns a session-scoped
+    /// [`Ticket`]; the result stays in the slot's output BOs until `wait`
+    /// merges it out.
+    pub fn submit(&mut self, op: &GemmOp, a: &[f32], b: &[f32]) -> Result<Ticket> {
+        let size = op.size;
+        let (m, k, n) = (size.m, size.k, size.n);
+        if a.len() != m * k || b.len() != k * n {
+            return Err(Error::shape(format!(
+                "session gemm {size}: got A={} B={}",
+                a.len(),
+                b.len()
+            )));
+        }
+        if self.pending.len() >= self.depth {
+            return Err(Error::config(format!(
+                "submission ring full ({} in flight at QueueDepth({})): wait() before \
+                 submitting more",
+                self.pending.len(),
+                self.depth
+            )));
+        }
+        let mut deps = Vec::with_capacity(op.deps.len());
+        for d in &op.deps {
+            if d.session != self.id {
+                return Err(Error::config(format!(
+                    "dependency ticket #{} was issued by session #{}, not session #{}; \
+                     tickets are session-scoped",
+                    d.seq, d.session, self.id
+                )));
+            }
+            if d.seq >= self.next_seq {
+                return Err(Error::config(format!(
+                    "dependency ticket #{} was never issued by this session",
+                    d.seq
+                )));
+            }
+            deps.push(d.seq);
+        }
+        if !self.registry.contains_key(&size) {
+            // Lazy registration keeps the session usable for new sizes, at
+            // first-invocation cost — same behaviour as the paper's init
+            // doing it up front.
+            self.register_size(size)?;
+        }
+        let submitted = Instant::now();
+
+        // We need disjoint borrows of self.registry and self.dev; take the
+        // prepared entry out and put it back at the end.
+        let mut prep = self.registry.remove(&size).expect("registered above");
+        // A size never has more in flight than the whole ring, and the
+        // ring-full check above already bounded that, so a slot is free.
+        let slot = prep
+            .free
+            .pop_front()
+            .expect("ring-full check guarantees a free slot");
+        let k_p = prep.k_p;
+
+        // -- Stage 1: input copy (+ transpose where layouts demand). On a
+        //    depth-1 ring the copies run sequentially (Figure-7 fidelity);
+        //    deeper rings stage A and the B strips concurrently into the
+        //    slot's disjoint BOs. Either way the StageTimer records elapsed
+        //    wall time: the concurrent path's per-side durations overlap,
+        //    so they are rescaled to sum to the join2 span rather than
+        //    double-counting it.
+        let ((a_wall, a_transposed), (b_wall, b_transposed)) = {
+            let slot_bos = &mut prep.slots[slot];
+            let (a_bo, slot_strips) = (&mut slot_bos.a_bo, &mut slot_bos.strips);
+            let strips = &prep.strips;
+            if self.depth == 1 {
+                (
+                    stage_a(a_bo, a, op.a_layout, m, k, k_p),
+                    stage_b_all(slot_strips, strips, b, op.b_layout, k, n),
+                )
+            } else {
+                let t0 = Instant::now();
+                let ((a_d, a_t), (b_d, b_t)) = join2(
+                    || stage_a(a_bo, a, op.a_layout, m, k, k_p),
+                    || stage_b_all(slot_strips, strips, b, op.b_layout, k, n),
+                );
+                let span = t0.elapsed().as_secs_f64();
+                let busy = (a_d.as_secs_f64() + b_d.as_secs_f64()).max(1e-12);
+                let scale = span / busy;
+                (
+                    (Duration::from_secs_f64(a_d.as_secs_f64() * scale), a_t),
+                    (Duration::from_secs_f64(b_d.as_secs_f64() * scale), b_t),
+                )
+            }
+        };
+        let a_stage = if a_transposed {
+            STAGE_TRANSPOSE
+        } else {
+            STAGE_INPUT_COPY
+        };
+        let b_stage = if b_transposed {
+            STAGE_TRANSPOSE
+        } else {
+            STAGE_INPUT_COPY
+        };
+        self.stages.add(a_stage, a_wall);
+        self.stages.add(b_stage, b_wall);
+        // Modeled host-side staging (deterministic, for the timeline; the
+        // StageTimer above keeps the measured wallclock).
+        let a_bytes = m * k * 4;
+        let b_bytes = k * n * 4;
+        let host_a = if a_transposed {
+            self.host_model.transpose_s(a_bytes)
+        } else {
+            self.host_model.copy_s(a_bytes)
+        };
+        let host_b = if b_transposed {
+            self.host_model.transpose_s(b_bytes)
+        } else {
+            self.host_model.copy_s(b_bytes)
+        };
+
+        // -- Stage 2: input sync. ------------------------------------------
+        let t2 = Instant::now();
+        let modeled_sync_in = {
+            let slot_bos = &mut prep.slots[slot];
+            let mut total = self.dev.sync_bo(&mut slot_bos.a_bo, SyncDirection::ToDevice);
+            for ss in slot_bos.strips.iter_mut() {
+                total += self.dev.sync_bo(&mut ss.b_bo, SyncDirection::ToDevice);
+            }
+            total
+        };
+        self.stages.add(STAGE_INPUT_SYNC, t2.elapsed());
+        self.add_modeled(STAGE_INPUT_SYNC, modeled_sync_in);
+
+        // -- Enqueue: device-side stages (reconfig, kernel, output sync)
+        //    run at drain time in scheduler order. ------------------------
+        let ready_s = self.pipeline.stage(host_a + host_b + modeled_sync_in);
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.pending.push_back(PendingOp {
+            seq,
+            size,
+            slot,
+            deps,
+            ready_s,
+            submitted,
+            modeled_sync_in_s: modeled_sync_in,
+            state: OpState::Staged,
+        });
+        self.registry.insert(size, prep);
+        Ok(Ticket {
+            session: self.id,
+            seq,
+        })
+    }
+
+    /// Run the device-side stages of every staged op, in scheduler order.
+    /// An op whose device execution fails is *poisoned* (never re-executed
+    /// — its completed strips were already charged once) rather than
+    /// aborting the drain: the error surfaces, attributed, when *its own*
+    /// ticket is waited, and the other staged ops still execute.
+    fn drain(&mut self) {
+        let window: Vec<WindowOp> = self
+            .pending
+            .iter()
+            .filter(|p| matches!(p.state, OpState::Staged))
+            .map(|p| WindowOp {
+                seq: p.seq,
+                size: p.size,
+                deps: p.deps.clone(),
+            })
+            .collect();
+        if window.is_empty() {
+            return;
+        }
+        let order = self.scheduler.order(&window, self.current_logical);
+        for idx in order {
+            let seq = window[idx].seq;
+            let pos = self
+                .pending
+                .iter()
+                .position(|p| p.seq == seq)
+                .expect("staged op still pending");
+            let mut pend = self.pending.remove(pos).expect("index valid");
+            let mut prep = self
+                .registry
+                .remove(&pend.size)
+                .expect("pending implies registered");
+            if let Err(e) = self.execute_one(&mut prep, &mut pend) {
+                pend.state = OpState::Failed(e.to_string());
+            }
+            self.registry.insert(pend.size, prep);
+            let pos = pos.min(self.pending.len());
+            self.pending.insert(pos, pend);
+        }
+    }
+
+    /// Device-side stages of one staged op: per strip, reconfigure the
+    /// array if its programmed size changed, run the kernel on the
+    /// [`ComputeDevice`], and sync the strip output back. Strips land on
+    /// their own timeline columns; reconfigurations are array-wide
+    /// barriers.
+    fn execute_one(&mut self, prep: &mut Prepared, pend: &mut PendingOp) -> Result<()> {
+        let mut kernel_s = 0.0f64;
+        let mut sync_out_s = 0.0f64;
+        let mut reconfig_s = 0.0f64;
+        let mut energy_j = 0.0f64;
+        let mut device_done = 0.0f64;
+        for i in 0..prep.strips.len() {
+            // -- Stage 3: reconfiguration (only on programmed-size change).
+            let t3 = Instant::now();
+            let v = prep.strips[i].variant;
+            let strip_size = prep.variants[v].tiling.size;
+            let reconfig_cost = if self.current_strip != Some(strip_size) {
+                let cost = reconfig::apply(
+                    self.policy,
+                    &mut self.dev,
+                    &prep.variants[v].tiling,
+                    &prep.variants[v].inst,
+                )?;
+                self.current_strip = Some(strip_size);
+                cost
+            } else {
+                0.0
+            };
+            self.stages.add(STAGE_RECONFIG, t3.elapsed());
+            self.add_modeled(STAGE_RECONFIG, reconfig_cost);
+            if reconfig_cost > 0.0 {
+                self.pipeline
+                    .barrier(pend.ready_s, reconfig_cost * self.device_time_scale);
+            }
+            reconfig_s += reconfig_cost;
+
+            // -- Stage 4: the kernel, on whichever ComputeDevice. ---------
+            let t4 = Instant::now();
+            let span = {
+                let slot_bos = &mut prep.slots[pend.slot];
+                let a_bo = &slot_bos.a_bo;
+                let ss = &mut slot_bos.strips[i];
+                self.device.run(DeviceRun {
+                    xrt: &mut self.dev,
+                    tiling: &prep.variants[v].tiling,
+                    logical: prep.strips[i].logical,
+                    a: a_bo,
+                    b: &ss.b_bo,
+                    c: &mut ss.c_bo,
+                })?
+            };
+            // A strip occupies a 1/strips column partition, so its kernel
+            // runs `strips` times slower than the whole-array span the
+            // device reported — aggregate array throughput is conserved;
+            // fixed issue/dispatch overheads do not shrink. Unsharded ops
+            // (one strip) keep the exact whole-array span.
+            let strip_kernel_s = span.on_partition(prep.strips.len());
+            self.stages.add(STAGE_KERNEL, t4.elapsed());
+            self.add_modeled(STAGE_KERNEL, strip_kernel_s);
+            self.modeled_energy_j += span.energy_j;
+            kernel_s += strip_kernel_s;
+            energy_j += span.energy_j;
+
+            // -- Stage 5: output sync. ------------------------------------
+            let t5 = Instant::now();
+            let so = self
+                .dev
+                .sync_bo(&mut prep.slots[pend.slot].strips[i].c_bo, SyncDirection::FromDevice);
+            self.stages.add(STAGE_OUTPUT_SYNC, t5.elapsed());
+            self.add_modeled(STAGE_OUTPUT_SYNC, so);
+            sync_out_s += so;
+
+            // -- Timeline: strip i streams on column i; spans on one column
+            //    never overlap. ------------------------------------------
+            let done = self.pipeline.run_on(
+                i,
+                pend.ready_s,
+                (strip_kernel_s + so) * self.device_time_scale,
+            );
+            device_done = device_done.max(done);
+        }
+        self.current_logical = Some(pend.size);
+        pend.state = OpState::Executed(Executed {
+            device_done_s: device_done,
+            kernel_s,
+            sync_out_s,
+            reconfig_s,
+            energy_j,
+        });
+        Ok(())
+    }
+
+    /// Complete an in-flight submission: drain the staged window (in
+    /// scheduler order), merge this op's strip outputs into `c` (M x N
+    /// row-major) and return the invocation's statistics. Tickets may be
+    /// redeemed in any order, but only on the session that issued them,
+    /// and only once. A device-execution failure is reported by the wait
+    /// on the ticket that failed (other tickets' results stay valid), and
+    /// that wait frees the op's ring slot.
+    pub fn wait(&mut self, ticket: Ticket, c: &mut [f32]) -> Result<InvocationStats> {
+        if ticket.session != self.id {
+            return Err(Error::config(format!(
+                "ticket #{} was issued by offload session #{}, not session #{}; \
+                 tickets are session-scoped",
+                ticket.seq, ticket.session, self.id
+            )));
+        }
+        let pos = match self.pending.iter().position(|p| p.seq == ticket.seq) {
+            Some(pos) => pos,
+            None if ticket.seq < self.next_seq => {
+                return Err(Error::config(format!(
+                    "ticket #{} was already redeemed (double wait?)",
+                    ticket.seq
+                )))
+            }
+            None => {
+                return Err(Error::config(format!(
+                    "ticket #{} was never issued by this session",
+                    ticket.seq
+                )))
+            }
+        };
+        let (m, n) = {
+            let p = &self.pending[pos];
+            (p.size.m, p.size.n)
+        };
+        if c.len() != m * n {
+            return Err(Error::shape(format!(
+                "session wait {}x{}: got C={}",
+                m,
+                n,
+                c.len()
+            )));
+        }
+        self.drain();
+        let pos = self
+            .pending
+            .iter()
+            .position(|p| p.seq == ticket.seq)
+            .expect("drained op still pending");
+        let p = self.pending.remove(pos).expect("index valid");
+        let exec = match p.state {
+            OpState::Executed(e) => e,
+            OpState::Failed(msg) => {
+                // The op is dead; recycle its slot so the ring stays whole.
+                if let Some(prep) = self.registry.get_mut(&p.size) {
+                    prep.free.push_back(p.slot);
+                }
+                return Err(Error::runtime(format!(
+                    "ticket #{} failed during device execution: {msg}",
+                    ticket.seq
+                )));
+            }
+            OpState::Staged => unreachable!("drain() executes every staged op"),
+        };
+        let size = p.size;
+        let mut prep = self
+            .registry
+            .remove(&size)
+            .expect("pending implies registered");
+
+        // -- Stage 6: output copy — merge the strips, dropping N padding. --
+        let t6 = Instant::now();
+        for i in 0..prep.strips.len() {
+            let (n0, n1, n_p) = {
+                let st = &prep.strips[i];
+                (st.n0, st.n1, st.n_p)
+            };
+            let w = n1 - n0;
+            match prep.slots[p.slot].strips[i].c_bo.map() {
+                Ok(c_host) => {
+                    for r in 0..m {
+                        c[r * n + n0..r * n + n1]
+                            .copy_from_slice(&c_host[r * n_p..r * n_p + w]);
+                    }
+                }
+                Err(e) => {
+                    // The result is unretrievable; free the slot before
+                    // abandoning the op so the ring stays whole.
+                    prep.free.push_back(p.slot);
+                    self.registry.insert(size, prep);
+                    return Err(e);
+                }
+            }
+        }
+        self.stages.add(STAGE_OUTPUT_COPY, t6.elapsed());
+        let host_post = self.host_model.copy_s(m * n * 4);
+        self.pipeline.wait(exec.device_done_s, host_post);
+
+        let wall = p.submitted.elapsed().as_secs_f64();
+        let stats = InvocationStats {
+            size,
+            modeled_kernel_s: exec.kernel_s,
+            modeled_sync_in_s: p.modeled_sync_in_s,
+            modeled_sync_out_s: exec.sync_out_s,
+            modeled_reconfig_s: exec.reconfig_s,
+            modeled_energy_j: exec.energy_j,
+            wall_s: wall,
+        };
+        prep.invocations += 1;
+        prep.wall_s += wall;
+        prep.modeled_s += stats.modeled_total_s();
+        prep.free.push_back(p.slot);
+        self.invocations += 1;
+        self.registry.insert(size, prep);
+        Ok(stats)
+    }
+
+    /// Offloaded GEMM: `c = a · b` with `a` given in `a_layout` relative
+    /// to M x K and `b` in `b_layout` relative to K x N. Writes the M x N
+    /// row-major result into `c`.
+    ///
+    /// This is the complete paper section V-B invocation path — a submit
+    /// immediately followed by its wait; on a depth-1 session it is
+    /// bit-for-bit the strictly serial Figure-7 schedule. Backward
+    /// weight-gradient GEMMs pass `a_layout = Transposed` (dout^T), which
+    /// is the "inconsistent data layouts across invocations" the paper
+    /// fixes with CPU-side transposes during the copy.
+    pub fn gemm_ex(
+        &mut self,
+        size: ProblemSize,
+        a: &[f32],
+        a_layout: InputLayout,
+        b: &[f32],
+        b_layout: InputLayout,
+        c: &mut [f32],
+    ) -> Result<InvocationStats> {
+        if c.len() != size.m * size.n {
+            return Err(Error::shape(format!(
+                "session gemm {size}: got A={} B={} C={}",
+                a.len(),
+                b.len(),
+                c.len()
+            )));
+        }
+        let op = GemmOp::new(size)
+            .with_a_layout(a_layout)
+            .with_b_layout(b_layout);
+        let ticket = self.submit(&op, a, b)?;
+        self.wait(ticket, c)
+    }
+
+    /// Common case: `a` row-major, `b` in `b_layout`.
+    pub fn gemm(
+        &mut self,
+        size: ProblemSize,
+        a: &[f32],
+        b: &[f32],
+        b_layout: InputLayout,
+        c: &mut [f32],
+    ) -> Result<InvocationStats> {
+        self.gemm_ex(size, a, InputLayout::RowMajor, b, b_layout, c)
+    }
+
+    /// Per-size aggregates (Figure 6's NPU bars).
+    pub fn size_records(&self) -> Vec<SizeRecord> {
+        self.registry
+            .values()
+            .map(|p| SizeRecord {
+                size: p.logical,
+                invocations: p.invocations,
+                wall_s: p.wall_s,
+                modeled_s: p.modeled_s,
+            })
+            .collect()
+    }
+
+    /// Modeled seconds accumulated for one stage.
+    pub fn modeled_stage_s(&self, stage: &str) -> f64 {
+        self.modeled_stages
+            .iter()
+            .find(|(n, _)| n == stage)
+            .map(|(_, s)| *s)
+            .unwrap_or(0.0)
+    }
+
+    /// Reset all accumulated statistics (between benchmark phases). Call
+    /// only with no submissions in flight.
+    pub fn reset_stats(&mut self) {
+        debug_assert!(self.pending.is_empty(), "reset_stats with work in flight");
+        self.stages.reset();
+        for (_, s) in self.modeled_stages.iter_mut() {
+            *s = 0.0;
+        }
+        self.invocations = 0;
+        self.modeled_energy_j = 0.0;
+        self.pipeline.reset();
+        for p in self.registry.values_mut() {
+            p.invocations = 0;
+            p.wall_s = 0.0;
+            p.modeled_s = 0.0;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::cpu;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    fn session(depth: usize, shards: usize, schedule: SchedulePolicy) -> OffloadSession {
+        OffloadSession::new(
+            SessionConfig {
+                depth: QueueDepth(depth),
+                shards: Shards(shards),
+                schedule,
+                ..Default::default()
+            },
+            &[],
+        )
+        .unwrap()
+    }
+
+    fn gemm_through(
+        sess: &mut OffloadSession,
+        size: ProblemSize,
+        a: &[f32],
+        b: &[f32],
+        b_layout: InputLayout,
+    ) -> Vec<f32> {
+        let mut c = vec![0.0f32; size.m * size.n];
+        sess.gemm(size, a, b, b_layout, &mut c).unwrap();
+        c
+    }
+
+    #[test]
+    fn depth1_session_matches_bf16_ref() {
+        let size = ProblemSize::new(128, 64, 128);
+        let mut rng = Rng::new(41);
+        let a = prop::gen::normal_vec(&mut rng, 128 * 64);
+        let b = prop::gen::normal_vec(&mut rng, 64 * 128);
+        let mut sess = session(1, 1, SchedulePolicy::Fifo);
+        let c = gemm_through(&mut sess, size, &a, &b, InputLayout::RowMajor);
+        let mut c_ref = vec![0.0; 128 * 128];
+        cpu::gemm_bf16_ref(&a, &b, &mut c_ref, 128, 64, 128);
+        for (x, y) in c.iter().zip(&c_ref) {
+            assert!((x - y).abs() <= 1e-4 * y.abs().max(1.0));
+        }
+    }
+
+    #[test]
+    fn sharded_outputs_bit_identical_to_unsharded() {
+        // Splitting N into column strips must never change numerics: each
+        // output element's k-order dot product is unchanged.
+        for &size in &[
+            ProblemSize::new(64, 64, 512),  // four 128-col strips
+            ProblemSize::new(128, 128, 256), // two strips
+            ProblemSize::new(64, 64, 384),  // three strips (fewer than shards)
+            ProblemSize::new(64, 64, 100),  // one partial quantum: degenerates to unsharded
+        ] {
+            let mut rng = Rng::new(97);
+            let a = prop::gen::normal_vec(&mut rng, size.m * size.k);
+            let b_t = prop::gen::normal_vec(&mut rng, size.n * size.k); // N x K
+            let mut c1 = vec![0.0f32; size.m * size.n];
+            let mut c4 = vec![0.0f32; size.m * size.n];
+            session(1, 1, SchedulePolicy::Fifo)
+                .gemm(size, &a, &b_t, InputLayout::Transposed, &mut c1)
+                .unwrap();
+            session(1, 4, SchedulePolicy::Fifo)
+                .gemm(size, &a, &b_t, InputLayout::Transposed, &mut c4)
+                .unwrap();
+            assert_eq!(c1, c4, "{size}: shards must be bit-identical");
+        }
+    }
+
+    #[test]
+    fn sharded_makespan_not_worse_and_columns_used() {
+        let size = ProblemSize::new(128, 128, 512);
+        let a = vec![1.0f32; 128 * 128];
+        let b = vec![0.5f32; 128 * 512];
+        let mut s1 = session(1, 1, SchedulePolicy::Fifo);
+        let mut s4 = session(1, 4, SchedulePolicy::Fifo);
+        for _ in 0..3 {
+            gemm_through(&mut s1, size, &a, &b, InputLayout::RowMajor);
+            gemm_through(&mut s4, size, &a, &b, InputLayout::RowMajor);
+        }
+        assert_eq!(s4.pipeline.columns(), 4);
+        // Unsharded serial schedule has zero overlap; sharding hides strip
+        // time under other strips, so its makespan is strictly smaller
+        // than its own serial sum.
+        assert!(s1.pipeline.hidden_s() == 0.0);
+        assert!(s4.pipeline.makespan_s() < s4.pipeline.serial_s());
+        assert!(s4.pipeline.makespan_s() <= s4.pipeline.serial_s() + 1e-12);
+    }
+
+    #[test]
+    fn ring_depth_enforced() {
+        let size = ProblemSize::new(64, 64, 128);
+        let a = vec![1.0f32; 64 * 64];
+        let b = vec![1.0f32; 64 * 128];
+        let mut c = vec![0.0f32; 64 * 128];
+        let mut sess = session(3, 1, SchedulePolicy::Fifo);
+        let op = GemmOp::new(size);
+        let t1 = sess.submit(&op, &a, &b).unwrap();
+        let t2 = sess.submit(&op, &a, &b).unwrap();
+        let t3 = sess.submit(&op, &a, &b).unwrap();
+        assert_eq!(sess.in_flight(), 3);
+        let err = sess.submit(&op, &a, &b).unwrap_err().to_string();
+        assert!(err.contains("QueueDepth(3)"), "{err}");
+        for t in [t1, t2, t3] {
+            sess.wait(t, &mut c).unwrap();
+        }
+        assert_eq!(sess.in_flight(), 0);
+        assert_eq!(sess.invocations, 3);
+    }
+
+    #[test]
+    fn ring_slots_do_not_clobber_in_flight_results() {
+        // Three concurrent same-size submissions land in three distinct
+        // slots; all results must be correct, redeemed out of order.
+        let size = ProblemSize::new(64, 64, 128);
+        let mut sess = session(3, 1, SchedulePolicy::Fifo);
+        let a1 = vec![1.0f32; 64 * 64];
+        let a2 = vec![2.0f32; 64 * 64];
+        let a3 = vec![3.0f32; 64 * 64];
+        let b = vec![1.0f32; 64 * 128];
+        let op = GemmOp::new(size);
+        let t1 = sess.submit(&op, &a1, &b).unwrap();
+        let t2 = sess.submit(&op, &a2, &b).unwrap();
+        let t3 = sess.submit(&op, &a3, &b).unwrap();
+        let mut c = vec![0.0f32; 64 * 128];
+        sess.wait(t3, &mut c).unwrap();
+        assert!(c.iter().all(|&x| (x - 192.0).abs() < 1e-2), "c[0]={}", c[0]);
+        sess.wait(t1, &mut c).unwrap();
+        assert!(c.iter().all(|&x| (x - 64.0).abs() < 1e-2), "c[0]={}", c[0]);
+        sess.wait(t2, &mut c).unwrap();
+        assert!(c.iter().all(|&x| (x - 128.0).abs() < 1e-2), "c[0]={}", c[0]);
+    }
+
+    #[test]
+    fn out_of_order_wait_then_resubmit_does_not_clobber() {
+        // Regression for the PR-1 round-robin cursor: wait the *newest*
+        // submission, then submit again — the new op must land in the slot
+        // the wait freed, never in the slot whose result is still pending.
+        let size = ProblemSize::new(64, 64, 128);
+        let mut sess = session(2, 1, SchedulePolicy::Fifo);
+        let b = vec![1.0f32; 64 * 128];
+        let a1 = vec![1.0f32; 64 * 64];
+        let a2 = vec![2.0f32; 64 * 64];
+        let a3 = vec![3.0f32; 64 * 64];
+        let op = GemmOp::new(size);
+        let t1 = sess.submit(&op, &a1, &b).unwrap();
+        let t2 = sess.submit(&op, &a2, &b).unwrap();
+        let mut c = vec![0.0f32; 64 * 128];
+        sess.wait(t2, &mut c).unwrap();
+        assert!(c.iter().all(|&x| (x - 128.0).abs() < 1e-2));
+        let t3 = sess.submit(&op, &a3, &b).unwrap();
+        sess.wait(t1, &mut c).unwrap();
+        assert!(
+            c.iter().all(|&x| (x - 64.0).abs() < 1e-2),
+            "t1's result was clobbered by t3: c[0]={}",
+            c[0]
+        );
+        sess.wait(t3, &mut c).unwrap();
+        assert!(c.iter().all(|&x| (x - 192.0).abs() < 1e-2));
+    }
+
+    #[test]
+    fn tickets_are_session_scoped_and_single_use() {
+        let size = ProblemSize::new(64, 64, 128);
+        let a = vec![1.0f32; 64 * 64];
+        let b = vec![1.0f32; 64 * 128];
+        let mut c = vec![0.0f32; 64 * 128];
+        let mut s1 = session(2, 1, SchedulePolicy::Fifo);
+        let mut s2 = session(2, 1, SchedulePolicy::Fifo);
+        let op = GemmOp::new(size);
+        let t_s1 = s1.submit(&op, &a, &b).unwrap();
+        let t_s2 = s2.submit(&op, &a, &b).unwrap();
+
+        // Redeeming s1's ticket on s2 is a helpful error, not a wrong
+        // buffer — even though both are this session's first submission.
+        let err = s2.wait(t_s1, &mut c).unwrap_err().to_string();
+        assert!(err.contains("session-scoped"), "{err}");
+
+        s1.wait(t_s1, &mut c).unwrap();
+        let err = s1.wait(t_s1, &mut c).unwrap_err().to_string();
+        assert!(err.contains("already redeemed"), "{err}");
+
+        s2.wait(t_s2, &mut c).unwrap();
+        // A ticket that was never issued.
+        let bogus = Ticket { session: s2.session_id(), seq: 1000 };
+        let err = s2.wait(bogus, &mut c).unwrap_err().to_string();
+        assert!(err.contains("never issued"), "{err}");
+    }
+
+    #[test]
+    fn cross_session_deps_rejected() {
+        let size = ProblemSize::new(64, 64, 128);
+        let a = vec![1.0f32; 64 * 64];
+        let b = vec![1.0f32; 64 * 128];
+        let mut s1 = session(2, 1, SchedulePolicy::Fifo);
+        let mut s2 = session(2, 1, SchedulePolicy::Fifo);
+        let t = s1.submit(&GemmOp::new(size), &a, &b).unwrap();
+        let err = s2
+            .submit(&GemmOp::new(size).after(t), &a, &b)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("session-scoped"), "{err}");
+        let mut c = vec![0.0f32; 64 * 128];
+        s1.wait(t, &mut c).unwrap();
+    }
+
+    #[test]
+    fn batching_reduces_modeled_reconfig_time() {
+        // Alternating sizes, window of 4: FIFO pays a reconfiguration per
+        // op, size-batching pays one per batch — strictly less modeled
+        // reconfiguration time under ReconfigPolicy::Minimal.
+        let s_a = ProblemSize::new(64, 64, 128);
+        let s_b = ProblemSize::new(128, 64, 128);
+        let a_a = vec![1.0f32; 64 * 64];
+        let a_b = vec![1.0f32; 128 * 64];
+        let b = vec![1.0f32; 64 * 128];
+
+        let run = |schedule: SchedulePolicy| -> (f64, u64) {
+            let mut sess = session(4, 1, schedule);
+            let mut tickets = Vec::new();
+            tickets.push(sess.submit(&GemmOp::new(s_a), &a_a, &b).unwrap());
+            tickets.push(sess.submit(&GemmOp::new(s_b), &a_b, &b).unwrap());
+            tickets.push(sess.submit(&GemmOp::new(s_a), &a_a, &b).unwrap());
+            tickets.push(sess.submit(&GemmOp::new(s_b), &a_b, &b).unwrap());
+            let mut c_a = vec![0.0f32; 64 * 128];
+            let mut c_b = vec![0.0f32; 128 * 128];
+            for (i, t) in tickets.into_iter().enumerate() {
+                if i % 2 == 0 {
+                    sess.wait(t, &mut c_a).unwrap();
+                } else {
+                    sess.wait(t, &mut c_b).unwrap();
+                }
+            }
+            (
+                sess.modeled_stage_s(STAGE_RECONFIG),
+                sess.dev.npu.stats.full_reconfigs,
+            )
+        };
+        let (fifo_reconfig, _) = run(SchedulePolicy::Fifo);
+        let (batched_reconfig, _) = run(SchedulePolicy::BatchBySize);
+        assert!(
+            batched_reconfig < fifo_reconfig,
+            "batched {batched_reconfig} must be < fifo {fifo_reconfig}"
+        );
+    }
+
+    #[test]
+    fn scheduling_never_changes_numerics() {
+        let s_a = ProblemSize::new(64, 64, 128);
+        let s_b = ProblemSize::new(128, 64, 128);
+        let mut rng = Rng::new(59);
+        let a_a = prop::gen::normal_vec(&mut rng, 64 * 64);
+        let a_b = prop::gen::normal_vec(&mut rng, 128 * 64);
+        let b = prop::gen::normal_vec(&mut rng, 64 * 128);
+
+        let run = |schedule: SchedulePolicy| -> Vec<Vec<f32>> {
+            let mut sess = session(4, 1, schedule);
+            let t0 = sess.submit(&GemmOp::new(s_a), &a_a, &b).unwrap();
+            let t1 = sess.submit(&GemmOp::new(s_b), &a_b, &b).unwrap();
+            let t2 = sess.submit(&GemmOp::new(s_a), &a_a, &b).unwrap();
+            let t3 = sess.submit(&GemmOp::new(s_b), &a_b, &b).unwrap();
+            let mut outs = vec![
+                vec![0.0f32; 64 * 128],
+                vec![0.0f32; 128 * 128],
+                vec![0.0f32; 64 * 128],
+                vec![0.0f32; 128 * 128],
+            ];
+            sess.wait(t0, &mut outs[0]).unwrap();
+            sess.wait(t1, &mut outs[1]).unwrap();
+            sess.wait(t2, &mut outs[2]).unwrap();
+            sess.wait(t3, &mut outs[3]).unwrap();
+            outs
+        };
+        assert_eq!(
+            run(SchedulePolicy::Fifo),
+            run(SchedulePolicy::BatchBySize),
+            "reordering must never change numerics"
+        );
+    }
+
+    #[test]
+    fn depth1_serial_makespan_equals_serial_sum() {
+        let size = ProblemSize::new(64, 64, 128);
+        let a = vec![1.0f32; 64 * 64];
+        let b = vec![1.0f32; 64 * 128];
+        let mut sess = session(1, 1, SchedulePolicy::Fifo);
+        for _ in 0..3 {
+            gemm_through(&mut sess, size, &a, &b, InputLayout::RowMajor);
+        }
+        assert!(sess.pipeline.serial_s() > 0.0);
+        assert!((sess.pipeline.makespan_s() - sess.pipeline.serial_s()).abs() < 1e-12);
+        assert_eq!(sess.pipeline.hidden_s(), 0.0);
+    }
+
+    #[test]
+    fn deeper_rings_hide_at_least_as_much_staging() {
+        // Stream two sizes, keeping the ring full at each depth: modeled
+        // makespan(depth 4) <= makespan(depth 2) <= serial sum.
+        let sizes = [ProblemSize::new(128, 128, 128), ProblemSize::new(128, 128, 256)];
+        let inputs: Vec<(Vec<f32>, Vec<f32>)> = sizes
+            .iter()
+            .map(|s| (vec![1.0f32; s.m * s.k], vec![0.5f32; s.k * s.n]))
+            .collect();
+        let stream = |depth: usize| -> (f64, f64) {
+            let mut sess = session(depth, 1, SchedulePolicy::Fifo);
+            let mut pending: Vec<(usize, Ticket)> = Vec::new();
+            let mut outs: Vec<Vec<f32>> =
+                sizes.iter().map(|s| vec![0.0f32; s.m * s.n]).collect();
+            for round in 0..6 {
+                let i = round % sizes.len();
+                if pending.len() == depth {
+                    let (j, t) = pending.remove(0);
+                    sess.wait(t, &mut outs[j]).unwrap();
+                }
+                let t = sess
+                    .submit(&GemmOp::new(sizes[i]), &inputs[i].0, &inputs[i].1)
+                    .unwrap();
+                pending.push((i, t));
+            }
+            for (j, t) in pending {
+                sess.wait(t, &mut outs[j]).unwrap();
+            }
+            (sess.pipeline.makespan_s(), sess.pipeline.serial_s())
+        };
+        let (m1, s1) = stream(1);
+        let (m2, s2) = stream(2);
+        let (m4, s4) = stream(4);
+        // Same work: identical serial sums.
+        assert!((s1 - s2).abs() < 1e-9 && (s2 - s4).abs() < 1e-9);
+        assert!(m4 <= m2 + 1e-12, "depth 4 {m4} vs depth 2 {m2}");
+        assert!(m2 <= m1 + 1e-12, "depth 2 {m2} vs depth 1 {m1}");
+        assert!((m1 - s1).abs() < 1e-12, "depth 1 is the serial schedule");
+        assert!(m2 < s2, "depth 2 must hide some staging");
+    }
+
+    #[test]
+    fn dependency_order_respected_under_batching() {
+        // t1 (size B) -> t2 (size A) dependency with an earlier size-A op
+        // in the window: the batcher may not pull t2 ahead of t1.
+        let s_a = ProblemSize::new(64, 64, 128);
+        let s_b = ProblemSize::new(128, 64, 128);
+        let a_a = vec![1.0f32; 64 * 64];
+        let a_b = vec![1.0f32; 128 * 64];
+        let b = vec![1.0f32; 64 * 128];
+        let mut sess = session(3, 1, SchedulePolicy::BatchBySize);
+        let t0 = sess.submit(&GemmOp::new(s_a), &a_a, &b).unwrap();
+        let t1 = sess.submit(&GemmOp::new(s_b), &a_b, &b).unwrap();
+        let t2 = sess
+            .submit(&GemmOp::new(s_a).after(t1), &a_a, &b)
+            .unwrap();
+        let mut c_a = vec![0.0f32; 64 * 128];
+        let mut c_b = vec![0.0f32; 128 * 128];
+        sess.wait(t0, &mut c_a).unwrap();
+        sess.wait(t1, &mut c_b).unwrap();
+        sess.wait(t2, &mut c_a).unwrap();
+        // With the dependency the batcher cannot merge the two size-A ops,
+        // so the window pays three reconfigurations (A, B, A).
+        assert_eq!(sess.invocations, 3);
+        assert!(c_a.iter().all(|&x| (x - 64.0).abs() < 1e-2));
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        let size = ProblemSize::new(64, 64, 128);
+        let mut sess = session(1, 1, SchedulePolicy::Fifo);
+        let a = vec![0.0f32; 10];
+        let b = vec![0.0f32; 64 * 128];
+        let mut c = vec![0.0f32; 64 * 128];
+        assert!(sess.gemm(size, &a, &b, InputLayout::RowMajor, &mut c).is_err());
+    }
+
+    #[test]
+    fn cpu_ref_device_runs_the_whole_session_stack() {
+        use super::super::device::CpuRefDevice;
+        let size = ProblemSize::new(64, 64, 256); // two 128-col strips
+        let mut rng = Rng::new(23);
+        let a = prop::gen::normal_vec(&mut rng, 64 * 64);
+        let b = prop::gen::normal_vec(&mut rng, 64 * 256);
+        let mut sess = OffloadSession::new(
+            SessionConfig {
+                device: Box::new(CpuRefDevice::default()),
+                shards: Shards(2),
+                ..Default::default()
+            },
+            &[size],
+        )
+        .unwrap();
+        assert_eq!(sess.device_name(), "cpu-ref");
+        let mut c = vec![0.0f32; 64 * 256];
+        let stats = sess.gemm(size, &a, &b, InputLayout::RowMajor, &mut c).unwrap();
+        let mut c_ref = vec![0.0f32; 64 * 256];
+        cpu::gemm_bf16_ref(&a, &b, &mut c_ref, 64, 64, 256);
+        assert_eq!(c, c_ref, "sharded CpuRefDevice must be the bf16 oracle");
+        assert!(stats.modeled_total_s() > 0.0);
+    }
+}

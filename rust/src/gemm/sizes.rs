@@ -99,6 +99,7 @@ impl ModelDims {
 }
 
 /// Enumerate every GEMM site of one training step, in issue order.
+#[rustfmt::skip] // table layout: one site per line
 pub fn gemm_sites(d: &ModelDims) -> Vec<GemmSite> {
     let bt = d.bt();
     let c = d.channels;
@@ -165,7 +166,11 @@ mod tests {
         let d = ModelDims::gpt2_124m();
         let sites = gemm_sites(&d);
         // attproj fwd (256x768x768) equals its own dinp size.
-        let fwd: Vec<_> = sites.iter().filter(|s| s.pass == Pass::Forward).map(|s| s.size).collect();
+        let fwd: Vec<_> = sites
+            .iter()
+            .filter(|s| s.pass == Pass::Forward)
+            .map(|s| s.size)
+            .collect();
         let bwd: Vec<_> = sites
             .iter()
             .filter(|s| s.pass != Pass::Forward)

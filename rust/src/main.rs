@@ -10,8 +10,11 @@
 //!   inspect   — print model FLOP tables, GEMM sizes, NPU design info
 
 use xdna_repro::bench as paperbench;
-use xdna_repro::coordinator::engine::{EngineConfig, ExecMode, GemmOffloadEngine, InputLayout};
-use xdna_repro::coordinator::ReconfigPolicy;
+use xdna_repro::coordinator::engine::ExecMode;
+use xdna_repro::coordinator::session::{
+    InputLayout, OffloadSession, QueueDepth, SessionConfig, Shards,
+};
+use xdna_repro::coordinator::{ReconfigPolicy, SchedulePolicy};
 use xdna_repro::gemm::sizes::{distinct_sizes, ModelDims, ProblemSize};
 use xdna_repro::model::data::{load_checkpoint, save_checkpoint, synthetic_corpus, DataLoader};
 use xdna_repro::model::trainer::{train, TrainBackend, TrainConfig};
@@ -28,13 +31,20 @@ USAGE:
   xdna-repro train    [--config d2|d4|d6|d12] [--epochs N] [--steps N]
                       [--batch B] [--seq T] [--backend cpu|npu]
                       [--power mains|battery] [--policy minimal|full]
-                      [--mode serial|pipelined]
+                      [--mode serial|pipelined] [--queue-depth K]
+                      [--shards S] [--schedule fifo|batch]
                       [--save ckpt.bin] [--seed S]
-  xdna-repro gemm     [--m M --k K --n N] [--backend cpu|npu]
+  xdna-repro gemm     [--m M --k K --n N] [--backend cpu|npu] [--shards S]
   xdna-repro generate [--config d2|d4|d6] [--load ckpt.bin] [--tokens N]
                       [--temperature F]
   xdna-repro bench    [fig6|fig7|fig8|fig9|pipeline|reconfig|accuracy|all]
+                      [--json report.json]
   xdna-repro inspect  [flops|sizes|npu]
+
+  --mode sets the legacy schedule (serial = queue depth 1, pipelined = 2);
+  --queue-depth overrides it with a k-deep submission ring, --shards splits
+  each GEMM's N across simulated shim columns, and --schedule batch lets
+  the scheduler reorder the ring window to amortize reconfigurations.
 ";
 
 fn main() {
@@ -84,6 +94,11 @@ fn cmd_train(args: &Args) -> Result<()> {
         "pipelined" => ExecMode::Pipelined,
         m => return Err(Error::config(format!("unknown exec mode '{m}'"))),
     };
+    // QueueDepth/Shards clamp 0 to 1 themselves; SchedulePolicy's FromStr
+    // is the one parser both the CLI and the finetune example use.
+    let depth = QueueDepth(args.get_parse("queue-depth", mode.queue_depth().get())?);
+    let shards = Shards(args.get_parse("shards", 1usize)?);
+    let schedule = args.get_parse("schedule", SchedulePolicy::Fifo)?;
 
     let tc = TrainConfig {
         batch,
@@ -106,26 +121,33 @@ fn cmd_train(args: &Args) -> Result<()> {
     let stats = match args.get_or("backend", "npu") {
         "cpu" => train(&mut model, &mut loader, &mut TrainBackend::Cpu, &tc)?,
         "npu" => {
-            let mut eng = GemmOffloadEngine::new(
-                EngineConfig {
+            let mut sess = OffloadSession::new(
+                SessionConfig {
                     policy,
-                    mode,
+                    depth,
+                    shards,
+                    schedule,
                     ..Default::default()
                 },
                 &[],
             )?;
-            let out = train(&mut model, &mut loader, &mut TrainBackend::CpuNpu(&mut eng), &tc)?;
+            let out = train(&mut model, &mut loader, &mut TrainBackend::CpuNpu(&mut sess), &tc)?;
             println!(
-                "engine: {} offloaded GEMMs across {} registered sizes, modeled NPU energy {:.2} J",
-                eng.invocations,
-                eng.registered_sizes().len(),
-                eng.modeled_energy_j
+                "session: {} offloaded GEMMs across {} registered sizes, \
+                 modeled NPU energy {:.2} J",
+                sess.invocations,
+                sess.registered_sizes().len(),
+                sess.modeled_energy_j
             );
             println!(
-                "offload schedule ({mode:?}): serial {:.1} ms, overlapped {:.1} ms, host time hidden {:.1} ms",
-                eng.pipeline.serial_s() * 1e3,
-                eng.pipeline.makespan_s() * 1e3,
-                eng.pipeline.hidden_s() * 1e3
+                "offload schedule (depth {}, {} shard(s), {:?}): serial {:.1} ms, \
+                 overlapped {:.1} ms, time hidden {:.1} ms",
+                sess.queue_depth(),
+                sess.shard_count(),
+                sess.schedule_policy(),
+                sess.pipeline.serial_s() * 1e3,
+                sess.pipeline.makespan_s() * 1e3,
+                sess.pipeline.hidden_s() * 1e3
             );
             out
         }
@@ -170,9 +192,16 @@ fn cmd_gemm(args: &Args) -> Result<()> {
             println!("cpu gemm {size}: {:.3} ms wall", d.as_secs_f64() * 1e3);
         }
         _ => {
-            let mut eng = GemmOffloadEngine::new(EngineConfig::default(), &[size])?;
-            let stats = eng.gemm(size, &a, &b, InputLayout::RowMajor, &mut c)?;
-            println!("npu gemm {size}:");
+            let shards = args.get_parse("shards", 1usize)?.max(1);
+            let mut sess = OffloadSession::new(
+                SessionConfig {
+                    shards: Shards(shards),
+                    ..Default::default()
+                },
+                &[size],
+            )?;
+            let stats = sess.gemm(size, &a, &b, InputLayout::RowMajor, &mut c)?;
+            println!("npu gemm {size} ({shards} shard(s)):");
             println!("  wall           {:.3} ms", stats.wall_s * 1e3);
             println!("  modeled kernel {:.3} ms", stats.modeled_kernel_s * 1e3);
             println!(
@@ -214,6 +243,20 @@ fn cmd_generate(args: &Args) -> Result<()> {
 fn cmd_bench(args: &Args) -> Result<()> {
     let which = args.positional.get(1).map(|s| s.as_str()).unwrap_or("all");
     let mains = PowerProfile::mains();
+    if let Some(path) = args.get("json") {
+        // Machine-readable pipeline report (the CI smoke artifact). Only
+        // the pipeline bench has a JSON form today.
+        if which != "pipeline" && which != "all" {
+            return Err(Error::config(format!(
+                "--json is only available for `bench pipeline` (or `all`), not `bench {which}`"
+            )));
+        }
+        let report =
+            paperbench::pipeline::json_report(&[PowerProfile::mains(), PowerProfile::battery()]);
+        std::fs::write(path, format!("{report}\n"))
+            .map_err(|e| Error::config(format!("cannot write {path}: {e}")))?;
+        println!("pipeline report written to {path}");
+    }
     match which {
         "fig6" => paperbench::fig6::print(&mains),
         "fig7" => paperbench::fig7::print(&mains),

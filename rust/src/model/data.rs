@@ -121,7 +121,11 @@ pub fn load_tokens(path: impl AsRef<Path>) -> Result<Vec<i32>> {
 
 /// Checkpoint format: magic, config dims, then the flat f32 parameter
 /// arena (llm.c's gpt2_write layout in spirit).
-pub fn save_checkpoint(path: impl AsRef<Path>, cfg: &ModelConfig, params: &ParamTensors) -> Result<()> {
+pub fn save_checkpoint(
+    path: impl AsRef<Path>,
+    cfg: &ModelConfig,
+    params: &ParamTensors,
+) -> Result<()> {
     let mut f = std::fs::File::create(path)?;
     f.write_all(&0x47505432u32.to_le_bytes())?; // "GPT2"
     for dim in [

@@ -53,7 +53,8 @@ impl AdamW {
             v[i] = self.beta2 * v[i] + (1.0 - self.beta2) * g * g;
             let mhat = m[i] / b1c;
             let vhat = v[i] / b2c;
-            params[i] -= self.lr * (mhat / (vhat.sqrt() + self.eps) + self.weight_decay * params[i]);
+            params[i] -=
+                self.lr * (mhat / (vhat.sqrt() + self.eps) + self.weight_decay * params[i]);
         }
         gnorm
     }

@@ -37,7 +37,8 @@ pub fn forward(
             let (bi, h) = (bh / nh, bh % nh);
             for ti in 0..t {
                 let q = &qkv[(bi * t + ti) * c3 + h * hs..(bi * t + ti) * c3 + h * hs + hs];
-                let pre_row = &mut preatt[((bi * nh + h) * t + ti) * t..((bi * nh + h) * t + ti + 1) * t];
+                let pre_base = ((bi * nh + h) * t + ti) * t;
+                let pre_row = &mut preatt[pre_base..pre_base + t];
                 // Scores against all keys <= ti.
                 let mut maxval = f32::MIN;
                 for t2 in 0..=ti {

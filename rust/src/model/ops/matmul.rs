@@ -6,7 +6,7 @@
 //! decides whether the GEMM runs on the llm.c-style CPU loop nest or is
 //! offloaded through the engine (the paper's modification).
 
-use crate::coordinator::engine::{ExecMode, GemmOffloadEngine, InputLayout};
+use crate::coordinator::session::{GemmOp, InputLayout, OffloadSession};
 use crate::gemm::cpu;
 use crate::gemm::sizes::ProblemSize;
 use crate::util::error::Result;
@@ -15,8 +15,10 @@ use crate::util::error::Result;
 pub enum MatmulDispatch<'a> {
     /// Unmodified llm.c: multi-threaded f32 loop nest on the CPU.
     Cpu,
-    /// The paper's version: offloaded to the NPU through the engine.
-    Npu(&'a mut GemmOffloadEngine),
+    /// The paper's version: offloaded to the NPU through an
+    /// [`OffloadSession`] (a legacy `GemmOffloadEngine` derefs to one, so
+    /// both construct this variant).
+    Npu(&'a mut OffloadSession),
 }
 
 impl MatmulDispatch<'_> {
@@ -43,12 +45,12 @@ pub fn forward(
             // multiplying against the transposed weight view.
             cpu_matmul_bt(out, inp, weight, bt, ic, oc);
         }
-        MatmulDispatch::Npu(engine) => {
-            // Engine wants B as (IC, OC) row-major; W is (OC, IC) row-major
-            // = exactly the "column-major weights" the paper transposes on
-            // copy (InputLayout::Transposed).
+        MatmulDispatch::Npu(session) => {
+            // The session wants B as (IC, OC) row-major; W is (OC, IC)
+            // row-major = exactly the "column-major weights" the paper
+            // transposes on copy (InputLayout::Transposed).
             let size = ProblemSize::new(bt, ic, oc);
-            engine.gemm(size, inp, weight, InputLayout::Transposed, out)?;
+            session.gemm(size, inp, weight, InputLayout::Transposed, out)?;
         }
     }
     if let Some(bias) = bias {
@@ -93,35 +95,29 @@ pub fn backward(
                 *d += t;
             }
         }
-        MatmulDispatch::Npu(engine) => {
+        MatmulDispatch::Npu(session) => {
             // Both backward GEMMs are offloaded — they are Figure 6's
             // backward problem sizes. They read the same inputs and write
-            // disjoint outputs, so the pipelined engine overlaps the
-            // second invocation's host staging with the first's kernel.
+            // disjoint outputs, so a ring deep enough for two submissions
+            // overlaps the second invocation's host staging with the
+            // first's kernel (and lets the scheduler batch them).
             let mut tmp = vec![0.0f32; bt * ic];
             let mut dw = vec![0.0f32; oc * ic];
             let dinp_size = ProblemSize::new(bt, oc, ic);
             let dw_size = ProblemSize::new(oc, bt, ic);
-            if engine.exec_mode() == ExecMode::Pipelined {
-                let t_dinp = engine.submit(
-                    dinp_size,
+            if session.queue_depth() >= 2 {
+                let t_dinp = session.submit(&GemmOp::new(dinp_size), dout, weight)?;
+                let t_dw = session.submit(
+                    &GemmOp::new(dw_size)
+                        .with_a_layout(InputLayout::Transposed), // dout is (BT,OC): Mᵀ view
                     dout,
-                    InputLayout::RowMajor,
-                    weight,
-                    InputLayout::RowMajor,
-                )?;
-                let t_dw = engine.submit(
-                    dw_size,
-                    dout,
-                    InputLayout::Transposed, // dout is (BT,OC): Mᵀ view
                     inp,
-                    InputLayout::RowMajor,
                 )?;
-                engine.wait(t_dinp, &mut tmp)?;
-                engine.wait(t_dw, &mut dw)?;
+                session.wait(t_dinp, &mut tmp)?;
+                session.wait(t_dw, &mut dw)?;
             } else {
-                engine.gemm(dinp_size, dout, weight, InputLayout::RowMajor, &mut tmp)?;
-                engine.gemm_ex(
+                session.gemm(dinp_size, dout, weight, InputLayout::RowMajor, &mut tmp)?;
+                session.gemm_ex(
                     dw_size,
                     dout,
                     InputLayout::Transposed, // dout is (BT,OC): Mᵀ view
@@ -174,7 +170,7 @@ fn cpu_matmul_bt(out: &mut [f32], inp: &[f32], weight: &[f32], bt: usize, ic: us
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::engine::EngineConfig;
+    use crate::coordinator::engine::{EngineConfig, GemmOffloadEngine};
     use crate::util::prop;
     use crate::util::rng::Rng;
 
@@ -328,18 +324,18 @@ mod tests {
     }
 
     #[test]
-    fn pipelined_backward_bit_identical_to_serial_and_overlaps() {
-        use crate::coordinator::engine::ExecMode;
+    fn deeper_ring_backward_bit_identical_to_serial_and_overlaps() {
+        use crate::coordinator::session::{OffloadSession, QueueDepth, SessionConfig};
         let (bt, ic, oc) = (64, 128, 64);
         let mut rng = Rng::new(79);
         let inp = rand(&mut rng, bt * ic);
         let w = rand(&mut rng, oc * ic);
         let dout = rand(&mut rng, bt * oc);
 
-        let mut run = |mode: ExecMode| {
-            let mut eng = GemmOffloadEngine::new(
-                EngineConfig {
-                    mode,
+        let mut run = |depth: usize| {
+            let mut sess = OffloadSession::new(
+                SessionConfig {
+                    depth: QueueDepth(depth),
                     ..Default::default()
                 },
                 &[],
@@ -348,7 +344,7 @@ mod tests {
             let mut dinp = vec![0.0; bt * ic];
             let mut dw = vec![0.0; oc * ic];
             backward(
-                &mut MatmulDispatch::Npu(&mut eng),
+                &mut MatmulDispatch::Npu(&mut sess),
                 &mut dinp,
                 &mut dw,
                 None,
@@ -360,14 +356,14 @@ mod tests {
                 oc,
             )
             .unwrap();
-            let hidden = eng.pipeline.hidden_s();
+            let hidden = sess.pipeline.hidden_s();
             (dinp, dw, hidden)
         };
-        let (dinp_s, dw_s, hidden_s) = run(ExecMode::Serial);
-        let (dinp_p, dw_p, hidden_p) = run(ExecMode::Pipelined);
-        assert_eq!(dinp_s, dinp_p, "pipelining must not change numerics");
+        let (dinp_s, dw_s, hidden_s) = run(1);
+        let (dinp_p, dw_p, hidden_p) = run(2);
+        assert_eq!(dinp_s, dinp_p, "ring depth must not change numerics");
         assert_eq!(dw_s, dw_p);
-        assert_eq!(hidden_s, 0.0, "serial schedule has no overlap");
+        assert_eq!(hidden_s, 0.0, "depth-1 (serial) schedule has no overlap");
         assert!(hidden_p > 0.0, "paired backward GEMMs must overlap");
     }
 }

@@ -5,7 +5,7 @@
 //! engine's stage breakdown accumulates for Figure 7, and the power meter
 //! integrates energy for Figure 9.
 
-use crate::coordinator::engine::GemmOffloadEngine;
+use crate::coordinator::session::OffloadSession;
 use crate::power::meter::PowerMeter;
 use crate::power::profiles::PowerProfile;
 use crate::util::error::Result;
@@ -20,8 +20,9 @@ use super::ops::matmul::MatmulDispatch;
 pub enum TrainBackend<'a> {
     /// Vanilla llm.c: everything on the CPU.
     Cpu,
-    /// GEMMs offloaded through the engine.
-    CpuNpu(&'a mut GemmOffloadEngine),
+    /// GEMMs offloaded through an [`OffloadSession`] (a legacy
+    /// `GemmOffloadEngine` derefs to one and coerces here too).
+    CpuNpu(&'a mut OffloadSession),
 }
 
 /// One epoch's record.
@@ -75,8 +76,8 @@ pub fn train(
     // The pipeline timeline should measure device spans in profile time so
     // its hidden/exposed host-staging split reflects this power state
     // (battery stretches kernels, hiding more staging).
-    if let TrainBackend::CpuNpu(engine) = backend {
-        engine.set_device_time_scale(cfg.power.npu_time_scale);
+    if let TrainBackend::CpuNpu(session) = backend {
+        session.set_device_time_scale(cfg.power.npu_time_scale);
     }
     let mut out = Vec::with_capacity(cfg.epochs);
     for epoch in 0..cfg.epochs {
@@ -84,13 +85,18 @@ pub fn train(
         let t0 = std::time::Instant::now();
         let mut loss = 0.0f32;
         let mut gnorm = 0.0f32;
-        // Offload accounting from the engine's pipeline timeline: device
-        // spans (scaled by the power profile's NPU throttle) plus the host
-        // staging that was *not* hidden under device work. A serial engine
-        // hides nothing; a pipelined engine's epochs shrink by exactly the
-        // hidden host-staging seconds — never by double-counted kernels.
-        let mut npu_device_s = 0.0f64;
-        let mut npu_host_exposed_s = 0.0f64;
+        // Offload accounting from the session's pipeline timeline: the
+        // epoch is charged the growth of the overlapped schedule's
+        // makespan (device spans are already in profile time via
+        // set_device_time_scale above). On a depth-1 session this equals
+        // the serial stage sum; deeper rings shrink it by exactly the
+        // hidden host staging, and sharded dispatch by the strip time
+        // hidden under other columns — never by double-counted kernels
+        // (makespan never drops below any single column's load). Using
+        // the makespan delta rather than device-busy + exposed-host keeps
+        // the charge correct on multi-column timelines, where hidden time
+        // can exceed host staging and exposed_host_s() clamps at zero.
+        let mut npu_offload_s = 0.0f64;
         let mut npu_energy_j = 0.0f64;
         for _ in 0..cfg.steps_per_epoch {
             let (tokens, targets) = loader.next_batch();
@@ -104,20 +110,18 @@ pub fn train(
                     model.backward(&mut d)?;
                     (l, model.update(&cfg.optimizer))
                 }
-                TrainBackend::CpuNpu(engine) => {
-                    let before_device = engine.pipeline.device_busy_s;
-                    let before_exposed = engine.pipeline.exposed_host_s();
-                    let before_energy = engine.modeled_energy_j;
-                    let mut d = MatmulDispatch::Npu(engine);
+                TrainBackend::CpuNpu(session) => {
+                    let before_makespan = session.pipeline.makespan_s();
+                    let before_energy = session.modeled_energy_j;
+                    let mut d = MatmulDispatch::Npu(session);
                     let l = model
                         .forward(&mut d, &tokens, Some(&targets), cfg.batch, cfg.seq)?
                         .unwrap();
                     model.zero_grad();
                     model.backward(&mut d)?;
                     let g = model.update(&cfg.optimizer);
-                    npu_device_s += engine.pipeline.device_busy_s - before_device;
-                    npu_host_exposed_s += engine.pipeline.exposed_host_s() - before_exposed;
-                    npu_energy_j += engine.modeled_energy_j - before_energy;
+                    npu_offload_s += session.pipeline.makespan_s() - before_makespan;
+                    npu_energy_j += session.modeled_energy_j - before_energy;
                     (l, g)
                 }
             };
@@ -126,9 +130,7 @@ pub fn train(
         }
         let wall = t0.elapsed().as_secs_f64();
         // Modeled epoch time: CPU ops at the profile's effective rate +
-        // modeled NPU seconds for offloaded GEMMs. Device spans are
-        // already in profile time (set_device_time_scale above); exposed
-        // host staging does not throttle with the NPU.
+        // the offloaded GEMM schedule's makespan growth over this epoch.
         let modeled = match backend {
             TrainBackend::Cpu => {
                 cfg.steps_per_epoch as f64
@@ -137,8 +139,7 @@ pub fn train(
             TrainBackend::CpuNpu(_) => {
                 cfg.steps_per_epoch as f64
                     * cfg.power.modeled_epoch_s(&model.cfg, cfg.batch, cfg.seq, true)
-                    + npu_device_s
-                    + npu_host_exposed_s
+                    + npu_offload_s
             }
         };
         let energy = meter.integrate_epoch(modeled, matches!(backend, TrainBackend::CpuNpu(_)))
@@ -229,8 +230,8 @@ mod tests {
     }
 
     #[test]
-    fn pipelined_training_is_modeled_no_slower_and_numerically_identical() {
-        use crate::coordinator::engine::{EngineConfig, ExecMode, GemmOffloadEngine};
+    fn deeper_ring_training_is_modeled_no_slower_and_numerically_identical() {
+        use crate::coordinator::session::{OffloadSession, QueueDepth, SessionConfig};
         let cfg = ModelConfig::d2();
         let tc = TrainConfig {
             batch: 2,
@@ -239,33 +240,73 @@ mod tests {
             steps_per_epoch: 2,
             ..Default::default()
         };
-        let mut eng_serial = GemmOffloadEngine::new(EngineConfig::default(), &[]).unwrap();
+        let mut sess_serial = OffloadSession::new(SessionConfig::default(), &[]).unwrap();
         let serial =
-            train_synthetic(cfg, &tc, &mut TrainBackend::CpuNpu(&mut eng_serial), 5).unwrap();
-        let mut eng_pipe = GemmOffloadEngine::new(
-            EngineConfig {
-                mode: ExecMode::Pipelined,
+            train_synthetic(cfg, &tc, &mut TrainBackend::CpuNpu(&mut sess_serial), 5).unwrap();
+        let mut sess_deep = OffloadSession::new(
+            SessionConfig {
+                depth: QueueDepth(2),
                 ..Default::default()
             },
             &[],
         )
         .unwrap();
-        let pipe =
-            train_synthetic(cfg, &tc, &mut TrainBackend::CpuNpu(&mut eng_pipe), 5).unwrap();
-        for (s, p) in serial.iter().zip(&pipe) {
+        let deep =
+            train_synthetic(cfg, &tc, &mut TrainBackend::CpuNpu(&mut sess_deep), 5).unwrap();
+        for (s, p) in serial.iter().zip(&deep) {
             // Scheduling must never change numerics.
             assert_eq!(s.loss, p.loss, "epoch {}", s.epoch);
             // Overlap can only hide host staging, never add modeled time.
             assert!(
                 p.modeled_s <= s.modeled_s + 1e-9,
-                "epoch {}: pipelined {} vs serial {}",
+                "epoch {}: depth-2 {} vs serial {}",
                 s.epoch,
                 p.modeled_s,
                 s.modeled_s
             );
         }
         // The backward pairs really did overlap.
-        assert!(eng_pipe.pipeline.hidden_s() > 0.0);
-        assert_eq!(eng_serial.pipeline.hidden_s(), 0.0);
+        assert!(sess_deep.pipeline.hidden_s() > 0.0);
+        assert_eq!(sess_serial.pipeline.hidden_s(), 0.0);
+    }
+
+    #[test]
+    fn sharded_and_scheduled_training_matches_serial_losses() {
+        use crate::coordinator::scheduler::SchedulePolicy;
+        use crate::coordinator::session::{
+            OffloadSession, QueueDepth, SessionConfig, Shards,
+        };
+        let cfg = ModelConfig::d2();
+        let tc = TrainConfig {
+            batch: 2,
+            seq: 16,
+            epochs: 2,
+            steps_per_epoch: 2,
+            ..Default::default()
+        };
+        let mut sess_serial = OffloadSession::new(SessionConfig::default(), &[]).unwrap();
+        let serial =
+            train_synthetic(cfg, &tc, &mut TrainBackend::CpuNpu(&mut sess_serial), 9).unwrap();
+        let mut sess = OffloadSession::new(
+            SessionConfig {
+                depth: QueueDepth(2),
+                shards: Shards(4),
+                schedule: SchedulePolicy::BatchBySize,
+                ..Default::default()
+            },
+            &[],
+        )
+        .unwrap();
+        let sharded =
+            train_synthetic(cfg, &tc, &mut TrainBackend::CpuNpu(&mut sess), 9).unwrap();
+        for (s, p) in serial.iter().zip(&sharded) {
+            assert_eq!(
+                s.loss, p.loss,
+                "epoch {}: sharding/scheduling must not change the loss",
+                s.epoch
+            );
+        }
+        assert_eq!(sess.pipeline.columns(), 4);
+        assert!(sess.invocations > 0);
     }
 }

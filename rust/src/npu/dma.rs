@@ -213,7 +213,12 @@ pub fn bd_tile_to_row_major(
 /// BD rearranging a contiguous m×k row-major tile into 4×8 VMAC micro-tile
 /// order (the L2→L1 transform of Figure 5): emits micro-tiles row-major,
 /// each micro-tile contiguous.
-pub fn bd_microtile_order(tile_rows: usize, tile_cols: usize, mt_rows: usize, mt_cols: usize) -> BufferDescriptor {
+pub fn bd_microtile_order(
+    tile_rows: usize,
+    tile_cols: usize,
+    mt_rows: usize,
+    mt_cols: usize,
+) -> BufferDescriptor {
     assert_eq!(tile_rows % mt_rows, 0);
     assert_eq!(tile_cols % mt_cols, 0);
     BufferDescriptor::with_dims(

@@ -180,7 +180,12 @@ impl NpuDevice {
 
     /// Execute C = A·B (row-major f32 in/out, bf16 on the datapath) for the
     /// programmed tiling. `a` is M×K, `b` is K×N; returns M×N.
-    pub fn execute_gemm(&mut self, a: &[f32], b: &[f32], t: &Tiling) -> Result<(Vec<f32>, GemmReport)> {
+    pub fn execute_gemm(
+        &mut self,
+        a: &[f32],
+        b: &[f32],
+        t: &Tiling,
+    ) -> Result<(Vec<f32>, GemmReport)> {
         let (m, k, n) = (t.size.m, t.size.k, t.size.n);
         if a.len() != m * k || b.len() != k * n {
             return Err(Error::shape(format!(

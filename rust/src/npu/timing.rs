@@ -178,27 +178,51 @@ impl HostStagingModel {
     }
 }
 
-/// Modeled two-resource (host, device) pipeline timeline.
+/// Modeled two-resource (host, device) pipeline timeline, ring-depth- and
+/// shard-aware.
 ///
-/// The engine feeds every invocation's stage durations into this schedule:
-/// `submit` appends the host-side staging (input copy + transpose + input
-/// sync) to the host cursor and then queues the device span (reconfig +
-/// kernel + output sync) on the device cursor; `wait` blocks the host on
-/// that invocation's device completion before appending the output copy.
+/// The offload session feeds every invocation's stage durations into this
+/// schedule. Submission splits into two events so a scheduler may defer
+/// and reorder device work independently of host staging:
 ///
-/// Because the device cursor serializes all device spans, overlap can only
-/// ever *hide host staging under device work* — kernel time is never
-/// double-counted and the makespan can never drop below the sum of device
-/// spans. When every submit is immediately followed by its wait (the
-/// strictly serial schedule), the makespan equals the serial sum exactly.
-#[derive(Debug, Clone, Default)]
+/// * [`PipelineTimeline::stage`] appends the host-side staging (input copy
+///   + transpose + input sync) to the host cursor and returns the time the
+///   staged inputs become device-visible;
+/// * [`PipelineTimeline::run_on`] queues a device span (kernel + output
+///   sync) on one *column* cursor, starting no earlier than the staging's
+///   ready time — columns model independent shim-column partitions, so one
+///   GEMM's column strips may run concurrently across columns while spans
+///   on the *same* column stay strictly serialized;
+/// * [`PipelineTimeline::barrier`] charges an array-wide span (a
+///   reconfiguration reprograms every column) by advancing all column
+///   cursors together;
+/// * [`PipelineTimeline::wait`] blocks the host on an invocation's device
+///   completion before appending the output copy.
+///
+/// [`PipelineTimeline::submit`] is the classic single-column convenience
+/// (stage immediately followed by run).
+///
+/// Because each column cursor serializes its spans and every event grows
+/// the makespan by at most the busy time it records, overlap can only ever
+/// *hide work under other work* — kernel time is never double-counted and
+/// the makespan never exceeds the serial sum. When every submit is
+/// immediately followed by its wait on a single column (the strictly
+/// serial schedule), the makespan equals the serial sum exactly.
+#[derive(Debug, Clone)]
 pub struct PipelineTimeline {
     host_cursor_s: f64,
-    device_cursor_s: f64,
+    /// One device cursor per simulated shim column.
+    device_cursor_s: Vec<f64>,
     /// Sum of host-side stage durations (staging + output copies).
     pub host_busy_s: f64,
     /// Sum of device-side stage durations (reconfig + kernel + syncs).
     pub device_busy_s: f64,
+}
+
+impl Default for PipelineTimeline {
+    fn default() -> Self {
+        PipelineTimeline::with_columns(1)
+    }
 }
 
 impl PipelineTimeline {
@@ -206,27 +230,74 @@ impl PipelineTimeline {
         PipelineTimeline::default()
     }
 
-    /// Record one invocation's submission: host staging (`host_pre_s`)
-    /// runs when the host is free; the device span (`device_s`) starts
-    /// once both the staging and all previously queued device work are
-    /// done. Returns the modeled completion time of this device span —
-    /// pass it to [`PipelineTimeline::wait`].
-    pub fn submit(&mut self, host_pre_s: f64, device_s: f64) -> f64 {
+    /// A timeline with `columns` independent device cursors (one per
+    /// simulated shim column a sharded GEMM dispatches strips across).
+    pub fn with_columns(columns: usize) -> PipelineTimeline {
+        PipelineTimeline {
+            host_cursor_s: 0.0,
+            device_cursor_s: vec![0.0; columns.max(1)],
+            host_busy_s: 0.0,
+            device_busy_s: 0.0,
+        }
+    }
+
+    pub fn columns(&self) -> usize {
+        self.device_cursor_s.len()
+    }
+
+    /// Record host-side staging (`host_pre_s`): it runs when the host is
+    /// free. Returns the time the staged inputs are ready for the device.
+    pub fn stage(&mut self, host_pre_s: f64) -> f64 {
         self.host_cursor_s += host_pre_s;
         self.host_busy_s += host_pre_s;
-        let start = self.host_cursor_s.max(self.device_cursor_s);
-        self.device_cursor_s = start + device_s;
+        self.host_cursor_s
+    }
+
+    /// Queue a device span on `column`: it starts once the column's
+    /// previous work and the op's staging (`ready_s`, as returned by
+    /// [`PipelineTimeline::stage`]) are both done. Returns the span's
+    /// modeled completion time — pass it to [`PipelineTimeline::wait`].
+    pub fn run_on(&mut self, column: usize, ready_s: f64, device_s: f64) -> f64 {
+        let col = column % self.device_cursor_s.len();
+        let start = self.device_cursor_s[col].max(ready_s);
+        self.device_cursor_s[col] = start + device_s;
         self.device_busy_s += device_s;
-        self.device_cursor_s
+        self.device_cursor_s[col]
+    }
+
+    /// Charge an array-wide device span (reconfiguration): all columns
+    /// stall to a common point no earlier than `ready_s`, then advance
+    /// together by `device_s`. Returns its completion time. (`ready_s`
+    /// keeps the strictly serial schedule exact: a depth-1 session's
+    /// reconfig starts after that op's staging, as in Figure 7.)
+    pub fn barrier(&mut self, ready_s: f64, device_s: f64) -> f64 {
+        let start = self.device_cursor_max().max(ready_s);
+        for c in self.device_cursor_s.iter_mut() {
+            *c = start + device_s;
+        }
+        self.device_busy_s += device_s;
+        start + device_s
+    }
+
+    /// Single-column convenience: host staging (`host_pre_s`) immediately
+    /// followed by the device span (`device_s`) on column 0 — the classic
+    /// depth-k, unsharded schedule. Returns the device completion time.
+    pub fn submit(&mut self, host_pre_s: f64, device_s: f64) -> f64 {
+        let ready = self.stage(host_pre_s);
+        self.run_on(0, ready, device_s)
     }
 
     /// Record one invocation's completion: the host blocks until the
-    /// submitted device span finished (`device_done_s`, as returned by
-    /// [`PipelineTimeline::submit`]) and then spends `host_post_s` on the
-    /// output copy.
+    /// submitted device work finished (`device_done_s`, as returned by
+    /// [`PipelineTimeline::run_on`] / [`PipelineTimeline::submit`]) and
+    /// then spends `host_post_s` on the output copy.
     pub fn wait(&mut self, device_done_s: f64, host_post_s: f64) {
         self.host_cursor_s = self.host_cursor_s.max(device_done_s) + host_post_s;
         self.host_busy_s += host_post_s;
+    }
+
+    fn device_cursor_max(&self) -> f64 {
+        self.device_cursor_s.iter().cloned().fold(0.0, f64::max)
     }
 
     /// The fully serialized cost: sum of every stage duration recorded.
@@ -236,10 +307,11 @@ impl PipelineTimeline {
 
     /// The overlapped schedule's end time. Always <= [`Self::serial_s`].
     pub fn makespan_s(&self) -> f64 {
-        self.host_cursor_s.max(self.device_cursor_s)
+        self.host_cursor_s.max(self.device_cursor_max())
     }
 
-    /// Host-stage seconds hidden under device work by the overlap.
+    /// Host-stage seconds hidden under device work by the overlap (plus,
+    /// on multi-column timelines, device spans hidden under each other).
     pub fn hidden_s(&self) -> f64 {
         (self.serial_s() - self.makespan_s()).max(0.0)
     }
@@ -251,7 +323,7 @@ impl PipelineTimeline {
     }
 
     pub fn reset(&mut self) {
-        *self = PipelineTimeline::default();
+        *self = PipelineTimeline::with_columns(self.device_cursor_s.len());
     }
 }
 
@@ -415,5 +487,111 @@ mod tests {
         let h = HostStagingModel::default();
         assert!(h.transpose_s(1 << 20) > h.copy_s(1 << 20));
         assert_eq!(h.copy_s(0), 0.0);
+    }
+
+    #[test]
+    fn staged_run_split_equals_submit() {
+        // stage() + run_on(0, ..) must be exactly the classic submit().
+        let mut a = PipelineTimeline::new();
+        let mut b = PipelineTimeline::new();
+        for _ in 0..3 {
+            let d1 = a.submit(2.0, 5.0);
+            let ready = b.stage(2.0);
+            let d2 = b.run_on(0, ready, 5.0);
+            assert!((d1 - d2).abs() < 1e-12);
+            a.wait(d1, 1.0);
+            b.wait(d2, 1.0);
+        }
+        assert!((a.makespan_s() - b.makespan_s()).abs() < 1e-12);
+        assert!((a.serial_s() - b.serial_s()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn column_strips_run_concurrently_but_never_overlap_per_column() {
+        // Four equal strips across four columns: the sharded makespan is
+        // one strip span, not four; on one column it is the full sum.
+        let mut sharded = PipelineTimeline::with_columns(4);
+        let ready = sharded.stage(1.0);
+        let mut done = 0.0f64;
+        for col in 0..4 {
+            done = done.max(sharded.run_on(col, ready, 3.0));
+        }
+        sharded.wait(done, 0.5);
+        assert!((done - (1.0 + 3.0)).abs() < 1e-12, "strips run in parallel");
+
+        let mut serial = PipelineTimeline::with_columns(1);
+        let ready = serial.stage(1.0);
+        let mut done = 0.0f64;
+        for _ in 0..4 {
+            done = serial.run_on(0, ready, 3.0);
+        }
+        serial.wait(done, 0.5);
+        assert!((done - (1.0 + 12.0)).abs() < 1e-12, "one column serializes");
+
+        // Both record the same busy time; the sharded makespan is smaller
+        // but still never below a single strip chain.
+        assert!((sharded.serial_s() - serial.serial_s()).abs() < 1e-12);
+        assert!(sharded.makespan_s() < serial.makespan_s());
+        assert!(sharded.makespan_s() <= sharded.serial_s() + 1e-12);
+    }
+
+    #[test]
+    fn barrier_advances_all_columns_together() {
+        let mut tl = PipelineTimeline::with_columns(2);
+        let ready = tl.stage(0.0);
+        tl.run_on(0, ready, 4.0); // column 0 busy until 4
+        tl.run_on(1, ready, 1.0); // column 1 busy until 1
+        let end = tl.barrier(0.0, 2.0); // reconfig stalls both to 4, ends at 6
+        assert!((end - 6.0).abs() < 1e-12);
+        // After the barrier both columns resume from the same point.
+        let d0 = tl.run_on(0, 0.0, 1.0);
+        let d1 = tl.run_on(1, 0.0, 1.0);
+        assert!((d0 - 7.0).abs() < 1e-12);
+        assert!((d1 - 7.0).abs() < 1e-12);
+        assert!((tl.device_busy_s - 9.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn multi_column_makespan_still_bounded_by_serial_sum() {
+        use crate::util::prop;
+        prop::check_default(
+            "sharded-makespan-bounded",
+            |rng| {
+                let n = prop::gen::usize_in(rng, 1, 10);
+                (0..n)
+                    .map(|_| {
+                        (
+                            rng.uniform(0.0, 2.0) as f64,
+                            rng.uniform(0.0, 2.0) as f64,
+                            rng.uniform(0.0, 0.5) as f64,
+                        )
+                    })
+                    .collect::<Vec<(f64, f64, f64)>>()
+            },
+            |ops| {
+                let mut tl = PipelineTimeline::with_columns(4);
+                for (i, &(pre, dev, post)) in ops.iter().enumerate() {
+                    let ready = tl.stage(pre);
+                    // Four strips of dev/4 across the columns, plus an
+                    // occasional barrier to mimic reconfiguration.
+                    if i % 3 == 0 {
+                        tl.barrier(ready, 0.1);
+                    }
+                    let mut done = 0.0f64;
+                    for col in 0..4 {
+                        done = done.max(tl.run_on(col, ready, dev / 4.0));
+                    }
+                    tl.wait(done, post);
+                }
+                if tl.makespan_s() > tl.serial_s() + 1e-9 {
+                    return Err(format!(
+                        "makespan {} > serial {}",
+                        tl.makespan_s(),
+                        tl.serial_s()
+                    ));
+                }
+                Ok(())
+            },
+        );
     }
 }

@@ -11,7 +11,9 @@ use xdna_repro::model::trainer::{train, TrainBackend, TrainConfig};
 use xdna_repro::model::{Gpt2Model, ModelConfig};
 
 #[cfg(feature = "pjrt")]
-use xdna_repro::coordinator::backend::{NumericsBackend, PjrtGemms};
+use xdna_repro::coordinator::backend::PjrtGemms;
+#[cfg(feature = "pjrt")]
+use xdna_repro::coordinator::device::PjrtDevice;
 #[cfg(feature = "pjrt")]
 use xdna_repro::coordinator::engine::InputLayout;
 #[cfg(feature = "pjrt")]
@@ -59,11 +61,11 @@ fn pallas_artifact_simulator_and_oracle_agree() {
     rng.fill_normal(&mut a, 0.0, 1.0);
     rng.fill_normal(&mut b, 0.0, 0.05);
 
-    // PJRT backend through the full engine path.
+    // PJRT compute device through the full engine path.
     let pjrt = PjrtGemms::open(manifest).unwrap();
     let mut eng_pjrt = GemmOffloadEngine::new(
         EngineConfig {
-            backend: NumericsBackend::Pjrt(pjrt),
+            device: Box::new(PjrtDevice::new(pjrt)),
             ..Default::default()
         },
         &[size],

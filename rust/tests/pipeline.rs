@@ -1,18 +1,24 @@
-//! Pipelined-vs-serial engine equivalence and overlap bounds.
+//! Cross-mode / cross-depth / cross-shard equivalence and overlap bounds.
 //!
-//! The contract of the pipelined offload path: scheduling may hide host
-//! staging under device work but must never change numerics (bit-identical
-//! outputs) and must never make the modeled timeline longer than the
-//! strictly serial schedule.
+//! The contract of the layered offload API: scheduling, ring depth, and
+//! N-dimension sharding may hide time under device work but must never
+//! change numerics (bit-identical outputs) and must never make the
+//! modeled timeline longer than the strictly serial schedule.
 
-use xdna_repro::coordinator::engine::{EngineConfig, ExecMode, GemmOffloadEngine, InputLayout};
+use xdna_repro::coordinator::scheduler::SchedulePolicy;
+use xdna_repro::coordinator::session::{
+    GemmOp, InputLayout, OffloadSession, QueueDepth, SessionConfig, Shards, Ticket,
+    STAGE_RECONFIG,
+};
 use xdna_repro::gemm::sizes::{distinct_sizes, ModelDims, ProblemSize};
 use xdna_repro::util::rng::Rng;
 
-fn engine(mode: ExecMode) -> GemmOffloadEngine {
-    GemmOffloadEngine::new(
-        EngineConfig {
-            mode,
+fn session(depth: usize, shards: usize, schedule: SchedulePolicy) -> OffloadSession {
+    OffloadSession::new(
+        SessionConfig {
+            depth: QueueDepth(depth),
+            shards: Shards(shards),
+            schedule,
             ..Default::default()
         },
         &[],
@@ -41,30 +47,38 @@ fn scaled_gpt2_sizes() -> Vec<ProblemSize> {
 fn random_inputs(size: ProblemSize, seed: u64) -> (Vec<f32>, Vec<f32>) {
     let mut rng = Rng::new(seed);
     let mut a = vec![0.0f32; size.m * size.k];
-    let mut b_t = vec![0.0f32; size.n * size.k]; // N×K: forces the transpose
+    let mut b_t = vec![0.0f32; size.n * size.k]; // N x K: forces the transpose
     rng.fill_normal(&mut a, 0.0, 1.0);
     rng.fill_normal(&mut b_t, 0.0, 0.1);
     (a, b_t)
 }
 
+/// Every configuration must produce bit-identical outputs to the depth-1
+/// unsharded (strictly serial) reference, per shape.
 fn bit_identical_over(sizes: &[ProblemSize]) {
     for (i, &size) in sizes.iter().enumerate() {
         let (a, b_t) = random_inputs(size, 1000 + i as u64);
-        let mut c_serial = vec![0.0f32; size.m * size.n];
-        let mut c_pipe = vec![0.0f32; size.m * size.n];
-        engine(ExecMode::Serial)
-            .gemm(size, &a, &b_t, InputLayout::Transposed, &mut c_serial)
+        let mut reference = vec![0.0f32; size.m * size.n];
+        session(1, 1, SchedulePolicy::Fifo)
+            .gemm(size, &a, &b_t, InputLayout::Transposed, &mut reference)
             .unwrap();
-        engine(ExecMode::Pipelined)
-            .gemm(size, &a, &b_t, InputLayout::Transposed, &mut c_pipe)
-            .unwrap();
-        assert_eq!(c_serial, c_pipe, "{size}: modes must be bit-identical");
+        for (depth, shards) in [(2, 1), (4, 1), (1, 4), (4, 4)] {
+            let mut c = vec![0.0f32; size.m * size.n];
+            session(depth, shards, SchedulePolicy::Fifo)
+                .gemm(size, &a, &b_t, InputLayout::Transposed, &mut c)
+                .unwrap();
+            assert_eq!(
+                reference, c,
+                "{size}: depth {depth} / {shards} shard(s) must be bit-identical"
+            );
+        }
     }
 }
 
-/// Bit-identical results across modes on every GPT-2 GEMM-site shape.
+/// Bit-identical results across depths 1/2/4 and 1/4 shards on every
+/// GPT-2 GEMM-site shape.
 #[test]
-fn pipelined_matches_serial_on_all_gpt2_site_shapes() {
+fn depths_and_shards_match_serial_on_all_gpt2_site_shapes() {
     bit_identical_over(&scaled_gpt2_sizes());
 }
 
@@ -73,74 +87,113 @@ fn pipelined_matches_serial_on_all_gpt2_site_shapes() {
 /// `cargo test --release -- --ignored`.
 #[test]
 #[ignore = "full-scale GPT-2 124M sizes; run with --release -- --ignored"]
-fn pipelined_matches_serial_on_full_gpt2_sizes() {
+fn depths_and_shards_match_serial_on_full_gpt2_sizes() {
     bit_identical_over(&distinct_sizes(&ModelDims::gpt2_124m()));
 }
 
-/// Deep submissions (the backward-pass pairing) must be bit-identical to
-/// serial execution too, not just isolated submit+wait.
-#[test]
-fn interleaved_submissions_bit_identical_to_serial() {
+/// Stream all twelve shapes through a ring of the given depth, keeping it
+/// full; returns (outputs, makespan, serial, reconfig seconds).
+fn stream_all(
+    depth: usize,
+    shards: usize,
+    schedule: SchedulePolicy,
+    rounds: usize,
+) -> (Vec<Vec<f32>>, f64, f64, f64) {
     let sizes = scaled_gpt2_sizes();
     let inputs: Vec<(Vec<f32>, Vec<f32>)> = sizes
         .iter()
         .enumerate()
         .map(|(i, &s)| random_inputs(s, 2000 + i as u64))
         .collect();
-
-    // Serial reference.
-    let mut eng = engine(ExecMode::Serial);
-    let mut serial_out: Vec<Vec<f32>> = Vec::new();
-    for (&size, (a, b_t)) in sizes.iter().zip(&inputs) {
-        let mut c = vec![0.0f32; size.m * size.n];
-        eng.gemm(size, a, b_t, InputLayout::Transposed, &mut c).unwrap();
-        serial_out.push(c);
-    }
-    let serial_timeline = (eng.pipeline.serial_s(), eng.pipeline.makespan_s());
-    assert!(
-        (serial_timeline.0 - serial_timeline.1).abs() < 1e-12,
-        "serial mode must not overlap"
-    );
-
-    // Pipelined: keep two submissions in flight throughout.
-    let mut eng = engine(ExecMode::Pipelined);
-    let mut pipe_out: Vec<Vec<f32>> = sizes
-        .iter()
-        .map(|s| vec![0.0f32; s.m * s.n])
-        .collect();
-    let mut pending: Vec<(usize, xdna_repro::coordinator::Ticket)> = Vec::new();
-    for (i, (&size, (a, b_t))) in sizes.iter().zip(&inputs).enumerate() {
-        if pending.len() == 2 {
-            let (j, t) = pending.remove(0);
-            eng.wait(t, &mut pipe_out[j]).unwrap();
+    let mut sess = session(depth, shards, schedule);
+    let mut outs: Vec<Vec<f32>> = sizes.iter().map(|s| vec![0.0f32; s.m * s.n]).collect();
+    for _ in 0..rounds {
+        let mut pending: Vec<(usize, Ticket)> = Vec::new();
+        for (i, (&size, (a, b_t))) in sizes.iter().zip(&inputs).enumerate() {
+            if pending.len() == depth {
+                let (j, t) = pending.remove(0);
+                sess.wait(t, &mut outs[j]).unwrap();
+            }
+            let t = sess
+                .submit(&GemmOp::new(size).with_b_layout(InputLayout::Transposed), a, b_t)
+                .unwrap();
+            pending.push((i, t));
         }
-        let t = eng
-            .submit(size, a, InputLayout::RowMajor, b_t, InputLayout::Transposed)
-            .unwrap();
-        pending.push((i, t));
+        for (j, t) in pending {
+            sess.wait(t, &mut outs[j]).unwrap();
+        }
     }
-    for (j, t) in pending {
-        eng.wait(t, &mut pipe_out[j]).unwrap();
-    }
-
-    for ((s, p), size) in serial_out.iter().zip(&pipe_out).zip(&sizes) {
-        assert_eq!(s, p, "{size}: interleaved pipelining changed numerics");
-    }
-    // The streamed schedule must have hidden some host staging, and the
-    // modeled overlapped time can never exceed the serial sum nor drop
-    // below the serialized device spans.
-    assert!(eng.pipeline.hidden_s() > 0.0, "no overlap recorded");
-    assert!(eng.pipeline.makespan_s() <= eng.pipeline.serial_s());
-    assert!(eng.pipeline.makespan_s() >= eng.pipeline.device_busy_s);
+    (
+        outs,
+        sess.pipeline.makespan_s(),
+        sess.pipeline.serial_s(),
+        sess.modeled_stage_s(STAGE_RECONFIG),
+    )
 }
 
-/// Modeled overlapped time <= modeled serial time, per size and overall.
+/// Interleaved streaming through deeper rings must be bit-identical to
+/// serial execution, and the modeled makespan must shrink monotonically:
+/// depth 4 <= depth 2 <= the serial sum (never below zero overlap).
 #[test]
-fn overlapped_time_never_exceeds_serial_time() {
-    for &size in &scaled_gpt2_sizes() {
+fn streamed_ring_bit_identical_and_makespan_monotone() {
+    let (out1, m1, s1, _) = stream_all(1, 1, SchedulePolicy::Fifo, 1);
+    let (out2, m2, s2, _) = stream_all(2, 1, SchedulePolicy::Fifo, 1);
+    let (out4, m4, s4, _) = stream_all(4, 1, SchedulePolicy::Fifo, 1);
+    assert_eq!(out1, out2, "depth 2 streaming changed numerics");
+    assert_eq!(out1, out4, "depth 4 streaming changed numerics");
+    // Same stream => identical modeled work.
+    assert!((s1 - s2).abs() < 1e-9 && (s2 - s4).abs() < 1e-9);
+    assert!((m1 - s1).abs() < 1e-12, "depth 1 is the serial schedule");
+    assert!(m2 < s2, "depth 2 must hide some staging");
+    assert!(m4 <= m2 + 1e-12, "deeper rings can only help: {m4} vs {m2}");
+    assert!(m2 <= m1 + 1e-12);
+}
+
+/// Sharded streaming: still bit-identical, still bounded by the serial
+/// sum.
+#[test]
+fn streamed_shards_bit_identical_and_bounded() {
+    let (out1, _, _, _) = stream_all(1, 1, SchedulePolicy::Fifo, 1);
+    let (out4, m4, s4, _) = stream_all(2, 4, SchedulePolicy::Fifo, 1);
+    assert_eq!(out1, out4, "sharded streaming changed numerics");
+    assert!(m4 <= s4 + 1e-12, "makespan {m4} must never exceed serial {s4}");
+    assert!(m4 < s4, "shards + ring must hide something");
+}
+
+/// The reconfig-aware scheduler: on a stream that revisits sizes, batching
+/// must spend no more modeled reconfiguration time than FIFO submission
+/// order, without changing numerics.
+#[test]
+fn batching_scheduler_cuts_reconfig_time_not_numerics() {
+    // Two rounds of the twelve shapes through a deep ring: the window
+    // repeatedly holds revisited sizes the batcher can group.
+    let (out_fifo, _, _, reconfig_fifo) = stream_all(6, 1, SchedulePolicy::Fifo, 2);
+    let (out_batch, m_batch, s_batch, reconfig_batch) =
+        stream_all(6, 1, SchedulePolicy::BatchBySize, 2);
+    assert_eq!(out_fifo, out_batch, "scheduling changed numerics");
+    assert!(
+        reconfig_batch <= reconfig_fifo + 1e-12,
+        "batched reconfig {reconfig_batch} must be <= fifo {reconfig_fifo}"
+    );
+    assert!(m_batch <= s_batch + 1e-12);
+}
+
+/// Modeled overlapped time <= modeled serial time, per size, through the
+/// legacy engine shim too.
+#[test]
+fn engine_shim_overlap_never_exceeds_serial() {
+    use xdna_repro::coordinator::engine::{EngineConfig, ExecMode, GemmOffloadEngine};
+    for &size in &scaled_gpt2_sizes()[..4] {
         let (a, b_t) = random_inputs(size, 777);
         let mut c = vec![0.0f32; size.m * size.n];
-        let mut eng = engine(ExecMode::Pipelined);
+        let mut eng = GemmOffloadEngine::new(
+            EngineConfig {
+                mode: ExecMode::Pipelined,
+                ..Default::default()
+            },
+            &[size],
+        )
+        .unwrap();
         // Two rounds of paired submissions of the same size (both slots).
         for _ in 0..2 {
             let t1 = eng
@@ -159,5 +212,6 @@ fn overlapped_time_never_exceeds_serial_time() {
             eng.pipeline.serial_s()
         );
         assert!(eng.pipeline.hidden_s() > 0.0, "{size}: expected overlap");
+        assert!(eng.pipeline.makespan_s() >= eng.pipeline.device_busy_s);
     }
 }
