@@ -13,11 +13,16 @@
 //! Run: `cargo run --release --example finetune [-- --config d4 --steps 300]`
 //! Defaults to the pipelined (depth-2) offload schedule; `--mode serial`
 //! reproduces the paper's strictly serial invocation path, and
-//! `--queue-depth K`, `--shards S`, `--schedule batch` exercise the
-//! deeper-ring / sharded / reconfig-batched session.
+//! `--queue-depth K`, `--shards auto|N`, `--schedule batch` exercise the
+//! deeper-ring / sharded / reconfig-batched session. `--plan` records each
+//! training step as a `StepPlan` and schedules it whole
+//! (record→schedule→execute): whole-step batching plus weight-staging
+//! prefetch under the previous kernel.
 
 use xdna_repro::coordinator::engine::ExecMode;
-use xdna_repro::coordinator::session::{OffloadSession, QueueDepth, SessionConfig, Shards};
+use xdna_repro::coordinator::session::{
+    OffloadSession, QueueDepth, SessionConfig, ShardPolicy,
+};
 use xdna_repro::coordinator::SchedulePolicy;
 use xdna_repro::model::data::{synthetic_corpus, DataLoader};
 use xdna_repro::model::model::OPS;
@@ -27,7 +32,7 @@ use xdna_repro::power::profiles::PowerProfile;
 use xdna_repro::util::cli::Args;
 
 fn main() -> xdna_repro::Result<()> {
-    let args = Args::parse(std::env::args().skip(1), &[])?;
+    let args = Args::parse(std::env::args().skip(1), &["plan"])?;
     let cfg_name = args.get_or("config", "d4");
     let cfg = ModelConfig::by_name(cfg_name)?;
     let total_steps = args.get_parse("steps", 300usize)?;
@@ -42,11 +47,12 @@ fn main() -> xdna_repro::Result<()> {
             )))
         }
     };
-    // Same parsing as the CLI: SchedulePolicy::from_str, and QueueDepth /
-    // Shards clamp 0 to 1 themselves.
+    // Same parsing as the CLI: ShardPolicy/SchedulePolicy::from_str, and
+    // QueueDepth clamps 0 to 1 itself.
     let depth = QueueDepth(args.get_parse("queue-depth", mode.queue_depth().get())?);
-    let shards = Shards(args.get_parse("shards", 1usize)?);
+    let shards: ShardPolicy = args.get_parse("shards", ShardPolicy::default())?;
     let schedule: SchedulePolicy = args.get_parse("schedule", SchedulePolicy::Fifo)?;
+    let plan = args.flag("plan");
     let epochs = 20.min(total_steps);
     let steps_per_epoch = (total_steps / epochs).max(1);
 
@@ -81,16 +87,26 @@ fn main() -> xdna_repro::Result<()> {
         &[],
     )?;
     println!(
-        "\n--- CPU+NPU (offloaded GEMMs; depth {}, {} shard(s), {schedule:?}) ---",
+        "\n--- CPU+NPU ({}; depth {}, shards {}, {schedule:?}) ---",
+        if plan { "planned steps" } else { "eager offload" },
         engine.queue_depth(),
-        engine.shard_count()
+        engine.shard_policy()
     );
-    let npu_stats = train(
-        &mut model,
-        &mut loader,
-        &mut TrainBackend::CpuNpu(&mut engine),
-        &tc,
-    )?;
+    let npu_stats = if plan {
+        train(
+            &mut model,
+            &mut loader,
+            &mut TrainBackend::CpuNpuPlanned(&mut engine),
+            &tc,
+        )?
+    } else {
+        train(
+            &mut model,
+            &mut loader,
+            &mut TrainBackend::CpuNpu(&mut engine),
+            &tc,
+        )?
+    };
     for s in npu_stats.iter().step_by((epochs / 10).max(1)) {
         println!(
             "epoch {:>3}  loss {:.4}  wall {:>8.1} ms  modeled {:>8.1} ms  energy {:>7.2} J",

@@ -1,11 +1,15 @@
 //! Overlapped-vs-serial offload schedule: the modeled epoch-level report
 //! plus measured runs of the real offload session at several ring depths
-//! and shard counts over a GPT-2-shaped GEMM stream.
+//! and shard counts over a GPT-2-shaped GEMM stream, and the recorded
+//! step-plan schedule (whole-stream batching + weight prefetch) over the
+//! same stream.
 use xdna_repro::bench::pipeline;
+use xdna_repro::coordinator::plan::{PlanOp, StepPlan};
 use xdna_repro::coordinator::session::{
-    GemmOp, InputLayout, OffloadSession, QueueDepth, SessionConfig, Shards, Ticket,
+    GemmOp, InputLayout, OffloadSession, QueueDepth, SessionConfig, ShardPolicy, Shards,
+    Ticket,
 };
-use xdna_repro::coordinator::STAGES;
+use xdna_repro::coordinator::{SchedulePolicy, STAGES};
 use xdna_repro::gemm::sizes::ProblemSize;
 use xdna_repro::power::profiles::PowerProfile;
 use xdna_repro::util::rng::Rng;
@@ -14,7 +18,7 @@ fn run_stream(depth: usize, shards: usize, sizes: &[ProblemSize], rounds: usize)
     let mut sess = OffloadSession::new(
         SessionConfig {
             depth: QueueDepth(depth),
-            shards: Shards(shards),
+            shards: ShardPolicy::Fixed(Shards(shards)),
             ..Default::default()
         },
         sizes,
@@ -86,4 +90,51 @@ fn main() {
             100.0 * sess.pipeline.hidden_s() / sess.pipeline.serial_s()
         );
     }
+
+    // Recorded step plan over the same stream: the scheduler sees all
+    // rounds at once (whole-step batching) and prefetches each next op's
+    // B staging under the current kernel.
+    let mut sess = OffloadSession::new(
+        SessionConfig {
+            depth: QueueDepth(4),
+            schedule: SchedulePolicy::BatchBySize,
+            shards: ShardPolicy::Auto,
+            ..Default::default()
+        },
+        &sizes,
+    )
+    .unwrap();
+    let mut rng = Rng::new(5);
+    let inputs: Vec<(Vec<f32>, Vec<f32>)> = sizes
+        .iter()
+        .map(|s| {
+            let mut a = vec![0.0f32; s.m * s.k];
+            let mut b_t = vec![0.0f32; s.n * s.k];
+            rng.fill_normal(&mut a, 0.0, 1.0);
+            rng.fill_normal(&mut b_t, 0.0, 0.1);
+            (a, b_t)
+        })
+        .collect();
+    let mut plan = StepPlan::new();
+    let mut outs: Vec<Vec<f32>> = sizes.iter().map(|s| vec![0.0f32; s.m * s.n]).collect();
+    for _ in 0..5 {
+        for ((size, (a, b_t)), out) in sizes.iter().zip(&inputs).zip(outs.iter_mut()) {
+            let op = PlanOp::new(*size)
+                .with_b_layout(InputLayout::Transposed)
+                .prefetchable_b(true);
+            sess.record_gemm(&mut plan, &op, a, b_t, out).unwrap();
+        }
+    }
+    let report = sess.execute(&mut plan).unwrap();
+    println!(
+        "\n-- recorded step plan (depth 4, shards auto, BatchBySize) --\n\
+         {} ops, {} reconfigs, {} prefetched; serial {:.3} ms, scheduled {:.3} ms, \
+         hidden {:.3} ms",
+        report.stats.len(),
+        report.reconfigs,
+        report.prefetched,
+        report.serial_growth_s * 1e3,
+        report.makespan_growth_s * 1e3,
+        report.hidden_growth_s() * 1e3
+    );
 }

@@ -13,7 +13,7 @@
 
 use crate::gemm::sizes::{gemm_sites, ModelDims, ProblemSize};
 use crate::gemm::tiling::{Tiling, GRID_COLS, PAPER_TILES};
-use crate::npu::timing::{PipelineTimeline, TimingModel};
+use crate::npu::timing::{HostStagingModel, PipelineTimeline, TimingModel};
 use crate::power::profiles::PowerProfile;
 use crate::util::json::Json;
 use crate::xrt::bo::{SyncCost, SyncDirection};
@@ -161,17 +161,70 @@ fn report_to_json(b: &PipelineReport) -> Json {
     Json::Obj(o)
 }
 
+/// Version of the report's JSON shape. Bump whenever a key is renamed,
+/// moved, or re-typed so downstream consumers of the uploaded CI artifact
+/// can dispatch on it across PRs.
+///
+/// * v1 — `{ <profile>: [row, ...] }` (implicit, unversioned).
+/// * v2 — self-describing: top-level `schema_version`, `generator`, a
+///   `config` echo of the modeled session parameters (operating points,
+///   schedule, host-staging calibration), and per-profile objects under
+///   `profiles` carrying their `npu_time_scale`.
+pub const SCHEMA_VERSION: u64 = 2;
+
 /// The full report as JSON (per power profile, per operating point) — the
-/// CI smoke step uploads this as a build artifact.
+/// CI smoke step uploads this as a build artifact. Self-describing: see
+/// [`SCHEMA_VERSION`].
 pub fn json_report(profiles: &[PowerProfile]) -> Json {
-    let mut root = std::collections::BTreeMap::new();
+    let mut config = std::collections::BTreeMap::new();
+    config.insert(
+        "operating_points".to_string(),
+        Json::Arr(
+            OPERATING_POINTS
+                .iter()
+                .map(|&(d, s)| {
+                    Json::Arr(vec![Json::Num(d as f64), Json::Num(s as f64)])
+                })
+                .collect(),
+        ),
+    );
+    config.insert("schedule".to_string(), Json::str("fifo"));
+    config.insert(
+        "host_copy_bytes_per_s".to_string(),
+        Json::Num(HostStagingModel::COPY_BYTES_PER_S),
+    );
+    config.insert(
+        "host_transpose_bytes_per_s".to_string(),
+        Json::Num(HostStagingModel::TRANSPOSE_BYTES_PER_S),
+    );
+    config.insert(
+        "shim_columns".to_string(),
+        Json::Num(GRID_COLS as f64),
+    );
+
+    let mut profs = std::collections::BTreeMap::new();
     for profile in profiles {
         let rows: Vec<Json> = OPERATING_POINTS
             .iter()
             .map(|&(d, s)| report_to_json(&breakdown_at(profile, d, s)))
             .collect();
-        root.insert(profile.name.to_string(), Json::Arr(rows));
+        let mut p = std::collections::BTreeMap::new();
+        p.insert(
+            "npu_time_scale".to_string(),
+            Json::Num(profile.npu_time_scale),
+        );
+        p.insert("rows".to_string(), Json::Arr(rows));
+        profs.insert(profile.name.to_string(), Json::Obj(p));
     }
+
+    let mut root = std::collections::BTreeMap::new();
+    root.insert("schema_version".to_string(), Json::Num(SCHEMA_VERSION as f64));
+    root.insert(
+        "generator".to_string(),
+        Json::str("xdna-repro bench pipeline"),
+    );
+    root.insert("config".to_string(), Json::Obj(config));
+    root.insert("profiles".to_string(), Json::Obj(profs));
     Json::Obj(root)
 }
 
@@ -222,12 +275,28 @@ mod tests {
     }
 
     #[test]
-    fn json_report_has_all_operating_points() {
+    fn json_report_is_self_describing_and_has_all_operating_points() {
         let j = json_report(&[PowerProfile::mains(), PowerProfile::battery()]);
-        let obj = j.as_obj().unwrap();
-        assert_eq!(obj.len(), 2);
-        for rows in obj.values() {
-            let rows = rows.as_arr().unwrap();
+        assert_eq!(
+            j.get("schema_version").unwrap().as_usize().unwrap(),
+            SCHEMA_VERSION as usize
+        );
+        assert_eq!(
+            j.get("generator").unwrap().as_str().unwrap(),
+            "xdna-repro bench pipeline"
+        );
+        let config = j.get("config").unwrap();
+        assert_eq!(
+            config.get("operating_points").unwrap().as_arr().unwrap().len(),
+            OPERATING_POINTS.len()
+        );
+        assert!(config.get("host_copy_bytes_per_s").unwrap().as_f64().unwrap() > 0.0);
+        assert_eq!(config.get("schedule").unwrap().as_str().unwrap(), "fifo");
+        let profiles = j.get("profiles").unwrap().as_obj().unwrap();
+        assert_eq!(profiles.len(), 2);
+        for p in profiles.values() {
+            assert!(p.get("npu_time_scale").unwrap().as_f64().unwrap() > 0.0);
+            let rows = p.get("rows").unwrap().as_arr().unwrap();
             assert_eq!(rows.len(), OPERATING_POINTS.len());
             for r in rows {
                 let r = r.as_obj().unwrap();
@@ -236,5 +305,7 @@ mod tests {
                 assert!(r["overlapped_s"].as_f64().unwrap() > 0.0);
             }
         }
+        // The compact serialization round-trips (what CI uploads).
+        assert_eq!(Json::parse(&j.to_string()).unwrap(), j);
     }
 }

@@ -28,7 +28,7 @@ use crate::util::error::Result;
 use super::device::ComputeDevice;
 use super::reconfig::ReconfigPolicy;
 use super::scheduler::SchedulePolicy;
-use super::session::{GemmOp, OffloadSession, QueueDepth, SessionConfig, Shards};
+use super::session::{GemmOp, OffloadSession, QueueDepth, SessionConfig, ShardPolicy};
 
 pub use super::session::{
     InputLayout, InvocationStats, SizeRecord, Ticket, STAGES, STAGE_INPUT_COPY,
@@ -118,7 +118,7 @@ impl GemmOffloadEngine {
                 policy: cfg.policy,
                 device: cfg.device,
                 depth: cfg.mode.queue_depth(),
-                shards: Shards(1),
+                shards: ShardPolicy::default(),
                 schedule: SchedulePolicy::Fifo,
             },
             sizes,

@@ -1,6 +1,6 @@
 //! The paper's system contribution: the minimal-reconfiguration GEMM
-//! offload engine (sections V and VI-D), redesigned as a three-layer
-//! offload API.
+//! offload engine (sections V and VI-D), redesigned as a layered
+//! record→schedule→execute offload API.
 //!
 //! * [`device`] — [`device::ComputeDevice`], the object-safe numerics
 //!   seam: the XDNA simulator's bf16 datapath, the CPU reference GEMM,
@@ -9,11 +9,18 @@
 //!   (instruction streams + a ring of [`session::QueueDepth`] shared-BO
 //!   slots preloaded at init), the typed [`session::GemmOp`] descriptor,
 //!   session-scoped [`session::Ticket`]s, Figure-7 stage accounting, and
-//!   N-dimension sharding ([`session::Shards`]) across simulated shim
-//!   columns.
-//! * [`scheduler`] — [`scheduler::Scheduler`]: reorders the staged
-//!   submission window within data dependencies to batch same-size
-//!   invocations and amortize reconfigurations.
+//!   per-size N-dimension sharding ([`session::ShardPolicy`], fixed or
+//!   cost-model-chosen) across simulated shim columns.
+//! * [`plan`] — [`plan::StepPlan`]: the deferred seam. The model records
+//!   a whole training step's GEMMs (with data dependencies and
+//!   prefetchable weight staging) and
+//!   [`session::OffloadSession::execute`] schedules the entire step at
+//!   once — whole-step same-size batching, next-invocation weight
+//!   prefetch, auto-sharding.
+//! * [`scheduler`] — [`scheduler::Scheduler`]: orders a submission window
+//!   (the eager ring's staged ops, or a full recorded step) within data
+//!   dependencies to batch same-size invocations and amortize
+//!   reconfigurations.
 //! * [`engine`] — the PR-1 `GemmOffloadEngine` surface, kept as a thin
 //!   shim over a depth-1/2 FIFO session (Figure-7 serial fidelity).
 //! * [`reconfig`] — minimal vs whole-array reconfiguration policies (the
@@ -25,6 +32,7 @@
 pub mod backend;
 pub mod device;
 pub mod engine;
+pub mod plan;
 pub mod reconfig;
 pub mod scheduler;
 pub mod session;
@@ -32,9 +40,10 @@ pub mod transpose;
 
 pub use device::{ComputeDevice, DeviceRun, DeviceSpan, SimulatorDevice};
 pub use engine::{EngineConfig, ExecMode, GemmOffloadEngine, PAIRED_SLOTS};
+pub use plan::{PlanNode, PlanOp, StepPlan, StepReport};
 pub use reconfig::ReconfigPolicy;
 pub use scheduler::{SchedulePolicy, Scheduler};
 pub use session::{
-    GemmOp, InputLayout, InvocationStats, OffloadSession, QueueDepth, SessionConfig, Shards,
-    Ticket, STAGES,
+    GemmOp, InputLayout, InvocationStats, OffloadSession, QueueDepth, SessionConfig,
+    ShardPolicy, Shards, Ticket, STAGES,
 };

@@ -1,0 +1,485 @@
+//! [`StepPlan`] — the deferred record→schedule→execute offload API.
+//!
+//! The eager seam ([`super::session::OffloadSession::gemm`] and friends)
+//! blocks on every GEMM, so the scheduler only ever sees the few ops that
+//! fit in the submission ring. A *step plan* inverts the flow: the model's
+//! forward/backward **record** every GEMM of one training step as a typed
+//! [`PlanOp`] (with [`PlanOp::deps`] chaining each layer's output to the
+//! next layer's input, and weight staging marked prefetchable since the
+//! weights are known before the step runs), and
+//! [`super::session::OffloadSession::execute`] then **schedules** the
+//! entire step at once:
+//!
+//! * [`super::scheduler::SchedulePolicy::BatchBySize`] reorders across
+//!   what used to be wait boundaries — every same-size invocation of the
+//!   step can share one reconfiguration, not just the ones that happened
+//!   to be staged together;
+//! * invocation N+1's *weight* staging is prefetched under invocation N's
+//!   kernel on the modeled timeline (the forward pass is a dependency
+//!   chain, but its weights are not);
+//! * with [`super::session::ShardPolicy::Auto`] the session picks
+//!   `Shards(s)` per problem size from the host-staging and kernel timing
+//!   models instead of one global CLI value.
+//!
+//! Recording executes the GEMM numerics immediately (the model needs each
+//! output to compute the CPU ops feeding the next GEMM), so plan outputs
+//! are bit-for-bit the eager results; what is deferred is the *schedule* —
+//! the modeled Figure-7 stage timeline, which `execute` replays in
+//! scheduler order. On a depth-1 unsharded FIFO session the replay is
+//! bit-for-bit and stage-for-stage the paper's strictly serial schedule;
+//! the eager `gemm`/`gemm_ex` entry points are now thin shims over a
+//! one-op plan.
+
+use crate::gemm::sizes::ProblemSize;
+
+use super::session::{InputLayout, InvocationStats};
+
+/// Handle to one recorded op inside a [`StepPlan`] (the plan-level
+/// analogue of a session [`super::session::Ticket`]). Used to declare
+/// dependencies between recorded ops.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PlanNode(pub(crate) usize);
+
+impl PlanNode {
+    /// Position of the op in its plan (record order).
+    pub fn index(&self) -> usize {
+        self.0
+    }
+}
+
+/// Typed descriptor of one GEMM to record into a [`StepPlan`] — the plan
+/// analogue of [`super::session::GemmOp`], with plan-node dependencies
+/// instead of session tickets and a prefetch hint for the B input.
+#[derive(Debug, Clone)]
+pub struct PlanOp {
+    pub size: ProblemSize,
+    pub a_layout: InputLayout,
+    pub b_layout: InputLayout,
+    /// Recorded ops whose *outputs* feed this op (through any amount of
+    /// interleaved CPU compute). The scheduler never reorders across
+    /// these, and the replay never starts this op's activation staging
+    /// before they complete.
+    pub deps: Vec<PlanNode>,
+    /// The B input is known before the step executes (a weight, or an
+    /// activation saved by an earlier pass), so its staging may be
+    /// prefetched under an earlier invocation's kernel.
+    pub prefetch_b: bool,
+}
+
+impl PlanOp {
+    pub fn new(size: ProblemSize) -> PlanOp {
+        PlanOp {
+            size,
+            a_layout: InputLayout::RowMajor,
+            b_layout: InputLayout::RowMajor,
+            deps: Vec::new(),
+            prefetch_b: false,
+        }
+    }
+
+    pub fn with_a_layout(mut self, layout: InputLayout) -> PlanOp {
+        self.a_layout = layout;
+        self
+    }
+
+    pub fn with_b_layout(mut self, layout: InputLayout) -> PlanOp {
+        self.b_layout = layout;
+        self
+    }
+
+    /// Declare a data dependency on an earlier recorded op.
+    pub fn after(mut self, node: PlanNode) -> PlanOp {
+        self.deps.push(node);
+        self
+    }
+
+    /// Mark the B input as known ahead of execution (prefetchable).
+    pub fn prefetchable_b(mut self, yes: bool) -> PlanOp {
+        self.prefetch_b = yes;
+        self
+    }
+}
+
+/// One recorded invocation: the op description plus every modeled stage
+/// duration captured at record time (unscaled device seconds — the replay
+/// applies the power profile's device-time scale, exactly as the eager
+/// path does).
+#[derive(Debug, Clone)]
+pub(crate) struct PlannedOp {
+    pub(crate) size: ProblemSize,
+    /// Padded strip-variant size — the granularity reconfiguration tracks.
+    pub(crate) strip_size: ProblemSize,
+    pub(crate) deps: Vec<usize>,
+    pub(crate) prefetch_b: bool,
+    /// Modeled host staging of A (copy or transpose).
+    pub(crate) host_a_s: f64,
+    /// Modeled host staging of B across all strips.
+    pub(crate) host_b_s: f64,
+    pub(crate) sync_in_s: f64,
+    /// Steady-state cost of switching the array to this op's variant.
+    pub(crate) reconfig_switch_s: f64,
+    /// One-time cost actually paid at record time beyond a steady switch
+    /// (the first-ever xclbin load under the minimal policy).
+    pub(crate) reconfig_once_s: f64,
+    /// Per column strip: (partition-scaled kernel seconds, output sync
+    /// seconds). Strip `i` replays on timeline column `i`.
+    pub(crate) strips: Vec<(f64, f64)>,
+    /// Modeled output merge into the caller's buffer.
+    pub(crate) host_post_s: f64,
+    pub(crate) energy_j: f64,
+    /// Wallclock of the record-time invocation (staging + device + merge).
+    pub(crate) wall_s: f64,
+}
+
+impl PlannedOp {
+    pub(crate) fn kernel_s(&self) -> f64 {
+        self.strips.iter().map(|(k, _)| k).sum()
+    }
+
+    pub(crate) fn sync_out_s(&self) -> f64 {
+        self.strips.iter().map(|(_, so)| so).sum()
+    }
+}
+
+/// A recorded training step: every offloaded GEMM of one forward+backward
+/// pass, with data dependencies, waiting to be scheduled by
+/// [`super::session::OffloadSession::execute`].
+///
+/// The builder also tracks the *activation chain head* — the last recorded
+/// op whose output flows into subsequent CPU compute — so call sites can
+/// express "this op consumes the running activation stream" without
+/// threading node handles through every layer:
+///
+/// ```ignore
+/// let mut op = PlanOp::new(size).prefetchable_b(true);
+/// if let Some(head) = plan.chain_head() { op = op.after(head); }
+/// let node = session.record_gemm(&mut plan, &op, a, b, out)?;
+/// plan.set_chain(node);
+/// ```
+#[derive(Debug, Default)]
+pub struct StepPlan {
+    pub(crate) ops: Vec<PlannedOp>,
+    /// The activation-stream head (see type docs).
+    chain: Option<usize>,
+    /// The session this plan was recorded on. Like tickets, plans are
+    /// *session-scoped*: executing (or continuing to record) on another
+    /// session is a helpful error, never a mischarged timeline.
+    pub(crate) session: Option<u64>,
+    /// Array programming state when recording began — the replay's
+    /// starting point for reconfiguration accounting.
+    pub(crate) initial_strip: Option<ProblemSize>,
+    /// Scheduler batching anchor when recording began.
+    pub(crate) initial_logical: Option<ProblemSize>,
+    pub(crate) started: bool,
+    pub(crate) executed: bool,
+}
+
+impl StepPlan {
+    pub fn new() -> StepPlan {
+        StepPlan::default()
+    }
+
+    /// Recorded ops so far.
+    pub fn len(&self) -> usize {
+        self.ops.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ops.is_empty()
+    }
+
+    /// The op currently heading the activation chain (the node new
+    /// activation-consuming ops should depend on).
+    pub fn chain_head(&self) -> Option<PlanNode> {
+        self.chain.map(PlanNode)
+    }
+
+    /// Advance the activation chain to `node`.
+    pub fn set_chain(&mut self, node: PlanNode) {
+        self.chain = Some(node.0);
+    }
+
+    /// Problem sizes in record order (diagnostics).
+    pub fn sizes(&self) -> Vec<ProblemSize> {
+        self.ops.iter().map(|op| op.size).collect()
+    }
+}
+
+/// What [`super::session::OffloadSession::execute`] did with a plan.
+#[derive(Debug, Clone)]
+pub struct StepReport {
+    /// Per-op invocation statistics, in *record* order.
+    pub stats: Vec<InvocationStats>,
+    /// The execution order the scheduler chose (indices in record order).
+    pub order: Vec<usize>,
+    /// Growth of the serial stage sum over this step.
+    pub serial_growth_s: f64,
+    /// Growth of the overlapped schedule's makespan over this step.
+    pub makespan_growth_s: f64,
+    /// Reconfigurations the chosen schedule paid.
+    pub reconfigs: usize,
+    /// Ops whose B staging was prefetched under an earlier kernel.
+    pub prefetched: usize,
+    pub energy_j: f64,
+}
+
+impl StepReport {
+    /// Step seconds hidden by the schedule (staging under kernels, strips
+    /// under each other, prefetched weights).
+    pub fn hidden_growth_s(&self) -> f64 {
+        (self.serial_growth_s - self.makespan_growth_s).max(0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::scheduler::SchedulePolicy;
+    use super::super::session::{
+        OffloadSession, QueueDepth, SessionConfig, ShardPolicy, Shards, STAGE_RECONFIG,
+    };
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    fn session(depth: usize, shards: usize, schedule: SchedulePolicy) -> OffloadSession {
+        OffloadSession::new(
+            SessionConfig {
+                depth: QueueDepth(depth),
+                shards: ShardPolicy::Fixed(Shards(shards)),
+                schedule,
+                ..Default::default()
+            },
+            &[],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn one_op_plan_matches_eager_gemm_exactly() {
+        let size = ProblemSize::new(128, 64, 128);
+        let mut rng = Rng::new(83);
+        let a = prop::gen::normal_vec(&mut rng, 128 * 64);
+        let b = prop::gen::normal_vec(&mut rng, 64 * 128);
+
+        let mut eager = session(1, 1, SchedulePolicy::Fifo);
+        let mut c_eager = vec![0.0f32; 128 * 128];
+        let st_eager = eager
+            .gemm(size, &a, &b, InputLayout::RowMajor, &mut c_eager)
+            .unwrap();
+
+        let mut planned = session(1, 1, SchedulePolicy::Fifo);
+        let mut plan = StepPlan::new();
+        let mut c_plan = vec![0.0f32; 128 * 128];
+        planned
+            .record_gemm(&mut plan, &PlanOp::new(size), &a, &b, &mut c_plan)
+            .unwrap();
+        let report = planned.execute(&mut plan).unwrap();
+
+        assert_eq!(c_eager, c_plan, "plan numerics must be the eager numerics");
+        let st_plan = &report.stats[0];
+        assert_eq!(st_plan.modeled_kernel_s, st_eager.modeled_kernel_s);
+        assert_eq!(st_plan.modeled_sync_in_s, st_eager.modeled_sync_in_s);
+        assert_eq!(st_plan.modeled_sync_out_s, st_eager.modeled_sync_out_s);
+        assert_eq!(st_plan.modeled_reconfig_s, st_eager.modeled_reconfig_s);
+        assert!(
+            (planned.pipeline.makespan_s() - eager.pipeline.makespan_s()).abs() < 1e-15,
+            "one-op plan timeline must equal the eager timeline"
+        );
+        assert!(
+            (planned.pipeline.serial_s() - eager.pipeline.serial_s()).abs() < 1e-15
+        );
+    }
+
+    #[test]
+    fn chain_builder_threads_dependencies() {
+        let size = ProblemSize::new(64, 64, 128);
+        let a = vec![1.0f32; 64 * 64];
+        let b = vec![1.0f32; 64 * 128];
+        let mut c = vec![0.0f32; 64 * 128];
+        let mut sess = session(2, 1, SchedulePolicy::Fifo);
+        let mut plan = StepPlan::new();
+        assert!(plan.chain_head().is_none());
+        let mut op = PlanOp::new(size);
+        if let Some(h) = plan.chain_head() {
+            op = op.after(h);
+        }
+        let n0 = sess.record_gemm(&mut plan, &op, &a, &b, &mut c).unwrap();
+        plan.set_chain(n0);
+        let op = PlanOp::new(size).after(plan.chain_head().unwrap());
+        let n1 = sess.record_gemm(&mut plan, &op, &a, &b, &mut c).unwrap();
+        plan.set_chain(n1);
+        assert_eq!(plan.len(), 2);
+        assert_eq!(plan.ops[1].deps, vec![0]);
+        sess.execute(&mut plan).unwrap();
+    }
+
+    #[test]
+    fn executing_a_plan_twice_is_an_error() {
+        let size = ProblemSize::new(64, 64, 128);
+        let a = vec![1.0f32; 64 * 64];
+        let b = vec![1.0f32; 64 * 128];
+        let mut c = vec![0.0f32; 64 * 128];
+        let mut sess = session(1, 1, SchedulePolicy::Fifo);
+        let mut plan = StepPlan::new();
+        sess.record_gemm(&mut plan, &PlanOp::new(size), &a, &b, &mut c)
+            .unwrap();
+        sess.execute(&mut plan).unwrap();
+        let err = sess.execute(&mut plan).unwrap_err().to_string();
+        assert!(err.contains("already executed"), "{err}");
+        let err = sess
+            .record_gemm(&mut plan, &PlanOp::new(size), &a, &b, &mut c)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("already executed"), "{err}");
+    }
+
+    #[test]
+    fn plans_are_session_scoped() {
+        let size = ProblemSize::new(64, 64, 128);
+        let a = vec![1.0f32; 64 * 64];
+        let b = vec![1.0f32; 64 * 128];
+        let mut c = vec![0.0f32; 64 * 128];
+        let mut s1 = session(1, 1, SchedulePolicy::Fifo);
+        let mut s2 = session(1, 1, SchedulePolicy::Fifo);
+        let mut plan = StepPlan::new();
+        s1.record_gemm(&mut plan, &PlanOp::new(size), &a, &b, &mut c).unwrap();
+        let err = s2
+            .record_gemm(&mut plan, &PlanOp::new(size), &a, &b, &mut c)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("session-scoped"), "{err}");
+        let err = s2.execute(&mut plan).unwrap_err().to_string();
+        assert!(err.contains("session-scoped"), "{err}");
+        // The issuing session still executes it fine.
+        s1.execute(&mut plan).unwrap();
+    }
+
+    #[test]
+    fn unknown_dep_rejected() {
+        let size = ProblemSize::new(64, 64, 128);
+        let a = vec![1.0f32; 64 * 64];
+        let b = vec![1.0f32; 64 * 128];
+        let mut c = vec![0.0f32; 64 * 128];
+        let mut sess = session(1, 1, SchedulePolicy::Fifo);
+        let mut plan = StepPlan::new();
+        let err = sess
+            .record_gemm(
+                &mut plan,
+                &PlanOp::new(size).after(PlanNode(3)),
+                &a,
+                &b,
+                &mut c,
+            )
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("was never recorded"), "{err}");
+    }
+
+    #[test]
+    fn whole_step_batching_beats_ring_window_batching() {
+        // Alternating sizes, three rounds. An eager depth-2 BatchBySize
+        // ring only ever sees two staged ops (always one of each size), so
+        // it pays a reconfiguration per op; the plan window spans the whole
+        // step and batches each size once.
+        let s_a = ProblemSize::new(64, 64, 128);
+        let s_b = ProblemSize::new(128, 64, 128);
+        let a_a = vec![1.0f32; 64 * 64];
+        let a_b = vec![1.0f32; 128 * 64];
+        let b = vec![1.0f32; 64 * 128];
+        let mut c_a = vec![0.0f32; 64 * 128];
+        let mut c_b = vec![0.0f32; 128 * 128];
+
+        let mut eager = session(2, 1, SchedulePolicy::BatchBySize);
+        for _ in 0..3 {
+            let t0 = eager
+                .submit(&super::super::session::GemmOp::new(s_a), &a_a, &b)
+                .unwrap();
+            let t1 = eager
+                .submit(&super::super::session::GemmOp::new(s_b), &a_b, &b)
+                .unwrap();
+            eager.wait(t0, &mut c_a).unwrap();
+            eager.wait(t1, &mut c_b).unwrap();
+        }
+        let eager_reconfig = eager.modeled_stage_s(STAGE_RECONFIG);
+
+        let mut planned = session(2, 1, SchedulePolicy::BatchBySize);
+        let mut plan = StepPlan::new();
+        for _ in 0..3 {
+            planned
+                .record_gemm(&mut plan, &PlanOp::new(s_a), &a_a, &b, &mut c_a)
+                .unwrap();
+            planned
+                .record_gemm(&mut plan, &PlanOp::new(s_b), &a_b, &b, &mut c_b)
+                .unwrap();
+        }
+        let report = planned.execute(&mut plan).unwrap();
+        let plan_reconfig = planned.modeled_stage_s(STAGE_RECONFIG);
+        assert!(
+            plan_reconfig < eager_reconfig,
+            "whole-step batching must cut reconfig time: plan {plan_reconfig} vs \
+             eager ring {eager_reconfig}"
+        );
+        assert_eq!(report.reconfigs, 2, "one batch per size");
+        assert!(report.makespan_growth_s <= report.serial_growth_s + 1e-12);
+    }
+
+    #[test]
+    fn prefetch_hides_weight_staging_on_a_dependency_chain() {
+        // A strict chain (each op consumes the previous output): eagerly
+        // this is the serial schedule even on a deep ring, but a plan can
+        // still prefetch the next op's B staging under the current kernel.
+        let size = ProblemSize::new(128, 128, 256);
+        let a = vec![1.0f32; 128 * 128];
+        let b = vec![0.5f32; 128 * 256];
+        let mut c = vec![0.0f32; 128 * 256];
+
+        let mut eager = session(2, 1, SchedulePolicy::Fifo);
+        for _ in 0..4 {
+            eager.gemm(size, &a, &b, InputLayout::RowMajor, &mut c).unwrap();
+        }
+        let eager_makespan = eager.pipeline.makespan_s();
+
+        let mut planned = session(2, 1, SchedulePolicy::Fifo);
+        let mut plan = StepPlan::new();
+        for _ in 0..4 {
+            let mut op = PlanOp::new(size).prefetchable_b(true);
+            if let Some(h) = plan.chain_head() {
+                op = op.after(h);
+            }
+            let n = planned.record_gemm(&mut plan, &op, &a, &b, &mut c).unwrap();
+            plan.set_chain(n);
+        }
+        let report = planned.execute(&mut plan).unwrap();
+        assert_eq!(report.prefetched, 3, "every op but the first prefetches");
+        assert!(
+            planned.pipeline.makespan_s() < eager_makespan,
+            "prefetched weights must hide under kernels: plan {} vs eager {}",
+            planned.pipeline.makespan_s(),
+            eager_makespan
+        );
+        // Identical modeled work, only scheduled better.
+        assert!((planned.pipeline.serial_s() - eager.pipeline.serial_s()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn depth1_fifo_plan_is_the_serial_schedule() {
+        let size = ProblemSize::new(64, 64, 128);
+        let a = vec![1.0f32; 64 * 64];
+        let b = vec![1.0f32; 64 * 128];
+        let mut c = vec![0.0f32; 64 * 128];
+        let mut sess = session(1, 1, SchedulePolicy::Fifo);
+        let mut plan = StepPlan::new();
+        for _ in 0..3 {
+            sess.record_gemm(&mut plan, &PlanOp::new(size), &a, &b, &mut c)
+                .unwrap();
+        }
+        let report = sess.execute(&mut plan).unwrap();
+        assert_eq!(report.order, vec![0, 1, 2], "FIFO replay keeps record order");
+        assert_eq!(report.prefetched, 0, "depth 1 never prefetches");
+        assert!(
+            (sess.pipeline.makespan_s() - sess.pipeline.serial_s()).abs() < 1e-12,
+            "depth-1 FIFO plan is the strictly serial Figure-7 schedule"
+        );
+        assert_eq!(sess.pipeline.hidden_s(), 0.0);
+    }
+}

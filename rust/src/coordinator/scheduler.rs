@@ -12,8 +12,18 @@
 //! window it returns an execution order. [`SchedulePolicy::Fifo`]
 //! preserves submission order (Figure-7 fidelity); with
 //! [`SchedulePolicy::BatchBySize`] it greedily keeps running the size the
-//! array is currently configured for, falling back to the oldest ready
-//! op — never reordering across a declared dependency.
+//! array is currently configured for, then advances dependency *chains*
+//! (ops something downstream waits on), and only then starts a new batch
+//! from the oldest deferred leaf — never reordering across a declared
+//! dependency.
+//!
+//! The window is whatever the caller can see at once: the eager session
+//! passes its staged ring (at most `QueueDepth(k)` ops), while the
+//! step-plan replay (`coordinator::plan`) passes an *entire recorded
+//! training step* — there, dependency chains pin the activation stream in
+//! order while leaf ops (the backward weight gradients) float free, so
+//! batching groups every same-size leaf across what the ring treated as
+//! wait boundaries.
 
 use crate::gemm::sizes::ProblemSize;
 
@@ -90,6 +100,13 @@ impl Scheduler {
 
     fn batch_by_size(&self, window: &[WindowOp], current: Option<ProblemSize>) -> Vec<usize> {
         let in_window: Vec<u64> = window.iter().map(|w| w.seq).collect();
+        // An op with a dependent in the window is a *chain* op: something
+        // downstream is waiting on it. (While it is unpicked its
+        // dependents cannot be ready, so this static flag is exact.)
+        let has_dependent: Vec<bool> = window
+            .iter()
+            .map(|w| window.iter().any(|o| o.deps.contains(&w.seq)))
+            .collect();
         let mut done: Vec<u64> = Vec::with_capacity(window.len());
         let mut picked = vec![false; window.len()];
         let mut order = Vec::with_capacity(window.len());
@@ -102,10 +119,14 @@ impl Scheduler {
                         .iter()
                         .all(|d| done.contains(d) || !in_window.contains(d))
             };
-            // Oldest ready op of the currently configured size, else the
-            // oldest ready op of any size (which becomes the new batch).
+            // Oldest ready op of the currently configured size; else the
+            // oldest ready *chain* op (advancing the chain frees more ops
+            // while dependency-free leaves keep, so deferred leaves
+            // accumulate into same-size batches); else the oldest ready
+            // leaf, which starts the next batch.
             let next = (0..window.len())
                 .find(|&i| ready(i) && cur == Some(window[i].size))
+                .or_else(|| (0..window.len()).find(|&i| ready(i) && has_dependent[i]))
                 .or_else(|| (0..window.len()).find(|&i| ready(i)));
             match next {
                 Some(i) => {
@@ -190,6 +211,41 @@ mod tests {
         let pos = |seq: u64| order.iter().position(|&i| window[i].seq == seq).unwrap();
         assert!(pos(1) < pos(2), "dep must execute first: {order:?}");
         assert_eq!(order.len(), 3);
+    }
+
+    #[test]
+    fn step_shaped_window_batches_leaf_ops_across_the_chain() {
+        // A recorded backward pass in miniature: a dependency chain of
+        // dinp ops (sizes alternate by site) with a same-size dW leaf
+        // hanging off each chain node. Batching must keep the chain in
+        // order but gather all dW leaves into one batch.
+        let dinp_a = ProblemSize::new(64, 64, 128);
+        let dinp_b = ProblemSize::new(64, 128, 64);
+        let dw = ProblemSize::new(128, 64, 64);
+        let window = vec![
+            op(0, dinp_a),
+            WindowOp { seq: 1, size: dw, deps: vec![0] },
+            WindowOp { seq: 2, size: dinp_b, deps: vec![0] },
+            WindowOp { seq: 3, size: dw, deps: vec![2] },
+            WindowOp { seq: 4, size: dinp_a, deps: vec![2] },
+            WindowOp { seq: 5, size: dw, deps: vec![4] },
+        ];
+        let order = Scheduler::new(SchedulePolicy::BatchBySize).order(&window, None);
+        let pos = |seq: u64| order.iter().position(|&i| window[i].seq == seq).unwrap();
+        // Chain order respected.
+        assert!(pos(0) < pos(2) && pos(2) < pos(4));
+        assert!(pos(0) < pos(1) && pos(2) < pos(3) && pos(4) < pos(5));
+        // The three dW leaves execute adjacently: one reconfiguration.
+        let dw_pos: Vec<usize> = [1, 3, 5].iter().map(|&s| pos(s)).collect();
+        let (min, max) = (
+            *dw_pos.iter().min().unwrap(),
+            *dw_pos.iter().max().unwrap(),
+        );
+        assert_eq!(max - min, 2, "dW batch must be contiguous: {order:?}");
+        let switches = Scheduler::reconfigs(&window, &order, None);
+        let fifo_switches =
+            Scheduler::reconfigs(&window, &(0..window.len()).collect::<Vec<_>>(), None);
+        assert!(switches < fifo_switches, "{switches} vs {fifo_switches}");
     }
 
     #[test]

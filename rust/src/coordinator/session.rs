@@ -41,6 +41,7 @@ use crate::util::timer::StageTimer;
 use crate::xrt::{BufferObject, SyncDirection, XrtDevice};
 
 use super::device::{ComputeDevice, DeviceRun, SimulatorDevice};
+use super::plan::{PlanNode, PlanOp, PlannedOp, StepPlan, StepReport};
 use super::reconfig::{self, ReconfigPolicy};
 use super::scheduler::{SchedulePolicy, Scheduler, WindowOp};
 use super::transpose::transpose_into;
@@ -120,6 +121,54 @@ impl Shards {
     }
 }
 
+/// How the session chooses the shard count of each registered size.
+///
+/// `Fixed(Shards(s))` is the PR-2 behaviour: one global cap for every
+/// size (still clamped per size to its quantum-count divisors).
+/// `Auto` picks `Shards(s)` *per problem size* from the calibrated cost
+/// models: for every candidate divisor of the size's 128-column quantum
+/// count it models the invocation (host staging from [`HostStagingModel`],
+/// per-strip B-buffer syncs, the partition-scaled strip kernel from the
+/// NPU timing model, and the per-column output sync) and keeps the
+/// cheapest — so large-N sizes whose output sync dominates shard wide
+/// while small sizes, where per-strip sync overheads would outweigh the
+/// win, stay unsharded. CLI form: `--shards auto|N`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShardPolicy {
+    Fixed(Shards),
+    Auto,
+}
+
+impl Default for ShardPolicy {
+    fn default() -> Self {
+        ShardPolicy::Fixed(Shards::default())
+    }
+}
+
+impl std::str::FromStr for ShardPolicy {
+    type Err = String;
+
+    /// CLI form: `auto` | `N` (shared by the binary and the examples).
+    fn from_str(s: &str) -> std::result::Result<ShardPolicy, String> {
+        match s {
+            "auto" => Ok(ShardPolicy::Auto),
+            n => n
+                .parse::<usize>()
+                .map(|n| ShardPolicy::Fixed(Shards(n)))
+                .map_err(|_| format!("unknown shards '{n}' (expected auto|N)")),
+        }
+    }
+}
+
+impl std::fmt::Display for ShardPolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ShardPolicy::Fixed(s) => write!(f, "{}", s.get()),
+            ShardPolicy::Auto => write!(f, "auto"),
+        }
+    }
+}
+
 /// Typed descriptor of one offloaded GEMM (replaces the old positional
 /// `submit(size, a, a_layout, b, b_layout)` argument list).
 #[derive(Debug, Clone)]
@@ -182,7 +231,7 @@ pub struct SessionConfig {
     /// Where GEMM numerics execute.
     pub device: Box<dyn ComputeDevice>,
     pub depth: QueueDepth,
-    pub shards: Shards,
+    pub shards: ShardPolicy,
     pub schedule: SchedulePolicy,
 }
 
@@ -192,7 +241,7 @@ impl Default for SessionConfig {
             policy: ReconfigPolicy::Minimal,
             device: Box::new(SimulatorDevice),
             depth: QueueDepth::default(),
-            shards: Shards::default(),
+            shards: ShardPolicy::default(),
             schedule: SchedulePolicy::Fifo,
         }
     }
@@ -333,7 +382,10 @@ pub struct OffloadSession {
     device: Box<dyn ComputeDevice>,
     policy: ReconfigPolicy,
     depth: usize,
+    /// Shard-count *cap* (timeline column count): the fixed count, or the
+    /// full shim-column width under [`ShardPolicy::Auto`].
     shards: usize,
+    shard_policy: ShardPolicy,
     scheduler: Scheduler,
     id: u64,
     registry: BTreeMap<ProblemSize, Prepared>,
@@ -405,6 +457,74 @@ fn stage_a(
             (t0.elapsed(), true)
         }
     }
+}
+
+/// Stage `a` and `b` into `slot`'s BOs — the shared front half of the
+/// eager submit and the plan record paths. On a depth-1 ring the copies
+/// run sequentially (Figure-7 stage order); deeper rings stage A and the
+/// B strips concurrently into the slot's disjoint BOs, rescaling the
+/// per-side durations to sum to the join2 span rather than
+/// double-counting it. Returns ((a_wall, a_transposed), (b_wall,
+/// b_transposed)).
+fn stage_slot_inputs(
+    prep: &mut Prepared,
+    slot: usize,
+    a: &[f32],
+    a_layout: InputLayout,
+    b: &[f32],
+    b_layout: InputLayout,
+    size: ProblemSize,
+    k_p: usize,
+    concurrent: bool,
+) -> ((Duration, bool), (Duration, bool)) {
+    let (m, k, n) = (size.m, size.k, size.n);
+    let slot_bos = &mut prep.slots[slot];
+    let (a_bo, slot_strips) = (&mut slot_bos.a_bo, &mut slot_bos.strips);
+    let strips = &prep.strips;
+    if !concurrent {
+        (
+            stage_a(a_bo, a, a_layout, m, k, k_p),
+            stage_b_all(slot_strips, strips, b, b_layout, k, n),
+        )
+    } else {
+        let t0 = Instant::now();
+        let ((a_d, a_t), (b_d, b_t)) = join2(
+            || stage_a(a_bo, a, a_layout, m, k, k_p),
+            || stage_b_all(slot_strips, strips, b, b_layout, k, n),
+        );
+        let span = t0.elapsed().as_secs_f64();
+        let busy = (a_d.as_secs_f64() + b_d.as_secs_f64()).max(1e-12);
+        let scale = span / busy;
+        (
+            (Duration::from_secs_f64(a_d.as_secs_f64() * scale), a_t),
+            (Duration::from_secs_f64(b_d.as_secs_f64() * scale), b_t),
+        )
+    }
+}
+
+/// Merge `slot`'s strip outputs into the caller's M x N row-major buffer,
+/// dropping N padding — the shared back half of the eager wait and the
+/// plan record paths. Fails if a strip BO was left device-dirty; the
+/// caller recycles the slot either way.
+fn merge_strip_outputs(
+    prep: &mut Prepared,
+    slot: usize,
+    m: usize,
+    n: usize,
+    c: &mut [f32],
+) -> Result<()> {
+    for i in 0..prep.strips.len() {
+        let (n0, n1, n_p) = {
+            let st = &prep.strips[i];
+            (st.n0, st.n1, st.n_p)
+        };
+        let w = n1 - n0;
+        let c_host = prep.slots[slot].strips[i].c_bo.map()?;
+        for r in 0..m {
+            c[r * n + n0..r * n + n1].copy_from_slice(&c_host[r * n_p..r * n_p + w]);
+        }
+    }
+    Ok(())
 }
 
 /// Stage every strip of `b` into its slot BO (sequentially; the strips of
@@ -480,14 +600,19 @@ impl OffloadSession {
     /// V-A). More sizes can be registered later (lazily on first submit).
     pub fn new(cfg: SessionConfig, sizes: &[ProblemSize]) -> Result<OffloadSession> {
         // One strip per shim column at most — the array has no more
-        // independent column partitions to dispatch strips across.
-        let shards = cfg.shards.get().min(crate::gemm::tiling::GRID_COLS);
+        // independent column partitions to dispatch strips across. Auto
+        // selection may use the full column width.
+        let shards = match cfg.shards {
+            ShardPolicy::Fixed(s) => s.get().min(crate::gemm::tiling::GRID_COLS),
+            ShardPolicy::Auto => crate::gemm::tiling::GRID_COLS,
+        };
         let mut session = OffloadSession {
             dev: XrtDevice::open(),
             device: cfg.device,
             policy: cfg.policy,
             depth: cfg.depth.get(),
             shards,
+            shard_policy: cfg.shards,
             scheduler: Scheduler::new(cfg.schedule),
             id: NEXT_SESSION_ID.fetch_add(1, Ordering::Relaxed),
             registry: BTreeMap::new(),
@@ -531,11 +656,16 @@ impl OffloadSession {
         // Sizes whose quantum count has no friendly divisor shard less
         // (a prime count falls back to unsharded).
         let n_quanta = size.n.div_ceil(n_quantum);
-        let shard_cap = self.shards.min(n_quanta).max(1);
-        let s_eff = (1..=shard_cap)
-            .rev()
-            .find(|s| n_quanta % s == 0)
-            .unwrap_or(1);
+        let s_eff = match self.shard_policy {
+            ShardPolicy::Fixed(_) => {
+                let shard_cap = self.shards.min(n_quanta).max(1);
+                (1..=shard_cap)
+                    .rev()
+                    .find(|s| n_quanta % s == 0)
+                    .unwrap_or(1)
+            }
+            ShardPolicy::Auto => self.pick_shards(size, k_p, n_quantum, n_quanta),
+        };
         let quanta_per_strip = n_quanta / s_eff;
         let mut strips = Vec::with_capacity(s_eff);
         let mut variants: Vec<StripVariant> = Vec::new();
@@ -600,9 +730,72 @@ impl OffloadSession {
         Ok(())
     }
 
+    /// Pick the shard count for `size` under [`ShardPolicy::Auto`]: for
+    /// every candidate divisor of the quantum count (up to the shim-column
+    /// cap), model one invocation from the same calibrated sources the
+    /// session charges — [`HostStagingModel`] staging, the per-strip
+    /// B-buffer input syncs (a fixed driver cost per strip BO), the
+    /// partition-scaled strip kernel from the NPU timing model, and the
+    /// per-column output sync — and keep the cheapest, preferring fewer
+    /// strips on ties. Large-N sizes whose output sync dominates shard
+    /// wide; small sizes stay unsharded.
+    fn pick_shards(
+        &self,
+        size: ProblemSize,
+        k_p: usize,
+        n_quantum: usize,
+        n_quanta: usize,
+    ) -> usize {
+        let timing = &self.dev.npu.timing;
+        let sync = &self.dev.sync_cost;
+        // Host staging is the same total bytes at any strip count, but it
+        // keeps the score an honest "modeled invocation time".
+        let host_s = self.host_model.copy_s(size.m * size.k * 4)
+            + self.host_model.copy_s(size.k * size.n * 4)
+            + self.host_model.copy_s(size.m * size.n * 4);
+        let mut best = (1usize, f64::INFINITY);
+        for s in 1..=self.shards.min(n_quanta.max(1)) {
+            if n_quanta % s != 0 {
+                continue;
+            }
+            let n_p = (n_quanta / s) * n_quantum;
+            let Ok(t) = Tiling::paper(ProblemSize::new(size.m, k_p, n_p)) else {
+                continue;
+            };
+            let g = timing.gemm(&t);
+            // Equal strips stream concurrently, one per column: the
+            // invocation's device span is a single strip's — its kernel
+            // scaled by the 1/s partition share plus the per-strip fixed
+            // overheads and its own output sync.
+            let device_s = g.kernel_s * s as f64
+                + g.issue_s
+                + g.dispatch_s
+                + sync.cost_s(size.m * n_p * 4, SyncDirection::FromDevice);
+            // Every strip BO pays its own input-sync driver cost, on the
+            // host side, sequentially — the real price of sharding.
+            let sync_in_s = s as f64 * sync.cost_s(k_p * n_p * 4, SyncDirection::ToDevice);
+            let score = host_s + sync_in_s + device_s;
+            if score + 1e-15 < best.1 {
+                best = (s, score);
+            }
+        }
+        best.0
+    }
+
     /// Registered sizes in registry order.
     pub fn registered_sizes(&self) -> Vec<ProblemSize> {
         self.registry.keys().copied().collect()
+    }
+
+    /// The strip count a registered size was split into (None if the size
+    /// is not registered yet).
+    pub fn shards_for(&self, size: ProblemSize) -> Option<usize> {
+        self.registry.get(&size).map(|p| p.strips.len())
+    }
+
+    /// How the session chooses per-size shard counts.
+    pub fn shard_policy(&self) -> ShardPolicy {
+        self.shard_policy
     }
 
     /// This session's unique id (tickets are scoped to it).
@@ -712,37 +905,20 @@ impl OffloadSession {
             .expect("ring-full check guarantees a free slot");
         let k_p = prep.k_p;
 
-        // -- Stage 1: input copy (+ transpose where layouts demand). On a
-        //    depth-1 ring the copies run sequentially (Figure-7 fidelity);
-        //    deeper rings stage A and the B strips concurrently into the
-        //    slot's disjoint BOs. Either way the StageTimer records elapsed
-        //    wall time: the concurrent path's per-side durations overlap,
-        //    so they are rescaled to sum to the join2 span rather than
-        //    double-counting it.
-        let ((a_wall, a_transposed), (b_wall, b_transposed)) = {
-            let slot_bos = &mut prep.slots[slot];
-            let (a_bo, slot_strips) = (&mut slot_bos.a_bo, &mut slot_bos.strips);
-            let strips = &prep.strips;
-            if self.depth == 1 {
-                (
-                    stage_a(a_bo, a, op.a_layout, m, k, k_p),
-                    stage_b_all(slot_strips, strips, b, op.b_layout, k, n),
-                )
-            } else {
-                let t0 = Instant::now();
-                let ((a_d, a_t), (b_d, b_t)) = join2(
-                    || stage_a(a_bo, a, op.a_layout, m, k, k_p),
-                    || stage_b_all(slot_strips, strips, b, op.b_layout, k, n),
-                );
-                let span = t0.elapsed().as_secs_f64();
-                let busy = (a_d.as_secs_f64() + b_d.as_secs_f64()).max(1e-12);
-                let scale = span / busy;
-                (
-                    (Duration::from_secs_f64(a_d.as_secs_f64() * scale), a_t),
-                    (Duration::from_secs_f64(b_d.as_secs_f64() * scale), b_t),
-                )
-            }
-        };
+        // -- Stage 1: input copy (+ transpose where layouts demand), via
+        //    the shared staging front half (sequential at depth 1 for
+        //    Figure-7 fidelity, concurrent on deeper rings). -------------
+        let ((a_wall, a_transposed), (b_wall, b_transposed)) = stage_slot_inputs(
+            &mut prep,
+            slot,
+            a,
+            op.a_layout,
+            b,
+            op.b_layout,
+            size,
+            k_p,
+            self.depth > 1,
+        );
         let a_stage = if a_transposed {
             STAGE_TRANSPOSE
         } else {
@@ -1009,27 +1185,12 @@ impl OffloadSession {
 
         // -- Stage 6: output copy — merge the strips, dropping N padding. --
         let t6 = Instant::now();
-        for i in 0..prep.strips.len() {
-            let (n0, n1, n_p) = {
-                let st = &prep.strips[i];
-                (st.n0, st.n1, st.n_p)
-            };
-            let w = n1 - n0;
-            match prep.slots[p.slot].strips[i].c_bo.map() {
-                Ok(c_host) => {
-                    for r in 0..m {
-                        c[r * n + n0..r * n + n1]
-                            .copy_from_slice(&c_host[r * n_p..r * n_p + w]);
-                    }
-                }
-                Err(e) => {
-                    // The result is unretrievable; free the slot before
-                    // abandoning the op so the ring stays whole.
-                    prep.free.push_back(p.slot);
-                    self.registry.insert(size, prep);
-                    return Err(e);
-                }
-            }
+        if let Err(e) = merge_strip_outputs(&mut prep, p.slot, m, n, c) {
+            // The result is unretrievable; free the slot before abandoning
+            // the op so the ring stays whole.
+            prep.free.push_back(p.slot);
+            self.registry.insert(size, prep);
+            return Err(e);
         }
         self.stages.add(STAGE_OUTPUT_COPY, t6.elapsed());
         let host_post = self.host_model.copy_s(m * n * 4);
@@ -1054,16 +1215,426 @@ impl OffloadSession {
         Ok(stats)
     }
 
+    /// Record one GEMM into `plan` (the record half of the
+    /// record→schedule→execute seam; see [`super::plan`]).
+    ///
+    /// The numerics run *now* — stage, kernel, merge, bit-for-bit the
+    /// eager invocation path, filling `c` so the model's interleaved CPU
+    /// ops can consume the result — but none of the modeled schedule is
+    /// charged: every stage duration is captured into the plan, and
+    /// [`Self::execute`] later replays the whole step in scheduler order.
+    /// Wallclock stage accounting (the work really happens here) still
+    /// accrues to [`Self::stages`].
+    pub fn record_gemm(
+        &mut self,
+        plan: &mut StepPlan,
+        op: &PlanOp,
+        a: &[f32],
+        b: &[f32],
+        c: &mut [f32],
+    ) -> Result<PlanNode> {
+        let size = op.size;
+        let (m, k, n) = (size.m, size.k, size.n);
+        if a.len() != m * k || b.len() != k * n || c.len() != m * n {
+            return Err(Error::shape(format!(
+                "plan gemm {size}: got A={} B={} C={}",
+                a.len(),
+                b.len(),
+                c.len()
+            )));
+        }
+        if plan.executed {
+            return Err(Error::config(
+                "plan was already executed; record into a fresh StepPlan",
+            ));
+        }
+        for d in &op.deps {
+            if d.index() >= plan.ops.len() {
+                return Err(Error::config(format!(
+                    "dependency plan node #{} was never recorded into this plan",
+                    d.index()
+                )));
+            }
+        }
+        if !self.pending.is_empty() {
+            return Err(Error::config(format!(
+                "cannot record a plan op with {} eager submission(s) in flight: \
+                 wait() them first",
+                self.pending.len()
+            )));
+        }
+        match plan.session {
+            None => plan.session = Some(self.id),
+            Some(sid) if sid != self.id => {
+                return Err(Error::config(format!(
+                    "plan was recorded on offload session #{sid}, not session #{}; \
+                     plans are session-scoped",
+                    self.id
+                )))
+            }
+            Some(_) => {}
+        }
+        if !plan.started {
+            plan.started = true;
+            plan.initial_strip = self.current_strip;
+            plan.initial_logical = self.current_logical;
+        }
+        if !self.registry.contains_key(&size) {
+            self.register_size(size)?;
+        }
+        let t_wall = Instant::now();
+        let mut prep = self.registry.remove(&size).expect("registered above");
+        let slot = prep
+            .free
+            .pop_front()
+            .expect("no eager work in flight: a slot is free");
+        let k_p = prep.k_p;
+
+        // -- Host staging, via the shared staging front half: sequential
+        //    on a depth-1 ring (the recorded Figure-7 stage order),
+        //    concurrent wallclock on deeper rings exactly like the eager
+        //    path. The *modeled* host durations below are
+        //    concurrency-independent either way. -------------------------
+        let ((a_wall, a_transposed), (b_wall, b_transposed)) = stage_slot_inputs(
+            &mut prep,
+            slot,
+            a,
+            op.a_layout,
+            b,
+            op.b_layout,
+            size,
+            k_p,
+            self.depth > 1,
+        );
+        let a_stage = if a_transposed {
+            STAGE_TRANSPOSE
+        } else {
+            STAGE_INPUT_COPY
+        };
+        let b_stage = if b_transposed {
+            STAGE_TRANSPOSE
+        } else {
+            STAGE_INPUT_COPY
+        };
+        self.stages.add(a_stage, a_wall);
+        self.stages.add(b_stage, b_wall);
+        let host_a_s = if a_transposed {
+            self.host_model.transpose_s(m * k * 4)
+        } else {
+            self.host_model.copy_s(m * k * 4)
+        };
+        let host_b_s = if b_transposed {
+            self.host_model.transpose_s(k * n * 4)
+        } else {
+            self.host_model.copy_s(k * n * 4)
+        };
+
+        let t_sync = Instant::now();
+        let sync_in_s = {
+            let slot_bos = &mut prep.slots[slot];
+            let mut total = self.dev.sync_bo(&mut slot_bos.a_bo, SyncDirection::ToDevice);
+            for ss in slot_bos.strips.iter_mut() {
+                total += self.dev.sync_bo(&mut ss.b_bo, SyncDirection::ToDevice);
+            }
+            total
+        };
+        self.stages.add(STAGE_INPUT_SYNC, t_sync.elapsed());
+
+        // -- Device stages: program the array (functionally — the modeled
+        //    reconfiguration charge is the replay's to decide), run every
+        //    strip, capture its span. ------------------------------------
+        let mut rec_applied = 0.0f64;
+        let mut strips: Vec<(f64, f64)> = Vec::with_capacity(prep.strips.len());
+        let mut energy_j = 0.0f64;
+        let strip_size = prep.variants[prep.strips[0].variant].tiling.size;
+        let mut run_err = None;
+        for i in 0..prep.strips.len() {
+            let v = prep.strips[i].variant;
+            let vsize = prep.variants[v].tiling.size;
+            if self.current_strip != Some(vsize) {
+                let t3 = Instant::now();
+                match reconfig::apply(
+                    self.policy,
+                    &mut self.dev,
+                    &prep.variants[v].tiling,
+                    &prep.variants[v].inst,
+                ) {
+                    Ok(cost) => rec_applied += cost,
+                    Err(e) => {
+                        run_err = Some(e);
+                        break;
+                    }
+                }
+                self.stages.add(STAGE_RECONFIG, t3.elapsed());
+                self.current_strip = Some(vsize);
+            }
+            let t4 = Instant::now();
+            let span = {
+                let slot_bos = &mut prep.slots[slot];
+                let a_bo = &slot_bos.a_bo;
+                let ss = &mut slot_bos.strips[i];
+                match self.device.run(DeviceRun {
+                    xrt: &mut self.dev,
+                    tiling: &prep.variants[v].tiling,
+                    logical: prep.strips[i].logical,
+                    a: a_bo,
+                    b: &ss.b_bo,
+                    c: &mut ss.c_bo,
+                }) {
+                    Ok(span) => span,
+                    Err(e) => {
+                        run_err = Some(e);
+                        break;
+                    }
+                }
+            };
+            self.stages.add(STAGE_KERNEL, t4.elapsed());
+            let t5 = Instant::now();
+            let so = self
+                .dev
+                .sync_bo(&mut prep.slots[slot].strips[i].c_bo, SyncDirection::FromDevice);
+            self.stages.add(STAGE_OUTPUT_SYNC, t5.elapsed());
+            strips.push((span.on_partition(prep.strips.len()), so));
+            energy_j += span.energy_j;
+        }
+        if let Some(e) = run_err {
+            prep.free.push_back(slot);
+            self.registry.insert(size, prep);
+            return Err(e);
+        }
+        self.current_logical = Some(size);
+
+        // -- Merge the strip outputs into `c`, dropping N padding. --------
+        let t6 = Instant::now();
+        if let Err(e) = merge_strip_outputs(&mut prep, slot, m, n, c) {
+            prep.free.push_back(slot);
+            self.registry.insert(size, prep);
+            return Err(e);
+        }
+        self.stages.add(STAGE_OUTPUT_COPY, t6.elapsed());
+        prep.free.push_back(slot);
+        self.registry.insert(size, prep);
+
+        // Steady-state cost of switching the array to this op's variant —
+        // what the replay charges at every size change it schedules. The
+        // one-time remainder (the first-ever xclbin load under the minimal
+        // policy) rides on whichever op heads the replay's first switch.
+        let timing = &self.dev.npu.timing;
+        let reconfig_switch_s = match self.policy {
+            ReconfigPolicy::Minimal => timing.minimal_reconfig_s,
+            ReconfigPolicy::FullArray => timing.full_reconfig_s + timing.minimal_reconfig_s,
+        };
+        let reconfig_once_s = (rec_applied - reconfig_switch_s).max(0.0);
+        plan.ops.push(PlannedOp {
+            size,
+            strip_size,
+            deps: op.deps.iter().map(|d| d.index()).collect(),
+            prefetch_b: op.prefetch_b,
+            host_a_s,
+            host_b_s,
+            sync_in_s,
+            reconfig_switch_s,
+            reconfig_once_s,
+            strips,
+            host_post_s: self.host_model.copy_s(m * n * 4),
+            energy_j,
+            wall_s: t_wall.elapsed().as_secs_f64(),
+        });
+        Ok(PlanNode(plan.ops.len() - 1))
+    }
+
+    /// Schedule and charge a recorded step (the schedule+execute half of
+    /// the record→schedule→execute seam).
+    ///
+    /// The scheduler orders the *entire* step window within its declared
+    /// dependencies — [`SchedulePolicy::BatchBySize`] batches same-size
+    /// ops across what the eager ring treated as wait boundaries — and the
+    /// replay walks that order on the modeled timeline: activation staging
+    /// waits for its dependencies' merged outputs, at most
+    /// [`QueueDepth`] invocations stay in flight, prefetchable B staging
+    /// (weights) is hoisted under the previous invocation's kernel (rings
+    /// of depth ≥ 2 only), reconfigurations barrier the array exactly
+    /// where the chosen order switches strip variants, and every stage
+    /// statistic (modeled stage seconds, invocation counts, energy,
+    /// per-size records) accrues as the eager path would have charged it.
+    ///
+    /// On a depth-1 unsharded FIFO session the replay is stage-for-stage
+    /// the strictly serial Figure-7 schedule — identical timeline, stage
+    /// totals, and statistics to driving [`Self::gemm`] eagerly.
+    pub fn execute(&mut self, plan: &mut StepPlan) -> Result<StepReport> {
+        if plan.executed {
+            return Err(Error::config(
+                "plan was already executed; record a fresh step",
+            ));
+        }
+        if let Some(sid) = plan.session {
+            if sid != self.id {
+                return Err(Error::config(format!(
+                    "plan was recorded on offload session #{sid}, not session #{}; \
+                     plans are session-scoped",
+                    self.id
+                )));
+            }
+        }
+        if !self.pending.is_empty() {
+            return Err(Error::config(format!(
+                "cannot execute a plan with {} eager submission(s) in flight: \
+                 wait() them first",
+                self.pending.len()
+            )));
+        }
+        plan.executed = true;
+        let serial_before = self.pipeline.serial_s();
+        let makespan_before = self.pipeline.makespan_s();
+        let n = plan.ops.len();
+        if n == 0 {
+            return Ok(StepReport {
+                stats: Vec::new(),
+                order: Vec::new(),
+                serial_growth_s: 0.0,
+                makespan_growth_s: 0.0,
+                reconfigs: 0,
+                prefetched: 0,
+                energy_j: 0.0,
+            });
+        }
+        let window: Vec<WindowOp> = plan
+            .ops
+            .iter()
+            .enumerate()
+            .map(|(i, op)| WindowOp {
+                seq: i as u64,
+                size: op.size,
+                deps: op.deps.iter().map(|&d| d as u64).collect(),
+            })
+            .collect();
+        let order = self.scheduler.order(&window, plan.initial_logical);
+        let prefetch_ok = self.depth >= 2;
+        let scale = self.device_time_scale;
+
+        let mut dev_done = vec![0.0f64; n];
+        let mut retired = vec![false; n];
+        let mut prefetched = vec![false; n];
+        let mut in_flight: VecDeque<usize> = VecDeque::new();
+        let mut replay_strip = plan.initial_strip;
+        let mut once_pool: f64 = plan.ops.iter().map(|o| o.reconfig_once_s).sum();
+        let mut reconfigs = 0usize;
+        let mut stats: Vec<Option<InvocationStats>> = vec![None; n];
+        let mut energy = 0.0f64;
+
+        for (pos, &idx) in order.iter().enumerate() {
+            // The op's activation staging cannot begin before every
+            // dependency's output is merged back; retire those first, then
+            // make room in the ring.
+            for &d in &plan.ops[idx].deps {
+                if !retired[d] {
+                    self.pipeline.wait(dev_done[d], plan.ops[d].host_post_s);
+                    retired[d] = true;
+                    in_flight.retain(|&x| x != d);
+                }
+            }
+            while in_flight.len() >= self.depth {
+                let d = in_flight.pop_front().expect("non-empty");
+                self.pipeline.wait(dev_done[d], plan.ops[d].host_post_s);
+                retired[d] = true;
+            }
+            let op = &plan.ops[idx];
+            // Same float summation order as the eager submit path
+            // ((a + b) + sync) so depth-1 FIFO replay is bit-exact.
+            let pre = if prefetched[idx] {
+                op.host_a_s + op.sync_in_s
+            } else {
+                op.host_a_s + op.host_b_s + op.sync_in_s
+            };
+            let ready = self.pipeline.stage(pre);
+            let mut rc = 0.0;
+            if replay_strip != Some(op.strip_size) {
+                rc = op.reconfig_switch_s + once_pool;
+                once_pool = 0.0;
+                replay_strip = Some(op.strip_size);
+                reconfigs += 1;
+                self.pipeline.barrier(ready, rc * scale);
+            }
+            self.add_modeled(STAGE_RECONFIG, rc);
+            self.add_modeled(STAGE_INPUT_SYNC, op.sync_in_s);
+            let mut done = ready;
+            for (col, &(kernel_s, sync_out_s)) in op.strips.iter().enumerate() {
+                let span_s = (kernel_s + sync_out_s) * scale;
+                done = done.max(self.pipeline.run_on(col, ready, span_s));
+                self.add_modeled(STAGE_KERNEL, kernel_s);
+                self.add_modeled(STAGE_OUTPUT_SYNC, sync_out_s);
+            }
+            dev_done[idx] = done;
+            in_flight.push_back(idx);
+            // Hoist the next scheduled op's known-ahead B staging under
+            // this op's kernel (the forward-pass weight prefetch).
+            if let Some(&next) = order.get(pos + 1) {
+                if prefetch_ok && plan.ops[next].prefetch_b && !prefetched[next] {
+                    self.pipeline.stage(plan.ops[next].host_b_s);
+                    prefetched[next] = true;
+                }
+            }
+            let st = InvocationStats {
+                size: op.size,
+                modeled_kernel_s: op.kernel_s(),
+                modeled_sync_in_s: op.sync_in_s,
+                modeled_sync_out_s: op.sync_out_s(),
+                modeled_reconfig_s: rc,
+                modeled_energy_j: op.energy_j,
+                wall_s: op.wall_s,
+            };
+            energy += op.energy_j;
+            self.modeled_energy_j += op.energy_j;
+            self.invocations += 1;
+            if let Some(prep) = self.registry.get_mut(&op.size) {
+                prep.invocations += 1;
+                prep.wall_s += op.wall_s;
+                prep.modeled_s += st.modeled_total_s();
+            }
+            stats[idx] = Some(st);
+        }
+        // Drain the remaining output copies in ring order.
+        while let Some(d) = in_flight.pop_front() {
+            if !retired[d] {
+                self.pipeline.wait(dev_done[d], plan.ops[d].host_post_s);
+                retired[d] = true;
+            }
+        }
+        // The physical array state is the *record*-order end state
+        // (record programmed the array; the replay is modeled), and
+        // record_gemm already advanced current_strip/current_logical to
+        // it — so both the next plan's replay start and the next
+        // scheduling anchor stay consistent with the hardware.
+        let stats: Vec<InvocationStats> = stats
+            .into_iter()
+            .map(|s| s.expect("every recorded op is scheduled"))
+            .collect();
+        Ok(StepReport {
+            stats,
+            order,
+            serial_growth_s: self.pipeline.serial_s() - serial_before,
+            makespan_growth_s: self.pipeline.makespan_s() - makespan_before,
+            reconfigs,
+            prefetched: prefetched.iter().filter(|&&p| p).count(),
+            energy_j: energy,
+        })
+    }
+
     /// Offloaded GEMM: `c = a · b` with `a` given in `a_layout` relative
     /// to M x K and `b` in `b_layout` relative to K x N. Writes the M x N
     /// row-major result into `c`.
     ///
-    /// This is the complete paper section V-B invocation path — a submit
-    /// immediately followed by its wait; on a depth-1 session it is
-    /// bit-for-bit the strictly serial Figure-7 schedule. Backward
-    /// weight-gradient GEMMs pass `a_layout = Transposed` (dout^T), which
-    /// is the "inconsistent data layouts across invocations" the paper
-    /// fixes with CPU-side transposes during the copy.
+    /// This is the complete paper section V-B invocation path, kept as a
+    /// thin compatibility layer over a *one-op step plan* (record
+    /// immediately followed by execute); on a depth-1 session it is
+    /// bit-for-bit and stage-for-stage the strictly serial Figure-7
+    /// schedule. When eager submissions are already in flight (a plan
+    /// needs exclusive use of the array state) it degrades to the
+    /// windowed submit+wait path, preserving the PR-2 interleaving
+    /// contract. Backward weight-gradient GEMMs pass
+    /// `a_layout = Transposed` (dout^T), which is the "inconsistent data
+    /// layouts across invocations" the paper fixes with CPU-side
+    /// transposes during the copy.
     pub fn gemm_ex(
         &mut self,
         size: ProblemSize,
@@ -1081,11 +1652,21 @@ impl OffloadSession {
                 c.len()
             )));
         }
-        let op = GemmOp::new(size)
+        if !self.pending.is_empty() {
+            let op = GemmOp::new(size)
+                .with_a_layout(a_layout)
+                .with_b_layout(b_layout);
+            let ticket = self.submit(&op, a, b)?;
+            return self.wait(ticket, c);
+        }
+        let mut plan = StepPlan::new();
+        let op = PlanOp::new(size)
             .with_a_layout(a_layout)
             .with_b_layout(b_layout);
-        let ticket = self.submit(&op, a, b)?;
-        self.wait(ticket, c)
+        self.record_gemm(&mut plan, &op, a, b, c)?;
+        let report = self.execute(&mut plan)?;
+        let stats = report.stats.into_iter().next();
+        Ok(stats.expect("one-op plan yields one stat"))
     }
 
     /// Common case: `a` row-major, `b` in `b_layout`.
@@ -1152,7 +1733,7 @@ mod tests {
         OffloadSession::new(
             SessionConfig {
                 depth: QueueDepth(depth),
-                shards: Shards(shards),
+                shards: ShardPolicy::Fixed(Shards(shards)),
                 schedule,
                 ..Default::default()
             },
@@ -1334,6 +1915,26 @@ mod tests {
     }
 
     #[test]
+    fn gemm_interleaves_with_in_flight_submissions() {
+        // The PR-2 contract: a blocking gemm between a submit and its wait
+        // still works on a deep ring (it degrades to submit+wait rather
+        // than recording a plan).
+        let size = ProblemSize::new(64, 64, 128);
+        let a1 = vec![1.0f32; 64 * 64];
+        let a2 = vec![2.0f32; 64 * 64];
+        let b = vec![1.0f32; 64 * 128];
+        let mut sess = session(2, 1, SchedulePolicy::Fifo);
+        let t = sess.submit(&GemmOp::new(size), &a1, &b).unwrap();
+        let mut c2 = vec![0.0f32; 64 * 128];
+        sess.gemm(size, &a2, &b, InputLayout::RowMajor, &mut c2).unwrap();
+        assert!(c2.iter().all(|&x| (x - 128.0).abs() < 1e-2), "c2[0]={}", c2[0]);
+        let mut c1 = vec![0.0f32; 64 * 128];
+        sess.wait(t, &mut c1).unwrap();
+        assert!(c1.iter().all(|&x| (x - 64.0).abs() < 1e-2), "c1[0]={}", c1[0]);
+        assert_eq!(sess.invocations, 2);
+    }
+
+    #[test]
     fn cross_session_deps_rejected() {
         let size = ProblemSize::new(64, 64, 128);
         let a = vec![1.0f32; 64 * 64];
@@ -1499,8 +2100,9 @@ mod tests {
         sess.wait(t0, &mut c_a).unwrap();
         sess.wait(t1, &mut c_b).unwrap();
         sess.wait(t2, &mut c_a).unwrap();
-        // With the dependency the batcher cannot merge the two size-A ops,
-        // so the window pays three reconfigurations (A, B, A).
+        // The batcher advances the chain first (t1 is a dependency of t2),
+        // so the two size-A ops merge into one batch behind it — but never
+        // by pulling t2 ahead of t1.
         assert_eq!(sess.invocations, 3);
         assert!(c_a.iter().all(|&x| (x - 64.0).abs() < 1e-2));
     }
@@ -1515,6 +2117,84 @@ mod tests {
         assert!(sess.gemm(size, &a, &b, InputLayout::RowMajor, &mut c).is_err());
     }
 
+    fn auto_session() -> OffloadSession {
+        OffloadSession::new(
+            SessionConfig {
+                shards: ShardPolicy::Auto,
+                ..Default::default()
+            },
+            &[],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn shard_policy_parses_cli_forms() {
+        assert_eq!("auto".parse::<ShardPolicy>(), Ok(ShardPolicy::Auto));
+        assert_eq!(
+            "4".parse::<ShardPolicy>(),
+            Ok(ShardPolicy::Fixed(Shards(4)))
+        );
+        assert!("wide".parse::<ShardPolicy>().is_err());
+        assert_eq!(ShardPolicy::Auto.to_string(), "auto");
+        assert_eq!(ShardPolicy::Fixed(Shards(2)).to_string(), "2");
+    }
+
+    #[test]
+    fn auto_sharding_is_bit_identical_and_never_modeled_slower_than_any_fixed_count() {
+        // Per size, the auto pick must match the cheapest fixed candidate:
+        // a single-invocation session's modeled makespan under Auto is <=
+        // the makespan under every fixed shard count.
+        for &size in &[
+            ProblemSize::new(64, 64, 512),
+            ProblemSize::new(128, 128, 256),
+            ProblemSize::new(64, 256, 1024),
+            ProblemSize::new(64, 64, 100),
+        ] {
+            let mut rng = Rng::new(31);
+            let a = prop::gen::normal_vec(&mut rng, size.m * size.k);
+            let b = prop::gen::normal_vec(&mut rng, size.k * size.n);
+            let mut c_ref = vec![0.0f32; size.m * size.n];
+            session(1, 1, SchedulePolicy::Fifo)
+                .gemm(size, &a, &b, InputLayout::RowMajor, &mut c_ref)
+                .unwrap();
+            let mut auto = auto_session();
+            let mut c_auto = vec![0.0f32; size.m * size.n];
+            auto.gemm(size, &a, &b, InputLayout::RowMajor, &mut c_auto).unwrap();
+            assert_eq!(c_ref, c_auto, "{size}: auto sharding must not change numerics");
+            let auto_makespan = auto.pipeline.makespan_s();
+            for s in 1..=4 {
+                let mut fixed = session(1, s, SchedulePolicy::Fifo);
+                let mut c = vec![0.0f32; size.m * size.n];
+                fixed.gemm(size, &a, &b, InputLayout::RowMajor, &mut c).unwrap();
+                assert!(
+                    auto_makespan <= fixed.pipeline.makespan_s() + 1e-12,
+                    "{size}: auto ({} strips, {auto_makespan}) beaten by fixed {s} ({})",
+                    auto.shards_for(size).unwrap(),
+                    fixed.pipeline.makespan_s()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn auto_sharding_differentiates_by_size() {
+        // A single-quantum N cannot shard; the vocab-sized lm-head GEMM
+        // (its huge output sync amortizes across columns) should.
+        let tiny = ProblemSize::new(64, 64, 128);
+        let vocab = ProblemSize::new(256, 768, 50304);
+        let mut sess = auto_session();
+        sess.register_size(tiny).unwrap();
+        sess.register_size(vocab).unwrap();
+        assert_eq!(sess.shards_for(tiny), Some(1), "one quantum cannot split");
+        assert!(
+            sess.shards_for(vocab).unwrap() > 1,
+            "the vocab GEMM's output sync should amortize across columns, got {:?}",
+            sess.shards_for(vocab)
+        );
+        assert_eq!(sess.shard_policy(), ShardPolicy::Auto);
+    }
+
     #[test]
     fn cpu_ref_device_runs_the_whole_session_stack() {
         use super::super::device::CpuRefDevice;
@@ -1525,7 +2205,7 @@ mod tests {
         let mut sess = OffloadSession::new(
             SessionConfig {
                 device: Box::new(CpuRefDevice::default()),
-                shards: Shards(2),
+                shards: ShardPolicy::Fixed(Shards(2)),
                 ..Default::default()
             },
             &[size],

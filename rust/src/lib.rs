@@ -17,13 +17,17 @@
 //!   buffer objects with explicit sync, kernel runs.
 //! * [`gemm`] — tiling math, bf16 substrate, the CPU (llm.c-style) GEMM
 //!   baseline, and the problem-size registry of GPT-2 124M.
-//! * [`coordinator`] — the paper's contribution as a layered offload API:
+//! * [`coordinator`] — the paper's contribution as a layered
+//!   record→schedule→execute offload API:
 //!   [`coordinator::device::ComputeDevice`] (numerics: simulator, CPU bf16
 //!   oracle, or PJRT artifacts), [`coordinator::session::OffloadSession`]
-//!   (per-size registry, k-deep submission ring, N-dimension sharding,
-//!   session-scoped tickets), and [`coordinator::scheduler::Scheduler`]
-//!   (reconfig-aware batching). The PR-1 `GemmOffloadEngine` remains as a
-//!   thin shim over a depth-1/2 session.
+//!   (per-size registry, k-deep submission ring, fixed or cost-model-chosen
+//!   N-dimension sharding, session-scoped tickets),
+//!   [`coordinator::plan::StepPlan`] (record a whole training step, then
+//!   schedule it at once — whole-step batching + weight-staging prefetch),
+//!   and [`coordinator::scheduler::Scheduler`] (reconfig-aware batching).
+//!   The PR-1 `GemmOffloadEngine` remains as a thin shim over a depth-1/2
+//!   session.
 //! * [`model`] — an llm.c port: GPT-2 forward/backward/AdamW in pure Rust
 //!   with every matmul dispatched through the offload engine.
 //! * [`runtime`] — the artifact manifest ABI and (behind the `pjrt` cargo

@@ -12,7 +12,7 @@
 use xdna_repro::bench as paperbench;
 use xdna_repro::coordinator::engine::ExecMode;
 use xdna_repro::coordinator::session::{
-    InputLayout, OffloadSession, QueueDepth, SessionConfig, Shards,
+    InputLayout, OffloadSession, QueueDepth, SessionConfig, ShardPolicy,
 };
 use xdna_repro::coordinator::{ReconfigPolicy, SchedulePolicy};
 use xdna_repro::gemm::sizes::{distinct_sizes, ModelDims, ProblemSize};
@@ -32,9 +32,10 @@ USAGE:
                       [--batch B] [--seq T] [--backend cpu|npu]
                       [--power mains|battery] [--policy minimal|full]
                       [--mode serial|pipelined] [--queue-depth K]
-                      [--shards S] [--schedule fifo|batch]
+                      [--shards auto|N] [--schedule fifo|batch] [--plan]
                       [--save ckpt.bin] [--seed S]
-  xdna-repro gemm     [--m M --k K --n N] [--backend cpu|npu] [--shards S]
+  xdna-repro gemm     [--m M --k K --n N] [--backend cpu|npu]
+                      [--shards auto|N]
   xdna-repro generate [--config d2|d4|d6] [--load ckpt.bin] [--tokens N]
                       [--temperature F]
   xdna-repro bench    [fig6|fig7|fig8|fig9|pipeline|reconfig|accuracy|all]
@@ -43,8 +44,12 @@ USAGE:
 
   --mode sets the legacy schedule (serial = queue depth 1, pipelined = 2);
   --queue-depth overrides it with a k-deep submission ring, --shards splits
-  each GEMM's N across simulated shim columns, and --schedule batch lets
-  the scheduler reorder the ring window to amortize reconfigurations.
+  each GEMM's N across simulated shim columns (auto picks a per-size count
+  from the cost models), and --schedule batch lets the scheduler reorder
+  its window to amortize reconfigurations. --plan records each training
+  step as a StepPlan and schedules it whole (record->schedule->execute):
+  the scheduler batches across the entire step and the next invocation's
+  weight staging prefetches under the current kernel.
 ";
 
 fn main() {
@@ -60,7 +65,7 @@ fn main() {
 }
 
 fn dispatch(raw: Vec<String>) -> Result<()> {
-    let args = Args::parse(raw, &["help"])?;
+    let args = Args::parse(raw, &["help", "plan"])?;
     if args.flag("help") || args.positional.is_empty() {
         print!("{USAGE}");
         return Ok(());
@@ -94,11 +99,12 @@ fn cmd_train(args: &Args) -> Result<()> {
         "pipelined" => ExecMode::Pipelined,
         m => return Err(Error::config(format!("unknown exec mode '{m}'"))),
     };
-    // QueueDepth/Shards clamp 0 to 1 themselves; SchedulePolicy's FromStr
-    // is the one parser both the CLI and the finetune example use.
+    // QueueDepth clamps 0 to 1 itself; ShardPolicy's and SchedulePolicy's
+    // FromStr are the parsers both the CLI and the finetune example use.
     let depth = QueueDepth(args.get_parse("queue-depth", mode.queue_depth().get())?);
-    let shards = Shards(args.get_parse("shards", 1usize)?);
+    let shards = args.get_parse("shards", ShardPolicy::default())?;
     let schedule = args.get_parse("schedule", SchedulePolicy::Fifo)?;
+    let plan = args.flag("plan");
 
     let tc = TrainConfig {
         batch,
@@ -131,7 +137,11 @@ fn cmd_train(args: &Args) -> Result<()> {
                 },
                 &[],
             )?;
-            let out = train(&mut model, &mut loader, &mut TrainBackend::CpuNpu(&mut sess), &tc)?;
+            let out = if plan {
+                train(&mut model, &mut loader, &mut TrainBackend::CpuNpuPlanned(&mut sess), &tc)?
+            } else {
+                train(&mut model, &mut loader, &mut TrainBackend::CpuNpu(&mut sess), &tc)?
+            };
             println!(
                 "session: {} offloaded GEMMs across {} registered sizes, \
                  modeled NPU energy {:.2} J",
@@ -140,10 +150,11 @@ fn cmd_train(args: &Args) -> Result<()> {
                 sess.modeled_energy_j
             );
             println!(
-                "offload schedule (depth {}, {} shard(s), {:?}): serial {:.1} ms, \
+                "offload schedule ({}, depth {}, shards {}, {:?}): serial {:.1} ms, \
                  overlapped {:.1} ms, time hidden {:.1} ms",
+                if plan { "planned steps" } else { "eager" },
                 sess.queue_depth(),
-                sess.shard_count(),
+                sess.shard_policy(),
                 sess.schedule_policy(),
                 sess.pipeline.serial_s() * 1e3,
                 sess.pipeline.makespan_s() * 1e3,
@@ -192,16 +203,19 @@ fn cmd_gemm(args: &Args) -> Result<()> {
             println!("cpu gemm {size}: {:.3} ms wall", d.as_secs_f64() * 1e3);
         }
         _ => {
-            let shards = args.get_parse("shards", 1usize)?.max(1);
+            let shards = args.get_parse("shards", ShardPolicy::default())?;
             let mut sess = OffloadSession::new(
                 SessionConfig {
-                    shards: Shards(shards),
+                    shards,
                     ..Default::default()
                 },
                 &[size],
             )?;
             let stats = sess.gemm(size, &a, &b, InputLayout::RowMajor, &mut c)?;
-            println!("npu gemm {size} ({shards} shard(s)):");
+            println!(
+                "npu gemm {size} (shards {shards} -> {} strip(s)):",
+                sess.shards_for(size).unwrap_or(1)
+            );
             println!("  wall           {:.3} ms", stats.wall_s * 1e3);
             println!("  modeled kernel {:.3} ms", stats.modeled_kernel_s * 1e3);
             println!(

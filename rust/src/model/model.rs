@@ -1,6 +1,11 @@
 //! The GPT-2 model object: llm.c's gpt2_forward / gpt2_backward /
 //! gpt2_update, with per-op wallclock accounting (the paper's Figure 8
 //! splits epoch time by operation).
+//!
+//! Every matmul flows through the [`MatmulDispatch`] seam: the CPU loop
+//! nest, an eager offload session, or — with `MatmulDispatch::Plan` — a
+//! recorded [`crate::coordinator::plan::StepPlan`] that defers the whole
+//! step's offload schedule to `OffloadSession::execute`.
 
 use crate::util::error::Result;
 use crate::util::rng::Rng;
@@ -742,6 +747,67 @@ mod tests {
             assert!((lc - ln).abs() < 0.05 * lc.abs().max(1.0), "loss {lc} vs {ln}");
         }
         assert!(eng.invocations > 0, "NPU path must actually offload");
+    }
+
+    #[test]
+    fn plan_dispatch_records_every_gemm_site_and_matches_eager() {
+        use crate::coordinator::plan::StepPlan;
+        use crate::coordinator::session::{OffloadSession, QueueDepth, SessionConfig};
+        let cfg = ModelConfig::d2();
+        let (tokens, targets) = tiny_batch(&cfg, 2, 16, 13);
+
+        let mut eager_model = Gpt2Model::new(cfg, 55);
+        let mut eager_sess = OffloadSession::new(SessionConfig::default(), &[]).unwrap();
+        let le = eager_model
+            .forward(
+                &mut MatmulDispatch::Npu(&mut eager_sess),
+                &tokens,
+                Some(&targets),
+                2,
+                16,
+            )
+            .unwrap()
+            .unwrap();
+        eager_model.zero_grad();
+        eager_model
+            .backward(&mut MatmulDispatch::Npu(&mut eager_sess))
+            .unwrap();
+
+        let mut plan_model = Gpt2Model::new(cfg, 55);
+        let mut sess = OffloadSession::new(
+            SessionConfig {
+                depth: QueueDepth(2),
+                ..Default::default()
+            },
+            &[],
+        )
+        .unwrap();
+        let mut plan = StepPlan::new();
+        let lp = {
+            let mut d = MatmulDispatch::Plan {
+                session: &mut sess,
+                plan: &mut plan,
+            };
+            let lp = plan_model
+                .forward(&mut d, &tokens, Some(&targets), 2, 16)
+                .unwrap()
+                .unwrap();
+            plan_model.zero_grad();
+            plan_model.backward(&mut d).unwrap();
+            lp
+        };
+        assert_eq!(le, lp, "recording must not change the loss");
+        assert_eq!(
+            plan_model.grads.as_slice(),
+            eager_model.grads.as_slice(),
+            "recording must not change gradients"
+        );
+        // d2 = 2 layers: forward 4 per layer + lm_head = 9 GEMMs, backward
+        // records a (dinp, dW) pair per site = 18 more.
+        assert_eq!(plan.len(), 27, "every GEMM site must be recorded");
+        let report = sess.execute(&mut plan).unwrap();
+        assert_eq!(report.stats.len(), 27);
+        assert!(report.makespan_growth_s <= report.serial_growth_s + 1e-12);
     }
 
     #[test]

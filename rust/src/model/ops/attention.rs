@@ -6,7 +6,6 @@ use crate::util::threads::parallel_for;
 
 /// Forward. qkv is (B,T,3C) packed; out is (B,T,C); preatt/att are
 /// (B,NH,T,T) caches for the backward pass.
-#[allow(clippy::too_many_arguments)]
 pub fn forward(
     out: &mut [f32],
     preatt: &mut [f32],
@@ -89,7 +88,6 @@ pub fn forward(
 
 /// Backward: accumulates dqkv from dout using cached att (llm.c pattern:
 /// dpreatt/datt are scratch).
-#[allow(clippy::too_many_arguments)]
 pub fn backward(
     dqkv: &mut [f32],
     dpreatt: &mut [f32],

@@ -4,7 +4,6 @@
 const EPS: f32 = 1e-5;
 
 /// out(R,C) = norm(inp) * weight + bias; caches mean/rstd per row.
-#[allow(clippy::too_many_arguments)]
 pub fn forward(
     out: &mut [f32],
     mean: &mut [f32],
@@ -30,7 +29,6 @@ pub fn forward(
 }
 
 /// Accumulates dinp, dweight, dbias from dout using cached mean/rstd.
-#[allow(clippy::too_many_arguments)]
 pub fn backward(
     dinp: &mut [f32],
     dweight: &mut [f32],

@@ -3,10 +3,13 @@
 //!
 //! llm.c weights are (OC, IC) row-major; activations are (BT, IC)
 //! row-major. Forward computes out = inp · Wᵀ + bias. The dispatch enum
-//! decides whether the GEMM runs on the llm.c-style CPU loop nest or is
-//! offloaded through the engine (the paper's modification).
+//! decides whether the GEMM runs on the llm.c-style CPU loop nest, is
+//! offloaded eagerly through the session (the paper's modification), or
+//! is *recorded* into a [`StepPlan`] so the whole training step can be
+//! scheduled at once (the record→schedule→execute seam).
 
-use crate::coordinator::session::{GemmOp, InputLayout, OffloadSession};
+use crate::coordinator::plan::{PlanOp, StepPlan};
+use crate::coordinator::session::{GemmOp, InputLayout, OffloadSession, Ticket};
 use crate::gemm::cpu;
 use crate::gemm::sizes::ProblemSize;
 use crate::util::error::Result;
@@ -16,14 +19,25 @@ pub enum MatmulDispatch<'a> {
     /// Unmodified llm.c: multi-threaded f32 loop nest on the CPU.
     Cpu,
     /// The paper's version: offloaded to the NPU through an
-    /// [`OffloadSession`] (a legacy `GemmOffloadEngine` derefs to one, so
-    /// both construct this variant).
+    /// [`OffloadSession`], blocking per call (a legacy
+    /// `GemmOffloadEngine` derefs to one, so both construct this variant).
     Npu(&'a mut OffloadSession),
+    /// Record→schedule→execute: every GEMM is recorded into `plan`
+    /// (numerics run immediately; the modeled schedule is deferred), with
+    /// data dependencies chaining each layer's output to the next layer's
+    /// input and weight staging marked prefetchable. The caller runs
+    /// [`OffloadSession::execute`] on the plan after the step.
+    Plan {
+        session: &'a mut OffloadSession,
+        plan: &'a mut StepPlan,
+    },
 }
 
 impl MatmulDispatch<'_> {
+    /// Does this dispatch offload through the session (eagerly or via a
+    /// recorded plan)?
     pub fn is_npu(&self) -> bool {
-        matches!(self, MatmulDispatch::Npu(_))
+        !matches!(self, MatmulDispatch::Cpu)
     }
 }
 
@@ -52,6 +66,21 @@ pub fn forward(
             let size = ProblemSize::new(bt, ic, oc);
             session.gemm(size, inp, weight, InputLayout::Transposed, out)?;
         }
+        MatmulDispatch::Plan { session, plan } => {
+            // Record instead of blocking: the activation input chains on
+            // the previous recorded op's output; the weight (B) is known
+            // ahead of the step, so its staging may prefetch under an
+            // earlier kernel.
+            let size = ProblemSize::new(bt, ic, oc);
+            let mut op = PlanOp::new(size)
+                .with_b_layout(InputLayout::Transposed)
+                .prefetchable_b(true);
+            if let Some(head) = plan.chain_head() {
+                op = op.after(head);
+            }
+            let node = session.record_gemm(plan, &op, inp, weight, out)?;
+            plan.set_chain(node);
+        }
     }
     if let Some(bias) = bias {
         for r in 0..bt {
@@ -65,7 +94,6 @@ pub fn forward(
 }
 
 /// dinp += dout · W ; dweight += doutᵀ · inp ; dbias += Σ_rows dout.
-#[allow(clippy::too_many_arguments)]
 pub fn backward(
     dispatch: &mut MatmulDispatch,
     dinp: &mut [f32],
@@ -98,34 +126,67 @@ pub fn backward(
         MatmulDispatch::Npu(session) => {
             // Both backward GEMMs are offloaded — they are Figure 6's
             // backward problem sizes. They read the same inputs and write
-            // disjoint outputs, so a ring deep enough for two submissions
-            // overlaps the second invocation's host staging with the
-            // first's kernel (and lets the scheduler batch them).
+            // disjoint outputs, so they stream through the one submit/wait
+            // path at any ring depth: when the ring is full the oldest
+            // submission retires first, which at depth 1 degenerates to
+            // the paper's serial submit→wait and at depth ≥ 2 overlaps
+            // the second invocation's host staging with the first's
+            // kernel (and lets the scheduler batch them).
             let mut tmp = vec![0.0f32; bt * ic];
             let mut dw = vec![0.0f32; oc * ic];
             let dinp_size = ProblemSize::new(bt, oc, ic);
             let dw_size = ProblemSize::new(oc, bt, ic);
-            if session.queue_depth() >= 2 {
-                let t_dinp = session.submit(&GemmOp::new(dinp_size), dout, weight)?;
-                let t_dw = session.submit(
-                    &GemmOp::new(dw_size)
-                        .with_a_layout(InputLayout::Transposed), // dout is (BT,OC): Mᵀ view
+            let ops: [(GemmOp, &[f32], &[f32]); 2] = [
+                (GemmOp::new(dinp_size), dout, weight),
+                (
+                    // dout is (BT,OC): Mᵀ view
+                    GemmOp::new(dw_size).with_a_layout(InputLayout::Transposed),
                     dout,
                     inp,
-                )?;
-                session.wait(t_dinp, &mut tmp)?;
-                session.wait(t_dw, &mut dw)?;
-            } else {
-                session.gemm(dinp_size, dout, weight, InputLayout::RowMajor, &mut tmp)?;
-                session.gemm_ex(
-                    dw_size,
-                    dout,
-                    InputLayout::Transposed, // dout is (BT,OC): Mᵀ view
-                    inp,
-                    InputLayout::RowMajor,
-                    &mut dw,
-                )?;
+                ),
+            ];
+            let mut outs = [&mut tmp, &mut dw];
+            let mut pending: Vec<(Ticket, usize)> = Vec::new();
+            for (i, (op, a, b)) in ops.iter().enumerate() {
+                if session.in_flight() >= session.queue_depth() {
+                    let (t, j) = pending.remove(0);
+                    session.wait(t, &mut outs[j][..])?;
+                }
+                pending.push((session.submit(op, a, b)?, i));
             }
+            for (t, j) in pending {
+                session.wait(t, &mut outs[j][..])?;
+            }
+            for (d, t) in dinp.iter_mut().zip(&tmp) {
+                *d += t;
+            }
+            for (d, t) in dweight.iter_mut().zip(&dw) {
+                *d += t;
+            }
+        }
+        MatmulDispatch::Plan { session, plan } => {
+            // Record both backward GEMMs. Each depends on dout — the
+            // activation-chain head — but not on each other; the chain
+            // advances through dinp (the gradient that flows on to the
+            // previous layer), leaving dW a batchable leaf. Both B inputs
+            // (the weight, and the activation saved by the forward pass)
+            // are known before the step executes: prefetchable.
+            let mut tmp = vec![0.0f32; bt * ic];
+            let mut dw = vec![0.0f32; oc * ic];
+            let dinp_size = ProblemSize::new(bt, oc, ic);
+            let dw_size = ProblemSize::new(oc, bt, ic);
+            let head = plan.chain_head();
+            let mut op_dinp = PlanOp::new(dinp_size).prefetchable_b(true);
+            let mut op_dw = PlanOp::new(dw_size)
+                .with_a_layout(InputLayout::Transposed) // dout is (BT,OC): Mᵀ view
+                .prefetchable_b(true);
+            if let Some(h) = head {
+                op_dinp = op_dinp.after(h);
+                op_dw = op_dw.after(h);
+            }
+            let n_dinp = session.record_gemm(plan, &op_dinp, dout, weight, &mut tmp)?;
+            session.record_gemm(plan, &op_dw, dout, inp, &mut dw)?;
+            plan.set_chain(n_dinp);
             for (d, t) in dinp.iter_mut().zip(&tmp) {
                 *d += t;
             }
@@ -365,5 +426,73 @@ mod tests {
         assert_eq!(dw_s, dw_p);
         assert_eq!(hidden_s, 0.0, "depth-1 (serial) schedule has no overlap");
         assert!(hidden_p > 0.0, "paired backward GEMMs must overlap");
+    }
+
+    #[test]
+    fn recorded_backward_bit_identical_to_eager_and_leaves_dw_batchable() {
+        use crate::coordinator::plan::StepPlan;
+        use crate::coordinator::session::{OffloadSession, QueueDepth, SessionConfig};
+        let (bt, ic, oc) = (64, 128, 64);
+        let mut rng = Rng::new(101);
+        let inp = rand(&mut rng, bt * ic);
+        let w = rand(&mut rng, oc * ic);
+        let dout = rand(&mut rng, bt * oc);
+
+        let mut eager_sess = OffloadSession::new(SessionConfig::default(), &[]).unwrap();
+        let mut dinp_e = vec![0.0; bt * ic];
+        let mut dw_e = vec![0.0; oc * ic];
+        backward(
+            &mut MatmulDispatch::Npu(&mut eager_sess),
+            &mut dinp_e,
+            &mut dw_e,
+            None,
+            &dout,
+            &inp,
+            &w,
+            bt,
+            ic,
+            oc,
+        )
+        .unwrap();
+
+        let mut sess = OffloadSession::new(
+            SessionConfig {
+                depth: QueueDepth(2),
+                ..Default::default()
+            },
+            &[],
+        )
+        .unwrap();
+        let mut plan = StepPlan::new();
+        let mut dinp_p = vec![0.0; bt * ic];
+        let mut dw_p = vec![0.0; oc * ic];
+        backward(
+            &mut MatmulDispatch::Plan {
+                session: &mut sess,
+                plan: &mut plan,
+            },
+            &mut dinp_p,
+            &mut dw_p,
+            None,
+            &dout,
+            &inp,
+            &w,
+            bt,
+            ic,
+            oc,
+        )
+        .unwrap();
+        assert_eq!(dinp_e, dinp_p, "recording must not change numerics");
+        assert_eq!(dw_e, dw_p);
+        assert_eq!(plan.len(), 2, "both backward GEMMs recorded");
+        // dinp heads the chain; dW is a dependency-free leaf the scheduler
+        // may batch across layers.
+        assert_eq!(plan.chain_head().unwrap().index(), 0);
+        let report = sess.execute(&mut plan).unwrap();
+        assert!(report.makespan_growth_s <= report.serial_growth_s + 1e-12);
+        assert!(
+            report.hidden_growth_s() > 0.0,
+            "paired backward GEMMs must overlap in the replay"
+        );
     }
 }

@@ -202,6 +202,14 @@ impl HostStagingModel {
 /// [`PipelineTimeline::submit`] is the classic single-column convenience
 /// (stage immediately followed by run).
 ///
+/// The same four events are the vocabulary of the *step-plan replay*
+/// (`coordinator::plan`): `execute` walks a recorded step in scheduler
+/// order, calling `stage` for each op's (possibly prefetched) host
+/// staging, `barrier` where the chosen order switches array programming,
+/// `run_on` per column strip, and `wait` when an op's output merge comes
+/// due — so eager and planned schedules are directly comparable on one
+/// timeline.
+///
 /// Because each column cursor serializes its spans and every event grows
 /// the makespan by at most the busy time it records, overlap can only ever
 /// *hide work under other work* — kernel time is never double-counted and
@@ -298,6 +306,13 @@ impl PipelineTimeline {
 
     fn device_cursor_max(&self) -> f64 {
         self.device_cursor_s.iter().cloned().fold(0.0, f64::max)
+    }
+
+    /// Current host-cursor time (when the host is next free) — a
+    /// read-only probe for callers asserting on intermediate schedule
+    /// state.
+    pub fn host_now_s(&self) -> f64 {
+        self.host_cursor_s
     }
 
     /// The fully serialized cost: sum of every stage duration recorded.
@@ -487,6 +502,16 @@ mod tests {
         let h = HostStagingModel::default();
         assert!(h.transpose_s(1 << 20) > h.copy_s(1 << 20));
         assert_eq!(h.copy_s(0), 0.0);
+    }
+
+    #[test]
+    fn host_cursor_tracks_staging_and_waits() {
+        let mut tl = PipelineTimeline::new();
+        assert_eq!(tl.host_now_s(), 0.0);
+        let done = tl.submit(2.0, 5.0);
+        assert!((tl.host_now_s() - 2.0).abs() < 1e-12, "staging moves the host");
+        tl.wait(done, 1.0);
+        assert!((tl.host_now_s() - 8.0).abs() < 1e-12, "wait blocks to device done");
     }
 
     #[test]

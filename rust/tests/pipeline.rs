@@ -7,8 +7,8 @@
 
 use xdna_repro::coordinator::scheduler::SchedulePolicy;
 use xdna_repro::coordinator::session::{
-    GemmOp, InputLayout, OffloadSession, QueueDepth, SessionConfig, Shards, Ticket,
-    STAGE_RECONFIG,
+    GemmOp, InputLayout, OffloadSession, QueueDepth, SessionConfig, ShardPolicy, Shards,
+    Ticket, STAGE_RECONFIG,
 };
 use xdna_repro::gemm::sizes::{distinct_sizes, ModelDims, ProblemSize};
 use xdna_repro::util::rng::Rng;
@@ -17,7 +17,7 @@ fn session(depth: usize, shards: usize, schedule: SchedulePolicy) -> OffloadSess
     OffloadSession::new(
         SessionConfig {
             depth: QueueDepth(depth),
-            shards: Shards(shards),
+            shards: ShardPolicy::Fixed(Shards(shards)),
             schedule,
             ..Default::default()
         },

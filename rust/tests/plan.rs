@@ -1,0 +1,290 @@
+//! Record→schedule→execute integration: plan-vs-eager bit-identity on all
+//! twelve GPT-2 site shapes, Figure-7 stage fidelity of the depth-1 FIFO
+//! plan, whole-step batching across what used to be wait boundaries,
+//! auto-shard selection, and step makespan monotonicity
+//! (plan ≤ eager pipelined ≤ eager serial).
+
+use xdna_repro::coordinator::plan::{PlanOp, StepPlan};
+use xdna_repro::coordinator::scheduler::SchedulePolicy;
+use xdna_repro::coordinator::session::{
+    GemmOp, InputLayout, OffloadSession, QueueDepth, SessionConfig, ShardPolicy, Shards,
+    Ticket, STAGES, STAGE_RECONFIG,
+};
+use xdna_repro::gemm::sizes::{distinct_sizes, ModelDims, ProblemSize};
+use xdna_repro::model::ops::matmul::MatmulDispatch;
+use xdna_repro::model::{Gpt2Model, ModelConfig};
+use xdna_repro::util::rng::Rng;
+
+fn session(depth: usize, shards: ShardPolicy, schedule: SchedulePolicy) -> OffloadSession {
+    OffloadSession::new(
+        SessionConfig {
+            depth: QueueDepth(depth),
+            shards,
+            schedule,
+            ..Default::default()
+        },
+        &[],
+    )
+    .unwrap()
+}
+
+fn fixed(n: usize) -> ShardPolicy {
+    ShardPolicy::Fixed(Shards(n))
+}
+
+/// All twelve GPT-2 GEMM-site shapes at reduced model dimensions (same
+/// forward / backward-data / backward-weight patterns as the 124M model).
+fn scaled_gpt2_sizes() -> Vec<ProblemSize> {
+    let dims = ModelDims {
+        batch: 1,
+        seq: 64,
+        channels: 128,
+        padded_vocab: 1024,
+        layers: 2,
+    };
+    let sizes = distinct_sizes(&dims);
+    assert_eq!(sizes.len(), 12, "scaled dims must keep all twelve shapes");
+    sizes
+}
+
+fn random_inputs(size: ProblemSize, seed: u64) -> (Vec<f32>, Vec<f32>) {
+    let mut rng = Rng::new(seed);
+    let mut a = vec![0.0f32; size.m * size.k];
+    let mut b_t = vec![0.0f32; size.n * size.k]; // N x K: forces the transpose
+    rng.fill_normal(&mut a, 0.0, 1.0);
+    rng.fill_normal(&mut b_t, 0.0, 0.1);
+    (a, b_t)
+}
+
+/// Recording through a deep, auto-sharded, batch-scheduled session must
+/// produce bit-for-bit the eager depth-1 unsharded outputs on every GPT-2
+/// site shape.
+#[test]
+fn plan_bit_identical_to_eager_serial_on_all_gpt2_site_shapes() {
+    let sizes = scaled_gpt2_sizes();
+    let mut planned = session(4, ShardPolicy::Auto, SchedulePolicy::BatchBySize);
+    let mut plan = StepPlan::new();
+    let mut plan_outs: Vec<Vec<f32>> =
+        sizes.iter().map(|s| vec![0.0f32; s.m * s.n]).collect();
+    for (i, (&size, out)) in sizes.iter().zip(plan_outs.iter_mut()).enumerate() {
+        let (a, b_t) = random_inputs(size, 4000 + i as u64);
+        let op = PlanOp::new(size)
+            .with_b_layout(InputLayout::Transposed)
+            .prefetchable_b(true);
+        planned.record_gemm(&mut plan, &op, &a, &b_t, out).unwrap();
+    }
+    for (i, &size) in sizes.iter().enumerate() {
+        let (a, b_t) = random_inputs(size, 4000 + i as u64);
+        let mut reference = vec![0.0f32; size.m * size.n];
+        session(1, fixed(1), SchedulePolicy::Fifo)
+            .gemm(size, &a, &b_t, InputLayout::Transposed, &mut reference)
+            .unwrap();
+        assert_eq!(
+            reference, plan_outs[i],
+            "{size}: recorded output must be bit-identical to eager serial"
+        );
+    }
+    let report = planned.execute(&mut plan).unwrap();
+    assert_eq!(report.stats.len(), 12);
+    assert!(report.makespan_growth_s <= report.serial_growth_s + 1e-12);
+}
+
+/// A depth-1 unsharded FIFO plan replays the paper's strictly serial
+/// Figure-7 schedule: identical per-stage modeled totals, timeline, and
+/// stage sequence as driving the same stream eagerly.
+#[test]
+fn depth1_fifo_plan_reproduces_figure7_stage_sequence() {
+    let sizes = scaled_gpt2_sizes();
+
+    let mut eager = session(1, fixed(1), SchedulePolicy::Fifo);
+    for (i, &size) in sizes.iter().enumerate() {
+        let (a, b_t) = random_inputs(size, 5000 + i as u64);
+        let mut c = vec![0.0f32; size.m * size.n];
+        eager.gemm(size, &a, &b_t, InputLayout::Transposed, &mut c).unwrap();
+    }
+
+    let mut planned = session(1, fixed(1), SchedulePolicy::Fifo);
+    let mut plan = StepPlan::new();
+    let mut outs: Vec<Vec<f32>> = sizes.iter().map(|s| vec![0.0f32; s.m * s.n]).collect();
+    for (i, (&size, out)) in sizes.iter().zip(outs.iter_mut()).enumerate() {
+        let (a, b_t) = random_inputs(size, 5000 + i as u64);
+        // The Figure-7 chain: each invocation strictly after the previous.
+        let mut op = PlanOp::new(size).with_b_layout(InputLayout::Transposed);
+        if let Some(h) = plan.chain_head() {
+            op = op.after(h);
+        }
+        let n = planned.record_gemm(&mut plan, &op, &a, &b_t, out).unwrap();
+        plan.set_chain(n);
+    }
+    let report = planned.execute(&mut plan).unwrap();
+    assert_eq!(report.order, (0..12).collect::<Vec<_>>());
+    assert_eq!(report.prefetched, 0);
+    for stage in STAGES {
+        assert_eq!(
+            planned.modeled_stage_s(stage),
+            eager.modeled_stage_s(stage),
+            "stage '{stage}' must accumulate identically"
+        );
+    }
+    assert_eq!(planned.pipeline.makespan_s(), eager.pipeline.makespan_s());
+    assert_eq!(planned.pipeline.serial_s(), eager.pipeline.serial_s());
+    assert_eq!(planned.pipeline.hidden_s(), 0.0, "strictly serial: no overlap");
+    assert_eq!(planned.invocations, eager.invocations);
+}
+
+/// The plan window spans the whole step, so BatchBySize groups same-size
+/// ops that an eager ring could never see together (they were separated by
+/// wait boundaries).
+#[test]
+fn whole_step_batching_cuts_reconfigs_across_wait_boundaries() {
+    let sizes = scaled_gpt2_sizes();
+    let rounds = 2;
+
+    // Eager ring: depth-4 window, BatchBySize — revisited sizes are 12
+    // submissions apart, far outside the window.
+    let mut eager = session(4, fixed(1), SchedulePolicy::BatchBySize);
+    let inputs: Vec<(Vec<f32>, Vec<f32>)> = sizes
+        .iter()
+        .enumerate()
+        .map(|(i, &s)| random_inputs(s, 6000 + i as u64))
+        .collect();
+    let mut outs: Vec<Vec<f32>> = sizes.iter().map(|s| vec![0.0f32; s.m * s.n]).collect();
+    for _ in 0..rounds {
+        let mut pending: Vec<(usize, Ticket)> = Vec::new();
+        for (i, (&size, (a, b_t))) in sizes.iter().zip(&inputs).enumerate() {
+            if pending.len() == 4 {
+                let (j, t) = pending.remove(0);
+                eager.wait(t, &mut outs[j]).unwrap();
+            }
+            let t = eager
+                .submit(&GemmOp::new(size).with_b_layout(InputLayout::Transposed), a, b_t)
+                .unwrap();
+            pending.push((i, t));
+        }
+        for (j, t) in pending {
+            eager.wait(t, &mut outs[j]).unwrap();
+        }
+    }
+    let eager_reconfig = eager.modeled_stage_s(STAGE_RECONFIG);
+
+    let mut planned = session(4, fixed(1), SchedulePolicy::BatchBySize);
+    let mut plan = StepPlan::new();
+    for _ in 0..rounds {
+        for (i, (&size, (a, b_t))) in sizes.iter().zip(&inputs).enumerate() {
+            let op = PlanOp::new(size).with_b_layout(InputLayout::Transposed);
+            planned
+                .record_gemm(&mut plan, &op, a, b_t, &mut outs[i])
+                .unwrap();
+        }
+    }
+    let report = planned.execute(&mut plan).unwrap();
+    let plan_reconfig = planned.modeled_stage_s(STAGE_RECONFIG);
+    assert!(
+        plan_reconfig < eager_reconfig,
+        "whole-step batching must strictly cut reconfig time: plan {plan_reconfig} \
+         vs eager ring {eager_reconfig}"
+    );
+    assert_eq!(
+        report.reconfigs, 12,
+        "each distinct size reconfigures once across the whole step"
+    );
+}
+
+/// Auto-shard selection stays bit-identical on every site shape and its
+/// modeled single-invocation schedule is never worse than unsharded.
+#[test]
+fn auto_sharding_bit_identical_and_no_worse_on_all_gpt2_site_shapes() {
+    for (i, &size) in scaled_gpt2_sizes().iter().enumerate() {
+        let (a, b_t) = random_inputs(size, 7000 + i as u64);
+        let mut reference = vec![0.0f32; size.m * size.n];
+        let mut unsharded = session(1, fixed(1), SchedulePolicy::Fifo);
+        unsharded
+            .gemm(size, &a, &b_t, InputLayout::Transposed, &mut reference)
+            .unwrap();
+        let mut auto = session(1, ShardPolicy::Auto, SchedulePolicy::Fifo);
+        let mut c = vec![0.0f32; size.m * size.n];
+        auto.gemm(size, &a, &b_t, InputLayout::Transposed, &mut c).unwrap();
+        assert_eq!(reference, c, "{size}: auto sharding must be bit-identical");
+        assert!(
+            auto.pipeline.makespan_s() <= unsharded.pipeline.makespan_s() + 1e-12,
+            "{size}: auto ({} strips) modeled worse than unsharded",
+            auto.shards_for(size).unwrap()
+        );
+    }
+}
+
+/// The acceptance chain on a real training step: recording the whole step
+/// and scheduling it with prefetch + BatchBySize is modeled no slower than
+/// the eager pipelined (depth-2) schedule, which is no slower than the
+/// strictly serial (depth-1) schedule — and strictly faster end to end,
+/// driven by the backward pairs and the batched reconfigurations. Numerics
+/// stay bit-identical throughout.
+#[test]
+fn step_makespan_monotone_plan_le_eager_pipelined_le_serial() {
+    let cfg = ModelConfig::d4();
+    let (b, t) = (2usize, 16usize);
+    let mut rng = Rng::new(17);
+    let tokens: Vec<i32> = (0..b * t).map(|_| rng.below(cfg.vocab_size) as i32).collect();
+    let targets: Vec<i32> = (0..b * t).map(|_| rng.below(cfg.vocab_size) as i32).collect();
+
+    let step_eager = |depth: usize| -> (f32, Vec<f32>, f64, f64) {
+        let mut model = Gpt2Model::new(cfg, 321);
+        let mut sess = session(depth, fixed(1), SchedulePolicy::Fifo);
+        let loss = model
+            .forward(&mut MatmulDispatch::Npu(&mut sess), &tokens, Some(&targets), b, t)
+            .unwrap()
+            .unwrap();
+        model.zero_grad();
+        model.backward(&mut MatmulDispatch::Npu(&mut sess)).unwrap();
+        (
+            loss,
+            model.grads.as_slice().to_vec(),
+            sess.pipeline.makespan_s(),
+            sess.pipeline.serial_s(),
+        )
+    };
+    let (loss1, grads1, m1, s1) = step_eager(1);
+    let (loss2, grads2, m2, s2) = step_eager(2);
+
+    let mut model = Gpt2Model::new(cfg, 321);
+    let mut sess = session(2, fixed(1), SchedulePolicy::BatchBySize);
+    let mut plan = StepPlan::new();
+    let loss_p = {
+        let mut d = MatmulDispatch::Plan {
+            session: &mut sess,
+            plan: &mut plan,
+        };
+        let l = model
+            .forward(&mut d, &tokens, Some(&targets), b, t)
+            .unwrap()
+            .unwrap();
+        model.zero_grad();
+        model.backward(&mut d).unwrap();
+        l
+    };
+    let report = sess.execute(&mut plan).unwrap();
+    let (m_plan, s_plan) = (sess.pipeline.makespan_s(), sess.pipeline.serial_s());
+
+    // Bit-identity across every schedule.
+    assert_eq!(loss1, loss2);
+    assert_eq!(loss1, loss_p);
+    assert_eq!(grads1, grads2);
+    assert_eq!(grads1, model.grads.as_slice());
+
+    // Same modeled work at both eager depths; the batched plan's serial
+    // sum can only shrink further (it removes reconfiguration barriers,
+    // never stage work).
+    assert!((s1 - s2).abs() < 1e-9, "serial sums must match: {s1} vs {s2}");
+    assert!(s_plan <= s2 + 1e-9, "batching may only remove work: {s_plan} vs {s2}");
+    // ...monotonically better scheduled.
+    assert!((m1 - s1).abs() < 1e-12, "depth 1 is the strictly serial schedule");
+    assert!(m2 <= m1 + 1e-12, "pipelining can only help: {m2} vs {m1}");
+    assert!(
+        m_plan < m2,
+        "whole-step plan must be strictly faster than the eager pipelined \
+         schedule: {m_plan} vs {m2}"
+    );
+    assert!(report.prefetched > 0, "forward weights must prefetch");
+    assert!(report.reconfigs > 0);
+    assert!(report.hidden_growth_s() > 0.0);
+}
