@@ -16,10 +16,14 @@
 //! `--queue-depth K`, `--shards auto|N`, `--schedule batch` exercise the
 //! deeper-ring / sharded / reconfig-batched session. `--plan` records each
 //! training step as a `StepPlan` and schedules it whole
-//! (record→schedule→execute): whole-step batching plus weight-staging
-//! prefetch under the previous kernel.
+//! (record→schedule→execute): whole-step batching plus a deep
+//! weight-staging prefetch horizon. `--plan-cache on|off` (default on,
+//! with `--plan`) freezes the scheduled step after the first iteration
+//! and replays it on every later step — the run report prints the cache
+//! hit/miss counts, and a multi-step run must show at least one hit.
 
 use xdna_repro::coordinator::engine::ExecMode;
+use xdna_repro::coordinator::plan::{PlanCache, PlanCacheMode};
 use xdna_repro::coordinator::session::{
     OffloadSession, QueueDepth, SessionConfig, ShardPolicy,
 };
@@ -53,6 +57,7 @@ fn main() -> xdna_repro::Result<()> {
     let shards: ShardPolicy = args.get_parse("shards", ShardPolicy::default())?;
     let schedule: SchedulePolicy = args.get_parse("schedule", SchedulePolicy::Fifo)?;
     let plan = args.flag("plan");
+    let plan_cache = args.get_parse("plan-cache", PlanCacheMode::On)?.enabled();
     let epochs = 20.min(total_steps);
     let steps_per_epoch = (total_steps / epochs).max(1);
 
@@ -92,11 +97,16 @@ fn main() -> xdna_repro::Result<()> {
         engine.queue_depth(),
         engine.shard_policy()
     );
+    let mut cache = PlanCache::new();
     let npu_stats = if plan {
+        let cache_ref = if plan_cache { Some(&mut cache) } else { None };
         train(
             &mut model,
             &mut loader,
-            &mut TrainBackend::CpuNpuPlanned(&mut engine),
+            &mut TrainBackend::CpuNpuPlanned {
+                session: &mut engine,
+                cache: cache_ref,
+            },
             &tc,
         )?
     } else {
@@ -127,6 +137,24 @@ fn main() -> xdna_repro::Result<()> {
         engine.registered_sizes().len(),
         engine.modeled_energy_j
     );
+    if plan && plan_cache {
+        println!(
+            "plan cache: {} hit(s), {} miss(es) — recorded {} step(s), replayed {}",
+            cache.hits(),
+            cache.misses(),
+            cache.misses(),
+            cache.hits()
+        );
+        let total_steps = tc.epochs * tc.steps_per_epoch;
+        if total_steps > 1 {
+            assert!(
+                cache.hits() >= 1,
+                "a multi-step cached run must replay at least once \
+                 ({total_steps} steps, {} hits)",
+                cache.hits()
+            );
+        }
+    }
     println!(
         "offload schedule: serial {:.1} ms, overlapped {:.1} ms -> host time hidden {:.1} ms ({:.1}%)",
         engine.pipeline.serial_s() * 1e3,

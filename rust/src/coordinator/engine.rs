@@ -120,6 +120,7 @@ impl GemmOffloadEngine {
                 depth: cfg.mode.queue_depth(),
                 shards: ShardPolicy::default(),
                 schedule: SchedulePolicy::Fifo,
+                ..Default::default()
             },
             sizes,
         )?;

@@ -15,8 +15,10 @@
 //!   a whole training step's GEMMs (with data dependencies and
 //!   prefetchable weight staging) and
 //!   [`session::OffloadSession::execute`] schedules the entire step at
-//!   once — whole-step same-size batching, next-invocation weight
-//!   prefetch, auto-sharding.
+//!   once — whole-step same-size batching, a deep weight-prefetch
+//!   horizon, auto-sharding. [`plan::PlanCache`] then makes the schedule
+//!   a reusable artifact: record once, replay every identical later step
+//!   (see `docs/SCHEDULING.md`).
 //! * [`scheduler`] — [`scheduler::Scheduler`]: orders a submission window
 //!   (the eager ring's staged ops, or a full recorded step) within data
 //!   dependencies to batch same-size invocations and amortize
@@ -40,10 +42,13 @@ pub mod transpose;
 
 pub use device::{ComputeDevice, DeviceRun, DeviceSpan, SimulatorDevice};
 pub use engine::{EngineConfig, ExecMode, GemmOffloadEngine, PAIRED_SLOTS};
-pub use plan::{PlanNode, PlanOp, StepPlan, StepReport};
+pub use plan::{
+    CachedStep, PlanCache, PlanCacheMode, PlanNode, PlanOp, PlanReplay, StepPlan, StepReport,
+    StepSignature,
+};
 pub use reconfig::ReconfigPolicy;
 pub use scheduler::{SchedulePolicy, Scheduler};
 pub use session::{
-    GemmOp, InputLayout, InvocationStats, OffloadSession, QueueDepth, SessionConfig,
-    ShardPolicy, Shards, Ticket, STAGES,
+    GemmOp, InputLayout, InvocationStats, OffloadSession, PrefetchHorizon, QueueDepth,
+    SessionConfig, ShardPolicy, Shards, Ticket, STAGES,
 };

@@ -29,10 +29,51 @@
 //! bit-for-bit and stage-for-stage the paper's strictly serial schedule;
 //! the eager `gemm`/`gemm_ex` entry points are now thin shims over a
 //! one-op plan.
+//!
+//! Because the GEMM stream of a fine-tuning step is *identical every
+//! iteration*, a scheduled plan is also a reusable artifact: freezing an
+//! executed plan yields a [`CachedStep`] (the captured stage durations
+//! plus the steady-state execution order and prefetch plan), and a
+//! [`PlanCache`] lets the trainer record once, then replay the cached
+//! schedule on every later step — re-recording only when a shape or the
+//! session changes. See `docs/SCHEDULING.md` for the full handbook.
+//!
+//! The record→schedule→execute loop end to end:
+//!
+//! ```
+//! use xdna_repro::coordinator::plan::{PlanOp, StepPlan};
+//! use xdna_repro::coordinator::session::{OffloadSession, QueueDepth, SessionConfig};
+//! use xdna_repro::gemm::sizes::ProblemSize;
+//!
+//! # fn main() -> xdna_repro::Result<()> {
+//! let mut sess = OffloadSession::new(
+//!     SessionConfig { depth: QueueDepth(2), ..Default::default() },
+//!     &[],
+//! )?;
+//! let size = ProblemSize::new(64, 64, 128);
+//! let (a, b) = (vec![1.0f32; 64 * 64], vec![0.5f32; 64 * 128]);
+//! let mut c = vec![0.0f32; 64 * 128];
+//!
+//! // Record: numerics run now (c is filled, bit-for-bit eager); the
+//! // modeled schedule is deferred. Deps chain op 2 onto op 1's output,
+//! // and the weight-like B input is marked prefetchable.
+//! let mut plan = StepPlan::new();
+//! let n0 = sess.record_gemm(&mut plan, &PlanOp::new(size).prefetchable_b(true), &a, &b, &mut c)?;
+//! let op = PlanOp::new(size).after(n0).prefetchable_b(true);
+//! sess.record_gemm(&mut plan, &op, &a, &b, &mut c)?;
+//!
+//! // Schedule + execute: the whole step is ordered at once and charged
+//! // to the modeled timeline; overlap only ever hides work.
+//! let report = sess.execute(&mut plan)?;
+//! assert_eq!(report.stats.len(), 2);
+//! assert!(report.makespan_growth_s <= report.serial_growth_s);
+//! # Ok(())
+//! # }
+//! ```
 
 use crate::gemm::sizes::ProblemSize;
 
-use super::session::{InputLayout, InvocationStats};
+use super::session::{HorizonChoice, InputLayout, InvocationStats};
 
 /// Handle to one recorded op inside a [`StepPlan`] (the plan-level
 /// analogue of a session [`super::session::Ticket`]). Used to declare
@@ -109,6 +150,10 @@ pub(crate) struct PlannedOp {
     pub(crate) size: ProblemSize,
     /// Padded strip-variant size — the granularity reconfiguration tracks.
     pub(crate) strip_size: ProblemSize,
+    /// Input layouts as recorded (part of the step's shape signature, and
+    /// what a cached replay restages with).
+    pub(crate) a_layout: InputLayout,
+    pub(crate) b_layout: InputLayout,
     pub(crate) deps: Vec<usize>,
     pub(crate) prefetch_b: bool,
     /// Modeled host staging of A (copy or transpose).
@@ -202,6 +247,312 @@ impl StepPlan {
     /// Problem sizes in record order (diagnostics).
     pub fn sizes(&self) -> Vec<ProblemSize> {
         self.ops.iter().map(|op| op.size).collect()
+    }
+
+    /// The step's shape signature: the `ProblemSize` sequence with
+    /// layouts, prefetch hints, and dependency structure. Two steps with
+    /// equal signatures stage, execute, and schedule identically, so a
+    /// [`CachedStep`] with this signature may replay in this step's
+    /// place.
+    pub fn signature(&self) -> StepSignature {
+        StepSignature {
+            ops: self
+                .ops
+                .iter()
+                .map(|op| OpSignature {
+                    size: op.size,
+                    a_layout: op.a_layout,
+                    b_layout: op.b_layout,
+                    prefetch_b: op.prefetch_b,
+                    deps: op.deps.clone(),
+                })
+                .collect(),
+        }
+    }
+}
+
+/// The CLI switch for cross-step plan caching: `--plan-cache on|off`
+/// (shared by the binary and the examples, like the `ShardPolicy` and
+/// `SchedulePolicy` parsers).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PlanCacheMode {
+    #[default]
+    On,
+    Off,
+}
+
+impl PlanCacheMode {
+    /// Should the trainer be handed a [`PlanCache`]?
+    pub fn enabled(self) -> bool {
+        matches!(self, PlanCacheMode::On)
+    }
+}
+
+impl std::str::FromStr for PlanCacheMode {
+    type Err = String;
+
+    fn from_str(s: &str) -> std::result::Result<PlanCacheMode, String> {
+        match s {
+            "on" => Ok(PlanCacheMode::On),
+            "off" => Ok(PlanCacheMode::Off),
+            other => Err(format!("unknown plan-cache setting '{other}' (expected on|off)")),
+        }
+    }
+}
+
+impl std::fmt::Display for PlanCacheMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PlanCacheMode::On => write!(f, "on"),
+            PlanCacheMode::Off => write!(f, "off"),
+        }
+    }
+}
+
+/// One op's contribution to a [`StepSignature`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+struct OpSignature {
+    size: ProblemSize,
+    a_layout: InputLayout,
+    b_layout: InputLayout,
+    prefetch_b: bool,
+    deps: Vec<usize>,
+}
+
+/// The shape signature of a recorded step (see
+/// [`StepPlan::signature`]). Everything the modeled schedule depends on
+/// — sizes, layouts, prefetch hints, dependency structure — and nothing
+/// it does not (input *values* change every step; the schedule does
+/// not).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct StepSignature {
+    ops: Vec<OpSignature>,
+}
+
+impl StepSignature {
+    /// Ops in the signed step.
+    pub fn len(&self) -> usize {
+        self.ops.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ops.is_empty()
+    }
+}
+
+/// A recorded, executed, and frozen step plan — the reusable scheduling
+/// artifact a [`PlanCache`] stores (built by
+/// [`super::session::OffloadSession::freeze`]).
+///
+/// Holds the captured per-op modeled stage durations plus the
+/// *steady-state* schedule computed once at freeze time: the execution
+/// order and prefetch horizon, both anchored at the array state every
+/// replay starts from — the record-order end state, since replayed
+/// numerics re-run in record order (the replay cursor snapshots that
+/// state live when it opens) — and zero one-time reconfiguration
+/// charges (those were paid when the recorded step executed). Replaying
+/// a cached step therefore costs no scheduling work. Like tickets and
+/// plans, a cached step is *session-scoped*: replaying it on another
+/// session is a helpful error.
+#[derive(Debug)]
+pub struct CachedStep {
+    pub(crate) signature: StepSignature,
+    pub(crate) session: u64,
+    pub(crate) ops: Vec<PlannedOp>,
+    /// Steady-state execution order (indices in record order).
+    pub(crate) order: Vec<usize>,
+    /// Steady-state prefetch plan.
+    pub(crate) choice: HorizonChoice,
+}
+
+impl CachedStep {
+    /// Ops in the frozen step.
+    pub fn len(&self) -> usize {
+        self.ops.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ops.is_empty()
+    }
+
+    /// The signature replayed steps must match.
+    pub fn signature(&self) -> &StepSignature {
+        &self.signature
+    }
+
+    /// The session this step was recorded on (replays are scoped to it).
+    pub fn session_id(&self) -> u64 {
+        self.session
+    }
+}
+
+/// Cursor over a [`CachedStep`] being replayed.
+///
+/// Obtained from [`super::session::OffloadSession::begin_replay`] (or
+/// [`super::session::OffloadSession::replay_entry`]); each training-step
+/// GEMM goes through [`super::session::OffloadSession::replay_gemm`],
+/// which checks the call against the cached op at the cursor (any
+/// mismatch is a recoverable divergence error — re-record the step) and
+/// runs the numerics bit-for-bit the record path. The already-computed
+/// schedule is charged once, at
+/// [`super::session::OffloadSession::finish_replay`]. Mirrors
+/// [`StepPlan`]'s activation-chain builder so call sites drive record
+/// and replay identically.
+#[derive(Debug)]
+pub struct PlanReplay<'a> {
+    pub(crate) entry: &'a CachedStep,
+    pub(crate) cursor: usize,
+    /// Array programming when the replayed step began (before its
+    /// numerics ran) — the modeled charge's starting point.
+    pub(crate) start_strip: Option<ProblemSize>,
+    /// Measured wallclock of each replayed invocation.
+    pub(crate) walls: Vec<f64>,
+    chain: Option<usize>,
+}
+
+impl<'a> PlanReplay<'a> {
+    pub(crate) fn new(entry: &'a CachedStep, start_strip: Option<ProblemSize>) -> PlanReplay<'a> {
+        PlanReplay {
+            entry,
+            cursor: 0,
+            start_strip,
+            walls: Vec::with_capacity(entry.ops.len()),
+            chain: None,
+        }
+    }
+
+    /// The op currently heading the activation chain (as
+    /// [`StepPlan::chain_head`]).
+    pub fn chain_head(&self) -> Option<PlanNode> {
+        self.chain.map(PlanNode)
+    }
+
+    /// Advance the activation chain to `node`.
+    pub fn set_chain(&mut self, node: PlanNode) {
+        self.chain = Some(node.0);
+    }
+
+    /// Ops replayed so far.
+    pub fn replayed(&self) -> usize {
+        self.cursor
+    }
+
+    /// Ops the cached step still expects before
+    /// [`super::session::OffloadSession::finish_replay`] will accept it.
+    pub fn remaining(&self) -> usize {
+        self.entry.ops.len() - self.cursor
+    }
+}
+
+/// Cross-step cache of frozen step plans, keyed by shape signature and
+/// session.
+///
+/// The trainer records and schedules a step once, inserts the frozen
+/// [`CachedStep`], and replays it on every later step — the scheduling
+/// work (window ordering, prefetch planning, reconfiguration placement)
+/// is paid once and amortized across the whole run, exactly the
+/// schedule-reuse win *Striking the Balance* reports for repeated
+/// Ryzen-AI GEMM streams. Replay is optimistic: the most recently used
+/// entry for the session is tried first, and any divergence (a shape or
+/// structure change mid-step) surfaces as a recoverable error telling
+/// the caller to re-record.
+///
+/// ```
+/// use xdna_repro::coordinator::plan::{PlanCache, PlanOp, StepPlan};
+/// use xdna_repro::coordinator::session::{OffloadSession, QueueDepth, SessionConfig};
+/// use xdna_repro::gemm::sizes::ProblemSize;
+///
+/// # fn main() -> xdna_repro::Result<()> {
+/// let mut sess = OffloadSession::new(
+///     SessionConfig { depth: QueueDepth(2), ..Default::default() },
+///     &[],
+/// )?;
+/// let size = ProblemSize::new(64, 64, 128);
+/// let (a, b) = (vec![1.0f32; 64 * 64], vec![0.5f32; 64 * 128]);
+/// let mut c = vec![0.0f32; 64 * 128];
+/// let mut cache = PlanCache::new();
+///
+/// // Step 1 — record, execute, freeze, insert (the one cache miss).
+/// let mut plan = StepPlan::new();
+/// sess.record_gemm(&mut plan, &PlanOp::new(size).prefetchable_b(true), &a, &b, &mut c)?;
+/// sess.execute(&mut plan)?;
+/// cache.insert(sess.freeze(plan)?);
+///
+/// // Step 2 — a cache hit: numerics re-run with this step's data, the
+/// // cached schedule is charged without re-scheduling.
+/// let mut replay = sess.begin_replay(&cache).expect("entry cached for this session");
+/// sess.replay_gemm(&mut replay, &PlanOp::new(size).prefetchable_b(true), &a, &b, &mut c)?;
+/// sess.finish_replay(replay)?;
+/// cache.record_hit();
+/// assert_eq!((cache.hits(), cache.misses()), (1, 1));
+/// # Ok(())
+/// # }
+/// ```
+#[derive(Debug, Default)]
+pub struct PlanCache {
+    /// Most recently used first.
+    entries: Vec<CachedStep>,
+    hits: u64,
+    misses: u64,
+}
+
+impl PlanCache {
+    pub fn new() -> PlanCache {
+        PlanCache::default()
+    }
+
+    /// Insert a frozen step (counted as a cache miss — the step had to
+    /// record). Replaces any existing entry with the same session and
+    /// signature and becomes the most recently used.
+    pub fn insert(&mut self, entry: CachedStep) {
+        self.misses += 1;
+        let same = |e: &CachedStep| e.session == entry.session && e.signature == entry.signature;
+        self.entries.retain(|e| !same(e));
+        self.entries.insert(0, entry);
+    }
+
+    /// The most recently used entry recorded on `session`, if any — what
+    /// an optimistic replay tries first.
+    pub fn latest_for(&self, session: u64) -> Option<&CachedStep> {
+        self.entries.iter().find(|e| e.session == session)
+    }
+
+    /// The most recently used entry regardless of session (diagnostics,
+    /// and the session-mismatch error path of
+    /// [`super::session::OffloadSession::replay_entry`]).
+    pub fn latest(&self) -> Option<&CachedStep> {
+        self.entries.first()
+    }
+
+    /// Exact lookup by session and signature.
+    pub fn lookup(&self, session: u64, signature: &StepSignature) -> Option<&CachedStep> {
+        let hit = |e: &&CachedStep| e.session == session && &e.signature == signature;
+        self.entries.iter().find(hit)
+    }
+
+    /// Count one successful cached replay.
+    pub fn record_hit(&mut self) {
+        self.hits += 1;
+    }
+
+    /// Steps served by a cached replay.
+    pub fn hits(&self) -> u64 {
+        self.hits
+    }
+
+    /// Steps that had to record (one per inserted entry, plus
+    /// re-records after divergence).
+    pub fn misses(&self) -> u64 {
+        self.misses
+    }
+
+    /// Distinct cached steps.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
     }
 }
 
@@ -459,6 +810,18 @@ mod tests {
         );
         // Identical modeled work, only scheduled better.
         assert!((planned.pipeline.serial_s() - eager.pipeline.serial_s()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn plan_cache_mode_parses_cli_forms() {
+        assert_eq!("on".parse::<PlanCacheMode>(), Ok(PlanCacheMode::On));
+        assert_eq!("off".parse::<PlanCacheMode>(), Ok(PlanCacheMode::Off));
+        assert!("auto".parse::<PlanCacheMode>().is_err());
+        assert!(PlanCacheMode::On.enabled());
+        assert!(!PlanCacheMode::Off.enabled());
+        assert_eq!(PlanCacheMode::default(), PlanCacheMode::On);
+        assert_eq!(PlanCacheMode::On.to_string(), "on");
+        assert_eq!(PlanCacheMode::Off.to_string(), "off");
     }
 
     #[test]

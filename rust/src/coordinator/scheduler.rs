@@ -24,6 +24,29 @@
 //! order while leaf ops (the backward weight gradients) float free, so
 //! batching groups every same-size leaf across what the ring treated as
 //! wait boundaries.
+//!
+//! The scheduler in isolation — an alternating-size window batches into
+//! two runs instead of paying a reconfiguration per op:
+//!
+//! ```
+//! use xdna_repro::coordinator::scheduler::{SchedulePolicy, Scheduler, WindowOp};
+//! use xdna_repro::gemm::sizes::ProblemSize;
+//!
+//! let small = ProblemSize::new(64, 64, 128);
+//! let large = ProblemSize::new(128, 64, 128);
+//! let window: Vec<WindowOp> = [small, large, small, large]
+//!     .iter()
+//!     .enumerate()
+//!     .map(|(seq, &size)| WindowOp { seq: seq as u64, size, deps: Vec::new() })
+//!     .collect();
+//!
+//! let order = Scheduler::new(SchedulePolicy::BatchBySize).order(&window, None);
+//! assert_eq!(order, vec![0, 2, 1, 3], "one batch per size");
+//! assert_eq!(Scheduler::reconfigs(&window, &order, None), 2);
+//!
+//! let fifo = Scheduler::new(SchedulePolicy::Fifo).order(&window, None);
+//! assert_eq!(Scheduler::reconfigs(&window, &fifo, None), 4, "FIFO switches per op");
+//! ```
 
 use crate::gemm::sizes::ProblemSize;
 

@@ -41,7 +41,9 @@ use crate::util::timer::StageTimer;
 use crate::xrt::{BufferObject, SyncDirection, XrtDevice};
 
 use super::device::{ComputeDevice, DeviceRun, SimulatorDevice};
-use super::plan::{PlanNode, PlanOp, PlannedOp, StepPlan, StepReport};
+use super::plan::{
+    CachedStep, PlanCache, PlanNode, PlanOp, PlanReplay, PlannedOp, StepPlan, StepReport,
+};
 use super::reconfig::{self, ReconfigPolicy};
 use super::scheduler::{SchedulePolicy, Scheduler, WindowOp};
 use super::transpose::transpose_into;
@@ -169,6 +171,42 @@ impl std::fmt::Display for ShardPolicy {
     }
 }
 
+/// How far ahead the step-plan replay hoists prefetchable B staging
+/// (weights and saved activations, whose bytes are known before the step
+/// runs) under earlier invocations' kernels. Depth-1 rings never
+/// prefetch regardless of this setting — there is no second slot to
+/// stage into.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PrefetchHorizon {
+    /// Never hoist: staging stays strictly in invocation order.
+    None,
+    /// Hoist only the next scheduled invocation's B (the PR-3
+    /// behaviour, kept as the comparison baseline).
+    Next,
+    /// Hoist *every* prefetchable B in the scheduled window, subject to
+    /// ring-slot availability: at most `depth - 1` hoisted stagings stay
+    /// outstanding, so the pipeline head always finds a free slot. The
+    /// replay also models the `Next` schedule and charges whichever
+    /// makespan is smaller, so `Deep` is never modeled slower than
+    /// `Next`.
+    #[default]
+    Deep,
+}
+
+/// The concrete prefetch plan a step replay charges (the resolved form
+/// of [`PrefetchHorizon`], chosen per step by simulating the candidate
+/// schedules on the modeled timeline).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum HorizonChoice {
+    /// No hoisting (always the case on depth-1 rings).
+    None,
+    /// Hoist only the immediately next scheduled op's B.
+    Next,
+    /// Scan the remaining window, keeping up to this many hoisted
+    /// stagings outstanding.
+    Deep(usize),
+}
+
 /// Typed descriptor of one offloaded GEMM (replaces the old positional
 /// `submit(size, a, a_layout, b, b_layout)` argument list).
 #[derive(Debug, Clone)]
@@ -233,6 +271,8 @@ pub struct SessionConfig {
     pub depth: QueueDepth,
     pub shards: ShardPolicy,
     pub schedule: SchedulePolicy,
+    /// How deep the step-plan replay prefetches known-ahead B staging.
+    pub prefetch: PrefetchHorizon,
 }
 
 impl Default for SessionConfig {
@@ -243,6 +283,7 @@ impl Default for SessionConfig {
             depth: QueueDepth::default(),
             shards: ShardPolicy::default(),
             schedule: SchedulePolicy::Fifo,
+            prefetch: PrefetchHorizon::default(),
         }
     }
 }
@@ -304,6 +345,26 @@ struct Prepared {
     invocations: u64,
     wall_s: f64,
     modeled_s: f64,
+}
+
+/// Everything one physical invocation captures for a plan op: the
+/// modeled stage durations (deterministic functions of the shape, the
+/// layouts, and the calibrated cost models) plus telemetry.
+struct InvocationCapture {
+    host_a_s: f64,
+    host_b_s: f64,
+    sync_in_s: f64,
+    /// Reconfiguration actually applied while programming the array (0
+    /// when it was already configured — e.g. every step after the first
+    /// of a cached run).
+    rec_applied_s: f64,
+    /// Padded strip-variant size (the granularity reconfiguration
+    /// tracks).
+    strip_size: ProblemSize,
+    /// Per strip: (partition-scaled kernel seconds, output sync seconds).
+    strips: Vec<(f64, f64)>,
+    energy_j: f64,
+    wall_s: f64,
 }
 
 /// Stats of one op's executed device work.
@@ -386,6 +447,7 @@ pub struct OffloadSession {
     /// full shim-column width under [`ShardPolicy::Auto`].
     shards: usize,
     shard_policy: ShardPolicy,
+    prefetch: PrefetchHorizon,
     scheduler: Scheduler,
     id: u64,
     registry: BTreeMap<ProblemSize, Prepared>,
@@ -527,6 +589,126 @@ fn merge_strip_outputs(
     Ok(())
 }
 
+/// One executed strip of [`run_device_stages`]: the modeled
+/// reconfiguration applied before it (0 when the array was already
+/// programmed), its partition-scaled kernel seconds, and its output
+/// sync.
+struct StripEvent {
+    reconfig_s: f64,
+    kernel_s: f64,
+    sync_out_s: f64,
+}
+
+/// Outcome of the per-strip device-stage loop. `events` holds every
+/// strip that ran (wallclock already accrued); `err` is a device failure
+/// *after* those strips — the caller decides whether the completed
+/// strips' modeled charges stand (the eager drain poisons the op but
+/// keeps them) or the whole invocation is abandoned (the record/replay
+/// paths). `err_reconfig_s` is a reconfiguration that was physically
+/// applied for the strip whose kernel then failed: the array really
+/// switched, so the eager drain still charges it.
+struct StripRun {
+    events: Vec<StripEvent>,
+    energy_j: f64,
+    err: Option<Error>,
+    err_reconfig_s: f64,
+}
+
+/// The per-strip device-stage loop — the shared middle of the eager
+/// drain ([`OffloadSession::wait`]'s `execute_one`), plan recording, and
+/// cached-plan replay (the staging and merge halves are
+/// [`stage_slot_inputs`] and [`merge_strip_outputs`]). Per strip:
+/// reconfigure the array if its programmed variant changed, run the
+/// kernel on the [`ComputeDevice`], and sync the strip output back.
+/// Wallclock accrues to `stages`; all *modeled* charging (timeline
+/// barriers and spans, stage totals) is the caller's, from the returned
+/// events.
+fn run_device_stages(
+    device: &mut dyn ComputeDevice,
+    dev: &mut XrtDevice,
+    policy: ReconfigPolicy,
+    current_strip: &mut Option<ProblemSize>,
+    stages: &mut StageTimer,
+    prep: &mut Prepared,
+    slot: usize,
+) -> StripRun {
+    let mut run = StripRun {
+        events: Vec::with_capacity(prep.strips.len()),
+        energy_j: 0.0,
+        err: None,
+        err_reconfig_s: 0.0,
+    };
+    for i in 0..prep.strips.len() {
+        // -- Stage 3: reconfiguration (only on programmed-size change). --
+        let t3 = Instant::now();
+        let v = prep.strips[i].variant;
+        let strip_size = prep.variants[v].tiling.size;
+        let reconfig_s = if *current_strip != Some(strip_size) {
+            match reconfig::apply(
+                policy,
+                dev,
+                &prep.variants[v].tiling,
+                &prep.variants[v].inst,
+            ) {
+                Ok(cost) => {
+                    *current_strip = Some(strip_size);
+                    cost
+                }
+                Err(e) => {
+                    run.err = Some(e);
+                    return run;
+                }
+            }
+        } else {
+            0.0
+        };
+        stages.add(STAGE_RECONFIG, t3.elapsed());
+
+        // -- Stage 4: the kernel, on whichever ComputeDevice. -----------
+        let t4 = Instant::now();
+        let span = {
+            let slot_bos = &mut prep.slots[slot];
+            let a_bo = &slot_bos.a_bo;
+            let ss = &mut slot_bos.strips[i];
+            match device.run(DeviceRun {
+                xrt: &mut *dev,
+                tiling: &prep.variants[v].tiling,
+                logical: prep.strips[i].logical,
+                a: a_bo,
+                b: &ss.b_bo,
+                c: &mut ss.c_bo,
+            }) {
+                Ok(span) => span,
+                Err(e) => {
+                    run.err = Some(e);
+                    run.err_reconfig_s = reconfig_s;
+                    return run;
+                }
+            }
+        };
+        stages.add(STAGE_KERNEL, t4.elapsed());
+
+        // -- Stage 5: output sync. --------------------------------------
+        let t5 = Instant::now();
+        let sync_out_s =
+            dev.sync_bo(&mut prep.slots[slot].strips[i].c_bo, SyncDirection::FromDevice);
+        stages.add(STAGE_OUTPUT_SYNC, t5.elapsed());
+
+        // A strip occupies a 1/strips column partition, so its kernel
+        // runs `strips` times slower than the whole-array span the device
+        // reported — aggregate array throughput is conserved; fixed
+        // issue/dispatch overheads do not shrink. Unsharded ops (one
+        // strip) keep the exact whole-array span.
+        run.events.push(StripEvent {
+            reconfig_s,
+            kernel_s: span.on_partition(prep.strips.len()),
+            sync_out_s,
+        });
+        run.energy_j += span.energy_j;
+    }
+    run
+}
+
 /// Stage every strip of `b` into its slot BO (sequentially; the strips of
 /// one invocation share the host's staging bandwidth either way).
 fn stage_b_all(
@@ -595,6 +777,159 @@ fn stage_b_strip(
     }
 }
 
+/// The scheduler's view of a recorded step.
+fn plan_window(ops: &[PlannedOp]) -> Vec<WindowOp> {
+    ops.iter()
+        .enumerate()
+        .map(|(i, op)| WindowOp {
+            seq: i as u64,
+            size: op.size,
+            deps: op.deps.iter().map(|&d| d as u64).collect(),
+        })
+        .collect()
+}
+
+/// Outcome of one modeled step walk: what [`walk_step`] charged, per op
+/// in record order.
+struct StepWalk {
+    /// Modeled reconfiguration charged to each op (0 when the array kept
+    /// its programming).
+    reconfig_s: Vec<f64>,
+    /// Ops whose B staging was hoisted under an earlier kernel.
+    prefetched: Vec<bool>,
+    reconfigs: usize,
+}
+
+/// Walk a scheduled step over the modeled timeline — the one replay loop
+/// shared by [`OffloadSession::execute`], the cached-step replay
+/// ([`OffloadSession::finish_replay`]), and the prefetch-horizon
+/// simulations (which pass a *clone* of the session timeline).
+///
+/// The walk charges, in scheduler order: each op's host staging (minus
+/// any B hoisted earlier), a reconfiguration barrier where the chosen
+/// order switches strip variants (plus `once_pool` on the first switch —
+/// one-time loads captured at record), each column strip's device span,
+/// and the output merges as dependencies or ring pressure retire ops. At
+/// most `depth` invocations hold ring slots at once, *counting hoisted
+/// prefetch stagings as slot holders* — a hoisted B physically occupies
+/// its op's slot from staging until the op retires — and hoists are
+/// capped at `depth - 1` outstanding so the pipeline head can always
+/// claim a slot. Device spans never overlap on a column (a
+/// [`PipelineTimeline`] invariant), so overlap only ever hides work.
+fn walk_step(
+    ops: &[PlannedOp],
+    order: &[usize],
+    depth: usize,
+    choice: HorizonChoice,
+    scale: f64,
+    start_strip: Option<ProblemSize>,
+    once_pool: f64,
+    tl: &mut PipelineTimeline,
+) -> StepWalk {
+    let n = ops.len();
+    let mut dev_done = vec![0.0f64; n];
+    let mut retired = vec![false; n];
+    let mut prefetched = vec![false; n];
+    let mut reconfig_s = vec![0.0f64; n];
+    let mut in_flight: VecDeque<usize> = VecDeque::new();
+    // Hoisted-but-not-yet-executed B stagings (each holds a ring slot).
+    let mut claims = 0usize;
+    let mut strip = start_strip;
+    let mut once = once_pool;
+    let mut reconfigs = 0usize;
+
+    for (pos, &idx) in order.iter().enumerate() {
+        // The op's activation staging cannot begin before every
+        // dependency's output is merged back; retire those first, then
+        // make room in the ring.
+        for &d in &ops[idx].deps {
+            if !retired[d] {
+                tl.wait(dev_done[d], ops[d].host_post_s);
+                retired[d] = true;
+                in_flight.retain(|&x| x != d);
+            }
+        }
+        if prefetched[idx] {
+            // Its hoisted B already holds this op's slot; the claim
+            // converts into the in-flight hold below.
+            claims -= 1;
+        }
+        while in_flight.len() + claims >= depth {
+            let d = in_flight
+                .pop_front()
+                .expect("claims stay below depth, so the ring holds an op to retire");
+            tl.wait(dev_done[d], ops[d].host_post_s);
+            retired[d] = true;
+        }
+        let op = &ops[idx];
+        // Same float summation order as the eager submit path
+        // ((a + b) + sync) so depth-1 FIFO replay is bit-exact.
+        let pre = if prefetched[idx] {
+            op.host_a_s + op.sync_in_s
+        } else {
+            op.host_a_s + op.host_b_s + op.sync_in_s
+        };
+        let ready = tl.stage(pre);
+        if strip != Some(op.strip_size) {
+            let rc = op.reconfig_switch_s + once;
+            once = 0.0;
+            strip = Some(op.strip_size);
+            reconfigs += 1;
+            reconfig_s[idx] = rc;
+            tl.barrier(ready, rc * scale);
+        }
+        let mut done = ready;
+        for (col, &(kernel_s, sync_out_s)) in op.strips.iter().enumerate() {
+            let span_s = (kernel_s + sync_out_s) * scale;
+            done = done.max(tl.run_on(col, ready, span_s));
+        }
+        dev_done[idx] = done;
+        in_flight.push_back(idx);
+
+        // Hoist upcoming known-ahead B staging under this op's kernel.
+        match choice {
+            HorizonChoice::None => {}
+            HorizonChoice::Next => {
+                // PR-3 behaviour: only the next scheduled op. The claim
+                // is always consumed on the very next iteration, so ring
+                // accounting reduces to the plain `in_flight >= depth`
+                // drain.
+                if let Some(&next) = order.get(pos + 1) {
+                    if ops[next].prefetch_b && !prefetched[next] {
+                        tl.stage(ops[next].host_b_s);
+                        prefetched[next] = true;
+                        claims += 1;
+                    }
+                }
+            }
+            HorizonChoice::Deep(cap) => {
+                for &q in order[pos + 1..].iter() {
+                    if claims >= cap || in_flight.len() + claims >= depth {
+                        break;
+                    }
+                    if ops[q].prefetch_b && !prefetched[q] {
+                        tl.stage(ops[q].host_b_s);
+                        prefetched[q] = true;
+                        claims += 1;
+                    }
+                }
+            }
+        }
+    }
+    // Drain the remaining output copies in ring order.
+    while let Some(d) = in_flight.pop_front() {
+        if !retired[d] {
+            tl.wait(dev_done[d], ops[d].host_post_s);
+            retired[d] = true;
+        }
+    }
+    StepWalk {
+        reconfig_s,
+        prefetched,
+        reconfigs,
+    }
+}
+
 impl OffloadSession {
     /// Open a session and preload `sizes` into the registry (paper section
     /// V-A). More sizes can be registered later (lazily on first submit).
@@ -613,6 +948,7 @@ impl OffloadSession {
             depth: cfg.depth.get(),
             shards,
             shard_policy: cfg.shards,
+            prefetch: cfg.prefetch,
             scheduler: Scheduler::new(cfg.schedule),
             id: NEXT_SESSION_ID.fetch_add(1, Ordering::Relaxed),
             registry: BTreeMap::new(),
@@ -656,16 +992,7 @@ impl OffloadSession {
         // Sizes whose quantum count has no friendly divisor shard less
         // (a prime count falls back to unsharded).
         let n_quanta = size.n.div_ceil(n_quantum);
-        let s_eff = match self.shard_policy {
-            ShardPolicy::Fixed(_) => {
-                let shard_cap = self.shards.min(n_quanta).max(1);
-                (1..=shard_cap)
-                    .rev()
-                    .find(|s| n_quanta % s == 0)
-                    .unwrap_or(1)
-            }
-            ShardPolicy::Auto => self.pick_shards(size, k_p, n_quantum, n_quanta),
-        };
+        let s_eff = self.effective_shards(size, k_p, n_quantum, n_quanta);
         let quanta_per_strip = n_quanta / s_eff;
         let mut strips = Vec::with_capacity(s_eff);
         let mut variants: Vec<StripVariant> = Vec::new();
@@ -728,6 +1055,30 @@ impl OffloadSession {
             },
         );
         Ok(())
+    }
+
+    /// The strip count `size` splits into under this session's shard
+    /// policy: the largest divisor of its quantum count within the fixed
+    /// cap, or the cost-model pick under [`ShardPolicy::Auto`]. Shared by
+    /// physical registration and the modeled dry-run record
+    /// ([`Self::record_modeled`]), so both agree on the layout.
+    fn effective_shards(
+        &self,
+        size: ProblemSize,
+        k_p: usize,
+        n_quantum: usize,
+        n_quanta: usize,
+    ) -> usize {
+        match self.shard_policy {
+            ShardPolicy::Fixed(_) => {
+                let shard_cap = self.shards.min(n_quanta).max(1);
+                (1..=shard_cap)
+                    .rev()
+                    .find(|s| n_quanta % s == 0)
+                    .unwrap_or(1)
+            }
+            ShardPolicy::Auto => self.pick_shards(size, k_p, n_quantum, n_quanta),
+        }
     }
 
     /// Pick the shard count for `size` under [`ShardPolicy::Auto`]: for
@@ -816,6 +1167,11 @@ impl OffloadSession {
     /// The scheduling policy the session drains its window with.
     pub fn schedule_policy(&self) -> SchedulePolicy {
         self.scheduler.policy
+    }
+
+    /// How deep the step-plan replay prefetches known-ahead B staging.
+    pub fn prefetch_horizon(&self) -> PrefetchHorizon {
+        self.prefetch
     }
 
     /// The numerics device's name.
@@ -1022,86 +1378,58 @@ impl OffloadSession {
         }
     }
 
-    /// Device-side stages of one staged op: per strip, reconfigure the
-    /// array if its programmed size changed, run the kernel on the
-    /// [`ComputeDevice`], and sync the strip output back. Strips land on
-    /// their own timeline columns; reconfigurations are array-wide
-    /// barriers.
+    /// Device-side stages of one staged op, through the shared per-strip
+    /// loop ([`run_device_stages`]). Strips land on their own timeline
+    /// columns; reconfigurations are array-wide barriers. On a mid-op
+    /// device failure the completed strips' modeled charges stand (they
+    /// really ran; re-running would double-count kernel time) and the op
+    /// is poisoned by the caller.
     fn execute_one(&mut self, prep: &mut Prepared, pend: &mut PendingOp) -> Result<()> {
+        let run = run_device_stages(
+            self.device.as_mut(),
+            &mut self.dev,
+            self.policy,
+            &mut self.current_strip,
+            &mut self.stages,
+            prep,
+            pend.slot,
+        );
         let mut kernel_s = 0.0f64;
         let mut sync_out_s = 0.0f64;
         let mut reconfig_s = 0.0f64;
-        let mut energy_j = 0.0f64;
         let mut device_done = 0.0f64;
-        for i in 0..prep.strips.len() {
-            // -- Stage 3: reconfiguration (only on programmed-size change).
-            let t3 = Instant::now();
-            let v = prep.strips[i].variant;
-            let strip_size = prep.variants[v].tiling.size;
-            let reconfig_cost = if self.current_strip != Some(strip_size) {
-                let cost = reconfig::apply(
-                    self.policy,
-                    &mut self.dev,
-                    &prep.variants[v].tiling,
-                    &prep.variants[v].inst,
-                )?;
-                self.current_strip = Some(strip_size);
-                cost
-            } else {
-                0.0
-            };
-            self.stages.add(STAGE_RECONFIG, t3.elapsed());
-            self.add_modeled(STAGE_RECONFIG, reconfig_cost);
-            if reconfig_cost > 0.0 {
+        for (i, ev) in run.events.iter().enumerate() {
+            self.add_modeled(STAGE_RECONFIG, ev.reconfig_s);
+            if ev.reconfig_s > 0.0 {
                 self.pipeline
-                    .barrier(pend.ready_s, reconfig_cost * self.device_time_scale);
+                    .barrier(pend.ready_s, ev.reconfig_s * self.device_time_scale);
             }
-            reconfig_s += reconfig_cost;
-
-            // -- Stage 4: the kernel, on whichever ComputeDevice. ---------
-            let t4 = Instant::now();
-            let span = {
-                let slot_bos = &mut prep.slots[pend.slot];
-                let a_bo = &slot_bos.a_bo;
-                let ss = &mut slot_bos.strips[i];
-                self.device.run(DeviceRun {
-                    xrt: &mut self.dev,
-                    tiling: &prep.variants[v].tiling,
-                    logical: prep.strips[i].logical,
-                    a: a_bo,
-                    b: &ss.b_bo,
-                    c: &mut ss.c_bo,
-                })?
-            };
-            // A strip occupies a 1/strips column partition, so its kernel
-            // runs `strips` times slower than the whole-array span the
-            // device reported — aggregate array throughput is conserved;
-            // fixed issue/dispatch overheads do not shrink. Unsharded ops
-            // (one strip) keep the exact whole-array span.
-            let strip_kernel_s = span.on_partition(prep.strips.len());
-            self.stages.add(STAGE_KERNEL, t4.elapsed());
-            self.add_modeled(STAGE_KERNEL, strip_kernel_s);
-            self.modeled_energy_j += span.energy_j;
-            kernel_s += strip_kernel_s;
-            energy_j += span.energy_j;
-
-            // -- Stage 5: output sync. ------------------------------------
-            let t5 = Instant::now();
-            let so = self
-                .dev
-                .sync_bo(&mut prep.slots[pend.slot].strips[i].c_bo, SyncDirection::FromDevice);
-            self.stages.add(STAGE_OUTPUT_SYNC, t5.elapsed());
-            self.add_modeled(STAGE_OUTPUT_SYNC, so);
-            sync_out_s += so;
+            reconfig_s += ev.reconfig_s;
+            self.add_modeled(STAGE_KERNEL, ev.kernel_s);
+            kernel_s += ev.kernel_s;
+            self.add_modeled(STAGE_OUTPUT_SYNC, ev.sync_out_s);
+            sync_out_s += ev.sync_out_s;
 
             // -- Timeline: strip i streams on column i; spans on one column
             //    never overlap. ------------------------------------------
             let done = self.pipeline.run_on(
                 i,
                 pend.ready_s,
-                (strip_kernel_s + so) * self.device_time_scale,
+                (ev.kernel_s + ev.sync_out_s) * self.device_time_scale,
             );
             device_done = device_done.max(done);
+        }
+        self.modeled_energy_j += run.energy_j;
+        if let Some(e) = run.err {
+            // A reconfiguration applied just before the failing kernel
+            // really reprogrammed the array: charge it as the inline loop
+            // always did, even though the strip produced no event.
+            if run.err_reconfig_s > 0.0 {
+                self.add_modeled(STAGE_RECONFIG, run.err_reconfig_s);
+                self.pipeline
+                    .barrier(pend.ready_s, run.err_reconfig_s * self.device_time_scale);
+            }
+            return Err(e);
         }
         self.current_logical = Some(pend.size);
         pend.state = OpState::Executed(Executed {
@@ -1109,7 +1437,7 @@ impl OffloadSession {
             kernel_s,
             sync_out_s,
             reconfig_s,
-            energy_j,
+            energy_j: run.energy_j,
         });
         Ok(())
     }
@@ -1279,6 +1607,54 @@ impl OffloadSession {
             plan.initial_strip = self.current_strip;
             plan.initial_logical = self.current_logical;
         }
+        let cap = self.run_invocation(size, op.a_layout, op.b_layout, a, b, c)?;
+
+        // Steady-state cost of switching the array to this op's variant —
+        // what the replay charges at every size change it schedules. The
+        // one-time remainder (the first-ever xclbin load under the minimal
+        // policy) rides on whichever op heads the replay's first switch.
+        let timing = &self.dev.npu.timing;
+        let reconfig_switch_s = match self.policy {
+            ReconfigPolicy::Minimal => timing.minimal_reconfig_s,
+            ReconfigPolicy::FullArray => timing.full_reconfig_s + timing.minimal_reconfig_s,
+        };
+        let reconfig_once_s = (cap.rec_applied_s - reconfig_switch_s).max(0.0);
+        plan.ops.push(PlannedOp {
+            size,
+            strip_size: cap.strip_size,
+            a_layout: op.a_layout,
+            b_layout: op.b_layout,
+            deps: op.deps.iter().map(|d| d.index()).collect(),
+            prefetch_b: op.prefetch_b,
+            host_a_s: cap.host_a_s,
+            host_b_s: cap.host_b_s,
+            sync_in_s: cap.sync_in_s,
+            reconfig_switch_s,
+            reconfig_once_s,
+            strips: cap.strips,
+            host_post_s: self.host_model.copy_s(m * n * 4),
+            energy_j: cap.energy_j,
+            wall_s: cap.wall_s,
+        });
+        Ok(PlanNode(plan.ops.len() - 1))
+    }
+
+    /// Run one complete physical invocation — stage, sync, the shared
+    /// per-strip device loop, merge — and capture its modeled stage
+    /// durations. The common numerics body of [`Self::record_gemm`] and
+    /// [`Self::replay_gemm`]: nothing is charged to the modeled timeline
+    /// here (that is the replay's job); wallclock accrues to
+    /// [`Self::stages`] as always.
+    fn run_invocation(
+        &mut self,
+        size: ProblemSize,
+        a_layout: InputLayout,
+        b_layout: InputLayout,
+        a: &[f32],
+        b: &[f32],
+        c: &mut [f32],
+    ) -> Result<InvocationCapture> {
+        let (m, k, n) = (size.m, size.k, size.n);
         if !self.registry.contains_key(&size) {
             self.register_size(size)?;
         }
@@ -1299,9 +1675,9 @@ impl OffloadSession {
             &mut prep,
             slot,
             a,
-            op.a_layout,
+            a_layout,
             b,
-            op.b_layout,
+            b_layout,
             size,
             k_p,
             self.depth > 1,
@@ -1343,61 +1719,17 @@ impl OffloadSession {
         // -- Device stages: program the array (functionally — the modeled
         //    reconfiguration charge is the replay's to decide), run every
         //    strip, capture its span. ------------------------------------
-        let mut rec_applied = 0.0f64;
-        let mut strips: Vec<(f64, f64)> = Vec::with_capacity(prep.strips.len());
-        let mut energy_j = 0.0f64;
         let strip_size = prep.variants[prep.strips[0].variant].tiling.size;
-        let mut run_err = None;
-        for i in 0..prep.strips.len() {
-            let v = prep.strips[i].variant;
-            let vsize = prep.variants[v].tiling.size;
-            if self.current_strip != Some(vsize) {
-                let t3 = Instant::now();
-                match reconfig::apply(
-                    self.policy,
-                    &mut self.dev,
-                    &prep.variants[v].tiling,
-                    &prep.variants[v].inst,
-                ) {
-                    Ok(cost) => rec_applied += cost,
-                    Err(e) => {
-                        run_err = Some(e);
-                        break;
-                    }
-                }
-                self.stages.add(STAGE_RECONFIG, t3.elapsed());
-                self.current_strip = Some(vsize);
-            }
-            let t4 = Instant::now();
-            let span = {
-                let slot_bos = &mut prep.slots[slot];
-                let a_bo = &slot_bos.a_bo;
-                let ss = &mut slot_bos.strips[i];
-                match self.device.run(DeviceRun {
-                    xrt: &mut self.dev,
-                    tiling: &prep.variants[v].tiling,
-                    logical: prep.strips[i].logical,
-                    a: a_bo,
-                    b: &ss.b_bo,
-                    c: &mut ss.c_bo,
-                }) {
-                    Ok(span) => span,
-                    Err(e) => {
-                        run_err = Some(e);
-                        break;
-                    }
-                }
-            };
-            self.stages.add(STAGE_KERNEL, t4.elapsed());
-            let t5 = Instant::now();
-            let so = self
-                .dev
-                .sync_bo(&mut prep.slots[slot].strips[i].c_bo, SyncDirection::FromDevice);
-            self.stages.add(STAGE_OUTPUT_SYNC, t5.elapsed());
-            strips.push((span.on_partition(prep.strips.len()), so));
-            energy_j += span.energy_j;
-        }
-        if let Some(e) = run_err {
+        let run = run_device_stages(
+            self.device.as_mut(),
+            &mut self.dev,
+            self.policy,
+            &mut self.current_strip,
+            &mut self.stages,
+            &mut prep,
+            slot,
+        );
+        if let Some(e) = run.err {
             prep.free.push_back(slot);
             self.registry.insert(size, prep);
             return Err(e);
@@ -1415,32 +1747,16 @@ impl OffloadSession {
         prep.free.push_back(slot);
         self.registry.insert(size, prep);
 
-        // Steady-state cost of switching the array to this op's variant —
-        // what the replay charges at every size change it schedules. The
-        // one-time remainder (the first-ever xclbin load under the minimal
-        // policy) rides on whichever op heads the replay's first switch.
-        let timing = &self.dev.npu.timing;
-        let reconfig_switch_s = match self.policy {
-            ReconfigPolicy::Minimal => timing.minimal_reconfig_s,
-            ReconfigPolicy::FullArray => timing.full_reconfig_s + timing.minimal_reconfig_s,
-        };
-        let reconfig_once_s = (rec_applied - reconfig_switch_s).max(0.0);
-        plan.ops.push(PlannedOp {
-            size,
-            strip_size,
-            deps: op.deps.iter().map(|d| d.index()).collect(),
-            prefetch_b: op.prefetch_b,
+        Ok(InvocationCapture {
             host_a_s,
             host_b_s,
             sync_in_s,
-            reconfig_switch_s,
-            reconfig_once_s,
-            strips,
-            host_post_s: self.host_model.copy_s(m * n * 4),
-            energy_j,
+            rec_applied_s: run.events.iter().map(|e| e.reconfig_s).sum(),
+            strip_size,
+            strips: run.events.iter().map(|e| (e.kernel_s, e.sync_out_s)).collect(),
+            energy_j: run.energy_j,
             wall_s: t_wall.elapsed().as_secs_f64(),
-        });
-        Ok(PlanNode(plan.ops.len() - 1))
+        })
     }
 
     /// Schedule and charge a recorded step (the schedule+execute half of
@@ -1452,11 +1768,15 @@ impl OffloadSession {
     /// replay walks that order on the modeled timeline: activation staging
     /// waits for its dependencies' merged outputs, at most
     /// [`QueueDepth`] invocations stay in flight, prefetchable B staging
-    /// (weights) is hoisted under the previous invocation's kernel (rings
-    /// of depth ≥ 2 only), reconfigurations barrier the array exactly
-    /// where the chosen order switches strip variants, and every stage
-    /// statistic (modeled stage seconds, invocation counts, energy,
-    /// per-size records) accrues as the eager path would have charged it.
+    /// (weights, saved activations) is hoisted under earlier kernels as
+    /// deep as the ring has slots (the session's [`PrefetchHorizon`];
+    /// rings of depth ≥ 2 only, and under the default `Deep` horizon the
+    /// candidate schedules are simulated and the smallest makespan is
+    /// charged, so deepening never loses to the one-op hoist),
+    /// reconfigurations barrier the array exactly where the chosen order
+    /// switches strip variants, and every stage statistic (modeled stage
+    /// seconds, invocation counts, energy, per-size records) accrues as
+    /// the eager path would have charged it.
     ///
     /// On a depth-1 unsharded FIFO session the replay is stage-for-stage
     /// the strictly serial Figure-7 schedule — identical timeline, stage
@@ -1498,124 +1818,428 @@ impl OffloadSession {
                 energy_j: 0.0,
             });
         }
-        let window: Vec<WindowOp> = plan
-            .ops
-            .iter()
-            .enumerate()
-            .map(|(i, op)| WindowOp {
-                seq: i as u64,
-                size: op.size,
-                deps: op.deps.iter().map(|&d| d as u64).collect(),
-            })
-            .collect();
+        let window = plan_window(&plan.ops);
         let order = self.scheduler.order(&window, plan.initial_logical);
-        let prefetch_ok = self.depth >= 2;
-        let scale = self.device_time_scale;
-
-        let mut dev_done = vec![0.0f64; n];
-        let mut retired = vec![false; n];
-        let mut prefetched = vec![false; n];
-        let mut in_flight: VecDeque<usize> = VecDeque::new();
-        let mut replay_strip = plan.initial_strip;
-        let mut once_pool: f64 = plan.ops.iter().map(|o| o.reconfig_once_s).sum();
-        let mut reconfigs = 0usize;
-        let mut stats: Vec<Option<InvocationStats>> = vec![None; n];
-        let mut energy = 0.0f64;
-
-        for (pos, &idx) in order.iter().enumerate() {
-            // The op's activation staging cannot begin before every
-            // dependency's output is merged back; retire those first, then
-            // make room in the ring.
-            for &d in &plan.ops[idx].deps {
-                if !retired[d] {
-                    self.pipeline.wait(dev_done[d], plan.ops[d].host_post_s);
-                    retired[d] = true;
-                    in_flight.retain(|&x| x != d);
-                }
-            }
-            while in_flight.len() >= self.depth {
-                let d = in_flight.pop_front().expect("non-empty");
-                self.pipeline.wait(dev_done[d], plan.ops[d].host_post_s);
-                retired[d] = true;
-            }
-            let op = &plan.ops[idx];
-            // Same float summation order as the eager submit path
-            // ((a + b) + sync) so depth-1 FIFO replay is bit-exact.
-            let pre = if prefetched[idx] {
-                op.host_a_s + op.sync_in_s
-            } else {
-                op.host_a_s + op.host_b_s + op.sync_in_s
-            };
-            let ready = self.pipeline.stage(pre);
-            let mut rc = 0.0;
-            if replay_strip != Some(op.strip_size) {
-                rc = op.reconfig_switch_s + once_pool;
-                once_pool = 0.0;
-                replay_strip = Some(op.strip_size);
-                reconfigs += 1;
-                self.pipeline.barrier(ready, rc * scale);
-            }
-            self.add_modeled(STAGE_RECONFIG, rc);
-            self.add_modeled(STAGE_INPUT_SYNC, op.sync_in_s);
-            let mut done = ready;
-            for (col, &(kernel_s, sync_out_s)) in op.strips.iter().enumerate() {
-                let span_s = (kernel_s + sync_out_s) * scale;
-                done = done.max(self.pipeline.run_on(col, ready, span_s));
-                self.add_modeled(STAGE_KERNEL, kernel_s);
-                self.add_modeled(STAGE_OUTPUT_SYNC, sync_out_s);
-            }
-            dev_done[idx] = done;
-            in_flight.push_back(idx);
-            // Hoist the next scheduled op's known-ahead B staging under
-            // this op's kernel (the forward-pass weight prefetch).
-            if let Some(&next) = order.get(pos + 1) {
-                if prefetch_ok && plan.ops[next].prefetch_b && !prefetched[next] {
-                    self.pipeline.stage(plan.ops[next].host_b_s);
-                    prefetched[next] = true;
-                }
-            }
-            let st = InvocationStats {
-                size: op.size,
-                modeled_kernel_s: op.kernel_s(),
-                modeled_sync_in_s: op.sync_in_s,
-                modeled_sync_out_s: op.sync_out_s(),
-                modeled_reconfig_s: rc,
-                modeled_energy_j: op.energy_j,
-                wall_s: op.wall_s,
-            };
-            energy += op.energy_j;
-            self.modeled_energy_j += op.energy_j;
-            self.invocations += 1;
-            if let Some(prep) = self.registry.get_mut(&op.size) {
-                prep.invocations += 1;
-                prep.wall_s += op.wall_s;
-                prep.modeled_s += st.modeled_total_s();
-            }
-            stats[idx] = Some(st);
-        }
-        // Drain the remaining output copies in ring order.
-        while let Some(d) = in_flight.pop_front() {
-            if !retired[d] {
-                self.pipeline.wait(dev_done[d], plan.ops[d].host_post_s);
-                retired[d] = true;
-            }
-        }
+        let once_pool: f64 = plan.ops.iter().map(|o| o.reconfig_once_s).sum();
+        let choice = self.pick_horizon(&plan.ops, &order, plan.initial_strip, once_pool);
+        let walk = walk_step(
+            &plan.ops,
+            &order,
+            self.depth,
+            choice,
+            self.device_time_scale,
+            plan.initial_strip,
+            once_pool,
+            &mut self.pipeline,
+        );
         // The physical array state is the *record*-order end state
         // (record programmed the array; the replay is modeled), and
         // record_gemm already advanced current_strip/current_logical to
         // it — so both the next plan's replay start and the next
         // scheduling anchor stay consistent with the hardware.
-        let stats: Vec<InvocationStats> = stats
-            .into_iter()
-            .map(|s| s.expect("every recorded op is scheduled"))
-            .collect();
+        let stats = self.charge_step(&plan.ops, &walk, None);
+        let energy = plan.ops.iter().map(|o| o.energy_j).sum();
         Ok(StepReport {
             stats,
             order,
             serial_growth_s: self.pipeline.serial_s() - serial_before,
             makespan_growth_s: self.pipeline.makespan_s() - makespan_before,
-            reconfigs,
-            prefetched: prefetched.iter().filter(|&&p| p).count(),
+            reconfigs: walk.reconfigs,
+            prefetched: walk.prefetched.iter().filter(|&&p| p).count(),
+            energy_j: energy,
+        })
+    }
+
+    /// Resolve the session's [`PrefetchHorizon`] into the concrete plan
+    /// this step replays with. `Deep` is chosen *by measurement*: every
+    /// candidate schedule — the PR-3 one-op hoist plus deep scans at
+    /// each claims cap up to `depth - 1` — is simulated on a clone of
+    /// the modeled timeline and the smallest makespan wins (first on
+    /// ties, so the baseline is preferred when deeper hoisting buys
+    /// nothing). The charged schedule is therefore *monotone*: never
+    /// modeled slower than the one-op horizon, which is never slower
+    /// than no prefetch.
+    fn pick_horizon(
+        &self,
+        ops: &[PlannedOp],
+        order: &[usize],
+        start_strip: Option<ProblemSize>,
+        once_pool: f64,
+    ) -> HorizonChoice {
+        if self.depth < 2 {
+            return HorizonChoice::None;
+        }
+        match self.prefetch {
+            PrefetchHorizon::None => return HorizonChoice::None,
+            PrefetchHorizon::Next => return HorizonChoice::Next,
+            PrefetchHorizon::Deep => {}
+        }
+        if ops.len() < 2 || !ops.iter().any(|o| o.prefetch_b) {
+            // Nothing to hoist: every candidate is the same schedule.
+            return HorizonChoice::Next;
+        }
+        let mut candidates = vec![HorizonChoice::Next];
+        candidates.extend((1..self.depth).map(HorizonChoice::Deep));
+        let mut best = (HorizonChoice::Next, f64::INFINITY);
+        for &cand in &candidates {
+            let mut tl = self.pipeline.clone();
+            walk_step(
+                ops,
+                order,
+                self.depth,
+                cand,
+                self.device_time_scale,
+                start_strip,
+                once_pool,
+                &mut tl,
+            );
+            let makespan = tl.makespan_s();
+            if makespan + 1e-15 < best.1 {
+                best = (cand, makespan);
+            }
+        }
+        best.0
+    }
+
+    /// Accrue a walked step's statistics exactly as the eager path would
+    /// have charged them: modeled stage seconds, energy, invocation
+    /// counts, per-size records. `walls` overrides the per-op wallclock
+    /// (a cached replay measures its own; a fresh execute reports the
+    /// record-time wallclock).
+    fn charge_step(
+        &mut self,
+        ops: &[PlannedOp],
+        walk: &StepWalk,
+        walls: Option<&[f64]>,
+    ) -> Vec<InvocationStats> {
+        let mut stats = Vec::with_capacity(ops.len());
+        for (i, op) in ops.iter().enumerate() {
+            self.add_modeled(STAGE_RECONFIG, walk.reconfig_s[i]);
+            self.add_modeled(STAGE_INPUT_SYNC, op.sync_in_s);
+            for &(kernel_s, sync_out_s) in &op.strips {
+                self.add_modeled(STAGE_KERNEL, kernel_s);
+                self.add_modeled(STAGE_OUTPUT_SYNC, sync_out_s);
+            }
+            let wall = walls.map_or(op.wall_s, |w| w[i]);
+            let st = InvocationStats {
+                size: op.size,
+                modeled_kernel_s: op.kernel_s(),
+                modeled_sync_in_s: op.sync_in_s,
+                modeled_sync_out_s: op.sync_out_s(),
+                modeled_reconfig_s: walk.reconfig_s[i],
+                modeled_energy_j: op.energy_j,
+                wall_s: wall,
+            };
+            self.modeled_energy_j += op.energy_j;
+            self.invocations += 1;
+            if let Some(prep) = self.registry.get_mut(&op.size) {
+                prep.invocations += 1;
+                prep.wall_s += wall;
+                prep.modeled_s += st.modeled_total_s();
+            }
+            stats.push(st);
+        }
+        stats
+    }
+
+    /// Record one GEMM's *modeled* schedule into `plan` without staging
+    /// buffers or running numerics — a dry run of the
+    /// record→schedule→execute seam at any problem scale (modeling the
+    /// full GPT-2 124M step this way costs microseconds, where a
+    /// physical record would stage hundreds of megabytes per op). The
+    /// captured stage durations come from the same calibrated sources
+    /// the physical record path charges — [`HostStagingModel`], the NPU
+    /// timing and power models, the XRT sync-cost model, and the
+    /// session's shard policy — so [`Self::execute`] schedules a dry-run
+    /// plan exactly as it would a physically recorded step. Only the
+    /// wallclock telemetry (no work happens) and the one-time
+    /// xclbin-load accounting (the array is never programmed) are zero;
+    /// `c` outputs are *not* produced.
+    pub fn record_modeled(&mut self, plan: &mut StepPlan, op: &PlanOp) -> Result<PlanNode> {
+        if plan.executed {
+            return Err(Error::config(
+                "plan was already executed; record into a fresh StepPlan",
+            ));
+        }
+        for d in &op.deps {
+            if d.index() >= plan.ops.len() {
+                return Err(Error::config(format!(
+                    "dependency plan node #{} was never recorded into this plan",
+                    d.index()
+                )));
+            }
+        }
+        if !self.pending.is_empty() {
+            return Err(Error::config(format!(
+                "cannot record a plan op with {} eager submission(s) in flight: \
+                 wait() them first",
+                self.pending.len()
+            )));
+        }
+        match plan.session {
+            None => plan.session = Some(self.id),
+            Some(sid) if sid != self.id => {
+                return Err(Error::config(format!(
+                    "plan was recorded on offload session #{sid}, not session #{}; \
+                     plans are session-scoped",
+                    self.id
+                )))
+            }
+            Some(_) => {}
+        }
+        if !plan.started {
+            plan.started = true;
+            plan.initial_strip = self.current_strip;
+            plan.initial_logical = self.current_logical;
+        }
+
+        let size = op.size;
+        let (m, k, n) = (size.m, size.k, size.n);
+        // The same strip layout physical registration would build: K
+        // padded to a tile multiple, N split into equal quantum-aligned
+        // strips by the session's shard policy.
+        let tiles = crate::gemm::tiling::PAPER_TILES;
+        let k_p = k.div_ceil(tiles.k) * tiles.k;
+        let n_quantum = 4 * tiles.n;
+        let n_quanta = n.div_ceil(n_quantum);
+        let s_eff = self.effective_shards(size, k_p, n_quantum, n_quanta);
+        let strip_n_p = (n_quanta / s_eff) * n_quantum;
+        let padded = ProblemSize::new(m, k_p, strip_n_p);
+        let tiling = Tiling::paper(padded)?;
+        let g = self.dev.npu.timing.gemm(&tiling);
+        // Per strip: the kernel scaled by its 1/s partition share plus
+        // the fixed issue/dispatch overheads, and its own output sync —
+        // exactly what the simulator device reports per staged strip.
+        let strip_kernel_s = g.kernel_s * s_eff as f64 + g.issue_s + g.dispatch_s;
+        let sync_out_s = self.dev.sync_cost.cost_s(m * strip_n_p * 4, SyncDirection::FromDevice);
+        let strips: Vec<(f64, f64)> = (0..s_eff).map(|_| (strip_kernel_s, sync_out_s)).collect();
+        let mut energy_j = 0.0f64;
+        for _ in 0..s_eff {
+            energy_j += self.dev.npu.power.energy_j(g.kernel_s, g.total_s() - g.kernel_s, 0.0);
+        }
+        let host_a_s = match op.a_layout {
+            InputLayout::RowMajor => self.host_model.copy_s(m * k * 4),
+            InputLayout::Transposed => self.host_model.transpose_s(m * k * 4),
+        };
+        let host_b_s = match op.b_layout {
+            InputLayout::RowMajor => self.host_model.copy_s(k * n * 4),
+            InputLayout::Transposed => self.host_model.transpose_s(k * n * 4),
+        };
+        let mut sync_in_s = self
+            .dev
+            .sync_cost
+            .cost_s(tiling.m_padded * k_p * 4, SyncDirection::ToDevice);
+        for _ in 0..s_eff {
+            sync_in_s += self.dev.sync_cost.cost_s(k_p * strip_n_p * 4, SyncDirection::ToDevice);
+        }
+        let timing = &self.dev.npu.timing;
+        let reconfig_switch_s = match self.policy {
+            ReconfigPolicy::Minimal => timing.minimal_reconfig_s,
+            ReconfigPolicy::FullArray => timing.full_reconfig_s + timing.minimal_reconfig_s,
+        };
+        plan.ops.push(PlannedOp {
+            size,
+            strip_size: padded,
+            a_layout: op.a_layout,
+            b_layout: op.b_layout,
+            deps: op.deps.iter().map(|d| d.index()).collect(),
+            prefetch_b: op.prefetch_b,
+            host_a_s,
+            host_b_s,
+            sync_in_s,
+            reconfig_switch_s,
+            reconfig_once_s: 0.0,
+            strips,
+            host_post_s: self.host_model.copy_s(m * n * 4),
+            energy_j,
+            wall_s: 0.0,
+        });
+        Ok(PlanNode(plan.ops.len() - 1))
+    }
+
+    /// Freeze an executed plan into a reusable [`CachedStep`]: the
+    /// captured stage durations plus the *steady-state* schedule, computed
+    /// once, that every later identical step replays — the execution
+    /// order and prefetch plan anchored at the array state a replay
+    /// starts from (the record-order end state this session is in right
+    /// now: record programmed the array, and replayed numerics re-run in
+    /// record order), with no one-time load charges (those were paid
+    /// when the recorded step executed).
+    pub fn freeze(&self, plan: StepPlan) -> Result<CachedStep> {
+        match plan.session {
+            Some(sid) if sid == self.id => {}
+            Some(sid) => {
+                return Err(Error::config(format!(
+                    "plan was recorded on offload session #{sid}, not session #{}; \
+                     plans are session-scoped",
+                    self.id
+                )))
+            }
+            None => return Err(Error::config("cannot cache an empty step plan")),
+        }
+        if !plan.executed {
+            return Err(Error::config(
+                "freeze() takes an executed plan: execute() it first, so the \
+                 one-time schedule charge has been paid",
+            ));
+        }
+        if plan.ops.is_empty() {
+            return Err(Error::config("cannot cache an empty step plan"));
+        }
+        let window = plan_window(&plan.ops);
+        let order = self.scheduler.order(&window, self.current_logical);
+        let choice = self.pick_horizon(&plan.ops, &order, self.current_strip, 0.0);
+        Ok(CachedStep {
+            signature: plan.signature(),
+            session: self.id,
+            order,
+            choice,
+            ops: plan.ops,
+        })
+    }
+
+    /// Start replaying a cached step on this session. Like redeeming a
+    /// ticket, replay is session-scoped: an entry recorded on another
+    /// session is a helpful error, never a mischarged timeline. Requires
+    /// no eager submissions in flight (the replay owns the array state).
+    pub fn replay_entry<'c>(&self, entry: &'c CachedStep) -> Result<PlanReplay<'c>> {
+        if entry.session != self.id {
+            return Err(Error::config(format!(
+                "cached plan was recorded on offload session #{}, not session #{}; \
+                 cached plans are session-scoped",
+                entry.session, self.id
+            )));
+        }
+        if !self.pending.is_empty() {
+            return Err(Error::config(format!(
+                "cannot replay a cached plan with {} eager submission(s) in flight: \
+                 wait() them first",
+                self.pending.len()
+            )));
+        }
+        Ok(PlanReplay::new(entry, self.current_strip))
+    }
+
+    /// The trainer's optimistic entry point: the most recently used
+    /// cache entry recorded on this session, ready to replay. `None`
+    /// means record this step (first step, a different session's cache,
+    /// or eager work in flight).
+    pub fn begin_replay<'c>(&self, cache: &'c PlanCache) -> Option<PlanReplay<'c>> {
+        let entry = cache.latest_for(self.id)?;
+        self.replay_entry(entry).ok()
+    }
+
+    /// Replay one GEMM of a cached step: check the call against the
+    /// cached op at the cursor, then run the numerics — stage, kernel,
+    /// merge — bit-for-bit the record path, filling `c` with this step's
+    /// result. Any mismatch (size, layouts, dependencies, prefetch hint)
+    /// is a recoverable [`Error::PlanDivergence`]: the shapes changed, so
+    /// re-record the step. Nothing is charged to the modeled timeline
+    /// here; [`Self::finish_replay`] charges the cached schedule once
+    /// the whole step has matched.
+    pub fn replay_gemm(
+        &mut self,
+        replay: &mut PlanReplay<'_>,
+        op: &PlanOp,
+        a: &[f32],
+        b: &[f32],
+        c: &mut [f32],
+    ) -> Result<PlanNode> {
+        if replay.entry.session != self.id {
+            return Err(Error::config(format!(
+                "cached plan was recorded on offload session #{}, not session #{}; \
+                 cached plans are session-scoped",
+                replay.entry.session, self.id
+            )));
+        }
+        let cursor = replay.cursor;
+        let Some(cached) = replay.entry.ops.get(cursor) else {
+            return Err(Error::plan_divergence(format!(
+                "step issued more GEMMs than the cached plan's {} (op #{cursor} is {}); \
+                 re-record the step",
+                replay.entry.ops.len(),
+                op.size
+            )));
+        };
+        let deps: Vec<usize> = op.deps.iter().map(|d| d.index()).collect();
+        if cached.size != op.size
+            || cached.a_layout != op.a_layout
+            || cached.b_layout != op.b_layout
+            || cached.prefetch_b != op.prefetch_b
+            || cached.deps != deps
+        {
+            return Err(Error::plan_divergence(format!(
+                "op #{cursor} no longer matches the cached plan (cached {}, step wants \
+                 {}); re-record the step",
+                cached.size, op.size
+            )));
+        }
+        let size = op.size;
+        let (m, k, n) = (size.m, size.k, size.n);
+        if a.len() != m * k || b.len() != k * n || c.len() != m * n {
+            return Err(Error::shape(format!(
+                "replay gemm {size}: got A={} B={} C={}",
+                a.len(),
+                b.len(),
+                c.len()
+            )));
+        }
+        if !self.pending.is_empty() {
+            return Err(Error::config(format!(
+                "cannot replay a plan op with {} eager submission(s) in flight: \
+                 wait() them first",
+                self.pending.len()
+            )));
+        }
+        let cap = self.run_invocation(size, op.a_layout, op.b_layout, a, b, c)?;
+        replay.walls.push(cap.wall_s);
+        replay.cursor += 1;
+        Ok(PlanNode(cursor))
+    }
+
+    /// Complete a cached-step replay: verify the step matched the whole
+    /// cached plan, then charge the frozen schedule — order, prefetch
+    /// plan, reconfiguration placement — to the modeled timeline in one
+    /// pass, with every statistic accruing exactly as a fresh
+    /// record+execute of this step would have charged it (no one-time
+    /// loads: the array has been programmed since the recorded step).
+    pub fn finish_replay(&mut self, replay: PlanReplay<'_>) -> Result<StepReport> {
+        let entry = replay.entry;
+        if entry.session != self.id {
+            return Err(Error::config(format!(
+                "cached plan was recorded on offload session #{}, not session #{}; \
+                 cached plans are session-scoped",
+                entry.session, self.id
+            )));
+        }
+        if replay.cursor != entry.ops.len() {
+            return Err(Error::plan_divergence(format!(
+                "step ended after {} of the cached plan's {} GEMMs; re-record the step",
+                replay.cursor,
+                entry.ops.len()
+            )));
+        }
+        let serial_before = self.pipeline.serial_s();
+        let makespan_before = self.pipeline.makespan_s();
+        let walk = walk_step(
+            &entry.ops,
+            &entry.order,
+            self.depth,
+            entry.choice,
+            self.device_time_scale,
+            replay.start_strip,
+            0.0,
+            &mut self.pipeline,
+        );
+        let stats = self.charge_step(&entry.ops, &walk, Some(&replay.walls));
+        let energy = entry.ops.iter().map(|o| o.energy_j).sum();
+        Ok(StepReport {
+            stats,
+            order: entry.order.clone(),
+            serial_growth_s: self.pipeline.serial_s() - serial_before,
+            makespan_growth_s: self.pipeline.makespan_s() - makespan_before,
+            reconfigs: walk.reconfigs,
+            prefetched: walk.prefetched.iter().filter(|&&p| p).count(),
             energy_j: energy,
         })
     }
@@ -2218,5 +2842,221 @@ mod tests {
         cpu::gemm_bf16_ref(&a, &b, &mut c_ref, 64, 64, 256);
         assert_eq!(c, c_ref, "sharded CpuRefDevice must be the bf16 oracle");
         assert!(stats.modeled_total_s() > 0.0);
+    }
+
+    /// The PlanOps and inputs of a small two-size step — shared by the
+    /// cache tests.
+    fn cache_step_ops() -> Vec<(PlanOp, Vec<f32>, Vec<f32>)> {
+        let s_a = ProblemSize::new(64, 64, 128);
+        let s_b = ProblemSize::new(128, 64, 128);
+        vec![
+            (
+                PlanOp::new(s_a).prefetchable_b(true),
+                vec![1.0f32; 64 * 64],
+                vec![0.5f32; 64 * 128],
+            ),
+            (
+                PlanOp::new(s_b).prefetchable_b(true),
+                vec![2.0f32; 128 * 64],
+                vec![0.5f32; 64 * 128],
+            ),
+            (
+                PlanOp::new(s_a).prefetchable_b(true),
+                vec![3.0f32; 64 * 64],
+                vec![0.5f32; 64 * 128],
+            ),
+        ]
+    }
+
+    fn record_step(sess: &mut OffloadSession) -> (StepPlan, Vec<Vec<f32>>) {
+        let mut plan = StepPlan::new();
+        let mut outs = Vec::new();
+        for (op, a, b) in cache_step_ops() {
+            let mut c = vec![0.0f32; op.size.m * op.size.n];
+            sess.record_gemm(&mut plan, &op, &a, &b, &mut c).unwrap();
+            outs.push(c);
+        }
+        (plan, outs)
+    }
+
+    #[test]
+    fn cached_replay_is_bit_identical_to_a_fresh_record() {
+        // Session A records once, then replays from the cache; session B
+        // re-records every step. Outputs and the modeled timeline must be
+        // bit-identical step for step.
+        let mut a_sess = session(2, 1, SchedulePolicy::BatchBySize);
+        let mut b_sess = session(2, 1, SchedulePolicy::BatchBySize);
+        let mut cache = PlanCache::new();
+
+        let (mut plan_a, outs_a1) = record_step(&mut a_sess);
+        a_sess.execute(&mut plan_a).unwrap();
+        cache.insert(a_sess.freeze(plan_a).unwrap());
+        let (mut plan_b, outs_b1) = record_step(&mut b_sess);
+        b_sess.execute(&mut plan_b).unwrap();
+        assert_eq!(outs_a1, outs_b1);
+
+        // Step 2: A replays, B records fresh.
+        let mut replay = a_sess.begin_replay(&cache).expect("cached for this session");
+        let mut outs_a2 = Vec::new();
+        for (op, a, b) in cache_step_ops() {
+            let mut c = vec![0.0f32; op.size.m * op.size.n];
+            a_sess.replay_gemm(&mut replay, &op, &a, &b, &mut c).unwrap();
+            outs_a2.push(c);
+        }
+        let rep_a = a_sess.finish_replay(replay).unwrap();
+        cache.record_hit();
+        let (mut plan_b2, outs_b2) = record_step(&mut b_sess);
+        let rep_b = b_sess.execute(&mut plan_b2).unwrap();
+
+        assert_eq!(outs_a2, outs_b2, "replayed numerics are the fresh-record numerics");
+        assert_eq!(rep_a.order, rep_b.order, "frozen order is the steady-state order");
+        assert_eq!(rep_a.reconfigs, rep_b.reconfigs);
+        assert_eq!(rep_a.prefetched, rep_b.prefetched);
+        assert!(
+            (rep_a.makespan_growth_s - rep_b.makespan_growth_s).abs() < 1e-15,
+            "cached replay must charge the timeline bit-identically: {} vs {}",
+            rep_a.makespan_growth_s,
+            rep_b.makespan_growth_s
+        );
+        assert!((rep_a.serial_growth_s - rep_b.serial_growth_s).abs() < 1e-15);
+        assert!(
+            (a_sess.pipeline.makespan_s() - b_sess.pipeline.makespan_s()).abs() < 1e-15
+        );
+        assert_eq!(a_sess.invocations, b_sess.invocations);
+        assert_eq!((cache.hits(), cache.misses()), (1, 1));
+    }
+
+    #[test]
+    fn replay_divergence_and_session_scoping_are_helpful_errors() {
+        let mut s1 = session(2, 1, SchedulePolicy::Fifo);
+        let mut cache = PlanCache::new();
+        let (mut plan, _) = record_step(&mut s1);
+        s1.execute(&mut plan).unwrap();
+        cache.insert(s1.freeze(plan).unwrap());
+
+        // Shape change mid-step: a recoverable divergence.
+        let mut replay = s1.begin_replay(&cache).unwrap();
+        let wrong = ProblemSize::new(64, 64, 256);
+        let wrong_op = PlanOp::new(wrong).prefetchable_b(true);
+        let a = vec![1.0f32; 64 * 64];
+        let b = vec![0.5f32; 64 * 256];
+        let mut c = vec![0.0f32; 64 * 256];
+        let err = s1.replay_gemm(&mut replay, &wrong_op, &a, &b, &mut c).unwrap_err();
+        assert!(err.is_plan_divergence(), "{err}");
+        assert!(err.to_string().contains("re-record"), "{err}");
+
+        // A step that ends early is also a divergence.
+        let replay = s1.begin_replay(&cache).unwrap();
+        let err = s1.finish_replay(replay).unwrap_err();
+        assert!(err.is_plan_divergence(), "{err}");
+
+        // Another session: a helpful session-scope error, like tickets —
+        // and begin_replay simply finds nothing to replay.
+        let s2 = session(2, 1, SchedulePolicy::Fifo);
+        let entry = cache.latest().unwrap();
+        let err = s2.replay_entry(entry).unwrap_err().to_string();
+        assert!(err.contains("session-scoped"), "{err}");
+        assert!(s2.begin_replay(&cache).is_none());
+    }
+
+    #[test]
+    fn freeze_requires_an_executed_plan() {
+        let mut sess = session(2, 1, SchedulePolicy::Fifo);
+        let (plan, _) = record_step(&mut sess);
+        let err = sess.freeze(plan).unwrap_err().to_string();
+        assert!(err.contains("execute"), "{err}");
+        let err = sess.freeze(StepPlan::new()).unwrap_err().to_string();
+        assert!(err.contains("empty"), "{err}");
+    }
+
+    #[test]
+    fn modeled_record_schedules_like_the_physical_record() {
+        // Warm both sessions past the one-time xclbin load (the dry-run
+        // path never charges it), with a size outside the step.
+        let warm = ProblemSize::new(64, 64, 128);
+        let a_w = vec![1.0f32; 64 * 64];
+        let b_w = vec![1.0f32; 64 * 128];
+        let mut c_w = vec![0.0f32; 64 * 128];
+        let step = ProblemSize::new(64, 128, 256);
+
+        let mut phys = session(2, 2, SchedulePolicy::Fifo);
+        phys.gemm(warm, &a_w, &b_w, InputLayout::RowMajor, &mut c_w).unwrap();
+        let mut plan_p = StepPlan::new();
+        let a = vec![1.0f32; 64 * 128];
+        let b = vec![0.5f32; 128 * 256];
+        let mut c = vec![0.0f32; 64 * 256];
+        for _ in 0..3 {
+            let op = PlanOp::new(step).prefetchable_b(true);
+            phys.record_gemm(&mut plan_p, &op, &a, &b, &mut c).unwrap();
+        }
+        let rep_p = phys.execute(&mut plan_p).unwrap();
+
+        let mut modeled = session(2, 2, SchedulePolicy::Fifo);
+        modeled.gemm(warm, &a_w, &b_w, InputLayout::RowMajor, &mut c_w).unwrap();
+        let mut plan_m = StepPlan::new();
+        for _ in 0..3 {
+            let op = PlanOp::new(step).prefetchable_b(true);
+            modeled.record_modeled(&mut plan_m, &op).unwrap();
+        }
+        let rep_m = modeled.execute(&mut plan_m).unwrap();
+
+        assert_eq!(rep_p.order, rep_m.order);
+        assert_eq!(rep_p.prefetched, rep_m.prefetched);
+        assert!(
+            (rep_p.serial_growth_s - rep_m.serial_growth_s).abs() < 1e-12,
+            "dry-run stage sums must match the physical record: {} vs {}",
+            rep_p.serial_growth_s,
+            rep_m.serial_growth_s
+        );
+        assert!(
+            (rep_p.makespan_growth_s - rep_m.makespan_growth_s).abs() < 1e-12,
+            "dry-run schedule must match the physical record: {} vs {}",
+            rep_p.makespan_growth_s,
+            rep_m.makespan_growth_s
+        );
+    }
+
+    #[test]
+    fn prefetch_horizon_monotone_none_ge_next_ge_deep() {
+        // A modeled stream with one long kernel early and host-heavy
+        // prefetchable staging behind it: deepening the horizon may only
+        // ever help (Deep simulates Next too and charges the better).
+        let sizes = [
+            ProblemSize::new(256, 256, 2048),
+            ProblemSize::new(64, 512, 512),
+            ProblemSize::new(64, 512, 512),
+            ProblemSize::new(64, 512, 512),
+            ProblemSize::new(64, 512, 512),
+        ];
+        let run = |prefetch: PrefetchHorizon| -> f64 {
+            let mut sess = OffloadSession::new(
+                SessionConfig {
+                    depth: QueueDepth(4),
+                    prefetch,
+                    ..Default::default()
+                },
+                &[],
+            )
+            .unwrap();
+            let mut plan = StepPlan::new();
+            for &s in &sizes {
+                let mut op = PlanOp::new(s)
+                    .with_b_layout(InputLayout::Transposed)
+                    .prefetchable_b(true);
+                if let Some(h) = plan.chain_head() {
+                    op = op.after(h);
+                }
+                let n = sess.record_modeled(&mut plan, &op).unwrap();
+                plan.set_chain(n);
+            }
+            let rep = sess.execute(&mut plan).unwrap();
+            assert!(rep.makespan_growth_s <= rep.serial_growth_s + 1e-12);
+            rep.makespan_growth_s
+        };
+        let none = run(PrefetchHorizon::None);
+        let next = run(PrefetchHorizon::Next);
+        let deep = run(PrefetchHorizon::Deep);
+        assert!(next <= none + 1e-15, "one-op hoist may only help: {next} vs {none}");
+        assert!(deep <= next + 1e-15, "deep horizon may only help: {deep} vs {next}");
     }
 }

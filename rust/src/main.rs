@@ -11,6 +11,7 @@
 
 use xdna_repro::bench as paperbench;
 use xdna_repro::coordinator::engine::ExecMode;
+use xdna_repro::coordinator::plan::{PlanCache, PlanCacheMode};
 use xdna_repro::coordinator::session::{
     InputLayout, OffloadSession, QueueDepth, SessionConfig, ShardPolicy,
 };
@@ -33,7 +34,7 @@ USAGE:
                       [--power mains|battery] [--policy minimal|full]
                       [--mode serial|pipelined] [--queue-depth K]
                       [--shards auto|N] [--schedule fifo|batch] [--plan]
-                      [--save ckpt.bin] [--seed S]
+                      [--plan-cache on|off] [--save ckpt.bin] [--seed S]
   xdna-repro gemm     [--m M --k K --n N] [--backend cpu|npu]
                       [--shards auto|N]
   xdna-repro generate [--config d2|d4|d6] [--load ckpt.bin] [--tokens N]
@@ -48,8 +49,11 @@ USAGE:
   from the cost models), and --schedule batch lets the scheduler reorder
   its window to amortize reconfigurations. --plan records each training
   step as a StepPlan and schedules it whole (record->schedule->execute):
-  the scheduler batches across the entire step and the next invocation's
-  weight staging prefetches under the current kernel.
+  the scheduler batches across the entire step and known-ahead weight
+  staging prefetches under earlier kernels as deep as the ring has slots.
+  --plan-cache (default on, with --plan) freezes the scheduled step after
+  the first iteration and replays it on every later step, re-recording
+  only when a shape or the session changes. See docs/SCHEDULING.md.
 ";
 
 fn main() {
@@ -105,6 +109,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     let shards = args.get_parse("shards", ShardPolicy::default())?;
     let schedule = args.get_parse("schedule", SchedulePolicy::Fifo)?;
     let plan = args.flag("plan");
+    let plan_cache = args.get_parse("plan-cache", PlanCacheMode::On)?.enabled();
 
     let tc = TrainConfig {
         batch,
@@ -137,8 +142,18 @@ fn cmd_train(args: &Args) -> Result<()> {
                 },
                 &[],
             )?;
+            let mut cache = PlanCache::new();
             let out = if plan {
-                train(&mut model, &mut loader, &mut TrainBackend::CpuNpuPlanned(&mut sess), &tc)?
+                let cache_ref = if plan_cache { Some(&mut cache) } else { None };
+                train(
+                    &mut model,
+                    &mut loader,
+                    &mut TrainBackend::CpuNpuPlanned {
+                        session: &mut sess,
+                        cache: cache_ref,
+                    },
+                    &tc,
+                )?
             } else {
                 train(&mut model, &mut loader, &mut TrainBackend::CpuNpu(&mut sess), &tc)?
             };
@@ -149,6 +164,15 @@ fn cmd_train(args: &Args) -> Result<()> {
                 sess.registered_sizes().len(),
                 sess.modeled_energy_j
             );
+            if plan && plan_cache {
+                println!(
+                    "plan cache: {} hit(s), {} miss(es) — recorded {} step(s), replayed {}",
+                    cache.hits(),
+                    cache.misses(),
+                    cache.misses(),
+                    cache.hits()
+                );
+            }
             println!(
                 "offload schedule ({}, depth {}, shards {}, {:?}): serial {:.1} ms, \
                  overlapped {:.1} ms, time hidden {:.1} ms",

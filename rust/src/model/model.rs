@@ -3,9 +3,11 @@
 //! splits epoch time by operation).
 //!
 //! Every matmul flows through the [`MatmulDispatch`] seam: the CPU loop
-//! nest, an eager offload session, or — with `MatmulDispatch::Plan` — a
+//! nest, an eager offload session, — with `MatmulDispatch::Plan` — a
 //! recorded [`crate::coordinator::plan::StepPlan`] that defers the whole
-//! step's offload schedule to `OffloadSession::execute`.
+//! step's offload schedule to `OffloadSession::execute`, or — with
+//! `MatmulDispatch::Replay` — a cache-hit re-run of a frozen plan whose
+//! schedule `OffloadSession::finish_replay` charges in one pass.
 
 use crate::util::error::Result;
 use crate::util::rng::Rng;

@@ -8,14 +8,15 @@
 //! is *recorded* into a [`StepPlan`] so the whole training step can be
 //! scheduled at once (the record→schedule→execute seam).
 
-use crate::coordinator::plan::{PlanOp, StepPlan};
+use crate::coordinator::plan::{PlanOp, PlanReplay, StepPlan};
 use crate::coordinator::session::{GemmOp, InputLayout, OffloadSession, Ticket};
 use crate::gemm::cpu;
 use crate::gemm::sizes::ProblemSize;
 use crate::util::error::Result;
 
-/// Where matmuls execute.
-pub enum MatmulDispatch<'a> {
+/// Where matmuls execute. (`'a` borrows the session/plan for the step;
+/// `'c` is the cache borrow a replay cursor carries.)
+pub enum MatmulDispatch<'a, 'c> {
     /// Unmodified llm.c: multi-threaded f32 loop nest on the CPU.
     Cpu,
     /// The paper's version: offloaded to the NPU through an
@@ -31,9 +32,18 @@ pub enum MatmulDispatch<'a> {
         session: &'a mut OffloadSession,
         plan: &'a mut StepPlan,
     },
+    /// Cache-hit replay of a previously recorded step: every GEMM runs
+    /// its numerics against this step's data while being checked against
+    /// the cached plan (a shape change is a recoverable divergence — the
+    /// trainer re-records), and the caller charges the frozen schedule
+    /// once with [`OffloadSession::finish_replay`] after the step.
+    Replay {
+        session: &'a mut OffloadSession,
+        replay: &'a mut PlanReplay<'c>,
+    },
 }
 
-impl MatmulDispatch<'_> {
+impl MatmulDispatch<'_, '_> {
     /// Does this dispatch offload through the session (eagerly or via a
     /// recorded plan)?
     pub fn is_npu(&self) -> bool {
@@ -80,6 +90,19 @@ pub fn forward(
             }
             let node = session.record_gemm(plan, &op, inp, weight, out)?;
             plan.set_chain(node);
+        }
+        MatmulDispatch::Replay { session, replay } => {
+            // Identical op description to the record arm, checked against
+            // the cached plan; numerics run with this step's data.
+            let size = ProblemSize::new(bt, ic, oc);
+            let mut op = PlanOp::new(size)
+                .with_b_layout(InputLayout::Transposed)
+                .prefetchable_b(true);
+            if let Some(head) = replay.chain_head() {
+                op = op.after(head);
+            }
+            let node = session.replay_gemm(replay, &op, inp, weight, out)?;
+            replay.set_chain(node);
         }
     }
     if let Some(bias) = bias {
@@ -187,6 +210,32 @@ pub fn backward(
             let n_dinp = session.record_gemm(plan, &op_dinp, dout, weight, &mut tmp)?;
             session.record_gemm(plan, &op_dw, dout, inp, &mut dw)?;
             plan.set_chain(n_dinp);
+            for (d, t) in dinp.iter_mut().zip(&tmp) {
+                *d += t;
+            }
+            for (d, t) in dweight.iter_mut().zip(&dw) {
+                *d += t;
+            }
+        }
+        MatmulDispatch::Replay { session, replay } => {
+            // The record arm's (dinp, dW) pair, checked against the
+            // cached plan op for op.
+            let mut tmp = vec![0.0f32; bt * ic];
+            let mut dw = vec![0.0f32; oc * ic];
+            let dinp_size = ProblemSize::new(bt, oc, ic);
+            let dw_size = ProblemSize::new(oc, bt, ic);
+            let head = replay.chain_head();
+            let mut op_dinp = PlanOp::new(dinp_size).prefetchable_b(true);
+            let mut op_dw = PlanOp::new(dw_size)
+                .with_a_layout(InputLayout::Transposed) // dout is (BT,OC): Mᵀ view
+                .prefetchable_b(true);
+            if let Some(h) = head {
+                op_dinp = op_dinp.after(h);
+                op_dw = op_dw.after(h);
+            }
+            let n_dinp = session.replay_gemm(replay, &op_dinp, dout, weight, &mut tmp)?;
+            session.replay_gemm(replay, &op_dw, dout, inp, &mut dw)?;
+            replay.set_chain(n_dinp);
             for (d, t) in dinp.iter_mut().zip(&tmp) {
                 *d += t;
             }
@@ -494,5 +543,115 @@ mod tests {
             report.hidden_growth_s() > 0.0,
             "paired backward GEMMs must overlap in the replay"
         );
+    }
+
+    #[test]
+    fn replay_dispatch_reruns_backward_against_the_cached_plan() {
+        use crate::coordinator::plan::{PlanCache, StepPlan};
+        use crate::coordinator::session::{OffloadSession, QueueDepth, SessionConfig};
+        let (bt, ic, oc) = (64, 128, 64);
+        let mut rng = Rng::new(103);
+        let inp = rand(&mut rng, bt * ic);
+        let w = rand(&mut rng, oc * ic);
+        let dout = rand(&mut rng, bt * oc);
+
+        let mut sess = OffloadSession::new(
+            SessionConfig {
+                depth: QueueDepth(2),
+                ..Default::default()
+            },
+            &[],
+        )
+        .unwrap();
+
+        // Step 1: record + execute + cache.
+        let mut plan = StepPlan::new();
+        let mut dinp_r = vec![0.0; bt * ic];
+        let mut dw_r = vec![0.0; oc * ic];
+        backward(
+            &mut MatmulDispatch::Plan {
+                session: &mut sess,
+                plan: &mut plan,
+            },
+            &mut dinp_r,
+            &mut dw_r,
+            None,
+            &dout,
+            &inp,
+            &w,
+            bt,
+            ic,
+            oc,
+        )
+        .unwrap();
+        sess.execute(&mut plan).unwrap();
+        let mut cache = PlanCache::new();
+        cache.insert(sess.freeze(plan).unwrap());
+
+        // Step 2: the same backward through the replay dispatch — new
+        // data, cached schedule.
+        let dout2: Vec<f32> = dout.iter().map(|x| x * 2.0).collect();
+        let mut dinp_p = vec![0.0; bt * ic];
+        let mut dw_p = vec![0.0; oc * ic];
+        let mut replay = sess.begin_replay(&cache).expect("cached for this session");
+        backward(
+            &mut MatmulDispatch::Replay {
+                session: &mut sess,
+                replay: &mut replay,
+            },
+            &mut dinp_p,
+            &mut dw_p,
+            None,
+            &dout2,
+            &inp,
+            &w,
+            bt,
+            ic,
+            oc,
+        )
+        .unwrap();
+        let report = sess.finish_replay(replay).unwrap();
+        assert_eq!(report.stats.len(), 2);
+
+        // The replayed numerics are this step's data through the same
+        // bit-exact path as an eager backward with dout2.
+        let mut eager = OffloadSession::new(SessionConfig::default(), &[]).unwrap();
+        let mut dinp_e = vec![0.0; bt * ic];
+        let mut dw_e = vec![0.0; oc * ic];
+        backward(
+            &mut MatmulDispatch::Npu(&mut eager),
+            &mut dinp_e,
+            &mut dw_e,
+            None,
+            &dout2,
+            &inp,
+            &w,
+            bt,
+            ic,
+            oc,
+        )
+        .unwrap();
+        assert_eq!(dinp_p, dinp_e, "replayed numerics must track this step's data");
+        assert_eq!(dw_p, dw_e);
+
+        // A shape change diverges recoverably instead of mischarging.
+        let mut replay = sess.begin_replay(&cache).unwrap();
+        let err = backward(
+            &mut MatmulDispatch::Replay {
+                session: &mut sess,
+                replay: &mut replay,
+            },
+            &mut vec![0.0; bt * 2 * ic],
+            &mut dw_p,
+            None,
+            &rand(&mut rng, bt * 2 * oc),
+            &rand(&mut rng, bt * 2 * ic),
+            &w,
+            bt * 2,
+            ic,
+            oc,
+        )
+        .unwrap_err();
+        assert!(err.is_plan_divergence(), "{err}");
     }
 }

@@ -5,7 +5,7 @@
 //! engine's stage breakdown accumulates for Figure 7, and the power meter
 //! integrates energy for Figure 9.
 
-use crate::coordinator::plan::StepPlan;
+use crate::coordinator::plan::{PlanCache, StepPlan};
 use crate::coordinator::session::OffloadSession;
 use crate::power::meter::PowerMeter;
 use crate::power::profiles::PowerProfile;
@@ -28,9 +28,17 @@ pub enum TrainBackend<'a> {
     /// Record→schedule→execute: each training step's GEMMs are recorded
     /// into a [`StepPlan`] (numerics run in place, bit-for-bit the eager
     /// results) and the session schedules the whole step at once —
-    /// whole-step same-size batching, weight-staging prefetch, per-size
-    /// auto-sharding.
-    CpuNpuPlanned(&'a mut OffloadSession),
+    /// whole-step same-size batching, deep weight-staging prefetch,
+    /// per-size auto-sharding. With a [`PlanCache`], the step is
+    /// recorded and scheduled *once*: every later step optimistically
+    /// replays the cached schedule (numerics re-run with that step's
+    /// data) and re-records only when the GEMM stream diverges — a shape
+    /// or config change.
+    CpuNpuPlanned {
+        session: &'a mut OffloadSession,
+        /// `Some` enables cross-step plan caching (`--plan-cache on`).
+        cache: Option<&'a mut PlanCache>,
+    },
 }
 
 /// One epoch's record.
@@ -85,7 +93,7 @@ pub fn train(
     // its hidden/exposed host-staging split reflects this power state
     // (battery stretches kernels, hiding more staging).
     match backend {
-        TrainBackend::CpuNpu(session) | TrainBackend::CpuNpuPlanned(session) => {
+        TrainBackend::CpuNpu(session) | TrainBackend::CpuNpuPlanned { session, .. } => {
             session.set_device_time_scale(cfg.power.npu_time_scale);
         }
         TrainBackend::Cpu => {}
@@ -135,25 +143,72 @@ pub fn train(
                     npu_energy_j += session.modeled_energy_j - before_energy;
                     (l, g)
                 }
-                TrainBackend::CpuNpuPlanned(session) => {
+                TrainBackend::CpuNpuPlanned { session, cache } => {
                     let before_makespan = session.pipeline.makespan_s();
                     let before_energy = session.modeled_energy_j;
-                    // Record the whole step, then let the scheduler see it
-                    // at once.
-                    let mut plan = StepPlan::new();
-                    let (l, g) = {
-                        let mut d = MatmulDispatch::Plan {
-                            session: &mut **session,
-                            plan: &mut plan,
-                        };
-                        let l = model
-                            .forward(&mut d, &tokens, Some(&targets), cfg.batch, cfg.seq)?
-                            .unwrap();
-                        model.zero_grad();
-                        model.backward(&mut d)?;
-                        (l, model.update(&cfg.optimizer))
+                    // Optimistic cache hit: re-run the step's numerics
+                    // against the most recently cached plan and charge
+                    // the frozen schedule. Any divergence (a shape
+                    // change) is recoverable — fall through and record.
+                    let mut replayed: Option<f32> = None;
+                    if let Some(c) = cache.as_deref_mut() {
+                        if let Some(mut replay) = session.begin_replay(c) {
+                            let step = (|| -> Result<f32> {
+                                let mut d = MatmulDispatch::Replay {
+                                    session: &mut **session,
+                                    replay: &mut replay,
+                                };
+                                let l = model
+                                    .forward(&mut d, &tokens, Some(&targets), cfg.batch, cfg.seq)?
+                                    .unwrap();
+                                model.zero_grad();
+                                model.backward(&mut d)?;
+                                Ok(l)
+                            })();
+                            match step {
+                                Ok(l) => match session.finish_replay(replay) {
+                                    Ok(_) => {
+                                        c.record_hit();
+                                        replayed = Some(l);
+                                    }
+                                    Err(e) if e.is_plan_divergence() => {}
+                                    Err(e) => return Err(e),
+                                },
+                                Err(e) if e.is_plan_divergence() => {}
+                                Err(e) => return Err(e),
+                            }
+                        }
+                    }
+                    let l = match replayed {
+                        Some(l) => l,
+                        None => {
+                            // Record the whole step (forward/backward are
+                            // deterministic, so a diverged half-replayed
+                            // step reruns cleanly — zero_grad wipes any
+                            // partial gradients), then let the scheduler
+                            // see it at once and freeze the schedule for
+                            // every later step.
+                            let mut plan = StepPlan::new();
+                            let l = {
+                                let mut d = MatmulDispatch::Plan {
+                                    session: &mut **session,
+                                    plan: &mut plan,
+                                };
+                                let l = model
+                                    .forward(&mut d, &tokens, Some(&targets), cfg.batch, cfg.seq)?
+                                    .unwrap();
+                                model.zero_grad();
+                                model.backward(&mut d)?;
+                                l
+                            };
+                            session.execute(&mut plan)?;
+                            if let Some(c) = cache.as_deref_mut() {
+                                c.insert(session.freeze(plan)?);
+                            }
+                            l
+                        }
                     };
-                    session.execute(&mut plan)?;
+                    let g = model.update(&cfg.optimizer);
                     npu_offload_s += session.pipeline.makespan_s() - before_makespan;
                     npu_energy_j += session.modeled_energy_j - before_energy;
                     (l, g)
@@ -170,7 +225,7 @@ pub fn train(
                 cfg.steps_per_epoch as f64
                     * cfg.power.modeled_epoch_s(&model.cfg, cfg.batch, cfg.seq, false)
             }
-            TrainBackend::CpuNpu(_) | TrainBackend::CpuNpuPlanned(_) => {
+            TrainBackend::CpuNpu(_) | TrainBackend::CpuNpuPlanned { .. } => {
                 cfg.steps_per_epoch as f64
                     * cfg.power.modeled_epoch_s(&model.cfg, cfg.batch, cfg.seq, true)
                     + npu_offload_s
@@ -338,9 +393,16 @@ mod tests {
             &[],
         )
         .unwrap();
-        let planned =
-            train_synthetic(cfg, &tc, &mut TrainBackend::CpuNpuPlanned(&mut sess_plan), 5)
-                .unwrap();
+        let planned = train_synthetic(
+            cfg,
+            &tc,
+            &mut TrainBackend::CpuNpuPlanned {
+                session: &mut sess_plan,
+                cache: None,
+            },
+            5,
+        )
+        .unwrap();
         for (e, p) in eager.iter().zip(&planned) {
             assert_eq!(e.loss, p.loss, "epoch {}: recording must not change numerics", e.epoch);
             assert!(
@@ -353,6 +415,150 @@ mod tests {
         }
         assert!(sess_plan.invocations > 0);
         assert!(sess_plan.pipeline.hidden_s() > 0.0, "the planned step must overlap");
+    }
+
+    #[test]
+    fn cached_planned_training_records_once_and_stays_bit_identical() {
+        use crate::coordinator::plan::PlanCache;
+        use crate::coordinator::session::{OffloadSession, QueueDepth, SessionConfig};
+        let cfg = ModelConfig::d2();
+        let tc = TrainConfig {
+            batch: 2,
+            seq: 16,
+            epochs: 3,
+            steps_per_epoch: 2,
+            ..Default::default()
+        };
+        // Eager baseline and an uncached planned run for comparison.
+        let mut sess_eager = OffloadSession::new(
+            SessionConfig {
+                depth: QueueDepth(2),
+                ..Default::default()
+            },
+            &[],
+        )
+        .unwrap();
+        let eager =
+            train_synthetic(cfg, &tc, &mut TrainBackend::CpuNpu(&mut sess_eager), 5).unwrap();
+        let mut sess_plain = OffloadSession::new(
+            SessionConfig {
+                depth: QueueDepth(2),
+                ..Default::default()
+            },
+            &[],
+        )
+        .unwrap();
+        let plain = train_synthetic(
+            cfg,
+            &tc,
+            &mut TrainBackend::CpuNpuPlanned {
+                session: &mut sess_plain,
+                cache: None,
+            },
+            5,
+        )
+        .unwrap();
+
+        let mut sess = OffloadSession::new(
+            SessionConfig {
+                depth: QueueDepth(2),
+                ..Default::default()
+            },
+            &[],
+        )
+        .unwrap();
+        let mut cache = PlanCache::new();
+        let cached = train_synthetic(
+            cfg,
+            &tc,
+            &mut TrainBackend::CpuNpuPlanned {
+                session: &mut sess,
+                cache: Some(&mut cache),
+            },
+            5,
+        )
+        .unwrap();
+
+        // Records exactly once; every later step is a cache hit.
+        assert_eq!(cache.misses(), 1, "the step should record exactly once");
+        assert_eq!(cache.hits(), 5, "all later steps should replay");
+        assert_eq!(cache.len(), 1);
+        for ((c, e), p) in cached.iter().zip(&eager).zip(&plain) {
+            // Replayed numerics are bit-identical to eager and to the
+            // uncached planned run.
+            assert_eq!(c.loss, e.loss, "epoch {}: replay must match eager", c.epoch);
+            assert_eq!(c.loss, p.loss, "epoch {}", c.epoch);
+            // The cached replay charges the same steady-state schedule a
+            // fresh record would have.
+            assert!(
+                (c.modeled_s - p.modeled_s).abs() <= 1e-9 * p.modeled_s.max(1.0),
+                "epoch {}: cached {} vs planned {}",
+                c.epoch,
+                c.modeled_s,
+                p.modeled_s
+            );
+        }
+    }
+
+    #[test]
+    fn cached_training_rerecords_when_the_session_changes() {
+        use crate::coordinator::plan::PlanCache;
+        use crate::coordinator::session::{
+            OffloadSession, QueueDepth, SessionConfig, ShardPolicy, Shards,
+        };
+        let cfg = ModelConfig::d2();
+        let tc = TrainConfig {
+            batch: 2,
+            seq: 16,
+            epochs: 1,
+            steps_per_epoch: 2,
+            ..Default::default()
+        };
+        let mut cache = PlanCache::new();
+        let mut sess_a = OffloadSession::new(
+            SessionConfig {
+                depth: QueueDepth(2),
+                ..Default::default()
+            },
+            &[],
+        )
+        .unwrap();
+        train_synthetic(
+            cfg,
+            &tc,
+            &mut TrainBackend::CpuNpuPlanned {
+                session: &mut sess_a,
+                cache: Some(&mut cache),
+            },
+            5,
+        )
+        .unwrap();
+        assert_eq!((cache.hits(), cache.misses()), (1, 1));
+
+        // A new session (different shard config): its plans are scoped to
+        // it, so the run re-records once rather than replaying session
+        // A's entry.
+        let mut sess_b = OffloadSession::new(
+            SessionConfig {
+                depth: QueueDepth(2),
+                shards: ShardPolicy::Fixed(Shards(4)),
+                ..Default::default()
+            },
+            &[],
+        )
+        .unwrap();
+        train_synthetic(
+            cfg,
+            &tc,
+            &mut TrainBackend::CpuNpuPlanned {
+                session: &mut sess_b,
+                cache: Some(&mut cache),
+            },
+            5,
+        )
+        .unwrap();
+        assert_eq!((cache.hits(), cache.misses()), (2, 2), "one fresh record per session");
+        assert_eq!(cache.len(), 2, "both sessions' steps stay cached");
     }
 
     #[test]

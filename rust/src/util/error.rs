@@ -17,6 +17,9 @@ pub enum Error {
     Io(std::io::Error),
     /// Config / CLI parse error.
     Config(String),
+    /// A cached step plan no longer matches the step being replayed
+    /// (shape or structure change). Recoverable: re-record the step.
+    PlanDivergence(String),
 }
 
 impl fmt::Display for Error {
@@ -28,6 +31,7 @@ impl fmt::Display for Error {
             Error::Runtime(m) => write!(f, "runtime error: {m}"),
             Error::Io(e) => write!(f, "io error: {e}"),
             Error::Config(m) => write!(f, "config error: {m}"),
+            Error::PlanDivergence(m) => write!(f, "plan cache divergence: {m}"),
         }
     }
 }
@@ -59,5 +63,14 @@ impl Error {
     }
     pub fn config(m: impl Into<String>) -> Self {
         Error::Config(m.into())
+    }
+    pub fn plan_divergence(m: impl Into<String>) -> Self {
+        Error::PlanDivergence(m.into())
+    }
+
+    /// Is this a recoverable plan-cache divergence (the caller should
+    /// re-record the step rather than abort)?
+    pub fn is_plan_divergence(&self) -> bool {
+        matches!(self, Error::PlanDivergence(_))
     }
 }

@@ -1,0 +1,29 @@
+#!/usr/bin/env bash
+# Check that every relative markdown link in README.md and docs/ resolves
+# to a file or directory in the repo, so the cross-links between the
+# README, the architecture doc, and the scheduling handbook cannot rot.
+# External links (http/https/mailto) and pure #anchors are skipped;
+# a trailing #section on a relative link is stripped before checking.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+fail=0
+for f in README.md docs/*.md; do
+  while IFS= read -r target; do
+    case "$target" in
+      http://* | https://* | mailto:* | '#'*) continue ;;
+    esac
+    path="${target%%#*}"
+    [ -z "$path" ] && continue
+    if [ ! -e "$(dirname "$f")/$path" ] && [ ! -e "$path" ]; then
+      echo "broken link in $f: ($target)"
+      fail=1
+    fi
+  done < <(grep -oE '\]\([^)]+\)' "$f" | sed -E 's/^\]\(//; s/\)$//')
+done
+
+if [ "$fail" -ne 0 ]; then
+  echo "markdown link check failed"
+  exit 1
+fi
+echo "markdown links OK"
