@@ -21,8 +21,14 @@
 //! with `--plan`) freezes the scheduled step after the first iteration
 //! and replays it on every later step — the run report prints the cache
 //! hit/miss counts, and a multi-step run must show at least one hit.
+//! `--plan-cache-file PATH` persists the frozen steps across processes
+//! (a restarted run's first step is already a hit), and `--executor
+//! sync|background` (default background) picks whether cached replays
+//! drain on the caller's thread or on the background device-stage
+//! thread — the run report prints the measured wallclock-hidden split.
 
 use xdna_repro::coordinator::engine::ExecMode;
+use xdna_repro::coordinator::executor::ExecutorMode;
 use xdna_repro::coordinator::plan::{PlanCache, PlanCacheMode};
 use xdna_repro::coordinator::session::{
     OffloadSession, QueueDepth, SessionConfig, ShardPolicy,
@@ -58,6 +64,8 @@ fn main() -> xdna_repro::Result<()> {
     let schedule: SchedulePolicy = args.get_parse("schedule", SchedulePolicy::Fifo)?;
     let plan = args.flag("plan");
     let plan_cache = args.get_parse("plan-cache", PlanCacheMode::On)?.enabled();
+    let executor: ExecutorMode = args.get_parse("executor", ExecutorMode::Background)?;
+    let cache_file = args.get("plan-cache-file").map(str::to_string);
     let epochs = 20.min(total_steps);
     let steps_per_epoch = (total_steps / epochs).max(1);
 
@@ -98,6 +106,17 @@ fn main() -> xdna_repro::Result<()> {
         engine.shard_policy()
     );
     let mut cache = PlanCache::new();
+    // Cross-process plan cache: keyed by the session configuration plus
+    // the model/step shape (the same helper the CLI uses, so files are
+    // portable between the two); a stale or mismatched file is simply a
+    // cache miss and the run records as it would have anyway.
+    let fingerprint =
+        xdna_repro::model::trainer::plan_cache_fingerprint(&engine, &cfg, batch, seq);
+    let session_id = engine.session_id();
+    if let (Some(path), true) = (cache_file.as_deref(), plan && plan_cache) {
+        let n = cache.load_from(path, fingerprint, session_id);
+        println!("plan cache file: loaded {n} cached step(s) from {path}");
+    }
     let npu_stats = if plan {
         let cache_ref = if plan_cache { Some(&mut cache) } else { None };
         train(
@@ -106,6 +125,7 @@ fn main() -> xdna_repro::Result<()> {
             &mut TrainBackend::CpuNpuPlanned {
                 session: &mut engine,
                 cache: cache_ref,
+                executor,
             },
             &tc,
         )?
@@ -154,6 +174,10 @@ fn main() -> xdna_repro::Result<()> {
                 cache.hits()
             );
         }
+        if let Some(path) = cache_file.as_deref() {
+            let n = cache.save_to(path, fingerprint, session_id)?;
+            println!("plan cache file: saved {n} cached step(s) to {path}");
+        }
     }
     println!(
         "offload schedule: serial {:.1} ms, overlapped {:.1} ms -> host time hidden {:.1} ms ({:.1}%)",
@@ -166,6 +190,17 @@ fn main() -> xdna_repro::Result<()> {
         engine.pipeline.makespan_s() <= engine.pipeline.serial_s() + 1e-9,
         "overlap must never make the modeled schedule slower"
     );
+    if plan {
+        // Measured, not modeled: how much of the serialized GEMM
+        // wallclock the step executor hid from the trainer thread.
+        println!(
+            "executor {executor}: offloaded GEMM wallclock {:.1} ms, trainer blocked \
+             {:.1} ms, wallclock hidden {:.1} ms",
+            engine.wall_gemm_s * 1e3,
+            engine.wall_blocked_s * 1e3,
+            (engine.wall_gemm_s - engine.wall_blocked_s).max(0.0) * 1e3
+        );
+    }
 
     println!("\nper-op wallclock over the run (paper Figure 8 categories):");
     for op in OPS {

@@ -7,7 +7,10 @@
 //! the figure reports and the modeled schedules can never drift apart
 //! when recalibrated (see `staging_agrees_with_session_model` below).
 
-use crate::gemm::sizes::ProblemSize;
+use std::time::Instant;
+
+use crate::coordinator::transpose::transpose_into;
+use crate::gemm::sizes::{distinct_sizes, ModelDims, ProblemSize};
 use crate::gemm::tiling::Tiling;
 use crate::npu::timing::{HostStagingModel, TimingModel};
 use crate::xrt::bo::{SyncCost, SyncDirection};
@@ -77,9 +80,185 @@ pub fn model_invocation(
     }
 }
 
+/// One GPT-2 site shape's measured staging wallclock (its B input, the
+/// larger staged operand — the lm-head weight alone is 154 MB).
+#[derive(Debug, Clone)]
+pub struct SiteCalibration {
+    pub size: ProblemSize,
+    /// Bytes staged (k·n·4, the B operand).
+    pub bytes: usize,
+    /// Best-of-reps plain copy wallclock into a preallocated buffer.
+    pub copy_meas_s: f64,
+    /// Best-of-reps blocked multi-core transpose wallclock.
+    pub transpose_meas_s: f64,
+}
+
+/// Measured host-staging bandwidths on *this* machine, aggregated over a
+/// shape set, next to the constants the model currently charges — the
+/// ROADMAP calibration item, measurable now that the background executor
+/// gives the wallclock path teeth.
+#[derive(Debug, Clone)]
+pub struct Calibration {
+    /// Aggregate measured memcpy bandwidth (total bytes / total best
+    /// time).
+    pub copy_bytes_per_s: f64,
+    /// Aggregate measured transpose bandwidth.
+    pub transpose_bytes_per_s: f64,
+    pub sites: Vec<SiteCalibration>,
+}
+
+impl Calibration {
+    /// Relative error of the model's copy constant vs the measurement
+    /// (positive = the model assumes a faster host than measured).
+    pub fn copy_rel_err(&self) -> f64 {
+        (HostStagingModel::COPY_BYTES_PER_S - self.copy_bytes_per_s) / self.copy_bytes_per_s
+    }
+
+    /// Relative error of the model's transpose constant vs the
+    /// measurement.
+    pub fn transpose_rel_err(&self) -> f64 {
+        (HostStagingModel::TRANSPOSE_BYTES_PER_S - self.transpose_bytes_per_s)
+            / self.transpose_bytes_per_s
+    }
+}
+
+/// Measure real copy/transpose wallclock for each size's B operand
+/// (k x n), best of `reps` repetitions per site.
+pub fn calibrate_sizes(sizes: &[ProblemSize], reps: usize) -> Calibration {
+    let reps = reps.max(1);
+    let mut sites = Vec::with_capacity(sizes.len());
+    let (mut copy_bytes, mut copy_time) = (0usize, 0.0f64);
+    let (mut tr_bytes, mut tr_time) = (0usize, 0.0f64);
+    for &size in sizes {
+        let (k, n) = (size.k, size.n);
+        let elems = k * n;
+        let src = vec![1.0f32; elems];
+        let mut dst = vec![0.0f32; elems];
+        let mut copy_meas_s = f64::INFINITY;
+        for _ in 0..reps {
+            let t0 = Instant::now();
+            dst.copy_from_slice(&src);
+            copy_meas_s = copy_meas_s.min(t0.elapsed().as_secs_f64());
+            std::hint::black_box(&mut dst);
+        }
+        // The staged B is N x K at its call site (the llm.c weight view);
+        // the engine transposes it to K x N during the copy.
+        let mut transpose_meas_s = f64::INFINITY;
+        for _ in 0..reps {
+            let t0 = Instant::now();
+            transpose_into(&src, &mut dst, n, k);
+            transpose_meas_s = transpose_meas_s.min(t0.elapsed().as_secs_f64());
+            std::hint::black_box(&mut dst);
+        }
+        let bytes = elems * 4;
+        copy_bytes += bytes;
+        copy_time += copy_meas_s;
+        tr_bytes += bytes;
+        tr_time += transpose_meas_s;
+        sites.push(SiteCalibration {
+            size,
+            bytes,
+            copy_meas_s,
+            transpose_meas_s,
+        });
+    }
+    Calibration {
+        copy_bytes_per_s: copy_bytes as f64 / copy_time.max(1e-12),
+        transpose_bytes_per_s: tr_bytes as f64 / tr_time.max(1e-12),
+        sites,
+    }
+}
+
+/// Calibrate on the twelve GPT-2 124M site shapes (best of 3).
+pub fn calibrate() -> Calibration {
+    calibrate_sizes(&distinct_sizes(&ModelDims::gpt2_124m()), 3)
+}
+
+/// Print the current model constants (`bench host-model`).
+pub fn print_model() {
+    println!("\n=== HostStagingModel (current calibration) ===");
+    println!(
+        "  copy:      {:>7.2} GB/s  (plain memcpy into a shared BO)",
+        HostStagingModel::COPY_BYTES_PER_S / 1e9
+    );
+    println!(
+        "  transpose: {:>7.2} GB/s  (blocked multi-core transpose)",
+        HostStagingModel::TRANSPOSE_BYTES_PER_S / 1e9
+    );
+    println!("run with --calibrate to measure this machine and suggest new constants");
+}
+
+/// `bench host-model --calibrate`: measure, compare, and emit a
+/// ready-to-paste constants block.
+pub fn print_calibration() {
+    let cal = calibrate();
+    println!("\n=== HostStagingModel calibration (twelve GPT-2 124M site shapes) ===");
+    println!(
+        "{:<22} {:>10} {:>12} {:>12} {:>12} {:>12}",
+        "size", "MB", "copy ms", "copy GB/s", "transp ms", "transp GB/s"
+    );
+    for s in &cal.sites {
+        println!(
+            "{:<22} {:>10.1} {:>12.3} {:>12.2} {:>12.3} {:>12.2}",
+            s.size.to_string(),
+            s.bytes as f64 / 1e6,
+            s.copy_meas_s * 1e3,
+            s.bytes as f64 / s.copy_meas_s.max(1e-12) / 1e9,
+            s.transpose_meas_s * 1e3,
+            s.bytes as f64 / s.transpose_meas_s.max(1e-12) / 1e9
+        );
+    }
+    println!(
+        "\naggregate measured: copy {:.2} GB/s, transpose {:.2} GB/s",
+        cal.copy_bytes_per_s / 1e9,
+        cal.transpose_bytes_per_s / 1e9
+    );
+    println!(
+        "current model:      copy {:.2} GB/s ({:+.1}% vs measured), transpose {:.2} GB/s \
+         ({:+.1}% vs measured)",
+        HostStagingModel::COPY_BYTES_PER_S / 1e9,
+        100.0 * cal.copy_rel_err(),
+        HostStagingModel::TRANSPOSE_BYTES_PER_S / 1e9,
+        100.0 * cal.transpose_rel_err()
+    );
+    println!("\nsuggested constants block (rust/src/npu/timing.rs, HostStagingModel):");
+    println!(
+        "    pub const COPY_BYTES_PER_S: f64 = {:.4e};",
+        cal.copy_bytes_per_s
+    );
+    println!(
+        "    pub const TRANSPOSE_BYTES_PER_S: f64 = {:.4e};",
+        cal.transpose_bytes_per_s
+    );
+    println!(
+        "(the single source every consumer shares: the session timeline, the figure \
+         reports, and ShardPolicy::Auto all recalibrate together)"
+    );
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn calibration_measures_positive_bandwidths() {
+        // Small shapes keep the test cheap; the CLI path runs the full
+        // twelve 124M sites.
+        let sizes = [ProblemSize::new(64, 64, 128), ProblemSize::new(64, 128, 256)];
+        let cal = calibrate_sizes(&sizes, 2);
+        assert_eq!(cal.sites.len(), 2);
+        assert!(cal.copy_bytes_per_s > 0.0);
+        assert!(cal.transpose_bytes_per_s > 0.0);
+        for s in &cal.sites {
+            assert!(s.copy_meas_s >= 0.0 && s.copy_meas_s.is_finite());
+            assert!(s.transpose_meas_s >= 0.0 && s.transpose_meas_s.is_finite());
+            assert_eq!(s.bytes, s.size.k * s.size.n * 4);
+        }
+        // The relative-error probes are finite (sign depends on the
+        // machine).
+        assert!(cal.copy_rel_err().is_finite());
+        assert!(cal.transpose_rel_err().is_finite());
+    }
 
     #[test]
     fn transpose_costs_more_than_copy() {

@@ -11,7 +11,7 @@
 //! that generate Figure 7, and can emit the table as JSON for CI
 //! artifacts.
 
-use crate::coordinator::plan::{PlanOp, StepPlan};
+use crate::coordinator::plan::{PlanCache, PlanOp, StepPlan};
 use crate::coordinator::session::{
     InputLayout, OffloadSession, QueueDepth, SessionConfig, ShardPolicy, Shards,
 };
@@ -45,10 +45,17 @@ pub struct PipelineReport {
     /// stream's strictly serialized stage sum — paid once per distinct
     /// step shape under plan caching.
     pub plan_record_s: f64,
-    /// What every cached *replay* of that plan costs: the scheduled
-    /// makespan with the ring, sharding, and the deep prefetch horizon
-    /// applied — paid on all later steps.
+    /// What every cached *replay* of that plan costs: the frozen
+    /// schedule's makespan with the ring, sharding, and the deep
+    /// prefetch horizon applied — paid on all later steps. Charged by
+    /// replaying the actual frozen `CachedStep` through the same
+    /// `finish_replay` path the trainer uses.
     pub plan_replay_s: f64,
+    /// Plan-cache counters of the modeled record→freeze→replay cycle
+    /// (one recorded miss, one frozen-replay hit) — the same counters
+    /// the run report prints, now carried by the JSON artifact rows.
+    pub plan_cache_hits: u64,
+    pub plan_cache_misses: u64,
 }
 
 impl PipelineReport {
@@ -117,7 +124,8 @@ pub fn breakdown_at(profile: &PowerProfile, depth: usize, shards: usize) -> Pipe
     for (done, post) in pending {
         tl.wait(done, post);
     }
-    let (plan_record_s, plan_replay_s) = plan_record_vs_replay(profile, depth, shards);
+    let (plan_record_s, plan_replay_s, hits, misses) =
+        plan_record_vs_replay(profile, depth, shards);
     PipelineReport {
         depth,
         shards,
@@ -127,15 +135,24 @@ pub fn breakdown_at(profile: &PowerProfile, depth: usize, shards: usize) -> Pipe
         overlapped_s: tl.makespan_s(),
         plan_record_s,
         plan_replay_s,
+        plan_cache_hits: hits,
+        plan_cache_misses: misses,
     }
 }
 
 /// Model the same epoch GEMM stream through the record→schedule→execute
 /// seam as a *dry-run* step plan (no buffers staged — the modeled record
 /// path uses the identical cost models): the recording pass costs the
-/// serial stage sum, and every cached replay costs the scheduled
-/// makespan. Returns (record seconds, replay seconds).
-fn plan_record_vs_replay(profile: &PowerProfile, depth: usize, shards: usize) -> (f64, f64) {
+/// serial stage sum, and every cached replay costs the frozen schedule's
+/// makespan, charged through the real `PlanCache` freeze → `finish_replay`
+/// cycle so the hit/miss counters in the artifact are the counters the
+/// trainer's run report prints. Returns (record seconds, replay seconds,
+/// cache hits, cache misses).
+fn plan_record_vs_replay(
+    profile: &PowerProfile,
+    depth: usize,
+    shards: usize,
+) -> (f64, f64, u64, u64) {
     let mut sess = OffloadSession::new(
         SessionConfig {
             depth: QueueDepth(depth),
@@ -166,7 +183,22 @@ fn plan_record_vs_replay(profile: &PowerProfile, depth: usize, shards: usize) ->
         }
     }
     let report = sess.execute(&mut plan).expect("modeled plan executes");
-    (report.serial_growth_s, report.makespan_growth_s)
+    let record_s = report.serial_growth_s;
+
+    // Freeze → cache → replay the frozen schedule once, exactly the
+    // record-once / replay-thereafter cycle the trainer runs, so the
+    // replay column prices what every later step costs and the cache
+    // counters flow into the artifact.
+    let mut cache = PlanCache::new();
+    cache.insert(sess.freeze(plan).expect("executed plan freezes"));
+    let entry = cache
+        .latest_for(sess.session_id())
+        .expect("entry cached for this session");
+    // The dry-run stream staged no buffers, so the "replay" is the
+    // session's dry charge of the frozen schedule — no numerics re-run.
+    let rep = sess.charge_frozen(entry).expect("frozen schedule charges");
+    cache.record_hit();
+    (record_s, rep.makespan_growth_s, cache.hits(), cache.misses())
 }
 
 /// The PR-1 operating point: double-buffered ring, unsharded.
@@ -229,6 +261,14 @@ fn report_to_json(b: &PipelineReport) -> Json {
     o.insert("hidden_s".to_string(), Json::Num(b.hidden_s()));
     o.insert("plan_record_s".to_string(), Json::Num(b.plan_record_s));
     o.insert("plan_replay_s".to_string(), Json::Num(b.plan_replay_s));
+    o.insert(
+        "plan_cache_hits".to_string(),
+        Json::Num(b.plan_cache_hits as f64),
+    );
+    o.insert(
+        "plan_cache_misses".to_string(),
+        Json::Num(b.plan_cache_misses as f64),
+    );
     Json::Obj(o)
 }
 
@@ -245,7 +285,13 @@ fn report_to_json(b: &PipelineReport) -> Json {
 ///   the one-time cost of recording a step plan vs the per-step cost of
 ///   replaying its cached schedule, so the caching amortization is
 ///   visible in the artifact.
-pub const SCHEMA_VERSION: u64 = 2;
+/// * v3 — additive on v2: rows gain `plan_cache_hits` /
+///   `plan_cache_misses`, the counters of the modeled
+///   record→freeze→replay cycle (previously only printed in the run
+///   report), and `plan_replay_s` is now charged by replaying the actual
+///   frozen `CachedStep` through `finish_replay`. v2 consumers keep
+///   working; the bump marks the row shape extension.
+pub const SCHEMA_VERSION: u64 = 3;
 
 /// The full report as JSON (per power profile, per operating point) — the
 /// CI smoke step uploads this as a build artifact. Self-describing: see
@@ -405,6 +451,10 @@ mod tests {
                 // v2 additive: record-vs-replay amortization columns.
                 assert!(r["plan_record_s"].as_f64().unwrap() > 0.0);
                 assert!(r["plan_replay_s"].as_f64().unwrap() > 0.0);
+                // v3 additive: the plan-cache counters of the modeled
+                // record→freeze→replay cycle ride along in every row.
+                assert_eq!(r["plan_cache_hits"].as_usize().unwrap(), 1);
+                assert_eq!(r["plan_cache_misses"].as_usize().unwrap(), 1);
             }
         }
         // The compact serialization round-trips (what CI uploads).

@@ -169,6 +169,28 @@ pub struct PjrtDevice {
     gemms: PjrtGemms,
 }
 
+// SAFETY: sessions hold their device as `Box<dyn ComputeDevice + Send>`
+// so the background step executor may move the whole session between
+// threads. Two claims back this impl:
+//
+// 1. `PjrtGemms` internally reference-counts compiled executables with
+//    `Rc`, but every clone lives inside this one struct (the
+//    `RuntimeClient` cache plus the per-size map) — no `Rc` escapes — so
+//    moving the device moves *all* owners together and the non-atomic
+//    refcounts are only ever touched from whichever single thread
+//    currently owns the session (the session API is `&mut self`
+//    throughout).
+// 2. The underlying `xla::PjRtClient` / `PjRtLoadedExecutable` C++
+//    objects are *assumed* safe to use from one thread at a time even if
+//    it is not the thread that created them (the PJRT C API documents
+//    its client/executable objects as thread-safe; the Rust wrapper's
+//    missing `Send` comes from its raw-pointer fields, not a documented
+//    affinity). This assumption is untestable in this repo until the
+//    `pjrt` feature build is validated (see ROADMAP) — re-audit it
+//    there before running background replays on a PJRT device.
+#[cfg(feature = "pjrt")]
+unsafe impl Send for PjrtDevice {}
+
 #[cfg(feature = "pjrt")]
 impl PjrtDevice {
     pub fn new(gemms: PjrtGemms) -> PjrtDevice {

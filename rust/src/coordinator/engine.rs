@@ -70,8 +70,10 @@ impl ExecMode {
 pub struct EngineConfig {
     pub policy: ReconfigPolicy,
     /// Where GEMM numerics execute (replaces the old `NumericsBackend`
-    /// enum with the object-safe [`ComputeDevice`] trait).
-    pub device: Box<dyn ComputeDevice>,
+    /// enum with the object-safe [`ComputeDevice`] trait). `Send` so the
+    /// underlying session can be driven from the background step
+    /// executor (see [`super::executor`]).
+    pub device: Box<dyn ComputeDevice + Send>,
     pub mode: ExecMode,
 }
 

@@ -1,0 +1,1003 @@
+//! The background step executor — execution of cached step plans off the
+//! trainer's thread, the layer that turns three PRs of *modeled*-timeline
+//! overlap into wallclock overlap.
+//!
+//! After PR 2–4, overlap existed only on the modeled
+//! [`PipelineTimeline`](crate::npu::timing::PipelineTimeline): eager
+//! `wait`, plan `execute`, and cached `finish_replay` all drained
+//! synchronously on the trainer's thread, so the real copy/transpose/
+//! kernel wallclock was never hidden. This module adds the missing
+//! thread: [`run_replay_step`] spawns a scoped *device-stage thread* that
+//! owns the [`OffloadSession`] for the duration of one cached step and
+//! drains the step's invocations — ring-slot staging, reconfiguration,
+//! kernels, output merges — while the trainer thread keeps computing the
+//! model's CPU ops. The handoff is a bounded queue
+//! ([`crate::util::threads::Bounded`]) whose capacity mirrors the
+//! session's ring depth, and completions come back through session-scoped
+//! [`ExecHandle`]s that follow the existing `Ticket` rules: a handle from
+//! another executor run, a double wait, or a never-issued handle is a
+//! helpful error, never a wrong buffer.
+//!
+//! What wallclock overlap this buys, concretely:
+//!
+//! * **Backward weight gradients run entirely in the background.** The
+//!   `dW` GEMMs — among the largest invocations of the step — are
+//!   submitted *deferred*: their `dweight` accumulation happens when the
+//!   result comes back, so the trainer's subsequent CPU ops (gelu,
+//!   layernorm, attention backward) genuinely overlap the `dW` staging,
+//!   kernel, and merge in wallclock.
+//! * **Gradient merges hide under the next invocation.** Waiting a
+//!   `dinp` result returns as soon as that op retires; its accumulation
+//!   (and the bias reduction) overlaps the executor's next job.
+//! * **Forward stays ordered.** Each forward output feeds the next CPU
+//!   op immediately, so forward submits still wait in place — the
+//!   executor never reorders numerics; replayed invocations run in
+//!   record order, exactly like the synchronous replay, which is why
+//!   background outputs are bit-identical to sync outputs.
+//!
+//! The *modeled* charge is untouched: after the step, the frozen
+//! [`CachedStep`] schedule is charged through
+//! [`OffloadSession::finish_replay`] exactly as the synchronous path
+//! charges it, and the per-step [`StepReport`] now carries the measured
+//! `wall_gemm_s` / `wall_blocked_s` split next to the modeled makespan —
+//! so the hidden-staging win is observable, not just simulated.
+//!
+//! # Safety model
+//!
+//! Jobs cross the thread boundary carrying raw slices of the model's
+//! long-lived buffers (parameters, saved activations, gradient arenas).
+//! Three rules make that sound, and every `unsafe` block cites them:
+//!
+//! 1. **In-call jobs are bounded by their frame.** `submit` requires the
+//!    caller to `wait` the handle before the input/output borrows end;
+//!    the dispatch arms in `model::ops::matmul` wait inside the same
+//!    call, so the borrows of the enclosing call frame pin the memory.
+//! 2. **Deferred jobs reference only step-stable memory.** A deferred
+//!    `dW` job owns a *copy* of its `dout` input (the model reuses its
+//!    gradient scratch across layers), borrows the saved forward
+//!    activation (never mutated during backward), and accumulates into a
+//!    gradient region nothing else touches until the optimizer runs —
+//!    and the accumulation itself happens on the trainer thread.
+//! 3. **Errors quiesce before they return.** Any client method that
+//!    fails first aborts the job queue (queued work is *discarded*, never
+//!    run) and blocks until the executor thread confirms it is idle — so
+//!    no job can outlive the frame that submitted it, even on the error
+//!    path.
+//!
+//! One known formal caveat: a deferred accumulation target is held as a
+//! raw pointer while the trainer later takes fresh `&mut` borrows of
+//! *other, disjoint* regions of the same gradient arena — disjointness
+//! makes this race-free, but strict Stacked-Borrows provenance (Miri)
+//! would flag the re-borrow — the same pointer-laundering idiom the
+//! crate's data-parallel helpers already use for disjoint chunks (the
+//! NPU simulator's parallel tile loop, `coordinator::transpose`).
+//! Routing deferred targets as arena offsets would make it
+//! provenance-clean; see ROADMAP.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+use crate::gemm::sizes::ProblemSize;
+use crate::util::error::{Error, Result};
+use crate::util::threads::Bounded;
+
+use super::plan::{CachedStep, PlanNode, PlanOp, StepReport};
+use super::session::{InputLayout, OffloadSession};
+
+/// How `TrainBackend::CpuNpuPlanned` drives a cached-step replay.
+///
+/// `Sync` is the PR-4 behaviour: every replayed invocation runs to
+/// completion on the trainer's thread. `Background` (the default when a
+/// cached plan exists) hands the device-stage loop to the executor
+/// thread, overlapping staging + device work with the trainer's CPU ops
+/// in wallclock. Recording is always synchronous — only replays of a
+/// frozen [`CachedStep`] run in the background. CLI form:
+/// `--executor sync|background`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ExecutorMode {
+    /// Drain every invocation on the caller's thread (PR-4 behaviour).
+    Sync,
+    /// Drain the device-stage loop on the background executor thread.
+    #[default]
+    Background,
+}
+
+impl std::str::FromStr for ExecutorMode {
+    type Err = String;
+
+    /// CLI form: `sync` | `background` (shared by the binary and the
+    /// examples, like the `ShardPolicy` and `SchedulePolicy` parsers).
+    fn from_str(s: &str) -> std::result::Result<ExecutorMode, String> {
+        match s {
+            "sync" => Ok(ExecutorMode::Sync),
+            "background" => Ok(ExecutorMode::Background),
+            other => Err(format!(
+                "unknown executor '{other}' (expected sync|background)"
+            )),
+        }
+    }
+}
+
+impl std::fmt::Display for ExecutorMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ExecutorMode::Sync => write!(f, "sync"),
+            ExecutorMode::Background => write!(f, "background"),
+        }
+    }
+}
+
+/// Completion handle for one backgrounded invocation — the executor's
+/// analogue of a session [`Ticket`](super::session::Ticket), scoped the
+/// same way: redeeming it against a different session's executor, an
+/// *earlier executor run* on the same session (sequence numbers restart
+/// every step, so a per-run nonce disambiguates), twice, or before it
+/// was issued is a helpful error — never a wrong buffer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ExecHandle {
+    session: u64,
+    /// Per-run nonce: handles are scoped to one [`run_replay_step`].
+    run: u64,
+    seq: usize,
+}
+
+impl ExecHandle {
+    /// The executing session's id (diagnostics).
+    pub fn session_id(&self) -> u64 {
+        self.session
+    }
+}
+
+/// Per-run nonce source for [`ExecHandle`] scoping.
+static NEXT_RUN_ID: AtomicU64 = AtomicU64::new(1);
+
+/// A raw `*const f32` that may cross the thread boundary. Soundness is
+/// the executor's safety model (module docs): the referent is pinned by
+/// the submitting frame or owned by the model for the whole step.
+struct SendConst(*const f32);
+// SAFETY: the pointer is only dereferenced while the submit contract
+// keeps the referent alive (rules 1–3 in the module docs).
+unsafe impl Send for SendConst {}
+
+/// A raw `*mut f32` that may cross the thread boundary; same contract.
+struct SendMut(*mut f32);
+// SAFETY: as for SendConst; additionally the region is never aliased —
+// in-call outputs are untouched by the submitter until `wait`, deferred
+// accumulation targets are touched only from the trainer thread.
+unsafe impl Send for SendMut {}
+
+enum JobInput {
+    /// Borrowed from the submitting side (model-owned, frame-pinned).
+    Borrowed(SendConst, usize),
+    /// Owned by the job (the copied `dout` of a deferred weight
+    /// gradient).
+    Owned(Vec<f32>),
+}
+
+impl JobInput {
+    /// # Safety
+    /// For the `Borrowed` variant the caller must uphold the submit
+    /// contract: the referent outlives this job.
+    unsafe fn as_slice(&self) -> &[f32] {
+        match self {
+            JobInput::Borrowed(p, len) => std::slice::from_raw_parts(p.0, *len),
+            JobInput::Owned(v) => v,
+        }
+    }
+}
+
+enum JobOutput {
+    /// Write the merged result straight into the submitter's buffer.
+    Borrowed(SendMut, usize),
+    /// Allocate an owned result of this length and hand it back in the
+    /// completion (deferred jobs; the client applies the accumulation on
+    /// the trainer thread).
+    Owned(usize),
+}
+
+/// One invocation handed to the device-stage thread.
+struct Job {
+    seq: usize,
+    size: ProblemSize,
+    a_layout: InputLayout,
+    b_layout: InputLayout,
+    a: JobInput,
+    b: JobInput,
+    out: JobOutput,
+}
+
+/// One invocation's completion.
+struct Done {
+    seq: usize,
+    wall_s: f64,
+    /// `Ok(Some(c))` for owned-output (deferred) jobs, `Ok(None)` when
+    /// the result was written in place.
+    result: Result<Option<Vec<f32>>>,
+}
+
+/// A deferred accumulation target (`dst += result` when the completion
+/// arrives, applied on the trainer thread).
+struct Deferred {
+    dst: SendMut,
+    len: usize,
+}
+
+/// The trainer-thread side of a background step: checks every submitted
+/// GEMM against the frozen [`CachedStep`] (divergence stays a recoverable
+/// error, exactly like the synchronous replay), hands jobs across the
+/// bounded queue, and redeems completions.
+///
+/// Obtained only inside [`run_replay_step`]'s closure; the matching
+/// device-stage thread owns the session until the step ends.
+pub struct ExecClient<'c> {
+    entry: &'c CachedStep,
+    session_id: u64,
+    /// This run's handle nonce (see [`ExecHandle`]).
+    run_id: u64,
+    jobs: Bounded<Job>,
+    done: Bounded<Done>,
+    /// Next op index to submit (must match the cached record order).
+    cursor: usize,
+    /// Per-op: has its completion been redeemed (waited, or deferred and
+    /// applied)?
+    waited: Vec<bool>,
+    /// Completions that arrived before their wait.
+    ready: BTreeSet<usize>,
+    deferred: BTreeMap<usize, Deferred>,
+    /// Measured wallclock per invocation, by record order.
+    walls: Vec<f64>,
+    completed: usize,
+    /// Wallclock this thread spent blocked on the executor (queue
+    /// handoff + waits).
+    blocked_s: f64,
+    poisoned: bool,
+    chain: Option<usize>,
+}
+
+impl<'c> ExecClient<'c> {
+    fn new(
+        entry: &'c CachedStep,
+        session_id: u64,
+        jobs: Bounded<Job>,
+        done: Bounded<Done>,
+    ) -> ExecClient<'c> {
+        let n = entry.len();
+        ExecClient {
+            entry,
+            session_id,
+            run_id: NEXT_RUN_ID.fetch_add(1, Ordering::Relaxed),
+            jobs,
+            done,
+            cursor: 0,
+            waited: vec![false; n],
+            ready: BTreeSet::new(),
+            deferred: BTreeMap::new(),
+            walls: vec![0.0; n],
+            completed: 0,
+            blocked_s: 0.0,
+            poisoned: false,
+            chain: None,
+        }
+    }
+
+    /// The op currently heading the activation chain (mirrors
+    /// [`super::plan::StepPlan::chain_head`], so dispatch arms drive
+    /// record, sync replay, and background replay identically).
+    pub fn chain_head(&self) -> Option<PlanNode> {
+        self.chain.map(PlanNode)
+    }
+
+    /// Advance the activation chain to `node`.
+    pub fn set_chain(&mut self, node: PlanNode) {
+        self.chain = Some(node.index());
+    }
+
+    /// Ops submitted so far.
+    pub fn submitted(&self) -> usize {
+        self.cursor
+    }
+
+    /// Shut the executor down and *wait until it is idle* before
+    /// reporting the error. Queued-but-unstarted jobs are discarded
+    /// (never run); the in-flight one, if any, completes against memory
+    /// the still-live erroring frame pins. This is what makes returning
+    /// an error safe at any point.
+    fn fail<T>(&mut self, e: Error) -> Result<T> {
+        self.quiesce();
+        Err(e)
+    }
+
+    fn quiesce(&mut self) {
+        if self.poisoned {
+            return;
+        }
+        self.poisoned = true;
+        self.jobs.abort();
+        // Drain (and discard) completions until the executor closes the
+        // queue — after this, no job references any caller memory.
+        while self.done.pop().is_some() {}
+    }
+
+    fn guard_open(&self) -> Result<()> {
+        if self.poisoned {
+            return Err(Error::runtime(
+                "step executor already shut down after an earlier error",
+            ));
+        }
+        Ok(())
+    }
+
+    /// Divergence + shape checks for the op at the cursor, applied on
+    /// the trainer thread so a mismatch surfaces before any work is
+    /// queued. The divergence rule itself is `CachedStep::check_op` —
+    /// the *same* helper the synchronous replay uses, so the two paths
+    /// can never drift on what triggers a re-record.
+    fn check_next(&self, op: &PlanOp, a_len: usize, b_len: usize, out_len: usize) -> Result<()> {
+        self.entry.check_op(self.cursor, op)?;
+        let (m, k, n) = (op.size.m, op.size.k, op.size.n);
+        if a_len != m * k || b_len != k * n || out_len != m * n {
+            return Err(Error::shape(format!(
+                "background gemm {}: got A={a_len} B={b_len} C={out_len}",
+                op.size
+            )));
+        }
+        Ok(())
+    }
+
+    fn push_job(&mut self, job: Job) -> Result<()> {
+        let t0 = Instant::now();
+        let accepted = self.jobs.push(job);
+        self.blocked_s += t0.elapsed().as_secs_f64();
+        if !accepted {
+            return self.fail(Error::runtime(
+                "step executor is no longer accepting work",
+            ));
+        }
+        Ok(())
+    }
+
+    /// Submit one replayed GEMM whose result the caller needs in place:
+    /// the executor writes the merged output straight into `out`, and
+    /// [`ExecClient::wait`] on the returned handle synchronizes.
+    ///
+    /// # Safety
+    ///
+    /// The caller must not mutate `a`/`b` and must not touch `out` until
+    /// `wait` on the returned handle returns — or until any client
+    /// method returns an error (the client quiesces the executor before
+    /// erroring, so no job outlives its inputs). Because only a client
+    /// *error return* quiesces, the caller must also not **unwind**
+    /// (panic) between this call and the matching `wait` while any of
+    /// the three buffers is owned by the unwinding frame — a panic would
+    /// drop them while the device-stage thread may still be writing.
+    /// The dispatch arms uphold both rules by waiting inside the same
+    /// call that submitted, with nothing panic-prone in between.
+    pub unsafe fn submit(
+        &mut self,
+        op: &PlanOp,
+        a: &[f32],
+        b: &[f32],
+        out: &mut [f32],
+    ) -> Result<(PlanNode, ExecHandle)> {
+        self.guard_open()?;
+        if let Err(e) = self.check_next(op, a.len(), b.len(), out.len()) {
+            return self.fail(e);
+        }
+        let seq = self.cursor;
+        self.push_job(Job {
+            seq,
+            size: op.size,
+            a_layout: op.a_layout,
+            b_layout: op.b_layout,
+            a: JobInput::Borrowed(SendConst(a.as_ptr()), a.len()),
+            b: JobInput::Borrowed(SendConst(b.as_ptr()), b.len()),
+            out: JobOutput::Borrowed(SendMut(out.as_mut_ptr()), out.len()),
+        })?;
+        self.cursor += 1;
+        Ok((
+            PlanNode(seq),
+            ExecHandle {
+                session: self.session_id,
+                run: self.run_id,
+                seq,
+            },
+        ))
+    }
+
+    /// Submit one replayed GEMM whose result is *accumulated later*:
+    /// when the completion arrives (during a later wait, or at the
+    /// step-end drain), the client adds the merged output into `dst` on
+    /// the trainer thread. This is the backward weight-gradient path —
+    /// the whole invocation overlaps the trainer's subsequent CPU ops.
+    ///
+    /// `a` is taken by value (a copy) because the model reuses its
+    /// gradient scratch buffers across layers; `b` must be step-stable
+    /// (a saved forward activation or a parameter).
+    ///
+    /// # Safety
+    ///
+    /// `b` must stay valid and unmutated, and the `dst` region must not
+    /// be read or written by anyone else, until the step finishes
+    /// ([`run_replay_step`] drains every completion) or a client method
+    /// returns an error (quiesced first). Model parameters, saved
+    /// activations, and gradient tensors satisfy this for the whole
+    /// training step.
+    pub unsafe fn submit_deferred(
+        &mut self,
+        op: &PlanOp,
+        a: Vec<f32>,
+        b: &[f32],
+        dst: &mut [f32],
+    ) -> Result<PlanNode> {
+        self.guard_open()?;
+        let out_len = op.size.m * op.size.n;
+        if dst.len() != out_len {
+            return self.fail(Error::shape(format!(
+                "background gemm {}: accumulation target has {} elements, expected {out_len}",
+                op.size,
+                dst.len()
+            )));
+        }
+        if let Err(e) = self.check_next(op, a.len(), b.len(), out_len) {
+            return self.fail(e);
+        }
+        let seq = self.cursor;
+        self.deferred.insert(
+            seq,
+            Deferred {
+                dst: SendMut(dst.as_mut_ptr()),
+                len: dst.len(),
+            },
+        );
+        self.push_job(Job {
+            seq,
+            size: op.size,
+            a_layout: op.a_layout,
+            b_layout: op.b_layout,
+            a: JobInput::Owned(a),
+            b: JobInput::Borrowed(SendConst(b.as_ptr()), b.len()),
+            out: JobOutput::Owned(out_len),
+        })?;
+        self.cursor += 1;
+        Ok(PlanNode(seq))
+    }
+
+    /// Process one completion: record its wallclock, apply a deferred
+    /// accumulation, or stash an in-call result for its wait.
+    fn settle(&mut self, d: Done) -> Result<()> {
+        self.walls[d.seq] = d.wall_s;
+        match d.result {
+            Err(e) => Err(Error::runtime(format!(
+                "op #{} failed during background execution: {e}",
+                d.seq
+            ))),
+            Ok(out) => {
+                self.completed += 1;
+                if let Some(def) = self.deferred.remove(&d.seq) {
+                    let c = out.expect("deferred jobs return an owned output");
+                    // SAFETY: submit_deferred's contract — the region is
+                    // alive and exclusively ours until the step ends, and
+                    // this apply runs on the trainer thread.
+                    let dst = unsafe { std::slice::from_raw_parts_mut(def.dst.0, def.len) };
+                    debug_assert_eq!(dst.len(), c.len());
+                    for (acc, x) in dst.iter_mut().zip(&c) {
+                        *acc += *x;
+                    }
+                    self.waited[d.seq] = true;
+                } else {
+                    self.ready.insert(d.seq);
+                }
+                Ok(())
+            }
+        }
+    }
+
+    /// Block until the handle's invocation has completed (its output is
+    /// in place). Handles follow the `Ticket` rules: another executor
+    /// run's handle, a double wait, or a never-issued handle is a
+    /// helpful error — and, because an error tears the step down, the
+    /// client is quiesced before any error returns.
+    pub fn wait(&mut self, h: ExecHandle) -> Result<()> {
+        self.guard_open()?;
+        if h.session != self.session_id {
+            return self.fail(Error::config(format!(
+                "completion handle #{} was issued by step executor for session #{}, \
+                 not session #{}; handles are session-scoped",
+                h.seq, h.session, self.session_id
+            )));
+        }
+        if h.run != self.run_id {
+            // Sequence numbers restart every step, so without this check
+            // a stale handle from a previous run would silently redeem
+            // the wrong completion.
+            return self.fail(Error::config(format!(
+                "completion handle #{} was issued by an earlier executor run on this \
+                 session; handles are scoped to one step",
+                h.seq
+            )));
+        }
+        if h.seq >= self.cursor {
+            return self.fail(Error::config(format!(
+                "completion handle #{} was never issued by this step executor",
+                h.seq
+            )));
+        }
+        if self.waited[h.seq] {
+            return self.fail(Error::config(format!(
+                "completion handle #{} was already redeemed (double wait?)",
+                h.seq
+            )));
+        }
+        loop {
+            if self.ready.remove(&h.seq) {
+                self.waited[h.seq] = true;
+                return Ok(());
+            }
+            let t0 = Instant::now();
+            let popped = self.done.pop();
+            self.blocked_s += t0.elapsed().as_secs_f64();
+            let Some(d) = popped else {
+                return self.fail(Error::runtime(format!(
+                    "step executor exited before completing op #{}",
+                    h.seq
+                )));
+            };
+            if let Err(e) = self.settle(d) {
+                return self.fail(e);
+            }
+        }
+    }
+
+    /// End-of-step: verify the stream matched the whole cached plan,
+    /// drain every outstanding completion (applying deferred
+    /// accumulations), and leave the executor idle.
+    fn finalize(&mut self) -> Result<()> {
+        self.guard_open()?;
+        if self.cursor != self.entry.ops.len() {
+            let cursor = self.cursor;
+            return self.fail(Error::plan_divergence(format!(
+                "step ended after {cursor} of the cached plan's {} GEMMs; re-record the step",
+                self.entry.ops.len()
+            )));
+        }
+        self.jobs.close();
+        loop {
+            let t0 = Instant::now();
+            let popped = self.done.pop();
+            self.blocked_s += t0.elapsed().as_secs_f64();
+            let Some(d) = popped else { break };
+            if let Err(e) = self.settle(d) {
+                return self.fail(e);
+            }
+        }
+        if self.completed != self.entry.ops.len() {
+            return self.fail(Error::runtime(format!(
+                "step executor finished only {} of {} invocations",
+                self.completed,
+                self.entry.ops.len()
+            )));
+        }
+        if let Some(seq) = (0..self.waited.len()).find(|&s| !self.waited[s]) {
+            return self.fail(Error::config(format!(
+                "op #{seq} was submitted to the step executor but its handle was never \
+                 redeemed; wait every in-call handle before the step ends"
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// Abort the job queue when the scope unwinds (a panic in the trainer
+/// closure would otherwise leave the device-stage thread blocked on
+/// `pop` forever and deadlock the scoped join).
+struct AbortOnDrop<'a>(&'a Bounded<Job>);
+
+impl Drop for AbortOnDrop<'_> {
+    fn drop(&mut self) {
+        self.0.abort();
+    }
+}
+
+/// The device-stage loop, run on the background thread that owns the
+/// session for the step: pop an invocation, run it through the *same*
+/// staging → reconfigure → kernel → output-sync → merge body as the
+/// synchronous replay ([`OffloadSession::replay_invocation`] →
+/// `run_invocation` → `run_device_stages`), and report the completion.
+/// Invocations execute strictly in submission (= record) order, so
+/// numerics are bit-identical to the synchronous replay.
+fn device_stage_loop(session: &mut OffloadSession, jobs: Bounded<Job>, done: Bounded<Done>) {
+    while let Some(job) = jobs.pop() {
+        let t0 = Instant::now();
+        // SAFETY: the submit contract (module docs) keeps borrowed
+        // inputs alive until this job completes — the submitting frame
+        // blocks on `wait`, owns the memory for the whole step, or is
+        // pinned by the quiesce-before-error rule.
+        let a = unsafe { job.a.as_slice() };
+        let b = unsafe { job.b.as_slice() };
+        let result = match job.out {
+            JobOutput::Borrowed(ptr, len) => {
+                // SAFETY: as above — the submitter does not touch `out`
+                // until its wait returns.
+                let c = unsafe { std::slice::from_raw_parts_mut(ptr.0, len) };
+                session
+                    .replay_invocation(job.size, job.a_layout, job.b_layout, a, b, c)
+                    .map(|_| None)
+            }
+            JobOutput::Owned(len) => {
+                let mut c = vec![0.0f32; len];
+                session
+                    .replay_invocation(job.size, job.a_layout, job.b_layout, a, b, &mut c)
+                    .map(|_| Some(c))
+            }
+        };
+        let wall_s = t0.elapsed().as_secs_f64();
+        if !done.push(Done {
+            seq: job.seq,
+            wall_s,
+            result,
+        }) {
+            break;
+        }
+    }
+    done.close();
+}
+
+/// Replay one cached step with the device-stage loop on a background
+/// thread — the wallclock-overlapped counterpart of driving
+/// [`OffloadSession::replay_gemm`] + [`OffloadSession::finish_replay`]
+/// synchronously.
+///
+/// `f` is the trainer's step body (forward + backward through the
+/// `MatmulDispatch::BackgroundReplay` arms); it runs on the calling
+/// thread while the spawned executor owns the session. When `f`
+/// completes, every outstanding completion is drained, the frozen
+/// schedule is charged to the modeled timeline exactly as the
+/// synchronous replay charges it, and the returned [`StepReport`]
+/// carries the measured `wall_gemm_s` / `wall_blocked_s` split.
+///
+/// Errors follow the synchronous rules: a divergence (shape or structure
+/// change mid-step) is recoverable — re-record the step — and any error
+/// leaves the session reusable (each invocation is self-contained; the
+/// quiesce protocol guarantees the executor is idle before the error
+/// propagates).
+pub fn run_replay_step<'c, R>(
+    session: &mut OffloadSession,
+    entry: &'c CachedStep,
+    f: impl FnOnce(&mut ExecClient<'c>) -> Result<R>,
+) -> Result<(R, StepReport)> {
+    // Snapshot the replay's starting array state (and enforce the
+    // session-scoping + no-eager-work rules) before the executor takes
+    // the session.
+    let mut proto = session.replay_entry(entry)?;
+    let jobs: Bounded<Job> = Bounded::new(session.queue_depth().max(2));
+    let done: Bounded<Done> = Bounded::new(entry.len() + 1);
+    let mut client = ExecClient::new(entry, session.session_id(), jobs.clone(), done.clone());
+
+    let body = {
+        let sess = &mut *session;
+        let jobs_rx = jobs.clone();
+        let done_tx = done.clone();
+        std::thread::scope(|s| {
+            let _abort_guard = AbortOnDrop(&jobs);
+            let _worker = s.spawn(move || device_stage_loop(sess, jobs_rx, done_tx));
+            match f(&mut client) {
+                Ok(v) => client.finalize().map(|()| v),
+                Err(e) => {
+                    // Discard queued work and wait for the executor to go
+                    // idle; the session stays reusable.
+                    client.quiesce();
+                    Err(e)
+                }
+            }
+        })
+    };
+    let value = body?;
+
+    proto.cursor = entry.len();
+    proto.walls = std::mem::take(&mut client.walls);
+    proto.blocked_s = Some(client.blocked_s);
+    let report = session.finish_replay(proto)?;
+    Ok((value, report))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::plan::{PlanCache, PlanOp, StepPlan};
+    use super::super::scheduler::SchedulePolicy;
+    use super::super::session::{QueueDepth, SessionConfig};
+    use super::*;
+
+    fn session(depth: usize) -> OffloadSession {
+        OffloadSession::new(
+            SessionConfig {
+                depth: QueueDepth(depth),
+                schedule: SchedulePolicy::BatchBySize,
+                ..Default::default()
+            },
+            &[],
+        )
+        .unwrap()
+    }
+
+    /// The three-op step the executor tests replay: two sizes, constant
+    /// inputs with known products.
+    fn step_ops() -> Vec<(PlanOp, Vec<f32>, Vec<f32>, f32)> {
+        let s_a = ProblemSize::new(64, 64, 128);
+        let s_b = ProblemSize::new(128, 64, 128);
+        vec![
+            (
+                PlanOp::new(s_a).prefetchable_b(true),
+                vec![1.0f32; 64 * 64],
+                vec![0.5f32; 64 * 128],
+                32.0,
+            ),
+            (
+                PlanOp::new(s_b).prefetchable_b(true),
+                vec![2.0f32; 128 * 64],
+                vec![0.5f32; 64 * 128],
+                64.0,
+            ),
+            (
+                PlanOp::new(s_a).prefetchable_b(true),
+                vec![3.0f32; 64 * 64],
+                vec![0.5f32; 64 * 128],
+                96.0,
+            ),
+        ]
+    }
+
+    fn cached_session() -> (OffloadSession, PlanCache) {
+        let mut sess = session(2);
+        let mut plan = StepPlan::new();
+        for (op, a, b, _) in step_ops() {
+            let mut c = vec![0.0f32; op.size.m * op.size.n];
+            sess.record_gemm(&mut plan, &op, &a, &b, &mut c).unwrap();
+        }
+        sess.execute(&mut plan).unwrap();
+        let mut cache = PlanCache::new();
+        cache.insert(sess.freeze(plan).unwrap());
+        (sess, cache)
+    }
+
+    #[test]
+    fn executor_mode_parses_cli_forms() {
+        assert_eq!("sync".parse::<ExecutorMode>(), Ok(ExecutorMode::Sync));
+        assert_eq!(
+            "background".parse::<ExecutorMode>(),
+            Ok(ExecutorMode::Background)
+        );
+        assert!("threaded".parse::<ExecutorMode>().is_err());
+        assert_eq!(ExecutorMode::default(), ExecutorMode::Background);
+        assert_eq!(ExecutorMode::Sync.to_string(), "sync");
+        assert_eq!(ExecutorMode::Background.to_string(), "background");
+    }
+
+    #[test]
+    fn background_step_matches_sync_replay_and_reports_wallclock() {
+        let (mut sess, cache) = cached_session();
+
+        // Sync replay for reference outputs.
+        let mut replay = sess.begin_replay(&cache).unwrap();
+        let mut outs_sync = Vec::new();
+        for (op, a, b, _) in step_ops() {
+            let mut c = vec![0.0f32; op.size.m * op.size.n];
+            sess.replay_gemm(&mut replay, &op, &a, &b, &mut c).unwrap();
+            outs_sync.push(c);
+        }
+        let rep_sync = sess.finish_replay(replay).unwrap();
+        assert_eq!(
+            rep_sync.wall_blocked_s, rep_sync.wall_gemm_s,
+            "the synchronous replay blocks for every measured second"
+        );
+
+        // Background replay on the same session.
+        let entry = cache.latest_for(sess.session_id()).unwrap();
+        let (outs_bg, rep_bg) = run_replay_step(&mut sess, entry, |client| {
+            let mut outs = Vec::new();
+            for (op, a, b, _) in step_ops() {
+                let mut c = vec![0.0f32; op.size.m * op.size.n];
+                // SAFETY: waited before c/a/b leave this iteration.
+                let (node, h) = unsafe { client.submit(&op, &a, &b, &mut c)? };
+                client.set_chain(node);
+                client.wait(h)?;
+                outs.push(c);
+            }
+            Ok(outs)
+        })
+        .unwrap();
+        assert_eq!(outs_bg, outs_sync, "background numerics must be the sync numerics");
+        for ((_, _, _, want), c) in step_ops().iter().zip(&outs_bg) {
+            assert!((c[0] - want).abs() < 1e-2, "c[0]={} want {want}", c[0]);
+        }
+        assert_eq!(rep_bg.order, rep_sync.order, "same frozen schedule charged");
+        assert!(
+            (rep_bg.makespan_growth_s - rep_sync.makespan_growth_s).abs() < 1e-12,
+            "background charges the modeled timeline exactly like sync"
+        );
+        assert!(rep_bg.wall_gemm_s > 0.0);
+        assert!(rep_bg.wall_blocked_s >= 0.0);
+        assert!(rep_bg.wall_hidden_s() >= 0.0);
+    }
+
+    #[test]
+    fn deferred_accumulation_applies_at_the_drain() {
+        let (mut sess, cache) = cached_session();
+        let entry = cache.latest_for(sess.session_id()).unwrap();
+        let ops = step_ops();
+        // Ops 0 and 1 in-call; op 2 deferred, accumulating into `acc`.
+        let mut acc = vec![1.0f32; 64 * 128];
+        let ((), rep) = run_replay_step(&mut sess, entry, |client| {
+            for (op, a, b, _) in &ops[..2] {
+                let mut c = vec![0.0f32; op.size.m * op.size.n];
+                // SAFETY: waited before the buffers leave this iteration.
+                let (_, h) = unsafe { client.submit(op, a, b, &mut c)? };
+                client.wait(h)?;
+            }
+            let (op, a, b, _) = &ops[2];
+            // SAFETY: a is copied in; b and acc outlive the step body.
+            unsafe { client.submit_deferred(op, a.clone(), b, &mut acc)? };
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(rep.stats.len(), 3);
+        // 1.0 initial + the 96.0 product.
+        assert!(
+            acc.iter().all(|&x| (x - 97.0).abs() < 1e-2),
+            "deferred += applied: acc[0]={}",
+            acc[0]
+        );
+    }
+
+    #[test]
+    fn handles_are_scoped_and_single_use() {
+        let (mut sess, cache) = cached_session();
+        let entry = cache.latest_for(sess.session_id()).unwrap();
+        let ops = step_ops();
+
+        // Double wait: the error is helpful, and it tears the step down
+        // (quiesced), so the run reports it.
+        let err = run_replay_step(&mut sess, entry, |client| {
+            let (op, a, b, _) = &ops[0];
+            let mut c = vec![0.0f32; op.size.m * op.size.n];
+            // SAFETY: waited below, within this frame.
+            let (_, h) = unsafe { client.submit(op, a, b, &mut c)? };
+            client.wait(h)?;
+            client.wait(h)?;
+            Ok(())
+        })
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("already redeemed"), "{err}");
+
+        // A handle stamped for a different session.
+        let foreign = ExecHandle {
+            session: sess.session_id() + 999,
+            run: 0,
+            seq: 0,
+        };
+        let err = run_replay_step(&mut sess, entry, |client| {
+            let (op, a, b, _) = &ops[0];
+            let mut c = vec![0.0f32; op.size.m * op.size.n];
+            // SAFETY: the erroring wait quiesces before returning, so the
+            // job cannot outlive this frame.
+            let (_, h) = unsafe { client.submit(op, a, b, &mut c)? };
+            let _ = h;
+            client.wait(foreign)?;
+            Ok(())
+        })
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("session-scoped"), "{err}");
+
+        // A handle that was never issued.
+        let err = run_replay_step(&mut sess, entry, |client| {
+            let bogus = ExecHandle {
+                session: client.session_id,
+                run: client.run_id,
+                seq: 1000,
+            };
+            client.wait(bogus)?;
+            Ok(())
+        })
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("never issued"), "{err}");
+
+        // A stale handle from an *earlier run on the same session*:
+        // sequence numbers restart per step, so only the run nonce can
+        // tell these apart.
+        let mut stale: Option<ExecHandle> = None;
+        run_replay_step(&mut sess, entry, |client| {
+            for (op, a, b, _) in &ops {
+                let mut c = vec![0.0f32; op.size.m * op.size.n];
+                // SAFETY: waited within this iteration.
+                let (_, h) = unsafe { client.submit(op, a, b, &mut c)? };
+                client.wait(h)?;
+                stale.get_or_insert(h);
+            }
+            Ok(())
+        })
+        .unwrap();
+        let stale = stale.expect("first run issued handles");
+        let err = run_replay_step(&mut sess, entry, |client| {
+            let (op, a, b, _) = &ops[0];
+            let mut c = vec![0.0f32; op.size.m * op.size.n];
+            // SAFETY: the erroring wait quiesces before returning.
+            let (_, h) = unsafe { client.submit(op, a, b, &mut c)? };
+            let _ = h;
+            client.wait(stale)?;
+            Ok(())
+        })
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("earlier executor run"), "{err}");
+    }
+
+    #[test]
+    fn divergence_is_recoverable_and_incomplete_steps_are_divergence() {
+        let (mut sess, cache) = cached_session();
+        let entry = cache.latest_for(sess.session_id()).unwrap();
+
+        // Wrong shape at op 0: a recoverable divergence, detected before
+        // any work is queued.
+        let wrong = ProblemSize::new(64, 64, 256);
+        let err = run_replay_step(&mut sess, entry, |client| {
+            let op = PlanOp::new(wrong).prefetchable_b(true);
+            let a = vec![1.0f32; 64 * 64];
+            let b = vec![0.5f32; 64 * 256];
+            let mut c = vec![0.0f32; 64 * 256];
+            // SAFETY: submit errors (divergence) and quiesces; nothing
+            // outlives this frame.
+            let r = unsafe { client.submit(&op, &a, &b, &mut c) };
+            r.map(|_| ())
+        })
+        .unwrap_err();
+        assert!(err.is_plan_divergence(), "{err}");
+
+        // A step that ends early is also a divergence.
+        let err = run_replay_step(&mut sess, entry, |_client| Ok(())).unwrap_err();
+        assert!(err.is_plan_divergence(), "{err}");
+    }
+
+    #[test]
+    fn shutdown_mid_step_leaves_the_session_reusable() {
+        let (mut sess, cache) = cached_session();
+        let ops = step_ops();
+
+        // Fail the step body after one completed op.
+        let entry = cache.latest_for(sess.session_id()).unwrap();
+        let err = run_replay_step(&mut sess, entry, |client| {
+            let (op, a, b, _) = &ops[0];
+            let mut c = vec![0.0f32; op.size.m * op.size.n];
+            // SAFETY: waited below, within this frame.
+            let (_, h) = unsafe { client.submit(op, a, b, &mut c)? };
+            client.wait(h)?;
+            Err::<(), _>(Error::runtime("trainer aborted mid-step"))
+        })
+        .unwrap_err();
+        assert!(err.to_string().contains("aborted mid-step"), "{err}");
+        assert_eq!(sess.in_flight(), 0, "no eager work left behind");
+
+        // The session replays the same cached step fine afterwards —
+        // synchronously and in the background.
+        let mut replay = sess.begin_replay(&cache).unwrap();
+        for (op, a, b, _) in &ops {
+            let mut c = vec![0.0f32; op.size.m * op.size.n];
+            sess.replay_gemm(&mut replay, op, a, b, &mut c).unwrap();
+        }
+        sess.finish_replay(replay).unwrap();
+
+        let entry = cache.latest_for(sess.session_id()).unwrap();
+        run_replay_step(&mut sess, entry, |client| {
+            for (op, a, b, _) in &ops {
+                let mut c = vec![0.0f32; op.size.m * op.size.n];
+                // SAFETY: waited within this iteration.
+                let (_, h) = unsafe { client.submit(op, a, b, &mut c)? };
+                client.wait(h)?;
+            }
+            Ok(())
+        })
+        .unwrap();
+    }
+}

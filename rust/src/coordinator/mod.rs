@@ -19,6 +19,12 @@
 //!   horizon, auto-sharding. [`plan::PlanCache`] then makes the schedule
 //!   a reusable artifact: record once, replay every identical later step
 //!   (see `docs/SCHEDULING.md`).
+//! * [`executor`] — [`executor::run_replay_step`]: the background step
+//!   executor. A scoped device-stage thread owns the session for one
+//!   cached step and drains its invocations off the trainer's thread
+//!   (bounded handoff queue, session-scoped completion handles), so the
+//!   staging + device wallclock the modeled timeline always *claimed* to
+//!   hide is now hidden for real (see `docs/SCHEDULING.md` § Executor).
 //! * [`scheduler`] — [`scheduler::Scheduler`]: orders a submission window
 //!   (the eager ring's staged ops, or a full recorded step) within data
 //!   dependencies to batch same-size invocations and amortize
@@ -34,6 +40,7 @@
 pub mod backend;
 pub mod device;
 pub mod engine;
+pub mod executor;
 pub mod plan;
 pub mod reconfig;
 pub mod scheduler;
@@ -42,6 +49,7 @@ pub mod transpose;
 
 pub use device::{ComputeDevice, DeviceRun, DeviceSpan, SimulatorDevice};
 pub use engine::{EngineConfig, ExecMode, GemmOffloadEngine, PAIRED_SLOTS};
+pub use executor::{run_replay_step, ExecClient, ExecHandle, ExecutorMode};
 pub use plan::{
     CachedStep, PlanCache, PlanCacheMode, PlanNode, PlanOp, PlanReplay, StepPlan, StepReport,
     StepSignature,

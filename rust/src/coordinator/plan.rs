@@ -72,8 +72,24 @@
 //! ```
 
 use crate::gemm::sizes::ProblemSize;
+use crate::util::error::{Error, Result};
+use crate::util::json::Json;
 
 use super::session::{HorizonChoice, InputLayout, InvocationStats};
+
+/// FNV-1a over a canonical string — the tiny stable hash the on-disk plan
+/// cache is keyed with (combined from the session's
+/// [`config_fingerprint`](super::session::OffloadSession::config_fingerprint)
+/// and a model-config key by callers). Not cryptographic; it only needs to
+/// make configuration drift a reliable cache miss.
+pub fn fingerprint_str(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
 
 /// Handle to one recorded op inside a [`StepPlan`] (the plan-level
 /// analogue of a session [`super::session::Ticket`]). Used to declare
@@ -255,19 +271,26 @@ impl StepPlan {
     /// [`CachedStep`] with this signature may replay in this step's
     /// place.
     pub fn signature(&self) -> StepSignature {
-        StepSignature {
-            ops: self
-                .ops
-                .iter()
-                .map(|op| OpSignature {
-                    size: op.size,
-                    a_layout: op.a_layout,
-                    b_layout: op.b_layout,
-                    prefetch_b: op.prefetch_b,
-                    deps: op.deps.clone(),
-                })
-                .collect(),
-        }
+        signature_of(&self.ops)
+    }
+}
+
+/// The shape signature of a recorded op sequence (what
+/// [`StepPlan::signature`] computes, shared with the on-disk loader so a
+/// deserialized [`CachedStep`] re-derives exactly the signature it was
+/// frozen with).
+pub(crate) fn signature_of(ops: &[PlannedOp]) -> StepSignature {
+    StepSignature {
+        ops: ops
+            .iter()
+            .map(|op| OpSignature {
+                size: op.size,
+                a_layout: op.a_layout,
+                b_layout: op.b_layout,
+                prefetch_b: op.prefetch_b,
+                deps: op.deps.clone(),
+            })
+            .collect(),
     }
 }
 
@@ -366,6 +389,36 @@ pub struct CachedStep {
 }
 
 impl CachedStep {
+    /// Check the op a step wants to run at `cursor` against the frozen
+    /// plan — the *single* divergence rule shared by the synchronous
+    /// replay ([`super::session::OffloadSession::replay_gemm`]) and the
+    /// background executor's submit path, so the two can never drift on
+    /// what counts as a recoverable re-record signal.
+    pub(crate) fn check_op(&self, cursor: usize, op: &PlanOp) -> Result<()> {
+        let Some(cached) = self.ops.get(cursor) else {
+            return Err(Error::plan_divergence(format!(
+                "step issued more GEMMs than the cached plan's {} (op #{cursor} is {}); \
+                 re-record the step",
+                self.ops.len(),
+                op.size
+            )));
+        };
+        let deps: Vec<usize> = op.deps.iter().map(|d| d.index()).collect();
+        if cached.size != op.size
+            || cached.a_layout != op.a_layout
+            || cached.b_layout != op.b_layout
+            || cached.prefetch_b != op.prefetch_b
+            || cached.deps != deps
+        {
+            return Err(Error::plan_divergence(format!(
+                "op #{cursor} no longer matches the cached plan (cached {}, step wants \
+                 {}); re-record the step",
+                cached.size, op.size
+            )));
+        }
+        Ok(())
+    }
+
     /// Ops in the frozen step.
     pub fn len(&self) -> usize {
         self.ops.len()
@@ -407,6 +460,11 @@ pub struct PlanReplay<'a> {
     pub(crate) start_strip: Option<ProblemSize>,
     /// Measured wallclock of each replayed invocation.
     pub(crate) walls: Vec<f64>,
+    /// Measured wallclock the submitting thread spent *blocked* on those
+    /// invocations, when it differs from their sum: the background step
+    /// executor (`coordinator::executor`) fills this in; the synchronous
+    /// replay leaves `None` (blocked == serialized).
+    pub(crate) blocked_s: Option<f64>,
     chain: Option<usize>,
 }
 
@@ -417,6 +475,7 @@ impl<'a> PlanReplay<'a> {
             cursor: 0,
             start_strip,
             walls: Vec::with_capacity(entry.ops.len()),
+            blocked_s: None,
             chain: None,
         }
     }
@@ -554,6 +613,270 @@ impl PlanCache {
     pub fn is_empty(&self) -> bool {
         self.entries.is_empty()
     }
+
+    /// Serialize every entry recorded on `session` to `path`, stamped
+    /// with the format version and `fingerprint` (the session-config +
+    /// model-config hash the loader must present). The modeled durations
+    /// inside a [`CachedStep`] are deterministic functions of the shapes
+    /// and the calibrated cost models, so a matching restarted run can
+    /// adopt these entries and skip even its first record. Returns how
+    /// many entries were written.
+    pub fn save_to(&self, path: &str, fingerprint: u64, session: u64) -> Result<usize> {
+        let entries: Vec<Json> = self
+            .entries
+            .iter()
+            .filter(|e| e.session == session)
+            .map(entry_to_json)
+            .collect();
+        let n = entries.len();
+        let root = Json::obj(vec![
+            ("format_version", Json::Num(PLAN_CACHE_FORMAT_VERSION as f64)),
+            ("generator", Json::str("xdna-repro plan cache")),
+            ("fingerprint", Json::str(format!("{fingerprint:016x}"))),
+            ("entries", Json::Arr(entries)),
+        ]);
+        std::fs::write(path, format!("{root}\n"))
+            .map_err(|e| Error::config(format!("cannot write plan cache {path}: {e}")))?;
+        Ok(n)
+    }
+
+    /// Load cached steps from `path` and adopt them into `session` (the
+    /// in-process session id replaces the one stamped at save time — the
+    /// durations are deterministic given the same configuration, which the
+    /// fingerprint guarantees). Anything wrong — a missing file, a stale
+    /// format version, a fingerprint from a different configuration, a
+    /// corrupt entry — is a *recoverable cache miss*: the run simply
+    /// records its first step as it would have anyway. Returns how many
+    /// entries were adopted.
+    pub fn load_from(&mut self, path: &str, fingerprint: u64, session: u64) -> usize {
+        let Ok(text) = std::fs::read_to_string(path) else {
+            return 0;
+        };
+        let Ok(root) = Json::parse(&text) else {
+            return 0;
+        };
+        let version = root
+            .get_opt("format_version")
+            .and_then(|v| v.as_usize().ok());
+        if version != Some(PLAN_CACHE_FORMAT_VERSION as usize) {
+            return 0;
+        }
+        let want = format!("{fingerprint:016x}");
+        match root.get_opt("fingerprint").and_then(|v| v.as_str().ok()) {
+            Some(have) if have == want => {}
+            _ => return 0,
+        }
+        let Some(Ok(entries)) = root.get_opt("entries").map(|e| e.as_arr()) else {
+            return 0;
+        };
+        let mut adopted = 0usize;
+        for e in entries {
+            let Some(entry) = entry_from_json(e, session) else {
+                // One corrupt entry does not poison the rest.
+                continue;
+            };
+            let dup = self
+                .entries
+                .iter()
+                .any(|have| have.session == session && have.signature == entry.signature);
+            if dup {
+                continue;
+            }
+            // Behind any entry recorded live this run, ahead of nothing:
+            // a fresh process has an empty cache, so loaded entries are
+            // what `begin_replay` finds — the restarted run's first step
+            // is already a hit.
+            self.entries.push(entry);
+            adopted += 1;
+        }
+        adopted
+    }
+}
+
+/// Version stamp of the on-disk plan-cache format
+/// ([`PlanCache::save_to`]). Bump on any change to the serialized shape;
+/// a mismatched version is a recoverable miss at load, never an error.
+pub const PLAN_CACHE_FORMAT_VERSION: u64 = 1;
+
+fn layout_str(l: InputLayout) -> &'static str {
+    match l {
+        InputLayout::RowMajor => "row-major",
+        InputLayout::Transposed => "transposed",
+    }
+}
+
+fn layout_from_str(s: &str) -> Option<InputLayout> {
+    match s {
+        "row-major" => Some(InputLayout::RowMajor),
+        "transposed" => Some(InputLayout::Transposed),
+        _ => None,
+    }
+}
+
+fn size_to_json(s: ProblemSize) -> Json {
+    Json::Arr(vec![
+        Json::Num(s.m as f64),
+        Json::Num(s.k as f64),
+        Json::Num(s.n as f64),
+    ])
+}
+
+fn size_from_json(j: &Json) -> Option<ProblemSize> {
+    let a = j.as_arr().ok()?;
+    if a.len() != 3 {
+        return None;
+    }
+    let (m, k, n) = (a[0].as_usize().ok()?, a[1].as_usize().ok()?, a[2].as_usize().ok()?);
+    if m == 0 || k == 0 || n == 0 {
+        return None;
+    }
+    Some(ProblemSize::new(m, k, n))
+}
+
+fn choice_to_json(c: HorizonChoice) -> Json {
+    match c {
+        HorizonChoice::None => Json::str("none"),
+        HorizonChoice::Next => Json::str("next"),
+        HorizonChoice::Deep(cap) => Json::obj(vec![("deep", Json::Num(cap as f64))]),
+    }
+}
+
+fn choice_from_json(j: &Json) -> Option<HorizonChoice> {
+    if let Ok(s) = j.as_str() {
+        return match s {
+            "none" => Some(HorizonChoice::None),
+            "next" => Some(HorizonChoice::Next),
+            _ => None,
+        };
+    }
+    let cap = j.get_opt("deep")?.as_usize().ok()?;
+    if cap == 0 {
+        return None;
+    }
+    Some(HorizonChoice::Deep(cap))
+}
+
+fn finite(v: f64) -> Option<f64> {
+    (v.is_finite() && v >= 0.0).then_some(v)
+}
+
+fn op_to_json(op: &PlannedOp) -> Json {
+    Json::obj(vec![
+        ("size", size_to_json(op.size)),
+        ("strip_size", size_to_json(op.strip_size)),
+        ("a_layout", Json::str(layout_str(op.a_layout))),
+        ("b_layout", Json::str(layout_str(op.b_layout))),
+        (
+            "deps",
+            Json::Arr(op.deps.iter().map(|&d| Json::Num(d as f64)).collect()),
+        ),
+        ("prefetch_b", Json::Bool(op.prefetch_b)),
+        ("host_a_s", Json::Num(op.host_a_s)),
+        ("host_b_s", Json::Num(op.host_b_s)),
+        ("sync_in_s", Json::Num(op.sync_in_s)),
+        ("reconfig_switch_s", Json::Num(op.reconfig_switch_s)),
+        ("reconfig_once_s", Json::Num(op.reconfig_once_s)),
+        (
+            "strips",
+            Json::Arr(
+                op.strips
+                    .iter()
+                    .map(|&(k, so)| Json::Arr(vec![Json::Num(k), Json::Num(so)]))
+                    .collect(),
+            ),
+        ),
+        ("host_post_s", Json::Num(op.host_post_s)),
+        ("energy_j", Json::Num(op.energy_j)),
+        ("wall_s", Json::Num(op.wall_s)),
+    ])
+}
+
+fn op_from_json(j: &Json, index: usize) -> Option<PlannedOp> {
+    let mut deps = Vec::new();
+    for d in j.get_opt("deps")?.as_arr().ok()? {
+        let d = d.as_usize().ok()?;
+        // A dependency must point at an earlier recorded op, exactly as
+        // record_gemm enforces live.
+        if d >= index {
+            return None;
+        }
+        deps.push(d);
+    }
+    let mut strips = Vec::new();
+    for s in j.get_opt("strips")?.as_arr().ok()? {
+        let pair = s.as_arr().ok()?;
+        if pair.len() != 2 {
+            return None;
+        }
+        strips.push((
+            finite(pair[0].as_f64().ok()?)?,
+            finite(pair[1].as_f64().ok()?)?,
+        ));
+    }
+    if strips.is_empty() {
+        return None;
+    }
+    Some(PlannedOp {
+        size: size_from_json(j.get_opt("size")?)?,
+        strip_size: size_from_json(j.get_opt("strip_size")?)?,
+        a_layout: layout_from_str(j.get_opt("a_layout")?.as_str().ok()?)?,
+        b_layout: layout_from_str(j.get_opt("b_layout")?.as_str().ok()?)?,
+        deps,
+        prefetch_b: j.get_opt("prefetch_b")?.as_bool().ok()?,
+        host_a_s: finite(j.get_opt("host_a_s")?.as_f64().ok()?)?,
+        host_b_s: finite(j.get_opt("host_b_s")?.as_f64().ok()?)?,
+        sync_in_s: finite(j.get_opt("sync_in_s")?.as_f64().ok()?)?,
+        reconfig_switch_s: finite(j.get_opt("reconfig_switch_s")?.as_f64().ok()?)?,
+        reconfig_once_s: finite(j.get_opt("reconfig_once_s")?.as_f64().ok()?)?,
+        strips,
+        host_post_s: finite(j.get_opt("host_post_s")?.as_f64().ok()?)?,
+        energy_j: finite(j.get_opt("energy_j")?.as_f64().ok()?)?,
+        wall_s: finite(j.get_opt("wall_s")?.as_f64().ok()?)?,
+    })
+}
+
+fn entry_to_json(e: &CachedStep) -> Json {
+    Json::obj(vec![
+        (
+            "order",
+            Json::Arr(e.order.iter().map(|&i| Json::Num(i as f64)).collect()),
+        ),
+        ("choice", choice_to_json(e.choice)),
+        ("ops", Json::Arr(e.ops.iter().map(op_to_json).collect())),
+    ])
+}
+
+fn entry_from_json(j: &Json, session: u64) -> Option<CachedStep> {
+    let ops_json = j.get_opt("ops")?.as_arr().ok()?;
+    if ops_json.is_empty() {
+        return None;
+    }
+    let mut ops = Vec::with_capacity(ops_json.len());
+    for (i, oj) in ops_json.iter().enumerate() {
+        ops.push(op_from_json(oj, i)?);
+    }
+    let order_json = j.get_opt("order")?.as_arr().ok()?;
+    if order_json.len() != ops.len() {
+        return None;
+    }
+    let mut order = Vec::with_capacity(ops.len());
+    let mut seen = vec![false; ops.len()];
+    for o in order_json {
+        let i = o.as_usize().ok()?;
+        if i >= ops.len() || seen[i] {
+            return None;
+        }
+        seen[i] = true;
+        order.push(i);
+    }
+    let choice = choice_from_json(j.get_opt("choice")?)?;
+    Some(CachedStep {
+        signature: signature_of(&ops),
+        session,
+        ops,
+        order,
+        choice,
+    })
 }
 
 /// What [`super::session::OffloadSession::execute`] did with a plan.
@@ -572,6 +895,16 @@ pub struct StepReport {
     /// Ops whose B staging was prefetched under an earlier kernel.
     pub prefetched: usize,
     pub energy_j: f64,
+    /// *Measured* wallclock of the step's GEMM invocations (staging +
+    /// device + merge), summed — the serialized cost, next to the modeled
+    /// `serial_growth_s`.
+    pub wall_gemm_s: f64,
+    /// Measured wallclock the trainer thread spent blocked on them.
+    /// Equals `wall_gemm_s` on the synchronous paths; under the
+    /// background executor it is smaller, and the difference is staging +
+    /// device time hidden in *wallclock*, not just on the modeled
+    /// timeline.
+    pub wall_blocked_s: f64,
 }
 
 impl StepReport {
@@ -579,6 +912,12 @@ impl StepReport {
     /// under each other, prefetched weights).
     pub fn hidden_growth_s(&self) -> f64 {
         (self.serial_growth_s - self.makespan_growth_s).max(0.0)
+    }
+
+    /// Measured wallclock hidden from the trainer thread (GEMM work that
+    /// ran while the trainer computed something else).
+    pub fn wall_hidden_s(&self) -> f64 {
+        (self.wall_gemm_s - self.wall_blocked_s).max(0.0)
     }
 }
 
@@ -822,6 +1161,134 @@ mod tests {
         assert_eq!(PlanCacheMode::default(), PlanCacheMode::On);
         assert_eq!(PlanCacheMode::On.to_string(), "on");
         assert_eq!(PlanCacheMode::Off.to_string(), "off");
+    }
+
+    /// Record one small two-size step and freeze it (the shared setup of
+    /// the on-disk cache tests).
+    fn frozen_step(sess: &mut OffloadSession) -> CachedStep {
+        let s_a = ProblemSize::new(64, 64, 128);
+        let s_b = ProblemSize::new(128, 64, 128);
+        let a_a = vec![1.0f32; 64 * 64];
+        let a_b = vec![2.0f32; 128 * 64];
+        let b = vec![0.5f32; 64 * 128];
+        let mut c_a = vec![0.0f32; 64 * 128];
+        let mut c_b = vec![0.0f32; 128 * 128];
+        let mut plan = StepPlan::new();
+        sess.record_gemm(&mut plan, &PlanOp::new(s_a).prefetchable_b(true), &a_a, &b, &mut c_a)
+            .unwrap();
+        sess.record_gemm(&mut plan, &PlanOp::new(s_b).prefetchable_b(true), &a_b, &b, &mut c_b)
+            .unwrap();
+        sess.record_gemm(&mut plan, &PlanOp::new(s_a).prefetchable_b(true), &a_a, &b, &mut c_a)
+            .unwrap();
+        sess.execute(&mut plan).unwrap();
+        sess.freeze(plan).unwrap()
+    }
+
+    fn tmp_path(tag: &str) -> String {
+        let dir = std::env::temp_dir();
+        dir.join(format!("xdna-plan-cache-{tag}-{}.json", std::process::id()))
+            .to_string_lossy()
+            .into_owned()
+    }
+
+    #[test]
+    fn plan_cache_file_round_trips_and_adopts_into_a_new_session() {
+        let path = tmp_path("roundtrip");
+        let fp = fingerprint_str("roundtrip-config");
+
+        let mut s1 = session(2, 1, SchedulePolicy::BatchBySize);
+        let mut cache = PlanCache::new();
+        cache.insert(frozen_step(&mut s1));
+        assert_eq!(cache.save_to(&path, fp, s1.session_id()).unwrap(), 1);
+
+        // A "restarted run": new session, fresh cache, same fingerprint.
+        let mut s2 = session(2, 1, SchedulePolicy::BatchBySize);
+        let mut loaded = PlanCache::new();
+        assert_eq!(loaded.load_from(&path, fp, s2.session_id()), 1);
+        assert_eq!(loaded.len(), 1);
+        assert_eq!(loaded.misses(), 0, "loading is not a miss");
+        let entry = loaded.latest_for(s2.session_id()).expect("adopted for session 2");
+        // The adopted entry is byte-for-byte the frozen schedule.
+        let orig = cache.latest_for(s1.session_id()).unwrap();
+        assert_eq!(entry.order, orig.order);
+        assert_eq!(entry.signature(), orig.signature());
+        assert_eq!(entry.len(), orig.len());
+
+        // And it replays on the adopting session: the restarted run's
+        // first step is already a hit.
+        let s_a = ProblemSize::new(64, 64, 128);
+        let s_b = ProblemSize::new(128, 64, 128);
+        let a_a = vec![1.0f32; 64 * 64];
+        let a_b = vec![2.0f32; 128 * 64];
+        let b = vec![0.5f32; 64 * 128];
+        let mut c_a = vec![0.0f32; 64 * 128];
+        let mut c_b = vec![0.0f32; 128 * 128];
+        let mut replay = s2.begin_replay(&loaded).expect("adopted entry replays");
+        s2.replay_gemm(&mut replay, &PlanOp::new(s_a).prefetchable_b(true), &a_a, &b, &mut c_a)
+            .unwrap();
+        s2.replay_gemm(&mut replay, &PlanOp::new(s_b).prefetchable_b(true), &a_b, &b, &mut c_b)
+            .unwrap();
+        s2.replay_gemm(&mut replay, &PlanOp::new(s_a).prefetchable_b(true), &a_a, &b, &mut c_a)
+            .unwrap();
+        let rep = s2.finish_replay(replay).unwrap();
+        loaded.record_hit();
+        assert_eq!(rep.stats.len(), 3);
+        assert!(rep.makespan_growth_s > 0.0);
+        assert_eq!((loaded.hits(), loaded.misses()), (1, 0), "first step hits");
+
+        // Outputs are the eager numerics (adoption changes no numerics).
+        assert!(c_a.iter().all(|&x| (x - 32.0).abs() < 1e-2), "c_a[0]={}", c_a[0]);
+
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn plan_cache_file_mismatches_are_recoverable_misses_never_errors() {
+        let path = tmp_path("mismatch");
+        let fp = fingerprint_str("config-a");
+        let mut s1 = session(2, 1, SchedulePolicy::Fifo);
+        let mut cache = PlanCache::new();
+        cache.insert(frozen_step(&mut s1));
+        cache.save_to(&path, fp, s1.session_id()).unwrap();
+
+        let mut fresh = PlanCache::new();
+        // Missing file.
+        assert_eq!(fresh.load_from("/nonexistent/plan-cache.json", fp, 7), 0);
+        // Wrong fingerprint (a different session/model configuration).
+        assert_eq!(fresh.load_from(&path, fingerprint_str("config-b"), 7), 0);
+        // Corrupt JSON.
+        std::fs::write(&path, "{not json").unwrap();
+        assert_eq!(fresh.load_from(&path, fp, 7), 0);
+        // Stale format version.
+        let stale = Json::obj(vec![
+            ("format_version", Json::Num(999.0)),
+            ("fingerprint", Json::str(format!("{fp:016x}"))),
+            ("entries", Json::Arr(vec![])),
+        ]);
+        std::fs::write(&path, stale.to_string()).unwrap();
+        assert_eq!(fresh.load_from(&path, fp, 7), 0);
+        assert!(fresh.is_empty());
+
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn fingerprints_are_stable_and_config_sensitive() {
+        assert_eq!(fingerprint_str("abc"), fingerprint_str("abc"));
+        assert_ne!(fingerprint_str("abc"), fingerprint_str("abd"));
+        let s1 = session(2, 1, SchedulePolicy::Fifo);
+        let s2 = session(2, 1, SchedulePolicy::Fifo);
+        let s3 = session(4, 1, SchedulePolicy::Fifo);
+        assert_eq!(
+            s1.config_fingerprint(),
+            s2.config_fingerprint(),
+            "same configuration, same fingerprint across sessions"
+        );
+        assert_ne!(
+            s1.config_fingerprint(),
+            s3.config_fingerprint(),
+            "ring depth is part of the schedule configuration"
+        );
     }
 
     #[test]

@@ -266,8 +266,11 @@ impl Ticket {
 /// Session construction options.
 pub struct SessionConfig {
     pub policy: ReconfigPolicy,
-    /// Where GEMM numerics execute.
-    pub device: Box<dyn ComputeDevice>,
+    /// Where GEMM numerics execute. `Send` because the whole session may
+    /// be driven from the background step-executor thread
+    /// (`coordinator::executor`); the session still uses the device from
+    /// exactly one thread at a time.
+    pub device: Box<dyn ComputeDevice + Send>,
     pub depth: QueueDepth,
     pub shards: ShardPolicy,
     pub schedule: SchedulePolicy,
@@ -440,7 +443,7 @@ static NEXT_SESSION_ID: AtomicU64 = AtomicU64::new(1);
 /// The layered offload session (see module docs).
 pub struct OffloadSession {
     pub dev: XrtDevice,
-    device: Box<dyn ComputeDevice>,
+    device: Box<dyn ComputeDevice + Send>,
     policy: ReconfigPolicy,
     depth: usize,
     /// Shard-count *cap* (timeline column count): the fixed count, or the
@@ -462,6 +465,16 @@ pub struct OffloadSession {
     pub modeled_stages: Vec<(String, f64)>,
     pub invocations: u64,
     pub modeled_energy_j: f64,
+    /// *Measured* wallclock of every planned/replayed GEMM invocation
+    /// (staging + device + merge), summed — the serialized cost the step
+    /// executor tries to hide.
+    pub wall_gemm_s: f64,
+    /// Measured wallclock the trainer thread actually spent *blocked* on
+    /// those invocations. Equal to [`Self::wall_gemm_s`] on the
+    /// synchronous paths; smaller under the background executor, where
+    /// device-stage work runs while the trainer computes — the difference
+    /// is wallclock genuinely hidden, not just modeled hidden.
+    pub wall_blocked_s: f64,
     /// Modeled host/device schedule of every invocation so far. With a
     /// depth-1 FIFO unsharded session its makespan equals its serial sum;
     /// otherwise the difference is staging hidden under device work (and,
@@ -958,6 +971,8 @@ impl OffloadSession {
             modeled_stages: STAGES.iter().map(|s| (s.to_string(), 0.0)).collect(),
             invocations: 0,
             modeled_energy_j: 0.0,
+            wall_gemm_s: 0.0,
+            wall_blocked_s: 0.0,
             pipeline: PipelineTimeline::with_columns(shards),
             host_model: HostStagingModel::default(),
             device_time_scale: 1.0,
@@ -1759,6 +1774,59 @@ impl OffloadSession {
         })
     }
 
+    /// Run one physical replay invocation — stage, sync, device stages,
+    /// merge — and return its measured wallclock. The background step
+    /// executor's per-job body (`coordinator::executor`): divergence
+    /// checking against the cached plan happens on the submitting thread,
+    /// so this is the bare numerics+staging work that runs off-thread.
+    /// Identical invocation path to [`Self::replay_gemm`], hence
+    /// bit-identical outputs.
+    pub(crate) fn replay_invocation(
+        &mut self,
+        size: ProblemSize,
+        a_layout: InputLayout,
+        b_layout: InputLayout,
+        a: &[f32],
+        b: &[f32],
+        c: &mut [f32],
+    ) -> Result<f64> {
+        let (m, k, n) = (size.m, size.k, size.n);
+        if a.len() != m * k || b.len() != k * n || c.len() != m * n {
+            return Err(Error::shape(format!(
+                "replay gemm {size}: got A={} B={} C={}",
+                a.len(),
+                b.len(),
+                c.len()
+            )));
+        }
+        let cap = self.run_invocation(size, a_layout, b_layout, a, b, c)?;
+        Ok(cap.wall_s)
+    }
+
+    /// A stable fingerprint of everything the *modeled schedule* of a
+    /// cached step depends on at the session level: ring depth, shard
+    /// policy, schedule policy, prefetch horizon, reconfiguration policy,
+    /// device, and the calibrated host-staging constants. Combined with a
+    /// model/config hash by callers, it keys the on-disk plan cache
+    /// ([`PlanCache::save_to`](super::plan::PlanCache::save_to)): a file
+    /// written under a different configuration is a recoverable miss, not
+    /// a mischarged schedule.
+    pub fn config_fingerprint(&self) -> u64 {
+        let key = format!(
+            "depth={};shards={};policy={:?};schedule={:?};prefetch={:?};device={};\
+             copy={};transpose={}",
+            self.depth,
+            self.shard_policy,
+            self.policy,
+            self.scheduler.policy,
+            self.prefetch,
+            self.device.name(),
+            self.host_model.copy_bytes_per_s,
+            self.host_model.transpose_bytes_per_s,
+        );
+        super::plan::fingerprint_str(&key)
+    }
+
     /// Schedule and charge a recorded step (the schedule+execute half of
     /// the record→schedule→execute seam).
     ///
@@ -1816,6 +1884,8 @@ impl OffloadSession {
                 reconfigs: 0,
                 prefetched: 0,
                 energy_j: 0.0,
+                wall_gemm_s: 0.0,
+                wall_blocked_s: 0.0,
             });
         }
         let window = plan_window(&plan.ops);
@@ -1839,6 +1909,11 @@ impl OffloadSession {
         // scheduling anchor stay consistent with the hardware.
         let stats = self.charge_step(&plan.ops, &walk, None);
         let energy = plan.ops.iter().map(|o| o.energy_j).sum();
+        // Recording ran every invocation to completion on the caller's
+        // thread: measured wallclock is fully serialized and fully blocked.
+        let wall_gemm_s: f64 = plan.ops.iter().map(|o| o.wall_s).sum();
+        self.wall_gemm_s += wall_gemm_s;
+        self.wall_blocked_s += wall_gemm_s;
         Ok(StepReport {
             stats,
             order,
@@ -1847,6 +1922,8 @@ impl OffloadSession {
             reconfigs: walk.reconfigs,
             prefetched: walk.prefetched.iter().filter(|&&p| p).count(),
             energy_j: energy,
+            wall_gemm_s,
+            wall_blocked_s: wall_gemm_s,
         })
     }
 
@@ -2120,6 +2197,21 @@ impl OffloadSession {
         Ok(PlanReplay::new(entry, self.current_strip))
     }
 
+    /// Charge a frozen step's schedule to the modeled timeline *without*
+    /// re-running its numerics — the dry replay of a cached entry, used
+    /// by `bench::pipeline` to price what every cached step costs on
+    /// streams that were never physically staged (e.g. a
+    /// [`Self::record_modeled`] dry-run record). Mirrors
+    /// [`Self::finish_replay`]'s charge exactly; the measured-wallclock
+    /// telemetry contribution is zero, matching the dry-run record's
+    /// `wall_s = 0`.
+    pub(crate) fn charge_frozen(&mut self, entry: &CachedStep) -> Result<StepReport> {
+        let mut replay = self.replay_entry(entry)?;
+        replay.cursor = entry.ops.len();
+        replay.walls = vec![0.0; entry.ops.len()];
+        self.finish_replay(replay)
+    }
+
     /// The trainer's optimistic entry point: the most recently used
     /// cache entry recorded on this session, ready to replay. `None`
     /// means record this step (first step, a different session's cache,
@@ -2153,27 +2245,10 @@ impl OffloadSession {
             )));
         }
         let cursor = replay.cursor;
-        let Some(cached) = replay.entry.ops.get(cursor) else {
-            return Err(Error::plan_divergence(format!(
-                "step issued more GEMMs than the cached plan's {} (op #{cursor} is {}); \
-                 re-record the step",
-                replay.entry.ops.len(),
-                op.size
-            )));
-        };
-        let deps: Vec<usize> = op.deps.iter().map(|d| d.index()).collect();
-        if cached.size != op.size
-            || cached.a_layout != op.a_layout
-            || cached.b_layout != op.b_layout
-            || cached.prefetch_b != op.prefetch_b
-            || cached.deps != deps
-        {
-            return Err(Error::plan_divergence(format!(
-                "op #{cursor} no longer matches the cached plan (cached {}, step wants \
-                 {}); re-record the step",
-                cached.size, op.size
-            )));
-        }
+        // One shared divergence rule with the background executor's
+        // submit path (CachedStep::check_op), so sync and background
+        // replays can never drift on what triggers a re-record.
+        replay.entry.check_op(cursor, op)?;
         let size = op.size;
         let (m, k, n) = (size.m, size.k, size.n);
         if a.len() != m * k || b.len() != k * n || c.len() != m * n {
@@ -2233,6 +2308,15 @@ impl OffloadSession {
         );
         let stats = self.charge_step(&entry.ops, &walk, Some(&replay.walls));
         let energy = entry.ops.iter().map(|o| o.energy_j).sum();
+        // Measured wallclock: the serialized invocation cost, and how much
+        // of it the trainer thread actually sat blocked for. A synchronous
+        // replay blocks for all of it; the background executor
+        // (`coordinator::executor`) reports the smaller blocked time it
+        // measured, and the difference is wallclock hidden for real.
+        let wall_gemm_s: f64 = replay.walls.iter().sum();
+        let wall_blocked_s = replay.blocked_s.unwrap_or(wall_gemm_s);
+        self.wall_gemm_s += wall_gemm_s;
+        self.wall_blocked_s += wall_blocked_s;
         Ok(StepReport {
             stats,
             order: entry.order.clone(),
@@ -2241,6 +2325,8 @@ impl OffloadSession {
             reconfigs: walk.reconfigs,
             prefetched: walk.prefetched.iter().filter(|&&p| p).count(),
             energy_j: energy,
+            wall_gemm_s,
+            wall_blocked_s,
         })
     }
 
@@ -2337,6 +2423,8 @@ impl OffloadSession {
         }
         self.invocations = 0;
         self.modeled_energy_j = 0.0;
+        self.wall_gemm_s = 0.0;
+        self.wall_blocked_s = 0.0;
         self.pipeline.reset();
         for p in self.registry.values_mut() {
             p.invocations = 0;

@@ -24,10 +24,15 @@
 //!   (per-size registry, k-deep submission ring, fixed or cost-model-chosen
 //!   N-dimension sharding, session-scoped tickets),
 //!   [`coordinator::plan::StepPlan`] (record a whole training step, then
-//!   schedule it at once — whole-step batching + weight-staging prefetch),
-//!   and [`coordinator::scheduler::Scheduler`] (reconfig-aware batching).
-//!   The PR-1 `GemmOffloadEngine` remains as a thin shim over a depth-1/2
-//!   session.
+//!   schedule it at once — whole-step batching + weight-staging prefetch,
+//!   with [`coordinator::plan::PlanCache`] freezing the schedule for
+//!   replay, in process and on disk),
+//!   [`coordinator::scheduler::Scheduler`] (reconfig-aware batching), and
+//!   [`coordinator::executor`] (the background step executor: cached-step
+//!   replays drain their device-stage loop off the trainer's thread, so
+//!   staging + kernels overlap the model's CPU work in measured
+//!   wallclock). The PR-1 `GemmOffloadEngine` remains as a thin shim over
+//!   a depth-1/2 session.
 //! * [`model`] — an llm.c port: GPT-2 forward/backward/AdamW in pure Rust
 //!   with every matmul dispatched through the offload engine.
 //! * [`runtime`] — the artifact manifest ABI and (behind the `pjrt` cargo

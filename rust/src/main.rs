@@ -11,6 +11,7 @@
 
 use xdna_repro::bench as paperbench;
 use xdna_repro::coordinator::engine::ExecMode;
+use xdna_repro::coordinator::executor::ExecutorMode;
 use xdna_repro::coordinator::plan::{PlanCache, PlanCacheMode};
 use xdna_repro::coordinator::session::{
     InputLayout, OffloadSession, QueueDepth, SessionConfig, ShardPolicy,
@@ -34,13 +35,15 @@ USAGE:
                       [--power mains|battery] [--policy minimal|full]
                       [--mode serial|pipelined] [--queue-depth K]
                       [--shards auto|N] [--schedule fifo|batch] [--plan]
-                      [--plan-cache on|off] [--save ckpt.bin] [--seed S]
+                      [--plan-cache on|off] [--plan-cache-file PATH]
+                      [--executor sync|background]
+                      [--save ckpt.bin] [--seed S]
   xdna-repro gemm     [--m M --k K --n N] [--backend cpu|npu]
                       [--shards auto|N]
   xdna-repro generate [--config d2|d4|d6] [--load ckpt.bin] [--tokens N]
                       [--temperature F]
-  xdna-repro bench    [fig6|fig7|fig8|fig9|pipeline|reconfig|accuracy|all]
-                      [--json report.json]
+  xdna-repro bench    [fig6|fig7|fig8|fig9|pipeline|reconfig|accuracy|
+                       host-model|all] [--json report.json] [--calibrate]
   xdna-repro inspect  [flops|sizes|npu]
 
   --mode sets the legacy schedule (serial = queue depth 1, pipelined = 2);
@@ -53,7 +56,17 @@ USAGE:
   staging prefetches under earlier kernels as deep as the ring has slots.
   --plan-cache (default on, with --plan) freezes the scheduled step after
   the first iteration and replays it on every later step, re-recording
-  only when a shape or the session changes. See docs/SCHEDULING.md.
+  only when a shape or the session changes. --plan-cache-file PATH
+  persists the frozen steps across processes (save on exit, load on
+  start, keyed by a config fingerprint): a restarted run skips even its
+  first record, and a stale or mismatched file is just a cache miss.
+  --executor background (the default) drains cached-step replays on a
+  background device-stage thread so staging + kernels overlap the
+  trainer's CPU work in *wallclock*, not just on the modeled timeline;
+  --executor sync keeps every invocation on the caller's thread.
+  `bench host-model --calibrate` measures real copy/transpose bandwidth
+  on the twelve GPT-2 site shapes and suggests recalibrated
+  HostStagingModel constants. See docs/SCHEDULING.md.
 ";
 
 fn main() {
@@ -69,7 +82,7 @@ fn main() {
 }
 
 fn dispatch(raw: Vec<String>) -> Result<()> {
-    let args = Args::parse(raw, &["help", "plan"])?;
+    let args = Args::parse(raw, &["help", "plan", "calibrate"])?;
     if args.flag("help") || args.positional.is_empty() {
         print!("{USAGE}");
         return Ok(());
@@ -110,6 +123,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     let schedule = args.get_parse("schedule", SchedulePolicy::Fifo)?;
     let plan = args.flag("plan");
     let plan_cache = args.get_parse("plan-cache", PlanCacheMode::On)?.enabled();
+    let executor = args.get_parse("executor", ExecutorMode::Background)?;
 
     let tc = TrainConfig {
         batch,
@@ -143,6 +157,18 @@ fn cmd_train(args: &Args) -> Result<()> {
                 &[],
             )?;
             let mut cache = PlanCache::new();
+            // The on-disk cache is keyed by everything the frozen
+            // schedule depends on: the session configuration and the
+            // model/step shape. A file from any other configuration is a
+            // recoverable miss.
+            let fingerprint =
+                xdna_repro::model::trainer::plan_cache_fingerprint(&sess, &cfg, batch, seq);
+            let session_id = sess.session_id();
+            let cache_file = args.get("plan-cache-file").map(str::to_string);
+            if let (Some(path), true) = (cache_file.as_deref(), plan && plan_cache) {
+                let n = cache.load_from(path, fingerprint, session_id);
+                println!("plan cache file: loaded {n} cached step(s) from {path}");
+            }
             let out = if plan {
                 let cache_ref = if plan_cache { Some(&mut cache) } else { None };
                 train(
@@ -151,6 +177,7 @@ fn cmd_train(args: &Args) -> Result<()> {
                     &mut TrainBackend::CpuNpuPlanned {
                         session: &mut sess,
                         cache: cache_ref,
+                        executor,
                     },
                     &tc,
                 )?
@@ -172,6 +199,10 @@ fn cmd_train(args: &Args) -> Result<()> {
                     cache.misses(),
                     cache.hits()
                 );
+                if let Some(path) = cache_file.as_deref() {
+                    let n = cache.save_to(path, fingerprint, session_id)?;
+                    println!("plan cache file: saved {n} cached step(s) to {path}");
+                }
             }
             println!(
                 "offload schedule ({}, depth {}, shards {}, {:?}): serial {:.1} ms, \
@@ -184,6 +215,15 @@ fn cmd_train(args: &Args) -> Result<()> {
                 sess.pipeline.makespan_s() * 1e3,
                 sess.pipeline.hidden_s() * 1e3
             );
+            if plan {
+                println!(
+                    "executor {executor}: offloaded GEMM wallclock {:.1} ms, trainer \
+                     blocked {:.1} ms, wallclock hidden {:.1} ms",
+                    sess.wall_gemm_s * 1e3,
+                    sess.wall_blocked_s * 1e3,
+                    (sess.wall_gemm_s - sess.wall_blocked_s).max(0.0) * 1e3
+                );
+            }
             out
         }
         b => return Err(Error::config(format!("unknown backend '{b}'"))),
@@ -309,6 +349,13 @@ fn cmd_bench(args: &Args) -> Result<()> {
         }
         "reconfig" => paperbench::reconfig::print()?,
         "accuracy" => paperbench::accuracy::print(false)?,
+        "host-model" => {
+            if args.flag("calibrate") {
+                paperbench::host_model::print_calibration();
+            } else {
+                paperbench::host_model::print_model();
+            }
+        }
         "all" => {
             paperbench::fig6::print(&mains);
             paperbench::fig7::print(&mains);

@@ -8,6 +8,7 @@
 //! is *recorded* into a [`StepPlan`] so the whole training step can be
 //! scheduled at once (the record→schedule→execute seam).
 
+use crate::coordinator::executor::ExecClient;
 use crate::coordinator::plan::{PlanOp, PlanReplay, StepPlan};
 use crate::coordinator::session::{GemmOp, InputLayout, OffloadSession, Ticket};
 use crate::gemm::cpu;
@@ -40,6 +41,17 @@ pub enum MatmulDispatch<'a, 'c> {
     Replay {
         session: &'a mut OffloadSession,
         replay: &'a mut PlanReplay<'c>,
+    },
+    /// Cache-hit replay with the device-stage loop on the background
+    /// executor thread (`coordinator::executor`): the same checked op
+    /// stream as [`MatmulDispatch::Replay`], but forward results are
+    /// produced off-thread and the backward weight-gradient GEMMs are
+    /// *deferred* — their accumulation happens when the result comes
+    /// back, so the trainer's CPU ops overlap the `dW` staging + kernel
+    /// in wallclock. Numerics stay bit-identical to the sync replay
+    /// (invocations run in record order with identical inputs).
+    BackgroundReplay {
+        client: &'a mut ExecClient<'c>,
     },
 }
 
@@ -103,6 +115,24 @@ pub fn forward(
             }
             let node = session.replay_gemm(replay, &op, inp, weight, out)?;
             replay.set_chain(node);
+        }
+        MatmulDispatch::BackgroundReplay { client } => {
+            // Same checked op stream as the Replay arm; the invocation
+            // runs on the executor thread. A forward output feeds the
+            // next CPU op immediately, so the wait stays in this call.
+            let size = ProblemSize::new(bt, ic, oc);
+            let mut op = PlanOp::new(size)
+                .with_b_layout(InputLayout::Transposed)
+                .prefetchable_b(true);
+            if let Some(head) = client.chain_head() {
+                op = op.after(head);
+            }
+            // SAFETY: the handle is waited below, before inp/weight/out
+            // leave this frame's borrows; on error the client quiesces
+            // the executor before returning.
+            let (node, handle) = unsafe { client.submit(&op, inp, weight, out)? };
+            client.set_chain(node);
+            client.wait(handle)?;
         }
     }
     if let Some(bias) = bias {
@@ -240,6 +270,54 @@ pub fn backward(
                 *d += t;
             }
             for (d, t) in dweight.iter_mut().zip(&dw) {
+                *d += t;
+            }
+        }
+        MatmulDispatch::BackgroundReplay { client } => {
+            // The Replay arm's (dinp, dW) pair, with the device-stage
+            // work on the executor thread. dinp is waited here (the
+            // gradient chain needs it), but the weight gradient is
+            // needed only by the optimizer at step end, so it *defers*:
+            // the executor runs its staging + kernel + merge while this
+            // thread moves on to the layer's remaining CPU backward ops
+            // (gelu, layernorm, attention), and the client accumulates
+            // into dweight when the result arrives — staging + device
+            // wallclock hidden for real, not just on the modeled
+            // timeline.
+            let mut tmp = vec![0.0f32; bt * ic];
+            let dinp_size = ProblemSize::new(bt, oc, ic);
+            let dw_size = ProblemSize::new(oc, bt, ic);
+            let head = client.chain_head();
+            let mut op_dinp = PlanOp::new(dinp_size).prefetchable_b(true);
+            let mut op_dw = PlanOp::new(dw_size)
+                .with_a_layout(InputLayout::Transposed) // dout is (BT,OC): Mᵀ view
+                .prefetchable_b(true);
+            if let Some(h) = head {
+                op_dinp = op_dinp.after(h);
+                op_dw = op_dw.after(h);
+            }
+            // dout is copied for the deferred job (the model reuses its
+            // gradient scratch buffers across layers, so it is not
+            // stable beyond this call); copying *before* the first
+            // submit keeps the submit→wait window free of panic-prone
+            // work (allocation), per the submit safety contract. The
+            // copy is the price of deferral — ~a copy_s(BT·OC) against
+            // the whole dW invocation it lets the CPU ops hide.
+            let dout_copy = dout.to_vec();
+            // SAFETY: h_dinp is waited below, before dout/weight/tmp
+            // leave this frame's borrows; on error the client quiesces
+            // the executor before returning; nothing between the
+            // submits and the wait can unwind.
+            let (n_dinp, h_dinp) = unsafe { client.submit(&op_dinp, dout, weight, &mut tmp)? };
+            // inp is a saved forward activation and dweight a gradient
+            // tensor, both untouched until the optimizer runs.
+            // SAFETY: exactly the submit_deferred contract above.
+            unsafe { client.submit_deferred(&op_dw, dout_copy, inp, dweight)? };
+            client.set_chain(n_dinp);
+            client.wait(h_dinp)?;
+            // This merge (and the bias reduction below) overlaps the
+            // executor's dW invocation.
+            for (d, t) in dinp.iter_mut().zip(&tmp) {
                 *d += t;
             }
         }

@@ -2,9 +2,13 @@
 //!
 //! The paper parallelizes the CPU-side transpose "across all available CPU
 //! cores" (section V-B); `parallel_chunks` is the primitive both the
-//! transpose and the CPU GEMM baseline use.
+//! transpose and the CPU GEMM baseline use. [`Bounded`] is the blocking
+//! handoff queue the background step executor
+//! (`coordinator::executor`) hands jobs across threads with.
 
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
 
 /// Number of worker threads to use (defaults to available parallelism,
 /// overridable with the XDNA_REPRO_THREADS environment variable).
@@ -107,6 +111,125 @@ where
     })
 }
 
+/// A bounded blocking queue for handing work between two threads (the
+/// trainer thread and the step executor's device-stage thread).
+///
+/// `push` blocks while the queue is at capacity — the back-pressure that
+/// keeps a producer from running arbitrarily far ahead of the consumer,
+/// mirroring how the offload ring bounds staged invocations. `pop` blocks
+/// while the queue is empty. Two shutdown modes end the conversation:
+///
+/// * [`Bounded::close`] — graceful: no more pushes are accepted, but `pop`
+///   keeps draining what was already queued before returning `None`;
+/// * [`Bounded::abort`] — immediate: queued items are dropped and every
+///   blocked `push`/`pop` returns right away (the error path, where
+///   un-run work must *not* execute).
+pub struct Bounded<T> {
+    inner: Arc<BoundedInner<T>>,
+}
+
+struct BoundedInner<T> {
+    state: Mutex<BoundedState<T>>,
+    space: Condvar,
+    items: Condvar,
+}
+
+struct BoundedState<T> {
+    queue: VecDeque<T>,
+    cap: usize,
+    closed: bool,
+    aborted: bool,
+}
+
+impl<T> Clone for Bounded<T> {
+    fn clone(&self) -> Self {
+        Bounded {
+            inner: Arc::clone(&self.inner),
+        }
+    }
+}
+
+impl<T> Bounded<T> {
+    /// A queue holding at most `cap` items (minimum 1).
+    pub fn new(cap: usize) -> Bounded<T> {
+        Bounded {
+            inner: Arc::new(BoundedInner {
+                state: Mutex::new(BoundedState {
+                    queue: VecDeque::new(),
+                    cap: cap.max(1),
+                    closed: false,
+                    aborted: false,
+                }),
+                space: Condvar::new(),
+                items: Condvar::new(),
+            }),
+        }
+    }
+
+    /// Block until there is room, then enqueue. Returns `false` (dropping
+    /// `item`) if the queue was closed or aborted instead.
+    pub fn push(&self, item: T) -> bool {
+        let mut st = self.inner.state.lock().expect("queue lock poisoned");
+        while st.queue.len() >= st.cap && !st.closed && !st.aborted {
+            st = self.inner.space.wait(st).expect("queue lock poisoned");
+        }
+        if st.closed || st.aborted {
+            return false;
+        }
+        st.queue.push_back(item);
+        self.inner.items.notify_one();
+        true
+    }
+
+    /// Block until an item is available and dequeue it. Returns `None`
+    /// once the queue is closed and drained, or immediately after an
+    /// abort (dropping anything still queued).
+    pub fn pop(&self) -> Option<T> {
+        let mut st = self.inner.state.lock().expect("queue lock poisoned");
+        loop {
+            if st.aborted {
+                st.queue.clear();
+                return None;
+            }
+            if let Some(item) = st.queue.pop_front() {
+                self.inner.space.notify_one();
+                return Some(item);
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.inner.items.wait(st).expect("queue lock poisoned");
+        }
+    }
+
+    /// Graceful shutdown: reject further pushes, let `pop` drain the rest.
+    pub fn close(&self) {
+        let mut st = self.inner.state.lock().expect("queue lock poisoned");
+        st.closed = true;
+        self.inner.items.notify_all();
+        self.inner.space.notify_all();
+    }
+
+    /// Immediate shutdown: drop everything still queued and wake every
+    /// blocked caller. Queued work is *discarded*, never run.
+    pub fn abort(&self) {
+        let mut st = self.inner.state.lock().expect("queue lock poisoned");
+        st.aborted = true;
+        st.queue.clear();
+        self.inner.items.notify_all();
+        self.inner.space.notify_all();
+    }
+
+    /// Items currently queued (diagnostics).
+    pub fn len(&self) -> usize {
+        self.inner.state.lock().expect("queue lock poisoned").queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
 /// Map over items in parallel, preserving order.
 pub fn parallel_map<T: Sync, R: Send, F>(items: &[T], f: F) -> Vec<R>
 where
@@ -175,6 +298,63 @@ mod tests {
     #[test]
     fn num_threads_at_least_one() {
         assert!(num_threads() >= 1);
+    }
+
+    #[test]
+    fn bounded_queue_hands_items_across_threads_in_order() {
+        let q: Bounded<u64> = Bounded::new(2);
+        let rx = q.clone();
+        let consumer = std::thread::spawn(move || {
+            let mut got = Vec::new();
+            while let Some(x) = rx.pop() {
+                got.push(x);
+            }
+            got
+        });
+        for i in 0..100u64 {
+            assert!(q.push(i), "queue must accept while open");
+        }
+        q.close();
+        let got = consumer.join().unwrap();
+        assert_eq!(got, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn bounded_queue_close_drains_but_rejects_new_pushes() {
+        let q: Bounded<u32> = Bounded::new(4);
+        assert!(q.push(1));
+        assert!(q.push(2));
+        q.close();
+        assert!(!q.push(3), "closed queue rejects pushes");
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), Some(2));
+        assert_eq!(q.pop(), None, "drained + closed ends the stream");
+    }
+
+    #[test]
+    fn bounded_queue_abort_discards_queued_items() {
+        let q: Bounded<u32> = Bounded::new(4);
+        assert!(q.push(1));
+        assert!(q.push(2));
+        q.abort();
+        assert_eq!(q.pop(), None, "aborted queue never hands out queued work");
+        assert!(!q.push(3));
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn bounded_queue_push_blocks_until_space() {
+        let q: Bounded<u32> = Bounded::new(1);
+        assert!(q.push(1));
+        let rx = q.clone();
+        let t = std::thread::spawn(move || {
+            std::thread::sleep(std::time::Duration::from_millis(20));
+            rx.pop()
+        });
+        // Blocks until the consumer pops the first item.
+        assert!(q.push(2));
+        assert_eq!(t.join().unwrap(), Some(1));
+        assert_eq!(q.pop(), Some(2));
     }
 
     #[test]

@@ -1,0 +1,273 @@
+//! Background step-executor acceptance: background-vs-sync bit-identity
+//! on all twelve GPT-2 site shapes, executor shutdown mid-step leaving
+//! the session reusable, repeated-run determinism (thread timing must
+//! never leak into numerics), and the wallclock sanity check — a cached
+//! d2 background run is not slower than the synchronous replay, because
+//! the deferred weight-gradient invocations really do overlap the
+//! trainer's CPU ops.
+
+use xdna_repro::coordinator::executor::{run_replay_step, ExecutorMode};
+use xdna_repro::coordinator::plan::{PlanCache, PlanOp, StepPlan};
+use xdna_repro::coordinator::scheduler::SchedulePolicy;
+use xdna_repro::coordinator::session::{
+    InputLayout, OffloadSession, QueueDepth, SessionConfig, ShardPolicy, Shards,
+};
+use xdna_repro::gemm::sizes::{distinct_sizes, ModelDims, ProblemSize};
+use xdna_repro::model::trainer::{train_synthetic, TrainBackend, TrainConfig};
+use xdna_repro::model::ModelConfig;
+use xdna_repro::util::error::Error;
+use xdna_repro::util::rng::Rng;
+
+fn session(depth: usize) -> OffloadSession {
+    OffloadSession::new(
+        SessionConfig {
+            depth: QueueDepth(depth),
+            shards: ShardPolicy::Fixed(Shards(1)),
+            schedule: SchedulePolicy::BatchBySize,
+            ..Default::default()
+        },
+        &[],
+    )
+    .unwrap()
+}
+
+/// All twelve GPT-2 GEMM-site shapes at reduced model dimensions (the
+/// same forward / backward-data / backward-weight patterns as 124M).
+fn scaled_gpt2_sizes() -> Vec<ProblemSize> {
+    let dims = ModelDims {
+        batch: 1,
+        seq: 64,
+        channels: 128,
+        padded_vocab: 1024,
+        layers: 2,
+    };
+    let sizes = distinct_sizes(&dims);
+    assert_eq!(sizes.len(), 12, "scaled dims must keep all twelve shapes");
+    sizes
+}
+
+fn random_inputs(size: ProblemSize, seed: u64) -> (Vec<f32>, Vec<f32>) {
+    let mut rng = Rng::new(seed);
+    let mut a = vec![0.0f32; size.m * size.k];
+    let mut b_t = vec![0.0f32; size.n * size.k]; // N x K: forces the transpose
+    rng.fill_normal(&mut a, 0.0, 1.0);
+    rng.fill_normal(&mut b_t, 0.0, 0.1);
+    (a, b_t)
+}
+
+fn shape_op(size: ProblemSize) -> PlanOp {
+    PlanOp::new(size)
+        .with_b_layout(InputLayout::Transposed)
+        .prefetchable_b(true)
+}
+
+/// Record + execute + freeze the twelve-shape step, returning the primed
+/// session and cache.
+fn cached_twelve_shape_session() -> (OffloadSession, PlanCache) {
+    let sizes = scaled_gpt2_sizes();
+    let mut sess = session(4);
+    let mut plan = StepPlan::new();
+    for (i, &size) in sizes.iter().enumerate() {
+        let (a, b_t) = random_inputs(size, 9000 + i as u64);
+        let mut c = vec![0.0f32; size.m * size.n];
+        sess.record_gemm(&mut plan, &shape_op(size), &a, &b_t, &mut c)
+            .unwrap();
+    }
+    sess.execute(&mut plan).unwrap();
+    let mut cache = PlanCache::new();
+    cache.insert(sess.freeze(plan).unwrap());
+    (sess, cache)
+}
+
+/// Replay the cached twelve-shape step synchronously; returns outputs.
+fn sync_replay(sess: &mut OffloadSession, cache: &PlanCache) -> Vec<Vec<f32>> {
+    let mut replay = sess.begin_replay(cache).expect("entry cached");
+    let mut outs = Vec::new();
+    for (i, &size) in scaled_gpt2_sizes().iter().enumerate() {
+        let (a, b_t) = random_inputs(size, 9000 + i as u64);
+        let mut c = vec![0.0f32; size.m * size.n];
+        sess.replay_gemm(&mut replay, &shape_op(size), &a, &b_t, &mut c)
+            .unwrap();
+        outs.push(c);
+    }
+    sess.finish_replay(replay).unwrap();
+    outs
+}
+
+/// Replay the cached twelve-shape step through the background executor;
+/// returns outputs.
+fn background_replay(sess: &mut OffloadSession, cache: &PlanCache) -> Vec<Vec<f32>> {
+    let entry = cache.latest_for(sess.session_id()).expect("entry cached");
+    let (outs, report) = run_replay_step(sess, entry, |client| {
+        let mut outs = Vec::new();
+        for (i, &size) in scaled_gpt2_sizes().iter().enumerate() {
+            let (a, b_t) = random_inputs(size, 9000 + i as u64);
+            let mut c = vec![0.0f32; size.m * size.n];
+            let op = shape_op(size);
+            // SAFETY: the handle is waited before a/b_t/c leave this
+            // iteration's borrows; errors quiesce the executor first.
+            let (node, h) = unsafe { client.submit(&op, &a, &b_t, &mut c)? };
+            client.set_chain(node);
+            client.wait(h)?;
+            outs.push(c);
+        }
+        Ok(outs)
+    })
+    .unwrap();
+    assert_eq!(report.stats.len(), 12);
+    assert!(report.wall_gemm_s > 0.0);
+    outs
+}
+
+/// The tentpole acceptance: the background executor produces bit-identical
+/// outputs to the synchronous replay on all twelve GPT-2 site shapes.
+#[test]
+fn background_bit_identical_to_sync_on_all_gpt2_site_shapes() {
+    let (mut sess, cache) = cached_twelve_shape_session();
+    let outs_sync = sync_replay(&mut sess, &cache);
+    let outs_bg = background_replay(&mut sess, &cache);
+    assert_eq!(
+        outs_bg, outs_sync,
+        "background execution must be bit-identical to sync on every site shape"
+    );
+}
+
+/// Thread-timing independence: eight consecutive background replays of
+/// the same step produce bit-identical outputs every time (invocations
+/// run in record order on one executor thread; scheduling jitter must
+/// never reach numerics).
+#[test]
+fn background_replay_deterministic_across_eight_runs() {
+    let (mut sess, cache) = cached_twelve_shape_session();
+    let reference = background_replay(&mut sess, &cache);
+    for run in 1..8 {
+        let outs = background_replay(&mut sess, &cache);
+        assert_eq!(outs, reference, "run {run} diverged from run 0");
+    }
+}
+
+/// Executor shutdown mid-step (the trainer body errors with work in
+/// flight) leaves the session fully reusable: sync replays, background
+/// replays, and fresh records all still work.
+#[test]
+fn shutdown_mid_step_leaves_the_session_reusable() {
+    let (mut sess, cache) = cached_twelve_shape_session();
+    let sizes = scaled_gpt2_sizes();
+
+    let entry = cache.latest_for(sess.session_id()).unwrap();
+    let err = run_replay_step(&mut sess, entry, |client| {
+        // Submit-and-wait a few ops, then die mid-step.
+        for (i, &size) in sizes.iter().take(3).enumerate() {
+            let (a, b_t) = random_inputs(size, 9000 + i as u64);
+            let mut c = vec![0.0f32; size.m * size.n];
+            let op = shape_op(size);
+            // SAFETY: waited within this iteration.
+            let (_, h) = unsafe { client.submit(&op, &a, &b_t, &mut c)? };
+            client.wait(h)?;
+        }
+        Err::<(), _>(Error::runtime("simulated trainer failure"))
+    })
+    .unwrap_err();
+    assert!(err.to_string().contains("simulated trainer failure"), "{err}");
+    assert_eq!(sess.in_flight(), 0);
+
+    // The session still replays the cached step — both ways — and still
+    // records a fresh plan.
+    let outs_sync = sync_replay(&mut sess, &cache);
+    let outs_bg = background_replay(&mut sess, &cache);
+    assert_eq!(outs_bg, outs_sync);
+    let size = sizes[0];
+    let (a, b_t) = random_inputs(size, 42);
+    let mut c = vec![0.0f32; size.m * size.n];
+    let mut plan = StepPlan::new();
+    sess.record_gemm(&mut plan, &shape_op(size), &a, &b_t, &mut c)
+        .unwrap();
+    sess.execute(&mut plan).unwrap();
+}
+
+/// The wallclock acceptance on a cached d2 training run: background
+/// execution is not slower than sync, because the deferred dW
+/// invocations genuinely overlap the trainer's backward CPU ops. Both
+/// runs are measured min-of-2 to damp scheduler noise, and a small
+/// tolerance absorbs what remains; the overlap itself is asserted
+/// directly through the measured blocked-vs-serialized split.
+#[test]
+fn background_cached_d2_run_not_slower_than_sync() {
+    let cfg = ModelConfig::d2();
+    let tc = TrainConfig {
+        batch: 4,
+        seq: 64,
+        epochs: 1,
+        steps_per_epoch: 6,
+        ..Default::default()
+    };
+    let run = |mode: ExecutorMode| -> (f64, f64, f64, f32) {
+        let mut sess = session(4);
+        let mut cache = PlanCache::new();
+        let t0 = std::time::Instant::now();
+        let stats = train_synthetic(
+            cfg,
+            &tc,
+            &mut TrainBackend::CpuNpuPlanned {
+                session: &mut sess,
+                cache: Some(&mut cache),
+                executor: mode,
+            },
+            11,
+        )
+        .unwrap();
+        assert_eq!((cache.hits(), cache.misses()), (5, 1));
+        (
+            t0.elapsed().as_secs_f64(),
+            sess.wall_gemm_s,
+            sess.wall_blocked_s,
+            stats.last().unwrap().loss,
+        )
+    };
+    let (mut sync_wall, mut bg_wall) = (f64::INFINITY, f64::INFINITY);
+    let (mut bg_gemm, mut bg_blocked) = (0.0, 0.0);
+    let (mut loss_sync, mut loss_bg) = (0.0f32, 0.0f32);
+    for _ in 0..2 {
+        let (w, _, _, l) = run(ExecutorMode::Sync);
+        sync_wall = sync_wall.min(w);
+        loss_sync = l;
+        let (w, g, b, l) = run(ExecutorMode::Background);
+        if w < bg_wall {
+            bg_wall = w;
+            bg_gemm = g;
+            bg_blocked = b;
+        }
+        loss_bg = l;
+    }
+    assert_eq!(loss_sync, loss_bg, "wallclock must be the only difference");
+    // The strict overlap claims need a core for each thread; on a
+    // starved runner (or under heavy parallel-test load) the trainer
+    // and device-stage threads serialize and the measured split is
+    // meaningless, so gate the wallclock asserts on real parallelism —
+    // the loss/counter/timeline invariants above always hold.
+    let cores = std::thread::available_parallelism().map_or(1, |n| n.get());
+    if cores < 4 {
+        eprintln!(
+            "skipping strict wallclock asserts: only {cores} core(s) available \
+             (background {bg_wall}s vs sync {sync_wall}s, blocked {bg_blocked}s of \
+             {bg_gemm}s serialized)"
+        );
+        return;
+    }
+    // Staging + device wallclock was hidden for real: the trainer spent
+    // strictly less time blocked than the serialized GEMM cost.
+    assert!(
+        bg_blocked < bg_gemm,
+        "background replays must hide some GEMM wallclock: blocked {bg_blocked}s vs \
+         serialized {bg_gemm}s"
+    );
+    // And end to end the background run is not slower than sync. The d2
+    // step leaves milliseconds of dW work to hide per layer, far above
+    // the per-op handoff cost; the tolerance only absorbs parallel-test
+    // scheduler noise on loaded CI runners.
+    assert!(
+        bg_wall <= sync_wall * 1.10 + 0.010,
+        "background cached run must not be slower than sync: background {bg_wall}s vs \
+         sync {sync_wall}s"
+    );
+}
