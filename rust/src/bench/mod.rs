@@ -13,3 +13,4 @@ pub mod fig9;
 pub mod host_model;
 pub mod pipeline;
 pub mod reconfig;
+pub mod serve;

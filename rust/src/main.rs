@@ -5,8 +5,10 @@
 //!               CPU+NPU), logging per-epoch loss/time/energy
 //!   gemm      — run one offloaded GEMM and print its stage breakdown
 //!   generate  — sample tokens from a (trained) checkpoint
+//!   serve     — decode N concurrent generation requests through the
+//!               KV-cached, continuously-batched serving engine
 //!   bench     — regenerate a paper figure/table (fig6..fig9, reconfig,
-//!               accuracy) or `all`
+//!               accuracy, serve) or `all`
 //!   inspect   — print model FLOP tables, GEMM sizes, NPU design info
 
 use xdna_repro::bench as paperbench;
@@ -20,7 +22,7 @@ use xdna_repro::coordinator::{ReconfigPolicy, SchedulePolicy};
 use xdna_repro::gemm::sizes::{distinct_sizes, ModelDims, ProblemSize};
 use xdna_repro::model::data::{load_checkpoint, save_checkpoint, synthetic_corpus, DataLoader};
 use xdna_repro::model::trainer::{train, TrainBackend, TrainConfig};
-use xdna_repro::model::{Gpt2Model, ModelConfig};
+use xdna_repro::model::{serve, GenRequest, Gpt2Model, KvCacheMode, ModelConfig, ServeConfig};
 use xdna_repro::power::profiles::PowerProfile;
 use xdna_repro::util::cli::Args;
 use xdna_repro::util::error::{Error, Result};
@@ -42,8 +44,14 @@ USAGE:
                       [--shards auto|N]
   xdna-repro generate [--config d2|d4|d6] [--load ckpt.bin] [--tokens N]
                       [--temperature F]
+  xdna-repro serve    [--config d2|d4|d6] [--load ckpt.bin] [--requests N]
+                      [--tokens N] [--prompt-len P] [--max-batch B]
+                      [--kv-cache on|off] [--temperature F] [--seed S]
+                      [--queue-depth K] [--shards auto|N]
+                      [--schedule fifo|batch] [--plan-cache on|off]
   xdna-repro bench    [fig6|fig7|fig8|fig9|pipeline|reconfig|accuracy|
-                       host-model|all] [--json report.json] [--calibrate]
+                       host-model|serve|all] [--json report.json]
+                      [--calibrate]
   xdna-repro inspect  [flops|sizes|npu]
 
   --mode sets the legacy schedule (serial = queue depth 1, pipelined = 2);
@@ -66,7 +74,13 @@ USAGE:
   --executor sync keeps every invocation on the caller's thread.
   `bench host-model --calibrate` measures real copy/transpose bandwidth
   on the twelve GPT-2 site shapes and suggests recalibrated
-  HostStagingModel constants. See docs/SCHEDULING.md.
+  HostStagingModel constants. `serve` decodes N concurrent generation
+  requests through the KV-cached serving engine: per-token GEMMs shrink
+  to matrix-vector shapes, up to --max-batch requests share one batched
+  decode step (continuous batching), and with --plan-cache on the step
+  records once and replays from the plan cache for every later token.
+  --kv-cache off selects the per-token full-window recompute baseline
+  (bit-identical tokens, eager schedule). See docs/SCHEDULING.md.
 ";
 
 fn main() {
@@ -91,6 +105,7 @@ fn dispatch(raw: Vec<String>) -> Result<()> {
         "train" => cmd_train(&args),
         "gemm" => cmd_gemm(&args),
         "generate" => cmd_generate(&args),
+        "serve" => cmd_serve(&args),
         "bench" => cmd_bench(&args),
         "inspect" => cmd_inspect(&args),
         other => Err(Error::config(format!("unknown command '{other}'\n{USAGE}"))),
@@ -318,22 +333,110 @@ fn cmd_generate(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_serve(args: &Args) -> Result<()> {
+    let cfg = ModelConfig::by_name(args.get_or("config", "d2"))?;
+    let seed = args.get_parse("seed", 42u64)?;
+    let mut model = match args.get("load") {
+        Some(path) => Gpt2Model::with_params(cfg, load_checkpoint(path, &cfg)?),
+        None => Gpt2Model::new(cfg, seed),
+    };
+    let n_requests = args.get_parse("requests", 4usize)?;
+    let new_tokens = args.get_parse("tokens", 16usize)?;
+    let prompt_len = args.get_parse("prompt-len", 4usize)?;
+    let max_batch = args.get_parse("max-batch", 4usize)?;
+    let temperature = args.get_parse("temperature", 0.8f32)?;
+    let kv = args.get_parse("kv-cache", KvCacheMode::On)?;
+    let depth = QueueDepth(args.get_parse("queue-depth", 2usize)?);
+    let shards = args.get_parse("shards", ShardPolicy::default())?;
+    let schedule = args.get_parse("schedule", SchedulePolicy::BatchBySize)?;
+    let plan_cache = args.get_parse("plan-cache", PlanCacheMode::On)?.enabled();
+
+    // Distinct per-request prompts and sampling seeds (a request's token
+    // stream never depends on which other requests share its batch).
+    let mut rng = Rng::new(seed);
+    let requests: Vec<GenRequest> = (0..n_requests)
+        .map(|i| {
+            let prompt: Vec<i32> =
+                (0..prompt_len).map(|_| rng.below(cfg.vocab_size) as i32).collect();
+            GenRequest::new(prompt, new_tokens, seed ^ (i as u64 + 1))
+        })
+        .collect();
+
+    let mut sess = OffloadSession::new(
+        SessionConfig {
+            depth,
+            shards,
+            schedule,
+            ..Default::default()
+        },
+        &[],
+    )?;
+    let mut cache = PlanCache::new();
+    let serve_cfg = ServeConfig {
+        max_batch,
+        temperature,
+        kv_cache: kv,
+    };
+    println!(
+        "serving {n_requests} request(s) x {new_tokens} token(s) on {} \
+         (kv-cache {kv}, max batch {max_batch})",
+        args.get_or("config", "d2")
+    );
+    let use_cache = plan_cache && kv.enabled();
+    let cache_ref = use_cache.then_some(&mut cache);
+    let report = serve(&mut model, &requests, &mut sess, cache_ref, &serve_cfg)?;
+    println!(
+        "served {} token(s) in {} decode step(s), mean batch occupancy {:.2}",
+        report.tokens,
+        report.steps,
+        report.mean_occupancy()
+    );
+    println!(
+        "modeled {:.2} ms ({:.2} ms prefill) -> {:.1} tokens/s; per-token latency \
+         p50 {:.3} ms, p99 {:.3} ms",
+        report.modeled_s * 1e3,
+        report.prefill_s * 1e3,
+        report.tokens_per_s(),
+        report.latency_percentile_s(50.0) * 1e3,
+        report.latency_percentile_s(99.0) * 1e3
+    );
+    if use_cache {
+        println!(
+            "plan cache: {} hit(s), {} miss(es) — recorded {} step(s), replayed {}",
+            report.plan_cache_hits,
+            report.plan_cache_misses,
+            report.plan_cache_misses,
+            report.plan_cache_hits
+        );
+    }
+    for g in &report.generations {
+        println!("request {}: {:?}", g.id, g.tokens);
+    }
+    Ok(())
+}
+
 fn cmd_bench(args: &Args) -> Result<()> {
     let which = args.positional.get(1).map(|s| s.as_str()).unwrap_or("all");
     let mains = PowerProfile::mains();
     if let Some(path) = args.get("json") {
-        // Machine-readable pipeline report (the CI smoke artifact). Only
-        // the pipeline bench has a JSON form today.
-        if which != "pipeline" && which != "all" {
-            return Err(Error::config(format!(
-                "--json is only available for `bench pipeline` (or `all`), not `bench {which}`"
-            )));
-        }
-        let report =
-            paperbench::pipeline::json_report(&[PowerProfile::mains(), PowerProfile::battery()]);
+        // Machine-readable reports (the CI smoke artifacts): the pipeline
+        // bench (also under `all`) and the serve bench have JSON forms.
+        let report = match which {
+            "pipeline" | "all" => paperbench::pipeline::json_report(&[
+                PowerProfile::mains(),
+                PowerProfile::battery(),
+            ]),
+            "serve" => paperbench::serve::json_report(),
+            _ => {
+                return Err(Error::config(format!(
+                    "--json is only available for `bench pipeline`, `bench serve`, or `all`, \
+                     not `bench {which}`"
+                )))
+            }
+        };
         std::fs::write(path, format!("{report}\n"))
             .map_err(|e| Error::config(format!("cannot write {path}: {e}")))?;
-        println!("pipeline report written to {path}");
+        println!("{which} report written to {path}");
     }
     match which {
         "fig6" => paperbench::fig6::print(&mains),
@@ -349,6 +452,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
         }
         "reconfig" => paperbench::reconfig::print()?,
         "accuracy" => paperbench::accuracy::print(false)?,
+        "serve" => paperbench::serve::print(),
         "host-model" => {
             if args.flag("calibrate") {
                 paperbench::host_model::print_calibration();
@@ -366,6 +470,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
             paperbench::pipeline::print(&PowerProfile::battery());
             paperbench::reconfig::print()?;
             paperbench::accuracy::print(false)?;
+            paperbench::serve::print();
         }
         other => return Err(Error::config(format!("unknown bench '{other}'"))),
     }

@@ -1,0 +1,643 @@
+//! The serving engine: KV-cached decode with continuous batching on the
+//! offload stack.
+//!
+//! Training drove five PRs of scheduling work (plans, caching, background
+//! execution); this module points the same machinery at generation. Each
+//! decode step runs the per-token transformer column — 9 GEMMs on d2 —
+//! with M = R rows, one per in-flight request (*continuous batching*:
+//! requests join and leave the batch between steps, FIFO). The step is
+//! recorded once as a [`StepPlan`] and optimistically replayed through a
+//! [`PlanCache`] thereafter: decode shapes depend only on the batch
+//! occupancy R, so after the first token every step is a cache hit, and
+//! an occupancy change is a recoverable divergence that re-records.
+//!
+//! Numerics are the point of the test suite around this module: the GEMM
+//! path computes every output row independently of M, attention reads
+//! per-request [`KvCache`] rows copied verbatim from those GEMMs, and
+//! sampling shares [`sample_logits`] with the training path — so a
+//! KV-cached, batched, plan-replayed decode is **bit-identical** to
+//! recomputing the full window per token, request by request.
+
+use crate::coordinator::plan::{PlanCache, StepPlan};
+use crate::coordinator::session::OffloadSession;
+use crate::util::error::{Error, Result};
+use crate::util::rng::Rng;
+
+use super::config::ModelConfig;
+use super::kv_cache::{KvCache, KvCacheMode};
+use super::model::{sample_logits, Gpt2Model};
+use super::ops::matmul::{self, MatmulDispatch};
+use super::ops::{attention, gelu, layernorm, residual};
+use super::params::ParamTensors;
+
+/// One generation request: a non-empty prompt and a token budget.
+#[derive(Debug, Clone)]
+pub struct GenRequest {
+    pub prompt: Vec<i32>,
+    pub max_new_tokens: usize,
+    /// Per-request sampling seed, so a request's token stream does not
+    /// depend on which other requests share its batch.
+    pub seed: u64,
+}
+
+impl GenRequest {
+    pub fn new(prompt: Vec<i32>, max_new_tokens: usize, seed: u64) -> GenRequest {
+        GenRequest {
+            prompt,
+            max_new_tokens,
+            seed,
+        }
+    }
+}
+
+/// One request's completed generation.
+#[derive(Debug, Clone, Default)]
+pub struct Generation {
+    /// Index into the request slice handed to [`serve`].
+    pub id: usize,
+    pub tokens: Vec<i32>,
+    /// Modeled per-token decode latency (makespan delta of the step that
+    /// produced each token).
+    pub latencies_s: Vec<f64>,
+    /// The padded-vocab logits row this request's final token was sampled
+    /// from — the bit-identity probe the test suite compares across
+    /// serve configurations.
+    pub final_logits: Vec<f32>,
+}
+
+/// Serving configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct ServeConfig {
+    /// Continuous-batching window: max requests decoded per step.
+    pub max_batch: usize,
+    pub temperature: f32,
+    /// `Off` selects the per-token full-window recompute baseline.
+    pub kv_cache: KvCacheMode,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            max_batch: 4,
+            temperature: 0.8,
+            kv_cache: KvCacheMode::On,
+        }
+    }
+}
+
+/// What [`serve`] hands back: per-request generations plus the modeled
+/// serving telemetry `bench serve` prices.
+#[derive(Debug, Clone, Default)]
+pub struct ServeReport {
+    pub generations: Vec<Generation>,
+    /// Total tokens generated across all requests.
+    pub tokens: usize,
+    /// Decode steps executed (a batched step counts once).
+    pub steps: usize,
+    /// Modeled seconds on the offload session (prefill + decode).
+    pub modeled_s: f64,
+    /// Portion of `modeled_s` spent in prefill forwards.
+    pub prefill_s: f64,
+    /// Per-token latencies across all requests, in generation order.
+    pub latencies_s: Vec<f64>,
+    pub plan_cache_hits: u64,
+    pub plan_cache_misses: u64,
+}
+
+impl ServeReport {
+    /// Modeled decode throughput across the whole run.
+    pub fn tokens_per_s(&self) -> f64 {
+        if self.modeled_s > 0.0 {
+            self.tokens as f64 / self.modeled_s
+        } else {
+            0.0
+        }
+    }
+
+    /// Mean batch occupancy: tokens served per decode step.
+    pub fn mean_occupancy(&self) -> f64 {
+        if self.steps > 0 {
+            self.tokens as f64 / self.steps as f64
+        } else {
+            0.0
+        }
+    }
+
+    /// Per-token latency percentile (p in 0..=100, nearest-rank on the
+    /// sorted latency vector).
+    pub fn latency_percentile_s(&self, p: f64) -> f64 {
+        if self.latencies_s.is_empty() {
+            return 0.0;
+        }
+        let mut sorted = self.latencies_s.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let idx = (p / 100.0 * (sorted.len() - 1) as f64).round() as usize;
+        sorted[idx.min(sorted.len() - 1)]
+    }
+}
+
+/// Scratch arenas for one batched decode step (R rows ≤ max_batch).
+struct DecodeActs {
+    x: Vec<f32>,
+    ln1: Vec<f32>,
+    qkv: Vec<f32>,
+    atty: Vec<f32>,
+    attproj: Vec<f32>,
+    res2: Vec<f32>,
+    ln2: Vec<f32>,
+    fch: Vec<f32>,
+    fch_gelu: Vec<f32>,
+    fcproj: Vec<f32>,
+    lnf: Vec<f32>,
+    logits: Vec<f32>,
+    mean: Vec<f32>,
+    rstd: Vec<f32>,
+    /// Attention scratch, one causal row (≤ max_seq_len), reused per
+    /// (request, head).
+    att: Vec<f32>,
+}
+
+impl DecodeActs {
+    fn new(cfg: &ModelConfig, max_batch: usize) -> DecodeActs {
+        let (c, vp) = (cfg.channels, cfg.padded_vocab_size);
+        let r = max_batch;
+        DecodeActs {
+            x: vec![0.0; r * c],
+            ln1: vec![0.0; r * c],
+            qkv: vec![0.0; r * 3 * c],
+            atty: vec![0.0; r * c],
+            attproj: vec![0.0; r * c],
+            res2: vec![0.0; r * c],
+            ln2: vec![0.0; r * c],
+            fch: vec![0.0; r * 4 * c],
+            fch_gelu: vec![0.0; r * 4 * c],
+            fcproj: vec![0.0; r * c],
+            lnf: vec![0.0; r * c],
+            logits: vec![0.0; r * vp],
+            mean: vec![0.0; r],
+            rstd: vec![0.0; r],
+            att: vec![0.0; cfg.max_seq_len],
+        }
+    }
+}
+
+/// One in-flight request's decode state.
+struct ActiveGen {
+    /// Index into the request slice (and `ServeReport::generations`).
+    idx: usize,
+    /// The token fed to the next decode step.
+    token: i32,
+    /// Its position in the context window.
+    pos: usize,
+    remaining: usize,
+    rng: Rng,
+    kv: KvCache,
+}
+
+/// Serve a set of generation requests on one offload session.
+///
+/// With `cfg.kv_cache` on, requests are decoded through the KV-cached
+/// batched engine; pass `Some(cache)` to record each occupancy's decode
+/// step once and replay it thereafter. With it off, each request is
+/// recomputed token by token over its full window (the eager baseline);
+/// `max_batch` and the plan cache are unused there.
+pub fn serve(
+    model: &mut Gpt2Model,
+    requests: &[GenRequest],
+    session: &mut OffloadSession,
+    mut cache: Option<&mut PlanCache>,
+    cfg: &ServeConfig,
+) -> Result<ServeReport> {
+    let mcfg = model.cfg;
+    if requests.is_empty() {
+        return Err(Error::config("serve needs at least one request"));
+    }
+    for (i, r) in requests.iter().enumerate() {
+        if r.prompt.is_empty() {
+            return Err(Error::config(format!("request {i}: empty prompt")));
+        }
+        if r.prompt.len() + r.max_new_tokens > mcfg.max_seq_len {
+            return Err(Error::config(format!(
+                "request {i}: prompt of {} plus {} new tokens exceeds the {}-token context",
+                r.prompt.len(),
+                r.max_new_tokens,
+                mcfg.max_seq_len
+            )));
+        }
+    }
+    let mut report = ServeReport {
+        generations: (0..requests.len())
+            .map(|id| Generation {
+                id,
+                ..Generation::default()
+            })
+            .collect(),
+        ..ServeReport::default()
+    };
+    let (hits0, misses0) = match cache.as_deref() {
+        Some(c) => (c.hits(), c.misses()),
+        None => (0, 0),
+    };
+
+    if cfg.kv_cache.enabled() {
+        serve_kv(model, requests, session, &mut cache, cfg, &mut report)?;
+    } else {
+        serve_recompute(model, requests, session, cfg, &mut report)?;
+    }
+
+    if let Some(c) = cache.as_deref() {
+        report.plan_cache_hits = c.hits() - hits0;
+        report.plan_cache_misses = c.misses() - misses0;
+    }
+    Ok(report)
+}
+
+/// The KV-cached continuously-batched decode loop.
+fn serve_kv(
+    model: &mut Gpt2Model,
+    requests: &[GenRequest],
+    session: &mut OffloadSession,
+    cache: &mut Option<&mut PlanCache>,
+    cfg: &ServeConfig,
+    report: &mut ServeReport,
+) -> Result<()> {
+    let mcfg = model.cfg;
+    let max_batch = cfg.max_batch.max(1);
+    let mut scratch = DecodeActs::new(&mcfg, max_batch);
+    let mut next_admit = 0usize;
+    let mut active: Vec<ActiveGen> = Vec::new();
+
+    loop {
+        // Admit FIFO until the batching window is full.
+        while active.len() < max_batch && next_admit < requests.len() {
+            let idx = next_admit;
+            next_admit += 1;
+            if requests[idx].max_new_tokens == 0 {
+                continue;
+            }
+            active.push(admit(model, session, &requests[idx], idx, report)?);
+        }
+        if active.is_empty() {
+            break;
+        }
+
+        // One batched decode step: optimistic replay, else record.
+        let before = session.pipeline.makespan_s();
+        run_decode_step(
+            &mcfg,
+            &model.params,
+            session,
+            cache,
+            &mut active,
+            &mut scratch,
+        )?;
+        let dt = session.pipeline.makespan_s() - before;
+        report.steps += 1;
+        report.modeled_s += dt;
+
+        // Sample every active request's next token; retire the finished.
+        let vp = mcfg.padded_vocab_size;
+        for (i, a) in active.iter_mut().enumerate() {
+            let logits = &scratch.logits[i * vp..(i + 1) * vp];
+            let next = sample_logits(logits, mcfg.vocab_size, &mut a.rng, cfg.temperature) as i32;
+            let g = &mut report.generations[a.idx];
+            g.tokens.push(next);
+            g.latencies_s.push(dt);
+            report.latencies_s.push(dt);
+            report.tokens += 1;
+            a.remaining -= 1;
+            if a.remaining == 0 {
+                g.final_logits = logits.to_vec();
+            } else {
+                a.token = next;
+                a.pos += 1;
+            }
+        }
+        active.retain(|a| a.remaining > 0);
+    }
+    Ok(())
+}
+
+/// Prefill one request: run the prompt minus its last token through the
+/// full forward (eager dispatch) and seed the request's KV-cache from
+/// the activation arena. The last prompt token is fed to the first
+/// decode step instead, so a T-token generation is exactly T decode
+/// steps — one record plus T−1 replays when the plan cache is warm.
+fn admit(
+    model: &mut Gpt2Model,
+    session: &mut OffloadSession,
+    req: &GenRequest,
+    idx: usize,
+    report: &mut ServeReport,
+) -> Result<ActiveGen> {
+    let p_len = req.prompt.len();
+    let mut kv = KvCache::new(&model.cfg);
+    if p_len > 1 {
+        let before = session.pipeline.makespan_s();
+        {
+            let mut d = MatmulDispatch::Npu(&mut *session);
+            model.forward(&mut d, &req.prompt[..p_len - 1], None, 1, p_len - 1)?;
+        }
+        kv.load_prefill(model.acts.as_ref().unwrap(), p_len - 1);
+        let dt = session.pipeline.makespan_s() - before;
+        report.modeled_s += dt;
+        report.prefill_s += dt;
+    }
+    Ok(ActiveGen {
+        idx,
+        token: req.prompt[p_len - 1],
+        pos: p_len - 1,
+        remaining: req.max_new_tokens,
+        rng: Rng::new(req.seed),
+        kv,
+    })
+}
+
+/// Run one decode step through the plan/cache machinery: optimistically
+/// replay the most recent cached plan (numerics re-run against this
+/// step's data, the frozen schedule is charged), fall back to recording
+/// on any divergence — exactly the trainer's cached-step discipline.
+fn run_decode_step(
+    mcfg: &ModelConfig,
+    params: &ParamTensors,
+    session: &mut OffloadSession,
+    cache: &mut Option<&mut PlanCache>,
+    active: &mut [ActiveGen],
+    scratch: &mut DecodeActs,
+) -> Result<()> {
+    let mut replayed = false;
+    if let Some(c) = cache.as_deref_mut() {
+        if let Some(mut replay) = session.begin_replay(c) {
+            let step = (|| -> Result<()> {
+                let mut d = MatmulDispatch::Replay {
+                    session: &mut *session,
+                    replay: &mut replay,
+                };
+                decode_step(mcfg, params, &mut d, active, scratch)
+            })();
+            match step {
+                Ok(()) => match session.finish_replay(replay) {
+                    Ok(_) => {
+                        c.record_hit();
+                        replayed = true;
+                    }
+                    Err(e) if e.is_plan_divergence() => {}
+                    Err(e) => return Err(e),
+                },
+                Err(e) if e.is_plan_divergence() => {}
+                Err(e) => return Err(e),
+            }
+        }
+    }
+    if !replayed {
+        // Record the whole step (decode is deterministic and KV writes
+        // are idempotent, so a diverged half-replayed step reruns
+        // cleanly), schedule it at once, and cache the frozen plan.
+        let mut plan = StepPlan::new();
+        {
+            let mut d = MatmulDispatch::Plan {
+                session: &mut *session,
+                plan: &mut plan,
+            };
+            decode_step(mcfg, params, &mut d, active, scratch)?;
+        }
+        session.execute(&mut plan)?;
+        if let Some(c) = cache.as_deref_mut() {
+            c.insert(session.freeze(plan)?);
+        }
+    }
+    Ok(())
+}
+
+/// The per-token transformer column over R = `active.len()` rows — the
+/// same op sequence as `Gpt2Model::forward` with attention swapped for
+/// the KV-cached [`attention::forward_step`]. 9 GEMMs on d2, all shaped
+/// by R only, so the recorded plan is stable across tokens.
+fn decode_step(
+    cfg: &ModelConfig,
+    p: &ParamTensors,
+    dispatch: &mut MatmulDispatch,
+    active: &mut [ActiveGen],
+    s: &mut DecodeActs,
+) -> Result<()> {
+    let c = cfg.channels;
+    let nh = cfg.num_heads;
+    let vp = cfg.padded_vocab_size;
+    let r = active.len();
+    let wte = p.tensor("wte");
+    let wpe = p.tensor("wpe");
+
+    // Encoder, one row per request (encoder::forward's per-row op).
+    for (i, a) in active.iter().enumerate() {
+        let out_row = &mut s.x[i * c..(i + 1) * c];
+        let wte_row = &wte[a.token as usize * c..(a.token as usize + 1) * c];
+        let wpe_row = &wpe[a.pos * c..(a.pos + 1) * c];
+        for j in 0..c {
+            out_row[j] = wte_row[j] + wpe_row[j];
+        }
+    }
+
+    for l in 0..cfg.num_layers {
+        layernorm::forward(
+            &mut s.ln1[..r * c],
+            &mut s.mean[..r],
+            &mut s.rstd[..r],
+            &s.x[..r * c],
+            p.layer("ln1w", l),
+            p.layer("ln1b", l),
+            r,
+            c,
+        );
+        matmul::forward(
+            dispatch,
+            &mut s.qkv[..r * 3 * c],
+            &s.ln1[..r * c],
+            p.layer("qkvw", l),
+            Some(p.layer("qkvb", l)),
+            r,
+            c,
+            3 * c,
+        )?;
+        for (i, a) in active.iter_mut().enumerate() {
+            let row = &s.qkv[i * 3 * c..(i + 1) * 3 * c];
+            a.kv.write(l, a.pos, &row[c..2 * c], &row[2 * c..3 * c]);
+            attention::forward_step(
+                &mut s.atty[i * c..(i + 1) * c],
+                &mut s.att,
+                row,
+                a.kv.k_rows(l, a.pos + 1),
+                a.kv.v_rows(l, a.pos + 1),
+                a.pos,
+                c,
+                nh,
+            );
+        }
+        matmul::forward(
+            dispatch,
+            &mut s.attproj[..r * c],
+            &s.atty[..r * c],
+            p.layer("attprojw", l),
+            Some(p.layer("attprojb", l)),
+            r,
+            c,
+            c,
+        )?;
+        residual::forward(&mut s.res2[..r * c], &s.x[..r * c], &s.attproj[..r * c]);
+        layernorm::forward(
+            &mut s.ln2[..r * c],
+            &mut s.mean[..r],
+            &mut s.rstd[..r],
+            &s.res2[..r * c],
+            p.layer("ln2w", l),
+            p.layer("ln2b", l),
+            r,
+            c,
+        );
+        matmul::forward(
+            dispatch,
+            &mut s.fch[..r * 4 * c],
+            &s.ln2[..r * c],
+            p.layer("fcw", l),
+            Some(p.layer("fcb", l)),
+            r,
+            c,
+            4 * c,
+        )?;
+        gelu::forward(&mut s.fch_gelu[..r * 4 * c], &s.fch[..r * 4 * c]);
+        matmul::forward(
+            dispatch,
+            &mut s.fcproj[..r * c],
+            &s.fch_gelu[..r * 4 * c],
+            p.layer("fcprojw", l),
+            Some(p.layer("fcprojb", l)),
+            r,
+            4 * c,
+            c,
+        )?;
+        residual::forward(&mut s.x[..r * c], &s.res2[..r * c], &s.fcproj[..r * c]);
+    }
+
+    layernorm::forward(
+        &mut s.lnf[..r * c],
+        &mut s.mean[..r],
+        &mut s.rstd[..r],
+        &s.x[..r * c],
+        p.tensor("lnfw"),
+        p.tensor("lnfb"),
+        r,
+        c,
+    );
+    // LM head: logits = lnf · wteᵀ (weight sharing, no bias).
+    matmul::forward(
+        dispatch,
+        &mut s.logits[..r * vp],
+        &s.lnf[..r * c],
+        wte,
+        None,
+        r,
+        c,
+        vp,
+    )?;
+    Ok(())
+}
+
+/// The eager per-token recompute baseline (`--kv-cache off`): each
+/// request alone, re-running the full growing window for every token.
+fn serve_recompute(
+    model: &mut Gpt2Model,
+    requests: &[GenRequest],
+    session: &mut OffloadSession,
+    cfg: &ServeConfig,
+    report: &mut ServeReport,
+) -> Result<()> {
+    let vp = model.cfg.padded_vocab_size;
+    for (idx, req) in requests.iter().enumerate() {
+        if req.max_new_tokens == 0 {
+            continue;
+        }
+        let mut rng = Rng::new(req.seed);
+        let mut ctx = req.prompt.clone();
+        for step in 0..req.max_new_tokens {
+            let t = ctx.len();
+            let before = session.pipeline.makespan_s();
+            {
+                let mut d = MatmulDispatch::Npu(&mut *session);
+                model.forward(&mut d, &ctx, None, 1, t)?;
+            }
+            let dt = session.pipeline.makespan_s() - before;
+            let acts = model.acts.as_ref().unwrap();
+            let logits = &acts.logits[(t - 1) * vp..t * vp];
+            let next = sample_logits(logits, model.cfg.vocab_size, &mut rng, cfg.temperature);
+            let g = &mut report.generations[idx];
+            g.tokens.push(next as i32);
+            g.latencies_s.push(dt);
+            report.latencies_s.push(dt);
+            report.tokens += 1;
+            report.steps += 1;
+            report.modeled_s += dt;
+            if step + 1 == req.max_new_tokens {
+                g.final_logits = logits.to_vec();
+            } else {
+                ctx.push(next as i32);
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::session::SessionConfig;
+
+    fn session() -> OffloadSession {
+        OffloadSession::new(SessionConfig::default(), &[]).unwrap()
+    }
+
+    #[test]
+    fn serve_rejects_empty_prompt() {
+        let mut model = Gpt2Model::new(ModelConfig::d2(), 7);
+        let reqs = [GenRequest::new(vec![], 4, 1)];
+        let err = serve(
+            &mut model,
+            &reqs,
+            &mut session(),
+            None,
+            &ServeConfig::default(),
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("empty prompt"), "{err}");
+    }
+
+    #[test]
+    fn serve_rejects_overlong_generation() {
+        let cfg = ModelConfig::d2();
+        let mut model = Gpt2Model::new(cfg, 7);
+        let reqs = [GenRequest::new(vec![1, 2], cfg.max_seq_len, 1)];
+        let err = serve(
+            &mut model,
+            &reqs,
+            &mut session(),
+            None,
+            &ServeConfig::default(),
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("context"), "{err}");
+    }
+
+    #[test]
+    fn report_percentiles_and_occupancy() {
+        let report = ServeReport {
+            tokens: 8,
+            steps: 2,
+            modeled_s: 2.0,
+            latencies_s: vec![0.4, 0.1, 0.3, 0.2],
+            ..ServeReport::default()
+        };
+        assert_eq!(report.tokens_per_s(), 4.0);
+        assert_eq!(report.mean_occupancy(), 4.0);
+        assert_eq!(report.latency_percentile_s(0.0), 0.1);
+        assert_eq!(report.latency_percentile_s(100.0), 0.4);
+        assert_eq!(report.latency_percentile_s(50.0), 0.3);
+    }
+}

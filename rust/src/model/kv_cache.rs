@@ -1,0 +1,208 @@
+//! Per-request KV-cache for decode (generation) on the offload stack.
+//!
+//! During decode only one new token enters the model per step, so the
+//! attention inputs for positions `0..pos` never change — caching each
+//! layer's K/V rows turns the per-token QKV/attention work into
+//! matrix–vector shapes (M = 1 per request; M = R for a batched step)
+//! instead of re-running the full context window. The cached rows are
+//! copied verbatim from the QKV GEMM output, and the GEMM path computes
+//! every output row independently of M (see `npu::execute_gemm`), so
+//! decode against the cache stays bit-identical to a full-window
+//! recompute forward.
+
+use std::fmt;
+use std::str::FromStr;
+
+use super::acts::Activations;
+use super::config::ModelConfig;
+
+/// Whether the serving path uses the KV-cache (`on`, the default) or
+/// falls back to per-token full-window recompute (`off`, the baseline
+/// the bit-identity suite and `bench serve` compare against).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum KvCacheMode {
+    #[default]
+    On,
+    Off,
+}
+
+impl KvCacheMode {
+    /// Is the KV-cached decode path active?
+    pub fn enabled(self) -> bool {
+        matches!(self, KvCacheMode::On)
+    }
+}
+
+impl FromStr for KvCacheMode {
+    type Err = String;
+
+    fn from_str(s: &str) -> std::result::Result<Self, Self::Err> {
+        match s {
+            "on" => Ok(KvCacheMode::On),
+            "off" => Ok(KvCacheMode::Off),
+            other => Err(format!("unknown kv-cache setting '{other}' (expected on|off)")),
+        }
+    }
+}
+
+impl fmt::Display for KvCacheMode {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            KvCacheMode::On => write!(f, "on"),
+            KvCacheMode::Off => write!(f, "off"),
+        }
+    }
+}
+
+/// Cached K/V rows for one generation request: (L, max_seq_len, C) per
+/// tensor, filled left to right as positions are prefilled or decoded.
+#[derive(Debug, Clone)]
+pub struct KvCache {
+    layers: usize,
+    capacity: usize,
+    channels: usize,
+    len: usize,
+    k: Vec<f32>,
+    v: Vec<f32>,
+}
+
+impl KvCache {
+    /// Empty cache sized for the model's full context window.
+    pub fn new(cfg: &ModelConfig) -> KvCache {
+        let (l, t, c) = (cfg.num_layers, cfg.max_seq_len, cfg.channels);
+        KvCache {
+            layers: l,
+            capacity: t,
+            channels: c,
+            len: 0,
+            k: vec![0.0; l * t * c],
+            v: vec![0.0; l * t * c],
+        }
+    }
+
+    /// Number of cached positions (the furthest written position + 1).
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Maximum positions the cache can hold (the model context window).
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Store one position's K/V rows for a layer. Idempotent: re-writing
+    /// a position (a diverged decode step being re-recorded) overwrites
+    /// with the same values and leaves `len` correct.
+    pub fn write(&mut self, layer: usize, pos: usize, k_row: &[f32], v_row: &[f32]) {
+        assert!(layer < self.layers && pos < self.capacity);
+        let c = self.channels;
+        let at = (layer * self.capacity + pos) * c;
+        self.k[at..at + c].copy_from_slice(k_row);
+        self.v[at..at + c].copy_from_slice(v_row);
+        self.len = self.len.max(pos + 1);
+    }
+
+    /// The first `count` cached K rows of a layer, contiguous (count, C).
+    pub fn k_rows(&self, layer: usize, count: usize) -> &[f32] {
+        debug_assert!(count <= self.len);
+        let c = self.channels;
+        &self.k[layer * self.capacity * c..(layer * self.capacity + count) * c]
+    }
+
+    /// The first `count` cached V rows of a layer, contiguous (count, C).
+    pub fn v_rows(&self, layer: usize, count: usize) -> &[f32] {
+        debug_assert!(count <= self.len);
+        let c = self.channels;
+        &self.v[layer * self.capacity * c..(layer * self.capacity + count) * c]
+    }
+
+    /// Seed the cache from a prefill forward's activation arena (batch
+    /// size 1): copy each layer's K/V rows for positions `0..n_pos` out
+    /// of the packed (L,1,T,3C) `qkv` activations.
+    pub fn load_prefill(&mut self, acts: &Activations, n_pos: usize) {
+        assert_eq!(acts.b, 1, "prefill caches are per request");
+        assert!(n_pos <= acts.t);
+        let c = self.channels;
+        for l in 0..self.layers {
+            for pos in 0..n_pos {
+                let row = (l * acts.t + pos) * 3 * c;
+                let k = &acts.qkv[row + c..row + 2 * c];
+                let v = &acts.qkv[row + 2 * c..row + 3 * c];
+                self.write(l, pos, k, v);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kv_cache_mode_parses_cli_forms() {
+        assert_eq!("on".parse::<KvCacheMode>().unwrap(), KvCacheMode::On);
+        assert_eq!("off".parse::<KvCacheMode>().unwrap(), KvCacheMode::Off);
+        assert!("none".parse::<KvCacheMode>().is_err());
+        assert_eq!(KvCacheMode::default(), KvCacheMode::On);
+        assert_eq!(KvCacheMode::On.to_string(), "on");
+        assert!(KvCacheMode::On.enabled());
+        assert!(!KvCacheMode::Off.enabled());
+    }
+
+    #[test]
+    fn write_then_read_rows_round_trip() {
+        let cfg = ModelConfig::d2();
+        let c = cfg.channels;
+        let mut kv = KvCache::new(&cfg);
+        assert!(kv.is_empty());
+        let k0 = vec![1.0f32; c];
+        let v0 = vec![2.0f32; c];
+        let k1 = vec![3.0f32; c];
+        let v1 = vec![4.0f32; c];
+        for l in 0..cfg.num_layers {
+            kv.write(l, 0, &k0, &v0);
+            kv.write(l, 1, &k1, &v1);
+        }
+        assert_eq!(kv.len(), 2);
+        assert_eq!(kv.capacity(), cfg.max_seq_len);
+        let k = kv.k_rows(1, 2);
+        assert_eq!(&k[..c], &k0[..]);
+        assert_eq!(&k[c..], &k1[..]);
+        let v = kv.v_rows(0, 2);
+        assert_eq!(&v[..c], &v0[..]);
+        assert_eq!(&v[c..], &v1[..]);
+        // Idempotent re-write (the divergence re-record path).
+        kv.write(0, 1, &k1, &v1);
+        assert_eq!(kv.len(), 2);
+    }
+
+    #[test]
+    fn load_prefill_copies_layer_rows_from_packed_qkv() {
+        let cfg = ModelConfig::d2();
+        let (c, t) = (cfg.channels, 4);
+        let mut acts = Activations::new(&cfg, 1, t);
+        for (i, x) in acts.qkv.iter_mut().enumerate() {
+            *x = i as f32;
+        }
+        let mut kv = KvCache::new(&cfg);
+        kv.load_prefill(&acts, 3);
+        assert_eq!(kv.len(), 3);
+        for l in 0..cfg.num_layers {
+            for pos in 0..3 {
+                let row = (l * t + pos) * 3 * c;
+                assert_eq!(
+                    kv.k_rows(l, 3)[pos * c..(pos + 1) * c],
+                    acts.qkv[row + c..row + 2 * c]
+                );
+                assert_eq!(
+                    kv.v_rows(l, 3)[pos * c..(pos + 1) * c],
+                    acts.qkv[row + 2 * c..row + 3 * c]
+                );
+            }
+        }
+    }
+}

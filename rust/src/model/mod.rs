@@ -15,11 +15,15 @@ pub mod acts;
 pub mod config;
 pub mod data;
 pub mod flops;
+pub mod generate;
+pub mod kv_cache;
 pub mod model;
 pub mod ops;
 pub mod params;
 pub mod trainer;
 
 pub use config::ModelConfig;
+pub use generate::{serve, GenRequest, Generation, ServeConfig, ServeReport};
+pub use kv_cache::{KvCache, KvCacheMode};
 pub use model::{Gpt2Model, OpTimers};
 pub use params::{ParamTensors, PARAM_NAMES};

@@ -597,30 +597,37 @@ impl Gpt2Model {
     pub fn sample_next(&self, rng: &mut Rng, temperature: f32) -> usize {
         let acts = self.acts.as_ref().expect("forward first");
         let vp = self.cfg.padded_vocab_size;
-        let v = self.cfg.vocab_size;
         let bt = acts.b * acts.t;
         let logits = &acts.logits[(bt - 1) * vp..bt * vp];
-        if temperature <= 0.0 {
-            // argmax over the real vocab
-            let mut best = 0;
-            for i in 1..v {
-                if logits[i] > logits[best] {
-                    best = i;
-                }
-            }
-            return best;
-        }
-        let maxv = logits[..v].iter().copied().fold(f32::MIN, f32::max);
-        let mut probs: Vec<f32> = logits[..v]
-            .iter()
-            .map(|&x| ((x - maxv) / temperature).exp())
-            .collect();
-        let sum: f32 = probs.iter().sum();
-        for p in probs.iter_mut() {
-            *p /= sum;
-        }
-        rng.sample_discrete(&probs)
+        sample_logits(logits, self.cfg.vocab_size, rng, temperature)
     }
+}
+
+/// Greedy/temperature sampling from one position's logits row over the
+/// real vocab `v`. Shared by [`Gpt2Model::sample_next`] and the serving
+/// engine so every generation path draws tokens with the same float op
+/// sequence (a precondition of the decode bit-identity suite).
+pub fn sample_logits(logits: &[f32], v: usize, rng: &mut Rng, temperature: f32) -> usize {
+    if temperature <= 0.0 {
+        // argmax over the real vocab
+        let mut best = 0;
+        for i in 1..v {
+            if logits[i] > logits[best] {
+                best = i;
+            }
+        }
+        return best;
+    }
+    let maxv = logits[..v].iter().copied().fold(f32::MIN, f32::max);
+    let mut probs: Vec<f32> = logits[..v]
+        .iter()
+        .map(|&x| ((x - maxv) / temperature).exp())
+        .collect();
+    let sum: f32 = probs.iter().sum();
+    for p in probs.iter_mut() {
+        *p /= sum;
+    }
+    rng.sample_discrete(&probs)
 }
 
 #[cfg(test)]

@@ -86,6 +86,67 @@ pub fn forward(
     });
 }
 
+/// Single-position decode forward against a KV-cache. `qkv_row` is one
+/// position's packed (3C,) QKV GEMM output; `k_cache` / `v_cache` hold
+/// `pos + 1` contiguous rows of C channels each (the caller writes this
+/// position's K/V into the cache first); `att` is scratch of at least
+/// `pos + 1` floats, reused per head. The float op order matches
+/// [`forward`] exactly — same dot accumulation, max, exp/sum, and value
+/// accumulation sequence — so a decoded output row is bit-identical to
+/// the same position of a full-window forward.
+pub fn forward_step(
+    out: &mut [f32],
+    att: &mut [f32],
+    qkv_row: &[f32],
+    k_cache: &[f32],
+    v_cache: &[f32],
+    pos: usize,
+    c: usize,
+    nh: usize,
+) {
+    let hs = c / nh;
+    let scale = 1.0 / (hs as f32).sqrt();
+    for h in 0..nh {
+        let q = &qkv_row[h * hs..h * hs + hs];
+        // Scores against all cached keys <= pos.
+        let mut maxval = f32::MIN;
+        for t2 in 0..=pos {
+            let k = &k_cache[t2 * c + h * hs..t2 * c + h * hs + hs];
+            let mut dot = 0.0f32;
+            for i in 0..hs {
+                dot += q[i] * k[i];
+            }
+            let v = dot * scale;
+            att[t2] = v;
+            if v > maxval {
+                maxval = v;
+            }
+        }
+        // Softmax over the causal prefix (in place: same value sequence
+        // as the separate preatt/att buffers of the full forward).
+        let mut sum = 0.0f32;
+        for t2 in 0..=pos {
+            let e = (att[t2] - maxval).exp();
+            att[t2] = e;
+            sum += e;
+        }
+        let inv = if sum == 0.0 { 0.0 } else { 1.0 / sum };
+        for a in att[..=pos].iter_mut() {
+            *a *= inv;
+        }
+        // Weighted sum of cached values.
+        let o = &mut out[h * hs..h * hs + hs];
+        o.fill(0.0);
+        for t2 in 0..=pos {
+            let v = &v_cache[t2 * c + h * hs..t2 * c + h * hs + hs];
+            let a = att[t2];
+            for i in 0..hs {
+                o[i] += a * v[i];
+            }
+        }
+    }
+}
+
 /// Backward: accumulates dqkv from dout using cached att (llm.c pattern:
 /// dpreatt/datt are scratch).
 pub fn backward(
@@ -211,6 +272,42 @@ mod tests {
                     assert_eq!(row[t2], 0.0);
                 }
             }
+        }
+    }
+
+    #[test]
+    fn forward_step_is_bit_identical_to_full_forward() {
+        let (b, t, c, nh) = (1, 6, 16, 2);
+        let mut rng = Rng::new(91);
+        let qkv = prop::gen::normal_vec(&mut rng, b * t * 3 * c);
+        let mut full = vec![0.0; b * t * c];
+        let mut pre = vec![0.0; b * nh * t * t];
+        let mut att = vec![0.0; b * nh * t * t];
+        forward(&mut full, &mut pre, &mut att, &qkv, b, t, c, nh);
+
+        // Build the caches the way decode does: one K/V row per position,
+        // copied from the packed QKV rows.
+        let mut k_cache = vec![0.0f32; t * c];
+        let mut v_cache = vec![0.0f32; t * c];
+        for pos in 0..t {
+            let row = pos * 3 * c;
+            k_cache[pos * c..(pos + 1) * c].copy_from_slice(&qkv[row + c..row + 2 * c]);
+            v_cache[pos * c..(pos + 1) * c].copy_from_slice(&qkv[row + 2 * c..row + 3 * c]);
+        }
+        let mut out = vec![0.0f32; c];
+        let mut scratch = vec![0.0f32; t];
+        for pos in 0..t {
+            forward_step(
+                &mut out,
+                &mut scratch,
+                &qkv[pos * 3 * c..(pos + 1) * 3 * c],
+                &k_cache[..(pos + 1) * c],
+                &v_cache[..(pos + 1) * c],
+                pos,
+                c,
+                nh,
+            );
+            assert_eq!(out, full[pos * c..(pos + 1) * c], "position {pos}");
         }
     }
 

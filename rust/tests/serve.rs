@@ -1,0 +1,173 @@
+//! Serving-engine integration: KV-cached decode bit-identity against the
+//! full-window recompute baseline across prompt/decode-length
+//! combinations, batched multi-request decode bit-identity against solo
+//! runs (with a ×8 determinism repeat), plan-cache decode counters
+//! (record once, replay tokens−1 times), and mid-stream occupancy
+//! changes as recoverable divergences — the decode mirror of the
+//! training-path coverage in `rust/tests/plan.rs`.
+
+use xdna_repro::coordinator::plan::PlanCache;
+use xdna_repro::coordinator::scheduler::SchedulePolicy;
+use xdna_repro::coordinator::session::{OffloadSession, QueueDepth, SessionConfig};
+use xdna_repro::model::generate::{serve, GenRequest, Generation, ServeConfig};
+use xdna_repro::model::kv_cache::KvCacheMode;
+use xdna_repro::model::{Gpt2Model, ModelConfig};
+
+const MODEL_SEED: u64 = 71;
+
+fn model() -> Gpt2Model {
+    Gpt2Model::new(ModelConfig::d2(), MODEL_SEED)
+}
+
+fn session() -> OffloadSession {
+    OffloadSession::new(
+        SessionConfig {
+            depth: QueueDepth(2),
+            schedule: SchedulePolicy::BatchBySize,
+            ..Default::default()
+        },
+        &[],
+    )
+    .unwrap()
+}
+
+fn prompt(len: usize, salt: i32) -> Vec<i32> {
+    (0..len as i32).map(|i| (i * 7 + salt) % 256).collect()
+}
+
+/// Serve one configuration on a fresh model + session + plan cache.
+fn run(requests: &[GenRequest], kv: KvCacheMode, max_batch: usize) -> Vec<Generation> {
+    let mut model = model();
+    let mut session = session();
+    let mut cache = PlanCache::new();
+    let cfg = ServeConfig {
+        max_batch,
+        temperature: 1.0,
+        kv_cache: kv,
+    };
+    let cache_ref = kv.enabled().then_some(&mut cache);
+    serve(&mut model, requests, &mut session, cache_ref, &cfg)
+        .unwrap()
+        .generations
+}
+
+fn assert_same_generations(a: &[Generation], b: &[Generation], what: &str) {
+    assert_eq!(a.len(), b.len());
+    for (ga, gb) in a.iter().zip(b) {
+        assert_eq!(ga.tokens, gb.tokens, "{what}: request {} token stream", ga.id);
+        assert!(!ga.final_logits.is_empty(), "{what}: request {} probe empty", ga.id);
+        // Bit-identity probe: the exact f32 logits row the final token
+        // was sampled from.
+        assert_eq!(
+            ga.final_logits, gb.final_logits,
+            "{what}: request {} final logits row",
+            ga.id
+        );
+    }
+}
+
+/// KV-cached decode must be bit-identical to recomputing the full window
+/// per token, across short/long prompts and decode lengths (including a
+/// prompt of one token — no prefill at all).
+#[test]
+fn kv_decode_bit_identical_to_recompute_across_shapes() {
+    for (p_len, new_tokens) in [(1usize, 6usize), (4, 8), (9, 12)] {
+        let requests = [GenRequest::new(prompt(p_len, 3), new_tokens, 1234)];
+        let kv = run(&requests, KvCacheMode::On, 1);
+        let recompute = run(&requests, KvCacheMode::Off, 1);
+        assert_eq!(kv[0].tokens.len(), new_tokens);
+        assert_same_generations(
+            &kv,
+            &recompute,
+            &format!("prompt {p_len} x {new_tokens} tokens"),
+        );
+    }
+}
+
+/// Batched multi-request decode must be bit-identical to serving each
+/// request alone: per-request determinism under interleaving. Repeated
+/// ×8 to catch any run-to-run nondeterminism in the batched path.
+#[test]
+fn batched_decode_bit_identical_to_solo_runs_x8() {
+    let requests = [
+        GenRequest::new(prompt(1, 5), 7, 21),
+        GenRequest::new(prompt(4, 11), 10, 22),
+        GenRequest::new(prompt(6, 2), 5, 23),
+    ];
+    // Each request served alone (batch window 1, its own session).
+    let solo: Vec<Generation> = requests
+        .iter()
+        .map(|r| run(std::slice::from_ref(r), KvCacheMode::On, 1).remove(0))
+        .collect();
+    let first = run(&requests, KvCacheMode::On, 3);
+    for (b, s) in first.iter().zip(&solo) {
+        assert_eq!(b.tokens, s.tokens, "request {} batched vs solo tokens", b.id);
+        assert_eq!(b.final_logits, s.final_logits, "request {} batched vs solo logits", b.id);
+    }
+    for repeat in 0..8 {
+        let again = run(&requests, KvCacheMode::On, 3);
+        assert_same_generations(&again, &first, &format!("repeat {repeat}"));
+    }
+}
+
+/// A T-token decode stream records its plan exactly once and replays it
+/// T−1 times: hits == tokens − 1.
+#[test]
+fn decode_stream_records_once_and_replays_thereafter() {
+    let tokens = 9;
+    let mut model = model();
+    let mut session = session();
+    let mut cache = PlanCache::new();
+    let requests = [GenRequest::new(prompt(1, 9), tokens, 321)];
+    let cfg = ServeConfig {
+        max_batch: 1,
+        temperature: 1.0,
+        kv_cache: KvCacheMode::On,
+    };
+    let report = serve(&mut model, &requests, &mut session, Some(&mut cache), &cfg).unwrap();
+    assert_eq!(report.tokens, tokens);
+    assert_eq!(report.steps, tokens, "one decode step per generated token");
+    assert_eq!(report.plan_cache_misses, 1, "the decode plan records exactly once");
+    assert_eq!(
+        report.plan_cache_hits as usize,
+        tokens - 1,
+        "every step after the first replays"
+    );
+    assert_eq!((cache.hits() as usize, cache.misses() as usize), (tokens - 1, 1));
+    assert_eq!(report.latencies_s.len(), tokens);
+}
+
+/// When a request retires mid-stream the batch occupancy drops and the
+/// cached plan's GEMM shapes change: that must surface as a recoverable
+/// divergence (a second record), never an error.
+#[test]
+fn occupancy_change_is_a_recoverable_rerecord() {
+    let mut model = model();
+    let mut session = session();
+    let mut cache = PlanCache::new();
+    let requests = [
+        GenRequest::new(prompt(1, 4), 3, 31),
+        GenRequest::new(prompt(1, 6), 6, 32),
+    ];
+    let cfg = ServeConfig {
+        max_batch: 2,
+        temperature: 1.0,
+        kv_cache: KvCacheMode::On,
+    };
+    let report = serve(&mut model, &requests, &mut session, Some(&mut cache), &cfg).unwrap();
+    assert_eq!(report.tokens, 3 + 6);
+    // 3 steps at occupancy 2, then 3 at occupancy 1.
+    assert_eq!(report.steps, 6);
+    assert_eq!(
+        report.plan_cache_misses, 2,
+        "one record per occupancy bucket (the drop re-records)"
+    );
+    assert_eq!(report.plan_cache_hits, 4, "all other steps replay");
+    // The re-recorded stream is still bit-identical per request: serve
+    // the same requests solo and compare.
+    for (i, req) in requests.iter().enumerate() {
+        let solo = run(std::slice::from_ref(req), KvCacheMode::On, 1).remove(0);
+        assert_eq!(report.generations[i].tokens, solo.tokens, "request {i}");
+        assert_eq!(report.generations[i].final_logits, solo.final_logits, "request {i}");
+    }
+}
