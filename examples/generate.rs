@@ -61,6 +61,7 @@ fn main() -> xdna_repro::Result<()> {
         max_batch: 4,
         temperature: 0.7,
         kv_cache: KvCacheMode::On,
+        ..Default::default()
     };
     let report = serve(
         &mut model,

@@ -1,0 +1,506 @@
+//! `bench arbiter` — modeled multi-tenant pricing of the device arbiter.
+//!
+//! Prices a four-rung coexistence ladder on the shared shim-column
+//! array: a finetune tenant alone, a serving tenant alone, the two
+//! together under disjoint `fixed:2` leases, and four serving tenants
+//! under `fixed:1` leases. Every rung runs the *real* stack — the
+//! trainer's plan-cached step loop and the KV-cached serving engine on
+//! their own [`OffloadSession`]s, attached to one [`DeviceArbiter`] —
+//! so the table reports the arbiter's own accounting: per-tenant
+//! throughput, makespan share, re-entry reconfigurations charged vs
+//! amortized, lease-wait time, and Jain's fairness index.
+//!
+//! The headline claim mirrors the training/serving benches: sharing the
+//! array prices strictly better than time-slicing it. A time-sliced
+//! device runs the finetune and the server back to back (their solo
+//! makespans add); the arbiter overlaps their disjoint column
+//! partitions, so the shared makespan tracks the *longer* tenant chain
+//! plus the cross-tenant barrier seconds — strictly less than the sum.
+
+use crate::coordinator::arbiter::{ColumnQuota, DeviceArbiter};
+use crate::coordinator::executor::ExecutorMode;
+use crate::coordinator::plan::PlanCache;
+use crate::coordinator::scheduler::SchedulePolicy;
+use crate::coordinator::session::{OffloadSession, QueueDepth, SessionConfig, ShardPolicy, Shards};
+use crate::model::generate::{serve, GenRequest, ServeConfig};
+use crate::model::trainer::{train_synthetic, TrainBackend, TrainConfig};
+use crate::model::ModelConfig;
+use crate::model::Gpt2Model;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// The benchmark's fixed d2 workloads.
+pub const TRAIN_EPOCHS: usize = 2;
+pub const TRAIN_STEPS_PER_EPOCH: usize = 4;
+pub const TRAIN_BATCH: usize = 2;
+pub const TRAIN_SEQ: usize = 16;
+pub const SERVE_REQUESTS: usize = 8;
+pub const SERVE_PROMPT_TOKENS: usize = 4;
+pub const SERVE_NEW_TOKENS: usize = 12;
+const MODEL_SEED: u64 = 11;
+const TRAIN_SEED: u64 = 17;
+const REQUEST_SEED: u64 = 2011;
+const QUEUE_DEPTH: usize = 2;
+
+/// One tenant's line in a ladder rung.
+#[derive(Debug, Clone)]
+pub struct TenantRow {
+    pub name: String,
+    pub quota: String,
+    pub lease_width: usize,
+    /// Workload units completed: trained tokens for the finetune tenant,
+    /// generated tokens for a serving tenant. Fixed per workload, so the
+    /// same units are compared across rungs.
+    pub units: f64,
+    pub units_label: &'static str,
+    /// `units / done_s` — the tenant's modeled throughput against its own
+    /// completion time on the shared schedule.
+    pub throughput: f64,
+    pub busy_s: f64,
+    pub done_s: f64,
+    pub makespan_share: f64,
+    pub reconfigs_charged: u64,
+    pub reconfigs_amortized: u64,
+    pub wait_for_lease_s: f64,
+}
+
+/// One rung of the coexistence ladder.
+#[derive(Debug, Clone)]
+pub struct ArbiterRow {
+    pub label: &'static str,
+    pub makespan_s: f64,
+    pub utilization: f64,
+    pub jain_index: f64,
+    /// Total workload units across the rung's tenants.
+    pub units: f64,
+    /// `units / makespan_s`.
+    pub aggregate_throughput: f64,
+    pub tenants: Vec<TenantRow>,
+}
+
+fn session(width: usize) -> OffloadSession {
+    OffloadSession::new(
+        SessionConfig {
+            depth: QueueDepth(QUEUE_DEPTH),
+            shards: ShardPolicy::Fixed(Shards(width)),
+            schedule: SchedulePolicy::BatchBySize,
+            ..Default::default()
+        },
+        &[],
+    )
+    .expect("session with no preloaded sizes always opens")
+}
+
+/// The serving workload, optionally a slice of the mix for one of N
+/// tenants (requests are dealt round-robin so every tenant sees the same
+/// prompt-length profile).
+fn request_mix(vocab: usize, tenant: usize, tenants: usize) -> Vec<GenRequest> {
+    let mut rng = Rng::new(REQUEST_SEED);
+    (0..SERVE_REQUESTS)
+        .map(|i| {
+            let prompt: Vec<i32> = (0..SERVE_PROMPT_TOKENS)
+                .map(|_| rng.below(vocab) as i32)
+                .collect();
+            GenRequest::new(prompt, SERVE_NEW_TOKENS, REQUEST_SEED ^ (i as u64 + 1))
+        })
+        .enumerate()
+        .filter(|(i, _)| i % tenants == tenant)
+        .map(|(_, r)| r)
+        .collect()
+}
+
+/// Run the finetune workload as one tenant; returns (units, label).
+fn run_train_tenant(
+    arbiter: &DeviceArbiter,
+    name: &str,
+    quota: ColumnQuota,
+    width: usize,
+) -> (f64, &'static str) {
+    let mut sess = session(width);
+    sess.attach_arbiter(arbiter, name, quota)
+        .expect("the ladder's quotas fit the array");
+    let mut cache = PlanCache::new();
+    let tc = TrainConfig {
+        batch: TRAIN_BATCH,
+        seq: TRAIN_SEQ,
+        epochs: TRAIN_EPOCHS,
+        steps_per_epoch: TRAIN_STEPS_PER_EPOCH,
+        ..Default::default()
+    };
+    train_synthetic(
+        ModelConfig::d2(),
+        &tc,
+        &mut TrainBackend::CpuNpuPlanned {
+            session: &mut sess,
+            cache: Some(&mut cache),
+            executor: ExecutorMode::Sync,
+        },
+        TRAIN_SEED,
+    )
+    .expect("the d2 finetune workload always trains");
+    let steps = TRAIN_EPOCHS * TRAIN_STEPS_PER_EPOCH;
+    ((steps * TRAIN_BATCH * TRAIN_SEQ) as f64, "train tok")
+}
+
+/// Run a slice of the serving workload as one tenant.
+fn run_serve_tenant(
+    arbiter: &DeviceArbiter,
+    name: &str,
+    quota: ColumnQuota,
+    width: usize,
+    tenant: usize,
+    tenants: usize,
+) -> (f64, &'static str) {
+    let cfg = ModelConfig::d2();
+    let mut sess = session(width);
+    sess.attach_arbiter(arbiter, name, quota)
+        .expect("the ladder's quotas fit the array");
+    let mut model = Gpt2Model::new(cfg, MODEL_SEED);
+    let mut cache = PlanCache::new();
+    let requests = request_mix(cfg.vocab_size, tenant, tenants);
+    let serve_cfg = ServeConfig {
+        temperature: 1.0,
+        ..Default::default()
+    };
+    let report = serve(&mut model, &requests, &mut sess, Some(&mut cache), &serve_cfg)
+        .expect("the d2 request mix always fits the context window");
+    (report.tokens as f64, "decode tok")
+}
+
+/// Assemble a rung: run the tenants against one fresh arbiter, then read
+/// the arbiter's report back into rows.
+fn rung<F>(label: &'static str, run: F) -> ArbiterRow
+where
+    F: FnOnce(&DeviceArbiter) -> Vec<(String, f64, &'static str)>,
+{
+    let arbiter = DeviceArbiter::new();
+    let units_by_tenant = run(&arbiter);
+    let report = arbiter.report();
+    let tenants: Vec<TenantRow> = report
+        .tenants
+        .iter()
+        .map(|t| {
+            let entry = units_by_tenant
+                .iter()
+                .find(|(n, _, _)| *n == t.name)
+                .expect("every attached tenant ran a workload");
+            let (units, units_label) = (entry.1, entry.2);
+            TenantRow {
+                name: t.name.clone(),
+                quota: t.quota.to_string(),
+                lease_width: t.lease_width,
+                units,
+                units_label,
+                throughput: if t.done_s > 0.0 { units / t.done_s } else { 0.0 },
+                busy_s: t.busy_s,
+                done_s: t.done_s,
+                makespan_share: t.makespan_share,
+                reconfigs_charged: t.reconfigs_charged,
+                reconfigs_amortized: t.reconfigs_amortized,
+                wait_for_lease_s: t.wait_for_lease_s,
+            }
+        })
+        .collect();
+    let units: f64 = tenants.iter().map(|t| t.units).sum();
+    ArbiterRow {
+        label,
+        makespan_s: report.makespan_s,
+        utilization: report.utilization,
+        jain_index: report.jain_index,
+        units,
+        aggregate_throughput: if report.makespan_s > 0.0 {
+            units / report.makespan_s
+        } else {
+            0.0
+        },
+        tenants,
+    }
+}
+
+/// All four rungs of the ladder.
+pub fn rows() -> Vec<ArbiterRow> {
+    vec![
+        rung("solo-train", |arb| {
+            let (u, l) = run_train_tenant(arb, "finetune", ColumnQuota::FairShare, 4);
+            vec![("finetune".to_string(), u, l)]
+        }),
+        rung("solo-serve", |arb| {
+            let (u, l) = run_serve_tenant(arb, "server", ColumnQuota::FairShare, 4, 0, 1);
+            vec![("server".to_string(), u, l)]
+        }),
+        rung("train+serve shared", |arb| {
+            let (ut, lt) = run_train_tenant(arb, "finetune", ColumnQuota::Fixed(2), 2);
+            let (us, ls) = run_serve_tenant(arb, "server", ColumnQuota::Fixed(2), 2, 0, 1);
+            vec![
+                ("finetune".to_string(), ut, lt),
+                ("server".to_string(), us, ls),
+            ]
+        }),
+        rung("4-way serve", |arb| {
+            (0..4)
+                .map(|i| {
+                    let name = format!("server-{i}");
+                    let (u, l) =
+                        run_serve_tenant(arb, &name, ColumnQuota::Fixed(1), 1, i, 4);
+                    (name, u, l)
+                })
+                .collect()
+        }),
+    ]
+}
+
+/// The headline comparison: the shared rung's makespan against
+/// time-slicing the two solo rungs (their makespans add).
+pub fn shared_vs_time_sliced(all: &[ArbiterRow]) -> (f64, f64) {
+    let solo_train = all.iter().find(|r| r.label == "solo-train").unwrap();
+    let solo_serve = all.iter().find(|r| r.label == "solo-serve").unwrap();
+    let shared = all.iter().find(|r| r.label == "train+serve shared").unwrap();
+    (shared.makespan_s, solo_train.makespan_s + solo_serve.makespan_s)
+}
+
+/// Print the paper-style table.
+pub fn print() {
+    println!(
+        "\n=== Multi-tenancy: N sessions on one shim-column array (d2, arbiter pricing) ==="
+    );
+    println!(
+        "{:>20} {:>10} {:>8} {:>6} {:>11} {:>9} {:>7} {:>9} {:>5} {:>9}",
+        "rung", "tenant", "quota", "width", "units/s", "share", "rc/am", "wait ms", "jain", "util"
+    );
+    let all = rows();
+    for r in &all {
+        for t in &r.tenants {
+            println!(
+                "{:>20} {:>10} {:>8} {:>6} {:>11.1} {:>8.1}% {:>5}/{} {:>9.3} {:>5.2} {:>8.1}%",
+                r.label,
+                t.name,
+                t.quota,
+                t.lease_width,
+                t.throughput,
+                t.makespan_share * 100.0,
+                t.reconfigs_charged,
+                t.reconfigs_amortized,
+                t.wait_for_lease_s * 1e3,
+                r.jain_index,
+                r.utilization * 100.0,
+            );
+        }
+    }
+    let (shared, sliced) = shared_vs_time_sliced(&all);
+    println!(
+        "(train+serve shared makespan {:.3}s vs {:.3}s time-sliced — {:.2}x; \
+         disjoint fixed leases overlap, barriers stay array-wide)",
+        shared,
+        sliced,
+        sliced / shared
+    );
+    let four = all.iter().find(|r| r.label == "4-way serve").unwrap();
+    println!(
+        "(4-way serve: every tenant within its fixed:1 quota, Jain fairness {:.3})",
+        four.jain_index
+    );
+}
+
+/// Version of the `bench arbiter --json` report shape. Bump whenever a
+/// key is renamed, moved, or re-typed so downstream consumers of the CI
+/// artifact can dispatch on it across PRs.
+///
+/// * v1 — top-level `schema_version`, `generator`, a `config` echo of
+///   both workloads, `rows` carrying per-rung makespan / utilization /
+///   Jain index with nested per-tenant accounting, and a `claim` object
+///   comparing the shared rung against time-slicing the solo rungs.
+pub const SCHEMA_VERSION: u64 = 1;
+
+fn tenant_to_json(t: &TenantRow) -> Json {
+    let mut o = std::collections::BTreeMap::new();
+    o.insert("name".to_string(), Json::str(t.name.as_str()));
+    o.insert("quota".to_string(), Json::str(t.quota.as_str()));
+    o.insert("lease_width".to_string(), Json::Num(t.lease_width as f64));
+    o.insert("units".to_string(), Json::Num(t.units));
+    o.insert("units_label".to_string(), Json::str(t.units_label));
+    o.insert("throughput".to_string(), Json::Num(t.throughput));
+    o.insert("busy_s".to_string(), Json::Num(t.busy_s));
+    o.insert("done_s".to_string(), Json::Num(t.done_s));
+    o.insert("makespan_share".to_string(), Json::Num(t.makespan_share));
+    o.insert(
+        "reconfigs_charged".to_string(),
+        Json::Num(t.reconfigs_charged as f64),
+    );
+    o.insert(
+        "reconfigs_amortized".to_string(),
+        Json::Num(t.reconfigs_amortized as f64),
+    );
+    o.insert("wait_for_lease_s".to_string(), Json::Num(t.wait_for_lease_s));
+    Json::Obj(o)
+}
+
+fn row_to_json(r: &ArbiterRow) -> Json {
+    let mut o = std::collections::BTreeMap::new();
+    o.insert("label".to_string(), Json::str(r.label));
+    o.insert("makespan_s".to_string(), Json::Num(r.makespan_s));
+    o.insert("utilization".to_string(), Json::Num(r.utilization));
+    o.insert("jain_index".to_string(), Json::Num(r.jain_index));
+    o.insert("units".to_string(), Json::Num(r.units));
+    o.insert(
+        "aggregate_throughput".to_string(),
+        Json::Num(r.aggregate_throughput),
+    );
+    o.insert(
+        "tenants".to_string(),
+        Json::Arr(r.tenants.iter().map(tenant_to_json).collect()),
+    );
+    Json::Obj(o)
+}
+
+/// The full report as JSON — the CI arbiter step uploads this as a build
+/// artifact. Self-describing: see [`SCHEMA_VERSION`].
+pub fn json_report() -> Json {
+    let mut config = std::collections::BTreeMap::new();
+    config.insert("model".to_string(), Json::str("d2"));
+    config.insert("train_epochs".to_string(), Json::Num(TRAIN_EPOCHS as f64));
+    config.insert(
+        "train_steps_per_epoch".to_string(),
+        Json::Num(TRAIN_STEPS_PER_EPOCH as f64),
+    );
+    config.insert("train_batch".to_string(), Json::Num(TRAIN_BATCH as f64));
+    config.insert("train_seq".to_string(), Json::Num(TRAIN_SEQ as f64));
+    config.insert("serve_requests".to_string(), Json::Num(SERVE_REQUESTS as f64));
+    config.insert(
+        "serve_prompt_tokens".to_string(),
+        Json::Num(SERVE_PROMPT_TOKENS as f64),
+    );
+    config.insert(
+        "serve_new_tokens".to_string(),
+        Json::Num(SERVE_NEW_TOKENS as f64),
+    );
+    config.insert("queue_depth".to_string(), Json::Num(QUEUE_DEPTH as f64));
+    config.insert("schedule".to_string(), Json::str("batch-by-size"));
+
+    let all = rows();
+    let (shared, sliced) = shared_vs_time_sliced(&all);
+    let mut claim = std::collections::BTreeMap::new();
+    claim.insert("shared_makespan_s".to_string(), Json::Num(shared));
+    claim.insert("time_sliced_makespan_s".to_string(), Json::Num(sliced));
+    claim.insert("speedup".to_string(), Json::Num(sliced / shared));
+
+    let mut root = std::collections::BTreeMap::new();
+    root.insert(
+        "schema_version".to_string(),
+        Json::Num(SCHEMA_VERSION as f64),
+    );
+    root.insert(
+        "generator".to_string(),
+        Json::str("xdna-repro bench arbiter"),
+    );
+    root.insert("config".to_string(), Json::Obj(config));
+    root.insert("rows".to_string(), Json::Arr(all.iter().map(row_to_json).collect()));
+    root.insert("claim".to_string(), Json::Obj(claim));
+    Json::Obj(root)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sharing_the_array_beats_time_slicing_it() {
+        let all = rows();
+        let (shared, sliced) = shared_vs_time_sliced(&all);
+        // The acceptance bar: the arbitrated coexistence schedule is
+        // strictly better than running the two solo workloads back to
+        // back. Disjoint fixed:2 leases overlap the tenants' column
+        // chains; only barrier (reconfiguration) seconds cross the
+        // partition, and those are a strict subset of each solo makespan.
+        assert!(
+            shared < 0.95 * sliced,
+            "shared {shared}s vs time-sliced {sliced}s"
+        );
+        let shared_row = all.iter().find(|r| r.label == "train+serve shared").unwrap();
+        let sliced_throughput = shared_row.units / sliced;
+        assert!(
+            shared_row.aggregate_throughput > sliced_throughput,
+            "{} units/s shared vs {} time-sliced",
+            shared_row.aggregate_throughput,
+            sliced_throughput
+        );
+        // Both tenants really ran on the shared arbiter.
+        assert_eq!(shared_row.tenants.len(), 2);
+        for t in &shared_row.tenants {
+            assert!(t.units > 0.0 && t.busy_s > 0.0, "{t:?}");
+        }
+    }
+
+    #[test]
+    fn four_way_serve_stays_within_quota_and_fair() {
+        let all = rows();
+        let four = all.iter().find(|r| r.label == "4-way serve").unwrap();
+        assert_eq!(four.tenants.len(), 4);
+        for t in &four.tenants {
+            assert_eq!(t.quota, "fixed:1");
+            assert_eq!(t.lease_width, 1, "{}: windows wider than the lease", t.name);
+            assert!(t.units > 0.0);
+        }
+        // Four identical serving tenants on identical leases: service
+        // rates must come out nearly even.
+        assert!(
+            four.jain_index >= 0.9,
+            "Jain index {} across the 4-way rung",
+            four.jain_index
+        );
+        // Shares partition the utilization (each tenant occupies its own
+        // column; barriers are charged to their causer).
+        let share_sum: f64 = four.tenants.iter().map(|t| t.makespan_share).sum();
+        assert!((share_sum - four.utilization).abs() < 1e-9);
+    }
+
+    #[test]
+    fn json_report_is_self_describing_and_round_trips() {
+        let j = json_report();
+        assert_eq!(
+            j.get("schema_version").unwrap().as_usize().unwrap(),
+            SCHEMA_VERSION as usize
+        );
+        assert_eq!(
+            j.get("generator").unwrap().as_str().unwrap(),
+            "xdna-repro bench arbiter"
+        );
+        let config = j.get("config").unwrap();
+        assert_eq!(config.get("model").unwrap().as_str().unwrap(), "d2");
+        let rows = j.get("rows").unwrap().as_arr().unwrap();
+        assert_eq!(rows.len(), 4);
+        for r in rows {
+            let r = r.as_obj().unwrap();
+            for key in [
+                "label",
+                "makespan_s",
+                "utilization",
+                "jain_index",
+                "units",
+                "aggregate_throughput",
+                "tenants",
+            ] {
+                assert!(r.contains_key(key), "row missing {key}");
+            }
+            for t in r["tenants"].as_arr().unwrap() {
+                let t = t.as_obj().unwrap();
+                for key in [
+                    "name",
+                    "quota",
+                    "lease_width",
+                    "units",
+                    "throughput",
+                    "makespan_share",
+                    "reconfigs_charged",
+                    "reconfigs_amortized",
+                    "wait_for_lease_s",
+                ] {
+                    assert!(t.contains_key(key), "tenant missing {key}");
+                }
+            }
+        }
+        let claim = j.get("claim").unwrap();
+        assert!(claim.get("speedup").unwrap().as_f64().unwrap() > 1.0);
+        // The compact serialization round-trips (what CI uploads).
+        assert_eq!(Json::parse(&j.to_string()).unwrap(), j);
+    }
+}

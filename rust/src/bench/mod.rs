@@ -6,6 +6,7 @@
 //! and prints a paper-style table with the paper's own numbers alongside.
 
 pub mod accuracy;
+pub mod arbiter;
 pub mod fig6;
 pub mod fig7;
 pub mod fig8;

@@ -87,6 +87,7 @@ pub fn run_configuration(label: &'static str, kv: KvCacheMode, max_batch: usize)
         max_batch,
         temperature: TEMPERATURE,
         kv_cache: kv,
+        ..Default::default()
     };
     let cache_ref = kv.enabled().then_some(&mut cache);
     let report = serve(&mut model, &requests, &mut session, cache_ref, &serve_cfg)

@@ -1,0 +1,776 @@
+//! [`DeviceArbiter`] — N offload sessions share the simulated shim-column
+//! array.
+//!
+//! Every rung below this one assumes a single [`super::session::OffloadSession`]
+//! owns all four simulated shim columns. The arbiter generalizes that to a
+//! *fleet*: it owns the shared array-time model (one modeled cursor per
+//! physical column, the per-column programmed strip variant, and a copy of
+//! the [`TimingModel`] for pricing cross-tenant reconfiguration) and leases
+//! column partitions to attached sessions under per-tenant
+//! [`ColumnQuota`]s.
+//!
+//! The numerics seam is deliberately untouched: each session keeps its own
+//! [`crate::coordinator::device::ComputeDevice`] box and its own local
+//! [`crate::npu::timing::PipelineTimeline`], so an arbitrated session's
+//! GEMM results, stage accounting, and local schedule are bit-for-bit what
+//! the solo session produces (the Figure-7 serial fidelity of a depth-1
+//! unsharded FIFO session included). What the arbiter adds is a *shared*
+//! modeled timeline on top: sessions report **windows** — the deltas of
+//! their local timeline between two charge points (a step execute, a
+//! cached-step replay, an eager wait) — and the arbiter places those
+//! windows onto the shared column cursors.
+//!
+//! Placement model, per window:
+//!
+//! * a tenant's windows chain serially (a session is single-threaded), so
+//!   a window's staging starts at the tenant's previous completion time
+//!   plus the staging the local schedule could not hide (`exposed_pre`);
+//! * device spans land on the tenant's *leased* physical columns — the
+//!   dedicated home columns of a [`ColumnQuota::Fixed`] tenant, or the
+//!   least-loaded free columns for a [`ColumnQuota::FairShare`] tenant —
+//!   and each column cursor serializes its spans, so two tenants with
+//!   disjoint leases genuinely overlap while tenants contending for a
+//!   column queue behind each other (the queueing delay is accounted as
+//!   `wait_for_lease_s`);
+//! * a reconfiguration is an **array-wide barrier**: every column stalls
+//!   to a common point and advances together, so one tenant's variant
+//!   switch is priced across all tenants (`ISSUE`: reconfig priced across
+//!   tenants). On top of the window's own recorded reconfigurations, the
+//!   arbiter adds a *re-entry* reconfiguration whenever a tenant arrives
+//!   at columns another tenant left programmed to a different strip
+//!   variant — and skips it, counting the switch as **amortized**, when
+//!   the variants agree (steady-state serving fleets running the same
+//!   model never re-pay each other's programming).
+//!
+//! Windows are not placed in arrival order but drained by **deficit
+//! round-robin** across tenants: each round every backlogged tenant's
+//! deficit grows by one quantum (the largest queued head-window cost, so
+//! every round makes progress) and the tenant places queued windows while
+//! its deficit covers their device cost. Cheap windows (a serving
+//! tenant's decode steps) therefore interleave fairly between an
+//! expensive tenant's training steps instead of queueing behind a whole
+//! epoch.
+//!
+//! Accounting surfaces per tenant as a [`TenantReport`] (columns-occupied
+//! integral, makespan share, reconfigurations charged vs amortized,
+//! lease-wait) and per array as an [`ArbiterReport`] with Jain's fairness
+//! index over the tenants' service rates.
+
+use std::collections::VecDeque;
+use std::fmt;
+use std::str::FromStr;
+use std::sync::{Arc, Mutex, MutexGuard};
+
+use crate::gemm::sizes::ProblemSize;
+use crate::gemm::tiling::GRID_COLS;
+use crate::npu::timing::TimingModel;
+use crate::util::error::{Error, Result};
+
+/// How many of the array's shim columns a tenant may occupy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ColumnQuota {
+    /// `n` dedicated columns, disjoint from every other `Fixed` tenant.
+    /// The attached session's shard width must fit in `n`.
+    Fixed(usize),
+    /// Time-share the non-dedicated columns: each window lands on the
+    /// least-loaded free columns, and the deficit round-robin keeps
+    /// backlogged fair-share tenants' service balanced.
+    FairShare,
+}
+
+impl fmt::Display for ColumnQuota {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ColumnQuota::Fixed(n) => write!(f, "fixed:{n}"),
+            ColumnQuota::FairShare => write!(f, "fair"),
+        }
+    }
+}
+
+impl FromStr for ColumnQuota {
+    type Err = Error;
+    fn from_str(s: &str) -> Result<ColumnQuota> {
+        match s {
+            "fair" | "fairshare" | "fair-share" => Ok(ColumnQuota::FairShare),
+            _ => {
+                let digits = s.strip_prefix("fixed:").unwrap_or(s);
+                match digits.parse::<usize>() {
+                    Ok(n) if (1..=GRID_COLS).contains(&n) => Ok(ColumnQuota::Fixed(n)),
+                    _ => Err(Error::config(format!(
+                        "unknown column quota '{s}' (expected fair or fixed:1..={GRID_COLS})"
+                    ))),
+                }
+            }
+        }
+    }
+}
+
+/// One charge-point-to-charge-point delta of a session's local timeline —
+/// everything the arbiter needs to place the window on the shared array.
+/// Built by `OffloadSession::arbiter_charge`; all durations are modeled
+/// seconds with the session's device-time scale already applied.
+#[derive(Debug, Clone)]
+pub struct WindowCharge {
+    /// Input-staging host seconds (copy + transpose + input sync).
+    pub pre_s: f64,
+    /// Output-copy host seconds.
+    pub post_s: f64,
+    /// Device seconds per local timeline column (kernel + output sync);
+    /// local column `i` lands on the tenant's `i`-th leased column.
+    pub col_busy_s: Vec<f64>,
+    /// Array-wide reconfiguration seconds the window itself recorded.
+    pub barrier_s: f64,
+    /// The local timeline's makespan growth across the window — the
+    /// arbiter derives from it how much of `pre_s` the local schedule
+    /// left exposed.
+    pub makespan_growth_s: f64,
+    /// Invocations completed in the window.
+    pub ops: u64,
+    /// Strip variant the array was programmed to when the window began
+    /// (`None`: never programmed yet — the window's own barrier seconds
+    /// include the initial programming).
+    pub entry_strip: Option<ProblemSize>,
+    /// Strip variant the window left programmed.
+    pub exit_strip: Option<ProblemSize>,
+}
+
+impl WindowCharge {
+    fn device_s(&self) -> f64 {
+        self.col_busy_s.iter().sum::<f64>() + self.barrier_s
+    }
+
+    /// Column-seconds the window consumes — the deficit-round-robin
+    /// currency. A barrier occupies every column.
+    fn cost(&self) -> f64 {
+        self.col_busy_s.iter().sum::<f64>() + self.barrier_s * GRID_COLS as f64
+    }
+
+    fn is_empty(&self) -> bool {
+        self.pre_s <= 0.0 && self.post_s <= 0.0 && self.device_s() <= 0.0
+    }
+}
+
+/// Per-tenant accounting (the multi-tenant face of the Figure-7 stage
+/// totals).
+#[derive(Debug, Clone)]
+pub struct TenantReport {
+    pub name: String,
+    /// The attached session's id.
+    pub session: u64,
+    pub quota: ColumnQuota,
+    /// Columns each of the tenant's windows occupies (the session's
+    /// timeline width).
+    pub lease_width: usize,
+    /// Windows placed so far.
+    pub windows: u64,
+    /// GEMM invocations inside those windows.
+    pub ops: u64,
+    /// Columns-occupied integral: column-seconds of device work charged
+    /// to this tenant (its strips, plus `GRID_COLS ×` every barrier it
+    /// caused — a reconfiguration stalls the whole array).
+    pub busy_s: f64,
+    /// Host staging + output-copy seconds.
+    pub host_s: f64,
+    /// Modeled completion time of the tenant's last placed window.
+    pub done_s: f64,
+    /// `busy_s` as a fraction of the whole array's capacity over the
+    /// shared makespan (filled by [`DeviceArbiter::report`]).
+    pub makespan_share: f64,
+    /// Re-entry reconfigurations charged because another tenant left the
+    /// leased columns programmed to a different strip variant.
+    pub reconfigs_charged: u64,
+    /// Cross-tenant switches that cost nothing because the variants
+    /// agreed (the amortization a single-tenant session can never see).
+    pub reconfigs_amortized: u64,
+    /// Modeled seconds the tenant's staged windows sat waiting for a
+    /// leased column to free up.
+    pub wait_for_lease_s: f64,
+}
+
+/// Whole-array report across all tenants.
+#[derive(Debug, Clone)]
+pub struct ArbiterReport {
+    /// End of the shared schedule (max column cursor / tenant chain).
+    pub makespan_s: f64,
+    /// Total device column-seconds placed (strips + barriers × width).
+    pub device_busy_s: f64,
+    /// `device_busy_s / (GRID_COLS × makespan_s)`.
+    pub utilization: f64,
+    /// Jain's fairness index over the tenants' service rates
+    /// (`busy_s / done_s`): 1.0 = perfectly even, `1/n` = one tenant
+    /// starved the rest.
+    pub jain_index: f64,
+    pub tenants: Vec<TenantReport>,
+}
+
+struct Tenant {
+    report: TenantReport,
+    /// Dedicated home columns (`Fixed` quota only).
+    home: Vec<usize>,
+    width: usize,
+    /// Deficit-round-robin credit (column-seconds).
+    deficit: f64,
+    queue: VecDeque<WindowCharge>,
+}
+
+struct ArbiterCore {
+    /// Modeled busy-until time per physical shim column.
+    cols: Vec<f64>,
+    /// Strip variant each column was left programmed to.
+    col_programmed: Vec<Option<ProblemSize>>,
+    /// Tenant that last ran device work on each column.
+    col_last_tenant: Vec<Option<usize>>,
+    /// Dedicated-column owner (`Fixed` quotas), if any.
+    col_owner: Vec<Option<usize>>,
+    /// Cost of switching a column set to a different strip variant when a
+    /// tenant re-enters columns another tenant used (the steady-state
+    /// minimal reconfiguration).
+    reentry_s: f64,
+    tenants: Vec<Tenant>,
+    makespan_s: f64,
+}
+
+impl ArbiterCore {
+    fn queued(&self) -> usize {
+        self.tenants.iter().map(|t| t.queue.len()).sum()
+    }
+
+    /// Columns a window of `tenant` will occupy *right now*: the first
+    /// `width` home columns of a `Fixed` tenant, or the `width`
+    /// least-loaded non-dedicated columns for `FairShare`.
+    fn lease_cols(&self, tenant: usize) -> Vec<usize> {
+        let t = &self.tenants[tenant];
+        if !t.home.is_empty() {
+            return t.home[..t.width.min(t.home.len())].to_vec();
+        }
+        let mut pool: Vec<usize> =
+            (0..GRID_COLS).filter(|&c| self.col_owner[c].is_none()).collect();
+        pool.sort_by(|&a, &b| self.cols[a].total_cmp(&self.cols[b]).then(a.cmp(&b)));
+        pool.truncate(t.width.max(1));
+        pool
+    }
+
+    /// Place one window on the shared array (see module docs).
+    fn place(&mut self, tenant: usize, w: WindowCharge) {
+        let cols = self.lease_cols(tenant);
+        let dev_local_max = w.col_busy_s.iter().cloned().fold(0.0, f64::max);
+        let has_dev = dev_local_max > 0.0 || w.barrier_s > 0.0;
+
+        // Staging the local schedule could not hide under the tenant's own
+        // device work: the serial (depth-1 FIFO) case leaves all of it
+        // exposed, a pipelined window only its residue.
+        let exposed_pre = if has_dev {
+            (w.makespan_growth_s - dev_local_max - w.barrier_s - w.post_s)
+                .max(0.0)
+                .min(w.pre_s)
+        } else {
+            w.pre_s
+        };
+        let ready = self.tenants[tenant].report.done_s + exposed_pre;
+        let mut dev_done = ready;
+
+        if has_dev {
+            let mut barrier = w.barrier_s;
+            // Re-entry: the leased columns must hold this window's entry
+            // variant before its first kernel. A window that begins
+            // unprogrammed (`entry_strip == None`) carries the programming
+            // cost in its own barrier seconds.
+            if let Some(entry) = w.entry_strip {
+                let mismatch = cols.iter().any(|&c| self.col_programmed[c] != Some(entry));
+                let cross = cols
+                    .iter()
+                    .any(|&c| self.col_last_tenant[c].is_some_and(|lt| lt != tenant));
+                if mismatch && cross {
+                    barrier += self.reentry_s;
+                    self.tenants[tenant].report.reconfigs_charged += 1;
+                } else if !mismatch && cross {
+                    self.tenants[tenant].report.reconfigs_amortized += 1;
+                }
+            }
+
+            // Lease wait: how long after staging readiness the first
+            // leased column frees up.
+            let first_free = cols.iter().map(|&c| self.cols[c]).fold(f64::INFINITY, f64::min);
+            self.tenants[tenant].report.wait_for_lease_s += (first_free - ready).max(0.0);
+
+            if barrier > 0.0 {
+                // Array-wide stall: every column advances together, no
+                // earlier than this window's staging readiness.
+                let stall = self.cols.iter().cloned().fold(ready, f64::max);
+                for c in self.cols.iter_mut() {
+                    *c = stall + barrier;
+                }
+                dev_done = stall + barrier;
+                self.tenants[tenant].report.busy_s += barrier * GRID_COLS as f64;
+            }
+            for (i, &c) in cols.iter().enumerate() {
+                let span = w.col_busy_s.get(i).copied().unwrap_or(0.0);
+                if span > 0.0 {
+                    let start = self.cols[c].max(ready);
+                    self.cols[c] = start + span;
+                    dev_done = dev_done.max(self.cols[c]);
+                    self.tenants[tenant].report.busy_s += span;
+                }
+            }
+            for &c in &cols {
+                self.col_programmed[c] = w.exit_strip;
+                self.col_last_tenant[c] = Some(tenant);
+            }
+        }
+
+        let done = dev_done + w.post_s;
+        let rep = &mut self.tenants[tenant].report;
+        rep.host_s += w.pre_s + w.post_s;
+        rep.windows += 1;
+        rep.ops += w.ops;
+        rep.done_s = done;
+        self.makespan_s = self.makespan_s.max(done);
+    }
+
+    /// Drain every queued window by deficit round-robin. The quantum is
+    /// the largest queued head-window cost, so each round every
+    /// backlogged tenant places at least its head window — the loop
+    /// always terminates, and cheap windows drain several per round.
+    fn drain(&mut self) {
+        loop {
+            let quantum = self
+                .tenants
+                .iter()
+                .filter_map(|t| t.queue.front().map(WindowCharge::cost))
+                .fold(0.0, f64::max);
+            if self.tenants.iter().all(|t| t.queue.is_empty()) {
+                break;
+            }
+            for i in 0..self.tenants.len() {
+                if self.tenants[i].queue.is_empty() {
+                    // Standard DRR: an idle tenant carries no credit.
+                    self.tenants[i].deficit = 0.0;
+                    continue;
+                }
+                self.tenants[i].deficit += quantum;
+                while let Some(head) = self.tenants[i].queue.front() {
+                    let cost = head.cost();
+                    if cost > self.tenants[i].deficit + 1e-12 {
+                        break;
+                    }
+                    self.tenants[i].deficit -= cost;
+                    let w = self.tenants[i].queue.pop_front().expect("head exists");
+                    self.place(i, w);
+                }
+            }
+        }
+    }
+
+    fn report(&mut self) -> ArbiterReport {
+        self.drain();
+        let makespan = self.makespan_s;
+        let device_busy: f64 = self.tenants.iter().map(|t| t.report.busy_s).sum();
+        let capacity = GRID_COLS as f64 * makespan;
+        let mut tenants: Vec<TenantReport> = self
+            .tenants
+            .iter()
+            .map(|t| t.report.clone())
+            .collect();
+        for t in tenants.iter_mut() {
+            t.makespan_share = if capacity > 0.0 { t.busy_s / capacity } else { 0.0 };
+        }
+        let rates: Vec<f64> = tenants
+            .iter()
+            .filter(|t| t.done_s > 0.0)
+            .map(|t| t.busy_s / t.done_s)
+            .collect();
+        let jain = if rates.is_empty() {
+            1.0
+        } else {
+            let sum: f64 = rates.iter().sum();
+            let sq: f64 = rates.iter().map(|x| x * x).sum();
+            if sq > 0.0 { sum * sum / (rates.len() as f64 * sq) } else { 1.0 }
+        };
+        ArbiterReport {
+            makespan_s: makespan,
+            device_busy_s: device_busy,
+            utilization: if capacity > 0.0 { device_busy / capacity } else { 0.0 },
+            jain_index: jain,
+            tenants,
+        }
+    }
+}
+
+/// The shared-array owner. Cheap to clone (tenants share one core);
+/// sessions attach via
+/// [`OffloadSession::attach_arbiter`](super::session::OffloadSession::attach_arbiter).
+#[derive(Clone)]
+pub struct DeviceArbiter {
+    core: Arc<Mutex<ArbiterCore>>,
+}
+
+impl Default for DeviceArbiter {
+    fn default() -> Self {
+        DeviceArbiter::new()
+    }
+}
+
+fn lock(core: &Arc<Mutex<ArbiterCore>>) -> MutexGuard<'_, ArbiterCore> {
+    core.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+impl DeviceArbiter {
+    pub fn new() -> DeviceArbiter {
+        DeviceArbiter::with_timing(&TimingModel::default())
+    }
+
+    /// Price cross-tenant re-entry reconfigurations from `timing` (the
+    /// steady-state minimal reconfiguration — shim BDs + core params).
+    pub fn with_timing(timing: &TimingModel) -> DeviceArbiter {
+        DeviceArbiter {
+            core: Arc::new(Mutex::new(ArbiterCore {
+                cols: vec![0.0; GRID_COLS],
+                col_programmed: vec![None; GRID_COLS],
+                col_last_tenant: vec![None; GRID_COLS],
+                col_owner: vec![None; GRID_COLS],
+                reentry_s: timing.minimal_reconfig_s,
+                tenants: Vec::new(),
+                makespan_s: 0.0,
+            })),
+        }
+    }
+
+    /// Lease columns to a tenant. `width` is the session's timeline
+    /// column count (every window occupies that many leased columns);
+    /// `Fixed(n)` quotas claim `n` dedicated columns disjoint from every
+    /// other fixed tenant, and fair-share tenants time-share the rest.
+    /// Called by `OffloadSession::attach_arbiter`, which knows the width.
+    pub fn attach(
+        &self,
+        name: &str,
+        quota: ColumnQuota,
+        width: usize,
+        session: u64,
+    ) -> Result<ArbiterHandle> {
+        let mut core = lock(&self.core);
+        if let Some(t) = core.tenants.iter().find(|t| t.report.session == session) {
+            return Err(Error::config(format!(
+                "offload session #{session} is already leased to tenant '{}'; \
+                 one lease per session",
+                t.report.name
+            )));
+        }
+        let fixed_claimed: usize = core.col_owner.iter().filter(|o| o.is_some()).count();
+        let fair_widths = core
+            .tenants
+            .iter()
+            .filter(|t| t.home.is_empty())
+            .map(|t| t.width)
+            .fold(0usize, usize::max);
+        let home = match quota {
+            ColumnQuota::Fixed(n) => {
+                if n == 0 || n > GRID_COLS {
+                    return Err(Error::config(format!(
+                        "quota fixed:{n} is outside the array's 1..={GRID_COLS} columns"
+                    )));
+                }
+                if width > n {
+                    return Err(Error::config(format!(
+                        "tenant '{name}' needs {width} column(s) (its session's shard \
+                         width) but quota fixed:{n} leases only {n}; widen the quota or \
+                         narrow the session's ShardPolicy"
+                    )));
+                }
+                if fixed_claimed + n > GRID_COLS {
+                    return Err(Error::config(format!(
+                        "quota fixed:{n} for tenant '{name}' over-subscribes the array: \
+                         {fixed_claimed} of {GRID_COLS} columns are already dedicated"
+                    )));
+                }
+                if fair_widths > GRID_COLS - fixed_claimed - n {
+                    return Err(Error::config(format!(
+                        "quota fixed:{n} for tenant '{name}' would leave {} free \
+                         column(s), but a fair-share tenant needs {fair_widths}",
+                        GRID_COLS - fixed_claimed - n
+                    )));
+                }
+                let cols: Vec<usize> = (0..GRID_COLS)
+                    .filter(|&c| core.col_owner[c].is_none())
+                    .take(n)
+                    .collect();
+                cols
+            }
+            ColumnQuota::FairShare => {
+                if width > GRID_COLS - fixed_claimed {
+                    return Err(Error::config(format!(
+                        "fair-share tenant '{name}' needs {width} column(s) but only \
+                         {} are not dedicated to fixed quotas",
+                        GRID_COLS - fixed_claimed
+                    )));
+                }
+                Vec::new()
+            }
+        };
+        let idx = core.tenants.len();
+        for &c in &home {
+            core.col_owner[c] = Some(idx);
+        }
+        core.tenants.push(Tenant {
+            report: TenantReport {
+                name: name.to_string(),
+                session,
+                quota,
+                lease_width: width.max(1),
+                windows: 0,
+                ops: 0,
+                busy_s: 0.0,
+                host_s: 0.0,
+                done_s: 0.0,
+                makespan_share: 0.0,
+                reconfigs_charged: 0,
+                reconfigs_amortized: 0,
+                wait_for_lease_s: 0.0,
+            },
+            home,
+            width: width.max(1),
+            deficit: 0.0,
+            queue: VecDeque::new(),
+        });
+        Ok(ArbiterHandle {
+            core: Arc::clone(&self.core),
+            tenant: idx,
+        })
+    }
+
+    /// Shared-schedule end time (drains all queued windows first).
+    pub fn makespan_s(&self) -> f64 {
+        let mut core = lock(&self.core);
+        core.drain();
+        core.makespan_s
+    }
+
+    /// Full accounting across all tenants (drains first).
+    pub fn report(&self) -> ArbiterReport {
+        lock(&self.core).report()
+    }
+}
+
+/// A tenant's lease on the shared array. Owned by the attached session;
+/// `Send` so the session may be driven from the background step-executor
+/// thread.
+pub struct ArbiterHandle {
+    core: Arc<Mutex<ArbiterCore>>,
+    tenant: usize,
+}
+
+impl ArbiterHandle {
+    /// Enqueue one window of the tenant's local schedule. Windows are
+    /// placed lazily (deficit round-robin at the next report/makespan
+    /// query) so concurrent tenants' windows interleave fairly regardless
+    /// of host call order; a deep backlog auto-drains to bound memory.
+    pub fn charge_window(&self, w: WindowCharge) {
+        if w.is_empty() {
+            return;
+        }
+        let mut core = lock(&self.core);
+        core.tenants[self.tenant].queue.push_back(w);
+        if core.queued() >= 1024 {
+            core.drain();
+        }
+    }
+
+    /// The tenant's current accounting (drains queued windows first).
+    pub fn tenant_report(&self) -> TenantReport {
+        let mut core = lock(&self.core);
+        core.drain();
+        core.tenants[self.tenant].report.clone()
+    }
+}
+
+impl fmt::Debug for ArbiterHandle {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("ArbiterHandle").field("tenant", &self.tenant).finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn strip(n: usize) -> Option<ProblemSize> {
+        Some(ProblemSize::new(64, 64, n))
+    }
+
+    fn window(pre: f64, dev: f64, post: f64, s: Option<ProblemSize>) -> WindowCharge {
+        WindowCharge {
+            pre_s: pre,
+            post_s: post,
+            col_busy_s: vec![dev],
+            barrier_s: 0.0,
+            makespan_growth_s: pre + dev + post,
+            ops: 1,
+            entry_strip: s,
+            exit_strip: s,
+        }
+    }
+
+    #[test]
+    fn quota_parses_and_rejects() {
+        assert_eq!("fair".parse::<ColumnQuota>().unwrap(), ColumnQuota::FairShare);
+        assert_eq!("fixed:2".parse::<ColumnQuota>().unwrap(), ColumnQuota::Fixed(2));
+        assert_eq!("3".parse::<ColumnQuota>().unwrap(), ColumnQuota::Fixed(3));
+        assert!("fixed:0".parse::<ColumnQuota>().is_err());
+        assert!("fixed:5".parse::<ColumnQuota>().is_err());
+        assert!("everything".parse::<ColumnQuota>().is_err());
+        assert_eq!(ColumnQuota::Fixed(2).to_string(), "fixed:2");
+    }
+
+    #[test]
+    fn fixed_quotas_never_oversubscribe_the_array() {
+        let arb = DeviceArbiter::new();
+        arb.attach("a", ColumnQuota::Fixed(3), 1, 1).unwrap();
+        let err = arb.attach("b", ColumnQuota::Fixed(2), 1, 2).unwrap_err();
+        assert!(err.to_string().contains("over-subscribes"), "{err}");
+        arb.attach("c", ColumnQuota::Fixed(1), 1, 3).unwrap();
+    }
+
+    #[test]
+    fn fixed_quota_must_fit_the_session_width() {
+        let arb = DeviceArbiter::new();
+        let err = arb.attach("wide", ColumnQuota::Fixed(1), 4, 1).unwrap_err();
+        assert!(err.to_string().contains("shard"), "{err}");
+    }
+
+    #[test]
+    fn fair_share_tenants_are_not_squeezed_out() {
+        let arb = DeviceArbiter::new();
+        arb.attach("fair", ColumnQuota::FairShare, 2, 1).unwrap();
+        let err = arb.attach("greedy", ColumnQuota::Fixed(3), 1, 2).unwrap_err();
+        assert!(err.to_string().contains("fair-share"), "{err}");
+        arb.attach("ok", ColumnQuota::Fixed(2), 1, 3).unwrap();
+        // And the reverse: no room left for a new fair-share tenant wider
+        // than the free pool.
+        let err = arb.attach("wide", ColumnQuota::FairShare, 3, 4).unwrap_err();
+        assert!(err.to_string().contains("dedicated"), "{err}");
+    }
+
+    #[test]
+    fn one_lease_per_session() {
+        let arb = DeviceArbiter::new();
+        arb.attach("a", ColumnQuota::FairShare, 1, 7).unwrap();
+        let err = arb.attach("b", ColumnQuota::FairShare, 1, 7).unwrap_err();
+        assert!(err.to_string().contains("already leased"), "{err}");
+    }
+
+    #[test]
+    fn solo_serial_windows_chain_exactly() {
+        // A depth-1 FIFO tenant's windows are fully serial: the shared
+        // makespan must equal the sum of the windows' makespan growth.
+        let arb = DeviceArbiter::new();
+        let h = arb.attach("solo", ColumnQuota::FairShare, 1, 1).unwrap();
+        for _ in 0..4 {
+            h.charge_window(window(2.0, 5.0, 1.0, strip(128)));
+        }
+        assert!((arb.makespan_s() - 32.0).abs() < 1e-9);
+        let rep = arb.report();
+        assert_eq!(rep.tenants.len(), 1);
+        assert!((rep.tenants[0].busy_s - 20.0).abs() < 1e-9);
+        assert!((rep.tenants[0].host_s - 12.0).abs() < 1e-9);
+        assert_eq!(rep.tenants[0].reconfigs_charged, 0);
+        assert!((rep.jain_index - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn disjoint_fixed_tenants_overlap() {
+        // Two Fixed tenants on disjoint columns run their device chains
+        // in parallel: shared makespan ~ max, not sum.
+        let arb = DeviceArbiter::new();
+        let a = arb.attach("a", ColumnQuota::Fixed(2), 1, 1).unwrap();
+        let b = arb.attach("b", ColumnQuota::Fixed(2), 1, 2).unwrap();
+        for _ in 0..4 {
+            a.charge_window(window(0.1, 5.0, 0.1, strip(128)));
+            b.charge_window(window(0.1, 5.0, 0.1, strip(256)));
+        }
+        let solo = 4.0 * 5.2;
+        let shared = arb.makespan_s();
+        assert!(shared < 2.0 * solo - 1.0, "shared {shared} vs time-sliced {}", 2.0 * solo);
+        let rep = arb.report();
+        // Disjoint leases never re-enter each other's programming.
+        for t in &rep.tenants {
+            assert_eq!(t.reconfigs_charged, 0, "tenant {}", t.name);
+        }
+        assert!((rep.jain_index - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn contended_share_charges_reentry_and_amortizes_agreement() {
+        // Two fair-share width-4 tenants with *different* steady strips
+        // thrash re-entry reconfigurations; with *matching* strips the
+        // switches are amortized.
+        let wide = |s| WindowCharge {
+            col_busy_s: vec![1.0; GRID_COLS],
+            ..window(0.0, 0.0, 0.0, s)
+        };
+        let arb = DeviceArbiter::new();
+        let a = arb.attach("a", ColumnQuota::FairShare, 4, 1).unwrap();
+        let b = arb.attach("b", ColumnQuota::FairShare, 4, 2).unwrap();
+        for _ in 0..3 {
+            a.charge_window(wide(strip(128)));
+            b.charge_window(wide(strip(256)));
+        }
+        let rep = arb.report();
+        let charged: u64 = rep.tenants.iter().map(|t| t.reconfigs_charged).sum();
+        assert!(charged >= 2, "alternating variants must re-pay programming, got {charged}");
+
+        let arb2 = DeviceArbiter::new();
+        let a2 = arb2.attach("a", ColumnQuota::FairShare, 4, 1).unwrap();
+        let b2 = arb2.attach("b", ColumnQuota::FairShare, 4, 2).unwrap();
+        for _ in 0..3 {
+            a2.charge_window(wide(strip(128)));
+            b2.charge_window(wide(strip(128)));
+        }
+        let rep2 = arb2.report();
+        let charged2: u64 = rep2.tenants.iter().map(|t| t.reconfigs_charged).sum();
+        let amortized2: u64 = rep2.tenants.iter().map(|t| t.reconfigs_amortized).sum();
+        assert_eq!(charged2, 0, "matching variants never re-pay");
+        assert!(amortized2 >= 2, "cross-tenant switches count as amortized");
+        assert!(
+            arb2.makespan_s() < arb.makespan_s(),
+            "amortized fleet finishes sooner than the thrashing one"
+        );
+    }
+
+    #[test]
+    fn drr_keeps_cheap_windows_flowing_between_expensive_ones() {
+        // One tenant queues 2 huge windows, the other 8 tiny ones; DRR
+        // must interleave so the tiny tenant is not starved behind the
+        // backlog: its completion time stays far below the shared end.
+        let arb = DeviceArbiter::new();
+        let big = arb.attach("big", ColumnQuota::FairShare, 1, 1).unwrap();
+        let small = arb.attach("small", ColumnQuota::FairShare, 1, 2).unwrap();
+        for _ in 0..2 {
+            big.charge_window(window(0.0, 40.0, 0.0, strip(128)));
+        }
+        for _ in 0..8 {
+            small.charge_window(window(0.0, 1.0, 0.0, strip(128)));
+        }
+        let rep = arb.report();
+        let t_small = rep.tenants.iter().find(|t| t.name == "small").unwrap();
+        assert!(
+            t_small.done_s < rep.makespan_s - 30.0,
+            "small tenant done at {} of {} — starved behind the big backlog",
+            t_small.done_s,
+            rep.makespan_s
+        );
+    }
+
+    #[test]
+    fn report_shares_and_utilization_are_consistent() {
+        let arb = DeviceArbiter::new();
+        let a = arb.attach("a", ColumnQuota::Fixed(1), 1, 1).unwrap();
+        let b = arb.attach("b", ColumnQuota::Fixed(1), 1, 2).unwrap();
+        a.charge_window(window(0.0, 6.0, 0.0, strip(128)));
+        b.charge_window(window(0.0, 2.0, 0.0, strip(128)));
+        let rep = arb.report();
+        assert!(rep.makespan_s >= 6.0);
+        let share_sum: f64 = rep.tenants.iter().map(|t| t.makespan_share).sum();
+        assert!((share_sum - rep.utilization).abs() < 1e-9);
+        assert!(rep.utilization > 0.0 && rep.utilization <= 1.0);
+        assert!(rep.jain_index > 0.0 && rep.jain_index <= 1.0 + 1e-12);
+    }
+}

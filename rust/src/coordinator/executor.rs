@@ -52,27 +52,24 @@
 //!    caller to `wait` the handle before the input/output borrows end;
 //!    the dispatch arms in `model::ops::matmul` wait inside the same
 //!    call, so the borrows of the enclosing call frame pin the memory.
-//! 2. **Deferred jobs reference only step-stable memory.** A deferred
-//!    `dW` job owns a *copy* of its `dout` input (the model reuses its
-//!    gradient scratch across layers), borrows the saved forward
-//!    activation (never mutated during backward), and accumulates into a
-//!    gradient region nothing else touches until the optimizer runs —
-//!    and the accumulation itself happens on the trainer thread.
+//! 2. **Deferred jobs carry no pointers at all.** A deferred `dW` job
+//!    owns a *copy* of its `dout` input (the model reuses its gradient
+//!    scratch across layers), borrows the saved forward activation
+//!    (never mutated during backward), and names its accumulation target
+//!    as an **arena offset** — `(offset, len)` into the gradient arena,
+//!    plain `usize`s. Completions stash the owned result; the trainer
+//!    applies every stashed accumulation at the end of the step body via
+//!    [`ExecClient::drain_and_apply`] against a live `&mut` borrow of
+//!    the arena it owns. No raw pointer into the gradient arena ever
+//!    crosses a borrow boundary, so the path is provenance-clean under
+//!    strict Stacked Borrows (Miri) — safe to run per-tenant under the
+//!    device arbiter.
 //! 3. **Errors quiesce before they return.** Any client method that
 //!    fails first aborts the job queue (queued work is *discarded*, never
 //!    run) and blocks until the executor thread confirms it is idle — so
 //!    no job can outlive the frame that submitted it, even on the error
-//!    path.
-//!
-//! One known formal caveat: a deferred accumulation target is held as a
-//! raw pointer while the trainer later takes fresh `&mut` borrows of
-//! *other, disjoint* regions of the same gradient arena — disjointness
-//! makes this race-free, but strict Stacked-Borrows provenance (Miri)
-//! would flag the re-borrow — the same pointer-laundering idiom the
-//! crate's data-parallel helpers already use for disjoint chunks (the
-//! NPU simulator's parallel tile loop, `coordinator::transpose`).
-//! Routing deferred targets as arena offsets would make it
-//! provenance-clean; see ROADMAP.
+//!    path. Stashed deferred results are owned buffers; dropping them on
+//!    the error path leaks nothing and touches no caller memory.
 
 use std::collections::{BTreeMap, BTreeSet};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -216,10 +213,12 @@ struct Done {
     result: Result<Option<Vec<f32>>>,
 }
 
-/// A deferred accumulation target (`dst += result` when the completion
-/// arrives, applied on the trainer thread).
+/// A deferred accumulation target: an `(offset, len)` region of the
+/// caller's gradient arena. The apply happens in
+/// [`ExecClient::drain_and_apply`] against the live arena borrow — the
+/// struct itself holds no pointer.
 struct Deferred {
-    dst: SendMut,
+    off: usize,
     len: usize,
 }
 
@@ -245,6 +244,12 @@ pub struct ExecClient<'c> {
     /// Completions that arrived before their wait.
     ready: BTreeSet<usize>,
     deferred: BTreeMap<usize, Deferred>,
+    /// Completed deferred results awaiting their arena apply:
+    /// `(offset, owned result)`, accumulated by
+    /// [`ExecClient::drain_and_apply`].
+    accums: Vec<(usize, Vec<f32>)>,
+    /// Whether the job queue was already closed (by `drain_and_apply`).
+    closed: bool,
     /// Measured wallclock per invocation, by record order.
     walls: Vec<f64>,
     completed: usize,
@@ -273,6 +278,8 @@ impl<'c> ExecClient<'c> {
             waited: vec![false; n],
             ready: BTreeSet::new(),
             deferred: BTreeMap::new(),
+            accums: Vec::new(),
+            closed: false,
             walls: vec![0.0; n],
             completed: 0,
             blocked_s: 0.0,
@@ -406,37 +413,40 @@ impl<'c> ExecClient<'c> {
     }
 
     /// Submit one replayed GEMM whose result is *accumulated later*:
-    /// when the completion arrives (during a later wait, or at the
-    /// step-end drain), the client adds the merged output into `dst` on
-    /// the trainer thread. This is the backward weight-gradient path —
-    /// the whole invocation overlaps the trainer's subsequent CPU ops.
+    /// the completion's owned output is stashed, and the caller applies
+    /// every stashed accumulation into its gradient arena at the end of
+    /// the step body with [`ExecClient::drain_and_apply`]. This is the
+    /// backward weight-gradient path — the whole invocation overlaps the
+    /// trainer's subsequent CPU ops.
     ///
     /// `a` is taken by value (a copy) because the model reuses its
     /// gradient scratch buffers across layers; `b` must be step-stable
-    /// (a saved forward activation or a parameter).
+    /// (a saved forward activation or a parameter). The target is the
+    /// `dst_len`-element region at `dst_off` of the arena later passed
+    /// to `drain_and_apply` — plain offsets, no pointer crosses the
+    /// thread boundary (safety rule 2).
     ///
     /// # Safety
     ///
-    /// `b` must stay valid and unmutated, and the `dst` region must not
-    /// be read or written by anyone else, until the step finishes
+    /// `b` must stay valid and unmutated until the step finishes
     /// ([`run_replay_step`] drains every completion) or a client method
-    /// returns an error (quiesced first). Model parameters, saved
-    /// activations, and gradient tensors satisfy this for the whole
-    /// training step.
+    /// returns an error (quiesced first). Model parameters and saved
+    /// activations satisfy this for the whole training step.
     pub unsafe fn submit_deferred(
         &mut self,
         op: &PlanOp,
         a: Vec<f32>,
         b: &[f32],
-        dst: &mut [f32],
+        dst_off: usize,
+        dst_len: usize,
     ) -> Result<PlanNode> {
         self.guard_open()?;
         let out_len = op.size.m * op.size.n;
-        if dst.len() != out_len {
+        if dst_len != out_len {
             return self.fail(Error::shape(format!(
-                "background gemm {}: accumulation target has {} elements, expected {out_len}",
+                "background gemm {}: accumulation target has {dst_len} elements, \
+                 expected {out_len}",
                 op.size,
-                dst.len()
             )));
         }
         if let Err(e) = self.check_next(op, a.len(), b.len(), out_len) {
@@ -446,8 +456,8 @@ impl<'c> ExecClient<'c> {
         self.deferred.insert(
             seq,
             Deferred {
-                dst: SendMut(dst.as_mut_ptr()),
-                len: dst.len(),
+                off: dst_off,
+                len: dst_len,
             },
         );
         self.push_job(Job {
@@ -463,8 +473,9 @@ impl<'c> ExecClient<'c> {
         Ok(PlanNode(seq))
     }
 
-    /// Process one completion: record its wallclock, apply a deferred
-    /// accumulation, or stash an in-call result for its wait.
+    /// Process one completion: record its wallclock, stash a deferred
+    /// result for the step-end arena apply, or stash an in-call result
+    /// for its wait.
     fn settle(&mut self, d: Done) -> Result<()> {
         self.walls[d.seq] = d.wall_s;
         match d.result {
@@ -476,14 +487,8 @@ impl<'c> ExecClient<'c> {
                 self.completed += 1;
                 if let Some(def) = self.deferred.remove(&d.seq) {
                     let c = out.expect("deferred jobs return an owned output");
-                    // SAFETY: submit_deferred's contract — the region is
-                    // alive and exclusively ours until the step ends, and
-                    // this apply runs on the trainer thread.
-                    let dst = unsafe { std::slice::from_raw_parts_mut(def.dst.0, def.len) };
-                    debug_assert_eq!(dst.len(), c.len());
-                    for (acc, x) in dst.iter_mut().zip(&c) {
-                        *acc += *x;
-                    }
+                    debug_assert_eq!(def.len, c.len());
+                    self.accums.push((def.off, c));
                     self.waited[d.seq] = true;
                 } else {
                     self.ready.insert(d.seq);
@@ -491,6 +496,51 @@ impl<'c> ExecClient<'c> {
                 Ok(())
             }
         }
+    }
+
+    /// End-of-step-body drain: close the job queue, settle every
+    /// outstanding completion, and apply all stashed deferred
+    /// accumulations (`arena[off..off+len] += result`) into `arena` —
+    /// the gradient arena every `submit_deferred` offset named. Call
+    /// this as the last act of the step body, with the arena's live
+    /// `&mut` borrow (e.g. `model.grads.as_mut_slice()`); a step that
+    /// submitted deferred work but never drains it fails in
+    /// [`run_replay_step`]'s finalize with a pointer here.
+    pub fn drain_and_apply(&mut self, arena: &mut [f32]) -> Result<()> {
+        self.guard_open()?;
+        if self.cursor != self.entry.ops.len() {
+            let cursor = self.cursor;
+            return self.fail(Error::plan_divergence(format!(
+                "step body drained after {cursor} of the cached plan's {} GEMMs; \
+                 re-record the step",
+                self.entry.ops.len()
+            )));
+        }
+        self.jobs.close();
+        self.closed = true;
+        loop {
+            let t0 = Instant::now();
+            let popped = self.done.pop();
+            self.blocked_s += t0.elapsed().as_secs_f64();
+            let Some(d) = popped else { break };
+            if let Err(e) = self.settle(d) {
+                return self.fail(e);
+            }
+        }
+        for (off, c) in std::mem::take(&mut self.accums) {
+            let Some(dst) = arena.get_mut(off..off + c.len()) else {
+                return self.fail(Error::config(format!(
+                    "deferred accumulation region {off}..{} is outside the {}-element \
+                     gradient arena",
+                    off + c.len(),
+                    arena.len()
+                )));
+            };
+            for (acc, x) in dst.iter_mut().zip(&c) {
+                *acc += *x;
+            }
+        }
+        Ok(())
     }
 
     /// Block until the handle's invocation has completed (its output is
@@ -561,7 +611,9 @@ impl<'c> ExecClient<'c> {
                 self.entry.ops.len()
             )));
         }
-        self.jobs.close();
+        if !self.closed {
+            self.jobs.close();
+        }
         loop {
             let t0 = Instant::now();
             let popped = self.done.pop();
@@ -576,6 +628,13 @@ impl<'c> ExecClient<'c> {
                 "step executor finished only {} of {} invocations",
                 self.completed,
                 self.entry.ops.len()
+            )));
+        }
+        if !self.accums.is_empty() {
+            return self.fail(Error::config(format!(
+                "{} deferred accumulation(s) were completed but never applied; call \
+                 drain_and_apply(arena) at the end of the step body",
+                self.accums.len()
             )));
         }
         if let Some(seq) = (0..self.waited.len()).find(|&s| !self.waited[s]) {
@@ -825,8 +884,10 @@ mod tests {
         let (mut sess, cache) = cached_session();
         let entry = cache.latest_for(sess.session_id()).unwrap();
         let ops = step_ops();
-        // Ops 0 and 1 in-call; op 2 deferred, accumulating into `acc`.
-        let mut acc = vec![1.0f32; 64 * 128];
+        // Ops 0 and 1 in-call; op 2 deferred, accumulating into the tail
+        // region of a padded arena (the offsets are plain indices — no
+        // pointer crosses the thread boundary).
+        let mut arena = vec![1.0f32; 16 + 64 * 128];
         let ((), rep) = run_replay_step(&mut sess, entry, |client| {
             for (op, a, b, _) in &ops[..2] {
                 let mut c = vec![0.0f32; op.size.m * op.size.n];
@@ -835,18 +896,68 @@ mod tests {
                 client.wait(h)?;
             }
             let (op, a, b, _) = &ops[2];
-            // SAFETY: a is copied in; b and acc outlive the step body.
-            unsafe { client.submit_deferred(op, a.clone(), b, &mut acc)? };
-            Ok(())
+            // SAFETY: a is copied in; b outlives the step body.
+            unsafe { client.submit_deferred(op, a.clone(), b, 16, 64 * 128)? };
+            client.drain_and_apply(&mut arena)
         })
         .unwrap();
         assert_eq!(rep.stats.len(), 3);
-        // 1.0 initial + the 96.0 product.
+        // 1.0 initial + the 96.0 product past the offset; padding untouched.
         assert!(
-            acc.iter().all(|&x| (x - 97.0).abs() < 1e-2),
-            "deferred += applied: acc[0]={}",
-            acc[0]
+            arena[16..].iter().all(|&x| (x - 97.0).abs() < 1e-2),
+            "deferred += applied at the offset: arena[16]={}",
+            arena[16]
         );
+        assert!(
+            arena[..16].iter().all(|&x| x == 1.0),
+            "bytes before the named region stay untouched"
+        );
+    }
+
+    #[test]
+    fn forgotten_drain_is_a_helpful_error() {
+        let (mut sess, cache) = cached_session();
+        let entry = cache.latest_for(sess.session_id()).unwrap();
+        let ops = step_ops();
+        let err = run_replay_step(&mut sess, entry, |client| {
+            for (op, a, b, _) in &ops[..2] {
+                let mut c = vec![0.0f32; op.size.m * op.size.n];
+                // SAFETY: waited before the buffers leave this iteration.
+                let (_, h) = unsafe { client.submit(op, a, b, &mut c)? };
+                client.wait(h)?;
+            }
+            let (op, a, b, _) = &ops[2];
+            // SAFETY: a is copied in; b outlives the step body.
+            unsafe { client.submit_deferred(op, a.clone(), b, 0, 64 * 128)? };
+            Ok(()) // step body returns without drain_and_apply
+        })
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("drain_and_apply"), "{err}");
+    }
+
+    #[test]
+    fn out_of_bounds_accumulation_offset_is_rejected() {
+        let (mut sess, cache) = cached_session();
+        let entry = cache.latest_for(sess.session_id()).unwrap();
+        let ops = step_ops();
+        // The arena is one element too small for the named region.
+        let mut arena = vec![0.0f32; 64 * 128 - 1];
+        let err = run_replay_step(&mut sess, entry, |client| {
+            for (op, a, b, _) in &ops[..2] {
+                let mut c = vec![0.0f32; op.size.m * op.size.n];
+                // SAFETY: waited before the buffers leave this iteration.
+                let (_, h) = unsafe { client.submit(op, a, b, &mut c)? };
+                client.wait(h)?;
+            }
+            let (op, a, b, _) = &ops[2];
+            // SAFETY: a is copied in; b outlives the step body.
+            unsafe { client.submit_deferred(op, a.clone(), b, 0, 64 * 128)? };
+            client.drain_and_apply(&mut arena)
+        })
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("outside"), "{err}");
     }
 
     #[test]

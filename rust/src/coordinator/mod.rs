@@ -25,6 +25,14 @@
 //!   (bounded handoff queue, session-scoped completion handles), so the
 //!   staging + device wallclock the modeled timeline always *claimed* to
 //!   hide is now hidden for real (see `docs/SCHEDULING.md` § Executor).
+//! * [`arbiter`] — [`arbiter::DeviceArbiter`]: the multi-tenant rung. N
+//!   sessions lease column partitions of the shared array under
+//!   per-tenant [`arbiter::ColumnQuota`]s; their step windows are placed
+//!   on shared per-column cursors by deficit round-robin, reconfiguration
+//!   is priced as an array-wide barrier (amortized across tenants whose
+//!   steady-state variants agree), and per-tenant accounting surfaces as
+//!   [`arbiter::TenantReport`]s with Jain-fairness in the array-wide
+//!   [`arbiter::ArbiterReport`].
 //! * [`scheduler`] — [`scheduler::Scheduler`]: orders a submission window
 //!   (the eager ring's staged ops, or a full recorded step) within data
 //!   dependencies to batch same-size invocations and amortize
@@ -37,6 +45,7 @@
 //! * [`backend`] — the PJRT artifact loader backing `device::PjrtDevice`
 //!   (feature `pjrt`).
 
+pub mod arbiter;
 pub mod backend;
 pub mod device;
 pub mod engine;
@@ -47,6 +56,9 @@ pub mod scheduler;
 pub mod session;
 pub mod transpose;
 
+pub use arbiter::{
+    ArbiterHandle, ArbiterReport, ColumnQuota, DeviceArbiter, TenantReport, WindowCharge,
+};
 pub use device::{ComputeDevice, DeviceRun, DeviceSpan, SimulatorDevice};
 pub use engine::{EngineConfig, ExecMode, GemmOffloadEngine, PAIRED_SLOTS};
 pub use executor::{run_replay_step, ExecClient, ExecHandle, ExecutorMode};

@@ -40,6 +40,7 @@ use crate::util::threads::join2;
 use crate::util::timer::StageTimer;
 use crate::xrt::{BufferObject, SyncDirection, XrtDevice};
 
+use super::arbiter::{ArbiterHandle, ColumnQuota, DeviceArbiter, WindowCharge};
 use super::device::{ComputeDevice, DeviceRun, SimulatorDevice};
 use super::plan::{
     CachedStep, PlanCache, PlanNode, PlanOp, PlanReplay, PlannedOp, StepPlan, StepReport,
@@ -490,6 +491,40 @@ pub struct OffloadSession {
     device_time_scale: f64,
     pending: VecDeque<PendingOp>,
     next_seq: u64,
+    /// Lease on a shared [`DeviceArbiter`], when attached. The local
+    /// timeline and numerics are untouched by attachment (solo-tenant
+    /// arbitrated runs stay bit-identical to direct runs); the session
+    /// additionally *reports* its schedule to the arbiter in windows.
+    arbiter: Option<ArbiterHandle>,
+    /// Local-timeline snapshot at the last arbiter charge point.
+    arb_mark: ArbiterMark,
+}
+
+/// Snapshot of the local timeline at the last window boundary; the next
+/// charge reports the deltas since this mark.
+#[derive(Debug, Clone, Default)]
+struct ArbiterMark {
+    makespan_s: f64,
+    host_busy_s: f64,
+    host_wait_busy_s: f64,
+    device_busy_s: f64,
+    col_busy_s: Vec<f64>,
+    strip: Option<ProblemSize>,
+    invocations: u64,
+}
+
+impl ArbiterMark {
+    fn of(tl: &PipelineTimeline, strip: Option<ProblemSize>, invocations: u64) -> ArbiterMark {
+        ArbiterMark {
+            makespan_s: tl.makespan_s(),
+            host_busy_s: tl.host_busy_s,
+            host_wait_busy_s: tl.host_wait_busy_s,
+            device_busy_s: tl.device_busy_s,
+            col_busy_s: tl.col_busy_s.clone(),
+            strip,
+            invocations,
+        }
+    }
 }
 
 /// Copy (or transpose-copy) `a` into the A BO with row stride `k_p`.
@@ -978,6 +1013,8 @@ impl OffloadSession {
             device_time_scale: 1.0,
             pending: VecDeque::new(),
             next_seq: 0,
+            arbiter: None,
+            arb_mark: ArbiterMark::default(),
         };
         for &s in sizes {
             session.register_size(s)?;
@@ -1555,6 +1592,12 @@ impl OffloadSession {
         prep.free.push_back(p.slot);
         self.invocations += 1;
         self.registry.insert(size, prep);
+        // The eager ring's window boundary: charge the arbiter once the
+        // last in-flight submission has been redeemed (mid-ring waits
+        // roll into the same window as the drain that freed them).
+        if self.pending.is_empty() {
+            self.arbiter_charge();
+        }
         Ok(stats)
     }
 
@@ -1914,6 +1957,7 @@ impl OffloadSession {
         let wall_gemm_s: f64 = plan.ops.iter().map(|o| o.wall_s).sum();
         self.wall_gemm_s += wall_gemm_s;
         self.wall_blocked_s += wall_gemm_s;
+        self.arbiter_charge();
         Ok(StepReport {
             stats,
             order,
@@ -2317,6 +2361,7 @@ impl OffloadSession {
         let wall_blocked_s = replay.blocked_s.unwrap_or(wall_gemm_s);
         self.wall_gemm_s += wall_gemm_s;
         self.wall_blocked_s += wall_blocked_s;
+        self.arbiter_charge();
         Ok(StepReport {
             stats,
             order: entry.order.clone(),
@@ -2431,6 +2476,95 @@ impl OffloadSession {
             p.wall_s = 0.0;
             p.modeled_s = 0.0;
         }
+        // The window mark is a timeline snapshot: re-anchor it so the next
+        // arbiter charge reports deltas against the reset timeline.
+        self.arb_mark = ArbiterMark::of(&self.pipeline, self.current_strip, self.invocations);
+    }
+
+    /// Lease this session's columns from a shared [`DeviceArbiter`] as
+    /// tenant `name` under `quota`. The lease width is the session's
+    /// timeline column count (its shard cap): a `Fixed(n)` quota must fit
+    /// it. Attachment changes nothing about the session's numerics or
+    /// local schedule — it only starts reporting schedule windows to the
+    /// arbiter at every step boundary (plan execute, cached replay, eager
+    /// wait) — so a solo tenant's results and stage accounting are
+    /// bit-identical to the unattached session.
+    pub fn attach_arbiter(
+        &mut self,
+        arbiter: &DeviceArbiter,
+        name: &str,
+        quota: ColumnQuota,
+    ) -> Result<()> {
+        if self.arbiter.is_some() {
+            return Err(Error::config(format!(
+                "offload session #{} already holds an arbiter lease; \
+                 one lease per session",
+                self.id
+            )));
+        }
+        if !self.pending.is_empty() {
+            return Err(Error::config(format!(
+                "cannot attach session #{} to an arbiter with {} submission(s) \
+                 in flight: wait() them first",
+                self.id,
+                self.pending.len()
+            )));
+        }
+        let handle = arbiter.attach(name, quota, self.pipeline.columns(), self.id)?;
+        self.arb_mark = ArbiterMark::of(&self.pipeline, self.current_strip, self.invocations);
+        self.arbiter = Some(handle);
+        Ok(())
+    }
+
+    /// Whether the session holds an arbiter lease.
+    pub fn arbitrated(&self) -> bool {
+        self.arbiter.is_some()
+    }
+
+    /// This tenant's arbiter accounting, if attached.
+    pub fn tenant_report(&self) -> Option<super::arbiter::TenantReport> {
+        self.arbiter.as_ref().map(|h| h.tenant_report())
+    }
+
+    /// Report the local timeline's growth since the last charge point to
+    /// the arbiter as one window. Called at every step boundary; a no-op
+    /// when unattached or when nothing ran. The deltas decompose the
+    /// window into input staging (`pre`), per-column device spans,
+    /// array-wide reconfiguration seconds (the gap between the device
+    /// total and the per-column sum), and output copies (`post`); the
+    /// local makespan growth rides along so the arbiter knows how much
+    /// staging the local schedule already hid.
+    fn arbiter_charge(&mut self) {
+        let Some(handle) = self.arbiter.as_ref() else {
+            return;
+        };
+        let tl = &self.pipeline;
+        let m = &self.arb_mark;
+        let d_host = tl.host_busy_s - m.host_busy_s;
+        let d_post = (tl.host_wait_busy_s - m.host_wait_busy_s).max(0.0);
+        let d_dev = tl.device_busy_s - m.device_busy_s;
+        if d_host <= 0.0 && d_dev <= 0.0 {
+            return;
+        }
+        let col_busy_s: Vec<f64> = tl
+            .col_busy_s
+            .iter()
+            .enumerate()
+            .map(|(i, &b)| (b - m.col_busy_s.get(i).copied().unwrap_or(0.0)).max(0.0))
+            .collect();
+        let col_sum: f64 = col_busy_s.iter().sum();
+        let w = WindowCharge {
+            pre_s: (d_host - d_post).max(0.0),
+            post_s: d_post,
+            col_busy_s,
+            barrier_s: (d_dev - col_sum).max(0.0),
+            makespan_growth_s: (tl.makespan_s() - m.makespan_s).max(0.0),
+            ops: self.invocations.saturating_sub(m.invocations),
+            entry_strip: m.strip,
+            exit_strip: self.current_strip,
+        };
+        self.arb_mark = ArbiterMark::of(tl, self.current_strip, self.invocations);
+        handle.charge_window(w);
     }
 }
 

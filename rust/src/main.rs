@@ -6,9 +6,10 @@
 //!   gemm      — run one offloaded GEMM and print its stage breakdown
 //!   generate  — sample tokens from a (trained) checkpoint
 //!   serve     — decode N concurrent generation requests through the
-//!               KV-cached, continuously-batched serving engine
+//!               KV-cached, continuously-batched serving engine, for one
+//!               tenant or for N sessions sharing the array arbiter
 //!   bench     — regenerate a paper figure/table (fig6..fig9, reconfig,
-//!               accuracy, serve) or `all`
+//!               accuracy, serve, arbiter) or `all`
 //!   inspect   — print model FLOP tables, GEMM sizes, NPU design info
 
 use xdna_repro::bench as paperbench;
@@ -16,13 +17,15 @@ use xdna_repro::coordinator::engine::ExecMode;
 use xdna_repro::coordinator::executor::ExecutorMode;
 use xdna_repro::coordinator::plan::{PlanCache, PlanCacheMode};
 use xdna_repro::coordinator::session::{
-    InputLayout, OffloadSession, QueueDepth, SessionConfig, ShardPolicy,
+    InputLayout, OffloadSession, QueueDepth, SessionConfig, ShardPolicy, Shards,
 };
-use xdna_repro::coordinator::{ReconfigPolicy, SchedulePolicy};
+use xdna_repro::coordinator::{ColumnQuota, DeviceArbiter, ReconfigPolicy, SchedulePolicy};
 use xdna_repro::gemm::sizes::{distinct_sizes, ModelDims, ProblemSize};
 use xdna_repro::model::data::{load_checkpoint, save_checkpoint, synthetic_corpus, DataLoader};
 use xdna_repro::model::trainer::{train, TrainBackend, TrainConfig};
-use xdna_repro::model::{serve, GenRequest, Gpt2Model, KvCacheMode, ModelConfig, ServeConfig};
+use xdna_repro::model::{
+    serve, AdmissionPolicy, GenRequest, Gpt2Model, KvCacheMode, ModelConfig, ServeConfig,
+};
 use xdna_repro::power::profiles::PowerProfile;
 use xdna_repro::util::cli::Args;
 use xdna_repro::util::error::{Error, Result};
@@ -49,8 +52,10 @@ USAGE:
                       [--kv-cache on|off] [--temperature F] [--seed S]
                       [--queue-depth K] [--shards auto|N]
                       [--schedule fifo|batch] [--plan-cache on|off]
+                      [--admission fifo|latency] [--tenants N]
+                      [--quota fair|fixed:N]
   xdna-repro bench    [fig6|fig7|fig8|fig9|pipeline|reconfig|accuracy|
-                       host-model|serve|all] [--json report.json]
+                       host-model|serve|arbiter|all] [--json report.json]
                       [--calibrate]
   xdna-repro inspect  [flops|sizes|npu]
 
@@ -80,7 +85,14 @@ USAGE:
   decode step (continuous batching), and with --plan-cache on the step
   records once and replays from the plan cache for every later token.
   --kv-cache off selects the per-token full-window recompute baseline
-  (bit-identical tokens, eager schedule). See docs/SCHEDULING.md.
+  (bit-identical tokens, eager schedule). --admission latency admits the
+  shortest-deadline pending request first when a batch slot frees
+  (default fifo preserves arrival order bit-for-bit). --tenants N splits
+  the requests round-robin across N serving sessions that share the shim
+  columns through the device arbiter; --quota fair time-shares the whole
+  array, --quota fixed:K leases each tenant K dedicated columns.
+  `bench arbiter` prices solo vs shared vs time-sliced occupancy ladders.
+  See docs/SCHEDULING.md.
 ";
 
 fn main() {
@@ -336,10 +348,6 @@ fn cmd_generate(args: &Args) -> Result<()> {
 fn cmd_serve(args: &Args) -> Result<()> {
     let cfg = ModelConfig::by_name(args.get_or("config", "d2"))?;
     let seed = args.get_parse("seed", 42u64)?;
-    let mut model = match args.get("load") {
-        Some(path) => Gpt2Model::with_params(cfg, load_checkpoint(path, &cfg)?),
-        None => Gpt2Model::new(cfg, seed),
-    };
     let n_requests = args.get_parse("requests", 4usize)?;
     let new_tokens = args.get_parse("tokens", 16usize)?;
     let prompt_len = args.get_parse("prompt-len", 4usize)?;
@@ -350,6 +358,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let shards = args.get_parse("shards", ShardPolicy::default())?;
     let schedule = args.get_parse("schedule", SchedulePolicy::BatchBySize)?;
     let plan_cache = args.get_parse("plan-cache", PlanCacheMode::On)?.enabled();
+    let admission = args.get_parse("admission", AdmissionPolicy::Fifo)?;
+    let tenants = args.get_parse("tenants", 1usize)?;
+    let quota = args.get_parse("quota", ColumnQuota::FairShare)?;
+    if tenants == 0 {
+        return Err(Error::config("--tenants must be at least 1"));
+    }
 
     // Distinct per-request prompts and sampling seeds (a request's token
     // stream never depends on which other requests share its batch).
@@ -362,6 +376,101 @@ fn cmd_serve(args: &Args) -> Result<()> {
         })
         .collect();
 
+    let serve_cfg = ServeConfig {
+        max_batch,
+        temperature,
+        kv_cache: kv,
+        admission,
+    };
+    let use_cache = plan_cache && kv.enabled();
+    let load_model = || -> Result<Gpt2Model> {
+        Ok(match args.get("load") {
+            Some(path) => Gpt2Model::with_params(cfg, load_checkpoint(path, &cfg)?),
+            None => Gpt2Model::new(cfg, seed),
+        })
+    };
+
+    if tenants > 1 {
+        // Multi-tenant: N serving sessions lease column partitions from
+        // one DeviceArbiter, requests dealt round-robin across tenants.
+        // A fixed:n quota narrows each session's shard width to fit its
+        // lease unless --shards was given explicitly.
+        let tenant_shards = match (quota, args.get("shards")) {
+            (ColumnQuota::Fixed(n), None) => ShardPolicy::Fixed(Shards(n)),
+            _ => shards,
+        };
+        println!(
+            "serving {n_requests} request(s) x {new_tokens} token(s) on {} across \
+             {tenants} tenant(s) (quota {quota}, kv-cache {kv}, max batch {max_batch}, \
+             admission {admission})",
+            args.get_or("config", "d2")
+        );
+        let arbiter = DeviceArbiter::new();
+        let mut total_tokens = 0usize;
+        for t in 0..tenants {
+            let mine: Vec<GenRequest> = requests
+                .iter()
+                .enumerate()
+                .filter(|(i, _)| i % tenants == t)
+                .map(|(_, r)| r.clone())
+                .collect();
+            let mut model = load_model()?;
+            let mut sess = OffloadSession::new(
+                SessionConfig {
+                    depth,
+                    shards: tenant_shards,
+                    schedule,
+                    ..Default::default()
+                },
+                &[],
+            )?;
+            let name = format!("tenant-{t}");
+            sess.attach_arbiter(&arbiter, &name, quota)?;
+            let mut cache = PlanCache::new();
+            let cache_ref = use_cache.then_some(&mut cache);
+            let report = serve(&mut model, &mine, &mut sess, cache_ref, &serve_cfg)?;
+            total_tokens += report.tokens;
+            println!(
+                "{name}: {} request(s) -> {} token(s) in {} step(s), modeled {:.2} ms",
+                mine.len(),
+                report.tokens,
+                report.steps,
+                report.modeled_s * 1e3
+            );
+            if use_cache {
+                println!(
+                    "  plan cache: {} hit(s), {} miss(es)",
+                    report.plan_cache_hits, report.plan_cache_misses
+                );
+            }
+        }
+        let rep = arbiter.report();
+        println!(
+            "arbiter: {} tenant(s) decoded {total_tokens} token(s); makespan {:.2} ms, \
+             utilization {:.2}, Jain fairness {:.3}",
+            rep.tenants.len(),
+            rep.makespan_s * 1e3,
+            rep.utilization,
+            rep.jain_index
+        );
+        for tr in &rep.tenants {
+            println!(
+                "  {}: quota {}, width {}, busy {:.2} ms ({:.0}% of makespan), \
+                 reconfigs {} charged / {} amortized, lease wait {:.2} ms",
+                tr.name,
+                tr.quota,
+                tr.lease_width,
+                tr.busy_s * 1e3,
+                tr.makespan_share * 100.0,
+                tr.reconfigs_charged,
+                tr.reconfigs_amortized,
+                tr.wait_for_lease_s * 1e3
+            );
+        }
+        return Ok(());
+    }
+
+    let mut model = load_model()?;
     let mut sess = OffloadSession::new(
         SessionConfig {
             depth,
@@ -372,17 +481,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
         &[],
     )?;
     let mut cache = PlanCache::new();
-    let serve_cfg = ServeConfig {
-        max_batch,
-        temperature,
-        kv_cache: kv,
-    };
     println!(
         "serving {n_requests} request(s) x {new_tokens} token(s) on {} \
          (kv-cache {kv}, max batch {max_batch})",
         args.get_or("config", "d2")
     );
-    let use_cache = plan_cache && kv.enabled();
     let cache_ref = use_cache.then_some(&mut cache);
     let report = serve(&mut model, &requests, &mut sess, cache_ref, &serve_cfg)?;
     println!(
@@ -427,10 +530,11 @@ fn cmd_bench(args: &Args) -> Result<()> {
                 PowerProfile::battery(),
             ]),
             "serve" => paperbench::serve::json_report(),
+            "arbiter" => paperbench::arbiter::json_report(),
             _ => {
                 return Err(Error::config(format!(
-                    "--json is only available for `bench pipeline`, `bench serve`, or `all`, \
-                     not `bench {which}`"
+                    "--json is only available for `bench pipeline`, `bench serve`, \
+                     `bench arbiter`, or `all`, not `bench {which}`"
                 )))
             }
         };
@@ -453,6 +557,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
         "reconfig" => paperbench::reconfig::print()?,
         "accuracy" => paperbench::accuracy::print(false)?,
         "serve" => paperbench::serve::print(),
+        "arbiter" => paperbench::arbiter::print(),
         "host-model" => {
             if args.flag("calibrate") {
                 paperbench::host_model::print_calibration();
@@ -471,6 +576,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
             paperbench::reconfig::print()?;
             paperbench::accuracy::print(false)?;
             paperbench::serve::print();
+            paperbench::arbiter::print();
         }
         other => return Err(Error::config(format!("unknown bench '{other}'"))),
     }

@@ -65,6 +65,45 @@ pub struct Generation {
     pub final_logits: Vec<f32>,
 }
 
+/// How the serving loop picks the next pending request when a batch slot
+/// frees up. Admission only reorders *when* a request starts; each
+/// request's token stream is independent of its batchmates (per-request
+/// seed and KV-cache), so the policy never changes any request's tokens.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum AdmissionPolicy {
+    /// Arrival order — the default, and the behavior every earlier rung
+    /// shipped with (bit-identical reports aside from the wait column).
+    #[default]
+    Fifo,
+    /// Shortest-job-first: admit the pending request with the smallest
+    /// total footprint (prompt length + token budget), ties by arrival
+    /// order. A latency proxy: short requests stop waiting behind long
+    /// ones, at the usual SJF fairness cost to the long tail.
+    Latency,
+}
+
+impl std::fmt::Display for AdmissionPolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            AdmissionPolicy::Fifo => write!(f, "fifo"),
+            AdmissionPolicy::Latency => write!(f, "latency"),
+        }
+    }
+}
+
+impl std::str::FromStr for AdmissionPolicy {
+    type Err = Error;
+    fn from_str(s: &str) -> Result<AdmissionPolicy> {
+        match s {
+            "fifo" => Ok(AdmissionPolicy::Fifo),
+            "latency" => Ok(AdmissionPolicy::Latency),
+            other => Err(Error::config(format!(
+                "unknown admission policy '{other}' (expected 'fifo' or 'latency')"
+            ))),
+        }
+    }
+}
+
 /// Serving configuration.
 #[derive(Debug, Clone, Copy)]
 pub struct ServeConfig {
@@ -73,6 +112,8 @@ pub struct ServeConfig {
     pub temperature: f32,
     /// `Off` selects the per-token full-window recompute baseline.
     pub kv_cache: KvCacheMode,
+    /// Which pending request a free batch slot admits.
+    pub admission: AdmissionPolicy,
 }
 
 impl Default for ServeConfig {
@@ -81,6 +122,7 @@ impl Default for ServeConfig {
             max_batch: 4,
             temperature: 0.8,
             kv_cache: KvCacheMode::On,
+            admission: AdmissionPolicy::Fifo,
         }
     }
 }
@@ -100,6 +142,10 @@ pub struct ServeReport {
     pub prefill_s: f64,
     /// Per-token latencies across all requests, in generation order.
     pub latencies_s: Vec<f64>,
+    /// Per-request admission wait, indexed by request id: the modeled
+    /// seconds that had elapsed when the request won a batch slot (all
+    /// requests arrive at t = 0).
+    pub admission_waits_s: Vec<f64>,
     pub plan_cache_hits: u64,
     pub plan_cache_misses: u64,
 }
@@ -232,6 +278,7 @@ pub fn serve(
                 ..Generation::default()
             })
             .collect(),
+        admission_waits_s: vec![0.0; requests.len()],
         ..ServeReport::default()
     };
     let (hits0, misses0) = match cache.as_deref() {
@@ -264,14 +311,28 @@ fn serve_kv(
     let mcfg = model.cfg;
     let max_batch = cfg.max_batch.max(1);
     let mut scratch = DecodeActs::new(&mcfg, max_batch);
-    let mut next_admit = 0usize;
+    // Pending request ids, in arrival order. Fifo pops the front —
+    // exactly the pre-admission-policy behavior; Latency pops the
+    // smallest-footprint request.
+    let mut pending: Vec<usize> = (0..requests.len()).collect();
     let mut active: Vec<ActiveGen> = Vec::new();
 
     loop {
-        // Admit FIFO until the batching window is full.
-        while active.len() < max_batch && next_admit < requests.len() {
-            let idx = next_admit;
-            next_admit += 1;
+        // Admit until the batching window is full.
+        while active.len() < max_batch && !pending.is_empty() {
+            let pick = match cfg.admission {
+                AdmissionPolicy::Fifo => 0,
+                AdmissionPolicy::Latency => pending
+                    .iter()
+                    .enumerate()
+                    .min_by_key(|&(_, &idx)| {
+                        (requests[idx].prompt.len() + requests[idx].max_new_tokens, idx)
+                    })
+                    .map(|(i, _)| i)
+                    .unwrap(),
+            };
+            let idx = pending.remove(pick);
+            report.admission_waits_s[idx] = report.modeled_s;
             if requests[idx].max_new_tokens == 0 {
                 continue;
             }
@@ -551,7 +612,13 @@ fn serve_recompute(
     report: &mut ServeReport,
 ) -> Result<()> {
     let vp = model.cfg.padded_vocab_size;
-    for (idx, req) in requests.iter().enumerate() {
+    let mut order: Vec<usize> = (0..requests.len()).collect();
+    if cfg.admission == AdmissionPolicy::Latency {
+        order.sort_by_key(|&i| (requests[i].prompt.len() + requests[i].max_new_tokens, i));
+    }
+    for idx in order {
+        let req = &requests[idx];
+        report.admission_waits_s[idx] = report.modeled_s;
         if req.max_new_tokens == 0 {
             continue;
         }
@@ -623,6 +690,53 @@ mod tests {
         )
         .unwrap_err();
         assert!(err.to_string().contains("context"), "{err}");
+    }
+
+    #[test]
+    fn admission_policy_parses_cli_forms() {
+        assert_eq!("fifo".parse::<AdmissionPolicy>().unwrap(), AdmissionPolicy::Fifo);
+        assert_eq!(
+            "latency".parse::<AdmissionPolicy>().unwrap(),
+            AdmissionPolicy::Latency
+        );
+        assert!("sjf".parse::<AdmissionPolicy>().is_err());
+        assert_eq!(AdmissionPolicy::default(), AdmissionPolicy::Fifo);
+        assert_eq!(AdmissionPolicy::Fifo.to_string(), "fifo");
+        assert_eq!(AdmissionPolicy::Latency.to_string(), "latency");
+    }
+
+    #[test]
+    fn latency_admission_reorders_waits_but_not_tokens() {
+        // One long request ahead of one short one, a single batch slot:
+        // FIFO makes the short request wait out the long generation;
+        // latency admission runs it first. Tokens are per-request
+        // deterministic either way.
+        let reqs = [
+            GenRequest::new(vec![5, 9, 2, 7], 6, 31),
+            GenRequest::new(vec![3, 1], 2, 32),
+        ];
+        let mut run = |admission: AdmissionPolicy| {
+            let mut model = Gpt2Model::new(ModelConfig::d2(), 7);
+            let cfg = ServeConfig {
+                max_batch: 1,
+                admission,
+                ..ServeConfig::default()
+            };
+            serve(&mut model, &reqs, &mut session(), None, &cfg).unwrap()
+        };
+        let fifo = run(AdmissionPolicy::Fifo);
+        let latency = run(AdmissionPolicy::Latency);
+        for (f, l) in fifo.generations.iter().zip(&latency.generations) {
+            assert_eq!(f.tokens, l.tokens, "admission must not change token streams");
+            assert_eq!(f.final_logits, l.final_logits);
+        }
+        assert_eq!(fifo.admission_waits_s[0], 0.0, "FIFO admits arrival order");
+        assert!(fifo.admission_waits_s[1] > 0.0, "short request waits under FIFO");
+        assert_eq!(
+            latency.admission_waits_s[1], 0.0,
+            "latency admission runs the short request first"
+        );
+        assert!(latency.admission_waits_s[0] > 0.0);
     }
 
     #[test]

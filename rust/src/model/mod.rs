@@ -23,7 +23,7 @@ pub mod params;
 pub mod trainer;
 
 pub use config::ModelConfig;
-pub use generate::{serve, GenRequest, Generation, ServeConfig, ServeReport};
+pub use generate::{serve, AdmissionPolicy, GenRequest, Generation, ServeConfig, ServeReport};
 pub use kv_cache::{KvCache, KvCacheMode};
 pub use model::{Gpt2Model, OpTimers};
 pub use params::{ParamTensors, PARAM_NAMES};

@@ -356,10 +356,12 @@ impl Gpt2Model {
         // LM head backward: dlnf = dlogits · wte ; dwte += dlogitsᵀ · lnf.
         {
             let t0 = std::time::Instant::now();
+            let dw_off = grads.tensor_range("wte")?.0;
             matmul::backward(
                 dispatch,
                 &mut g.d_lnf,
                 grads.tensor_mut("wte"),
+                dw_off,
                 None,
                 &g.d_logits,
                 &acts.lnf,
@@ -407,11 +409,13 @@ impl Gpt2Model {
             g.d_fch_gelu.fill(0.0);
             {
                 let t0 = std::time::Instant::now();
+                let dw_off = grads.layer_range("fcprojw", l)?.0;
                 let (dw, db) = grads.pair_mut("fcprojw", Some(l), "fcprojb", Some(l));
                 matmul::backward(
                     dispatch,
                     &mut g.d_fch_gelu,
                     dw,
+                    dw_off,
                     Some(db),
                     &g.d_fcproj,
                     &acts.fch_gelu[l * bt * 4 * c..(l + 1) * bt * 4 * c],
@@ -436,11 +440,13 @@ impl Gpt2Model {
             g.d_ln2.fill(0.0);
             {
                 let t0 = std::time::Instant::now();
+                let dw_off = grads.layer_range("fcw", l)?.0;
                 let (dw, db) = grads.pair_mut("fcw", Some(l), "fcb", Some(l));
                 matmul::backward(
                     dispatch,
                     &mut g.d_ln2,
                     dw,
+                    dw_off,
                     Some(db),
                     &g.d_fch,
                     &acts.ln2[l * bt * c..(l + 1) * bt * c],
@@ -480,11 +486,13 @@ impl Gpt2Model {
             g.d_atty.fill(0.0);
             {
                 let t0 = std::time::Instant::now();
+                let dw_off = grads.layer_range("attprojw", l)?.0;
                 let (dw, db) = grads.pair_mut("attprojw", Some(l), "attprojb", Some(l));
                 matmul::backward(
                     dispatch,
                     &mut g.d_atty,
                     dw,
+                    dw_off,
                     Some(db),
                     &g.d_attproj,
                     &acts.atty[l * bt * c..(l + 1) * bt * c],
@@ -517,11 +525,13 @@ impl Gpt2Model {
             g.d_ln1.fill(0.0);
             {
                 let t0 = std::time::Instant::now();
+                let dw_off = grads.layer_range("qkvw", l)?.0;
                 let (dw, db) = grads.pair_mut("qkvw", Some(l), "qkvb", Some(l));
                 matmul::backward(
                     dispatch,
                     &mut g.d_ln1,
                     dw,
+                    dw_off,
                     Some(db),
                     &g.d_qkv,
                     &acts.ln1[l * bt * c..(l + 1) * bt * c],

@@ -147,10 +147,18 @@ pub fn forward(
 }
 
 /// dinp += dout · W ; dweight += doutᵀ · inp ; dbias += Σ_rows dout.
+///
+/// `dw_off` is `dweight`'s offset inside the model's gradient arena
+/// (`ParamTensors::as_mut_slice`). Only the `BackgroundReplay` arm uses
+/// it: the deferred dW job names its accumulation target by that offset
+/// (no pointer crosses the executor thread boundary) and the trainer
+/// applies it at step end via `ExecClient::drain_and_apply`. Every other
+/// arm accumulates through `dweight` directly and ignores the offset.
 pub fn backward(
     dispatch: &mut MatmulDispatch,
     dinp: &mut [f32],
     dweight: &mut [f32],
+    dw_off: usize,
     dbias: Option<&mut [f32]>,
     dout: &[f32],
     inp: &[f32],
@@ -309,10 +317,12 @@ pub fn backward(
             // the executor before returning; nothing between the
             // submits and the wait can unwind.
             let (n_dinp, h_dinp) = unsafe { client.submit(&op_dinp, dout, weight, &mut tmp)? };
-            // inp is a saved forward activation and dweight a gradient
-            // tensor, both untouched until the optimizer runs.
-            // SAFETY: exactly the submit_deferred contract above.
-            unsafe { client.submit_deferred(&op_dw, dout_copy, inp, dweight)? };
+            // The dW target is named by arena offset; the trainer applies
+            // the accumulation at step end (drain_and_apply), after this
+            // frame's dweight borrow is long gone.
+            // SAFETY: inp is a saved forward activation, stable for the
+            // whole step — exactly the submit_deferred contract.
+            unsafe { client.submit_deferred(&op_dw, dout_copy, inp, dw_off, dweight.len())? };
             client.set_chain(n_dinp);
             client.wait(h_dinp)?;
             // This merge (and the bias reduction below) overlaps the
@@ -435,6 +445,7 @@ mod tests {
             &mut MatmulDispatch::Cpu,
             &mut dinp,
             &mut dw,
+            0,
             Some(&mut dbias),
             &dout,
             &inp,
@@ -480,7 +491,7 @@ mod tests {
         let mut dinp_c = vec![0.0; bt * ic];
         let mut dw_c = vec![0.0; oc * ic];
         backward(
-            &mut MatmulDispatch::Cpu, &mut dinp_c, &mut dw_c, None, &dout, &inp, &w, bt, ic, oc,
+            &mut MatmulDispatch::Cpu, &mut dinp_c, &mut dw_c, 0, None, &dout, &inp, &w, bt, ic, oc,
         )
         .unwrap();
 
@@ -491,6 +502,7 @@ mod tests {
             &mut MatmulDispatch::Npu(&mut eng),
             &mut dinp_n,
             &mut dw_n,
+            0,
             None,
             &dout,
             &inp,
@@ -535,6 +547,7 @@ mod tests {
                 &mut MatmulDispatch::Npu(&mut sess),
                 &mut dinp,
                 &mut dw,
+                0,
                 None,
                 &dout,
                 &inp,
@@ -572,6 +585,7 @@ mod tests {
             &mut MatmulDispatch::Npu(&mut eager_sess),
             &mut dinp_e,
             &mut dw_e,
+            0,
             None,
             &dout,
             &inp,
@@ -600,6 +614,7 @@ mod tests {
             },
             &mut dinp_p,
             &mut dw_p,
+            0,
             None,
             &dout,
             &inp,
@@ -653,6 +668,7 @@ mod tests {
             },
             &mut dinp_r,
             &mut dw_r,
+            0,
             None,
             &dout,
             &inp,
@@ -679,6 +695,7 @@ mod tests {
             },
             &mut dinp_p,
             &mut dw_p,
+            0,
             None,
             &dout2,
             &inp,
@@ -700,6 +717,7 @@ mod tests {
             &mut MatmulDispatch::Npu(&mut eager),
             &mut dinp_e,
             &mut dw_e,
+            0,
             None,
             &dout2,
             &inp,
@@ -721,6 +739,7 @@ mod tests {
             },
             &mut vec![0.0; bt * 2 * ic],
             &mut dw_p,
+            0,
             None,
             &rand(&mut rng, bt * 2 * oc),
             &rand(&mut rng, bt * 2 * ic),

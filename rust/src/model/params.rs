@@ -146,6 +146,15 @@ impl ParamTensors {
         self.entry(name)
     }
 
+    /// Flat (offset, len) of layer `l`'s slice of a per-layer tensor —
+    /// the arena coordinates the background executor's deferred dW jobs
+    /// name instead of pointers.
+    pub fn layer_range(&self, name: &str, l: usize) -> Result<(usize, usize)> {
+        let (off, len) = self.entry(name)?;
+        let per = len / self.cfg.num_layers;
+        Ok((off + l * per, per))
+    }
+
     /// Two simultaneous mutable tensor views (optionally layer-sliced).
     /// The backward pass needs (dweight, dbias) pairs at once; tensors are
     /// disjoint by construction, asserted here before the unsafe split.
@@ -217,6 +226,19 @@ mod tests {
         let full = p.tensor("qkvw").len();
         let per: usize = (0..cfg.num_layers).map(|l| p.layer("qkvw", l).len()).sum();
         assert_eq!(full, per);
+    }
+
+    #[test]
+    fn layer_range_names_the_layer_view_in_arena_coordinates() {
+        let cfg = ModelConfig::d2();
+        let p = ParamTensors::zeros(&cfg);
+        for l in 0..cfg.num_layers {
+            let (off, len) = p.layer_range("fcprojw", l).unwrap();
+            assert_eq!(len, p.layer("fcprojw", l).len());
+            let (t_off, _) = p.tensor_range("fcprojw").unwrap();
+            assert_eq!(off, t_off + l * len);
+        }
+        assert!(p.layer_range("nope", 0).is_err());
     }
 
     #[test]

@@ -187,6 +187,16 @@ pub fn train(
                                             .unwrap();
                                         model.zero_grad();
                                         model.backward(&mut d)?;
+                                        // Apply the deferred dW jobs the
+                                        // backward pass named by arena
+                                        // offset — the gradient arena's
+                                        // only live borrow is right here.
+                                        let MatmulDispatch::BackgroundReplay { client } = d
+                                        else {
+                                            unreachable!("dispatch fixed above")
+                                        };
+                                        client
+                                            .drain_and_apply(model.grads.as_mut_slice())?;
                                         Ok(l)
                                     },
                                 );

@@ -225,6 +225,16 @@ pub struct PipelineTimeline {
     pub host_busy_s: f64,
     /// Sum of device-side stage durations (reconfig + kernel + syncs).
     pub device_busy_s: f64,
+    /// Per-column share of `device_busy_s` from [`PipelineTimeline::run_on`]
+    /// spans only. Array-wide barriers charge `device_busy_s` but no single
+    /// column, so `device_busy_s - col_busy_s.sum()` is exactly the
+    /// reconfiguration (barrier) seconds — the split the device arbiter
+    /// uses to price a tenant's window.
+    pub col_busy_s: Vec<f64>,
+    /// The output-copy share of `host_busy_s` (seconds charged via
+    /// [`PipelineTimeline::wait`]). `host_busy_s - host_wait_busy_s` is
+    /// the input-staging share charged via [`PipelineTimeline::stage`].
+    pub host_wait_busy_s: f64,
 }
 
 impl Default for PipelineTimeline {
@@ -246,6 +256,8 @@ impl PipelineTimeline {
             device_cursor_s: vec![0.0; columns.max(1)],
             host_busy_s: 0.0,
             device_busy_s: 0.0,
+            col_busy_s: vec![0.0; columns.max(1)],
+            host_wait_busy_s: 0.0,
         }
     }
 
@@ -270,6 +282,7 @@ impl PipelineTimeline {
         let start = self.device_cursor_s[col].max(ready_s);
         self.device_cursor_s[col] = start + device_s;
         self.device_busy_s += device_s;
+        self.col_busy_s[col] += device_s;
         self.device_cursor_s[col]
     }
 
@@ -302,6 +315,7 @@ impl PipelineTimeline {
     pub fn wait(&mut self, device_done_s: f64, host_post_s: f64) {
         self.host_cursor_s = self.host_cursor_s.max(device_done_s) + host_post_s;
         self.host_busy_s += host_post_s;
+        self.host_wait_busy_s += host_post_s;
     }
 
     fn device_cursor_max(&self) -> f64 {
@@ -574,6 +588,28 @@ mod tests {
         assert!((d0 - 7.0).abs() < 1e-12);
         assert!((d1 - 7.0).abs() < 1e-12);
         assert!((tl.device_busy_s - 9.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn busy_splits_partition_the_totals() {
+        // col_busy_s splits device_busy_s (barriers are the remainder) and
+        // host_wait_busy_s splits host_busy_s (staging is the remainder).
+        let mut tl = PipelineTimeline::with_columns(2);
+        let ready = tl.stage(1.5);
+        tl.run_on(0, ready, 4.0);
+        tl.run_on(1, ready, 1.0);
+        let end = tl.barrier(0.0, 2.0);
+        let done = tl.run_on(1, end, 3.0);
+        tl.wait(done, 0.75);
+        assert!((tl.col_busy_s[0] - 4.0).abs() < 1e-12);
+        assert!((tl.col_busy_s[1] - 4.0).abs() < 1e-12);
+        let col_sum: f64 = tl.col_busy_s.iter().sum();
+        assert!((tl.device_busy_s - col_sum - 2.0).abs() < 1e-12, "barrier is the gap");
+        assert!((tl.host_wait_busy_s - 0.75).abs() < 1e-12);
+        assert!((tl.host_busy_s - tl.host_wait_busy_s - 1.5).abs() < 1e-12);
+        tl.reset();
+        assert_eq!(tl.col_busy_s, vec![0.0, 0.0]);
+        assert_eq!(tl.host_wait_busy_s, 0.0);
     }
 
     #[test]

@@ -1,0 +1,311 @@
+//! Device-arbiter integration: a solo arbitrated session must behave
+//! bit-for-bit like an unattached one (GEMM outputs, Figure-7 stage
+//! breakdown, training losses, decode streams), quota and attachment
+//! misuse must fail with specific errors, and a 4-way fixed-lease
+//! split must keep every tenant inside its partition with near-perfect
+//! fairness on identical workloads.
+
+use xdna_repro::coordinator::executor::ExecutorMode;
+use xdna_repro::coordinator::plan::PlanCache;
+use xdna_repro::coordinator::scheduler::SchedulePolicy;
+use xdna_repro::coordinator::session::{
+    InputLayout, OffloadSession, QueueDepth, SessionConfig, ShardPolicy, Shards,
+    STAGE_INPUT_COPY, STAGE_INPUT_SYNC, STAGE_KERNEL, STAGE_OUTPUT_COPY, STAGE_OUTPUT_SYNC,
+    STAGE_RECONFIG, STAGE_TRANSPOSE,
+};
+use xdna_repro::coordinator::{ColumnQuota, DeviceArbiter};
+use xdna_repro::gemm::sizes::{distinct_sizes, ModelDims, ProblemSize};
+use xdna_repro::model::generate::{serve, GenRequest, ServeConfig};
+use xdna_repro::model::trainer::{train_synthetic, TrainBackend, TrainConfig};
+use xdna_repro::model::{Gpt2Model, ModelConfig};
+use xdna_repro::power::profiles::PowerProfile;
+use xdna_repro::util::rng::Rng;
+
+const ALL_STAGES: [&str; 7] = [
+    STAGE_INPUT_COPY,
+    STAGE_TRANSPOSE,
+    STAGE_INPUT_SYNC,
+    STAGE_RECONFIG,
+    STAGE_KERNEL,
+    STAGE_OUTPUT_SYNC,
+    STAGE_OUTPUT_COPY,
+];
+
+fn session(depth: usize, shards: usize, schedule: SchedulePolicy) -> OffloadSession {
+    OffloadSession::new(
+        SessionConfig {
+            depth: QueueDepth(depth),
+            shards: ShardPolicy::Fixed(Shards(shards)),
+            schedule,
+            ..Default::default()
+        },
+        &[],
+    )
+    .unwrap()
+}
+
+/// The twelve GPT-2 GEMM-site shapes at the reduced dimensions the other
+/// integration suites use (same fwd / bwd-data / bwd-weight patterns,
+/// shrunk to stay fast in CI).
+fn scaled_gpt2_sizes() -> Vec<ProblemSize> {
+    let dims = ModelDims {
+        batch: 1,
+        seq: 64,
+        channels: 128,
+        padded_vocab: 1024,
+        layers: 2,
+    };
+    let sizes = distinct_sizes(&dims);
+    assert_eq!(sizes.len(), 12, "scaled dims must keep all twelve shapes");
+    sizes
+}
+
+fn random_inputs(size: ProblemSize, seed: u64) -> (Vec<f32>, Vec<f32>) {
+    let mut rng = Rng::new(seed);
+    let mut a = vec![0.0f32; size.m * size.k];
+    let mut b_t = vec![0.0f32; size.n * size.k];
+    rng.fill_normal(&mut a, 0.0, 1.0);
+    rng.fill_normal(&mut b_t, 0.0, 0.1);
+    (a, b_t)
+}
+
+/// Holding a lease must never change numerics or the local schedule: on
+/// every one of the twelve site shapes, an arbitrated session's output
+/// and modeled makespan equal the unattached session's exactly.
+#[test]
+fn solo_arbitrated_gemm_bit_identical_on_all_twelve_site_shapes() {
+    for (i, &size) in scaled_gpt2_sizes().iter().enumerate() {
+        let (a, b_t) = random_inputs(size, 4000 + i as u64);
+        let mut plain_out = vec![0.0f32; size.m * size.n];
+        let mut plain = session(2, 2, SchedulePolicy::BatchBySize);
+        plain.gemm(size, &a, &b_t, InputLayout::Transposed, &mut plain_out).unwrap();
+
+        let arbiter = DeviceArbiter::new();
+        let mut leased = session(2, 2, SchedulePolicy::BatchBySize);
+        leased.attach_arbiter(&arbiter, "solo", ColumnQuota::FairShare).unwrap();
+        assert!(leased.arbitrated());
+        let mut leased_out = vec![0.0f32; size.m * size.n];
+        leased.gemm(size, &a, &b_t, InputLayout::Transposed, &mut leased_out).unwrap();
+
+        assert_eq!(plain_out, leased_out, "{size}: lease changed numerics");
+        assert_eq!(
+            plain.pipeline.makespan_s(),
+            leased.pipeline.makespan_s(),
+            "{size}: lease changed the local schedule"
+        );
+        let t = leased.tenant_report().unwrap();
+        assert!(t.windows >= 1 && t.ops >= 1, "{size}: window uncharged");
+    }
+}
+
+/// A depth-1 FIFO session is the paper's strictly serial Figure-7
+/// invocation path; attaching it to an arbiter must leave the per-stage
+/// modeled breakdown identical, stage for stage.
+#[test]
+fn depth1_fifo_stage_breakdown_unchanged_by_attachment() {
+    let sizes = scaled_gpt2_sizes();
+    let run = |arbiter: Option<&DeviceArbiter>| -> (Vec<Vec<f32>>, Vec<f64>) {
+        let mut sess = session(1, 1, SchedulePolicy::Fifo);
+        if let Some(arb) = arbiter {
+            sess.attach_arbiter(arb, "fig7", ColumnQuota::FairShare).unwrap();
+        }
+        let mut outs = Vec::new();
+        for (i, &size) in sizes.iter().enumerate() {
+            let (a, b_t) = random_inputs(size, 5000 + i as u64);
+            let mut c = vec![0.0f32; size.m * size.n];
+            sess.gemm(size, &a, &b_t, InputLayout::Transposed, &mut c).unwrap();
+            outs.push(c);
+        }
+        let stages = ALL_STAGES.iter().map(|s| sess.modeled_stage_s(s)).collect();
+        (outs, stages)
+    };
+    let (plain_outs, plain_stages) = run(None);
+    let arbiter = DeviceArbiter::new();
+    let (leased_outs, leased_stages) = run(Some(&arbiter));
+    assert_eq!(plain_outs, leased_outs, "attachment changed numerics");
+    for (name, (p, l)) in ALL_STAGES.iter().zip(plain_stages.iter().zip(&leased_stages)) {
+        assert_eq!(p, l, "stage '{name}' modeled seconds diverged under the lease");
+    }
+    assert!(arbiter.makespan_s() > 0.0, "the solo tenant's windows were never placed");
+}
+
+/// End to end on the model paths: a planned-and-cached training run and
+/// a KV-cached decode stream produce bit-identical losses / tokens /
+/// logits whether or not the session holds a lease.
+#[test]
+fn arbitrated_training_and_decode_match_unarbitrated() {
+    let cfg = ModelConfig::d2();
+    let tc = TrainConfig {
+        batch: 2,
+        seq: 16,
+        epochs: 2,
+        steps_per_epoch: 2,
+        power: PowerProfile::mains(),
+        ..Default::default()
+    };
+    let train_losses = |arbiter: Option<&DeviceArbiter>| -> Vec<f32> {
+        let mut sess = session(2, 2, SchedulePolicy::BatchBySize);
+        if let Some(arb) = arbiter {
+            sess.attach_arbiter(arb, "train", ColumnQuota::Fixed(2)).unwrap();
+        }
+        let mut cache = PlanCache::new();
+        let stats = train_synthetic(
+            cfg,
+            &tc,
+            &mut TrainBackend::CpuNpuPlanned {
+                session: &mut sess,
+                cache: Some(&mut cache),
+                executor: ExecutorMode::Sync,
+            },
+            17,
+        )
+        .unwrap();
+        assert!(cache.hits() >= 1, "the cached step must replay");
+        stats.iter().map(|s| s.loss).collect()
+    };
+    let arbiter = DeviceArbiter::new();
+    assert_eq!(
+        train_losses(None),
+        train_losses(Some(&arbiter)),
+        "training losses diverged under the lease"
+    );
+
+    let requests: Vec<GenRequest> = (0..3)
+        .map(|i| {
+            let prompt: Vec<i32> = (0..4).map(|t| (t * 11 + i) % 256).collect();
+            GenRequest::new(prompt, 6, 900 + i as u64)
+        })
+        .collect();
+    let decode = |arbiter: Option<&DeviceArbiter>| {
+        let mut model = Gpt2Model::new(cfg, 71);
+        let mut sess = session(2, 2, SchedulePolicy::BatchBySize);
+        if let Some(arb) = arbiter {
+            sess.attach_arbiter(arb, "serve", ColumnQuota::FairShare).unwrap();
+        }
+        let mut cache = PlanCache::new();
+        serve(
+            &mut model,
+            &requests,
+            &mut sess,
+            Some(&mut cache),
+            &ServeConfig {
+                temperature: 1.0,
+                ..Default::default()
+            },
+        )
+        .unwrap()
+        .generations
+    };
+    let plain = decode(None);
+    let leased = decode(Some(&arbiter));
+    for (p, l) in plain.iter().zip(&leased) {
+        assert_eq!(p.tokens, l.tokens, "request {} tokens diverged", p.id);
+        assert_eq!(p.final_logits, l.final_logits, "request {} logits diverged", p.id);
+    }
+}
+
+/// Attachment misuse fails up front with specific, actionable errors.
+#[test]
+fn attach_misuse_errors_are_specific() {
+    let arbiter = DeviceArbiter::new();
+
+    // One lease per session.
+    let mut sess = session(1, 1, SchedulePolicy::Fifo);
+    sess.attach_arbiter(&arbiter, "first", ColumnQuota::FairShare).unwrap();
+    let err = sess.attach_arbiter(&arbiter, "again", ColumnQuota::FairShare).unwrap_err();
+    assert!(
+        err.to_string().contains("already holds an arbiter lease"),
+        "unexpected error: {err}"
+    );
+
+    // A session wider than its fixed lease.
+    let arbiter = DeviceArbiter::new();
+    let mut wide = session(1, 4, SchedulePolicy::Fifo);
+    let err = wide.attach_arbiter(&arbiter, "wide", ColumnQuota::Fixed(2)).unwrap_err();
+    assert!(err.to_string().contains("widen the quota"), "unexpected error: {err}");
+
+    // Fixed leases that over-subscribe the four columns.
+    let arbiter = DeviceArbiter::new();
+    let mut a = session(1, 3, SchedulePolicy::Fifo);
+    a.attach_arbiter(&arbiter, "a", ColumnQuota::Fixed(3)).unwrap();
+    let mut b = session(1, 2, SchedulePolicy::Fifo);
+    let err = b.attach_arbiter(&arbiter, "b", ColumnQuota::Fixed(2)).unwrap_err();
+    assert!(err.to_string().contains("over-subscribes"), "unexpected error: {err}");
+
+    // A fixed lease that would starve an existing full-width fair tenant.
+    let arbiter = DeviceArbiter::new();
+    let mut fair = session(1, 4, SchedulePolicy::Fifo);
+    fair.attach_arbiter(&arbiter, "fair", ColumnQuota::FairShare).unwrap();
+    let mut fixed = session(1, 1, SchedulePolicy::Fifo);
+    let err = fixed.attach_arbiter(&arbiter, "fixed", ColumnQuota::Fixed(1)).unwrap_err();
+    assert!(
+        err.to_string().contains("a fair-share tenant needs"),
+        "unexpected error: {err}"
+    );
+
+    // A fair tenant wider than the undedicated remainder.
+    let arbiter = DeviceArbiter::new();
+    let mut fixed = session(1, 2, SchedulePolicy::Fifo);
+    fixed.attach_arbiter(&arbiter, "fixed", ColumnQuota::Fixed(2)).unwrap();
+    let mut fair = session(1, 4, SchedulePolicy::Fifo);
+    let err = fair.attach_arbiter(&arbiter, "fair", ColumnQuota::FairShare).unwrap_err();
+    assert!(err.to_string().contains("not dedicated"), "unexpected error: {err}");
+
+    // Quota strings parse like the CLI flag (and reject nonsense).
+    assert_eq!("fair".parse::<ColumnQuota>().unwrap(), ColumnQuota::FairShare);
+    assert_eq!("fixed:3".parse::<ColumnQuota>().unwrap(), ColumnQuota::Fixed(3));
+    assert!("fixed:0".parse::<ColumnQuota>().is_err());
+    assert!("fixed:5".parse::<ColumnQuota>().is_err());
+    assert!("half".parse::<ColumnQuota>().is_err());
+}
+
+/// Four width-1 tenants with `fixed:1` leases running identical
+/// workloads: every tenant keeps its one-column lease, the array is
+/// fully partitioned, and the fairness index is near 1.
+#[test]
+fn four_way_fixed_leases_stay_within_quota_and_fair() {
+    let arbiter = DeviceArbiter::new();
+    let mut tenants: Vec<OffloadSession> = (0..4)
+        .map(|t| {
+            let mut s = session(1, 1, SchedulePolicy::Fifo);
+            s.attach_arbiter(&arbiter, &format!("t{t}"), ColumnQuota::Fixed(1)).unwrap();
+            s
+        })
+        .collect();
+    let size = ProblemSize::new(64, 128, 128);
+    let (a, b_t) = random_inputs(size, 6000);
+    let mut reference: Option<Vec<f32>> = None;
+    // Interleave rounds round-robin so windows from all tenants contend.
+    for _round in 0..3 {
+        for sess in tenants.iter_mut() {
+            let mut c = vec![0.0f32; size.m * size.n];
+            sess.gemm(size, &a, &b_t, InputLayout::Transposed, &mut c).unwrap();
+            match &reference {
+                Some(r) => assert_eq!(r, &c, "tenants must not perturb each other's numerics"),
+                None => reference = Some(c),
+            }
+        }
+    }
+    let rep = arbiter.report();
+    assert_eq!(rep.tenants.len(), 4);
+    for t in &rep.tenants {
+        assert_eq!(t.quota, ColumnQuota::Fixed(1), "{}", t.name);
+        assert_eq!(t.lease_width, 1, "{}", t.name);
+        assert_eq!(t.windows, 3, "{}: one window per round", t.name);
+        assert!(t.busy_s > 0.0, "{}: no device time charged", t.name);
+        assert!(
+            t.busy_s <= rep.makespan_s + 1e-9,
+            "{}: a width-1 lease cannot out-bill one column over the makespan",
+            t.name
+        );
+    }
+    // Identical workloads on identical leases: near-perfect fairness.
+    assert!(rep.jain_index > 0.95, "jain {}", rep.jain_index);
+    assert!(rep.utilization > 0.0 && rep.utilization <= 1.0 + 1e-9);
+    let share_sum: f64 = rep.tenants.iter().map(|t| t.makespan_share).sum();
+    assert!(
+        (share_sum - rep.utilization).abs() < 1e-9,
+        "tenant shares {share_sum} must partition utilization {}",
+        rep.utilization
+    );
+}

@@ -44,6 +44,7 @@ fn run(requests: &[GenRequest], kv: KvCacheMode, max_batch: usize) -> Vec<Genera
         max_batch,
         temperature: 1.0,
         kv_cache: kv,
+        ..Default::default()
     };
     let cache_ref = kv.enabled().then_some(&mut cache);
     serve(&mut model, requests, &mut session, cache_ref, &cfg)
@@ -123,6 +124,7 @@ fn decode_stream_records_once_and_replays_thereafter() {
         max_batch: 1,
         temperature: 1.0,
         kv_cache: KvCacheMode::On,
+        ..Default::default()
     };
     let report = serve(&mut model, &requests, &mut session, Some(&mut cache), &cfg).unwrap();
     assert_eq!(report.tokens, tokens);
@@ -153,6 +155,7 @@ fn occupancy_change_is_a_recoverable_rerecord() {
         max_batch: 2,
         temperature: 1.0,
         kv_cache: KvCacheMode::On,
+        ..Default::default()
     };
     let report = serve(&mut model, &requests, &mut session, Some(&mut cache), &cfg).unwrap();
     assert_eq!(report.tokens, 3 + 6);
