@@ -1,45 +1,129 @@
-//! Energy report: the paper's Figure 9 experiment as a runnable scenario —
-//! one epoch-equivalent of GPT-2 124M training under all four
-//! configurations, with the 4 Hz power trace the paper polls.
+//! Energy report: the paper's Figure 9 experiment driven through the real
+//! offload session — one GPT-2 124M training step's GEMM stream recorded
+//! as a step plan, scheduled, executed, frozen into the plan cache, and
+//! replayed, on mains and on battery, with the 4 Hz power trace the paper
+//! polls synthesized from the session's actual per-column busy time and
+//! reconfiguration barriers.
 //!
-//! Run: `cargo run --release --example energy_report`
+//! Run: `cargo run --release --example energy_report [-- --target
+//! xdna1|xdna2 --objective makespan|energy]`
+//!
+//! Without `--objective` each power source uses its paper-native goal:
+//! makespan (FLOPS/s) on mains, energy (FLOPS/Ws) on battery. The report
+//! prints each profile's FLOPS/s and FLOPS/Ws from the session's modeled
+//! schedule, then the calibrated Figure-9 bars for reference.
 
-use xdna_repro::bench::{fig8, fig9};
-use xdna_repro::model::config::ModelConfig;
-use xdna_repro::model::flops;
+use xdna_repro::bench::{energy, fig9};
+use xdna_repro::coordinator::plan::{PlanCache, PlanOp, StepPlan};
+use xdna_repro::coordinator::session::{
+    InputLayout, OffloadSession, QueueDepth, SessionConfig, ShardPolicy, STAGE_RECONFIG,
+};
+use xdna_repro::coordinator::SchedulePolicy;
+use xdna_repro::gemm::sizes::{gemm_sites, ModelDims, Pass};
+use xdna_repro::npu::profile::{DeviceProfile, Objective};
 use xdna_repro::power::meter::{flops_per_ws, PowerMeter};
 use xdna_repro::power::profiles::PowerProfile;
+use xdna_repro::util::cli::Args;
 
-fn main() {
-    let cfg = ModelConfig::d12();
-    let epoch_flops = flops::total_per_step(&cfg, 4, 64);
+fn main() -> xdna_repro::Result<()> {
+    let args = Args::parse(std::env::args().skip(1), &[])?;
+    let profile: DeviceProfile = args.get_parse("target", DeviceProfile::xdna1())?;
+    let explicit_objective = args.get("objective").map(str::parse).transpose()?;
+
+    let step_flops = energy::step_flops();
     println!(
-        "GPT-2 124M epoch = {:.1} GFLOP (paper: 197 GFLOP)",
-        epoch_flops as f64 / 1e9
+        "GPT-2 124M step: {:.1} GFLOP of offloaded GEMMs on {} \
+         (peak {:.2} TFLOP/s)",
+        step_flops / 1e9,
+        profile.name(),
+        profile.peak_flops() / 1e12
     );
 
-    for profile in [PowerProfile::mains(), PowerProfile::battery()] {
-        println!("\n=== {} ===", profile.name);
-        let (cpu_s, npu_s) = fig8::totals(&profile);
-        for (label, secs, offloaded) in [("CPU", cpu_s, false), ("CPU+NPU", npu_s, true)] {
-            let mut meter = PowerMeter::new(profile.clone());
-            let mut energy = meter.integrate_epoch(secs, offloaded);
-            if offloaded {
-                // The NPU's own draw during its active window.
-                energy += profile.npu_active_w * secs;
+    for power in [PowerProfile::mains(), PowerProfile::battery()] {
+        // Battery optimizes the paper's FLOPS/Ws metric unless overridden.
+        let objective = explicit_objective.unwrap_or(Objective::default_for(&power));
+        println!("\n=== {} (objective {objective}) ===", power.name);
+
+        let mut sess = OffloadSession::new(
+            SessionConfig {
+                depth: QueueDepth(energy::QUEUE_DEPTH),
+                shards: ShardPolicy::Auto,
+                schedule: SchedulePolicy::BatchBySize,
+                profile: profile.clone(),
+                objective,
+                ..Default::default()
+            },
+            &[],
+        )?;
+        sess.set_device_time_scale(power.npu_time_scale);
+
+        // Record the step's GEMM stream as a dry-run plan (the same
+        // layouts the trainer's sites use), schedule and execute it.
+        let mut plan = StepPlan::new();
+        for site in gemm_sites(&ModelDims::gpt2_124m()) {
+            let (a_layout, b_layout) = match site.pass {
+                Pass::Forward => (InputLayout::RowMajor, InputLayout::Transposed),
+                Pass::BackwardData => (InputLayout::RowMajor, InputLayout::RowMajor),
+                Pass::BackwardWeight => (InputLayout::Transposed, InputLayout::RowMajor),
+            };
+            for _ in 0..site.count {
+                let op = PlanOp::new(site.size)
+                    .with_a_layout(a_layout)
+                    .with_b_layout(b_layout)
+                    .prefetchable_b(true);
+                sess.record_modeled(&mut plan, &op)?;
             }
-            println!(
-                "{:<8} epoch {:>7.2} s | mean power {:>5.1} W ({} samples @4Hz) | \
-                 {:>6.1} GFLOP/s | {:>5.2} GFLOP/Ws",
-                label,
-                secs,
-                meter.mean_watts(),
-                meter.samples.len(),
-                epoch_flops as f64 / secs / 1e9,
-                flops_per_ws(epoch_flops, energy) / 1e9,
-            );
         }
+        let report = sess.execute(&mut plan)?;
+        let col_busy_s = sess.pipeline.col_busy_s.clone();
+        let reconfig_s = sess.modeled_stage_s(STAGE_RECONFIG);
+
+        // Freeze the scheduled step into the plan cache and price a
+        // replay — what every later training step costs.
+        let mut cache = PlanCache::new();
+        cache.insert(sess.freeze(plan)?);
+        let entry = cache
+            .latest_for(sess.session_id())
+            .expect("entry cached for this session");
+        let replay = sess.charge_frozen(entry)?;
+        cache.record_hit();
+
+        // The paper's 4 Hz meter over the step window: platform offload
+        // draw plus the NPU charged by per-column state — active columns,
+        // the idle floor, and the reconfiguration barriers.
+        let mut meter = PowerMeter::new(power.clone());
+        let platform_energy = meter.integrate_epoch_offloaded(
+            report.makespan_growth_s,
+            &sess.dev.npu.power,
+            &col_busy_s,
+            reconfig_s,
+        );
+
+        println!(
+            "step: record {:.2} ms, cached replay {:.2} ms ({} plan-cache hit(s), \
+             {} miss(es)); {} reconfiguration(s)",
+            report.makespan_growth_s * 1e3,
+            replay.makespan_growth_s * 1e3,
+            cache.hits(),
+            cache.misses(),
+            report.reconfigs
+        );
+        println!(
+            "NPU only:       {:>8.3} J -> {:>6.1} GFLOP/s | {:>6.2} GFLOP/Ws",
+            report.energy_j,
+            step_flops / report.makespan_growth_s / 1e9,
+            flops_per_ws(step_flops as u64, report.energy_j) / 1e9
+        );
+        println!(
+            "platform + NPU: {:>8.3} J at {:>5.1} W mean ({} samples @4Hz) \
+             -> {:>6.2} GFLOP/Ws",
+            platform_energy,
+            meter.mean_watts(),
+            meter.samples.len(),
+            flops_per_ws(step_flops as u64, platform_energy) / 1e9
+        );
     }
 
     fig9::print();
+    Ok(())
 }

@@ -26,6 +26,10 @@
 //! sync|background` (default background) picks whether cached replays
 //! drain on the caller's thread or on the background device-stage
 //! thread — the run report prints the measured wallclock-hidden split.
+//! `--target xdna1|xdna2` picks the NPU generation the scheduler prices
+//! against (numerics are bit-identical across targets), and `--objective
+//! makespan|energy` picks what the candidate simulation optimizes — it
+//! defaults to energy on `--power battery`, makespan otherwise.
 
 use xdna_repro::coordinator::engine::ExecMode;
 use xdna_repro::coordinator::executor::ExecutorMode;
@@ -38,6 +42,7 @@ use xdna_repro::model::data::{synthetic_corpus, DataLoader};
 use xdna_repro::model::model::OPS;
 use xdna_repro::model::trainer::{train, TrainBackend, TrainConfig};
 use xdna_repro::model::{Gpt2Model, ModelConfig};
+use xdna_repro::npu::profile::{DeviceProfile, Objective};
 use xdna_repro::power::profiles::PowerProfile;
 use xdna_repro::util::cli::Args;
 
@@ -68,13 +73,23 @@ fn main() -> xdna_repro::Result<()> {
     let cache_file = args.get("plan-cache-file").map(str::to_string);
     let epochs = 20.min(total_steps);
     let steps_per_epoch = (total_steps / epochs).max(1);
+    // Device target and scheduling objective, same parsers as the CLI.
+    // The power source resolves the objective default (battery optimizes
+    // FLOPS/Ws) before the plan-cache fingerprint is computed.
+    let profile: DeviceProfile = args.get_parse("target", DeviceProfile::xdna1())?;
+    let power = PowerProfile::by_name(args.get_or("power", "mains"))
+        .ok_or_else(|| xdna_repro::Error::config("unknown power profile"))?;
+    let objective = match args.get("objective") {
+        Some(o) => o.parse::<Objective>()?,
+        None => Objective::default_for(&power),
+    };
 
     let tc = TrainConfig {
         batch,
         seq,
         epochs,
         steps_per_epoch,
-        power: PowerProfile::mains(),
+        power,
         ..Default::default()
     };
 
@@ -95,15 +110,19 @@ fn main() -> xdna_repro::Result<()> {
             depth,
             shards,
             schedule,
+            profile,
+            objective,
             ..Default::default()
         },
         &[],
     )?;
     println!(
-        "\n--- CPU+NPU ({}; depth {}, shards {}, {schedule:?}) ---",
+        "\n--- CPU+NPU ({}; depth {}, shards {}, {schedule:?}, target {}, objective {}) ---",
         if plan { "planned steps" } else { "eager offload" },
         engine.queue_depth(),
-        engine.shard_policy()
+        engine.shard_policy(),
+        engine.device_profile().name(),
+        engine.objective()
     );
     let mut cache = PlanCache::new();
     // Cross-process plan cache: keyed by the session configuration plus

@@ -4,11 +4,14 @@
 //! Paper: throughput 1.7× (mains) / 1.2× (battery); efficiency 1.4×
 //! (battery). One epoch = 197 GFLOP.
 
+use crate::gemm::sizes::{gemm_sites, ModelDims};
 use crate::model::config::ModelConfig;
 use crate::model::flops;
+use crate::npu::energy::NpuPower;
+use crate::npu::timing::TimingModel;
 use crate::power::profiles::PowerProfile;
 
-use super::fig8;
+use super::{fig7, fig8};
 
 /// One Figure-9 bar.
 #[derive(Debug, Clone)]
@@ -25,7 +28,26 @@ pub fn bars(profile: &PowerProfile) -> (Fig9Bar, Fig9Bar) {
     let (cpu_s, npu_s) = fig8::totals(profile);
 
     let cpu_energy = cpu_s * profile.platform_cpu_busy_w;
-    let npu_energy = npu_s * (profile.platform_offload_w + profile.npu_active_w);
+    // CPU+NPU epoch: the platform draws its offload power throughout,
+    // while the NPU itself is charged by state — active draw only while
+    // its kernels run, the idle floor for the rest of the epoch, and
+    // reconfiguration draw for the serial schedule's per-invocation
+    // minimal reconfigurations. (The NPU used to be billed `npu_active_w`
+    // for the whole epoch with reconfiguration priced at zero.)
+    let b = fig7::breakdown(profile);
+    let invocations: usize = gemm_sites(&ModelDims::gpt2_124m()).iter().map(|s| s.count).sum();
+    let reconfig_s =
+        invocations as f64 * TimingModel::default().minimal_reconfig_s * profile.npu_time_scale;
+    let npu = NpuPower {
+        active_w: profile.npu_active_w,
+        ..NpuPower::default()
+    };
+    let npu_energy = npu_s * profile.platform_offload_w
+        + npu.energy_j(
+            b.kernel_s,
+            (npu_s - b.kernel_s - reconfig_s).max(0.0),
+            reconfig_s,
+        );
 
     (
         Fig9Bar {

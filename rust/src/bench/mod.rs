@@ -7,6 +7,7 @@
 
 pub mod accuracy;
 pub mod arbiter;
+pub mod energy;
 pub mod fig6;
 pub mod fig7;
 pub mod fig8;

@@ -63,6 +63,8 @@ use std::sync::{Arc, Mutex, MutexGuard};
 
 use crate::gemm::sizes::ProblemSize;
 use crate::gemm::tiling::GRID_COLS;
+use crate::npu::energy::NpuPower;
+use crate::npu::profile::DeviceProfile;
 use crate::npu::timing::TimingModel;
 use crate::util::error::{Error, Result};
 
@@ -140,9 +142,10 @@ impl WindowCharge {
     }
 
     /// Column-seconds the window consumes — the deficit-round-robin
-    /// currency. A barrier occupies every column.
-    fn cost(&self) -> f64 {
-        self.col_busy_s.iter().sum::<f64>() + self.barrier_s * GRID_COLS as f64
+    /// currency. A barrier occupies every one of the array's `ncols`
+    /// columns.
+    fn cost(&self, ncols: usize) -> f64 {
+        self.col_busy_s.iter().sum::<f64>() + self.barrier_s * ncols as f64
     }
 
     fn is_empty(&self) -> bool {
@@ -185,6 +188,16 @@ pub struct TenantReport {
     /// Modeled seconds the tenant's staged windows sat waiting for a
     /// leased column to free up.
     pub wait_for_lease_s: f64,
+    /// Array-wide barrier (reconfiguration) seconds this tenant caused —
+    /// counted once, not per column (`busy_s` holds the × width charge).
+    pub barrier_s: f64,
+    /// Modeled NPU energy charged to this tenant (filled by
+    /// [`DeviceArbiter::report`]): active draw for its strip seconds,
+    /// reconfiguration draw for its barriers, and the idle floor of *its
+    /// leased columns only* over its own schedule span. Charging idle per
+    /// leased column is what keeps the fleet sum honest — tenants never
+    /// double-count the array's idle draw.
+    pub energy_j: f64,
 }
 
 /// Whole-array report across all tenants.
@@ -214,6 +227,11 @@ struct Tenant {
 }
 
 struct ArbiterCore {
+    /// Shim-column count of the arbitrated array (the device target's
+    /// grid width — see [`DeviceArbiter::with_profile`]).
+    ncols: usize,
+    /// NPU power states pricing per-tenant energy in reports.
+    power: NpuPower,
     /// Modeled busy-until time per physical shim column.
     cols: Vec<f64>,
     /// Strip variant each column was left programmed to.
@@ -244,7 +262,7 @@ impl ArbiterCore {
             return t.home[..t.width.min(t.home.len())].to_vec();
         }
         let mut pool: Vec<usize> =
-            (0..GRID_COLS).filter(|&c| self.col_owner[c].is_none()).collect();
+            (0..self.ncols).filter(|&c| self.col_owner[c].is_none()).collect();
         pool.sort_by(|&a, &b| self.cols[a].total_cmp(&self.cols[b]).then(a.cmp(&b)));
         pool.truncate(t.width.max(1));
         pool
@@ -301,7 +319,8 @@ impl ArbiterCore {
                     *c = stall + barrier;
                 }
                 dev_done = stall + barrier;
-                self.tenants[tenant].report.busy_s += barrier * GRID_COLS as f64;
+                self.tenants[tenant].report.busy_s += barrier * self.ncols as f64;
+                self.tenants[tenant].report.barrier_s += barrier;
             }
             for (i, &c) in cols.iter().enumerate() {
                 let span = w.col_busy_s.get(i).copied().unwrap_or(0.0);
@@ -333,10 +352,11 @@ impl ArbiterCore {
     /// always terminates, and cheap windows drain several per round.
     fn drain(&mut self) {
         loop {
+            let ncols = self.ncols;
             let quantum = self
                 .tenants
                 .iter()
-                .filter_map(|t| t.queue.front().map(WindowCharge::cost))
+                .filter_map(|t| t.queue.front().map(|w| w.cost(ncols)))
                 .fold(0.0, f64::max);
             if self.tenants.iter().all(|t| t.queue.is_empty()) {
                 break;
@@ -349,7 +369,7 @@ impl ArbiterCore {
                 }
                 self.tenants[i].deficit += quantum;
                 while let Some(head) = self.tenants[i].queue.front() {
-                    let cost = head.cost();
+                    let cost = head.cost(ncols);
                     if cost > self.tenants[i].deficit + 1e-12 {
                         break;
                     }
@@ -365,7 +385,7 @@ impl ArbiterCore {
         self.drain();
         let makespan = self.makespan_s;
         let device_busy: f64 = self.tenants.iter().map(|t| t.report.busy_s).sum();
-        let capacity = GRID_COLS as f64 * makespan;
+        let capacity = self.ncols as f64 * makespan;
         let mut tenants: Vec<TenantReport> = self
             .tenants
             .iter()
@@ -373,6 +393,17 @@ impl ArbiterCore {
             .collect();
         for t in tenants.iter_mut() {
             t.makespan_share = if capacity > 0.0 { t.busy_s / capacity } else { 0.0 };
+            // Per-tenant energy: active draw for the tenant's strip
+            // column-seconds, reconfiguration draw for its barriers, and
+            // the idle floor of its *leased* columns over its own schedule
+            // span — never the whole array's (summing tenants must not
+            // double-count idle draw).
+            let strip_busy = (t.busy_s - t.barrier_s * self.ncols as f64).max(0.0);
+            let width = t.lease_width as f64;
+            let idle_s = (width * t.done_s - strip_busy - width * t.barrier_s).max(0.0);
+            t.energy_j = self.power.reconfig_w * t.barrier_s
+                + self.power.active_w * strip_busy
+                + self.power.idle_w * idle_s;
         }
         let rates: Vec<f64> = tenants
             .iter()
@@ -420,14 +451,29 @@ impl DeviceArbiter {
     }
 
     /// Price cross-tenant re-entry reconfigurations from `timing` (the
-    /// steady-state minimal reconfiguration — shim BDs + core params).
+    /// steady-state minimal reconfiguration — shim BDs + core params) on
+    /// the seed 4-column array.
     pub fn with_timing(timing: &TimingModel) -> DeviceArbiter {
+        DeviceArbiter::with_parts(GRID_COLS, timing, &NpuPower::default())
+    }
+
+    /// Arbitrate the array of a device target: the profile's grid width
+    /// sets how many shim columns there are to lease (8 on XDNA2), its
+    /// timing prices re-entry reconfigurations, and its power states price
+    /// per-tenant energy in reports.
+    pub fn with_profile(profile: &DeviceProfile) -> DeviceArbiter {
+        DeviceArbiter::with_parts(profile.grid.cols, &profile.timing, &profile.power)
+    }
+
+    fn with_parts(ncols: usize, timing: &TimingModel, power: &NpuPower) -> DeviceArbiter {
         DeviceArbiter {
             core: Arc::new(Mutex::new(ArbiterCore {
-                cols: vec![0.0; GRID_COLS],
-                col_programmed: vec![None; GRID_COLS],
-                col_last_tenant: vec![None; GRID_COLS],
-                col_owner: vec![None; GRID_COLS],
+                ncols,
+                power: power.clone(),
+                cols: vec![0.0; ncols],
+                col_programmed: vec![None; ncols],
+                col_last_tenant: vec![None; ncols],
+                col_owner: vec![None; ncols],
                 reentry_s: timing.minimal_reconfig_s,
                 tenants: Vec::new(),
                 makespan_s: 0.0,
@@ -455,6 +501,7 @@ impl DeviceArbiter {
                 t.report.name
             )));
         }
+        let ncols = core.ncols;
         let fixed_claimed: usize = core.col_owner.iter().filter(|o| o.is_some()).count();
         let fair_widths = core
             .tenants
@@ -464,9 +511,9 @@ impl DeviceArbiter {
             .fold(0usize, usize::max);
         let home = match quota {
             ColumnQuota::Fixed(n) => {
-                if n == 0 || n > GRID_COLS {
+                if n == 0 || n > ncols {
                     return Err(Error::config(format!(
-                        "quota fixed:{n} is outside the array's 1..={GRID_COLS} columns"
+                        "quota fixed:{n} is outside the array's 1..={ncols} columns"
                     )));
                 }
                 if width > n {
@@ -476,31 +523,31 @@ impl DeviceArbiter {
                          narrow the session's ShardPolicy"
                     )));
                 }
-                if fixed_claimed + n > GRID_COLS {
+                if fixed_claimed + n > ncols {
                     return Err(Error::config(format!(
                         "quota fixed:{n} for tenant '{name}' over-subscribes the array: \
-                         {fixed_claimed} of {GRID_COLS} columns are already dedicated"
+                         {fixed_claimed} of {ncols} columns are already dedicated"
                     )));
                 }
-                if fair_widths > GRID_COLS - fixed_claimed - n {
+                if fair_widths > ncols - fixed_claimed - n {
                     return Err(Error::config(format!(
                         "quota fixed:{n} for tenant '{name}' would leave {} free \
                          column(s), but a fair-share tenant needs {fair_widths}",
-                        GRID_COLS - fixed_claimed - n
+                        ncols - fixed_claimed - n
                     )));
                 }
-                let cols: Vec<usize> = (0..GRID_COLS)
+                let cols: Vec<usize> = (0..ncols)
                     .filter(|&c| core.col_owner[c].is_none())
                     .take(n)
                     .collect();
                 cols
             }
             ColumnQuota::FairShare => {
-                if width > GRID_COLS - fixed_claimed {
+                if width > ncols - fixed_claimed {
                     return Err(Error::config(format!(
                         "fair-share tenant '{name}' needs {width} column(s) but only \
                          {} are not dedicated to fixed quotas",
-                        GRID_COLS - fixed_claimed
+                        ncols - fixed_claimed
                     )));
                 }
                 Vec::new()
@@ -525,6 +572,8 @@ impl DeviceArbiter {
                 reconfigs_charged: 0,
                 reconfigs_amortized: 0,
                 wait_for_lease_s: 0.0,
+                barrier_s: 0.0,
+                energy_j: 0.0,
             },
             home,
             width: width.max(1),
@@ -757,6 +806,55 @@ mod tests {
             t_small.done_s,
             rep.makespan_s
         );
+    }
+
+    #[test]
+    fn profile_widens_the_arbitrated_array() {
+        use crate::npu::profile::DeviceProfile;
+        // The 4-column seed array rejects a 5-column dedication…
+        let seed = DeviceArbiter::new();
+        assert!(seed.attach("wide", ColumnQuota::Fixed(5), 4, 1).is_err());
+        // …but an XDNA2 array has 8 columns to lease, and two wide fixed
+        // tenants overlap on disjoint halves.
+        let arb = DeviceArbiter::with_profile(&DeviceProfile::xdna2());
+        let a = arb.attach("a", ColumnQuota::Fixed(5), 4, 1).unwrap();
+        let b = arb.attach("b", ColumnQuota::Fixed(3), 3, 2).unwrap();
+        a.charge_window(WindowCharge {
+            col_busy_s: vec![2.0; 4],
+            ..window(0.0, 0.0, 0.0, strip(128))
+        });
+        b.charge_window(WindowCharge {
+            col_busy_s: vec![2.0; 3],
+            ..window(0.0, 0.0, 0.0, strip(256))
+        });
+        let rep = arb.report();
+        assert!((rep.makespan_s - 2.0).abs() < 1e-9, "disjoint leases overlap");
+        for t in &rep.tenants {
+            assert_eq!(t.reconfigs_charged, 0, "tenant {}", t.name);
+        }
+    }
+
+    #[test]
+    fn tenant_energy_charges_only_leased_columns() {
+        use crate::npu::energy::NpuPower;
+        let npu = NpuPower::default();
+        let arb = DeviceArbiter::new();
+        let a = arb.attach("a", ColumnQuota::Fixed(2), 1, 1).unwrap();
+        let b = arb.attach("b", ColumnQuota::Fixed(2), 1, 2).unwrap();
+        a.charge_window(window(0.0, 5.0, 0.0, strip(128)));
+        b.charge_window(window(0.0, 3.0, 0.0, strip(256)));
+        let rep = arb.report();
+        let ta = rep.tenants.iter().find(|t| t.name == "a").unwrap();
+        let tb = rep.tenants.iter().find(|t| t.name == "b").unwrap();
+        // Each tenant pays active draw for its own strips and the idle
+        // floor of its own lease (width 1, fully busy here) — not the
+        // array's.
+        assert!((ta.energy_j - npu.active_w * 5.0).abs() < 1e-9);
+        assert!((tb.energy_j - npu.active_w * 3.0).abs() < 1e-9);
+        // Summing tenants stays below the array-wide flat-active charge
+        // the pre-profile accounting implied.
+        let flat = npu.active_w * GRID_COLS as f64 * rep.makespan_s;
+        assert!(ta.energy_j + tb.energy_j < flat);
     }
 
     #[test]

@@ -226,11 +226,15 @@ impl ComputeDevice for PjrtDevice {
         // Model the device span exactly as the simulator would — the
         // artifact supplies numerics, the model supplies time.
         let gt = op.xrt.npu.timing.gemm(op.tiling);
+        // Drain the reconfiguration span the simulated array paid getting
+        // programmed for this size — the simulator folds it into the next
+        // GemmReport the same way.
+        let reconfig_s = op.xrt.npu.take_pending_reconfig_s();
         let energy = op
             .xrt
             .npu
             .power
-            .energy_j(gt.kernel_s, gt.total_s() - gt.kernel_s, 0.0);
+            .energy_j(gt.kernel_s, gt.total_s() - gt.kernel_s, reconfig_s);
         Ok(DeviceSpan {
             kernel_s: gt.kernel_s,
             fixed_s: gt.issue_s + gt.dispatch_s,

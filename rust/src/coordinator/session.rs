@@ -34,6 +34,7 @@ use std::time::{Duration, Instant};
 use crate::gemm::sizes::ProblemSize;
 use crate::gemm::tiling::Tiling;
 use crate::npu::gemm_design::build_instruction_stream;
+use crate::npu::profile::{DeviceProfile, Objective};
 use crate::npu::timing::{HostStagingModel, PipelineTimeline};
 use crate::util::error::{Error, Result};
 use crate::util::threads::join2;
@@ -277,6 +278,16 @@ pub struct SessionConfig {
     pub schedule: SchedulePolicy,
     /// How deep the step-plan replay prefetches known-ahead B staging.
     pub prefetch: PrefetchHorizon,
+    /// Which NPU generation the session schedules for. Drives the shard
+    /// cap, the timeline's column count, the device timing/power models and
+    /// the host staging model. Numerics are target-independent — profiles
+    /// change what schedules cost, never what GEMMs compute.
+    pub profile: DeviceProfile,
+    /// What the candidate simulation optimizes (makespan vs modeled
+    /// energy). Resolve power-source defaults at the CLI layer with
+    /// [`Objective::default_for`]; the session itself defaults to the seed
+    /// behavior, Makespan.
+    pub objective: Objective,
 }
 
 impl Default for SessionConfig {
@@ -288,6 +299,8 @@ impl Default for SessionConfig {
             shards: ShardPolicy::default(),
             schedule: SchedulePolicy::Fifo,
             prefetch: PrefetchHorizon::default(),
+            profile: DeviceProfile::xdna1(),
+            objective: Objective::Makespan,
         }
     }
 }
@@ -367,7 +380,15 @@ struct InvocationCapture {
     strip_size: ProblemSize,
     /// Per strip: (partition-scaled kernel seconds, output sync seconds).
     strips: Vec<(f64, f64)>,
+    /// Device-reported energy of the invocation's strips (J). Includes the
+    /// reconfiguration premium the device folded into the first strip's
+    /// report (`rec_consumed_s` at `reconfig_w`) when the array model
+    /// consumed pending reconfiguration here.
     energy_j: f64,
+    /// Reconfiguration seconds whose energy premium the device consumed
+    /// into `energy_j` during this invocation (0 on devices that price
+    /// energy without the NPU model, e.g. the CPU reference).
+    rec_consumed_s: f64,
     wall_s: f64,
 }
 
@@ -452,6 +473,12 @@ pub struct OffloadSession {
     shards: usize,
     shard_policy: ShardPolicy,
     prefetch: PrefetchHorizon,
+    /// The device target this session schedules for (see
+    /// [`SessionConfig::profile`]).
+    profile: DeviceProfile,
+    /// What the candidate simulation optimizes (makespan vs modeled
+    /// energy).
+    objective: Objective,
     scheduler: Scheduler,
     id: u64,
     registry: BTreeMap<ProblemSize, Prepared>,
@@ -986,17 +1013,18 @@ impl OffloadSession {
         // independent column partitions to dispatch strips across. Auto
         // selection may use the full column width.
         let shards = match cfg.shards {
-            ShardPolicy::Fixed(s) => s.get().min(crate::gemm::tiling::GRID_COLS),
-            ShardPolicy::Auto => crate::gemm::tiling::GRID_COLS,
+            ShardPolicy::Fixed(s) => s.get().min(cfg.profile.grid.cols),
+            ShardPolicy::Auto => cfg.profile.grid.cols,
         };
         let mut session = OffloadSession {
-            dev: XrtDevice::open(),
+            dev: XrtDevice::open_with_profile(&cfg.profile),
             device: cfg.device,
             policy: cfg.policy,
             depth: cfg.depth.get(),
             shards,
             shard_policy: cfg.shards,
             prefetch: cfg.prefetch,
+            objective: cfg.objective,
             scheduler: Scheduler::new(cfg.schedule),
             id: NEXT_SESSION_ID.fetch_add(1, Ordering::Relaxed),
             registry: BTreeMap::new(),
@@ -1009,7 +1037,8 @@ impl OffloadSession {
             wall_gemm_s: 0.0,
             wall_blocked_s: 0.0,
             pipeline: PipelineTimeline::with_columns(shards),
-            host_model: HostStagingModel::default(),
+            host_model: cfg.profile.staging.clone(),
+            profile: cfg.profile,
             device_time_scale: 1.0,
             pending: VecDeque::new(),
             next_seq: 0,
@@ -1177,7 +1206,22 @@ impl OffloadSession {
             // Every strip BO pays its own input-sync driver cost, on the
             // host side, sequentially — the real price of sharding.
             let sync_in_s = s as f64 * sync.cost_s(k_p * n_p * 4, SyncDirection::ToDevice);
-            let score = host_s + sync_in_s + device_s;
+            let score = match self.objective {
+                Objective::Makespan => host_s + sync_in_s + device_s,
+                // Modeled device energy of the invocation: s strips each
+                // paying the per-strip overheads at idle draw. The compute
+                // seconds are constant in s (the quanta divide exactly), so
+                // extra strips only add overhead energy — EnergyEff shards
+                // narrow and Makespan wide, by design.
+                Objective::EnergyEff => {
+                    s as f64
+                        * self
+                            .dev
+                            .npu
+                            .power
+                            .energy_j(g.kernel_s, g.total_s() - g.kernel_s, 0.0)
+                }
+            };
             if score + 1e-15 < best.1 {
                 best = (s, score);
             }
@@ -1199,6 +1243,16 @@ impl OffloadSession {
     /// How the session chooses per-size shard counts.
     pub fn shard_policy(&self) -> ShardPolicy {
         self.shard_policy
+    }
+
+    /// The device target this session schedules for.
+    pub fn device_profile(&self) -> &DeviceProfile {
+        &self.profile
+    }
+
+    /// What the candidate simulation optimizes.
+    pub fn objective(&self) -> Objective {
+        self.objective
     }
 
     /// This session's unique id (tickets are scoped to it).
@@ -1691,7 +1745,11 @@ impl OffloadSession {
             reconfig_once_s,
             strips: cap.strips,
             host_post_s: self.host_model.copy_s(m * n * 4),
-            energy_j: cap.energy_j,
+            // Invocation-only energy: strip the reconfiguration premium the
+            // device folded into its reports (the *replay* prices reconfig
+            // energy wherever its own schedule actually places the
+            // switches — see `charge_step`).
+            energy_j: cap.energy_j - self.dev.npu.power.energy_j(0.0, 0.0, cap.rec_consumed_s),
             wall_s: cap.wall_s,
         });
         Ok(PlanNode(plan.ops.len() - 1))
@@ -1778,6 +1836,7 @@ impl OffloadSession {
         //    reconfiguration charge is the replay's to decide), run every
         //    strip, capture its span. ------------------------------------
         let strip_size = prep.variants[prep.strips[0].variant].tiling.size;
+        let pending_before = self.dev.npu.pending_reconfig_s();
         let run = run_device_stages(
             self.device.as_mut(),
             &mut self.dev,
@@ -1805,14 +1864,23 @@ impl OffloadSession {
         prep.free.push_back(slot);
         self.registry.insert(size, prep);
 
+        let rec_applied_s: f64 = run.events.iter().map(|e| e.reconfig_s).sum();
+        // How much of the pending reconfiguration span the device model
+        // consumed into its energy reports during this invocation: the
+        // simulator drains it into the first GEMM after a switch, the CPU
+        // reference never touches it. Whatever was consumed is a premium
+        // riding on `run.energy_j` over the pure invocation energy.
+        let rec_consumed_s =
+            (pending_before + rec_applied_s - self.dev.npu.pending_reconfig_s()).max(0.0);
         Ok(InvocationCapture {
             host_a_s,
             host_b_s,
             sync_in_s,
-            rec_applied_s: run.events.iter().map(|e| e.reconfig_s).sum(),
+            rec_applied_s,
             strip_size,
             strips: run.events.iter().map(|e| (e.kernel_s, e.sync_out_s)).collect(),
             energy_j: run.energy_j,
+            rec_consumed_s,
             wall_s: t_wall.elapsed().as_secs_f64(),
         })
     }
@@ -1849,7 +1917,8 @@ impl OffloadSession {
     /// A stable fingerprint of everything the *modeled schedule* of a
     /// cached step depends on at the session level: ring depth, shard
     /// policy, schedule policy, prefetch horizon, reconfiguration policy,
-    /// device, and the calibrated host-staging constants. Combined with a
+    /// device, the calibrated host-staging constants, the device target
+    /// and the scheduling objective. Combined with a
     /// model/config hash by callers, it keys the on-disk plan cache
     /// ([`PlanCache::save_to`](super::plan::PlanCache::save_to)): a file
     /// written under a different configuration is a recoverable miss, not
@@ -1857,7 +1926,7 @@ impl OffloadSession {
     pub fn config_fingerprint(&self) -> u64 {
         let key = format!(
             "depth={};shards={};policy={:?};schedule={:?};prefetch={:?};device={};\
-             copy={};transpose={}",
+             copy={};transpose={};target={};objective={}",
             self.depth,
             self.shard_policy,
             self.policy,
@@ -1866,6 +1935,8 @@ impl OffloadSession {
             self.device.name(),
             self.host_model.copy_bytes_per_s,
             self.host_model.transpose_bytes_per_s,
+            self.profile.name(),
+            self.objective.name(),
         );
         super::plan::fingerprint_str(&key)
     }
@@ -1951,7 +2022,7 @@ impl OffloadSession {
         // it — so both the next plan's replay start and the next
         // scheduling anchor stay consistent with the hardware.
         let stats = self.charge_step(&plan.ops, &walk, None);
-        let energy = plan.ops.iter().map(|o| o.energy_j).sum();
+        let energy = stats.iter().map(|s| s.modeled_energy_j).sum();
         // Recording ran every invocation to completion on the caller's
         // thread: measured wallclock is fully serialized and fully blocked.
         let wall_gemm_s: f64 = plan.ops.iter().map(|o| o.wall_s).sum();
@@ -1975,11 +2046,14 @@ impl OffloadSession {
     /// this step replays with. `Deep` is chosen *by measurement*: every
     /// candidate schedule — the PR-3 one-op hoist plus deep scans at
     /// each claims cap up to `depth - 1` — is simulated on a clone of
-    /// the modeled timeline and the smallest makespan wins (first on
-    /// ties, so the baseline is preferred when deeper hoisting buys
-    /// nothing). The charged schedule is therefore *monotone*: never
-    /// modeled slower than the one-op horizon, which is never slower
-    /// than no prefetch.
+    /// the modeled timeline and the best score under the session's
+    /// [`Objective`] wins (first on ties, so the baseline is preferred
+    /// when deeper hoisting buys nothing): smallest makespan under
+    /// `Makespan`, smallest modeled window energy under `EnergyEff`.
+    /// The charged schedule is therefore *monotone in the objective*:
+    /// under `Makespan` never modeled slower than the one-op horizon
+    /// (which is never slower than no prefetch), under `EnergyEff` never
+    /// modeled hungrier than the makespan winner.
     fn pick_horizon(
         &self,
         ops: &[PlannedOp],
@@ -2001,7 +2075,10 @@ impl OffloadSession {
         }
         let mut candidates = vec![HorizonChoice::Next];
         candidates.extend((1..self.depth).map(HorizonChoice::Deep));
-        let mut best = (HorizonChoice::Next, f64::INFINITY);
+        // Score every candidate on both axes — (makespan, window energy) —
+        // then pick by the session's objective. Scoring both is what lets
+        // the EnergyEff guarantee below be structural rather than hoped-for.
+        let mut scored = Vec::with_capacity(candidates.len());
         for &cand in &candidates {
             let mut tl = self.pipeline.clone();
             walk_step(
@@ -2014,12 +2091,64 @@ impl OffloadSession {
                 once_pool,
                 &mut tl,
             );
-            let makespan = tl.makespan_s();
-            if makespan + 1e-15 < best.1 {
-                best = (cand, makespan);
+            scored.push((cand, tl.makespan_s(), self.window_energy_delta(&tl)));
+        }
+        let mut best = (HorizonChoice::Next, f64::INFINITY);
+        for &(cand, makespan, energy) in &scored {
+            let score = match self.objective {
+                Objective::Makespan => makespan,
+                Objective::EnergyEff => energy,
+            };
+            if score + 1e-15 < best.1 {
+                best = (cand, score);
             }
         }
+        if self.objective == Objective::EnergyEff {
+            // Structural guarantee: the energy pick minimizes window energy
+            // over a candidate set that *contains* the makespan winner, so
+            // it can never model more energy than makespan optimization
+            // would have.
+            let span_winner = scored
+                .iter()
+                .copied()
+                .reduce(|a, b| if b.1 + 1e-15 < a.1 { b } else { a })
+                .expect("candidates is non-empty");
+            let chosen = scored
+                .iter()
+                .find(|c| c.0 == best.0)
+                .expect("chosen candidate was scored");
+            debug_assert!(
+                chosen.2 <= span_winner.2 + 1e-9,
+                "EnergyEff chose a schedule modeling more energy ({} J) than \
+                 the makespan winner ({} J)",
+                chosen.2,
+                span_winner.2
+            );
+        }
         best.0
+    }
+
+    /// Modeled NPU energy (J) of the schedule window a candidate timeline
+    /// adds over the session's charged timeline: per-column busy/idle
+    /// deltas over the added makespan, with the added reconfiguration
+    /// barriers (device-busy growth not attributable to any column) priced
+    /// at reconfiguration draw — all via [`NpuPower::window_energy_j`].
+    ///
+    /// [`NpuPower::window_energy_j`]: crate::npu::energy::NpuPower::window_energy_j
+    fn window_energy_delta(&self, tl: &PipelineTimeline) -> f64 {
+        let window_s = (tl.makespan_s() - self.pipeline.makespan_s()).max(0.0);
+        let col_busy: Vec<f64> = tl
+            .col_busy_s
+            .iter()
+            .zip(&self.pipeline.col_busy_s)
+            .map(|(a, b)| (a - b).max(0.0))
+            .collect();
+        let device_delta = (tl.device_busy_s - self.pipeline.device_busy_s).max(0.0);
+        let reconfig_s = (device_delta - col_busy.iter().sum::<f64>()).max(0.0);
+        self.dev
+            .npu
+            .power
+            .window_energy_j(&col_busy, window_s, reconfig_s)
     }
 
     /// Accrue a walked step's statistics exactly as the eager path would
@@ -2042,16 +2171,21 @@ impl OffloadSession {
                 self.add_modeled(STAGE_OUTPUT_SYNC, sync_out_s);
             }
             let wall = walls.map_or(op.wall_s, |w| w[i]);
+            // The op's invocation energy plus the premium of the
+            // reconfiguration *this* schedule placed before it — the walk
+            // decides where switches land, so the walk prices their energy.
+            let energy_j =
+                op.energy_j + self.dev.npu.power.energy_j(0.0, 0.0, walk.reconfig_s[i]);
             let st = InvocationStats {
                 size: op.size,
                 modeled_kernel_s: op.kernel_s(),
                 modeled_sync_in_s: op.sync_in_s,
                 modeled_sync_out_s: op.sync_out_s(),
                 modeled_reconfig_s: walk.reconfig_s[i],
-                modeled_energy_j: op.energy_j,
+                modeled_energy_j: energy_j,
                 wall_s: wall,
             };
-            self.modeled_energy_j += op.energy_j;
+            self.modeled_energy_j += energy_j;
             self.invocations += 1;
             if let Some(prep) = self.registry.get_mut(&op.size) {
                 prep.invocations += 1;
@@ -2243,13 +2377,13 @@ impl OffloadSession {
 
     /// Charge a frozen step's schedule to the modeled timeline *without*
     /// re-running its numerics — the dry replay of a cached entry, used
-    /// by `bench::pipeline` to price what every cached step costs on
-    /// streams that were never physically staged (e.g. a
-    /// [`Self::record_modeled`] dry-run record). Mirrors
+    /// by `bench::pipeline` and the `energy_report` example to price what
+    /// every cached step costs on streams that were never physically
+    /// staged (e.g. a [`Self::record_modeled`] dry-run record). Mirrors
     /// [`Self::finish_replay`]'s charge exactly; the measured-wallclock
     /// telemetry contribution is zero, matching the dry-run record's
     /// `wall_s = 0`.
-    pub(crate) fn charge_frozen(&mut self, entry: &CachedStep) -> Result<StepReport> {
+    pub fn charge_frozen(&mut self, entry: &CachedStep) -> Result<StepReport> {
         let mut replay = self.replay_entry(entry)?;
         replay.cursor = entry.ops.len();
         replay.walls = vec![0.0; entry.ops.len()];
@@ -2351,7 +2485,7 @@ impl OffloadSession {
             &mut self.pipeline,
         );
         let stats = self.charge_step(&entry.ops, &walk, Some(&replay.walls));
-        let energy = entry.ops.iter().map(|o| o.energy_j).sum();
+        let energy = stats.iter().map(|s| s.modeled_energy_j).sum();
         // Measured wallclock: the serialized invocation cost, and how much
         // of it the trainer thread actually sat blocked for. A synchronous
         // replay blocks for all of it; the background executor

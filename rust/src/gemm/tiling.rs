@@ -22,10 +22,52 @@ pub struct TileShape {
 /// The paper's tile shape: m=64, k=64, n=32 (section VI).
 pub const PAPER_TILES: TileShape = TileShape { m: 64, k: 64, n: 32 };
 
-/// Number of shim/memory-core columns used (the 4×4 partition).
+/// Number of shim/memory-core columns used (the 4×4 partition). This is
+/// the **xdna1 preset** value — scheduling-side geometry now flows from
+/// [`crate::npu::profile::DeviceProfile::grid`] as a [`GridShape`] value;
+/// the constant remains because the paper's functional GEMM kernel
+/// (section VI) is defined on the 4×4 Phoenix partition and runs
+/// unchanged on every target (profiles change schedules, never bits).
 pub const GRID_COLS: usize = 4;
-/// Number of compute-core rows used.
+/// Number of compute-core rows used (xdna1 preset; see [`GRID_COLS`]).
 pub const GRID_ROWS: usize = 4;
+
+/// Compute-grid geometry as a value: `rows × cols` cores, `cols` shim
+/// columns. Carried by [`Tiling`] (pinned to the paper's 4×4 kernel in
+/// the functional constructors) and by
+/// [`crate::npu::profile::DeviceProfile`] (where it widens the
+/// scheduling surface — shard caps, timeline columns, arbiter leases —
+/// per NPU generation).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct GridShape {
+    pub rows: usize,
+    pub cols: usize,
+}
+
+impl GridShape {
+    pub const fn new(rows: usize, cols: usize) -> GridShape {
+        GridShape { rows, cols }
+    }
+
+    /// The seed geometry: XDNA1 Phoenix's 4×4 usable partition.
+    pub const fn xdna1() -> GridShape {
+        GridShape {
+            rows: GRID_ROWS,
+            cols: GRID_COLS,
+        }
+    }
+
+    /// Compute cores in the grid.
+    pub fn cores(&self) -> usize {
+        self.rows * self.cols
+    }
+}
+
+impl std::fmt::Display for GridShape {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}x{}", self.rows, self.cols)
+    }
+}
 
 impl TileShape {
     /// bf16 bytes of one A' tile.
@@ -67,35 +109,50 @@ impl TileShape {
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Tiling {
     pub size: ProblemSize,
-    /// M after padding to a multiple of GRID_COLS * m (paper pads
+    /// M after padding to a multiple of grid.cols * m (paper pads
     /// 50304 → 50432).
     pub m_padded: usize,
     pub tiles: TileShape,
+    /// The compute grid the tiles are distributed over. The functional
+    /// constructors pin this to [`GridShape::xdna1`]: the datapath always
+    /// runs the paper's 4×4 kernel, whatever the session's device
+    /// profile prices — that is what keeps numerics bit-identical across
+    /// targets.
+    pub grid: GridShape,
 }
 
 impl Tiling {
     /// Build a tiling, validating the paper's divisibility requirements:
     /// K % k == 0, N % (4n) == 0, and M padded up to a multiple of 4m.
     pub fn new(size: ProblemSize, tiles: TileShape) -> Result<Tiling> {
+        Tiling::with_grid(size, tiles, GridShape::xdna1())
+    }
+
+    /// Build a tiling over an explicit grid shape (the divisibility
+    /// requirements generalize: N % (cols·n) == 0, M padded to a
+    /// multiple of cols·m).
+    pub fn with_grid(size: ProblemSize, tiles: TileShape, grid: GridShape) -> Result<Tiling> {
         if size.k % tiles.k != 0 {
             return Err(Error::shape(format!(
                 "K={} not divisible by tile k={}",
                 size.k, tiles.k
             )));
         }
-        if size.n % (GRID_COLS * tiles.n) != 0 {
+        if size.n % (grid.cols * tiles.n) != 0 {
             return Err(Error::shape(format!(
-                "N={} not divisible by 4n={}",
+                "N={} not divisible by {}n={}",
                 size.n,
-                GRID_COLS * tiles.n
+                grid.cols,
+                grid.cols * tiles.n
             )));
         }
-        let unit = GRID_COLS * tiles.m;
+        let unit = grid.cols * tiles.m;
         let m_padded = size.m.div_ceil(unit) * unit;
         Ok(Tiling {
             size,
             m_padded,
             tiles,
+            grid,
         })
     }
 
@@ -131,7 +188,7 @@ impl Tiling {
     /// core's memory (section VI-D): (K/k accumulation steps, output tiles
     /// per core).
     pub fn runtime_params(&self) -> (u32, u32) {
-        let per_core = self.output_tiles() / (GRID_ROWS * GRID_COLS);
+        let per_core = self.output_tiles() / self.grid.cores();
         (self.k_tiles() as u32, per_core as u32)
     }
 
@@ -139,17 +196,17 @@ impl Tiling {
     /// rows i·m + 4·j·m .. for j = 0.. M/(4m) (section VI-B), expressed as
     /// tile-row indices.
     pub fn shim_a_tile_rows(&self, col: usize) -> Vec<usize> {
-        assert!(col < GRID_COLS);
-        (0..self.m_tiles() / GRID_COLS)
-            .map(|j| col + GRID_COLS * j)
+        assert!(col < self.grid.cols);
+        (0..self.m_tiles() / self.grid.cols)
+            .map(|j| col + self.grid.cols * j)
             .collect()
     }
 
     /// Which tile-columns of B the shim in hardware column `col` streams.
     pub fn shim_b_tile_cols(&self, col: usize) -> Vec<usize> {
-        assert!(col < GRID_COLS);
-        (0..self.n_tiles() / GRID_COLS)
-            .map(|j| col + GRID_COLS * j)
+        assert!(col < self.grid.cols);
+        (0..self.n_tiles() / self.grid.cols)
+            .map(|j| col + self.grid.cols * j)
             .collect()
     }
 
@@ -159,7 +216,7 @@ impl Tiling {
     /// Net effect: core (r, c) — r, c in 0..4 of the compute partition —
     /// owns output tiles where tile_row ≡ r and tile_col ≡ c (mod 4).
     pub fn owner_core(&self, tile_row: usize, tile_col: usize) -> (usize, usize) {
-        (tile_row % GRID_ROWS, tile_col % GRID_COLS)
+        (tile_row % self.grid.rows, tile_col % self.grid.cols)
     }
 
     /// Output tiles (tile_row, tile_col) owned by compute core (r, c), in
@@ -167,8 +224,8 @@ impl Tiling {
     /// m×n-sized output tiles of the output matrix C in-order").
     pub fn core_output_tiles(&self, r: usize, c: usize) -> Vec<(usize, usize)> {
         let mut out = Vec::new();
-        for tr in (r..self.m_tiles()).step_by(GRID_ROWS) {
-            for tc in (c..self.n_tiles()).step_by(GRID_COLS) {
+        for tr in (r..self.m_tiles()).step_by(self.grid.rows) {
+            for tc in (c..self.n_tiles()).step_by(self.grid.cols) {
                 out.push((tr, tc));
             }
         }
@@ -179,14 +236,14 @@ impl Tiling {
     /// repetition: rows of tiles of A are repeated N/(4n) times.
     pub fn a_stream_bytes(&self) -> u64 {
         let tiles_a = (self.m_tiles() * self.k_tiles()) as u64;
-        let reps = (self.n_tiles() / GRID_COLS) as u64;
+        let reps = (self.n_tiles() / self.grid.cols) as u64;
         tiles_a * self.tiles.a_tile_bytes() as u64 * reps
     }
 
     /// Total bf16 bytes streamed from L3 for B (columns repeated M/(4m)×).
     pub fn b_stream_bytes(&self) -> u64 {
         let tiles_b = (self.k_tiles() * self.n_tiles()) as u64;
-        let reps = (self.m_tiles() / GRID_COLS) as u64;
+        let reps = (self.m_tiles() / self.grid.cols) as u64;
         tiles_b * self.tiles.b_tile_bytes() as u64 * reps
     }
 
@@ -263,6 +320,22 @@ mod tests {
             }
         }
         assert_eq!(count, t.output_tiles());
+    }
+
+    #[test]
+    fn grid_shape_value_matches_the_xdna1_constants() {
+        let g = GridShape::xdna1();
+        assert_eq!((g.rows, g.cols), (GRID_ROWS, GRID_COLS));
+        assert_eq!(g.cores(), 16);
+        assert_eq!(g.to_string(), "4x4");
+        // The functional constructors pin the carried grid to xdna1: the
+        // explicit-grid build of the same problem is the identical value.
+        let t = Tiling::paper(ProblemSize::new(256, 768, 2304)).unwrap();
+        assert_eq!(t.grid, GridShape::xdna1());
+        let explicit =
+            Tiling::with_grid(ProblemSize::new(256, 768, 2304), PAPER_TILES, GridShape::xdna1())
+                .unwrap();
+        assert_eq!(t, explicit);
     }
 
     #[test]

@@ -26,6 +26,7 @@ use xdna_repro::model::trainer::{train, TrainBackend, TrainConfig};
 use xdna_repro::model::{
     serve, AdmissionPolicy, GenRequest, Gpt2Model, KvCacheMode, ModelConfig, ServeConfig,
 };
+use xdna_repro::npu::profile::{DeviceProfile, Objective};
 use xdna_repro::power::profiles::PowerProfile;
 use xdna_repro::util::cli::Args;
 use xdna_repro::util::error::{Error, Result};
@@ -42,6 +43,7 @@ USAGE:
                       [--shards auto|N] [--schedule fifo|batch] [--plan]
                       [--plan-cache on|off] [--plan-cache-file PATH]
                       [--executor sync|background]
+                      [--target xdna1|xdna2] [--objective makespan|energy]
                       [--save ckpt.bin] [--seed S]
   xdna-repro gemm     [--m M --k K --n N] [--backend cpu|npu]
                       [--shards auto|N]
@@ -54,9 +56,10 @@ USAGE:
                       [--schedule fifo|batch] [--plan-cache on|off]
                       [--admission fifo|latency] [--tenants N]
                       [--quota fair|fixed:N]
+                      [--target xdna1|xdna2] [--objective makespan|energy]
   xdna-repro bench    [fig6|fig7|fig8|fig9|pipeline|reconfig|accuracy|
-                       host-model|serve|arbiter|all] [--json report.json]
-                      [--calibrate]
+                       host-model|serve|arbiter|energy|all]
+                      [--json report.json] [--calibrate]
   xdna-repro inspect  [flops|sizes|npu]
 
   --mode sets the legacy schedule (serial = queue depth 1, pipelined = 2);
@@ -92,6 +95,13 @@ USAGE:
   columns through the device arbiter; --quota fair time-shares the whole
   array, --quota fixed:K leases each tenant K dedicated columns.
   `bench arbiter` prices solo vs shared vs time-sliced occupancy ladders.
+  --target picks the NPU generation the scheduler prices against (xdna1 =
+  Phoenix, the paper's part and the default; xdna2 = Strix, 8 columns and
+  doubled MACs) — numerics are bit-identical across targets, only the
+  schedule changes. --objective makespan|energy picks what the candidate
+  simulation optimizes; it defaults to energy on --power battery (the
+  paper's FLOPS/Ws metric) and makespan otherwise. `bench energy` prices
+  the full target x power x objective ladder on one GPT-2 124M step.
   See docs/SCHEDULING.md.
 ";
 
@@ -151,6 +161,15 @@ fn cmd_train(args: &Args) -> Result<()> {
     let plan = args.flag("plan");
     let plan_cache = args.get_parse("plan-cache", PlanCacheMode::On)?.enabled();
     let executor = args.get_parse("executor", ExecutorMode::Background)?;
+    let profile = args.get_parse("target", DeviceProfile::xdna1())?;
+    // The power source picks the objective unless one is given: battery
+    // optimizes FLOPS/Ws, mains FLOPS/s. Resolved here, before the plan
+    // cache fingerprint is computed, so the fingerprint always sees the
+    // objective the session actually schedules with.
+    let objective = match args.get("objective") {
+        Some(o) => o.parse::<Objective>()?,
+        None => Objective::default_for(&power),
+    };
 
     let tc = TrainConfig {
         batch,
@@ -179,6 +198,8 @@ fn cmd_train(args: &Args) -> Result<()> {
                     depth,
                     shards,
                     schedule,
+                    profile: profile.clone(),
+                    objective,
                     ..Default::default()
                 },
                 &[],
@@ -212,8 +233,10 @@ fn cmd_train(args: &Args) -> Result<()> {
                 train(&mut model, &mut loader, &mut TrainBackend::CpuNpu(&mut sess), &tc)?
             };
             println!(
-                "session: {} offloaded GEMMs across {} registered sizes, \
-                 modeled NPU energy {:.2} J",
+                "session ({}, objective {}): {} offloaded GEMMs across {} registered \
+                 sizes, modeled NPU energy {:.2} J",
+                sess.device_profile().name(),
+                sess.objective(),
                 sess.invocations,
                 sess.registered_sizes().len(),
                 sess.modeled_energy_j
@@ -361,6 +384,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let admission = args.get_parse("admission", AdmissionPolicy::Fifo)?;
     let tenants = args.get_parse("tenants", 1usize)?;
     let quota = args.get_parse("quota", ColumnQuota::FairShare)?;
+    // No power source on the serve path, so the objective stays makespan
+    // (latency) unless asked for explicitly.
+    let profile = args.get_parse("target", DeviceProfile::xdna1())?;
+    let objective = args.get_parse("objective", Objective::Makespan)?;
     if tenants == 0 {
         return Err(Error::config("--tenants must be at least 1"));
     }
@@ -405,7 +432,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
              admission {admission})",
             args.get_or("config", "d2")
         );
-        let arbiter = DeviceArbiter::new();
+        let arbiter = DeviceArbiter::with_profile(&profile);
         let mut total_tokens = 0usize;
         for t in 0..tenants {
             let mine: Vec<GenRequest> = requests
@@ -420,6 +447,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
                     depth,
                     shards: tenant_shards,
                     schedule,
+                    profile: profile.clone(),
+                    objective,
                     ..Default::default()
                 },
                 &[],
@@ -476,6 +505,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
             depth,
             shards,
             schedule,
+            profile,
+            objective,
             ..Default::default()
         },
         &[],
@@ -531,10 +562,11 @@ fn cmd_bench(args: &Args) -> Result<()> {
             ]),
             "serve" => paperbench::serve::json_report(),
             "arbiter" => paperbench::arbiter::json_report(),
+            "energy" => paperbench::energy::json_report(),
             _ => {
                 return Err(Error::config(format!(
                     "--json is only available for `bench pipeline`, `bench serve`, \
-                     `bench arbiter`, or `all`, not `bench {which}`"
+                     `bench arbiter`, `bench energy`, or `all`, not `bench {which}`"
                 )))
             }
         };
@@ -558,6 +590,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
         "accuracy" => paperbench::accuracy::print(false)?,
         "serve" => paperbench::serve::print(),
         "arbiter" => paperbench::arbiter::print(),
+        "energy" => paperbench::energy::print(),
         "host-model" => {
             if args.flag("calibrate") {
                 paperbench::host_model::print_calibration();
@@ -577,6 +610,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
             paperbench::accuracy::print(false)?;
             paperbench::serve::print();
             paperbench::arbiter::print();
+            paperbench::energy::print();
         }
         other => return Err(Error::config(format!("unknown bench '{other}'"))),
     }

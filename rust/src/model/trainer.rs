@@ -7,7 +7,7 @@
 
 use crate::coordinator::executor::{self, ExecutorMode};
 use crate::coordinator::plan::{PlanCache, StepPlan};
-use crate::coordinator::session::OffloadSession;
+use crate::coordinator::session::{OffloadSession, STAGE_RECONFIG};
 use crate::power::meter::PowerMeter;
 use crate::power::profiles::PowerProfile;
 use crate::util::error::Result;
@@ -125,7 +125,17 @@ pub fn train(
         // the charge correct on multi-column timelines, where hidden time
         // can exceed host staging and exposed_host_s() clamps at zero.
         let mut npu_offload_s = 0.0f64;
-        let mut npu_energy_j = 0.0f64;
+        // Per-column accounting marks for the epoch's energy: the NPU is
+        // charged active draw for each column's busy growth, the idle
+        // floor for the rest of the epoch, and reconfiguration draw for
+        // the modeled barriers — not a flat array-active assumption.
+        let (col_mark, reconfig_mark) = match backend {
+            TrainBackend::CpuNpu(session) | TrainBackend::CpuNpuPlanned { session, .. } => (
+                session.pipeline.col_busy_s.clone(),
+                modeled_reconfig_s(session),
+            ),
+            TrainBackend::Cpu => (Vec::new(), 0.0),
+        };
         for _ in 0..cfg.steps_per_epoch {
             let (tokens, targets) = loader.next_batch();
             let (l, g) = match backend {
@@ -140,7 +150,6 @@ pub fn train(
                 }
                 TrainBackend::CpuNpu(session) => {
                     let before_makespan = session.pipeline.makespan_s();
-                    let before_energy = session.modeled_energy_j;
                     let mut d = MatmulDispatch::Npu(session);
                     let l = model
                         .forward(&mut d, &tokens, Some(&targets), cfg.batch, cfg.seq)?
@@ -149,12 +158,10 @@ pub fn train(
                     model.backward(&mut d)?;
                     let g = model.update(&cfg.optimizer);
                     npu_offload_s += session.pipeline.makespan_s() - before_makespan;
-                    npu_energy_j += session.modeled_energy_j - before_energy;
                     (l, g)
                 }
                 TrainBackend::CpuNpuPlanned { session, cache, executor } => {
                     let before_makespan = session.pipeline.makespan_s();
-                    let before_energy = session.modeled_energy_j;
                     let exec_mode = *executor;
                     // Optimistic cache hit: re-run the step's numerics
                     // against the most recently cached plan and charge
@@ -267,7 +274,6 @@ pub fn train(
                     };
                     let g = model.update(&cfg.optimizer);
                     npu_offload_s += session.pipeline.makespan_s() - before_makespan;
-                    npu_energy_j += session.modeled_energy_j - before_energy;
                     (l, g)
                 }
             };
@@ -288,10 +294,25 @@ pub fn train(
                     + npu_offload_s
             }
         };
-        let energy = meter.integrate_epoch(
-            modeled,
-            !matches!(backend, TrainBackend::Cpu),
-        ) + npu_energy_j;
+        let energy = match backend {
+            TrainBackend::Cpu => meter.integrate_epoch(modeled, false),
+            TrainBackend::CpuNpu(session) | TrainBackend::CpuNpuPlanned { session, .. } => {
+                let col_busy_s: Vec<f64> = session
+                    .pipeline
+                    .col_busy_s
+                    .iter()
+                    .enumerate()
+                    .map(|(i, &b)| (b - col_mark.get(i).copied().unwrap_or(0.0)).max(0.0))
+                    .collect();
+                let reconfig_s = (modeled_reconfig_s(session) - reconfig_mark).max(0.0);
+                meter.integrate_epoch_offloaded(
+                    modeled,
+                    &session.dev.npu.power,
+                    &col_busy_s,
+                    reconfig_s,
+                )
+            }
+        };
         out.push(EpochStats {
             epoch,
             loss,
@@ -302,6 +323,18 @@ pub fn train(
         });
     }
     Ok(out)
+}
+
+/// The session's accumulated modeled reconfiguration seconds (the
+/// Figure-7 reconfig stage) — epoch deltas feed the energy meter's
+/// barrier pricing.
+fn modeled_reconfig_s(session: &OffloadSession) -> f64 {
+    session
+        .modeled_stages
+        .iter()
+        .find(|(n, _)| n == STAGE_RECONFIG)
+        .map(|(_, s)| *s)
+        .unwrap_or(0.0)
 }
 
 /// The on-disk plan-cache key for a training run (`--plan-cache-file`):

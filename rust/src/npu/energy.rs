@@ -33,6 +33,23 @@ impl NpuPower {
     pub fn energy_j(&self, active_s: f64, idle_s: f64, reconfig_s: f64) -> f64 {
         self.active_w * active_s + self.idle_w * idle_s + self.reconfig_w * reconfig_s
     }
+
+    /// Energy (J) of a schedule window on a multi-column array, charged
+    /// **per column**: each column draws `active_w` while it is busy
+    /// (`col_busy_s[i]`) and `idle_w` for the rest of the window, with
+    /// `reconfig_w · reconfig_s` for array-wide reconfiguration barriers on
+    /// top. Charging idle draw per column (not array-wide) is what keeps
+    /// the accounting correct when columns are leased to different tenants
+    /// — each lease pays the idle floor of *its* columns only, and summing
+    /// tenant windows never double-counts the array.
+    pub fn window_energy_j(&self, col_busy_s: &[f64], window_s: f64, reconfig_s: f64) -> f64 {
+        let mut e = self.reconfig_w * reconfig_s;
+        for &busy in col_busy_s {
+            let busy = busy.min(window_s);
+            e += self.active_w * busy + self.idle_w * (window_s - busy).max(0.0);
+        }
+        e
+    }
 }
 
 #[cfg(test)]
@@ -50,5 +67,20 @@ mod tests {
     fn active_draws_more_than_idle() {
         let p = NpuPower::default();
         assert!(p.active_w > p.idle_w);
+    }
+
+    #[test]
+    fn window_energy_charges_idle_per_column() {
+        let p = NpuPower::default();
+        // Two columns over a 2 s window: one fully busy, one fully idle.
+        let e = p.window_energy_j(&[2.0, 0.0], 2.0, 0.5);
+        let want = p.active_w * 2.0 + p.idle_w * 2.0 + p.reconfig_w * 0.5;
+        assert!((e - want).abs() < 1e-12);
+        // An all-idle window is exactly ncols × idle floor.
+        let idle = p.window_energy_j(&[0.0; 4], 1.0, 0.0);
+        assert!((idle - 4.0 * p.idle_w).abs() < 1e-12);
+        // Busy clamped to the window: never less than the all-busy charge.
+        let clamped = p.window_energy_j(&[5.0], 2.0, 0.0);
+        assert!((clamped - p.active_w * 2.0).abs() < 1e-12);
     }
 }

@@ -16,6 +16,7 @@ pub mod grid;
 pub mod isa;
 pub mod locks;
 pub mod memcore;
+pub mod profile;
 pub mod shim;
 pub mod stream;
 pub mod timing;
@@ -72,6 +73,10 @@ pub struct NpuDevice {
     pub power: NpuPower,
     pub fidelity: Fidelity,
     pub stats: DeviceStats,
+    /// Reconfiguration seconds paid since the last GEMM — folded into the
+    /// next [`GemmReport::energy_j`] so modeled energy accounts for the
+    /// reprogramming that enabled the invocation.
+    pending_reconfig_s: f64,
 }
 
 /// Report for one GEMM execution.
@@ -104,6 +109,7 @@ impl NpuDevice {
             power: NpuPower::default(),
             fidelity: Fidelity::Fast,
             stats: DeviceStats::default(),
+            pending_reconfig_s: 0.0,
         }
     }
 
@@ -130,6 +136,7 @@ impl NpuDevice {
         self.stats.full_reconfigs += 1;
         let cost = self.timing.full_reconfig_s;
         self.stats.reconfig_s += cost;
+        self.pending_reconfig_s += cost;
         Ok(cost)
     }
 
@@ -143,7 +150,20 @@ impl NpuDevice {
         self.stats.inst_streams_run += 1;
         let cost = self.timing.minimal_reconfig_s;
         self.stats.reconfig_s += cost;
+        self.pending_reconfig_s += cost;
         Ok(cost)
+    }
+
+    /// Reconfiguration seconds accrued since the last GEMM consumed them.
+    pub fn pending_reconfig_s(&self) -> f64 {
+        self.pending_reconfig_s
+    }
+
+    /// Drain the pending reconfiguration span without running a GEMM — for
+    /// device models that price the kernel analytically instead of going
+    /// through [`Self::execute_gemm`] (e.g. the PJRT-backed device).
+    pub fn take_pending_reconfig_s(&mut self) -> f64 {
+        std::mem::take(&mut self.pending_reconfig_s)
     }
 
     /// Validate the device is programmed for `t` (shims ready, runtime
@@ -232,10 +252,15 @@ impl NpuDevice {
             c_padded
         };
 
-        // Timing/energy model + telemetry.
+        // Timing/energy model + telemetry. The invocation's energy includes
+        // the reconfiguration span that (re)programmed the array for it —
+        // charged once, on the first GEMM after the switch.
         let gt = self.timing.gemm(t);
         let util = self.timing.utilization(t);
-        let energy = self.power.energy_j(gt.kernel_s, gt.total_s() - gt.kernel_s, 0.0);
+        let energy =
+            self.power
+                .energy_j(gt.kernel_s, gt.total_s() - gt.kernel_s, self.pending_reconfig_s);
+        self.pending_reconfig_s = 0.0;
         self.stats.gemms_executed += 1;
         self.stats.active_s += gt.kernel_s;
         self.stats.l3_bytes += t.a_stream_bytes() + t.b_stream_bytes() + t.c_stream_bytes();
@@ -463,6 +488,21 @@ mod tests {
         assert!(dev.load_config(&cfg).unwrap() > 0.0);
         assert_eq!(dev.load_config(&cfg).unwrap(), 0.0);
         assert_eq!(dev.stats.full_reconfigs, 1);
+    }
+
+    #[test]
+    fn reconfig_energy_lands_on_the_next_gemm() {
+        let t = Tiling::paper(ProblemSize::new(64, 64, 128)).unwrap();
+        let mut dev = device_for(&t); // paid one full + one minimal reconfig
+        let a = vec![1.0; 64 * 64];
+        let b = vec![1.0; 64 * 128];
+        let (_, first) = dev.execute_gemm(&a, &b, &t).unwrap();
+        let (_, second) = dev.execute_gemm(&a, &b, &t).unwrap();
+        // The first invocation carries the programming cost exactly once.
+        let reconfig_s = dev.timing.full_reconfig_s + dev.timing.minimal_reconfig_s;
+        let premium = dev.power.reconfig_w * reconfig_s;
+        assert!((first.energy_j - second.energy_j - premium).abs() < 1e-12);
+        assert!(second.energy_j > 0.0);
     }
 
     #[test]

@@ -4,6 +4,8 @@
 //! and integrates. We synthesize the same trace from the profile's power
 //! states over modeled time; FLOP/Ws then falls out identically.
 
+use crate::npu::energy::NpuPower;
+
 use super::profiles::PowerProfile;
 
 /// Sampling period (the paper polls every 1/4 s).
@@ -41,6 +43,34 @@ impl PowerMeter {
             t += SAMPLE_PERIOD_S;
         }
         watts * epoch_s
+    }
+
+    /// Integrate one *offloaded* epoch with the NPU charged by column
+    /// state instead of the flat `npu_active_w` assumption of
+    /// [`Self::integrate_epoch`]: the platform draws its offload power for
+    /// the whole epoch, while the NPU pays active draw only for each
+    /// column's busy seconds, the idle floor for the rest of the window,
+    /// and reconfiguration draw for the barriers
+    /// ([`NpuPower::window_energy_j`]). `col_busy_s` is the epoch's
+    /// per-column device-busy delta (the session timeline's growth).
+    /// Returns Joules and appends 4 Hz samples at the epoch's mean power.
+    pub fn integrate_epoch_offloaded(
+        &mut self,
+        epoch_s: f64,
+        npu: &NpuPower,
+        col_busy_s: &[f64],
+        reconfig_s: f64,
+    ) -> f64 {
+        let energy = self.profile.platform_offload_w * epoch_s
+            + npu.window_energy_j(col_busy_s, epoch_s, reconfig_s);
+        let watts = if epoch_s > 0.0 { energy / epoch_s } else { 0.0 };
+        let t0 = self.samples.last().map(|(t, _)| *t).unwrap_or(0.0);
+        let mut t = 0.0;
+        while t < epoch_s {
+            self.samples.push((t0 + t, watts));
+            t += SAMPLE_PERIOD_S;
+        }
+        energy
     }
 
     /// Mean power over the trace (what the paper reports dividing by).
@@ -81,5 +111,29 @@ mod tests {
     #[test]
     fn efficiency_metric() {
         assert!((flops_per_ws(100, 50.0) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn offloaded_epoch_charges_npu_by_column_state() {
+        let npu = NpuPower::default();
+        let p = PowerProfile::mains();
+        // One of four columns busy half a 2 s window: far less NPU draw
+        // than the flat array-active assumption.
+        let mut col = PowerMeter::new(p.clone());
+        let e_col = col.integrate_epoch_offloaded(2.0, &npu, &[1.0, 0.0, 0.0, 0.0], 0.0);
+        let want = p.platform_offload_w * 2.0
+            + npu.active_w * 1.0
+            + npu.idle_w * (4.0 * 2.0 - 1.0);
+        assert!((e_col - want).abs() < 1e-9);
+        assert_eq!(col.samples.len(), 8);
+
+        let mut flat = PowerMeter::new(p);
+        let e_flat = flat.integrate_epoch(2.0, true);
+        assert!(e_col < e_flat, "mostly idle columns must cost less than flat active");
+
+        // Reconfiguration barriers are priced, not free.
+        let mut rc = PowerMeter::new(PowerProfile::mains());
+        let e_rc = rc.integrate_epoch_offloaded(2.0, &npu, &[1.0, 0.0, 0.0, 0.0], 0.5);
+        assert!((e_rc - e_col - npu.reconfig_w * 0.5).abs() < 1e-9);
     }
 }

@@ -7,6 +7,7 @@
 
 use crate::gemm::tiling::Tiling;
 use crate::npu::config::StaticConfig;
+use crate::npu::profile::DeviceProfile;
 use crate::npu::{GemmReport, NpuDevice};
 use crate::util::error::{Error, Result};
 
@@ -32,8 +33,19 @@ pub struct Run {
 impl XrtDevice {
     /// Open the device (power-on state; no configuration resident).
     pub fn open() -> XrtDevice {
+        XrtDevice::open_with_profile(&DeviceProfile::xdna1())
+    }
+
+    /// Open the device priced as `profile`'s generation: the simulated
+    /// NPU's timing and power models come from the profile. The functional
+    /// datapath stays the paper's 4×4 partition regardless of target —
+    /// profiles change what schedules *cost*, never what GEMMs *compute*.
+    pub fn open_with_profile(profile: &DeviceProfile) -> XrtDevice {
+        let mut npu = NpuDevice::new();
+        npu.timing = profile.timing.clone();
+        npu.power = profile.power.clone();
         XrtDevice {
-            npu: NpuDevice::new(),
+            npu,
             sync_cost: SyncCost::default(),
             sync_in_s: 0.0,
             sync_out_s: 0.0,
