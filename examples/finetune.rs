@@ -26,6 +26,10 @@
 //! sync|background` (default background) picks whether cached replays
 //! drain on the caller's thread or on the background device-stage
 //! thread — the run report prints the measured wallclock-hidden split.
+//! `--block-offload on` (with `--plan`) records the transformer block's
+//! non-GEMM ops (layernorm, fused GELU epilogues, softmax) into the step
+//! plan with device-resident activation edges — the run report prints
+//! the resident-activations counters; numerics stay bit-identical.
 //! `--target xdna1|xdna2` picks the NPU generation the scheduler prices
 //! against (numerics are bit-identical across targets), and `--objective
 //! makespan|energy` picks what the candidate simulation optimizes — it
@@ -70,6 +74,17 @@ fn main() -> xdna_repro::Result<()> {
     let plan = args.flag("plan");
     let plan_cache = args.get_parse("plan-cache", PlanCacheMode::On)?.enabled();
     let executor: ExecutorMode = args.get_parse("executor", ExecutorMode::Background)?;
+    // Valued like --plan-cache (not a bare flag): "on" records the
+    // block's non-GEMM ops + residency into the step plans.
+    let block_offload = match args.get_or("block-offload", "off") {
+        "on" => true,
+        "off" => false,
+        v => {
+            return Err(xdna_repro::Error::config(format!(
+                "unknown block-offload mode '{v}' (expected on|off)"
+            )))
+        }
+    };
     let cache_file = args.get("plan-cache-file").map(str::to_string);
     let epochs = 20.min(total_steps);
     let steps_per_epoch = (total_steps / epochs).max(1);
@@ -90,6 +105,7 @@ fn main() -> xdna_repro::Result<()> {
         epochs,
         steps_per_epoch,
         power,
+        block_offload,
         ..Default::default()
     };
 
@@ -219,6 +235,19 @@ fn main() -> xdna_repro::Result<()> {
             engine.wall_blocked_s * 1e3,
             (engine.wall_gemm_s - engine.wall_blocked_s).max(0.0) * 1e3
         );
+        println!(
+            "resident activations ({}): {} edge(s) kept device-resident, \
+             {} non-GEMM op(s) in the plan",
+            if block_offload { "block offload on" } else { "block offload off" },
+            engine.resident_edges,
+            engine.elementwise_ops
+        );
+        if block_offload {
+            assert!(
+                engine.resident_edges > 0 && engine.elementwise_ops > 0,
+                "block offload must keep activations resident"
+            );
+        }
     }
 
     println!("\nper-op wallclock over the run (paper Figure 8 categories):");

@@ -11,7 +11,7 @@
 //! that generate Figure 7, and can emit the table as JSON for CI
 //! artifacts.
 
-use crate::coordinator::plan::{PlanCache, PlanOp, StepPlan};
+use crate::coordinator::plan::{FusedEpilogue, PlanCache, PlanOp, PlanOpKind, StepPlan};
 use crate::coordinator::session::{
     InputLayout, OffloadSession, QueueDepth, SessionConfig, ShardPolicy, Shards,
 };
@@ -56,6 +56,18 @@ pub struct PipelineReport {
     /// the run report prints, now carried by the JSON artifact rows.
     pub plan_cache_hits: u64,
     pub plan_cache_misses: u64,
+    /// What every cached replay costs with `--block-offload on`: the same
+    /// epoch stream with the transformer block's non-GEMM ops (layernorm,
+    /// fused GELU epilogues, softmax) recorded into the plan and the
+    /// chained activations kept device-resident. Reported next to
+    /// `plan_replay_s` as the GEMM-only vs block-offloaded row pair; at
+    /// 124M the full-vocab softmax stream dominates the saved per-layer
+    /// round-trips, which is exactly what the pair is there to show.
+    pub block_replay_s: f64,
+    /// Device-resident activation edges in the block-offloaded plan.
+    pub block_resident_edges: u64,
+    /// Non-GEMM (elementwise / fused-epilogue) ops in that plan.
+    pub block_elementwise_ops: u64,
 }
 
 impl PipelineReport {
@@ -126,6 +138,8 @@ pub fn breakdown_at(profile: &PowerProfile, depth: usize, shards: usize) -> Pipe
     }
     let (plan_record_s, plan_replay_s, hits, misses) =
         plan_record_vs_replay(profile, depth, shards);
+    let (block_replay_s, block_resident_edges, block_elementwise_ops) =
+        block_offload_replay(profile, depth, shards);
     PipelineReport {
         depth,
         shards,
@@ -137,7 +151,65 @@ pub fn breakdown_at(profile: &PowerProfile, depth: usize, shards: usize) -> Pipe
         plan_replay_s,
         plan_cache_hits: hits,
         plan_cache_misses: misses,
+        block_replay_s,
+        block_resident_edges,
+        block_elementwise_ops,
     }
+}
+
+/// Record one 124M epoch's op stream as a dry-run step plan: the GEMM
+/// sites in issue order, and — with `block` — the transformer block's
+/// non-GEMM producers interleaved exactly as the model records them
+/// (`ln1 → qkv`, `ln2 → fc (fused GELU) → fcproj`, `lnf → lm_head →
+/// softmax`), with each chained consumer's A input kept device-resident.
+fn record_epoch_plan(sess: &mut OffloadSession, block: bool) -> StepPlan {
+    let dims = ModelDims::gpt2_124m();
+    let bt = dims.bt();
+    let c = dims.channels;
+    let vp = dims.padded_vocab;
+    let mut plan = StepPlan::new();
+    for site in gemm_sites(&dims) {
+        // The layouts the trainer's sites really use (the same mapping
+        // fig6's transposed-input counts come from); weights and saved
+        // activations are known before the step, so B prefetches.
+        let (a_layout, b_layout) = match site.pass {
+            Pass::Forward => (InputLayout::RowMajor, InputLayout::Transposed),
+            Pass::BackwardData => (InputLayout::RowMajor, InputLayout::RowMajor),
+            Pass::BackwardWeight => (InputLayout::Transposed, InputLayout::RowMajor),
+        };
+        let fwd = block && site.pass == Pass::Forward;
+        // qkv/fc/lm_head are fed by a layernorm; fcproj by fc's fused
+        // GELU epilogue. attproj's input comes off the host attention op,
+        // so it stays a plain GEMM even with block offload on.
+        let ln_before = fwd && matches!(site.op, "qkv" | "fc" | "lm_head");
+        let resident = fwd && matches!(site.op, "qkv" | "fc" | "fcproj" | "lm_head");
+        let fused = if fwd && site.op == "fc" {
+            FusedEpilogue::Gelu
+        } else {
+            FusedEpilogue::None
+        };
+        for _ in 0..site.count {
+            if ln_before {
+                let ln =
+                    PlanOp::elementwise(PlanOpKind::LayerNorm, ProblemSize::new(bt, 1, c));
+                sess.record_modeled(&mut plan, &ln).expect("layernorm always prices");
+            }
+            let op = PlanOp::new(site.size)
+                .with_a_layout(a_layout)
+                .with_b_layout(b_layout)
+                .prefetchable_b(true)
+                .with_fused(fused)
+                .resident_input(resident);
+            sess.record_modeled(&mut plan, &op).expect("every GPT-2 site tiles");
+            if fwd && site.op == "lm_head" {
+                let sm =
+                    PlanOp::elementwise(PlanOpKind::Softmax, ProblemSize::new(bt, 1, vp))
+                        .resident_input(true);
+                sess.record_modeled(&mut plan, &sm).expect("softmax always prices");
+            }
+        }
+    }
+    plan
 }
 
 /// Model the same epoch GEMM stream through the record→schedule→execute
@@ -163,25 +235,7 @@ fn plan_record_vs_replay(
     )
     .expect("session with no preloaded sizes always opens");
     sess.set_device_time_scale(profile.npu_time_scale);
-    let mut plan = StepPlan::new();
-    for site in gemm_sites(&ModelDims::gpt2_124m()) {
-        // The layouts the trainer's sites really use (the same mapping
-        // fig6's transposed-input counts come from); weights and saved
-        // activations are known before the step, so B prefetches.
-        let (a_layout, b_layout) = match site.pass {
-            Pass::Forward => (InputLayout::RowMajor, InputLayout::Transposed),
-            Pass::BackwardData => (InputLayout::RowMajor, InputLayout::RowMajor),
-            Pass::BackwardWeight => (InputLayout::Transposed, InputLayout::RowMajor),
-        };
-        for _ in 0..site.count {
-            let op = PlanOp::new(site.size)
-                .with_a_layout(a_layout)
-                .with_b_layout(b_layout)
-                .prefetchable_b(true);
-            sess.record_modeled(&mut plan, &op)
-                .expect("every GPT-2 site tiles");
-        }
-    }
+    let mut plan = record_epoch_plan(&mut sess, false);
     let report = sess.execute(&mut plan).expect("modeled plan executes");
     let record_s = report.serial_growth_s;
 
@@ -201,6 +255,33 @@ fn plan_record_vs_replay(
     (record_s, rep.makespan_growth_s, cache.hits(), cache.misses())
 }
 
+/// The block-offloaded half of the row pair: the same 124M epoch stream
+/// with the block's non-GEMM ops and resident activation edges in the
+/// plan, replayed from its own frozen cache entry. Returns (replay
+/// makespan seconds, resident edges, non-GEMM ops).
+fn block_offload_replay(profile: &PowerProfile, depth: usize, shards: usize) -> (f64, u64, u64) {
+    let mut sess = OffloadSession::new(
+        SessionConfig {
+            depth: QueueDepth(depth),
+            shards: ShardPolicy::Fixed(Shards(shards)),
+            ..Default::default()
+        },
+        &[],
+    )
+    .expect("session with no preloaded sizes always opens");
+    sess.set_device_time_scale(profile.npu_time_scale);
+    let mut plan = record_epoch_plan(&mut sess, true);
+    let report = sess.execute(&mut plan).expect("modeled block plan executes");
+    let (edges, elementwise) = (report.resident_edges as u64, report.elementwise_ops as u64);
+    let mut cache = PlanCache::new();
+    cache.insert(sess.freeze(plan).expect("executed plan freezes"));
+    let entry = cache
+        .latest_for(sess.session_id())
+        .expect("entry cached for this session");
+    let rep = sess.charge_frozen(entry).expect("frozen block schedule charges");
+    (rep.makespan_growth_s, edges, elementwise)
+}
+
 /// The PR-1 operating point: double-buffered ring, unsharded.
 pub fn breakdown(profile: &PowerProfile) -> PipelineReport {
     breakdown_at(profile, 2, 1)
@@ -216,7 +297,7 @@ pub fn print(profile: &PowerProfile) {
         profile.name
     );
     println!(
-        "{:>6} {:>7} {:>12} {:>12} {:>12} {:>12} {:>14} {:>11} {:>11}",
+        "{:>6} {:>7} {:>12} {:>12} {:>12} {:>12} {:>14} {:>11} {:>11} {:>11}",
         "depth",
         "shards",
         "host ms",
@@ -225,12 +306,13 @@ pub fn print(profile: &PowerProfile) {
         "overlap ms",
         "hidden",
         "record ms",
-        "replay ms"
+        "replay ms",
+        "block ms"
     );
     for (depth, shards) in OPERATING_POINTS {
         let b = breakdown_at(profile, depth, shards);
         println!(
-            "{:>6} {:>7} {:>12.2} {:>12.2} {:>12.2} {:>12.2} {:>9.2} ms ({:>4.1}%) {:>11.2} {:>11.2}",
+            "{:>6} {:>7} {:>12.2} {:>12.2} {:>12.2} {:>12.2} {:>9.2} ms ({:>4.1}%) {:>11.2} {:>11.2} {:>11.2}",
             b.depth,
             b.shards,
             b.host_s * 1e3,
@@ -240,13 +322,15 @@ pub fn print(profile: &PowerProfile) {
             b.hidden_s() * 1e3,
             100.0 * b.hidden_s() / b.serial_s,
             b.plan_record_s * 1e3,
-            b.plan_replay_s * 1e3
+            b.plan_replay_s * 1e3,
+            b.block_replay_s * 1e3
         );
     }
     println!("(spans on one column never overlap: kernel time is counted once)");
     println!(
         "(record = one-time serial cost of recording a step plan; replay = every \
-         cached step thereafter)"
+         cached step thereafter; block = that replay with --block-offload on — \
+         non-GEMM ops in the plan, chained activations device-resident)"
     );
 }
 
@@ -268,6 +352,15 @@ fn report_to_json(b: &PipelineReport) -> Json {
     o.insert(
         "plan_cache_misses".to_string(),
         Json::Num(b.plan_cache_misses as f64),
+    );
+    o.insert("block_replay_s".to_string(), Json::Num(b.block_replay_s));
+    o.insert(
+        "block_resident_edges".to_string(),
+        Json::Num(b.block_resident_edges as f64),
+    );
+    o.insert(
+        "block_elementwise_ops".to_string(),
+        Json::Num(b.block_elementwise_ops as f64),
     );
     Json::Obj(o)
 }
@@ -291,7 +384,13 @@ fn report_to_json(b: &PipelineReport) -> Json {
 ///   report), and `plan_replay_s` is now charged by replaying the actual
 ///   frozen `CachedStep` through `finish_replay`. v2 consumers keep
 ///   working; the bump marks the row shape extension.
-pub const SCHEMA_VERSION: u64 = 3;
+/// * v4 — additive on v3: rows gain the GEMM-only vs block-offloaded
+///   pair — `block_replay_s` (the cached replay with the transformer
+///   block's non-GEMM ops and resident activation edges in the plan)
+///   next to `plan_replay_s`, plus `block_resident_edges` /
+///   `block_elementwise_ops` counting what the block plan kept
+///   on-device. v3 consumers keep working.
+pub const SCHEMA_VERSION: u64 = 4;
 
 /// The full report as JSON (per power profile, per operating point) — the
 /// CI smoke step uploads this as a build artifact. Self-describing: see
@@ -420,6 +519,21 @@ mod tests {
     }
 
     #[test]
+    fn block_offload_row_counts_the_whole_chain() {
+        let b = breakdown_at(&PowerProfile::mains(), 2, 1);
+        // 12 layers of ln1 → qkv, ln2 → fc (fused GELU) → fcproj, plus
+        // lnf → lm_head → softmax once. Resident A edges: the 37 chained
+        // consumer GEMMs (qkv/fc/fcproj × 12 + lm_head) + softmax = 38.
+        // Non-GEMM ops: 25 layernorms + softmax + 12 fused-GELU fcs = 38.
+        assert_eq!(b.block_resident_edges, 38, "{b:?}");
+        assert_eq!(b.block_elementwise_ops, 38, "{b:?}");
+        // The pair is priced from the same cost models; at 124M the
+        // full-vocab softmax stream is a real cost, so no direction is
+        // pinned here — only that both halves of the pair are charged.
+        assert!(b.block_replay_s > 0.0 && b.plan_replay_s > 0.0);
+    }
+
+    #[test]
     fn json_report_is_self_describing_and_has_all_operating_points() {
         let j = json_report(&[PowerProfile::mains(), PowerProfile::battery()]);
         assert_eq!(
@@ -455,6 +569,10 @@ mod tests {
                 // record→freeze→replay cycle ride along in every row.
                 assert_eq!(r["plan_cache_hits"].as_usize().unwrap(), 1);
                 assert_eq!(r["plan_cache_misses"].as_usize().unwrap(), 1);
+                // v4 additive: the GEMM-only vs block-offloaded pair.
+                assert!(r["block_replay_s"].as_f64().unwrap() > 0.0);
+                assert!(r["block_resident_edges"].as_usize().unwrap() > 0);
+                assert!(r["block_elementwise_ops"].as_usize().unwrap() > 0);
             }
         }
         // The compact serialization round-trips (what CI uploads).

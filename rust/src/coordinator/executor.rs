@@ -253,6 +253,10 @@ pub struct ExecClient<'c> {
     /// Measured wallclock per invocation, by record order.
     walls: Vec<f64>,
     completed: usize,
+    /// Bytes of deferred `a` input copied into owned job buffers this
+    /// step (the [`ExecClient::submit_deferred`] fallback; the
+    /// zero-copy borrowed path leaves this untouched).
+    copied_bytes: usize,
     /// Wallclock this thread spent blocked on the executor (queue
     /// handoff + waits).
     blocked_s: f64,
@@ -282,6 +286,7 @@ impl<'c> ExecClient<'c> {
             closed: false,
             walls: vec![0.0; n],
             completed: 0,
+            copied_bytes: 0,
             blocked_s: 0.0,
             poisoned: false,
             chain: None,
@@ -419,12 +424,14 @@ impl<'c> ExecClient<'c> {
     /// backward weight-gradient path — the whole invocation overlaps the
     /// trainer's subsequent CPU ops.
     ///
-    /// `a` is taken by value (a copy) because the model reuses its
-    /// gradient scratch buffers across layers; `b` must be step-stable
-    /// (a saved forward activation or a parameter). The target is the
-    /// `dst_len`-element region at `dst_off` of the arena later passed
-    /// to `drain_and_apply` — plain offsets, no pointer crosses the
-    /// thread boundary (safety rule 2).
+    /// `a` is taken by value (a copy) because the model may reuse its
+    /// gradient scratch buffers across layers; when the scratch is
+    /// step-stable use the zero-copy
+    /// [`ExecClient::submit_deferred_borrowed`] instead. `b` must be
+    /// step-stable (a saved forward activation or a parameter). The
+    /// target is the `dst_len`-element region at `dst_off` of the arena
+    /// later passed to `drain_and_apply` — plain offsets, no pointer
+    /// crosses the thread boundary (safety rule 2).
     ///
     /// # Safety
     ///
@@ -440,6 +447,53 @@ impl<'c> ExecClient<'c> {
         dst_off: usize,
         dst_len: usize,
     ) -> Result<PlanNode> {
+        self.copied_bytes += std::mem::size_of_val(a.as_slice());
+        let a_len = a.len();
+        self.submit_deferred_input(op, JobInput::Owned(a), a_len, b, dst_off, dst_len)
+    }
+
+    /// Zero-copy variant of [`ExecClient::submit_deferred`]: `a` is
+    /// *borrowed*, not copied. Use when the `dout` buffer is stable for
+    /// the rest of the step — the model's parity-rotated `dout`
+    /// scratches and the step-stable lm-head `d_logits` qualify, which
+    /// is what stops the executor copying ~51 MB per 124M step.
+    ///
+    /// # Safety
+    ///
+    /// Both `a` and `b` must stay valid and unmutated until the step
+    /// finishes ([`run_replay_step`] drains every completion) or a
+    /// client method returns an error (quiesced first). A `dout`
+    /// scratch that is rewritten before the step ends must go through
+    /// the copying [`ExecClient::submit_deferred`] instead.
+    pub unsafe fn submit_deferred_borrowed(
+        &mut self,
+        op: &PlanOp,
+        a: &[f32],
+        b: &[f32],
+        dst_off: usize,
+        dst_len: usize,
+    ) -> Result<PlanNode> {
+        self.submit_deferred_input(
+            op,
+            JobInput::Borrowed(SendConst(a.as_ptr()), a.len()),
+            a.len(),
+            b,
+            dst_off,
+            dst_len,
+        )
+    }
+
+    /// Shared tail of the two deferred submit forms (safety is the
+    /// caller's contract; this only checks and enqueues).
+    fn submit_deferred_input(
+        &mut self,
+        op: &PlanOp,
+        a: JobInput,
+        a_len: usize,
+        b: &[f32],
+        dst_off: usize,
+        dst_len: usize,
+    ) -> Result<PlanNode> {
         self.guard_open()?;
         let out_len = op.size.m * op.size.n;
         if dst_len != out_len {
@@ -449,7 +503,7 @@ impl<'c> ExecClient<'c> {
                 op.size,
             )));
         }
-        if let Err(e) = self.check_next(op, a.len(), b.len(), out_len) {
+        if let Err(e) = self.check_next(op, a_len, b.len(), out_len) {
             return self.fail(e);
         }
         let seq = self.cursor;
@@ -465,11 +519,49 @@ impl<'c> ExecClient<'c> {
             size: op.size,
             a_layout: op.a_layout,
             b_layout: op.b_layout,
-            a: JobInput::Owned(a),
+            a,
             b: JobInput::Borrowed(SendConst(b.as_ptr()), b.len()),
             out: JobOutput::Owned(out_len),
         })?;
         self.cursor += 1;
+        Ok(PlanNode(seq))
+    }
+
+    /// Bytes of deferred `dout` input this step has copied into owned
+    /// job buffers so far. The zero-copy path
+    /// ([`ExecClient::submit_deferred_borrowed`]) leaves this at 0 —
+    /// the executor unit tests pin that, and the trainer surfaces it in
+    /// the finetune report.
+    pub fn deferred_copied_bytes(&self) -> usize {
+        self.copied_bytes
+    }
+
+    /// Advance the replay cursor past one *elementwise* op (layernorm /
+    /// gelu / softmax) without crossing the thread boundary. Elementwise
+    /// numerics run on the trainer thread — bit-identity with the host
+    /// baseline is structural, exactly as in the synchronous
+    /// [`OffloadSession::replay_elementwise`] — and the op's modeled
+    /// device cost is charged from the frozen schedule when the step
+    /// finishes, so there is no job to enqueue: the op is checked
+    /// against the cached plan (divergence stays a recoverable
+    /// re-record signal) and immediately marked complete.
+    pub fn advance_elementwise(&mut self, op: &PlanOp) -> Result<PlanNode> {
+        self.guard_open()?;
+        if !op.kind.is_elementwise() {
+            return self.fail(Error::config(format!(
+                "advance_elementwise takes layernorm/gelu/softmax ops; submit the gemm {} \
+                 via submit or submit_deferred",
+                op.size
+            )));
+        }
+        if let Err(e) = self.entry.check_op(self.cursor, op) {
+            return self.fail(e);
+        }
+        let seq = self.cursor;
+        self.cursor += 1;
+        self.completed += 1;
+        self.waited[seq] = true;
+        self.walls[seq] = 0.0;
         Ok(PlanNode(seq))
     }
 
@@ -511,7 +603,7 @@ impl<'c> ExecClient<'c> {
         if self.cursor != self.entry.ops.len() {
             let cursor = self.cursor;
             return self.fail(Error::plan_divergence(format!(
-                "step body drained after {cursor} of the cached plan's {} GEMMs; \
+                "step body drained after {cursor} of the cached plan's {} ops; \
                  re-record the step",
                 self.entry.ops.len()
             )));
@@ -607,7 +699,7 @@ impl<'c> ExecClient<'c> {
         if self.cursor != self.entry.ops.len() {
             let cursor = self.cursor;
             return self.fail(Error::plan_divergence(format!(
-                "step ended after {cursor} of the cached plan's {} GEMMs; re-record the step",
+                "step ended after {cursor} of the cached plan's {} ops; re-record the step",
                 self.entry.ops.len()
             )));
         }
@@ -762,7 +854,7 @@ pub fn run_replay_step<'c, R>(
 
 #[cfg(test)]
 mod tests {
-    use super::super::plan::{PlanCache, PlanOp, StepPlan};
+    use super::super::plan::{PlanCache, PlanOp, PlanOpKind, StepPlan};
     use super::super::scheduler::SchedulePolicy;
     use super::super::session::{QueueDepth, SessionConfig};
     use super::*;
@@ -1069,6 +1161,160 @@ mod tests {
         // A step that ends early is also a divergence.
         let err = run_replay_step(&mut sess, entry, |_client| Ok(())).unwrap_err();
         assert!(err.is_plan_divergence(), "{err}");
+    }
+
+    /// The block-offload residency edge in miniature: GEMM → resident
+    /// layernorm → resident GEMM, as one cached mixed-kind step.
+    fn mixed_step_ops() -> Vec<PlanOp> {
+        let s = ProblemSize::new(64, 64, 128);
+        vec![
+            PlanOp::new(s).prefetchable_b(true),
+            PlanOp::elementwise(PlanOpKind::LayerNorm, ProblemSize::new(64, 1, 128))
+                .resident_input(true)
+                .after(PlanNode(0)),
+            PlanOp::new(s)
+                .prefetchable_b(true)
+                .resident_input(true)
+                .after(PlanNode(1)),
+        ]
+    }
+
+    #[test]
+    fn mixed_kind_background_replay_matches_sync() {
+        let ops = mixed_step_ops();
+        let a0 = vec![1.0f32; 64 * 64];
+        let b0 = vec![0.5f32; 64 * 128];
+        let a2 = vec![2.0f32; 64 * 64];
+        let b2 = vec![0.5f32; 64 * 128];
+
+        let mut sess = session(2);
+        let mut plan = StepPlan::new();
+        let mut c0 = vec![0.0f32; 64 * 128];
+        sess.record_gemm(&mut plan, &ops[0], &a0, &b0, &mut c0).unwrap();
+        sess.record_elementwise(&mut plan, &ops[1]).unwrap();
+        let mut c2 = vec![0.0f32; 64 * 128];
+        sess.record_gemm(&mut plan, &ops[2], &a2, &b2, &mut c2).unwrap();
+        sess.execute(&mut plan).unwrap();
+        let mut cache = PlanCache::new();
+        cache.insert(sess.freeze(plan).unwrap());
+
+        // Sync replay for reference outputs.
+        let mut replay = sess.begin_replay(&cache).unwrap();
+        let mut s0 = vec![0.0f32; 64 * 128];
+        sess.replay_gemm(&mut replay, &ops[0], &a0, &b0, &mut s0).unwrap();
+        sess.replay_elementwise(&mut replay, &ops[1]).unwrap();
+        let mut s2 = vec![0.0f32; 64 * 128];
+        sess.replay_gemm(&mut replay, &ops[2], &a2, &b2, &mut s2).unwrap();
+        let rep_sync = sess.finish_replay(replay).unwrap();
+        assert_eq!(rep_sync.elementwise_ops, 1);
+        assert_eq!(rep_sync.resident_edges, 2, "ln resident_a + consumer resident_a");
+
+        // Background replay: the elementwise op advances the cursor with
+        // no job crossing the queue, and finalize's invariants hold.
+        let entry = cache.latest_for(sess.session_id()).unwrap();
+        let ((g0, g2), rep_bg) = run_replay_step(&mut sess, entry, |client| {
+            let mut c = vec![0.0f32; 64 * 128];
+            // SAFETY: waited before the buffers leave this frame.
+            let (_, h) = unsafe { client.submit(&ops[0], &a0, &b0, &mut c)? };
+            client.wait(h)?;
+            client.advance_elementwise(&ops[1])?;
+            let mut d = vec![0.0f32; 64 * 128];
+            // SAFETY: waited before the buffers leave this frame.
+            let (_, h) = unsafe { client.submit(&ops[2], &a2, &b2, &mut d)? };
+            client.wait(h)?;
+            Ok((c, d))
+        })
+        .unwrap();
+        assert_eq!(g0, s0, "background numerics must be the sync numerics");
+        assert_eq!(g2, s2, "background numerics must be the sync numerics");
+        assert_eq!(rep_bg.order, rep_sync.order, "same frozen schedule charged");
+        assert!(
+            (rep_bg.makespan_growth_s - rep_sync.makespan_growth_s).abs() < 1e-12,
+            "background charges the modeled timeline exactly like sync"
+        );
+        assert_eq!(rep_bg.elementwise_ops, 1);
+        assert_eq!(rep_bg.resident_edges, 2);
+
+        // Submitting the layernorm as a GEMM is caught on the trainer
+        // thread before any work is queued.
+        let entry = cache.latest_for(sess.session_id()).unwrap();
+        let err = run_replay_step(&mut sess, entry, |client| {
+            let mut c = vec![0.0f32; 64 * 128];
+            // SAFETY: submit errors (divergence) and quiesces.
+            let (_, h) = unsafe { client.submit(&ops[0], &a0, &b0, &mut c)? };
+            client.wait(h)?;
+            let gemm_instead = PlanOp::new(ProblemSize::new(64, 64, 128)).after(PlanNode(0));
+            let a = vec![0.0f32; 64 * 64];
+            let b = vec![0.0f32; 64 * 128];
+            let mut d = vec![0.0f32; 64 * 128];
+            // SAFETY: the erroring submit quiesces before returning.
+            unsafe { client.submit(&gemm_instead, &a, &b, &mut d).map(|_| ()) }
+        })
+        .unwrap_err();
+        assert!(err.is_plan_divergence(), "{err}");
+    }
+
+    #[test]
+    fn advance_elementwise_rejects_gemm_ops() {
+        let (mut sess, cache) = cached_session();
+        let entry = cache.latest_for(sess.session_id()).unwrap();
+        let ops = step_ops();
+        let err = run_replay_step(&mut sess, entry, |client| {
+            let (op, _, _, _) = &ops[0];
+            client.advance_elementwise(op).map(|_| ())
+        })
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("submit or submit_deferred"), "{err}");
+    }
+
+    #[test]
+    fn borrowed_deferred_skips_the_copy_and_matches_the_owned_path() {
+        let (mut sess, cache) = cached_session();
+        let ops = step_ops();
+
+        // Owned path: the dout copy is counted.
+        let entry = cache.latest_for(sess.session_id()).unwrap();
+        let mut arena_owned = vec![1.0f32; 64 * 128];
+        let (copied, _) = run_replay_step(&mut sess, entry, |client| {
+            for (op, a, b, _) in &ops[..2] {
+                let mut c = vec![0.0f32; op.size.m * op.size.n];
+                // SAFETY: waited before the buffers leave this iteration.
+                let (_, h) = unsafe { client.submit(op, a, b, &mut c)? };
+                client.wait(h)?;
+            }
+            let (op, a, b, _) = &ops[2];
+            // SAFETY: a is copied in; b outlives the step body.
+            unsafe { client.submit_deferred(op, a.clone(), b, 0, 64 * 128)? };
+            client.drain_and_apply(&mut arena_owned)?;
+            Ok(client.deferred_copied_bytes())
+        })
+        .unwrap();
+        assert_eq!(copied, 64 * 64 * 4, "the owned path copies dout");
+
+        // Borrowed path: same numerics, zero bytes copied.
+        let entry = cache.latest_for(sess.session_id()).unwrap();
+        let mut arena_borrowed = vec![1.0f32; 64 * 128];
+        let (copied, _) = run_replay_step(&mut sess, entry, |client| {
+            for (op, a, b, _) in &ops[..2] {
+                let mut c = vec![0.0f32; op.size.m * op.size.n];
+                // SAFETY: waited before the buffers leave this iteration.
+                let (_, h) = unsafe { client.submit(op, a, b, &mut c)? };
+                client.wait(h)?;
+            }
+            let (op, a, b, _) = &ops[2];
+            // SAFETY: a and b are step-stable locals of this test frame,
+            // alive until drain_and_apply below completes the job.
+            unsafe { client.submit_deferred_borrowed(op, a, b, 0, 64 * 128)? };
+            client.drain_and_apply(&mut arena_borrowed)?;
+            Ok(client.deferred_copied_bytes())
+        })
+        .unwrap();
+        assert_eq!(copied, 0, "the borrowed path copies nothing");
+        assert_eq!(
+            arena_borrowed, arena_owned,
+            "zero-copy deferred dW is bit-identical to the copying path"
+        );
     }
 
     #[test]

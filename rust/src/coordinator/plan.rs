@@ -104,12 +104,69 @@ impl PlanNode {
     }
 }
 
-/// Typed descriptor of one GEMM to record into a [`StepPlan`] — the plan
+/// What kind of device invocation a [`PlanOp`] records. The paper
+/// offloads only GEMMs; block-level offload adds the transformer's
+/// non-GEMM sites so a whole layer chains on-device without
+/// round-tripping activations through the host between matmuls.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PlanOpKind {
+    /// A matmul on the MAC grid (the paper's op; the only kind that
+    /// programs a strip variant and can force a reconfiguration).
+    #[default]
+    Gemm,
+    /// Row-wise layer normalization on the vector units.
+    LayerNorm,
+    /// Elementwise GELU on the vector units.
+    Gelu,
+    /// Row-wise softmax (the attention-score / classifier site).
+    Softmax,
+}
+
+impl PlanOpKind {
+    /// Elementwise/vector ops run on the shim-adjacent vector units and
+    /// never reprogram the MAC array: they impose no reconfiguration
+    /// barrier and leave the strip variant untouched.
+    pub fn is_elementwise(self) -> bool {
+        !matches!(self, PlanOpKind::Gemm)
+    }
+}
+
+impl std::fmt::Display for PlanOpKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PlanOpKind::Gemm => write!(f, "gemm"),
+            PlanOpKind::LayerNorm => write!(f, "layernorm"),
+            PlanOpKind::Gelu => write!(f, "gelu"),
+            PlanOpKind::Softmax => write!(f, "softmax"),
+        }
+    }
+}
+
+/// Epilogue fused into a GEMM invocation (TileFuse-style): the vector
+/// units apply it while the output strip drains, so a fused site pays no
+/// separate elementwise invocation and no extra modeled device time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum FusedEpilogue {
+    #[default]
+    None,
+    /// Row-broadcast bias add on the output strip.
+    Bias,
+    /// GELU applied to the output strip (the matmul+gelu MLP site).
+    Gelu,
+}
+
+/// Typed descriptor of one op to record into a [`StepPlan`] — the plan
 /// analogue of [`super::session::GemmOp`], with plan-node dependencies
-/// instead of session tickets and a prefetch hint for the B input.
+/// instead of session tickets, a prefetch hint for the B input, an op
+/// [`PlanOpKind`], and device-residency hints for block-level offload.
 #[derive(Debug, Clone)]
 pub struct PlanOp {
     pub size: ProblemSize,
+    /// Which device invocation this op records (GEMM by default).
+    pub kind: PlanOpKind,
+    /// Epilogue fused into a GEMM invocation (ignored for elementwise
+    /// kinds, which *are* the epilogue op).
+    pub fused: FusedEpilogue,
     pub a_layout: InputLayout,
     pub b_layout: InputLayout,
     /// Recorded ops whose *outputs* feed this op (through any amount of
@@ -121,16 +178,40 @@ pub struct PlanOp {
     /// activation saved by an earlier pass), so its staging may be
     /// prefetched under an earlier invocation's kernel.
     pub prefetch_b: bool,
+    /// The activation input already lives in a device BO (the previous
+    /// chained op left it resident), so the modeled schedule charges no
+    /// host staging, no input sync, and no per-op dispatch doorbell.
+    pub resident_a: bool,
+    /// The output stays resident in a device BO for the next chained op
+    /// instead of merging back into host memory: no output sync, no host
+    /// merge copy.
+    pub resident_c: bool,
 }
 
 impl PlanOp {
     pub fn new(size: ProblemSize) -> PlanOp {
         PlanOp {
             size,
+            kind: PlanOpKind::Gemm,
+            fused: FusedEpilogue::None,
             a_layout: InputLayout::RowMajor,
             b_layout: InputLayout::RowMajor,
             deps: Vec::new(),
             prefetch_b: false,
+            resident_a: false,
+            resident_c: false,
+        }
+    }
+
+    /// An elementwise/vector op over `size.m * size.k * size.n` f32
+    /// elements (layernorm rows x channels, a flat gelu span, softmax
+    /// rows x vocab). `kind` must not be [`PlanOpKind::Gemm`] — use
+    /// [`PlanOp::new`] for matmuls.
+    pub fn elementwise(kind: PlanOpKind, size: ProblemSize) -> PlanOp {
+        debug_assert!(kind.is_elementwise(), "use PlanOp::new for GEMM ops");
+        PlanOp {
+            kind,
+            ..PlanOp::new(size)
         }
     }
 
@@ -141,6 +222,12 @@ impl PlanOp {
 
     pub fn with_b_layout(mut self, layout: InputLayout) -> PlanOp {
         self.b_layout = layout;
+        self
+    }
+
+    /// Fuse an epilogue into this GEMM's output drain.
+    pub fn with_fused(mut self, epilogue: FusedEpilogue) -> PlanOp {
+        self.fused = epilogue;
         self
     }
 
@@ -155,6 +242,18 @@ impl PlanOp {
         self.prefetch_b = yes;
         self
     }
+
+    /// Mark the activation input as already device-resident.
+    pub fn resident_input(mut self, yes: bool) -> PlanOp {
+        self.resident_a = yes;
+        self
+    }
+
+    /// Keep the output device-resident for the next chained op.
+    pub fn resident_output(mut self, yes: bool) -> PlanOp {
+        self.resident_c = yes;
+        self
+    }
 }
 
 /// One recorded invocation: the op description plus every modeled stage
@@ -164,7 +263,17 @@ impl PlanOp {
 #[derive(Debug, Clone)]
 pub(crate) struct PlannedOp {
     pub(crate) size: ProblemSize,
+    /// Which device invocation was recorded (GEMM vs elementwise).
+    pub(crate) kind: PlanOpKind,
+    /// Epilogue fused into the invocation's output drain.
+    pub(crate) fused: FusedEpilogue,
+    /// Device-residency hints as recorded (part of the signature — they
+    /// change the modeled schedule).
+    pub(crate) resident_a: bool,
+    pub(crate) resident_c: bool,
     /// Padded strip-variant size — the granularity reconfiguration tracks.
+    /// Elementwise ops keep their logical size here but never program the
+    /// array, so the replay ignores it for barrier placement.
     pub(crate) strip_size: ProblemSize,
     /// Input layouts as recorded (part of the step's shape signature, and
     /// what a cached replay restages with).
@@ -285,6 +394,10 @@ pub(crate) fn signature_of(ops: &[PlannedOp]) -> StepSignature {
             .iter()
             .map(|op| OpSignature {
                 size: op.size,
+                kind: op.kind,
+                fused: op.fused,
+                resident_a: op.resident_a,
+                resident_c: op.resident_c,
                 a_layout: op.a_layout,
                 b_layout: op.b_layout,
                 prefetch_b: op.prefetch_b,
@@ -336,6 +449,10 @@ impl std::fmt::Display for PlanCacheMode {
 #[derive(Debug, Clone, PartialEq, Eq)]
 struct OpSignature {
     size: ProblemSize,
+    kind: PlanOpKind,
+    fused: FusedEpilogue,
+    resident_a: bool,
+    resident_c: bool,
     a_layout: InputLayout,
     b_layout: InputLayout,
     prefetch_b: bool,
@@ -397,23 +514,28 @@ impl CachedStep {
     pub(crate) fn check_op(&self, cursor: usize, op: &PlanOp) -> Result<()> {
         let Some(cached) = self.ops.get(cursor) else {
             return Err(Error::plan_divergence(format!(
-                "step issued more GEMMs than the cached plan's {} (op #{cursor} is {}); \
+                "step issued more ops than the cached plan's {} (op #{cursor} is a {} {}); \
                  re-record the step",
                 self.ops.len(),
+                op.kind,
                 op.size
             )));
         };
         let deps: Vec<usize> = op.deps.iter().map(|d| d.index()).collect();
         if cached.size != op.size
+            || cached.kind != op.kind
+            || cached.fused != op.fused
+            || cached.resident_a != op.resident_a
+            || cached.resident_c != op.resident_c
             || cached.a_layout != op.a_layout
             || cached.b_layout != op.b_layout
             || cached.prefetch_b != op.prefetch_b
             || cached.deps != deps
         {
             return Err(Error::plan_divergence(format!(
-                "op #{cursor} no longer matches the cached plan (cached {}, step wants \
-                 {}); re-record the step",
-                cached.size, op.size
+                "op #{cursor} no longer matches the cached plan (cached {} {}, step wants \
+                 {} {}); re-record the step",
+                cached.kind, cached.size, op.kind, op.size
             )));
         }
         Ok(())
@@ -696,7 +818,9 @@ impl PlanCache {
 /// Version stamp of the on-disk plan-cache format
 /// ([`PlanCache::save_to`]). Bump on any change to the serialized shape;
 /// a mismatched version is a recoverable miss at load, never an error.
-pub const PLAN_CACHE_FORMAT_VERSION: u64 = 1;
+/// v2 added the block-offload op fields (`kind`, `fused`, `resident_a`,
+/// `resident_c`); pre-block-offload v1 files load as a clean miss.
+pub const PLAN_CACHE_FORMAT_VERSION: u64 = 2;
 
 fn layout_str(l: InputLayout) -> &'static str {
     match l {
@@ -709,6 +833,42 @@ fn layout_from_str(s: &str) -> Option<InputLayout> {
     match s {
         "row-major" => Some(InputLayout::RowMajor),
         "transposed" => Some(InputLayout::Transposed),
+        _ => None,
+    }
+}
+
+fn kind_str(k: PlanOpKind) -> &'static str {
+    match k {
+        PlanOpKind::Gemm => "gemm",
+        PlanOpKind::LayerNorm => "layernorm",
+        PlanOpKind::Gelu => "gelu",
+        PlanOpKind::Softmax => "softmax",
+    }
+}
+
+fn kind_from_str(s: &str) -> Option<PlanOpKind> {
+    match s {
+        "gemm" => Some(PlanOpKind::Gemm),
+        "layernorm" => Some(PlanOpKind::LayerNorm),
+        "gelu" => Some(PlanOpKind::Gelu),
+        "softmax" => Some(PlanOpKind::Softmax),
+        _ => None,
+    }
+}
+
+fn fused_str(f: FusedEpilogue) -> &'static str {
+    match f {
+        FusedEpilogue::None => "none",
+        FusedEpilogue::Bias => "bias",
+        FusedEpilogue::Gelu => "gelu",
+    }
+}
+
+fn fused_from_str(s: &str) -> Option<FusedEpilogue> {
+    match s {
+        "none" => Some(FusedEpilogue::None),
+        "bias" => Some(FusedEpilogue::Bias),
+        "gelu" => Some(FusedEpilogue::Gelu),
         _ => None,
     }
 }
@@ -763,6 +923,10 @@ fn finite(v: f64) -> Option<f64> {
 fn op_to_json(op: &PlannedOp) -> Json {
     Json::obj(vec![
         ("size", size_to_json(op.size)),
+        ("kind", Json::str(kind_str(op.kind))),
+        ("fused", Json::str(fused_str(op.fused))),
+        ("resident_a", Json::Bool(op.resident_a)),
+        ("resident_c", Json::Bool(op.resident_c)),
         ("strip_size", size_to_json(op.strip_size)),
         ("a_layout", Json::str(layout_str(op.a_layout))),
         ("b_layout", Json::str(layout_str(op.b_layout))),
@@ -818,6 +982,10 @@ fn op_from_json(j: &Json, index: usize) -> Option<PlannedOp> {
     }
     Some(PlannedOp {
         size: size_from_json(j.get_opt("size")?)?,
+        kind: kind_from_str(j.get_opt("kind")?.as_str().ok()?)?,
+        fused: fused_from_str(j.get_opt("fused")?.as_str().ok()?)?,
+        resident_a: j.get_opt("resident_a")?.as_bool().ok()?,
+        resident_c: j.get_opt("resident_c")?.as_bool().ok()?,
         strip_size: size_from_json(j.get_opt("strip_size")?)?,
         a_layout: layout_from_str(j.get_opt("a_layout")?.as_str().ok()?)?,
         b_layout: layout_from_str(j.get_opt("b_layout")?.as_str().ok()?)?,
@@ -894,6 +1062,12 @@ pub struct StepReport {
     pub reconfigs: usize,
     /// Ops whose B staging was prefetched under an earlier kernel.
     pub prefetched: usize,
+    /// Device-resident activation edges the step kept on-device (each op
+    /// input or output that skipped a host round-trip).
+    pub resident_edges: usize,
+    /// Non-GEMM (elementwise/vector) invocations in the step, including
+    /// fused epilogues.
+    pub elementwise_ops: usize,
     pub energy_j: f64,
     /// *Measured* wallclock of the step's GEMM invocations (staging +
     /// device + merge), summed — the serialized cost, next to the modeled

@@ -37,7 +37,7 @@
 //! let window: Vec<WindowOp> = [small, large, small, large]
 //!     .iter()
 //!     .enumerate()
-//!     .map(|(seq, &size)| WindowOp { seq: seq as u64, size, deps: Vec::new() })
+//!     .map(|(seq, &size)| WindowOp { seq: seq as u64, size, deps: Vec::new(), elementwise: false })
 //!     .collect();
 //!
 //! let order = Scheduler::new(SchedulePolicy::BatchBySize).order(&window, None);
@@ -82,6 +82,11 @@ pub struct WindowOp {
     pub size: ProblemSize,
     /// Sequence numbers that must execute before this op.
     pub deps: Vec<u64>,
+    /// Elementwise (layernorm/gelu/softmax) ops run on the vector units of
+    /// whatever GEMM configuration is loaded: they never force a
+    /// reconfiguration, so the scheduler treats them as size-transparent —
+    /// they neither count as a switch nor re-anchor the current batch size.
+    pub elementwise: bool,
 }
 
 /// The reorder engine. Stateless between calls; the caller passes the
@@ -109,10 +114,14 @@ impl Scheduler {
 
     /// Count the reconfigurations an execution order implies (a size
     /// switch relative to the previously executed op / `current`).
+    /// Elementwise ops are size-transparent: no switch, no re-anchor.
     pub fn reconfigs(window: &[WindowOp], order: &[usize], current: Option<ProblemSize>) -> usize {
         let mut cur = current;
         let mut switches = 0;
         for &i in order {
+            if window[i].elementwise {
+                continue;
+            }
             if cur != Some(window[i].size) {
                 switches += 1;
                 cur = Some(window[i].size);
@@ -142,20 +151,23 @@ impl Scheduler {
                         .iter()
                         .all(|d| done.contains(d) || !in_window.contains(d))
             };
-            // Oldest ready op of the currently configured size; else the
-            // oldest ready *chain* op (advancing the chain frees more ops
-            // while dependency-free leaves keep, so deferred leaves
-            // accumulate into same-size batches); else the oldest ready
-            // leaf, which starts the next batch.
+            // Oldest ready op that costs no switch — an op of the
+            // currently configured size or a size-transparent elementwise
+            // op; else the oldest ready *chain* op (advancing the chain
+            // frees more ops while dependency-free leaves keep, so
+            // deferred leaves accumulate into same-size batches); else the
+            // oldest ready leaf, which starts the next batch.
             let next = (0..window.len())
-                .find(|&i| ready(i) && cur == Some(window[i].size))
+                .find(|&i| ready(i) && (window[i].elementwise || cur == Some(window[i].size)))
                 .or_else(|| (0..window.len()).find(|&i| ready(i) && has_dependent[i]))
                 .or_else(|| (0..window.len()).find(|&i| ready(i)));
             match next {
                 Some(i) => {
                     picked[i] = true;
                     done.push(window[i].seq);
-                    cur = Some(window[i].size);
+                    if !window[i].elementwise {
+                        cur = Some(window[i].size);
+                    }
                     order.push(i);
                 }
                 // A dependency cycle cannot be built through the session
@@ -180,7 +192,7 @@ mod tests {
     use super::*;
 
     fn op(seq: u64, size: ProblemSize) -> WindowOp {
-        WindowOp { seq, size, deps: Vec::new() }
+        WindowOp { seq, size, deps: Vec::new(), elementwise: false }
     }
 
     #[test]
@@ -228,7 +240,7 @@ mod tests {
         let window = vec![
             op(0, a),
             op(1, b),
-            WindowOp { seq: 2, size: a, deps: vec![1] },
+            WindowOp { seq: 2, size: a, deps: vec![1], elementwise: false },
         ];
         let order = Scheduler::new(SchedulePolicy::BatchBySize).order(&window, None);
         let pos = |seq: u64| order.iter().position(|&i| window[i].seq == seq).unwrap();
@@ -247,11 +259,11 @@ mod tests {
         let dw = ProblemSize::new(128, 64, 64);
         let window = vec![
             op(0, dinp_a),
-            WindowOp { seq: 1, size: dw, deps: vec![0] },
-            WindowOp { seq: 2, size: dinp_b, deps: vec![0] },
-            WindowOp { seq: 3, size: dw, deps: vec![2] },
-            WindowOp { seq: 4, size: dinp_a, deps: vec![2] },
-            WindowOp { seq: 5, size: dw, deps: vec![4] },
+            WindowOp { seq: 1, size: dw, deps: vec![0], elementwise: false },
+            WindowOp { seq: 2, size: dinp_b, deps: vec![0], elementwise: false },
+            WindowOp { seq: 3, size: dw, deps: vec![2], elementwise: false },
+            WindowOp { seq: 4, size: dinp_a, deps: vec![2], elementwise: false },
+            WindowOp { seq: 5, size: dw, deps: vec![4], elementwise: false },
         ];
         let order = Scheduler::new(SchedulePolicy::BatchBySize).order(&window, None);
         let pos = |seq: u64| order.iter().position(|&i| window[i].seq == seq).unwrap();
@@ -274,8 +286,34 @@ mod tests {
     #[test]
     fn deps_outside_the_window_count_as_satisfied() {
         let a = ProblemSize::new(64, 64, 128);
-        let window = vec![WindowOp { seq: 7, size: a, deps: vec![3] }];
+        let window =
+            vec![WindowOp { seq: 7, size: a, deps: vec![3], elementwise: false }];
         let order = Scheduler::new(SchedulePolicy::BatchBySize).order(&window, None);
         assert_eq!(order, vec![0]);
+    }
+
+    #[test]
+    fn elementwise_ops_are_size_transparent() {
+        let a = ProblemSize::new(64, 64, 128);
+        let b = ProblemSize::new(128, 64, 128);
+        let ln = ProblemSize::new(64, 1, 128);
+        // A layernorm chained between two same-size GEMMs: its (different)
+        // logical size must not count as a switch or break the batch.
+        let window = vec![
+            op(0, a),
+            WindowOp { seq: 1, size: ln, deps: vec![0], elementwise: true },
+            WindowOp { seq: 2, size: a, deps: vec![1], elementwise: false },
+            op(3, b),
+        ];
+        let order = Scheduler::new(SchedulePolicy::BatchBySize).order(&window, None);
+        assert_eq!(order, vec![0, 1, 2, 3], "chain stays in order, b last");
+        assert_eq!(
+            Scheduler::reconfigs(&window, &order, None),
+            2,
+            "a-batch and b-batch only; the layernorm is free"
+        );
+        // Under FIFO the elementwise op still never counts as a switch.
+        let fifo: Vec<usize> = (0..window.len()).collect();
+        assert_eq!(Scheduler::reconfigs(&window, &fifo, None), 2);
     }
 }

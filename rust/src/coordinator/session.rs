@@ -44,7 +44,8 @@ use crate::xrt::{BufferObject, SyncDirection, XrtDevice};
 use super::arbiter::{ArbiterHandle, ColumnQuota, DeviceArbiter, WindowCharge};
 use super::device::{ComputeDevice, DeviceRun, SimulatorDevice};
 use super::plan::{
-    CachedStep, PlanCache, PlanNode, PlanOp, PlanReplay, PlannedOp, StepPlan, StepReport,
+    CachedStep, FusedEpilogue, PlanCache, PlanNode, PlanOp, PlanReplay, PlannedOp, StepPlan,
+    StepReport,
 };
 use super::reconfig::{self, ReconfigPolicy};
 use super::scheduler::{SchedulePolicy, Scheduler, WindowOp};
@@ -371,6 +372,10 @@ struct InvocationCapture {
     host_a_s: f64,
     host_b_s: f64,
     sync_in_s: f64,
+    /// The A-buffer share of `sync_in_s` — what a resident-input op
+    /// skips (its A already sits in the producer's output BO on device;
+    /// the B strips still sync).
+    sync_in_a_s: f64,
     /// Reconfiguration actually applied while programming the array (0
     /// when it was already configured — e.g. every step after the first
     /// of a cached run).
@@ -503,6 +508,14 @@ pub struct OffloadSession {
     /// device-stage work runs while the trainer computes — the difference
     /// is wallclock genuinely hidden, not just modeled hidden.
     pub wall_blocked_s: f64,
+    /// Device-resident activation edges kept on-device across all
+    /// executed/replayed steps — each is one host round-trip the block
+    /// offload skipped. Feeds the run report's "resident activations"
+    /// line.
+    pub resident_edges: u64,
+    /// Non-GEMM (elementwise/vector) invocations across all steps,
+    /// including GEMMs with a fused epilogue.
+    pub elementwise_ops: u64,
     /// Modeled host/device schedule of every invocation so far. With a
     /// depth-1 FIFO unsharded session its makespan equals its serial sum;
     /// otherwise the difference is staging hidden under device work (and,
@@ -860,8 +873,25 @@ fn plan_window(ops: &[PlannedOp]) -> Vec<WindowOp> {
             seq: i as u64,
             size: op.size,
             deps: op.deps.iter().map(|&d| d as u64).collect(),
+            elementwise: op.kind.is_elementwise(),
         })
         .collect()
+}
+
+/// The residency/elementwise counters a [`StepReport`] carries:
+/// device-resident activation edges (each `resident_a`/`resident_c` flag
+/// is one host round-trip eliminated) and non-GEMM invocations (including
+/// GEMMs with a fused epilogue — the vector units did elementwise work).
+fn step_counters(ops: &[PlannedOp]) -> (usize, usize) {
+    let resident = ops
+        .iter()
+        .map(|o| o.resident_a as usize + o.resident_c as usize)
+        .sum();
+    let elementwise = ops
+        .iter()
+        .filter(|o| o.kind.is_elementwise() || o.fused != FusedEpilogue::None)
+        .count();
+    (resident, elementwise)
 }
 
 /// Outcome of one modeled step walk: what [`walk_step`] charged, per op
@@ -945,7 +975,10 @@ fn walk_step(
             op.host_a_s + op.host_b_s + op.sync_in_s
         };
         let ready = tl.stage(pre);
-        if strip != Some(op.strip_size) {
+        // Elementwise ops run on the vector units of whatever GEMM
+        // configuration is loaded: no barrier, and the array keeps its
+        // programming for the next GEMM.
+        if !op.kind.is_elementwise() && strip != Some(op.strip_size) {
             let rc = op.reconfig_switch_s + once;
             once = 0.0;
             strip = Some(op.strip_size);
@@ -1036,6 +1069,8 @@ impl OffloadSession {
             modeled_energy_j: 0.0,
             wall_gemm_s: 0.0,
             wall_blocked_s: 0.0,
+            resident_edges: 0,
+            elementwise_ops: 0,
             pipeline: PipelineTimeline::with_columns(shards),
             host_model: cfg.profile.staging.clone(),
             profile: cfg.profile,
@@ -1457,6 +1492,7 @@ impl OffloadSession {
                 seq: p.seq,
                 size: p.size,
                 deps: p.deps.clone(),
+                elementwise: false,
             })
             .collect();
         if window.is_empty() {
@@ -1674,6 +1710,12 @@ impl OffloadSession {
         c: &mut [f32],
     ) -> Result<PlanNode> {
         let size = op.size;
+        if op.kind.is_elementwise() {
+            return Err(Error::config(format!(
+                "record_gemm takes GEMM ops; record the {} {} via record_elementwise",
+                op.kind, size
+            )));
+        }
         let (m, k, n) = (size.m, size.k, size.n);
         if a.len() != m * k || b.len() != k * n || c.len() != m * n {
             return Err(Error::shape(format!(
@@ -1683,12 +1725,84 @@ impl OffloadSession {
                 c.len()
             )));
         }
+        self.begin_record(plan, &op.deps)?;
+        let cap = self.run_invocation(size, op.a_layout, op.b_layout, a, b, c)?;
+
+        // Steady-state cost of switching the array to this op's variant —
+        // what the replay charges at every size change it schedules. The
+        // one-time remainder (the first-ever xclbin load under the minimal
+        // policy) rides on whichever op heads the replay's first switch.
+        let timing = &self.dev.npu.timing;
+        let reconfig_switch_s = match self.policy {
+            ReconfigPolicy::Minimal => timing.minimal_reconfig_s,
+            ReconfigPolicy::FullArray => timing.full_reconfig_s + timing.minimal_reconfig_s,
+        };
+        let reconfig_once_s = (cap.rec_applied_s - reconfig_switch_s).max(0.0);
+        // Residency pricing. A resident *input* lives in the producer's
+        // output BO already: no host A copy, no A-buffer sync, and the op
+        // chains on the device command stream — no per-op dispatch
+        // doorbell on its strips (the physical staging above still ran,
+        // for numerics; only the modeled schedule skips it). A resident
+        // *output* stays on device for its consumer: no output sync, no
+        // host merge.
+        let dispatch_s = self.dev.npu.timing.dispatch_s;
+        let strips: Vec<(f64, f64)> = cap
+            .strips
+            .iter()
+            .map(|&(kernel_s, sync_out_s)| {
+                (
+                    if op.resident_a { (kernel_s - dispatch_s).max(0.0) } else { kernel_s },
+                    if op.resident_c { 0.0 } else { sync_out_s },
+                )
+            })
+            .collect();
+        plan.ops.push(PlannedOp {
+            size,
+            kind: op.kind,
+            fused: op.fused,
+            resident_a: op.resident_a,
+            resident_c: op.resident_c,
+            strip_size: cap.strip_size,
+            a_layout: op.a_layout,
+            b_layout: op.b_layout,
+            deps: op.deps.iter().map(|d| d.index()).collect(),
+            prefetch_b: op.prefetch_b,
+            host_a_s: if op.resident_a { 0.0 } else { cap.host_a_s },
+            host_b_s: cap.host_b_s,
+            sync_in_s: if op.resident_a {
+                (cap.sync_in_s - cap.sync_in_a_s).max(0.0)
+            } else {
+                cap.sync_in_s
+            },
+            reconfig_switch_s,
+            reconfig_once_s,
+            strips,
+            host_post_s: if op.resident_c {
+                0.0
+            } else {
+                self.host_model.copy_s(m * n * 4)
+            },
+            // Invocation-only energy: strip the reconfiguration premium the
+            // device folded into its reports (the *replay* prices reconfig
+            // energy wherever its own schedule actually places the
+            // switches — see `charge_step`).
+            energy_j: cap.energy_j - self.dev.npu.power.energy_j(0.0, 0.0, cap.rec_consumed_s),
+            wall_s: cap.wall_s,
+        });
+        Ok(PlanNode(plan.ops.len() - 1))
+    }
+
+    /// The shared record-path preamble: the plan must be unexecuted,
+    /// every dependency already recorded, no eager work in flight, and
+    /// the plan owned by this session; the first recorded op snapshots
+    /// the array state the replay starts from.
+    fn begin_record(&mut self, plan: &mut StepPlan, deps: &[PlanNode]) -> Result<()> {
         if plan.executed {
             return Err(Error::config(
                 "plan was already executed; record into a fresh StepPlan",
             ));
         }
-        for d in &op.deps {
+        for d in deps {
             if d.index() >= plan.ops.len() {
                 return Err(Error::config(format!(
                     "dependency plan node #{} was never recorded into this plan",
@@ -1719,40 +1833,88 @@ impl OffloadSession {
             plan.initial_strip = self.current_strip;
             plan.initial_logical = self.current_logical;
         }
-        let cap = self.run_invocation(size, op.a_layout, op.b_layout, a, b, c)?;
+        Ok(())
+    }
 
-        // Steady-state cost of switching the array to this op's variant —
-        // what the replay charges at every size change it schedules. The
-        // one-time remainder (the first-ever xclbin load under the minimal
-        // policy) rides on whichever op heads the replay's first switch.
-        let timing = &self.dev.npu.timing;
-        let reconfig_switch_s = match self.policy {
-            ReconfigPolicy::Minimal => timing.minimal_reconfig_s,
-            ReconfigPolicy::FullArray => timing.full_reconfig_s + timing.minimal_reconfig_s,
+    /// Record one elementwise op (layernorm / gelu / softmax) into `plan`.
+    ///
+    /// Elementwise numerics always run through the host reference ops
+    /// (`model/ops/`) — bit-identity with the baseline is structural, not
+    /// asserted per run — so unlike [`Self::record_gemm`] nothing is
+    /// staged or executed here: the op contributes only its *modeled*
+    /// device invocation, priced by [`Self::priced_elementwise`] from the
+    /// same calibrated models the GEMM path charges. Residency flags
+    /// decide which host round-trips the modeled schedule skips: a
+    /// resident input was left on device by the producer, a resident
+    /// output stays there for the consumer.
+    pub fn record_elementwise(&mut self, plan: &mut StepPlan, op: &PlanOp) -> Result<PlanNode> {
+        if !op.kind.is_elementwise() {
+            return Err(Error::config(format!(
+                "record_elementwise takes layernorm/gelu/softmax ops; record the gemm {} \
+                 via record_gemm",
+                op.size
+            )));
+        }
+        self.begin_record(plan, &op.deps)?;
+        plan.ops.push(self.priced_elementwise(op));
+        Ok(PlanNode(plan.ops.len() - 1))
+    }
+
+    /// Price one elementwise op from the calibrated models. The kernel
+    /// streams the tensor once in and once out through the vector units
+    /// at shim bandwidth ([`crate::npu::timing::TimingModel::elementwise`])
+    /// on a single column; staging, syncs and the output merge are
+    /// charged only for the non-resident sides. The op's logical element
+    /// count is `m * k * n` (callers encode tensor shapes with `k = 1`).
+    fn priced_elementwise(&self, op: &PlanOp) -> PlannedOp {
+        let size = op.size;
+        let bytes = size.m * size.k * size.n * 4;
+        let kernel_s = self.dev.npu.timing.elementwise(2 * bytes);
+        let host_a_s = if op.resident_a {
+            0.0
+        } else {
+            match op.a_layout {
+                InputLayout::RowMajor => self.host_model.copy_s(bytes),
+                InputLayout::Transposed => self.host_model.transpose_s(bytes),
+            }
         };
-        let reconfig_once_s = (cap.rec_applied_s - reconfig_switch_s).max(0.0);
-        plan.ops.push(PlannedOp {
+        let sync_in_s = if op.resident_a {
+            0.0
+        } else {
+            self.dev.sync_cost.cost_s(bytes, SyncDirection::ToDevice)
+        };
+        let sync_out_s = if op.resident_c {
+            0.0
+        } else {
+            self.dev.sync_cost.cost_s(bytes, SyncDirection::FromDevice)
+        };
+        PlannedOp {
             size,
-            strip_size: cap.strip_size,
+            kind: op.kind,
+            fused: op.fused,
+            resident_a: op.resident_a,
+            resident_c: op.resident_c,
+            // The logical size doubles as the strip size; the replay never
+            // consults it on elementwise ops (no reconfiguration barrier).
+            strip_size: size,
             a_layout: op.a_layout,
             b_layout: op.b_layout,
             deps: op.deps.iter().map(|d| d.index()).collect(),
-            prefetch_b: op.prefetch_b,
-            host_a_s: cap.host_a_s,
-            host_b_s: cap.host_b_s,
-            sync_in_s: cap.sync_in_s,
-            reconfig_switch_s,
-            reconfig_once_s,
-            strips: cap.strips,
-            host_post_s: self.host_model.copy_s(m * n * 4),
-            // Invocation-only energy: strip the reconfiguration premium the
-            // device folded into its reports (the *replay* prices reconfig
-            // energy wherever its own schedule actually places the
-            // switches — see `charge_step`).
-            energy_j: cap.energy_j - self.dev.npu.power.energy_j(0.0, 0.0, cap.rec_consumed_s),
-            wall_s: cap.wall_s,
-        });
-        Ok(PlanNode(plan.ops.len() - 1))
+            prefetch_b: false,
+            host_a_s,
+            host_b_s: 0.0,
+            sync_in_s,
+            reconfig_switch_s: 0.0,
+            reconfig_once_s: 0.0,
+            strips: vec![(kernel_s, sync_out_s)],
+            host_post_s: if op.resident_c {
+                0.0
+            } else {
+                self.host_model.copy_s(bytes)
+            },
+            energy_j: self.dev.npu.power.energy_j(kernel_s, 0.0, 0.0),
+            wall_s: 0.0,
+        }
     }
 
     /// Run one complete physical invocation — stage, sync, the shared
@@ -1822,13 +1984,14 @@ impl OffloadSession {
         };
 
         let t_sync = Instant::now();
-        let sync_in_s = {
+        let (sync_in_s, sync_in_a_s) = {
             let slot_bos = &mut prep.slots[slot];
-            let mut total = self.dev.sync_bo(&mut slot_bos.a_bo, SyncDirection::ToDevice);
+            let a_sync = self.dev.sync_bo(&mut slot_bos.a_bo, SyncDirection::ToDevice);
+            let mut total = a_sync;
             for ss in slot_bos.strips.iter_mut() {
                 total += self.dev.sync_bo(&mut ss.b_bo, SyncDirection::ToDevice);
             }
-            total
+            (total, a_sync)
         };
         self.stages.add(STAGE_INPUT_SYNC, t_sync.elapsed());
 
@@ -1876,6 +2039,7 @@ impl OffloadSession {
             host_a_s,
             host_b_s,
             sync_in_s,
+            sync_in_a_s,
             rec_applied_s,
             strip_size,
             strips: run.events.iter().map(|e| (e.kernel_s, e.sync_out_s)).collect(),
@@ -2000,6 +2164,8 @@ impl OffloadSession {
                 energy_j: 0.0,
                 wall_gemm_s: 0.0,
                 wall_blocked_s: 0.0,
+                resident_edges: 0,
+                elementwise_ops: 0,
             });
         }
         let window = plan_window(&plan.ops);
@@ -2029,6 +2195,9 @@ impl OffloadSession {
         self.wall_gemm_s += wall_gemm_s;
         self.wall_blocked_s += wall_gemm_s;
         self.arbiter_charge();
+        let (resident_edges, elementwise_ops) = step_counters(&plan.ops);
+        self.resident_edges += resident_edges as u64;
+        self.elementwise_ops += elementwise_ops as u64;
         Ok(StepReport {
             stats,
             order,
@@ -2039,6 +2208,8 @@ impl OffloadSession {
             energy_j: energy,
             wall_gemm_s,
             wall_blocked_s: wall_gemm_s,
+            resident_edges,
+            elementwise_ops,
         })
     }
 
@@ -2073,8 +2244,23 @@ impl OffloadSession {
             // Nothing to hoist: every candidate is the same schedule.
             return HorizonChoice::Next;
         }
+        // Cap the simulated sweep: each candidate walks the whole step on
+        // a timeline clone, so an uncapped `depth - 1` sweep scales the
+        // per-step planning cost quadratically on deep rings and large
+        // (block-level) plans. `Next` plus up to three deep caps — evenly
+        // spaced, always including the deepest — keeps the sweep O(1) in
+        // depth; the pick still can never be modeled worse than `Next`,
+        // because `Next` stays in the candidate set.
+        const PREFETCH_SWEEP_CANDIDATES: usize = 4;
         let mut candidates = vec![HorizonChoice::Next];
-        candidates.extend((1..self.depth).map(HorizonChoice::Deep));
+        let deepest = self.depth - 1;
+        let max_deep = PREFETCH_SWEEP_CANDIDATES - 1;
+        if deepest <= max_deep {
+            candidates.extend((1..=deepest).map(HorizonChoice::Deep));
+        } else {
+            candidates
+                .extend((1..=max_deep).map(|i| HorizonChoice::Deep(i * deepest / max_deep)));
+        }
         // Score every candidate on both axes — (makespan, window energy) —
         // then pick by the session's objective. Scoring both is what lets
         // the EnergyEff guarantee below be structural rather than hoped-for.
@@ -2211,41 +2397,12 @@ impl OffloadSession {
     /// xclbin-load accounting (the array is never programmed) are zero;
     /// `c` outputs are *not* produced.
     pub fn record_modeled(&mut self, plan: &mut StepPlan, op: &PlanOp) -> Result<PlanNode> {
-        if plan.executed {
-            return Err(Error::config(
-                "plan was already executed; record into a fresh StepPlan",
-            ));
-        }
-        for d in &op.deps {
-            if d.index() >= plan.ops.len() {
-                return Err(Error::config(format!(
-                    "dependency plan node #{} was never recorded into this plan",
-                    d.index()
-                )));
-            }
-        }
-        if !self.pending.is_empty() {
-            return Err(Error::config(format!(
-                "cannot record a plan op with {} eager submission(s) in flight: \
-                 wait() them first",
-                self.pending.len()
-            )));
-        }
-        match plan.session {
-            None => plan.session = Some(self.id),
-            Some(sid) if sid != self.id => {
-                return Err(Error::config(format!(
-                    "plan was recorded on offload session #{sid}, not session #{}; \
-                     plans are session-scoped",
-                    self.id
-                )))
-            }
-            Some(_) => {}
-        }
-        if !plan.started {
-            plan.started = true;
-            plan.initial_strip = self.current_strip;
-            plan.initial_logical = self.current_logical;
+        self.begin_record(plan, &op.deps)?;
+        if op.kind.is_elementwise() {
+            // Elementwise ops are priced, never staged — the dry run and
+            // the physical record share one pricing path.
+            plan.ops.push(self.priced_elementwise(op));
+            return Ok(PlanNode(plan.ops.len() - 1));
         }
 
         let size = op.size;
@@ -2265,25 +2422,42 @@ impl OffloadSession {
         // Per strip: the kernel scaled by its 1/s partition share plus
         // the fixed issue/dispatch overheads, and its own output sync —
         // exactly what the simulator device reports per staged strip.
-        let strip_kernel_s = g.kernel_s * s_eff as f64 + g.issue_s + g.dispatch_s;
-        let sync_out_s = self.dev.sync_cost.cost_s(m * strip_n_p * 4, SyncDirection::FromDevice);
+        // Residency mirrors the physical record's pricing: a resident
+        // input chains on the command stream (no dispatch doorbell, no
+        // host A copy, no A-buffer sync) and a resident output skips its
+        // sync-out and host merge.
+        let strip_kernel_s = g.kernel_s * s_eff as f64
+            + g.issue_s
+            + if op.resident_a { 0.0 } else { g.dispatch_s };
+        let sync_out_s = if op.resident_c {
+            0.0
+        } else {
+            self.dev.sync_cost.cost_s(m * strip_n_p * 4, SyncDirection::FromDevice)
+        };
         let strips: Vec<(f64, f64)> = (0..s_eff).map(|_| (strip_kernel_s, sync_out_s)).collect();
         let mut energy_j = 0.0f64;
         for _ in 0..s_eff {
             energy_j += self.dev.npu.power.energy_j(g.kernel_s, g.total_s() - g.kernel_s, 0.0);
         }
-        let host_a_s = match op.a_layout {
-            InputLayout::RowMajor => self.host_model.copy_s(m * k * 4),
-            InputLayout::Transposed => self.host_model.transpose_s(m * k * 4),
+        let host_a_s = if op.resident_a {
+            0.0
+        } else {
+            match op.a_layout {
+                InputLayout::RowMajor => self.host_model.copy_s(m * k * 4),
+                InputLayout::Transposed => self.host_model.transpose_s(m * k * 4),
+            }
         };
         let host_b_s = match op.b_layout {
             InputLayout::RowMajor => self.host_model.copy_s(k * n * 4),
             InputLayout::Transposed => self.host_model.transpose_s(k * n * 4),
         };
-        let mut sync_in_s = self
-            .dev
-            .sync_cost
-            .cost_s(tiling.m_padded * k_p * 4, SyncDirection::ToDevice);
+        let mut sync_in_s = if op.resident_a {
+            0.0
+        } else {
+            self.dev
+                .sync_cost
+                .cost_s(tiling.m_padded * k_p * 4, SyncDirection::ToDevice)
+        };
         for _ in 0..s_eff {
             sync_in_s += self.dev.sync_cost.cost_s(k_p * strip_n_p * 4, SyncDirection::ToDevice);
         }
@@ -2294,6 +2468,10 @@ impl OffloadSession {
         };
         plan.ops.push(PlannedOp {
             size,
+            kind: op.kind,
+            fused: op.fused,
+            resident_a: op.resident_a,
+            resident_c: op.resident_c,
             strip_size: padded,
             a_layout: op.a_layout,
             b_layout: op.b_layout,
@@ -2305,7 +2483,11 @@ impl OffloadSession {
             reconfig_switch_s,
             reconfig_once_s: 0.0,
             strips,
-            host_post_s: self.host_model.copy_s(m * n * 4),
+            host_post_s: if op.resident_c {
+                0.0
+            } else {
+                self.host_model.copy_s(m * n * 4)
+            },
             energy_j,
             wall_s: 0.0,
         });
@@ -2422,6 +2604,12 @@ impl OffloadSession {
                 replay.entry.session, self.id
             )));
         }
+        if op.kind.is_elementwise() {
+            return Err(Error::config(format!(
+                "replay_gemm takes GEMM ops; replay the {} {} via replay_elementwise",
+                op.kind, op.size
+            )));
+        }
         let cursor = replay.cursor;
         // One shared divergence rule with the background executor's
         // submit path (CachedStep::check_op), so sync and background
@@ -2450,6 +2638,46 @@ impl OffloadSession {
         Ok(PlanNode(cursor))
     }
 
+    /// Replay one elementwise op of a cached step: check the call against
+    /// the cached op at the cursor (the same
+    /// [`CachedStep::check_op`] divergence rule as GEMMs — a kind,
+    /// residency, or shape change is a recoverable re-record), then
+    /// advance. As at record time the numerics run through the host ops,
+    /// so nothing is staged and the measured wallclock contribution is
+    /// zero; [`Self::finish_replay`] charges the cached modeled schedule.
+    pub fn replay_elementwise(
+        &mut self,
+        replay: &mut PlanReplay<'_>,
+        op: &PlanOp,
+    ) -> Result<PlanNode> {
+        if replay.entry.session != self.id {
+            return Err(Error::config(format!(
+                "cached plan was recorded on offload session #{}, not session #{}; \
+                 cached plans are session-scoped",
+                replay.entry.session, self.id
+            )));
+        }
+        if !op.kind.is_elementwise() {
+            return Err(Error::config(format!(
+                "replay_elementwise takes layernorm/gelu/softmax ops; replay the gemm {} \
+                 via replay_gemm",
+                op.size
+            )));
+        }
+        let cursor = replay.cursor;
+        replay.entry.check_op(cursor, op)?;
+        if !self.pending.is_empty() {
+            return Err(Error::config(format!(
+                "cannot replay a plan op with {} eager submission(s) in flight: \
+                 wait() them first",
+                self.pending.len()
+            )));
+        }
+        replay.walls.push(0.0);
+        replay.cursor += 1;
+        Ok(PlanNode(cursor))
+    }
+
     /// Complete a cached-step replay: verify the step matched the whole
     /// cached plan, then charge the frozen schedule — order, prefetch
     /// plan, reconfiguration placement — to the modeled timeline in one
@@ -2467,7 +2695,7 @@ impl OffloadSession {
         }
         if replay.cursor != entry.ops.len() {
             return Err(Error::plan_divergence(format!(
-                "step ended after {} of the cached plan's {} GEMMs; re-record the step",
+                "step ended after {} of the cached plan's {} ops; re-record the step",
                 replay.cursor,
                 entry.ops.len()
             )));
@@ -2496,6 +2724,9 @@ impl OffloadSession {
         self.wall_gemm_s += wall_gemm_s;
         self.wall_blocked_s += wall_blocked_s;
         self.arbiter_charge();
+        let (resident_edges, elementwise_ops) = step_counters(&entry.ops);
+        self.resident_edges += resident_edges as u64;
+        self.elementwise_ops += elementwise_ops as u64;
         Ok(StepReport {
             stats,
             order: entry.order.clone(),
@@ -2506,6 +2737,8 @@ impl OffloadSession {
             energy_j: energy,
             wall_gemm_s,
             wall_blocked_s,
+            resident_edges,
+            elementwise_ops,
         })
     }
 

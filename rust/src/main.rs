@@ -42,7 +42,7 @@ USAGE:
                       [--mode serial|pipelined] [--queue-depth K]
                       [--shards auto|N] [--schedule fifo|batch] [--plan]
                       [--plan-cache on|off] [--plan-cache-file PATH]
-                      [--executor sync|background]
+                      [--executor sync|background] [--block-offload on|off]
                       [--target xdna1|xdna2] [--objective makespan|energy]
                       [--save ckpt.bin] [--seed S]
   xdna-repro gemm     [--m M --k K --n N] [--backend cpu|npu]
@@ -80,6 +80,12 @@ USAGE:
   background device-stage thread so staging + kernels overlap the
   trainer's CPU work in *wallclock*, not just on the modeled timeline;
   --executor sync keeps every invocation on the caller's thread.
+  --block-offload on (with --plan) records the transformer block's
+  non-GEMM ops — layernorm, fused GELU epilogues, softmax — into the
+  step plan with device-resident activation edges, so the chained
+  layernorm -> QKV -> GELU -> projection block skips per-GEMM host
+  round-trips on the modeled schedule; numerics stay bit-identical to
+  the host-op baseline (default off: GEMM-only Figure-7 plans).
   `bench host-model --calibrate` measures real copy/transpose bandwidth
   on the twelve GPT-2 site shapes and suggests recalibrated
   HostStagingModel constants. `serve` decodes N concurrent generation
@@ -161,6 +167,17 @@ fn cmd_train(args: &Args) -> Result<()> {
     let plan = args.flag("plan");
     let plan_cache = args.get_parse("plan-cache", PlanCacheMode::On)?.enabled();
     let executor = args.get_parse("executor", ExecutorMode::Background)?;
+    // A valued option like --plan-cache, not a bare flag: "on" opts the
+    // recorded step plans into the block's non-GEMM ops + residency.
+    let block_offload = match args.get_or("block-offload", "off") {
+        "on" => true,
+        "off" => false,
+        v => {
+            return Err(Error::config(format!(
+                "unknown block-offload mode '{v}' (expected on|off)"
+            )))
+        }
+    };
     let profile = args.get_parse("target", DeviceProfile::xdna1())?;
     // The power source picks the objective unless one is given: battery
     // optimizes FLOPS/Ws, mains FLOPS/s. Resolved here, before the plan
@@ -177,6 +194,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         epochs,
         steps_per_epoch: steps,
         power,
+        block_offload,
         ..Default::default()
     };
     let corpus = synthetic_corpus(cfg.vocab_size, (batch * seq + 1) * steps.max(4) * 4, seed);
@@ -272,6 +290,13 @@ fn cmd_train(args: &Args) -> Result<()> {
                     sess.wall_gemm_s * 1e3,
                     sess.wall_blocked_s * 1e3,
                     (sess.wall_gemm_s - sess.wall_blocked_s).max(0.0) * 1e3
+                );
+                println!(
+                    "resident activations ({}): {} edge(s) kept device-resident, \
+                     {} non-GEMM op(s) in the plan",
+                    if block_offload { "block offload on" } else { "block offload off" },
+                    sess.resident_edges,
+                    sess.elementwise_ops
                 );
             }
             out

@@ -118,22 +118,35 @@ impl Activations {
 
 /// Gradient arenas for the subset of activations the backward pass needs
 /// scratch space for (llm.c reuses a mirror arena; we do the same).
+///
+/// The four `dout` scratches that feed a deferred backward weight
+/// gradient (`d_qkv`, `d_attproj`, `d_fch`, `d_fcproj`) are *parity
+/// pairs* indexed by `layer % 2`: the background executor borrows the
+/// buffer zero-copy for the deferred `dW` job, and rotating two stable
+/// buffers guarantees the borrow is retired (a later layer's in-call
+/// `dinp` wait drains everything submitted before it, FIFO) before the
+/// same physical buffer is rewritten two layers later. `d_logits` is
+/// written once per step, so it is step-stable without rotation.
 #[derive(Debug, Clone)]
 pub struct ActGrads {
     /// (B,T,C)
     pub d_encoded: Vec<f32>,
     /// scratch per layer (B,T,C)
     pub d_ln1: Vec<f32>,
-    pub d_qkv: Vec<f32>,
+    /// parity-rotated (2,B,T,3C)
+    pub d_qkv: [Vec<f32>; 2],
     pub d_atty: Vec<f32>,
     pub d_preatt: Vec<f32>,
     pub d_att: Vec<f32>,
-    pub d_attproj: Vec<f32>,
+    /// parity-rotated (2,B,T,C)
+    pub d_attproj: [Vec<f32>; 2],
     pub d_residual2: Vec<f32>,
     pub d_ln2: Vec<f32>,
-    pub d_fch: Vec<f32>,
+    /// parity-rotated (2,B,T,4C)
+    pub d_fch: [Vec<f32>; 2],
     pub d_fch_gelu: Vec<f32>,
-    pub d_fcproj: Vec<f32>,
+    /// parity-rotated (2,B,T,C)
+    pub d_fcproj: [Vec<f32>; 2],
     pub d_residual3: Vec<f32>,
     pub d_lnf: Vec<f32>,
     pub d_logits: Vec<f32>,
@@ -148,16 +161,16 @@ impl ActGrads {
         ActGrads {
             d_encoded: vec![0.0; bt * c],
             d_ln1: vec![0.0; bt * c],
-            d_qkv: vec![0.0; bt * 3 * c],
+            d_qkv: [vec![0.0; bt * 3 * c], vec![0.0; bt * 3 * c]],
             d_atty: vec![0.0; bt * c],
             d_preatt: vec![0.0; b * nh * t * t],
             d_att: vec![0.0; b * nh * t * t],
-            d_attproj: vec![0.0; bt * c],
+            d_attproj: [vec![0.0; bt * c], vec![0.0; bt * c]],
             d_residual2: vec![0.0; bt * c],
             d_ln2: vec![0.0; bt * c],
-            d_fch: vec![0.0; bt * 4 * c],
+            d_fch: [vec![0.0; bt * 4 * c], vec![0.0; bt * 4 * c]],
             d_fch_gelu: vec![0.0; bt * 4 * c],
-            d_fcproj: vec![0.0; bt * c],
+            d_fcproj: [vec![0.0; bt * c], vec![0.0; bt * c]],
             d_residual3: vec![0.0; bt * c],
             d_lnf: vec![0.0; bt * c],
             d_logits: vec![0.0; bt * vp],
@@ -168,21 +181,27 @@ impl ActGrads {
         for v in [
             &mut self.d_encoded,
             &mut self.d_ln1,
-            &mut self.d_qkv,
             &mut self.d_atty,
             &mut self.d_preatt,
             &mut self.d_att,
-            &mut self.d_attproj,
             &mut self.d_residual2,
             &mut self.d_ln2,
-            &mut self.d_fch,
             &mut self.d_fch_gelu,
-            &mut self.d_fcproj,
             &mut self.d_residual3,
             &mut self.d_lnf,
             &mut self.d_logits,
         ] {
             v.fill(0.0);
+        }
+        for pair in [
+            &mut self.d_qkv,
+            &mut self.d_attproj,
+            &mut self.d_fch,
+            &mut self.d_fcproj,
+        ] {
+            for v in pair.iter_mut() {
+                v.fill(0.0);
+            }
         }
     }
 }
@@ -204,8 +223,9 @@ mod tests {
     fn grads_zero() {
         let cfg = ModelConfig::d2();
         let mut g = ActGrads::new(&cfg, 1, 4);
-        g.d_qkv[0] = 5.0;
+        g.d_qkv[0][0] = 5.0;
+        g.d_qkv[1][0] = 5.0;
         g.zero();
-        assert!(g.d_qkv.iter().all(|&x| x == 0.0));
+        assert!(g.d_qkv.iter().all(|v| v.iter().all(|&x| x == 0.0)));
     }
 }

@@ -9,6 +9,7 @@
 //! `MatmulDispatch::Replay` — a cache-hit re-run of a frozen plan whose
 //! schedule `OffloadSession::finish_replay` charges in one pass.
 
+use crate::coordinator::plan::{FusedEpilogue, PlanOpKind};
 use crate::util::error::Result;
 use crate::util::rng::Rng;
 use crate::util::timer::StageTimer;
@@ -60,6 +61,14 @@ pub struct Gpt2Model {
     pub step: u32,
     /// Per-op wallclock (Figure 8).
     pub op_timers: OpTimers,
+    /// Block-level offload: record the transformer's non-GEMM sites
+    /// (layernorm, softmax) as elementwise plan ops and chain their
+    /// consumer GEMMs device-resident, with the fc matmul's gelu fused
+    /// as an epilogue. Off by default — the paper's GEMM-only plan; the
+    /// flag changes only the *modeled* schedule (plan signatures
+    /// diverge, so cached GEMM-only and block-offloaded steps coexist),
+    /// never the numerics, which stay the host-op baseline bit-for-bit.
+    pub block_offload: bool,
 }
 
 impl Gpt2Model {
@@ -78,6 +87,7 @@ impl Gpt2Model {
             targets: Vec::new(),
             step: 0,
             op_timers: StageTimer::new(),
+            block_offload: false,
         }
     }
 
@@ -95,6 +105,7 @@ impl Gpt2Model {
             targets: Vec::new(),
             step: 0,
             op_timers: StageTimer::new(),
+            block_offload: false,
         }
     }
 
@@ -126,6 +137,10 @@ impl Gpt2Model {
         let bt = b * t;
         self.ensure_arenas(b, t);
         self.tokens = tokens.to_vec();
+        // Block offload: layernorm/softmax sites become elementwise plan
+        // ops and their consumer GEMMs chain device-resident. Host
+        // numerics below are untouched either way.
+        let block = self.block_offload;
         let acts = self.acts.as_mut().unwrap();
         let timers = &mut self.op_timers;
         let p = &self.params;
@@ -161,11 +176,16 @@ impl Gpt2Model {
                     c,
                 )
             });
+            if block {
+                // ln1's output stays resident for the QKV matmul; its
+                // own input is the host-side residual stream.
+                matmul::elementwise(dispatch, PlanOpKind::LayerNorm, bt, c, false)?;
+            }
             {
                 let out = &mut acts.qkv[l * bt * 3 * c..(l + 1) * bt * 3 * c];
                 let inp = &acts.ln1[l * bt * c..(l + 1) * bt * c];
                 let t0 = std::time::Instant::now();
-                matmul::forward(
+                matmul::forward_hinted(
                     dispatch,
                     out,
                     inp,
@@ -174,6 +194,8 @@ impl Gpt2Model {
                     bt,
                     c,
                     3 * c,
+                    FusedEpilogue::None,
+                    block,
                 )?;
                 timers.add(OP_MATMUL, t0.elapsed());
             }
@@ -232,9 +254,16 @@ impl Gpt2Model {
                     )
                 });
             }
+            if block {
+                // ln2's output feeds the fc matmul device-resident.
+                matmul::elementwise(dispatch, PlanOpKind::LayerNorm, bt, c, false)?;
+            }
             {
                 let t0 = std::time::Instant::now();
-                matmul::forward(
+                // With block offload the gelu rides the fc matmul as a
+                // fused epilogue — no separate elementwise op, and the
+                // fused output stays resident for fcproj.
+                matmul::forward_hinted(
                     dispatch,
                     &mut acts.fch[l * bt * 4 * c..(l + 1) * bt * 4 * c],
                     &acts.ln2[l * bt * c..(l + 1) * bt * c],
@@ -243,6 +272,8 @@ impl Gpt2Model {
                     bt,
                     c,
                     4 * c,
+                    if block { FusedEpilogue::Gelu } else { FusedEpilogue::None },
+                    block,
                 )?;
                 timers.add(OP_MATMUL, t0.elapsed());
             }
@@ -254,7 +285,7 @@ impl Gpt2Model {
             });
             {
                 let t0 = std::time::Instant::now();
-                matmul::forward(
+                matmul::forward_hinted(
                     dispatch,
                     &mut acts.fcproj[l * bt * c..(l + 1) * bt * c],
                     &acts.fch_gelu[l * bt * 4 * c..(l + 1) * bt * 4 * c],
@@ -263,6 +294,8 @@ impl Gpt2Model {
                     bt,
                     4 * c,
                     c,
+                    FusedEpilogue::None,
+                    block,
                 )?;
                 timers.add(OP_MATMUL, t0.elapsed());
             }
@@ -288,10 +321,14 @@ impl Gpt2Model {
                 c,
             )
         });
+        if block {
+            // lnf's output stays resident for the lm-head matmul.
+            matmul::elementwise(dispatch, PlanOpKind::LayerNorm, bt, c, false)?;
+        }
         {
             let t0 = std::time::Instant::now();
             // LM head: logits = lnf · wteᵀ (weight sharing, no bias).
-            matmul::forward(
+            matmul::forward_hinted(
                 dispatch,
                 &mut acts.logits,
                 &acts.lnf,
@@ -300,6 +337,8 @@ impl Gpt2Model {
                 bt,
                 c,
                 vp,
+                FusedEpilogue::None,
+                block,
             )?;
             timers.add(OP_MATMUL, t0.elapsed());
         }
@@ -307,6 +346,13 @@ impl Gpt2Model {
         if let Some(targets) = targets {
             assert_eq!(targets.len(), bt);
             self.targets = targets.to_vec();
+            if block {
+                // Softmax over the logits the lm-head left resident —
+                // the only elementwise site whose input never
+                // round-trips; the probabilities spill to host for the
+                // loss and backward.
+                matmul::elementwise(dispatch, PlanOpKind::Softmax, bt, vp, true)?;
+            }
             let loss = timers.time(OP_CLASSIFIER, || {
                 classifier::forward(
                     &mut acts.probs,
@@ -363,7 +409,11 @@ impl Gpt2Model {
                 grads.tensor_mut("wte"),
                 dw_off,
                 None,
+                // d_logits is written once per step (classifier
+                // backward, above) — step-stable, so the background
+                // executor borrows the ~BT·Vp dout zero-copy.
                 &g.d_logits,
+                true,
                 &acts.lnf,
                 p.tensor("wte"),
                 bt,
@@ -397,12 +447,17 @@ impl Gpt2Model {
             } else {
                 &acts.residual3[(l - 1) * bt * c..l * bt * c]
             };
+            // Parity slot for this layer's deferred-dW dout scratches:
+            // the buffer a background dW job borrowed is not rewritten
+            // until two layers later, by which time a younger layer's
+            // in-call dinp wait has drained it (FIFO executor).
+            let pi = l % 2;
 
             // residual3 = residual2 + fcproj.
             g.d_residual2.fill(0.0);
-            g.d_fcproj.fill(0.0);
+            g.d_fcproj[pi].fill(0.0);
             timers.time(OP_RESIDUAL, || {
-                residual::backward(&mut g.d_residual2, &mut g.d_fcproj, &g.d_residual3)
+                residual::backward(&mut g.d_residual2, &mut g.d_fcproj[pi], &g.d_residual3)
             });
 
             // fcproj backward.
@@ -417,7 +472,8 @@ impl Gpt2Model {
                     dw,
                     dw_off,
                     Some(db),
-                    &g.d_fcproj,
+                    &g.d_fcproj[pi],
+                    true,
                     &acts.fch_gelu[l * bt * 4 * c..(l + 1) * bt * 4 * c],
                     p.layer("fcprojw", l),
                     bt,
@@ -427,10 +483,10 @@ impl Gpt2Model {
                 timers.add(OP_MATMUL, t0.elapsed());
             }
 
-            g.d_fch.fill(0.0);
+            g.d_fch[pi].fill(0.0);
             timers.time(OP_GELU, || {
                 gelu::backward(
-                    &mut g.d_fch,
+                    &mut g.d_fch[pi],
                     &acts.fch[l * bt * 4 * c..(l + 1) * bt * 4 * c],
                     &g.d_fch_gelu,
                 )
@@ -448,7 +504,8 @@ impl Gpt2Model {
                     dw,
                     dw_off,
                     Some(db),
-                    &g.d_fch,
+                    &g.d_fch[pi],
+                    true,
                     &acts.ln2[l * bt * c..(l + 1) * bt * c],
                     p.layer("fcw", l),
                     bt,
@@ -477,9 +534,9 @@ impl Gpt2Model {
 
             // residual2 = residual_in + attproj.
             g.d_residual3.fill(0.0); // reuse as d(residual_in)
-            g.d_attproj.fill(0.0);
+            g.d_attproj[pi].fill(0.0);
             timers.time(OP_RESIDUAL, || {
-                residual::backward(&mut g.d_residual3, &mut g.d_attproj, &g.d_residual2)
+                residual::backward(&mut g.d_residual3, &mut g.d_attproj[pi], &g.d_residual2)
             });
 
             // attproj backward.
@@ -494,7 +551,8 @@ impl Gpt2Model {
                     dw,
                     dw_off,
                     Some(db),
-                    &g.d_attproj,
+                    &g.d_attproj[pi],
+                    true,
                     &acts.atty[l * bt * c..(l + 1) * bt * c],
                     p.layer("attprojw", l),
                     bt,
@@ -505,10 +563,10 @@ impl Gpt2Model {
             }
 
             // attention backward.
-            g.d_qkv.fill(0.0);
+            g.d_qkv[pi].fill(0.0);
             timers.time(OP_ATTENTION, || {
                 attention::backward(
-                    &mut g.d_qkv,
+                    &mut g.d_qkv[pi],
                     &mut g.d_preatt,
                     &mut g.d_att,
                     &g.d_atty,
@@ -533,7 +591,8 @@ impl Gpt2Model {
                     dw,
                     dw_off,
                     Some(db),
-                    &g.d_qkv,
+                    &g.d_qkv[pi],
+                    true,
                     &acts.ln1[l * bt * c..(l + 1) * bt * c],
                     p.layer("qkvw", l),
                     bt,
@@ -827,6 +886,82 @@ mod tests {
         let report = sess.execute(&mut plan).unwrap();
         assert_eq!(report.stats.len(), 27);
         assert!(report.makespan_growth_s <= report.serial_growth_s + 1e-12);
+    }
+
+    #[test]
+    fn block_offload_records_elementwise_sites_and_keeps_numerics() {
+        use crate::coordinator::plan::StepPlan;
+        use crate::coordinator::session::{OffloadSession, QueueDepth, SessionConfig};
+        let cfg = ModelConfig::d2();
+        let (tokens, targets) = tiny_batch(&cfg, 2, 16, 17);
+
+        // GEMM-only baseline step (block offload off).
+        let mut base_model = Gpt2Model::new(cfg, 55);
+        let mut base_sess = OffloadSession::new(
+            SessionConfig {
+                depth: QueueDepth(2),
+                ..Default::default()
+            },
+            &[],
+        )
+        .unwrap();
+        let mut base_plan = StepPlan::new();
+        let lb = {
+            let mut d = MatmulDispatch::Plan {
+                session: &mut base_sess,
+                plan: &mut base_plan,
+            };
+            let lb = base_model
+                .forward(&mut d, &tokens, Some(&targets), 2, 16)
+                .unwrap()
+                .unwrap();
+            base_model.zero_grad();
+            base_model.backward(&mut d).unwrap();
+            lb
+        };
+        assert_eq!(base_plan.len(), 27, "GEMM-only contract unchanged");
+        base_sess.execute(&mut base_plan).unwrap();
+
+        // Block-offloaded step on the same weights and batch.
+        let mut model = Gpt2Model::new(cfg, 55);
+        model.block_offload = true;
+        let mut sess = OffloadSession::new(
+            SessionConfig {
+                depth: QueueDepth(2),
+                ..Default::default()
+            },
+            &[],
+        )
+        .unwrap();
+        let mut plan = StepPlan::new();
+        let lp = {
+            let mut d = MatmulDispatch::Plan {
+                session: &mut sess,
+                plan: &mut plan,
+            };
+            let lp = model
+                .forward(&mut d, &tokens, Some(&targets), 2, 16)
+                .unwrap()
+                .unwrap();
+            model.zero_grad();
+            model.backward(&mut d).unwrap();
+            lp
+        };
+        // 27 GEMMs + per layer (ln1, ln2) + lnf + softmax = 33 at d2.
+        assert_eq!(plan.len(), 33, "every elementwise site must be recorded");
+        assert_eq!(lb, lp, "block offload must not change the loss");
+        assert_eq!(
+            model.grads.as_slice(),
+            base_model.grads.as_slice(),
+            "block offload must not change gradients"
+        );
+        let report = sess.execute(&mut plan).unwrap();
+        assert_eq!(report.stats.len(), 33);
+        // 6 recorded elementwise ops + 2 fused-gelu fc GEMMs.
+        assert_eq!(report.elementwise_ops, 8);
+        // Resident consumers: (qkv, fc, fcproj) x 2 layers + lm-head +
+        // softmax.
+        assert_eq!(report.resident_edges, 8);
     }
 
     #[test]

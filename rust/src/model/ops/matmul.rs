@@ -9,7 +9,7 @@
 //! scheduled at once (the record→schedule→execute seam).
 
 use crate::coordinator::executor::ExecClient;
-use crate::coordinator::plan::{PlanOp, PlanReplay, StepPlan};
+use crate::coordinator::plan::{FusedEpilogue, PlanOp, PlanOpKind, PlanReplay, StepPlan};
 use crate::coordinator::session::{GemmOp, InputLayout, OffloadSession, Ticket};
 use crate::gemm::cpu;
 use crate::gemm::sizes::ProblemSize;
@@ -74,6 +74,41 @@ pub fn forward(
     ic: usize,
     oc: usize,
 ) -> Result<()> {
+    forward_hinted(
+        dispatch,
+        out,
+        inp,
+        weight,
+        bias,
+        bt,
+        ic,
+        oc,
+        FusedEpilogue::None,
+        false,
+    )
+}
+
+/// [`forward`] with block-offload hints: `fused` marks an epilogue the
+/// vector units apply while the output strip drains (modeled free), and
+/// `resident` marks the activation input as already device-resident —
+/// the previous chained op (a recorded layernorm, or a fused-gelu GEMM)
+/// left it in a device BO, so the modeled schedule charges no host A
+/// staging, no A input sync, and no per-op dispatch doorbell. Numerics
+/// are unchanged in every arm: residency is a *modeling* property of
+/// the plan; the physical record path still runs the host-op baseline
+/// bit-for-bit.
+pub fn forward_hinted(
+    dispatch: &mut MatmulDispatch,
+    out: &mut [f32],
+    inp: &[f32],
+    weight: &[f32],
+    bias: Option<&[f32]>,
+    bt: usize,
+    ic: usize,
+    oc: usize,
+    fused: FusedEpilogue,
+    resident: bool,
+) -> Result<()> {
     match dispatch {
         MatmulDispatch::Cpu => {
             // C = A · Bᵀ computed as the llm.c loop nest: for each row,
@@ -96,7 +131,9 @@ pub fn forward(
             let size = ProblemSize::new(bt, ic, oc);
             let mut op = PlanOp::new(size)
                 .with_b_layout(InputLayout::Transposed)
-                .prefetchable_b(true);
+                .prefetchable_b(true)
+                .with_fused(fused)
+                .resident_input(resident);
             if let Some(head) = plan.chain_head() {
                 op = op.after(head);
             }
@@ -109,7 +146,9 @@ pub fn forward(
             let size = ProblemSize::new(bt, ic, oc);
             let mut op = PlanOp::new(size)
                 .with_b_layout(InputLayout::Transposed)
-                .prefetchable_b(true);
+                .prefetchable_b(true)
+                .with_fused(fused)
+                .resident_input(resident);
             if let Some(head) = replay.chain_head() {
                 op = op.after(head);
             }
@@ -123,7 +162,9 @@ pub fn forward(
             let size = ProblemSize::new(bt, ic, oc);
             let mut op = PlanOp::new(size)
                 .with_b_layout(InputLayout::Transposed)
-                .prefetchable_b(true);
+                .prefetchable_b(true)
+                .with_fused(fused)
+                .resident_input(resident);
             if let Some(head) = client.chain_head() {
                 op = op.after(head);
             }
@@ -146,6 +187,56 @@ pub fn forward(
     Ok(())
 }
 
+/// Thread one *elementwise* transformer site (layernorm / gelu /
+/// softmax) through the plan path. The host numerics already ran (or
+/// are about to run) on the caller's thread — this records, replays, or
+/// advances past the op's *modeled* device cost only, chained on the
+/// activation head like a GEMM so residency edges survive scheduling.
+/// `rows * cols` f32 elements stream through the vector units;
+/// `resident` marks the input as left device-resident by the previous
+/// chained op (the softmax-at-classifier case, fed by the lm-head).
+/// `Cpu` and eager `Npu` dispatches are a no-op: elementwise offload
+/// exists only where a step plan exists.
+pub fn elementwise(
+    dispatch: &mut MatmulDispatch,
+    kind: PlanOpKind,
+    rows: usize,
+    cols: usize,
+    resident: bool,
+) -> Result<()> {
+    let size = ProblemSize::new(rows, 1, cols);
+    match dispatch {
+        MatmulDispatch::Cpu | MatmulDispatch::Npu(_) => {}
+        MatmulDispatch::Plan { session, plan } => {
+            let mut op = PlanOp::elementwise(kind, size).resident_input(resident);
+            if let Some(head) = plan.chain_head() {
+                op = op.after(head);
+            }
+            let node = session.record_elementwise(plan, &op)?;
+            plan.set_chain(node);
+        }
+        MatmulDispatch::Replay { session, replay } => {
+            let mut op = PlanOp::elementwise(kind, size).resident_input(resident);
+            if let Some(head) = replay.chain_head() {
+                op = op.after(head);
+            }
+            let node = session.replay_elementwise(replay, &op)?;
+            replay.set_chain(node);
+        }
+        MatmulDispatch::BackgroundReplay { client } => {
+            // No job crosses the executor queue — the cursor advance is
+            // checked against the cached plan on this thread.
+            let mut op = PlanOp::elementwise(kind, size).resident_input(resident);
+            if let Some(head) = client.chain_head() {
+                op = op.after(head);
+            }
+            let node = client.advance_elementwise(&op)?;
+            client.set_chain(node);
+        }
+    }
+    Ok(())
+}
+
 /// dinp += dout · W ; dweight += doutᵀ · inp ; dbias += Σ_rows dout.
 ///
 /// `dw_off` is `dweight`'s offset inside the model's gradient arena
@@ -154,6 +245,14 @@ pub fn forward(
 /// (no pointer crosses the executor thread boundary) and the trainer
 /// applies it at step end via `ExecClient::drain_and_apply`. Every other
 /// arm accumulates through `dweight` directly and ignores the offset.
+///
+/// `dout_stable` is the caller's promise that the `dout` buffer stays
+/// valid and unmutated until the step finishes — the model's
+/// parity-rotated `dout` scratches and the once-per-step lm-head
+/// `d_logits` qualify. When true, the `BackgroundReplay` arm borrows
+/// `dout` for the deferred `dW` job zero-copy
+/// ([`ExecClient::submit_deferred_borrowed`]); when false it pays the
+/// copy. Every other arm ignores the flag.
 pub fn backward(
     dispatch: &mut MatmulDispatch,
     dinp: &mut [f32],
@@ -161,6 +260,7 @@ pub fn backward(
     dw_off: usize,
     dbias: Option<&mut [f32]>,
     dout: &[f32],
+    dout_stable: bool,
     inp: &[f32],
     weight: &[f32],
     bt: usize,
@@ -304,14 +404,12 @@ pub fn backward(
                 op_dinp = op_dinp.after(h);
                 op_dw = op_dw.after(h);
             }
-            // dout is copied for the deferred job (the model reuses its
-            // gradient scratch buffers across layers, so it is not
-            // stable beyond this call); copying *before* the first
+            // Unless the caller promises `dout` is step-stable, it is
+            // copied for the deferred job (a reused gradient scratch is
+            // not stable beyond this call); copying *before* the first
             // submit keeps the submit→wait window free of panic-prone
-            // work (allocation), per the submit safety contract. The
-            // copy is the price of deferral — ~a copy_s(BT·OC) against
-            // the whole dW invocation it lets the CPU ops hide.
-            let dout_copy = dout.to_vec();
+            // work (allocation), per the submit safety contract.
+            let dout_copy = if dout_stable { None } else { Some(dout.to_vec()) };
             // SAFETY: h_dinp is waited below, before dout/weight/tmp
             // leave this frame's borrows; on error the client quiesces
             // the executor before returning; nothing between the
@@ -321,8 +419,23 @@ pub fn backward(
             // the accumulation at step end (drain_and_apply), after this
             // frame's dweight borrow is long gone.
             // SAFETY: inp is a saved forward activation, stable for the
-            // whole step — exactly the submit_deferred contract.
-            unsafe { client.submit_deferred(&op_dw, dout_copy, inp, dw_off, dweight.len())? };
+            // whole step; a borrowed dout is the caller's `dout_stable`
+            // promise (the model's parity-rotated scratches) — exactly
+            // the submit_deferred / submit_deferred_borrowed contracts.
+            unsafe {
+                match dout_copy {
+                    Some(copy) => {
+                        client.submit_deferred(&op_dw, copy, inp, dw_off, dweight.len())?
+                    }
+                    None => client.submit_deferred_borrowed(
+                        &op_dw,
+                        dout,
+                        inp,
+                        dw_off,
+                        dweight.len(),
+                    )?,
+                }
+            };
             client.set_chain(n_dinp);
             client.wait(h_dinp)?;
             // This merge (and the bias reduction below) overlaps the
@@ -448,6 +561,7 @@ mod tests {
             0,
             Some(&mut dbias),
             &dout,
+            false,
             &inp,
             &w,
             bt,
@@ -491,7 +605,8 @@ mod tests {
         let mut dinp_c = vec![0.0; bt * ic];
         let mut dw_c = vec![0.0; oc * ic];
         backward(
-            &mut MatmulDispatch::Cpu, &mut dinp_c, &mut dw_c, 0, None, &dout, &inp, &w, bt, ic, oc,
+            &mut MatmulDispatch::Cpu, &mut dinp_c, &mut dw_c, 0, None, &dout, false, &inp, &w, bt,
+            ic, oc,
         )
         .unwrap();
 
@@ -505,6 +620,7 @@ mod tests {
             0,
             None,
             &dout,
+            false,
             &inp,
             &w,
             bt,
@@ -550,6 +666,7 @@ mod tests {
                 0,
                 None,
                 &dout,
+                false,
                 &inp,
                 &w,
                 bt,
@@ -588,6 +705,7 @@ mod tests {
             0,
             None,
             &dout,
+            false,
             &inp,
             &w,
             bt,
@@ -617,6 +735,7 @@ mod tests {
             0,
             None,
             &dout,
+            false,
             &inp,
             &w,
             bt,
@@ -671,6 +790,7 @@ mod tests {
             0,
             None,
             &dout,
+            false,
             &inp,
             &w,
             bt,
@@ -698,6 +818,7 @@ mod tests {
             0,
             None,
             &dout2,
+            false,
             &inp,
             &w,
             bt,
@@ -720,6 +841,7 @@ mod tests {
             0,
             None,
             &dout2,
+            false,
             &inp,
             &w,
             bt,
@@ -742,6 +864,7 @@ mod tests {
             0,
             None,
             &rand(&mut rng, bt * 2 * oc),
+            false,
             &rand(&mut rng, bt * 2 * ic),
             &w,
             bt * 2,

@@ -116,6 +116,18 @@ impl TimingModel {
         }
     }
 
+    /// Model one elementwise (vector-unit) invocation over `bytes_streamed`
+    /// bytes of shim traffic (operand in + result out). LayerNorm / GELU /
+    /// softmax are bandwidth-bound on the AI Engine vector units: the
+    /// kernel streams the tensor once through the array at shim bandwidth
+    /// plus the fixed instruction-issue cost. Elementwise kernels ride the
+    /// currently loaded GEMM configuration's data paths, so there is no
+    /// per-size reconfiguration and — when chained onto a resident
+    /// activation — no separate dispatch doorbell either.
+    pub fn elementwise(&self, bytes_streamed: usize) -> f64 {
+        bytes_streamed as f64 / self.shim_bw_bytes_per_s + self.inst_issue_s
+    }
+
     /// Effective FLOP/s for a tiling under this model.
     pub fn effective_flops(&self, t: &Tiling) -> f64 {
         t.size.flops() as f64 / self.gemm(t).total_s()
@@ -509,6 +521,17 @@ mod tests {
                 Ok(())
             },
         );
+    }
+
+    #[test]
+    fn elementwise_is_bandwidth_plus_issue() {
+        let m = TimingModel::default();
+        let bytes = 1 << 20;
+        let t = m.elementwise(bytes);
+        assert!((t - (bytes as f64 / m.shim_bw_bytes_per_s + m.inst_issue_s)).abs() < 1e-15);
+        // An elementwise pass over a GEMM-sized activation costs far less
+        // than the GEMM's fixed dispatch alone would.
+        assert!(m.elementwise(0) < m.dispatch_s);
     }
 
     #[test]

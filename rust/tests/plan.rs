@@ -5,9 +5,11 @@
 //! (plan ≤ eager pipelined ≤ eager serial), the prefetch-horizon ladder
 //! (deep ≤ one-op ≤ none, strict on the 124M stream), and plan caching
 //! (record once, cache-hit replays bit-identical to a fresh record,
-//! invalidation on shape/session change).
+//! invalidation on shape/session change), plus mixed-kind (block-offload)
+//! plan divergence and on-disk cache compatibility: a pre-block-offload
+//! v1 cache file loads as a recoverable miss, never an error.
 
-use xdna_repro::coordinator::plan::{PlanCache, PlanOp, StepPlan};
+use xdna_repro::coordinator::plan::{PlanCache, PlanOp, PlanOpKind, StepPlan};
 use xdna_repro::coordinator::scheduler::SchedulePolicy;
 use xdna_repro::coordinator::session::{
     GemmOp, InputLayout, OffloadSession, PrefetchHorizon, QueueDepth, SessionConfig,
@@ -594,4 +596,228 @@ fn deep_horizon_strictly_beats_one_op_on_the_gpt2_124m_step() {
         "the deep horizon must strictly beat the one-op hoist on the 124M step: \
          deep {m_deep} vs one-op {m_next}"
     );
+}
+
+/// Record a small mixed-kind (block-offload) step: a layernorm feeding a
+/// device-resident GEMM feeding a resident softmax — the shortest chain
+/// that exercises every non-GEMM divergence axis.
+fn record_mixed_step(
+    sess: &mut OffloadSession,
+    a: &[f32],
+    b_t: &[f32],
+    c: &mut [f32],
+) -> StepPlan {
+    let size = ProblemSize::new(64, 64, 128);
+    let mut plan = StepPlan::new();
+    let ln = PlanOp::elementwise(PlanOpKind::LayerNorm, ProblemSize::new(64, 1, 64));
+    let n0 = sess.record_elementwise(&mut plan, &ln).unwrap();
+    let gemm = PlanOp::new(size)
+        .with_b_layout(InputLayout::Transposed)
+        .prefetchable_b(true)
+        .resident_input(true)
+        .after(n0);
+    let n1 = sess.record_gemm(&mut plan, &gemm, a, b_t, c).unwrap();
+    let sm = PlanOp::elementwise(PlanOpKind::Softmax, ProblemSize::new(64, 1, 128))
+        .resident_input(true)
+        .after(n1);
+    sess.record_elementwise(&mut plan, &sm).unwrap();
+    plan
+}
+
+/// Mixed-kind divergence: replaying a cached block-offload step against
+/// a changed elementwise shape, a changed op *kind* (a GEMM where the
+/// layernorm was), or a changed residency (occupancy) all diverge
+/// recoverably — and re-recording the changed step caches both variants.
+#[test]
+fn mixed_kind_plan_diverges_recoverably_on_shape_kind_or_residency_change() {
+    let size = ProblemSize::new(64, 64, 128);
+    let (a, b_t) = random_inputs(size, 9100);
+    let mut c = vec![0.0f32; size.m * size.n];
+    let mut sess = session(2, fixed(1), SchedulePolicy::Fifo);
+    let mut cache = PlanCache::new();
+    let mut plan = record_mixed_step(&mut sess, &a, &b_t, &mut c);
+    sess.execute(&mut plan).unwrap();
+    cache.insert(sess.freeze(plan).unwrap());
+
+    // Shape change at the elementwise cursor.
+    let mut replay = sess.begin_replay(&cache).unwrap();
+    let wrong_shape = PlanOp::elementwise(PlanOpKind::LayerNorm, ProblemSize::new(96, 1, 64));
+    let err = sess.replay_elementwise(&mut replay, &wrong_shape).unwrap_err();
+    assert!(err.is_plan_divergence(), "{err}");
+    assert!(err.to_string().contains("re-record"), "{err}");
+    drop(replay);
+
+    // Kind change: a GEMM arrives where the cached op is a layernorm.
+    let mut replay = sess.begin_replay(&cache).unwrap();
+    let err = sess
+        .replay_gemm(&mut replay, &PlanOp::new(size), &a, &b_t, &mut c)
+        .unwrap_err();
+    assert!(err.is_plan_divergence(), "kind change must diverge recoverably: {err}");
+    drop(replay);
+
+    // Residency (occupancy) change on the same shape and kind.
+    let mut replay = sess.begin_replay(&cache).unwrap();
+    let resident_ln = PlanOp::elementwise(PlanOpKind::LayerNorm, ProblemSize::new(64, 1, 64))
+        .resident_input(true);
+    let err = sess.replay_elementwise(&mut replay, &resident_ln).unwrap_err();
+    assert!(err.is_plan_divergence(), "residency change must diverge recoverably: {err}");
+    drop(replay);
+
+    // The session stays usable: re-record the changed step (the new
+    // layernorm shape feeding the same GEMM) and both variants coexist
+    // in the cache.
+    let mut plan2 = StepPlan::new();
+    let ln96 = PlanOp::elementwise(PlanOpKind::LayerNorm, ProblemSize::new(96, 1, 64));
+    let n0 = sess.record_elementwise(&mut plan2, &ln96).unwrap();
+    let gemm2 = PlanOp::new(size)
+        .with_b_layout(InputLayout::Transposed)
+        .prefetchable_b(true)
+        .after(n0);
+    sess.record_gemm(&mut plan2, &gemm2, &a, &b_t, &mut c).unwrap();
+    sess.execute(&mut plan2).unwrap();
+    cache.insert(sess.freeze(plan2).unwrap());
+    assert_eq!(cache.len(), 2);
+    assert_eq!(cache.misses(), 2);
+}
+
+/// A mixed-kind step survives the on-disk cache roundtrip: kinds, fused
+/// epilogues, and residency flags serialize with the v2 format, and the
+/// reloaded entry replays without divergence.
+#[test]
+fn mixed_kind_plan_survives_the_on_disk_cache_roundtrip() {
+    let path = std::env::temp_dir().join("xdna_plan_cache_mixed_roundtrip.json");
+    let path = path.to_str().unwrap().to_string();
+    let size = ProblemSize::new(64, 64, 128);
+    let (a, b_t) = random_inputs(size, 9200);
+    let mut c = vec![0.0f32; size.m * size.n];
+    let mut sess = session(2, fixed(1), SchedulePolicy::Fifo);
+    let mut cache = PlanCache::new();
+    let mut plan = record_mixed_step(&mut sess, &a, &b_t, &mut c);
+    sess.execute(&mut plan).unwrap();
+    cache.insert(sess.freeze(plan).unwrap());
+    let fp = 0xb10c_0ff1u64; // arbitrary fingerprint
+    assert_eq!(cache.save_to(&path, fp, sess.session_id()).unwrap(), 1);
+
+    // A fresh cache (a restarted process) adopts the entry and the
+    // replay runs the whole mixed-kind chain against it.
+    let mut loaded = PlanCache::new();
+    assert_eq!(loaded.load_from(&path, fp, sess.session_id()), 1);
+    let mut replay = sess.begin_replay(&loaded).expect("adopted entry replayable");
+    let ln = PlanOp::elementwise(PlanOpKind::LayerNorm, ProblemSize::new(64, 1, 64));
+    let n0 = sess.replay_elementwise(&mut replay, &ln).unwrap();
+    let gemm = PlanOp::new(size)
+        .with_b_layout(InputLayout::Transposed)
+        .prefetchable_b(true)
+        .resident_input(true)
+        .after(n0);
+    let mut c2 = vec![0.0f32; size.m * size.n];
+    let n1 = sess.replay_gemm(&mut replay, &gemm, &a, &b_t, &mut c2).unwrap();
+    let sm = PlanOp::elementwise(PlanOpKind::Softmax, ProblemSize::new(64, 1, 128))
+        .resident_input(true)
+        .after(n1);
+    sess.replay_elementwise(&mut replay, &sm).unwrap();
+    let report = sess.finish_replay(replay).unwrap();
+    assert_eq!(report.stats.len(), 3);
+    assert!(report.resident_edges > 0 && report.elementwise_ops > 0);
+    assert_eq!(c2, c, "replayed GEMM numerics track the recorded data");
+    std::fs::remove_file(&path).ok();
+}
+
+/// A pre-block-offload (v1) cache file — old format version, op records
+/// without the kind/fused/residency fields — is a *recoverable miss*:
+/// zero entries adopted, no error, and the run records its first step as
+/// if no file existed. A v2 file carrying an unknown op kind is likewise
+/// skipped entry-by-entry rather than erroring.
+#[test]
+fn pre_block_offload_v1_cache_file_is_a_recoverable_miss() {
+    let sess = session(2, fixed(1), SchedulePolicy::Fifo);
+    let fp = 0x00c0_ffeeu64;
+
+    // A faithful v1 entry: exactly the pre-block-offload writer's keys —
+    // no `kind`, `fused`, `resident_a`, or `resident_c` anywhere.
+    let v1 = r#"{
+  "format_version": 1,
+  "generator": "xdna-repro plan cache",
+  "fingerprint": "0000000000c0ffee",
+  "entries": [{
+    "order": [0],
+    "choice": "next",
+    "ops": [{
+      "size": [64, 64, 128],
+      "strip_size": [64, 64, 128],
+      "a_layout": "row-major",
+      "b_layout": "transposed",
+      "deps": [],
+      "prefetch_b": true,
+      "host_a_s": 0.001,
+      "host_b_s": 0.001,
+      "sync_in_s": 0.0005,
+      "reconfig_switch_s": 0.001,
+      "reconfig_once_s": 0.004,
+      "strips": [[0.002, 0.0004]],
+      "host_post_s": 0.0002,
+      "energy_j": 0.01,
+      "wall_s": 0.0
+    }]
+  }]
+}"#;
+    let path = std::env::temp_dir().join("xdna_plan_cache_v1_miss.json");
+    let path = path.to_str().unwrap().to_string();
+    std::fs::write(&path, v1).unwrap();
+    let mut cache = PlanCache::new();
+    assert_eq!(
+        cache.load_from(&path, fp, sess.session_id()),
+        0,
+        "a v1 file must load as a clean miss"
+    );
+    assert!(cache.is_empty());
+    assert!(
+        sess.begin_replay(&cache).is_none(),
+        "the run records its first step as if no file existed"
+    );
+    std::fs::remove_file(&path).ok();
+
+    // Current format version but an op kind this build does not know:
+    // the corrupt entry is skipped, never an error.
+    let v2_unknown_kind = r#"{
+  "format_version": 2,
+  "generator": "xdna-repro plan cache",
+  "fingerprint": "0000000000c0ffee",
+  "entries": [{
+    "order": [0],
+    "choice": "next",
+    "ops": [{
+      "size": [64, 64, 128],
+      "kind": "conv",
+      "fused": "none",
+      "resident_a": false,
+      "resident_c": false,
+      "strip_size": [64, 64, 128],
+      "a_layout": "row-major",
+      "b_layout": "transposed",
+      "deps": [],
+      "prefetch_b": true,
+      "host_a_s": 0.001,
+      "host_b_s": 0.001,
+      "sync_in_s": 0.0005,
+      "reconfig_switch_s": 0.001,
+      "reconfig_once_s": 0.004,
+      "strips": [[0.002, 0.0004]],
+      "host_post_s": 0.0002,
+      "energy_j": 0.01,
+      "wall_s": 0.0
+    }]
+  }]
+}"#;
+    let path = std::env::temp_dir().join("xdna_plan_cache_v2_unknown_kind.json");
+    let path = path.to_str().unwrap().to_string();
+    std::fs::write(&path, v2_unknown_kind).unwrap();
+    let mut cache = PlanCache::new();
+    assert_eq!(
+        cache.load_from(&path, fp, sess.session_id()),
+        0,
+        "an unknown op kind skips the entry rather than erroring"
+    );
+    assert!(cache.is_empty());
+    std::fs::remove_file(&path).ok();
 }
