@@ -34,6 +34,10 @@
 //! against (numerics are bit-identical across targets), and `--objective
 //! makespan|energy` picks what the candidate simulation optimizes — it
 //! defaults to energy on `--power battery`, makespan otherwise.
+//! `--faults SPEC` (with `--fault-seed`, `--retry`, `--op-deadline-ms`)
+//! injects deterministic device faults through the session's
+//! fault-tolerance layer; the run report prints the retry / recovery /
+//! host-fallback counters (see docs/RELIABILITY.md).
 
 use xdna_repro::coordinator::engine::ExecMode;
 use xdna_repro::coordinator::executor::ExecutorMode;
@@ -41,7 +45,9 @@ use xdna_repro::coordinator::plan::{PlanCache, PlanCacheMode};
 use xdna_repro::coordinator::session::{
     OffloadSession, QueueDepth, SessionConfig, ShardPolicy,
 };
-use xdna_repro::coordinator::SchedulePolicy;
+use xdna_repro::coordinator::{
+    ComputeDevice, FaultInjector, FaultPlan, RetryPolicy, SchedulePolicy, SimulatorDevice,
+};
 use xdna_repro::model::data::{synthetic_corpus, DataLoader};
 use xdna_repro::model::model::OPS;
 use xdna_repro::model::trainer::{train, TrainBackend, TrainConfig};
@@ -98,6 +104,26 @@ fn main() -> xdna_repro::Result<()> {
         Some(o) => o.parse::<Objective>()?,
         None => Objective::default_for(&power),
     };
+    // Fault-tolerance surface, same flags as the CLI: --faults SPEC
+    // (scattered by --fault-seed) injects deterministic device faults;
+    // --retry and --op-deadline-ms shape the session's RetryPolicy.
+    let mut retry = RetryPolicy {
+        max_retries: args.get_parse("retry", RetryPolicy::default().max_retries)?,
+        ..RetryPolicy::default()
+    };
+    if let Some(ms) = args.get("op-deadline-ms") {
+        let ms: f64 = ms
+            .parse()
+            .map_err(|_| xdna_repro::Error::config(format!("bad --op-deadline-ms '{ms}'")))?;
+        retry.op_deadline_s = Some(ms / 1e3);
+    }
+    let device: Box<dyn ComputeDevice + Send> = match args.get("faults") {
+        Some(spec) => Box::new(FaultInjector::new(
+            Box::new(SimulatorDevice),
+            FaultPlan::parse(spec, args.get_parse("fault-seed", 17u64)?)?,
+        )),
+        None => Box::new(SimulatorDevice),
+    };
 
     let tc = TrainConfig {
         batch,
@@ -123,11 +149,13 @@ fn main() -> xdna_repro::Result<()> {
     let mut model = Gpt2Model::new(cfg, 1234);
     let mut engine = OffloadSession::new(
         SessionConfig {
+            device,
             depth,
             shards,
             schedule,
             profile,
             objective,
+            retry,
             ..Default::default()
         },
         &[],
@@ -191,6 +219,17 @@ fn main() -> xdna_repro::Result<()> {
         engine.invocations,
         engine.registered_sizes().len(),
         engine.modeled_energy_j
+    );
+    // Unconditional so the CI chaos smoke can grep it; keep the shape in
+    // sync with the CLI's fault_report_line.
+    println!(
+        "fault tolerance: {} fault(s) injected, {} transient retry(s), \
+         {} device recovery(s), {} host-fallback step(s), quarantined {}",
+        engine.faults.seen,
+        engine.faults.retried,
+        engine.faults.recovered,
+        engine.faults.fallback_steps,
+        if engine.faults.quarantined { "yes" } else { "no" }
     );
     if plan && plan_cache {
         println!(

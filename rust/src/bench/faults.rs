@@ -1,0 +1,310 @@
+//! `bench faults` — the chaos ladder: training under injected device
+//! faults.
+//!
+//! Four rows, each a real d2 training run through the planned/cached
+//! offload path on a [`FaultInjector`]-wrapped simulator device: a
+//! fault-free baseline, a transient-fault storm (every fault retried),
+//! one context loss (recovered: re-open, re-prepare, resume the frozen
+//! plan), and a permanent loss (recovery fails, the session quarantines
+//! and the run degrades to the host-op oracle). The ladder's acceptance
+//! claims are pinned by the tests below and `rust/tests/faults.rs`:
+//! retried and recovered rows are **bit-identical** to the fault-free
+//! baseline (a failed run stages nothing, so a re-run reproduces the
+//! same bf16 result), and the quarantined row is bit-identical to the
+//! all-CPU oracle (the host ops are the fallback numerics).
+
+use crate::coordinator::device::SimulatorDevice;
+use crate::coordinator::executor::ExecutorMode;
+use crate::coordinator::faults::{FaultCounters, FaultInjector, FaultPlan};
+use crate::coordinator::plan::PlanCache;
+use crate::coordinator::session::{OffloadSession, QueueDepth, SessionConfig};
+use crate::model::trainer::{train_synthetic, TrainBackend, TrainConfig};
+use crate::model::ModelConfig;
+use crate::util::json::Json;
+
+/// The ladder's fixed training shape (d2, synthetic corpus).
+pub const EPOCHS: usize = 4;
+pub const STEPS_PER_EPOCH: usize = 2;
+const BATCH: usize = 2;
+const SEQ: usize = 16;
+const DATA_SEED: u64 = 5;
+/// Scatters each row's fault spec; fixed so the ladder is reproducible.
+pub const FAULT_SEED: u64 = 17;
+
+/// The chaos ladder: one row per fault scenario.
+pub const SCENARIOS: [(&str, &str); 4] = [
+    ("no faults", ""),
+    ("transient x3", "transient:3"),
+    ("device lost", "device-lost:1"),
+    ("quarantine", "quarantine"),
+];
+
+/// One scenario's training results and fault bookkeeping.
+#[derive(Debug, Clone)]
+pub struct FaultRow {
+    pub label: &'static str,
+    pub spec: &'static str,
+    /// Per-epoch losses — the bit-identity probe across rows.
+    pub losses: Vec<f32>,
+    pub counters: FaultCounters,
+    pub plan_cache_hits: u64,
+    pub plan_cache_misses: u64,
+}
+
+fn train_cfg() -> TrainConfig {
+    TrainConfig {
+        batch: BATCH,
+        seq: SEQ,
+        epochs: EPOCHS,
+        steps_per_epoch: STEPS_PER_EPOCH,
+        ..Default::default()
+    }
+}
+
+/// Run one scenario: the planned/cached trainer on an injector-wrapped
+/// simulator device.
+pub fn run_scenario(label: &'static str, spec: &'static str) -> FaultRow {
+    let plan = FaultPlan::parse(spec, FAULT_SEED).expect("ladder specs are valid");
+    let mut session = OffloadSession::new(
+        SessionConfig {
+            depth: QueueDepth(2),
+            device: Box::new(FaultInjector::new(Box::new(SimulatorDevice), plan)),
+            ..Default::default()
+        },
+        &[],
+    )
+    .expect("session with no preloaded sizes always opens");
+    let mut cache = PlanCache::new();
+    let stats = train_synthetic(
+        ModelConfig::d2(),
+        &train_cfg(),
+        &mut TrainBackend::CpuNpuPlanned {
+            session: &mut session,
+            cache: Some(&mut cache),
+            executor: ExecutorMode::Sync,
+        },
+        DATA_SEED,
+    )
+    .expect("no injected fault may surface: retry, recover, or fall back");
+    FaultRow {
+        label,
+        spec,
+        losses: stats.iter().map(|e| e.loss).collect(),
+        counters: session.faults.clone(),
+        plan_cache_hits: cache.hits(),
+        plan_cache_misses: cache.misses(),
+    }
+}
+
+/// The all-CPU oracle the quarantined row must match bit for bit.
+pub fn host_oracle_losses() -> Vec<f32> {
+    train_synthetic(ModelConfig::d2(), &train_cfg(), &mut TrainBackend::Cpu, DATA_SEED)
+        .expect("the CPU backend has no device to fail")
+        .iter()
+        .map(|e| e.loss)
+        .collect()
+}
+
+/// All scenarios' rows.
+pub fn rows() -> Vec<FaultRow> {
+    SCENARIOS
+        .iter()
+        .map(|&(label, spec)| run_scenario(label, spec))
+        .collect()
+}
+
+/// Print the chaos-ladder table.
+pub fn print() {
+    println!(
+        "\n=== Fault tolerance: training under injected device faults (d2, {} steps) ===",
+        EPOCHS * STEPS_PER_EPOCH
+    );
+    println!(
+        "{:>14} {:>6} {:>8} {:>10} {:>9} {:>12} {:>11} {:>11}",
+        "scenario", "seen", "retried", "recovered", "fallback", "quarantined", "plan h/m", "final loss"
+    );
+    let all = rows();
+    let baseline = all[0].losses.clone();
+    let oracle = host_oracle_losses();
+    for r in &all {
+        println!(
+            "{:>14} {:>6} {:>8} {:>10} {:>9} {:>12} {:>8}/{} {:>11.6}",
+            r.label,
+            r.counters.seen,
+            r.counters.retried,
+            r.counters.recovered,
+            r.counters.fallback_steps,
+            if r.counters.quarantined { "yes" } else { "no" },
+            r.plan_cache_hits,
+            r.plan_cache_misses,
+            r.losses.last().copied().unwrap_or(f32::NAN)
+        );
+    }
+    let recoverable_identical = all[1..3].iter().all(|r| r.losses == baseline);
+    println!(
+        "(retried + recovered rows bit-identical to the fault-free baseline: {})",
+        if recoverable_identical { "yes" } else { "NO" }
+    );
+    println!(
+        "(quarantined row bit-identical to the all-CPU host oracle: {})",
+        if all[3].losses == oracle { "yes" } else { "NO" }
+    );
+}
+
+/// Version of the `bench faults --json` report shape. Bump whenever a
+/// key is renamed, moved, or re-typed so downstream consumers of the CI
+/// artifact can dispatch on it across PRs.
+///
+/// * v1 — top-level `schema_version`, `generator`, a `config` echo of
+///   the training shape and fault seed, and `rows` carrying each
+///   scenario's per-epoch losses, fault counters, and plan-cache
+///   hit/miss counters.
+pub const SCHEMA_VERSION: u64 = 1;
+
+fn row_to_json(r: &FaultRow) -> Json {
+    let mut o = std::collections::BTreeMap::new();
+    o.insert("label".to_string(), Json::str(r.label));
+    o.insert("spec".to_string(), Json::str(r.spec));
+    o.insert(
+        "losses".to_string(),
+        Json::Arr(r.losses.iter().map(|&l| Json::Num(l as f64)).collect()),
+    );
+    o.insert("faults_seen".to_string(), Json::Num(r.counters.seen as f64));
+    o.insert("retried".to_string(), Json::Num(r.counters.retried as f64));
+    o.insert("recovered".to_string(), Json::Num(r.counters.recovered as f64));
+    o.insert(
+        "fallback_steps".to_string(),
+        Json::Num(r.counters.fallback_steps as f64),
+    );
+    o.insert(
+        "fallback_ops".to_string(),
+        Json::Num(r.counters.fallback_ops as f64),
+    );
+    o.insert("quarantined".to_string(), Json::Bool(r.counters.quarantined));
+    o.insert(
+        "plan_cache_hits".to_string(),
+        Json::Num(r.plan_cache_hits as f64),
+    );
+    o.insert(
+        "plan_cache_misses".to_string(),
+        Json::Num(r.plan_cache_misses as f64),
+    );
+    Json::Obj(o)
+}
+
+/// The full report as JSON — the CI chaos step uploads this as a build
+/// artifact. Self-describing: see [`SCHEMA_VERSION`].
+pub fn json_report() -> Json {
+    let mut config = std::collections::BTreeMap::new();
+    config.insert("model".to_string(), Json::str("d2"));
+    config.insert("epochs".to_string(), Json::Num(EPOCHS as f64));
+    config.insert(
+        "steps_per_epoch".to_string(),
+        Json::Num(STEPS_PER_EPOCH as f64),
+    );
+    config.insert("batch".to_string(), Json::Num(BATCH as f64));
+    config.insert("seq".to_string(), Json::Num(SEQ as f64));
+    config.insert("fault_seed".to_string(), Json::Num(FAULT_SEED as f64));
+
+    let rows: Vec<Json> = rows().iter().map(row_to_json).collect();
+
+    let mut root = std::collections::BTreeMap::new();
+    root.insert(
+        "schema_version".to_string(),
+        Json::Num(SCHEMA_VERSION as f64),
+    );
+    root.insert("generator".to_string(), Json::str("xdna-repro bench faults"));
+    root.insert("config".to_string(), Json::Obj(config));
+    root.insert("rows".to_string(), Json::Arr(rows));
+    Json::Obj(root)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn recoverable_rows_are_bit_identical_to_the_fault_free_baseline() {
+        let all = rows();
+        let baseline = &all[0];
+        assert_eq!(baseline.counters, FaultCounters::default(), "no-fault row is clean");
+        assert_eq!(baseline.plan_cache_misses, 1, "the step records exactly once");
+
+        let transient = &all[1];
+        assert_eq!(transient.losses, baseline.losses, "retries must not change numerics");
+        assert_eq!(transient.counters.seen, 3);
+        assert_eq!(transient.counters.retried, 3);
+        assert_eq!(transient.counters.recovered, 0);
+        assert!(!transient.counters.quarantined);
+
+        let lost = &all[2];
+        assert_eq!(lost.losses, baseline.losses, "recovery must not change numerics");
+        assert_eq!(lost.counters.seen, 1);
+        assert_eq!(lost.counters.recovered, 1);
+        assert!(!lost.counters.quarantined);
+        // Recovery resumes the frozen plan: no extra re-record.
+        assert_eq!(lost.plan_cache_misses, 1, "{lost:?}");
+        assert_eq!(lost.plan_cache_hits, baseline.plan_cache_hits);
+    }
+
+    #[test]
+    fn quarantined_row_matches_the_host_oracle_bit_for_bit() {
+        let row = run_scenario("quarantine", "quarantine");
+        assert!(row.counters.quarantined);
+        assert_eq!(row.counters.recovered, 0, "permanent loss: recovery fails");
+        assert_eq!(
+            row.counters.fallback_steps as usize,
+            EPOCHS * STEPS_PER_EPOCH,
+            "every step degrades to the host oracle"
+        );
+        assert!(row.counters.fallback_ops > 0);
+        assert_eq!(
+            row.losses,
+            host_oracle_losses(),
+            "host fallback must be bit-identical to the CPU backend"
+        );
+    }
+
+    #[test]
+    fn json_report_is_self_describing_and_round_trips() {
+        let j = json_report();
+        assert_eq!(
+            j.get("schema_version").unwrap().as_usize().unwrap(),
+            SCHEMA_VERSION as usize
+        );
+        assert_eq!(
+            j.get("generator").unwrap().as_str().unwrap(),
+            "xdna-repro bench faults"
+        );
+        let config = j.get("config").unwrap();
+        assert_eq!(config.get("model").unwrap().as_str().unwrap(), "d2");
+        assert_eq!(config.get("epochs").unwrap().as_usize().unwrap(), EPOCHS);
+        assert_eq!(
+            config.get("fault_seed").unwrap().as_usize().unwrap(),
+            FAULT_SEED as usize
+        );
+        let rows = j.get("rows").unwrap().as_arr().unwrap();
+        assert_eq!(rows.len(), SCENARIOS.len());
+        for r in rows {
+            let r = r.as_obj().unwrap();
+            for key in [
+                "label",
+                "spec",
+                "losses",
+                "faults_seen",
+                "retried",
+                "recovered",
+                "fallback_steps",
+                "fallback_ops",
+                "quarantined",
+                "plan_cache_hits",
+                "plan_cache_misses",
+            ] {
+                assert!(r.contains_key(key), "row missing {key}");
+            }
+            assert_eq!(r["losses"].as_arr().unwrap().len(), EPOCHS);
+        }
+        // The compact serialization round-trips (what CI uploads).
+        assert_eq!(Json::parse(&j.to_string()).unwrap(), j);
+    }
+}

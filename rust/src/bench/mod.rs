@@ -8,6 +8,7 @@
 pub mod accuracy;
 pub mod arbiter;
 pub mod energy;
+pub mod faults;
 pub mod fig6;
 pub mod fig7;
 pub mod fig8;

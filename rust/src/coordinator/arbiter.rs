@@ -198,6 +198,10 @@ pub struct TenantReport {
     /// leased column is what keeps the fleet sum honest — tenants never
     /// double-count the array's idle draw.
     pub energy_j: f64,
+    /// The tenant's session quarantined its device (repeated faults or a
+    /// failed device-lost recovery; see `docs/RELIABILITY.md`) and
+    /// released its lease — any dedicated columns went back to the pool.
+    pub quarantined: bool,
 }
 
 /// Whole-array report across all tenants.
@@ -213,6 +217,9 @@ pub struct ArbiterReport {
     /// (`busy_s / done_s`): 1.0 = perfectly even, `1/n` = one tenant
     /// starved the rest.
     pub jain_index: f64,
+    /// Tenants whose sessions quarantined their device and released
+    /// their lease.
+    pub quarantined: usize,
     pub tenants: Vec<TenantReport>,
 }
 
@@ -422,6 +429,7 @@ impl ArbiterCore {
             device_busy_s: device_busy,
             utilization: if capacity > 0.0 { device_busy / capacity } else { 0.0 },
             jain_index: jain,
+            quarantined: tenants.iter().filter(|t| t.quarantined).count(),
             tenants,
         }
     }
@@ -574,6 +582,7 @@ impl DeviceArbiter {
                 wait_for_lease_s: 0.0,
                 barrier_s: 0.0,
                 energy_j: 0.0,
+                quarantined: false,
             },
             home,
             width: width.max(1),
@@ -628,6 +637,24 @@ impl ArbiterHandle {
         let mut core = lock(&self.core);
         core.drain();
         core.tenants[self.tenant].report.clone()
+    }
+
+    /// Release the lease because the tenant's session quarantined its
+    /// device: dedicated columns return to the pool (fair-share and
+    /// fixed tenants attached later can lease them), and the tenant is
+    /// marked so [`ArbiterReport`] records the quarantine. Already-placed
+    /// windows keep their charges — the work really happened. Called by
+    /// `OffloadSession` when it quarantines.
+    pub fn quarantine(&self) {
+        let mut core = lock(&self.core);
+        for c in 0..core.ncols {
+            if core.col_owner[c] == Some(self.tenant) {
+                core.col_owner[c] = None;
+            }
+        }
+        let t = &mut core.tenants[self.tenant];
+        t.home.clear();
+        t.report.quarantined = true;
     }
 }
 

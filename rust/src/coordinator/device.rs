@@ -86,6 +86,14 @@ pub trait ComputeDevice {
 
     /// Execute one staged kernel run.
     fn run(&mut self, op: DeviceRun<'_>) -> Result<DeviceSpan>;
+
+    /// Re-open the device after a context loss (firmware reset). The
+    /// session's device-lost recovery calls this before re-running
+    /// `prepare` for every registered size. Default: nothing to do — the
+    /// simulator and CPU reference hold no per-context state.
+    fn reopen(&mut self) -> Result<()> {
+        Ok(())
+    }
 }
 
 /// The XDNA simulator's functional datapath (default).

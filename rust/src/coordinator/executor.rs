@@ -571,8 +571,13 @@ impl<'c> ExecClient<'c> {
     fn settle(&mut self, d: Done) -> Result<()> {
         self.walls[d.seq] = d.wall_s;
         match d.result {
-            Err(e) => Err(Error::runtime(format!(
-                "op #{} failed during background execution: {e}",
+            // Annotate without collapsing the variant: the trainer's
+            // fault handling keys on the class (a divergence re-records,
+            // a device loss after quarantine falls back to host ops), so
+            // a fatal fault must classify identically whether it crossed
+            // the handoff queue or surfaced synchronously.
+            Err(e) => Err(e.contextualize(format!(
+                "op #{} failed during background execution",
                 d.seq
             ))),
             Ok(out) => {

@@ -1,0 +1,434 @@
+//! Fault injection and the fault-tolerance policy surface.
+//!
+//! The paper's bare-metal XRT path has real failure modes — transient
+//! kernel faults, stuck kernels, BO sync errors, context loss on a
+//! firmware reset — that the simulated stack never exhibits on its own.
+//! This module makes them reproducible:
+//!
+//! * [`FaultPlan`] — a deterministic schedule of faults keyed by device
+//!   run index (one index per per-strip [`ComputeDevice::run`] call),
+//!   built either from a seeded CLI spec (`transient:3,device-lost:1`)
+//!   or explicitly with [`FaultPlan::at`] in tests.
+//! * [`FaultInjector`] — a [`ComputeDevice`] wrapper that fires the
+//!   plan's faults *before* touching the inner device, so a failed run
+//!   never stages, programs, or writes anything: the invocation's
+//!   staged inputs are untouched and a re-run is idempotent.
+//! * [`RetryPolicy`] — how the session reacts ([`SessionConfig::retry`]):
+//!   transient faults re-run the invocation up to `max_retries` times,
+//!   device loss triggers the recovery path, and `quarantine_after`
+//!   consecutive failures (or a failed recovery) quarantine the device —
+//!   the dispatch layer then degrades to the host-op oracle
+//!   (`MatmulDispatch::HostFallback`) and the run keeps making progress.
+//! * [`classify`] — the error taxonomy: which [`Error`]s are transient,
+//!   which are a lost device, and which are fatal to the invocation.
+//!
+//! See `docs/RELIABILITY.md` for the full state machine.
+//!
+//! [`SessionConfig::retry`]: super::session::SessionConfig
+//! [`ComputeDevice::run`]: super::device::ComputeDevice::run
+
+use std::collections::BTreeMap;
+
+use super::device::{ComputeDevice, DeviceRun, DeviceSpan};
+use crate::gemm::sizes::ProblemSize;
+use crate::util::error::{Error, Result};
+use crate::util::rng::Rng;
+
+/// What kind of device fault fires at a planned run index.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// A one-shot execution fault (ECC blip, spurious kernel error).
+    /// Surfaces as [`Error::Npu`]; retryable.
+    Transient,
+    /// The kernel never completes. Surfaces as [`Error::Timeout`] — the
+    /// op deadline is the *detection mechanism*, so this is retryable
+    /// only when [`RetryPolicy::op_deadline_s`] is armed.
+    StuckKernel,
+    /// A buffer-object sync fault. Surfaces as [`Error::Xrt`]; retryable.
+    SyncError,
+    /// The device context is gone (firmware reset). Every subsequent run
+    /// fails until [`ComputeDevice::reopen`] succeeds; surfaces as
+    /// [`Error::DeviceLost`] and triggers the session's recovery path.
+    DeviceLost,
+}
+
+impl FaultKind {
+    fn parse(s: &str) -> Result<FaultKind> {
+        match s {
+            "transient" => Ok(FaultKind::Transient),
+            "stuck" => Ok(FaultKind::StuckKernel),
+            "sync" => Ok(FaultKind::SyncError),
+            "device-lost" => Ok(FaultKind::DeviceLost),
+            k => Err(Error::config(format!(
+                "unknown fault kind '{k}' (expected transient|stuck|sync|device-lost|quarantine)"
+            ))),
+        }
+    }
+}
+
+/// A deterministic schedule of faults keyed by device run index.
+#[derive(Debug, Clone, Default)]
+pub struct FaultPlan {
+    faults: BTreeMap<u64, FaultKind>,
+    /// When set, a fired [`FaultKind::DeviceLost`] is *permanent*: the
+    /// injector's `reopen` fails too, so recovery fails and the session
+    /// quarantines immediately (the CLI spec's `quarantine` token).
+    permanent_loss: bool,
+}
+
+impl FaultPlan {
+    pub fn new() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    /// Schedule `kind` at device run `index` (explicit test builder).
+    pub fn at(mut self, index: u64, kind: FaultKind) -> FaultPlan {
+        self.faults.insert(index, kind);
+        self
+    }
+
+    /// Make any fired device loss permanent (`reopen` fails).
+    pub fn permanent(mut self) -> FaultPlan {
+        self.permanent_loss = true;
+        self
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.faults.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.faults.len()
+    }
+
+    /// Parse a CLI fault spec into a deterministic plan: comma-separated
+    /// `kind:count` pairs (`transient:3,device-lost:1`) plus the bare
+    /// `quarantine` token (one *permanent* device loss). The requested
+    /// faults are shuffled and scattered over early run indices with a
+    /// fixed stride and seeded jitter, so two runs with the same spec
+    /// and seed inject identically — and the inter-fault gap is always
+    /// wide enough that one invocation's retries (a handful of strip
+    /// re-runs) can never collide with the next planned fault.
+    pub fn parse(spec: &str, seed: u64) -> Result<FaultPlan> {
+        let mut kinds: Vec<FaultKind> = Vec::new();
+        let mut permanent = false;
+        for part in spec.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            if part == "quarantine" {
+                kinds.push(FaultKind::DeviceLost);
+                permanent = true;
+                continue;
+            }
+            let (kind, count) = match part.split_once(':') {
+                Some((k, c)) => {
+                    let n: u64 = c.parse().map_err(|_| {
+                        Error::config(format!("bad fault count in '{part}' (expected kind:N)"))
+                    })?;
+                    (FaultKind::parse(k)?, n)
+                }
+                None => (FaultKind::parse(part)?, 1),
+            };
+            for _ in 0..count {
+                kinds.push(kind);
+            }
+        }
+        let mut rng = Rng::new(seed ^ 0x5EED_FA17);
+        // Fisher–Yates so the kinds interleave deterministically.
+        for i in (1..kinds.len()).rev() {
+            kinds.swap(i, rng.below(i + 1));
+        }
+        let mut plan = FaultPlan {
+            faults: BTreeMap::new(),
+            permanent_loss: permanent,
+        };
+        // Stride 24 + jitter < 12 keeps every inter-fault gap >= 12 run
+        // indices: more than one invocation's worth of strips even with
+        // retries, so a re-run cannot trip the next planned fault.
+        for (i, kind) in kinds.into_iter().enumerate() {
+            let index = (i as u64) * 24 + rng.below(12) as u64;
+            plan.faults.insert(index, kind);
+        }
+        Ok(plan)
+    }
+
+    fn fault_at(&self, index: u64) -> Option<FaultKind> {
+        self.faults.get(&index).copied()
+    }
+}
+
+/// A [`ComputeDevice`] wrapper that fires a [`FaultPlan`]'s faults.
+///
+/// Faults fire *instead of* the inner run — nothing is staged, programmed
+/// or written by a failed run, which is what makes the session's
+/// re-stage-and-re-run retry idempotent. The run counter advances on
+/// every call (including failed ones), so a retried invocation consumes
+/// fresh indices and each planned fault fires exactly once.
+pub struct FaultInjector {
+    inner: Box<dyn ComputeDevice + Send>,
+    plan: FaultPlan,
+    runs: u64,
+    lost: bool,
+}
+
+impl FaultInjector {
+    pub fn new(inner: Box<dyn ComputeDevice + Send>, plan: FaultPlan) -> FaultInjector {
+        FaultInjector {
+            inner,
+            plan,
+            runs: 0,
+            lost: false,
+        }
+    }
+
+    /// Device run calls observed so far (diagnostics).
+    pub fn runs(&self) -> u64 {
+        self.runs
+    }
+}
+
+impl ComputeDevice for FaultInjector {
+    fn name(&self) -> &'static str {
+        self.inner.name()
+    }
+
+    fn prepare(&mut self, size: ProblemSize) -> Result<()> {
+        if self.lost {
+            return Err(Error::device_lost(
+                "device context is gone; prepare refused until re-open",
+            ));
+        }
+        self.inner.prepare(size)
+    }
+
+    fn run(&mut self, op: DeviceRun<'_>) -> Result<DeviceSpan> {
+        let index = self.runs;
+        self.runs += 1;
+        if self.lost {
+            return Err(Error::device_lost(format!(
+                "device context is gone; run #{index} refused until re-open"
+            )));
+        }
+        match self.plan.fault_at(index) {
+            None => self.inner.run(op),
+            Some(FaultKind::Transient) => Err(Error::npu(format!(
+                "injected transient execution fault at device run #{index}"
+            ))),
+            Some(FaultKind::StuckKernel) => Err(Error::timeout(format!(
+                "injected stuck kernel at device run #{index}"
+            ))),
+            Some(FaultKind::SyncError) => Err(Error::xrt(format!(
+                "injected buffer sync error at device run #{index}"
+            ))),
+            Some(FaultKind::DeviceLost) => {
+                self.lost = true;
+                Err(Error::device_lost(format!(
+                    "injected context loss at device run #{index}"
+                )))
+            }
+        }
+    }
+
+    fn reopen(&mut self) -> Result<()> {
+        if self.plan.permanent_loss {
+            return Err(Error::device_lost(
+                "injected permanent context loss: device re-open failed",
+            ));
+        }
+        self.lost = false;
+        self.inner.reopen()
+    }
+}
+
+/// How the session reacts to device faults (`SessionConfig::retry`).
+///
+/// The retry policy never enters the plan-cache fingerprint: it changes
+/// how failures are handled, never what schedules cost or what GEMMs
+/// compute.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RetryPolicy {
+    /// Re-runs of one invocation after a retryable fault before the
+    /// failure is surfaced (0 disables retry).
+    pub max_retries: u32,
+    /// Host-side backoff slept between attempts (seconds; 0 = immediate).
+    pub backoff_s: f64,
+    /// Per-op deadline arming stuck-kernel detection. `None` means a
+    /// hung kernel has no detection mechanism: [`Error::Timeout`] is
+    /// then classified fatal rather than transient.
+    pub op_deadline_s: Option<f64>,
+    /// Consecutive device-run failures (no intervening success) before
+    /// the session quarantines the device and degrades to the host-op
+    /// oracle.
+    pub quarantine_after: u32,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy {
+            max_retries: 2,
+            backoff_s: 0.0,
+            op_deadline_s: None,
+            quarantine_after: 3,
+        }
+    }
+}
+
+/// Fault/retry/recovery/fallback counters a session accumulates; snapshot
+/// into `StepReport` / `ServeReport` so every layer above can surface
+/// them. All counts are cumulative over the session's lifetime.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultCounters {
+    /// Device-op failures observed (every failed run attempt).
+    pub seen: u64,
+    /// Transient re-runs performed (re-stage + re-run of an invocation).
+    pub retried: u64,
+    /// Successful device-lost recoveries (re-open + re-prepare + resume).
+    pub recovered: u64,
+    /// Whole steps the trainer/server degraded to the host-op oracle.
+    pub fallback_steps: u64,
+    /// Individual matmuls computed on the host-op oracle after quarantine.
+    pub fallback_ops: u64,
+    /// Serve requests retired early by the per-request decode deadline.
+    pub expired_requests: u64,
+    /// The device is quarantined: every later op runs on the host oracle.
+    pub quarantined: bool,
+}
+
+/// How the retry loop treats one error.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultClass {
+    /// Re-stage and re-run the invocation (idempotent: a failed run left
+    /// the staged buffers untouched).
+    Transient,
+    /// Run the device-lost recovery path, then re-run.
+    DeviceLost,
+    /// Surface to the caller (shape/config bugs, plan divergence — which
+    /// has its own recovery, re-recording — and unarmed timeouts).
+    Fatal,
+}
+
+/// Classify an error under a retry policy. Device faults (`Npu`, `Xrt`,
+/// `Runtime`) are transient; `Timeout` is transient only when the policy
+/// arms an op deadline; `DeviceLost` routes to recovery; everything else
+/// (shape, config, I/O, plan divergence) is not a device fault and is
+/// surfaced untouched.
+pub fn classify(e: &Error, policy: &RetryPolicy) -> FaultClass {
+    match e {
+        Error::DeviceLost(_) => FaultClass::DeviceLost,
+        Error::Timeout(_) => {
+            if policy.op_deadline_s.is_some() {
+                FaultClass::Transient
+            } else {
+                FaultClass::Fatal
+            }
+        }
+        Error::Npu(_) | Error::Xrt(_) | Error::Runtime(_) => FaultClass::Transient,
+        Error::Shape(_) | Error::Config(_) | Error::Io(_) | Error::PlanDivergence(_) => {
+            FaultClass::Fatal
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::device::SimulatorDevice;
+    use super::*;
+
+    #[test]
+    fn spec_parses_and_scatters_deterministically() {
+        let a = FaultPlan::parse("transient:3,device-lost:1", 7).unwrap();
+        let b = FaultPlan::parse("transient:3,device-lost:1", 7).unwrap();
+        assert_eq!(a.faults, b.faults, "same spec + seed must inject identically");
+        assert_eq!(a.len(), 4);
+        assert!(!a.permanent_loss);
+        let idx: Vec<u64> = a.faults.keys().copied().collect();
+        for w in idx.windows(2) {
+            assert!(w[1] - w[0] >= 12, "inter-fault gap too small: {idx:?}");
+        }
+        let c = FaultPlan::parse("transient:3,device-lost:1", 8).unwrap();
+        assert_ne!(a.faults, c.faults, "a different seed scatters differently");
+
+        let q = FaultPlan::parse("quarantine", 1).unwrap();
+        assert!(q.permanent_loss);
+        assert_eq!(q.len(), 1);
+        assert!(FaultPlan::parse("", 1).unwrap().is_empty());
+        assert!(FaultPlan::parse("meteor:2", 1).is_err());
+        assert!(FaultPlan::parse("transient:x", 1).is_err());
+    }
+
+    #[test]
+    fn injector_fires_each_fault_once_and_loss_persists_until_reopen() {
+        use crate::gemm::tiling::Tiling;
+        use crate::npu::gemm_design;
+        use crate::xrt::{SyncDirection, XrtDevice};
+
+        let size = ProblemSize::new(64, 64, 128);
+        let t = Tiling::paper(size).unwrap();
+        let mut xrt = XrtDevice::open();
+        xrt.register_xclbin(&gemm_design::build_static_config(t.tiles)).unwrap();
+        xrt.issue_instructions(&gemm_design::build_instruction_stream(&t)).unwrap();
+        let mut a_bo = xrt.alloc_bo(t.m_padded * size.k);
+        let mut b_bo = xrt.alloc_bo(size.k * size.n);
+        let mut c_bo = xrt.alloc_bo(size.m * size.n);
+        a_bo.map_mut().fill(1.0);
+        b_bo.map_mut().fill(0.5);
+        xrt.sync_bo(&mut a_bo, SyncDirection::ToDevice);
+        xrt.sync_bo(&mut b_bo, SyncDirection::ToDevice);
+
+        let plan = FaultPlan::new()
+            .at(1, FaultKind::Transient)
+            .at(3, FaultKind::DeviceLost);
+        let mut dev = FaultInjector::new(Box::new(SimulatorDevice), plan);
+        dev.prepare(size).unwrap();
+
+        let run = |dev: &mut FaultInjector, xrt: &mut XrtDevice, c: &mut _| {
+            dev.run(DeviceRun {
+                xrt,
+                tiling: &t,
+                logical: size,
+                a: &a_bo,
+                b: &b_bo,
+                c,
+            })
+        };
+        // Run 0 passes through, run 1 injects a transient, run 2 (the
+        // retry) passes again, run 3 loses the context.
+        run(&mut dev, &mut xrt, &mut c_bo).unwrap();
+        let e = run(&mut dev, &mut xrt, &mut c_bo).unwrap_err();
+        assert!(matches!(e, Error::Npu(_)), "{e}");
+        run(&mut dev, &mut xrt, &mut c_bo).unwrap();
+        let e = run(&mut dev, &mut xrt, &mut c_bo).unwrap_err();
+        assert!(e.is_device_lost(), "{e}");
+        // Loss persists across run and prepare until reopen.
+        assert!(run(&mut dev, &mut xrt, &mut c_bo).unwrap_err().is_device_lost());
+        assert!(dev.prepare(size).unwrap_err().is_device_lost());
+        dev.reopen().unwrap();
+        dev.prepare(size).unwrap();
+        run(&mut dev, &mut xrt, &mut c_bo).unwrap();
+        assert_eq!(dev.runs(), 6);
+    }
+
+    #[test]
+    fn permanent_loss_fails_reopen() {
+        let plan = FaultPlan::new().at(0, FaultKind::DeviceLost).permanent();
+        let mut dev = FaultInjector::new(Box::new(SimulatorDevice), plan);
+        assert!(dev.reopen().unwrap_err().is_device_lost());
+    }
+
+    #[test]
+    fn classification_follows_the_policy() {
+        let p = RetryPolicy::default();
+        assert_eq!(classify(&Error::npu("x"), &p), FaultClass::Transient);
+        assert_eq!(classify(&Error::xrt("x"), &p), FaultClass::Transient);
+        assert_eq!(classify(&Error::runtime("x"), &p), FaultClass::Transient);
+        assert_eq!(classify(&Error::device_lost("x"), &p), FaultClass::DeviceLost);
+        assert_eq!(classify(&Error::plan_divergence("x"), &p), FaultClass::Fatal);
+        assert_eq!(classify(&Error::shape("x"), &p), FaultClass::Fatal);
+        // A timeout is transient only when the deadline that detects it
+        // is armed.
+        assert_eq!(classify(&Error::timeout("x"), &p), FaultClass::Fatal);
+        let armed = RetryPolicy {
+            op_deadline_s: Some(0.5),
+            ..RetryPolicy::default()
+        };
+        assert_eq!(classify(&Error::timeout("x"), &armed), FaultClass::Transient);
+    }
+}

@@ -33,6 +33,14 @@
 //!   steady-state variants agree), and per-tenant accounting surfaces as
 //!   [`arbiter::TenantReport`]s with Jain-fairness in the array-wide
 //!   [`arbiter::ArbiterReport`].
+//! * [`faults`] — the fault-tolerance rung: [`faults::FaultInjector`]
+//!   wraps any [`device::ComputeDevice`] with a deterministic, seeded
+//!   [`faults::FaultPlan`] (transient faults, stuck kernels, sync errors,
+//!   context loss), and [`faults::RetryPolicy`] tells the session how to
+//!   react — transient retry with backoff, device-lost recovery
+//!   (re-open + re-prepare + resume the frozen plan), and quarantine to
+//!   the host-op oracle after repeated failures (see
+//!   `docs/RELIABILITY.md`).
 //! * [`scheduler`] — [`scheduler::Scheduler`]: orders a submission window
 //!   (the eager ring's staged ops, or a full recorded step) within data
 //!   dependencies to batch same-size invocations and amortize
@@ -50,6 +58,7 @@ pub mod backend;
 pub mod device;
 pub mod engine;
 pub mod executor;
+pub mod faults;
 pub mod plan;
 pub mod reconfig;
 pub mod scheduler;
@@ -62,6 +71,9 @@ pub use arbiter::{
 pub use device::{ComputeDevice, DeviceRun, DeviceSpan, SimulatorDevice};
 pub use engine::{EngineConfig, ExecMode, GemmOffloadEngine, PAIRED_SLOTS};
 pub use executor::{run_replay_step, ExecClient, ExecHandle, ExecutorMode};
+pub use faults::{
+    classify, FaultClass, FaultCounters, FaultInjector, FaultKind, FaultPlan, RetryPolicy,
+};
 pub use plan::{
     CachedStep, PlanCache, PlanCacheMode, PlanNode, PlanOp, PlanReplay, StepPlan, StepReport,
     StepSignature,

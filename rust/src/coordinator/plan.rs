@@ -757,8 +757,19 @@ impl PlanCache {
             ("fingerprint", Json::str(format!("{fingerprint:016x}"))),
             ("entries", Json::Arr(entries)),
         ]);
-        std::fs::write(path, format!("{root}\n"))
-            .map_err(|e| Error::config(format!("cannot write plan cache {path}: {e}")))?;
+        // Atomic save: write a temp file in the same directory, then
+        // rename over the target. A crash mid-save leaves at worst a
+        // stale temp file — never a truncated cache at `path` (and a
+        // truncated file would only be a recoverable miss anyway; see
+        // `load_from`). Same-directory keeps the rename on one
+        // filesystem, where it replaces the target atomically.
+        let tmp = format!("{path}.tmp");
+        std::fs::write(&tmp, format!("{root}\n"))
+            .map_err(|e| Error::config(format!("cannot write plan cache {tmp}: {e}")))?;
+        std::fs::rename(&tmp, path).map_err(|e| {
+            std::fs::remove_file(&tmp).ok();
+            Error::config(format!("cannot commit plan cache {path}: {e}"))
+        })?;
         Ok(n)
     }
 
@@ -1079,6 +1090,10 @@ pub struct StepReport {
     /// device time hidden in *wallclock*, not just on the modeled
     /// timeline.
     pub wall_blocked_s: f64,
+    /// Snapshot of the session's cumulative fault/retry/recovery/fallback
+    /// counters after this step (see `docs/RELIABILITY.md`). All-default
+    /// on a fault-free run.
+    pub faults: super::faults::FaultCounters,
 }
 
 impl StepReport {

@@ -43,6 +43,7 @@ use crate::xrt::{BufferObject, SyncDirection, XrtDevice};
 
 use super::arbiter::{ArbiterHandle, ColumnQuota, DeviceArbiter, WindowCharge};
 use super::device::{ComputeDevice, DeviceRun, SimulatorDevice};
+use super::faults::{classify, FaultClass, FaultCounters, RetryPolicy};
 use super::plan::{
     CachedStep, FusedEpilogue, PlanCache, PlanNode, PlanOp, PlanReplay, PlannedOp, StepPlan,
     StepReport,
@@ -289,6 +290,12 @@ pub struct SessionConfig {
     /// [`Objective::default_for`]; the session itself defaults to the seed
     /// behavior, Makespan.
     pub objective: Objective,
+    /// How the session reacts to device faults: transient retry with
+    /// backoff, device-lost recovery, quarantine after repeated failures
+    /// (see `docs/RELIABILITY.md`). Never enters the plan-cache
+    /// fingerprint — it changes failure handling, not what steps compute
+    /// or cost.
+    pub retry: RetryPolicy,
 }
 
 impl Default for SessionConfig {
@@ -302,6 +309,7 @@ impl Default for SessionConfig {
             prefetch: PrefetchHorizon::default(),
             profile: DeviceProfile::xdna1(),
             objective: Objective::Makespan,
+            retry: RetryPolicy::default(),
         }
     }
 }
@@ -538,6 +546,16 @@ pub struct OffloadSession {
     arbiter: Option<ArbiterHandle>,
     /// Local-timeline snapshot at the last arbiter charge point.
     arb_mark: ArbiterMark,
+    /// Fault-handling policy ([`SessionConfig::retry`]).
+    retry: RetryPolicy,
+    /// Cumulative fault/retry/recovery/fallback counters; snapshot into
+    /// every [`StepReport`]. Public so the dispatch layer above
+    /// (`MatmulDispatch::HostFallback`) and the trainer/server can count
+    /// host-fallback work and expired requests on the same ledger.
+    pub faults: FaultCounters,
+    /// Device-run failures with no intervening success — the quarantine
+    /// trigger ([`RetryPolicy::quarantine_after`]).
+    consecutive_failures: u32,
 }
 
 /// Snapshot of the local timeline at the last window boundary; the next
@@ -1079,6 +1097,9 @@ impl OffloadSession {
             next_seq: 0,
             arbiter: None,
             arb_mark: ArbiterMark::default(),
+            retry: cfg.retry,
+            faults: FaultCounters::default(),
+            consecutive_failures: 0,
         };
         for &s in sizes {
             session.register_size(s)?;
@@ -1511,10 +1532,22 @@ impl OffloadSession {
                 .registry
                 .remove(&pend.size)
                 .expect("pending implies registered");
-            if let Err(e) = self.execute_one(&mut prep, &mut pend) {
-                pend.state = OpState::Failed(e.to_string());
-            }
+            let result = self.execute_one(&mut prep, &mut pend);
             self.registry.insert(pend.size, prep);
+            match result {
+                Ok(()) => self.consecutive_failures = 0,
+                Err(e) => {
+                    // Eager ops are never re-run (a mid-op failure leaves
+                    // completed strips' modeled charges standing — re-running
+                    // would double-count kernel time), so the op is poisoned
+                    // as always and the error surfaces at its wait(). The
+                    // session still counts the fault, recovers a lost
+                    // context, and quarantines on repeated failures so later
+                    // work makes progress.
+                    self.note_device_failure(&e);
+                    pend.state = OpState::Failed(e.to_string());
+                }
+            }
             let pos = pos.min(self.pending.len());
             self.pending.insert(pos, pend);
         }
@@ -1917,13 +1950,149 @@ impl OffloadSession {
         }
     }
 
+    /// Is the device quarantined? After [`RetryPolicy::quarantine_after`]
+    /// consecutive device failures (or a failed device-lost recovery) the
+    /// session stops dispatching to the device; callers degrade to the
+    /// host-op oracle (`MatmulDispatch::HostFallback`) and keep making
+    /// progress bit-identically.
+    pub fn quarantined(&self) -> bool {
+        self.faults.quarantined
+    }
+
+    /// The session's fault-handling policy (diagnostics).
+    pub fn retry_policy(&self) -> &RetryPolicy {
+        &self.retry
+    }
+
+    /// Quarantine the device: no later invocation touches it, and an
+    /// attached arbiter lease is released so other tenants can use the
+    /// columns this session no longer will.
+    fn quarantine(&mut self) {
+        self.faults.quarantined = true;
+        if let Some(h) = &self.arbiter {
+            h.quarantine();
+        }
+    }
+
+    /// Device-lost recovery: re-open the device, re-run `prepare` for
+    /// every registered strip size, and force the next strip to replay
+    /// the reconfiguration (the array's programming died with the
+    /// context). The registry's staged BOs and telemetry survive — the
+    /// simulated host runtime outlives the device context — so a
+    /// recovered session resumes the frozen plan from the op that
+    /// failed rather than re-recording the step.
+    fn recover_device(&mut self) -> Result<()> {
+        self.device
+            .reopen()
+            .map_err(|e| e.contextualize("device-lost recovery"))?;
+        for prep in self.registry.values() {
+            for strip in &prep.strips {
+                self.device
+                    .prepare(strip.logical)
+                    .map_err(|e| e.contextualize("device-lost recovery: re-prepare"))?;
+            }
+        }
+        self.current_strip = None;
+        Ok(())
+    }
+
+    /// Account one failed device run and decide what happens next. Shared
+    /// by the planned retry loop and the eager drain: bumps the fault
+    /// counters, quarantines after [`RetryPolicy::quarantine_after`]
+    /// consecutive failures or a failed device-lost recovery, and runs
+    /// the recovery path on a lost context. Returns the class the caller
+    /// should act on — `Transient` means the invocation may be re-run
+    /// (recovered device losses report as `Transient` too: the device is
+    /// healthy again), `Fatal` means surface the error.
+    fn note_device_failure(&mut self, e: &Error) -> FaultClass {
+        match classify(e, &self.retry) {
+            // Not a device fault (shape/config bugs, plan divergence —
+            // which has its own recovery, re-recording): no counters.
+            FaultClass::Fatal => FaultClass::Fatal,
+            class => {
+                self.faults.seen += 1;
+                self.consecutive_failures += 1;
+                if self.consecutive_failures >= self.retry.quarantine_after {
+                    self.quarantine();
+                    return FaultClass::Fatal;
+                }
+                match class {
+                    FaultClass::DeviceLost => match self.recover_device() {
+                        Ok(()) => {
+                            self.faults.recovered += 1;
+                            FaultClass::Transient
+                        }
+                        Err(_) => {
+                            self.quarantine();
+                            FaultClass::Fatal
+                        }
+                    },
+                    class => class,
+                }
+            }
+        }
+    }
+
+    /// Run one complete physical invocation under the session's
+    /// [`RetryPolicy`]: retryable faults re-stage and re-run the
+    /// invocation (idempotent — a failed run leaves the staged slot and
+    /// the caller's buffers untouched), a lost device runs the recovery
+    /// path, and repeated failures quarantine the device. The modeled
+    /// stage durations captured are the *successful* attempt's, so a
+    /// retried step replays the same frozen schedule.
+    fn run_invocation(
+        &mut self,
+        size: ProblemSize,
+        a_layout: InputLayout,
+        b_layout: InputLayout,
+        a: &[f32],
+        b: &[f32],
+        c: &mut [f32],
+    ) -> Result<InvocationCapture> {
+        if self.faults.quarantined {
+            return Err(Error::device_lost(
+                "session is quarantined after repeated device failures; \
+                 dispatch this op on the host oracle",
+            ));
+        }
+        let mut attempts = 0u32;
+        loop {
+            let e = match self.run_invocation_once(size, a_layout, b_layout, a, b, c) {
+                Ok(cap) => {
+                    self.consecutive_failures = 0;
+                    return Ok(cap);
+                }
+                Err(e) => e,
+            };
+            match self.note_device_failure(&e) {
+                FaultClass::Fatal => return Err(e),
+                // A recovered device loss re-runs without consuming a
+                // transient-retry attempt; a transient fault retries up
+                // to `max_retries` times with host-side backoff.
+                _ if e.is_device_lost() => {}
+                _ => {
+                    if attempts >= self.retry.max_retries {
+                        return Err(e.contextualize(format!(
+                            "retries exhausted after {attempts} re-run(s)"
+                        )));
+                    }
+                    attempts += 1;
+                    self.faults.retried += 1;
+                    if self.retry.backoff_s > 0.0 {
+                        std::thread::sleep(Duration::from_secs_f64(self.retry.backoff_s));
+                    }
+                }
+            }
+        }
+    }
+
     /// Run one complete physical invocation — stage, sync, the shared
     /// per-strip device loop, merge — and capture its modeled stage
     /// durations. The common numerics body of [`Self::record_gemm`] and
     /// [`Self::replay_gemm`]: nothing is charged to the modeled timeline
     /// here (that is the replay's job); wallclock accrues to
     /// [`Self::stages`] as always.
-    fn run_invocation(
+    fn run_invocation_once(
         &mut self,
         size: ProblemSize,
         a_layout: InputLayout,
@@ -2166,6 +2335,7 @@ impl OffloadSession {
                 wall_blocked_s: 0.0,
                 resident_edges: 0,
                 elementwise_ops: 0,
+                faults: self.faults.clone(),
             });
         }
         let window = plan_window(&plan.ops);
@@ -2210,6 +2380,7 @@ impl OffloadSession {
             wall_blocked_s: wall_gemm_s,
             resident_edges,
             elementwise_ops,
+            faults: self.faults.clone(),
         })
     }
 
@@ -2739,6 +2910,7 @@ impl OffloadSession {
             wall_blocked_s,
             resident_edges,
             elementwise_ops,
+            faults: self.faults.clone(),
         })
     }
 

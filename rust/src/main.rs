@@ -19,7 +19,10 @@ use xdna_repro::coordinator::plan::{PlanCache, PlanCacheMode};
 use xdna_repro::coordinator::session::{
     InputLayout, OffloadSession, QueueDepth, SessionConfig, ShardPolicy, Shards,
 };
-use xdna_repro::coordinator::{ColumnQuota, DeviceArbiter, ReconfigPolicy, SchedulePolicy};
+use xdna_repro::coordinator::{
+    ColumnQuota, ComputeDevice, DeviceArbiter, FaultInjector, FaultPlan, ReconfigPolicy,
+    RetryPolicy, SchedulePolicy, SimulatorDevice,
+};
 use xdna_repro::gemm::sizes::{distinct_sizes, ModelDims, ProblemSize};
 use xdna_repro::model::data::{load_checkpoint, save_checkpoint, synthetic_corpus, DataLoader};
 use xdna_repro::model::trainer::{train, TrainBackend, TrainConfig};
@@ -44,6 +47,8 @@ USAGE:
                       [--plan-cache on|off] [--plan-cache-file PATH]
                       [--executor sync|background] [--block-offload on|off]
                       [--target xdna1|xdna2] [--objective makespan|energy]
+                      [--faults SPEC] [--fault-seed S] [--retry N]
+                      [--op-deadline-ms MS]
                       [--save ckpt.bin] [--seed S]
   xdna-repro gemm     [--m M --k K --n N] [--backend cpu|npu]
                       [--shards auto|N]
@@ -57,8 +62,10 @@ USAGE:
                       [--admission fifo|latency] [--tenants N]
                       [--quota fair|fixed:N]
                       [--target xdna1|xdna2] [--objective makespan|energy]
+                      [--faults SPEC] [--fault-seed S] [--retry N]
+                      [--op-deadline-ms MS] [--request-timeout-ms MS]
   xdna-repro bench    [fig6|fig7|fig8|fig9|pipeline|reconfig|accuracy|
-                       host-model|serve|arbiter|energy|all]
+                       host-model|serve|arbiter|energy|faults|all]
                       [--json report.json] [--calibrate]
   xdna-repro inspect  [flops|sizes|npu]
 
@@ -108,7 +115,18 @@ USAGE:
   simulation optimizes; it defaults to energy on --power battery (the
   paper's FLOPS/Ws metric) and makespan otherwise. `bench energy` prices
   the full target x power x objective ladder on one GPT-2 124M step.
-  See docs/SCHEDULING.md.
+  --faults SPEC injects a deterministic schedule of device faults
+  (comma-separated kind:count pairs over transient|stuck|sync|device-lost
+  plus the bare `quarantine` token for a permanent context loss),
+  scattered by --fault-seed. The session retries transient faults up to
+  --retry times (re-stage + re-run, bit-identical), recovers lost device
+  contexts (re-open, re-prepare, resume the frozen plan), and after
+  repeated failures quarantines the device and degrades to the host-op
+  oracle — the run keeps making progress. --op-deadline-ms arms stuck-
+  kernel detection (an unarmed timeout is fatal). On serve,
+  --request-timeout-ms retires any request whose decode overruns its
+  admission time plus the budget, keeping its partial stream. `bench
+  faults` prices the whole chaos ladder. See docs/RELIABILITY.md.
 ";
 
 fn main() {
@@ -138,6 +156,47 @@ fn dispatch(raw: Vec<String>) -> Result<()> {
         "inspect" => cmd_inspect(&args),
         other => Err(Error::config(format!("unknown command '{other}'\n{USAGE}"))),
     }
+}
+
+/// Parse the shared fault-tolerance flags: `--faults SPEC` (scattered by
+/// `--fault-seed`) wraps the session's device in a [`FaultInjector`];
+/// `--retry N` and `--op-deadline-ms MS` shape its [`RetryPolicy`].
+fn fault_options(args: &Args) -> Result<(Box<dyn ComputeDevice + Send>, RetryPolicy)> {
+    let mut retry = RetryPolicy {
+        max_retries: args.get_parse("retry", RetryPolicy::default().max_retries)?,
+        ..RetryPolicy::default()
+    };
+    if let Some(ms) = args.get("op-deadline-ms") {
+        let ms: f64 = ms
+            .parse()
+            .map_err(|_| Error::config(format!("bad --op-deadline-ms '{ms}'")))?;
+        retry.op_deadline_s = Some(ms / 1e3);
+    }
+    let device: Box<dyn ComputeDevice + Send> = match args.get("faults") {
+        Some(spec) => {
+            let seed = args.get_parse("fault-seed", 17u64)?;
+            Box::new(FaultInjector::new(
+                Box::new(SimulatorDevice),
+                FaultPlan::parse(spec, seed)?,
+            ))
+        }
+        None => Box::new(SimulatorDevice),
+    };
+    Ok((device, retry))
+}
+
+/// The greppable one-line fault-tolerance summary (CI's chaos smoke
+/// contract — keep the shape in sync with `examples/finetune.rs`).
+fn fault_report_line(f: &xdna_repro::coordinator::FaultCounters) -> String {
+    format!(
+        "fault tolerance: {} fault(s) injected, {} transient retry(s), \
+         {} device recovery(s), {} host-fallback step(s), quarantined {}",
+        f.seen,
+        f.retried,
+        f.recovered,
+        f.fallback_steps,
+        if f.quarantined { "yes" } else { "no" }
+    )
 }
 
 fn cmd_train(args: &Args) -> Result<()> {
@@ -210,14 +269,17 @@ fn cmd_train(args: &Args) -> Result<()> {
     let stats = match args.get_or("backend", "npu") {
         "cpu" => train(&mut model, &mut loader, &mut TrainBackend::Cpu, &tc)?,
         "npu" => {
+            let (device, retry) = fault_options(args)?;
             let mut sess = OffloadSession::new(
                 SessionConfig {
                     policy,
+                    device,
                     depth,
                     shards,
                     schedule,
                     profile: profile.clone(),
                     objective,
+                    retry,
                     ..Default::default()
                 },
                 &[],
@@ -259,6 +321,7 @@ fn cmd_train(args: &Args) -> Result<()> {
                 sess.registered_sizes().len(),
                 sess.modeled_energy_j
             );
+            println!("{}", fault_report_line(&sess.faults));
             if plan && plan_cache {
                 println!(
                     "plan cache: {} hit(s), {} miss(es) — recorded {} step(s), replayed {}",
@@ -413,6 +476,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // (latency) unless asked for explicitly.
     let profile = args.get_parse("target", DeviceProfile::xdna1())?;
     let objective = args.get_parse("objective", Objective::Makespan)?;
+    let request_timeout_s = match args.get("request-timeout-ms") {
+        Some(ms) => Some(
+            ms.parse::<f64>()
+                .map_err(|_| Error::config(format!("bad --request-timeout-ms '{ms}'")))?
+                / 1e3,
+        ),
+        None => None,
+    };
     if tenants == 0 {
         return Err(Error::config("--tenants must be at least 1"));
     }
@@ -433,6 +504,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         temperature,
         kv_cache: kv,
         admission,
+        request_timeout_s,
     };
     let use_cache = plan_cache && kv.enabled();
     let load_model = || -> Result<Gpt2Model> {
@@ -525,13 +597,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
 
     let mut model = load_model()?;
+    let (device, retry) = fault_options(args)?;
     let mut sess = OffloadSession::new(
         SessionConfig {
+            device,
             depth,
             shards,
             schedule,
             profile,
             objective,
+            retry,
             ..Default::default()
         },
         &[],
@@ -568,8 +643,20 @@ fn cmd_serve(args: &Args) -> Result<()> {
             report.plan_cache_hits
         );
     }
+    println!("{}", fault_report_line(&report.faults));
+    if request_timeout_s.is_some() {
+        println!(
+            "request deadline: {} request(s) retired at the decode deadline",
+            report.expired_requests()
+        );
+    }
     for g in &report.generations {
-        println!("request {}: {:?}", g.id, g.tokens);
+        println!(
+            "request {}: {:?}{}",
+            g.id,
+            g.tokens,
+            if g.expired { " (expired at deadline)" } else { "" }
+        );
     }
     Ok(())
 }
@@ -588,10 +675,12 @@ fn cmd_bench(args: &Args) -> Result<()> {
             "serve" => paperbench::serve::json_report(),
             "arbiter" => paperbench::arbiter::json_report(),
             "energy" => paperbench::energy::json_report(),
+            "faults" => paperbench::faults::json_report(),
             _ => {
                 return Err(Error::config(format!(
                     "--json is only available for `bench pipeline`, `bench serve`, \
-                     `bench arbiter`, `bench energy`, or `all`, not `bench {which}`"
+                     `bench arbiter`, `bench energy`, `bench faults`, or `all`, \
+                     not `bench {which}`"
                 )))
             }
         };
@@ -616,6 +705,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
         "serve" => paperbench::serve::print(),
         "arbiter" => paperbench::arbiter::print(),
         "energy" => paperbench::energy::print(),
+        "faults" => paperbench::faults::print(),
         "host-model" => {
             if args.flag("calibrate") {
                 paperbench::host_model::print_calibration();
@@ -636,6 +726,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
             paperbench::serve::print();
             paperbench::arbiter::print();
             paperbench::energy::print();
+            paperbench::faults::print();
         }
         other => return Err(Error::config(format!("unknown bench '{other}'"))),
     }

@@ -18,6 +18,7 @@
 //! KV-cached, batched, plan-replayed decode is **bit-identical** to
 //! recomputing the full window per token, request by request.
 
+use crate::coordinator::faults::FaultCounters;
 use crate::coordinator::plan::{PlanCache, StepPlan};
 use crate::coordinator::session::OffloadSession;
 use crate::util::error::{Error, Result};
@@ -63,6 +64,9 @@ pub struct Generation {
     /// from — the bit-identity probe the test suite compares across
     /// serve configurations.
     pub final_logits: Vec<f32>,
+    /// The request hit its decode deadline (`--request-timeout-ms`) and
+    /// was retired with this partial token stream.
+    pub expired: bool,
 }
 
 /// How the serving loop picks the next pending request when a batch slot
@@ -114,6 +118,12 @@ pub struct ServeConfig {
     pub kv_cache: KvCacheMode,
     /// Which pending request a free batch slot admits.
     pub admission: AdmissionPolicy,
+    /// Per-request decode deadline on the modeled clock
+    /// (`--request-timeout-ms`): a request whose generation runs past
+    /// its admission time plus this budget is retired with its partial
+    /// stream and marked [`Generation::expired`]. `None` (the default)
+    /// never expires anything.
+    pub request_timeout_s: Option<f64>,
 }
 
 impl Default for ServeConfig {
@@ -123,6 +133,7 @@ impl Default for ServeConfig {
             temperature: 0.8,
             kv_cache: KvCacheMode::On,
             admission: AdmissionPolicy::Fifo,
+            request_timeout_s: None,
         }
     }
 }
@@ -148,6 +159,18 @@ pub struct ServeReport {
     pub admission_waits_s: Vec<f64>,
     pub plan_cache_hits: u64,
     pub plan_cache_misses: u64,
+    /// Snapshot of the session's cumulative fault-tolerance counters at
+    /// the end of the run (all-default on a fault-free session). The
+    /// `expired_requests` field counts deadline retirements, which this
+    /// serving loop records on the session as they happen.
+    pub faults: FaultCounters,
+}
+
+impl ServeReport {
+    /// Requests retired at their decode deadline with a partial stream.
+    pub fn expired_requests(&self) -> usize {
+        self.generations.iter().filter(|g| g.expired).count()
+    }
 }
 
 impl ServeReport {
@@ -296,6 +319,7 @@ pub fn serve(
         report.plan_cache_hits = c.hits() - hits0;
         report.plan_cache_misses = c.misses() - misses0;
     }
+    report.faults = session.faults.clone();
     Ok(report)
 }
 
@@ -356,7 +380,10 @@ fn serve_kv(
         report.steps += 1;
         report.modeled_s += dt;
 
-        // Sample every active request's next token; retire the finished.
+        // Sample every active request's next token; retire the finished
+        // and the expired. A deadline retirement shrinks the batch, and
+        // the occupancy change is the usual recoverable divergence — the
+        // next step just re-records.
         let vp = mcfg.padded_vocab_size;
         for (i, a) in active.iter_mut().enumerate() {
             let logits = &scratch.logits[i * vp..(i + 1) * vp];
@@ -367,8 +394,17 @@ fn serve_kv(
             report.latencies_s.push(dt);
             report.tokens += 1;
             a.remaining -= 1;
+            let expired = matches!(
+                cfg.request_timeout_s,
+                Some(t) if report.modeled_s - report.admission_waits_s[a.idx] > t
+            );
             if a.remaining == 0 {
                 g.final_logits = logits.to_vec();
+            } else if expired {
+                g.final_logits = logits.to_vec();
+                g.expired = true;
+                session.faults.expired_requests += 1;
+                a.remaining = 0;
             } else {
                 a.token = next;
                 a.pos += 1;
@@ -395,9 +431,22 @@ fn admit(
     let mut kv = KvCache::new(&model.cfg);
     if p_len > 1 {
         let before = session.pipeline.makespan_s();
-        {
+        let prefill = (|| -> Result<()> {
             let mut d = MatmulDispatch::Npu(&mut *session);
             model.forward(&mut d, &req.prompt[..p_len - 1], None, 1, p_len - 1)?;
+            Ok(())
+        })();
+        match prefill {
+            Ok(()) => {}
+            // Quarantined mid-prefill: re-run the whole prompt on the
+            // host oracle (forward is deterministic and overwrites the
+            // activation arena in place).
+            Err(_) if session.quarantined() => {
+                session.faults.fallback_steps += 1;
+                let mut d = MatmulDispatch::HostFallback(&mut *session);
+                model.forward(&mut d, &req.prompt[..p_len - 1], None, 1, p_len - 1)?;
+            }
+            Err(e) => return Err(e),
         }
         kv.load_prefill(model.acts.as_ref().unwrap(), p_len - 1);
         let dt = session.pipeline.makespan_s() - before;
@@ -426,6 +475,11 @@ fn run_decode_step(
     active: &mut [ActiveGen],
     scratch: &mut DecodeActs,
 ) -> Result<()> {
+    // A quarantined session never reaches the device again: decode
+    // degrades to the host oracle and skips the plan cache entirely.
+    if session.quarantined() {
+        return host_decode_step(mcfg, params, session, active, scratch);
+    }
     let mut replayed = false;
     if let Some(c) = cache.as_deref_mut() {
         if let Some(mut replay) = session.begin_replay(c) {
@@ -443,9 +497,18 @@ fn run_decode_step(
                         replayed = true;
                     }
                     Err(e) if e.is_plan_divergence() => {}
+                    Err(_) if session.quarantined() => {
+                        return host_decode_step(mcfg, params, session, active, scratch);
+                    }
                     Err(e) => return Err(e),
                 },
                 Err(e) if e.is_plan_divergence() => {}
+                // Quarantined mid-replay: the step re-runs on the host
+                // oracle (decode is deterministic and KV writes are
+                // idempotent, so the half-replayed step reruns cleanly).
+                Err(_) if session.quarantined() => {
+                    return host_decode_step(mcfg, params, session, active, scratch);
+                }
                 Err(e) => return Err(e),
             }
         }
@@ -454,20 +517,45 @@ fn run_decode_step(
         // Record the whole step (decode is deterministic and KV writes
         // are idempotent, so a diverged half-replayed step reruns
         // cleanly), schedule it at once, and cache the frozen plan.
-        let mut plan = StepPlan::new();
-        {
-            let mut d = MatmulDispatch::Plan {
-                session: &mut *session,
-                plan: &mut plan,
-            };
-            decode_step(mcfg, params, &mut d, active, scratch)?;
-        }
-        session.execute(&mut plan)?;
-        if let Some(c) = cache.as_deref_mut() {
-            c.insert(session.freeze(plan)?);
+        let step = (|| -> Result<()> {
+            let mut plan = StepPlan::new();
+            {
+                let mut d = MatmulDispatch::Plan {
+                    session: &mut *session,
+                    plan: &mut plan,
+                };
+                decode_step(mcfg, params, &mut d, active, scratch)?;
+            }
+            session.execute(&mut plan)?;
+            if let Some(c) = cache.as_deref_mut() {
+                c.insert(session.freeze(plan)?);
+            }
+            Ok(())
+        })();
+        match step {
+            Ok(()) => {}
+            Err(_) if session.quarantined() => {
+                return host_decode_step(mcfg, params, session, active, scratch);
+            }
+            Err(e) => return Err(e),
         }
     }
     Ok(())
+}
+
+/// Decode one step entirely on the host oracle — the quarantined
+/// session's degraded mode. Numerics are the host ops', bit-identical
+/// to a `MatmulDispatch::Cpu` serve of the same requests.
+fn host_decode_step(
+    mcfg: &ModelConfig,
+    params: &ParamTensors,
+    session: &mut OffloadSession,
+    active: &mut [ActiveGen],
+    scratch: &mut DecodeActs,
+) -> Result<()> {
+    session.faults.fallback_steps += 1;
+    let mut d = MatmulDispatch::HostFallback(&mut *session);
+    decode_step(mcfg, params, &mut d, active, scratch)
 }
 
 /// The per-token transformer column over R = `active.len()` rows — the
@@ -627,9 +715,21 @@ fn serve_recompute(
         for step in 0..req.max_new_tokens {
             let t = ctx.len();
             let before = session.pipeline.makespan_s();
-            {
+            let fwd = (|| -> Result<()> {
                 let mut d = MatmulDispatch::Npu(&mut *session);
                 model.forward(&mut d, &ctx, None, 1, t)?;
+                Ok(())
+            })();
+            match fwd {
+                Ok(()) => {}
+                // Quarantined mid-window: re-run the window on the host
+                // oracle and keep generating.
+                Err(_) if session.quarantined() => {
+                    session.faults.fallback_steps += 1;
+                    let mut d = MatmulDispatch::HostFallback(&mut *session);
+                    model.forward(&mut d, &ctx, None, 1, t)?;
+                }
+                Err(e) => return Err(e),
             }
             let dt = session.pipeline.makespan_s() - before;
             let acts = model.acts.as_ref().unwrap();
@@ -642,8 +742,17 @@ fn serve_recompute(
             report.tokens += 1;
             report.steps += 1;
             report.modeled_s += dt;
+            let expired = matches!(
+                cfg.request_timeout_s,
+                Some(limit) if report.modeled_s - report.admission_waits_s[idx] > limit
+            );
             if step + 1 == req.max_new_tokens {
                 g.final_logits = logits.to_vec();
+            } else if expired {
+                g.final_logits = logits.to_vec();
+                g.expired = true;
+                session.faults.expired_requests += 1;
+                break;
             } else {
                 ctx.push(next as i32);
             }

@@ -53,13 +53,22 @@ pub enum MatmulDispatch<'a, 'c> {
     BackgroundReplay {
         client: &'a mut ExecClient<'c>,
     },
+    /// Quarantined-device degradation: the session stopped dispatching to
+    /// its device after repeated faults (see `docs/RELIABILITY.md`), so
+    /// every matmul runs the same multi-threaded f32 host loop nest as
+    /// [`MatmulDispatch::Cpu`] — bit-identical outputs, because host ops
+    /// are the oracle every offload rung is pinned to — while the
+    /// session's fault ledger counts the fallback work
+    /// (`FaultCounters::fallback_ops`).
+    HostFallback(&'a mut OffloadSession),
 }
 
 impl MatmulDispatch<'_, '_> {
     /// Does this dispatch offload through the session (eagerly or via a
-    /// recorded plan)?
+    /// recorded plan)? Host fallback does not: it computes on the host
+    /// oracle and only counts against the session.
     pub fn is_npu(&self) -> bool {
-        !matches!(self, MatmulDispatch::Cpu)
+        !matches!(self, MatmulDispatch::Cpu | MatmulDispatch::HostFallback(_))
     }
 }
 
@@ -117,11 +126,22 @@ pub fn forward_hinted(
             cpu_matmul_bt(out, inp, weight, bt, ic, oc);
         }
         MatmulDispatch::Npu(session) => {
-            // The session wants B as (IC, OC) row-major; W is (OC, IC)
-            // row-major = exactly the "column-major weights" the paper
-            // transposes on copy (InputLayout::Transposed).
-            let size = ProblemSize::new(bt, ic, oc);
-            session.gemm(size, inp, weight, InputLayout::Transposed, out)?;
+            if session.quarantined() {
+                // The device is quarantined mid-run: degrade this op to
+                // the host oracle instead of surfacing a dead device.
+                cpu_matmul_bt(out, inp, weight, bt, ic, oc);
+                session.faults.fallback_ops += 1;
+            } else {
+                // The session wants B as (IC, OC) row-major; W is (OC, IC)
+                // row-major = exactly the "column-major weights" the paper
+                // transposes on copy (InputLayout::Transposed).
+                let size = ProblemSize::new(bt, ic, oc);
+                session.gemm(size, inp, weight, InputLayout::Transposed, out)?;
+            }
+        }
+        MatmulDispatch::HostFallback(session) => {
+            cpu_matmul_bt(out, inp, weight, bt, ic, oc);
+            session.faults.fallback_ops += 1;
         }
         MatmulDispatch::Plan { session, plan } => {
             // Record instead of blocking: the activation input chains on
@@ -206,7 +226,10 @@ pub fn elementwise(
 ) -> Result<()> {
     let size = ProblemSize::new(rows, 1, cols);
     match dispatch {
-        MatmulDispatch::Cpu | MatmulDispatch::Npu(_) => {}
+        // Elementwise numerics always run on the host; without a step
+        // plan (and on a quarantined session) there is no modeled device
+        // cost to record either.
+        MatmulDispatch::Cpu | MatmulDispatch::Npu(_) | MatmulDispatch::HostFallback(_) => {}
         MatmulDispatch::Plan { session, plan } => {
             let mut op = PlanOp::elementwise(kind, size).resident_input(resident);
             if let Some(head) = plan.chain_head() {
@@ -269,20 +292,17 @@ pub fn backward(
 ) -> Result<()> {
     match dispatch {
         MatmulDispatch::Cpu => {
-            // dinp(BT,IC) += dout(BT,OC) · W(OC,IC).
-            let mut tmp = vec![0.0f32; bt * ic];
-            cpu::gemm_f32(dout, weight, &mut tmp, bt, oc, ic);
-            for (d, t) in dinp.iter_mut().zip(&tmp) {
-                *d += t;
-            }
-            // dweight(OC,IC) += doutᵀ(OC,BT) · inp(BT,IC).
-            let mut dw = vec![0.0f32; oc * ic];
-            let mut dout_t = vec![0.0f32; oc * bt];
-            crate::coordinator::transpose::transpose(dout, &mut dout_t, bt, oc);
-            cpu::gemm_f32(&dout_t, inp, &mut dw, oc, bt, ic);
-            for (d, t) in dweight.iter_mut().zip(&dw) {
-                *d += t;
-            }
+            cpu_backward(dinp, dweight, dout, inp, weight, bt, ic, oc);
+        }
+        MatmulDispatch::HostFallback(session) => {
+            // Bit-identical to the Cpu arm (same routine); the session's
+            // fault ledger counts both degraded GEMMs.
+            cpu_backward(dinp, dweight, dout, inp, weight, bt, ic, oc);
+            session.faults.fallback_ops += 2;
+        }
+        MatmulDispatch::Npu(session) if session.quarantined() => {
+            cpu_backward(dinp, dweight, dout, inp, weight, bt, ic, oc);
+            session.faults.fallback_ops += 2;
         }
         MatmulDispatch::Npu(session) => {
             // Both backward GEMMs are offloaded — they are Figure 6's
@@ -454,6 +474,36 @@ pub fn backward(
         }
     }
     Ok(())
+}
+
+/// The host-oracle backward pair: dinp += dout · W and
+/// dweight += doutᵀ · inp (the [`MatmulDispatch::Cpu`] and
+/// [`MatmulDispatch::HostFallback`] arms share it, which is what makes
+/// quarantine degradation bit-identical to the CPU baseline).
+fn cpu_backward(
+    dinp: &mut [f32],
+    dweight: &mut [f32],
+    dout: &[f32],
+    inp: &[f32],
+    weight: &[f32],
+    bt: usize,
+    ic: usize,
+    oc: usize,
+) {
+    // dinp(BT,IC) += dout(BT,OC) · W(OC,IC).
+    let mut tmp = vec![0.0f32; bt * ic];
+    cpu::gemm_f32(dout, weight, &mut tmp, bt, oc, ic);
+    for (d, t) in dinp.iter_mut().zip(&tmp) {
+        *d += t;
+    }
+    // dweight(OC,IC) += doutᵀ(OC,BT) · inp(BT,IC).
+    let mut dw = vec![0.0f32; oc * ic];
+    let mut dout_t = vec![0.0f32; oc * bt];
+    crate::coordinator::transpose::transpose(dout, &mut dout_t, bt, oc);
+    cpu::gemm_f32(&dout_t, inp, &mut dw, oc, bt, ic);
+    for (d, t) in dweight.iter_mut().zip(&dw) {
+        *d += t;
+    }
 }
 
 /// C(BT,OC) = A(BT,IC) · W(OC,IC)ᵀ, llm.c-style parallel loop nest.

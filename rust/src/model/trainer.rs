@@ -162,12 +162,38 @@ pub fn train(
                 }
                 TrainBackend::CpuNpu(session) => {
                     let before_makespan = session.pipeline.makespan_s();
-                    let mut d = MatmulDispatch::Npu(session);
-                    let l = model
-                        .forward(&mut d, &tokens, Some(&targets), cfg.batch, cfg.seq)?
-                        .unwrap();
-                    model.zero_grad();
-                    model.backward(&mut d)?;
+                    let mut host_step = session.quarantined();
+                    let mut l = 0.0f32;
+                    if !host_step {
+                        let step = (|| -> Result<f32> {
+                            let mut d = MatmulDispatch::Npu(&mut **session);
+                            let l = model
+                                .forward(&mut d, &tokens, Some(&targets), cfg.batch, cfg.seq)?
+                                .unwrap();
+                            model.zero_grad();
+                            model.backward(&mut d)?;
+                            Ok(l)
+                        })();
+                        match step {
+                            Ok(v) => l = v,
+                            // The session quarantined mid-step (retries and
+                            // recovery exhausted). The step is re-run below
+                            // on the host oracle — zero_grad wipes any
+                            // partial gradients, so the step's numerics are
+                            // all-host, bit-identical to the Cpu backend.
+                            Err(_) if session.quarantined() => host_step = true,
+                            Err(e) => return Err(e),
+                        }
+                    }
+                    if host_step {
+                        session.faults.fallback_steps += 1;
+                        let mut d = MatmulDispatch::HostFallback(&mut **session);
+                        l = model
+                            .forward(&mut d, &tokens, Some(&targets), cfg.batch, cfg.seq)?
+                            .unwrap();
+                        model.zero_grad();
+                        model.backward(&mut d)?;
+                    }
                     let g = model.update(&cfg.optimizer);
                     npu_offload_s += session.pipeline.makespan_s() - before_makespan;
                     (l, g)
@@ -175,12 +201,17 @@ pub fn train(
                 TrainBackend::CpuNpuPlanned { session, cache, executor } => {
                     let before_makespan = session.pipeline.makespan_s();
                     let exec_mode = *executor;
+                    // A quarantined session never reaches the device
+                    // again: the whole step runs on the host oracle and
+                    // the plan cache is skipped (nothing device-side to
+                    // replay or record).
+                    let mut host_step = session.quarantined();
                     // Optimistic cache hit: re-run the step's numerics
                     // against the most recently cached plan and charge
                     // the frozen schedule. Any divergence (a shape
                     // change) is recoverable — fall through and record.
                     let mut replayed: Option<f32> = None;
-                    if let Some(c) = cache.as_deref_mut() {
+                    if let Some(c) = cache.as_deref_mut().filter(|_| !host_step) {
                         if exec_mode == ExecutorMode::Background && session.in_flight() == 0 {
                             if let Some(entry) = c.latest_for(session.session_id()) {
                                 // Background: the executor thread owns the
@@ -225,6 +256,9 @@ pub fn train(
                                         replayed = Some(l);
                                     }
                                     Err(e) if e.is_plan_divergence() => {}
+                                    // Quarantined mid-replay: fall through
+                                    // to the host-oracle step below.
+                                    Err(_) if session.quarantined() => host_step = true,
                                     Err(e) => return Err(e),
                                 }
                             }
@@ -248,22 +282,25 @@ pub fn train(
                                         replayed = Some(l);
                                     }
                                     Err(e) if e.is_plan_divergence() => {}
+                                    Err(_) if session.quarantined() => host_step = true,
                                     Err(e) => return Err(e),
                                 },
                                 Err(e) if e.is_plan_divergence() => {}
+                                // Quarantined mid-replay: fall through to
+                                // the host-oracle step below.
+                                Err(_) if session.quarantined() => host_step = true,
                                 Err(e) => return Err(e),
                             }
                         }
                     }
-                    let l = match replayed {
-                        Some(l) => l,
-                        None => {
-                            // Record the whole step (forward/backward are
-                            // deterministic, so a diverged half-replayed
-                            // step reruns cleanly — zero_grad wipes any
-                            // partial gradients), then let the scheduler
-                            // see it at once and freeze the schedule for
-                            // every later step.
+                    if !host_step && replayed.is_none() {
+                        // Record the whole step (forward/backward are
+                        // deterministic, so a diverged half-replayed
+                        // step reruns cleanly — zero_grad wipes any
+                        // partial gradients), then let the scheduler
+                        // see it at once and freeze the schedule for
+                        // every later step.
+                        let step = (|| -> Result<f32> {
                             let mut plan = StepPlan::new();
                             let l = {
                                 let mut d = MatmulDispatch::Plan {
@@ -281,8 +318,31 @@ pub fn train(
                             if let Some(c) = cache.as_deref_mut() {
                                 c.insert(session.freeze(plan)?);
                             }
-                            l
+                            Ok(l)
+                        })();
+                        match step {
+                            Ok(l) => replayed = Some(l),
+                            // Quarantined while executing the recorded
+                            // step: re-run it on the host oracle below.
+                            Err(_) if session.quarantined() => host_step = true,
+                            Err(e) => return Err(e),
                         }
+                    }
+                    let l = if host_step {
+                        // The whole step runs on the host oracle —
+                        // zero_grad wipes any partial gradients from a
+                        // failed attempt, so the step's numerics are
+                        // all-host, bit-identical to the Cpu backend.
+                        session.faults.fallback_steps += 1;
+                        let mut d = MatmulDispatch::HostFallback(&mut **session);
+                        let l = model
+                            .forward(&mut d, &tokens, Some(&targets), cfg.batch, cfg.seq)?
+                            .unwrap();
+                        model.zero_grad();
+                        model.backward(&mut d)?;
+                        l
+                    } else {
+                        replayed.expect("step either replayed, recorded, or fell back to host")
                     };
                     let g = model.update(&cfg.optimizer);
                     npu_offload_s += session.pipeline.makespan_s() - before_makespan;

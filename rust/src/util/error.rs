@@ -20,6 +20,15 @@ pub enum Error {
     /// A cached step plan no longer matches the step being replayed
     /// (shape or structure change). Recoverable: re-record the step.
     PlanDivergence(String),
+    /// A device operation exceeded its configured deadline (a stuck
+    /// kernel detected by `RetryPolicy::op_deadline`). Retryable only
+    /// when a deadline is armed — without one, a hung kernel has no
+    /// detection mechanism and the error is fatal.
+    Timeout(String),
+    /// The device context is gone (firmware reset, context loss). The
+    /// session's recovery path re-opens the device, re-prepares every
+    /// registered size, and resumes; a failed recovery quarantines.
+    DeviceLost(String),
 }
 
 impl fmt::Display for Error {
@@ -32,6 +41,8 @@ impl fmt::Display for Error {
             Error::Io(e) => write!(f, "io error: {e}"),
             Error::Config(m) => write!(f, "config error: {m}"),
             Error::PlanDivergence(m) => write!(f, "plan cache divergence: {m}"),
+            Error::Timeout(m) => write!(f, "op deadline exceeded: {m}"),
+            Error::DeviceLost(m) => write!(f, "device lost: {m}"),
         }
     }
 }
@@ -67,10 +78,71 @@ impl Error {
     pub fn plan_divergence(m: impl Into<String>) -> Self {
         Error::PlanDivergence(m.into())
     }
+    pub fn timeout(m: impl Into<String>) -> Self {
+        Error::Timeout(m.into())
+    }
+    pub fn device_lost(m: impl Into<String>) -> Self {
+        Error::DeviceLost(m.into())
+    }
 
     /// Is this a recoverable plan-cache divergence (the caller should
     /// re-record the step rather than abort)?
     pub fn is_plan_divergence(&self) -> bool {
         matches!(self, Error::PlanDivergence(_))
+    }
+
+    /// Did the device context go away (the session's device-lost
+    /// recovery / quarantine paths key off this)?
+    pub fn is_device_lost(&self) -> bool {
+        matches!(self, Error::DeviceLost(_))
+    }
+
+    /// Did an op exceed its configured deadline?
+    pub fn is_timeout(&self) -> bool {
+        matches!(self, Error::Timeout(_))
+    }
+
+    /// Prefix the message with `ctx` while *preserving the variant*, so
+    /// classification (divergence vs device-lost vs timeout) survives
+    /// layers that annotate errors in flight — e.g. the background
+    /// executor's handoff queue, which must not collapse a fatal device
+    /// fault into a generic runtime error.
+    pub fn contextualize(self, ctx: impl AsRef<str>) -> Self {
+        let ctx = ctx.as_ref();
+        match self {
+            Error::Shape(m) => Error::Shape(format!("{ctx}: {m}")),
+            Error::Npu(m) => Error::Npu(format!("{ctx}: {m}")),
+            Error::Xrt(m) => Error::Xrt(format!("{ctx}: {m}")),
+            Error::Runtime(m) => Error::Runtime(format!("{ctx}: {m}")),
+            Error::Io(e) => {
+                Error::Io(std::io::Error::new(e.kind(), format!("{ctx}: {e}")))
+            }
+            Error::Config(m) => Error::Config(format!("{ctx}: {m}")),
+            Error::PlanDivergence(m) => Error::PlanDivergence(format!("{ctx}: {m}")),
+            Error::Timeout(m) => Error::Timeout(format!("{ctx}: {m}")),
+            Error::DeviceLost(m) => Error::DeviceLost(format!("{ctx}: {m}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn contextualize_preserves_classification() {
+        let e = Error::device_lost("context gone").contextualize("op #3");
+        assert!(e.is_device_lost());
+        assert!(e.to_string().contains("op #3"), "{e}");
+        assert!(e.to_string().contains("context gone"), "{e}");
+
+        let e = Error::plan_divergence("shape changed").contextualize("op #0");
+        assert!(e.is_plan_divergence());
+
+        let e = Error::timeout("stuck kernel").contextualize("op #1");
+        assert!(e.is_timeout());
+
+        let e = Error::runtime("plain").contextualize("ctx");
+        assert!(!e.is_device_lost() && !e.is_plan_divergence() && !e.is_timeout());
     }
 }

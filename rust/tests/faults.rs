@@ -1,0 +1,458 @@
+//! Fault-tolerance acceptance: seeded fault plans driven through the
+//! whole stack must never change numerics or kill a session. Retryable
+//! faults (transient, sync error, armed stuck kernel) and recovered
+//! context losses leave training losses, GEMM outputs, and serve token
+//! streams bit-identical to the fault-free baseline — on all twelve
+//! GPT-2 site shapes, through both step executors — with a recovered
+//! device resuming the frozen plan (no re-record). Fatal faults surface
+//! cleanly and leave the session reusable; a quarantined session
+//! degrades to the host-op oracle bit-identically and releases its
+//! arbiter lease. See `docs/RELIABILITY.md`.
+
+use xdna_repro::coordinator::executor::ExecutorMode;
+use xdna_repro::coordinator::plan::{PlanCache, PlanOp, StepPlan};
+use xdna_repro::coordinator::scheduler::SchedulePolicy;
+use xdna_repro::coordinator::session::{
+    InputLayout, OffloadSession, QueueDepth, SessionConfig, ShardPolicy, Shards,
+};
+use xdna_repro::coordinator::{
+    ColumnQuota, DeviceArbiter, FaultInjector, FaultKind, FaultPlan, RetryPolicy, SimulatorDevice,
+};
+use xdna_repro::gemm::sizes::{distinct_sizes, ModelDims, ProblemSize};
+use xdna_repro::model::generate::{serve, GenRequest, Generation, ServeConfig};
+use xdna_repro::model::kv_cache::KvCacheMode;
+use xdna_repro::model::trainer::{train_synthetic, TrainBackend, TrainConfig};
+use xdna_repro::model::{Gpt2Model, ModelConfig};
+use xdna_repro::util::rng::Rng;
+
+const DATA_SEED: u64 = 5;
+const MODEL_SEED: u64 = 71;
+const FAULT_SEED: u64 = 17;
+
+/// A depth-2 unsharded session on an injector-wrapped simulator device.
+fn faulty_session(plan: FaultPlan, retry: RetryPolicy) -> OffloadSession {
+    OffloadSession::new(
+        SessionConfig {
+            depth: QueueDepth(2),
+            shards: ShardPolicy::Fixed(Shards(1)),
+            schedule: SchedulePolicy::BatchBySize,
+            device: Box::new(FaultInjector::new(Box::new(SimulatorDevice), plan)),
+            retry,
+            ..Default::default()
+        },
+        &[],
+    )
+    .unwrap()
+}
+
+fn clean_session() -> OffloadSession {
+    faulty_session(FaultPlan::new(), RetryPolicy::default())
+}
+
+/// All twelve GPT-2 GEMM-site shapes at the reduced dimensions the other
+/// integration suites use.
+fn scaled_gpt2_sizes() -> Vec<ProblemSize> {
+    let dims = ModelDims {
+        batch: 1,
+        seq: 64,
+        channels: 128,
+        padded_vocab: 1024,
+        layers: 2,
+    };
+    let sizes = distinct_sizes(&dims);
+    assert_eq!(sizes.len(), 12, "scaled dims must keep all twelve shapes");
+    sizes
+}
+
+fn random_inputs(size: ProblemSize, seed: u64) -> (Vec<f32>, Vec<f32>) {
+    let mut rng = Rng::new(seed);
+    let mut a = vec![0.0f32; size.m * size.k];
+    let mut b_t = vec![0.0f32; size.n * size.k]; // N x K: forces the transpose
+    rng.fill_normal(&mut a, 0.0, 1.0);
+    rng.fill_normal(&mut b_t, 0.0, 0.1);
+    (a, b_t)
+}
+
+/// Record the twelve-shape step on `sess`; returns the outputs (numerics
+/// happen at record time — `execute` prices the schedule).
+fn record_twelve_shapes(sess: &mut OffloadSession) -> Vec<Vec<f32>> {
+    let sizes = scaled_gpt2_sizes();
+    let mut plan = StepPlan::new();
+    let mut outs = Vec::new();
+    for (i, &size) in sizes.iter().enumerate() {
+        let (a, b_t) = random_inputs(size, 4000 + i as u64);
+        let op = PlanOp::new(size)
+            .with_b_layout(InputLayout::Transposed)
+            .prefetchable_b(true);
+        let mut c = vec![0.0f32; size.m * size.n];
+        sess.record_gemm(&mut plan, &op, &a, &b_t, &mut c).unwrap();
+        outs.push(c);
+    }
+    sess.execute(&mut plan).unwrap();
+    outs
+}
+
+/// Every retryable fault kind — transient execution fault, BO sync
+/// error, and a stuck kernel under an armed op deadline — re-runs the
+/// invocation bit-identically on the twelve GPT-2 site shapes. A failed
+/// run stages nothing, so the re-run reproduces the exact bf16 result.
+#[test]
+fn retryable_faults_bit_identical_on_all_gpt2_site_shapes() {
+    let baseline = record_twelve_shapes(&mut clean_session());
+
+    // Unsharded, so op i's first attempt is device run i plus earlier
+    // retries; the indices below hit three distinct ops.
+    let plan = FaultPlan::new()
+        .at(0, FaultKind::Transient)
+        .at(5, FaultKind::SyncError)
+        .at(13, FaultKind::StuckKernel);
+    let retry = RetryPolicy {
+        op_deadline_s: Some(0.25), // arms stuck-kernel detection
+        ..RetryPolicy::default()
+    };
+    let mut sess = faulty_session(plan, retry);
+    let outs = record_twelve_shapes(&mut sess);
+    assert_eq!(outs, baseline, "a retried invocation must be bit-identical");
+    assert_eq!(sess.faults.seen, 3);
+    assert_eq!(sess.faults.retried, 3);
+    assert_eq!(sess.faults.recovered, 0);
+    assert!(!sess.quarantined());
+}
+
+/// A context loss mid-step recovers — re-open, re-prepare the registry,
+/// resume — without changing any output, and the session then records
+/// further steps normally.
+#[test]
+fn device_loss_mid_step_recovers_bit_identically() {
+    let baseline = record_twelve_shapes(&mut clean_session());
+    let plan = FaultPlan::new().at(6, FaultKind::DeviceLost);
+    let mut sess = faulty_session(plan, RetryPolicy::default());
+    let outs = record_twelve_shapes(&mut sess);
+    assert_eq!(outs, baseline, "a recovered device must be bit-identical");
+    assert_eq!(sess.faults.seen, 1);
+    assert_eq!(sess.faults.recovered, 1);
+    assert_eq!(sess.faults.retried, 0, "recovery does not consume a retry");
+    assert!(!sess.quarantined());
+    // The recovered session keeps working: a fresh step, still identical.
+    assert_eq!(record_twelve_shapes(&mut sess), baseline);
+}
+
+fn train_cfg() -> TrainConfig {
+    TrainConfig {
+        batch: 2,
+        seq: 16,
+        epochs: 2,
+        steps_per_epoch: 2,
+        ..Default::default()
+    }
+}
+
+/// d2 training losses through the planned/cached path under a seeded
+/// fault spec; returns (losses, session, cache counters).
+fn train_with_faults(spec: &str, executor: ExecutorMode) -> (Vec<f32>, OffloadSession, (u64, u64)) {
+    let plan = FaultPlan::parse(spec, FAULT_SEED).unwrap();
+    let mut sess = faulty_session(plan, RetryPolicy::default());
+    let mut cache = PlanCache::new();
+    let stats = train_synthetic(
+        ModelConfig::d2(),
+        &train_cfg(),
+        &mut TrainBackend::CpuNpuPlanned {
+            session: &mut sess,
+            cache: Some(&mut cache),
+            executor,
+        },
+        DATA_SEED,
+    )
+    .unwrap();
+    let losses = stats.iter().map(|e| e.loss).collect();
+    let counters = (cache.hits(), cache.misses());
+    (losses, sess, counters)
+}
+
+/// The training differential, through both step executors: a transient
+/// storm and a recovered context loss each leave every epoch loss
+/// bit-identical to the fault-free run — and the recovery resumes the
+/// frozen plan, so the cache still records exactly once.
+#[test]
+fn training_losses_bit_identical_under_faults_on_both_executors() {
+    for executor in [ExecutorMode::Sync, ExecutorMode::Background] {
+        let (baseline, sess, (hits, misses)) = train_with_faults("", executor);
+        assert_eq!(sess.faults.seen, 0);
+        assert_eq!((hits, misses), (3, 1), "{executor:?}: 4 steps, 1 record");
+
+        let (losses, sess, counters) = train_with_faults("transient:2,sync:1", executor);
+        assert_eq!(losses, baseline, "{executor:?}: retries changed numerics");
+        assert_eq!(sess.faults.seen, 3);
+        assert_eq!(sess.faults.retried, 3);
+        assert!(!sess.quarantined());
+        assert_eq!(counters, (3, 1), "{executor:?}: retries must not re-record");
+
+        let (losses, sess, counters) = train_with_faults("device-lost:1", executor);
+        assert_eq!(losses, baseline, "{executor:?}: recovery changed numerics");
+        assert_eq!(sess.faults.seen, 1);
+        assert_eq!(sess.faults.recovered, 1);
+        assert!(!sess.quarantined());
+        assert_eq!(
+            counters,
+            (3, 1),
+            "{executor:?}: recovery must resume the frozen plan, not re-record"
+        );
+    }
+}
+
+/// A permanent context loss quarantines the session and the trainer
+/// degrades every remaining step to the host-op oracle — bit-identical
+/// to the all-CPU backend — through the background executor too (the
+/// sync path is pinned by `bench faults`' own tests).
+#[test]
+fn quarantined_training_matches_the_cpu_oracle_through_the_background_executor() {
+    let oracle: Vec<f32> = train_synthetic(ModelConfig::d2(), &train_cfg(), &mut TrainBackend::Cpu, DATA_SEED)
+        .unwrap()
+        .iter()
+        .map(|e| e.loss)
+        .collect();
+    let (losses, sess, _) = train_with_faults("quarantine", ExecutorMode::Background);
+    assert!(sess.quarantined());
+    assert_eq!(sess.faults.recovered, 0, "permanent loss: recovery fails");
+    assert!(sess.faults.fallback_steps >= 1);
+    assert!(sess.faults.fallback_ops > 0);
+    assert_eq!(losses, oracle, "host fallback must match the CPU backend bit for bit");
+}
+
+/// An unarmed stuck kernel is fatal (there is no detection mechanism to
+/// make re-running meaningful), but the error surfaces cleanly and the
+/// session keeps working; arming the op deadline turns the same fault
+/// into a retry.
+#[test]
+fn stuck_kernel_fatal_unarmed_retryable_armed() {
+    let size = scaled_gpt2_sizes()[0];
+    let (a, b_t) = random_inputs(size, 42);
+    let record_one = |sess: &mut OffloadSession| -> xdna_repro::util::error::Result<Vec<f32>> {
+        let mut plan = StepPlan::new();
+        let op = PlanOp::new(size).with_b_layout(InputLayout::Transposed);
+        let mut c = vec![0.0f32; size.m * size.n];
+        sess.record_gemm(&mut plan, &op, &a, &b_t, &mut c)?;
+        sess.execute(&mut plan)?;
+        Ok(c)
+    };
+    let baseline = record_one(&mut clean_session()).unwrap();
+
+    let plan = FaultPlan::new().at(0, FaultKind::StuckKernel);
+    let mut sess = faulty_session(plan, RetryPolicy::default());
+    let err = record_one(&mut sess).unwrap_err();
+    assert!(err.is_timeout(), "{err}");
+    assert_eq!(sess.faults.seen, 0, "a fatal class takes no fault counters");
+    assert!(!sess.quarantined());
+    // The session survives the surfaced fault (the fault index is spent).
+    assert_eq!(record_one(&mut sess).unwrap(), baseline);
+
+    let plan = FaultPlan::new().at(0, FaultKind::StuckKernel);
+    let armed = RetryPolicy {
+        op_deadline_s: Some(0.25),
+        ..RetryPolicy::default()
+    };
+    let mut sess = faulty_session(plan, armed);
+    assert_eq!(record_one(&mut sess).unwrap(), baseline);
+    assert_eq!((sess.faults.seen, sess.faults.retried), (1, 1));
+}
+
+/// With retry disabled a transient fault surfaces as "retries exhausted"
+/// — classified, counted, and *recoverable*: the next step on the same
+/// session succeeds bit-identically.
+#[test]
+fn exhausted_retries_surface_cleanly_and_leave_the_session_usable() {
+    let baseline = record_twelve_shapes(&mut clean_session());
+    let plan = FaultPlan::new().at(0, FaultKind::Transient);
+    let no_retry = RetryPolicy {
+        max_retries: 0,
+        ..RetryPolicy::default()
+    };
+    let mut sess = faulty_session(plan, no_retry);
+    let size = scaled_gpt2_sizes()[0];
+    let (a, b_t) = random_inputs(size, 4000);
+    let mut plan_step = StepPlan::new();
+    let op = PlanOp::new(size).with_b_layout(InputLayout::Transposed);
+    let mut c = vec![0.0f32; size.m * size.n];
+    let err = sess.record_gemm(&mut plan_step, &op, &a, &b_t, &mut c).unwrap_err();
+    assert!(err.to_string().contains("retries exhausted"), "{err}");
+    assert!(err.to_string().contains("injected transient"), "{err}");
+    assert_eq!((sess.faults.seen, sess.faults.retried), (1, 0));
+    assert!(!sess.quarantined());
+    drop(plan_step);
+    assert_eq!(record_twelve_shapes(&mut sess), baseline);
+}
+
+/// The eager path never re-runs an op (completed strips' modeled charges
+/// would double-count): the fault surfaces at `wait()` — but the session
+/// still counts it, recovers the lost context, and the very next eager
+/// op succeeds bit-identically.
+#[test]
+fn eager_fault_surfaces_at_wait_and_context_loss_recovers() {
+    let size = scaled_gpt2_sizes()[0];
+    let (a, b_t) = random_inputs(size, 4000);
+    let mut reference = vec![0.0f32; size.m * size.n];
+    clean_session()
+        .gemm(size, &a, &b_t, InputLayout::Transposed, &mut reference)
+        .unwrap();
+
+    let plan = FaultPlan::new().at(1, FaultKind::DeviceLost);
+    let mut sess = faulty_session(plan, RetryPolicy::default());
+    let mut c = vec![0.0f32; size.m * size.n];
+    sess.gemm(size, &a, &b_t, InputLayout::Transposed, &mut c).unwrap();
+    assert_eq!(c, reference);
+    let err = sess.gemm(size, &a, &b_t, InputLayout::Transposed, &mut c).unwrap_err();
+    assert!(err.to_string().contains("injected context loss"), "{err}");
+    assert_eq!((sess.faults.seen, sess.faults.recovered), (1, 1));
+    assert!(!sess.quarantined());
+    let mut again = vec![0.0f32; size.m * size.n];
+    sess.gemm(size, &a, &b_t, InputLayout::Transposed, &mut again).unwrap();
+    assert_eq!(again, reference, "the recovered eager session must be bit-identical");
+}
+
+fn requests() -> Vec<GenRequest> {
+    vec![
+        GenRequest::new((0..4).map(|i| (i * 7 + 3) % 256).collect(), 6, 21),
+        GenRequest::new((0..2).map(|i| (i * 7 + 11) % 256).collect(), 8, 22),
+    ]
+}
+
+fn serve_once(sess: &mut OffloadSession, cache: &mut PlanCache) -> Vec<Generation> {
+    let mut model = Gpt2Model::new(ModelConfig::d2(), MODEL_SEED);
+    let cfg = ServeConfig {
+        max_batch: 2,
+        temperature: 1.0,
+        kv_cache: KvCacheMode::On,
+        ..Default::default()
+    };
+    serve(&mut model, &requests(), sess, Some(cache), &cfg)
+        .unwrap()
+        .generations
+}
+
+/// Serving under a transient storm plus a recovered context loss streams
+/// bit-identical tokens and logits, and the same session serves a second
+/// batch afterwards — recovery leaves it fully reusable.
+#[test]
+fn serve_under_recoverable_faults_bit_identical_and_reusable() {
+    let baseline = serve_once(&mut clean_session(), &mut PlanCache::new());
+    let plan = FaultPlan::parse("transient:2,device-lost:1", FAULT_SEED).unwrap();
+    let mut sess = faulty_session(plan, RetryPolicy::default());
+    let mut cache = PlanCache::new();
+    let faulted = serve_once(&mut sess, &mut cache);
+    assert_eq!(faulted.len(), baseline.len());
+    for (f, b) in faulted.iter().zip(&baseline) {
+        assert_eq!(f.tokens, b.tokens, "request {}: faults changed the stream", f.id);
+        assert_eq!(f.final_logits, b.final_logits, "request {} logits", f.id);
+        assert!(!f.expired);
+    }
+    assert_eq!(sess.faults.seen, 3);
+    assert_eq!(sess.faults.retried, 2);
+    assert_eq!(sess.faults.recovered, 1);
+    assert!(!sess.quarantined());
+    // All faults are spent: the same session serves the next batch too.
+    let again = serve_once(&mut sess, &mut cache);
+    for (f, b) in again.iter().zip(&baseline) {
+        assert_eq!(f.tokens, b.tokens, "request {}: reuse changed the stream", f.id);
+    }
+}
+
+/// A quarantined serving session keeps streaming on the host oracle:
+/// every request completes its full budget, deterministically across
+/// runs, with the fallback counters recording the degradation.
+#[test]
+fn quarantined_serve_keeps_streaming_deterministically() {
+    let run = || {
+        let plan = FaultPlan::parse("quarantine", FAULT_SEED).unwrap();
+        let mut sess = faulty_session(plan, RetryPolicy::default());
+        let gens = serve_once(&mut sess, &mut PlanCache::new());
+        (gens, sess.faults.clone())
+    };
+    let (gens, faults) = run();
+    assert!(faults.quarantined);
+    assert_eq!(faults.recovered, 0);
+    assert!(faults.fallback_steps >= 1);
+    assert!(faults.fallback_ops > 0);
+    for (g, r) in gens.iter().zip(&requests()) {
+        assert_eq!(g.tokens.len(), r.max_new_tokens, "request {} must finish its budget", g.id);
+        assert!(!g.final_logits.is_empty());
+    }
+    let (again, _) = run();
+    for (a, b) in again.iter().zip(&gens) {
+        assert_eq!(a.tokens, b.tokens, "host-oracle serving must be deterministic");
+        assert_eq!(a.final_logits, b.final_logits);
+    }
+}
+
+/// A quarantined tenant releases its lease: its dedicated columns go
+/// back to the pool (a replacement tenant that could not attach before
+/// can attach after), and the arbiter report records the quarantine.
+#[test]
+fn quarantine_releases_the_tenants_arbiter_lease() {
+    let arbiter = DeviceArbiter::new();
+    let two_col = |plan: FaultPlan| {
+        OffloadSession::new(
+            SessionConfig {
+                depth: QueueDepth(2),
+                shards: ShardPolicy::Fixed(Shards(2)),
+                schedule: SchedulePolicy::BatchBySize,
+                device: Box::new(FaultInjector::new(Box::new(SimulatorDevice), plan)),
+                ..Default::default()
+            },
+            &[],
+        )
+        .unwrap()
+    };
+    let mut chaos = two_col(FaultPlan::parse("quarantine", FAULT_SEED).unwrap());
+    chaos.attach_arbiter(&arbiter, "chaos", ColumnQuota::Fixed(2)).unwrap();
+    let mut steady = two_col(FaultPlan::new());
+    steady.attach_arbiter(&arbiter, "steady", ColumnQuota::Fixed(2)).unwrap();
+    // The 4-column array is fully leased: no room for a third tenant.
+    let mut replacement = two_col(FaultPlan::new());
+    assert!(replacement.attach_arbiter(&arbiter, "replacement", ColumnQuota::Fixed(2)).is_err());
+
+    let losses: Vec<f32> = train_synthetic(
+        ModelConfig::d2(),
+        &train_cfg(),
+        &mut TrainBackend::CpuNpuPlanned {
+            session: &mut chaos,
+            cache: None,
+            executor: ExecutorMode::Sync,
+        },
+        DATA_SEED,
+    )
+    .unwrap()
+    .iter()
+    .map(|e| e.loss)
+    .collect();
+    assert!(chaos.quarantined());
+    let oracle: Vec<f32> =
+        train_synthetic(ModelConfig::d2(), &train_cfg(), &mut TrainBackend::Cpu, DATA_SEED)
+            .unwrap()
+            .iter()
+            .map(|e| e.loss)
+            .collect();
+    assert_eq!(losses, oracle, "the quarantined tenant still trains, on the host oracle");
+
+    assert!(chaos.tenant_report().unwrap().quarantined);
+    let report = arbiter.report();
+    assert_eq!(report.quarantined, 1);
+    // The freed columns are leasable again.
+    replacement.attach_arbiter(&arbiter, "replacement", ColumnQuota::Fixed(2)).unwrap();
+    // And the healthy tenant was never disturbed.
+    let steady_losses: Vec<f32> = train_synthetic(
+        ModelConfig::d2(),
+        &train_cfg(),
+        &mut TrainBackend::CpuNpuPlanned {
+            session: &mut steady,
+            cache: None,
+            executor: ExecutorMode::Sync,
+        },
+        DATA_SEED,
+    )
+    .unwrap()
+    .iter()
+    .map(|e| e.loss)
+    .collect();
+    assert!(!steady.quarantined());
+    assert!(steady_losses.iter().all(|l| l.is_finite()));
+}

@@ -7,7 +7,9 @@
 //! (record once, cache-hit replays bit-identical to a fresh record,
 //! invalidation on shape/session change), plus mixed-kind (block-offload)
 //! plan divergence and on-disk cache compatibility: a pre-block-offload
-//! v1 cache file loads as a recoverable miss, never an error.
+//! v1 cache file loads as a recoverable miss, never an error — and so
+//! does a truncated file, which the atomic (temp + rename) saver can
+//! only leave behind if something else corrupts the cache on disk.
 
 use xdna_repro::coordinator::plan::{PlanCache, PlanOp, PlanOpKind, StepPlan};
 use xdna_repro::coordinator::scheduler::SchedulePolicy;
@@ -819,5 +821,60 @@ fn pre_block_offload_v1_cache_file_is_a_recoverable_miss() {
         "an unknown op kind skips the entry rather than erroring"
     );
     assert!(cache.is_empty());
+    std::fs::remove_file(&path).ok();
+}
+
+/// A truncated cache file — a crash mid-write by a non-atomic writer, or
+/// on-disk corruption — is a *recoverable miss*: the loader adopts zero
+/// entries, never errors, and the run records its first step as if no
+/// file existed. The saver itself can't produce one: it writes a temp
+/// file and renames it over the target, leaving no temp file behind on
+/// success — so the next save simply heals the corrupt path.
+#[test]
+fn truncated_cache_file_is_a_recoverable_miss_and_saves_are_atomic() {
+    let path = std::env::temp_dir().join("xdna_plan_cache_truncated.json");
+    let path = path.to_str().unwrap().to_string();
+    let size = ProblemSize::new(64, 64, 128);
+    let (a, b_t) = random_inputs(size, 9300);
+    let mut c = vec![0.0f32; size.m * size.n];
+    let mut sess = session(2, fixed(1), SchedulePolicy::Fifo);
+    let mut cache = PlanCache::new();
+    let op = PlanOp::new(size).with_b_layout(InputLayout::Transposed);
+    let mut plan = StepPlan::new();
+    sess.record_gemm(&mut plan, &op, &a, &b_t, &mut c).unwrap();
+    sess.execute(&mut plan).unwrap();
+    cache.insert(sess.freeze(plan).unwrap());
+    let fp = 0x0dd0_b175u64;
+    assert_eq!(cache.save_to(&path, fp, sess.session_id()).unwrap(), 1);
+    assert!(
+        !std::path::Path::new(&format!("{path}.tmp")).exists(),
+        "the atomic saver must not leave its temp file behind"
+    );
+
+    // Chop the file mid-JSON (what a crash inside a naive writer would
+    // leave): the loader reports a clean miss.
+    let bytes = std::fs::read(&path).unwrap();
+    assert!(bytes.len() > 2);
+    std::fs::write(&path, &bytes[..bytes.len() / 2]).unwrap();
+    let mut loaded = PlanCache::new();
+    assert_eq!(
+        loaded.load_from(&path, fp, sess.session_id()),
+        0,
+        "a truncated file must load as a clean miss"
+    );
+    assert!(loaded.is_empty());
+    assert!(
+        sess.begin_replay(&loaded).is_none(),
+        "the run records its first step as if no file existed"
+    );
+
+    // The run proceeds: record, freeze, and the next save heals the path.
+    let mut plan2 = StepPlan::new();
+    sess.record_gemm(&mut plan2, &op, &a, &b_t, &mut c).unwrap();
+    sess.execute(&mut plan2).unwrap();
+    loaded.insert(sess.freeze(plan2).unwrap());
+    assert_eq!(loaded.save_to(&path, fp, sess.session_id()).unwrap(), 1);
+    let mut healed = PlanCache::new();
+    assert_eq!(healed.load_from(&path, fp, sess.session_id()), 1);
     std::fs::remove_file(&path).ok();
 }

@@ -2,9 +2,11 @@
 //! full-window recompute baseline across prompt/decode-length
 //! combinations, batched multi-request decode bit-identity against solo
 //! runs (with a ×8 determinism repeat), plan-cache decode counters
-//! (record once, replay tokens−1 times), and mid-stream occupancy
+//! (record once, replay tokens−1 times), mid-stream occupancy
 //! changes as recoverable divergences — the decode mirror of the
-//! training-path coverage in `rust/tests/plan.rs`.
+//! training-path coverage in `rust/tests/plan.rs` — and the
+//! per-request decode deadline: an expired request retires with a
+//! partial stream that is a prefix of the unconstrained run.
 
 use xdna_repro::coordinator::plan::PlanCache;
 use xdna_repro::coordinator::scheduler::SchedulePolicy;
@@ -173,4 +175,64 @@ fn occupancy_change_is_a_recoverable_rerecord() {
         assert_eq!(report.generations[i].tokens, solo.tokens, "request {i}");
         assert_eq!(report.generations[i].final_logits, solo.final_logits, "request {i}");
     }
+}
+
+/// A request that outruns its decode deadline retires with its partial
+/// stream — a strict prefix of the unconstrained run, marked expired and
+/// counted on the fault ledger — while its batchmate completes normally,
+/// and the mid-run occupancy drop stays a recoverable re-record.
+#[test]
+fn request_deadline_retires_with_a_partial_prefix_stream() {
+    let requests = [
+        GenRequest::new(prompt(1, 4), 1, 41), // completes at the first step
+        GenRequest::new(prompt(3, 6), 8, 42), // will hit the deadline
+    ];
+    let serve_with = |timeout: Option<f64>| {
+        let mut model = model();
+        let mut session = session();
+        let mut cache = PlanCache::new();
+        let cfg = ServeConfig {
+            max_batch: 2,
+            temperature: 1.0,
+            kv_cache: KvCacheMode::On,
+            request_timeout_s: timeout,
+            ..Default::default()
+        };
+        serve(&mut model, &requests, &mut session, Some(&mut cache), &cfg).unwrap()
+    };
+    let baseline = serve_with(None);
+    assert_eq!(baseline.expired_requests(), 0);
+    assert_eq!(baseline.generations[1].tokens.len(), 8);
+
+    // Pin the deadline on the modeled clock so the long request expires
+    // at exactly its fifth token: both runs share one clock trajectory
+    // up to the expiry (the deadline changes nothing before it fires),
+    // so reconstruct the clock at tokens 4 and 5 from the baseline's
+    // per-token latencies and aim between them.
+    let d = &baseline.generations[1].latencies_s;
+    let clock_5 = baseline.modeled_s - d[5..].iter().sum::<f64>();
+    let clock_4 = clock_5 - d[4];
+    let wait = baseline.admission_waits_s[1];
+    let report = serve_with(Some((clock_4 + clock_5) / 2.0 - wait));
+
+    let short = &report.generations[0];
+    assert_eq!(short.tokens, baseline.generations[0].tokens);
+    assert!(!short.expired, "a request that finishes its budget never expires");
+
+    let long = &report.generations[1];
+    assert!(long.expired);
+    assert_eq!(long.tokens.len(), 5, "the deadline must land after exactly five tokens");
+    assert_eq!(
+        long.tokens[..],
+        baseline.generations[1].tokens[..5],
+        "the partial stream is a prefix of the unconstrained run"
+    );
+    assert!(!long.final_logits.is_empty(), "the probe row survives an expiry");
+    assert_eq!(report.expired_requests(), 1);
+    assert_eq!(report.faults.expired_requests, 1);
+    // 1 step at occupancy 2, then 4 at occupancy 1: the drop re-recorded
+    // recoverably and every step either replayed or recorded.
+    assert_eq!(report.steps, 5);
+    assert_eq!(report.plan_cache_misses, 2, "one record per occupancy bucket");
+    assert_eq!(report.plan_cache_hits + report.plan_cache_misses, report.steps as u64);
 }
